@@ -1,0 +1,17 @@
+"""Layer-1 Pallas kernels.
+
+Two kernels implement the GNN hot spots:
+
+* ``gather_agg`` — fixed-fanout neighborhood aggregation (the SpMM the
+  paper's feature/forward stages spend their time in), reformulated as
+  gather + masked mean so it maps onto TPU-friendly regular access (see
+  DESIGN.md section "Hardware-Adaptation").
+* ``matmul`` — the per-layer feature transform, tiled for the MXU.
+
+Every kernel has a ``*_ref`` oracle in :mod:`ref` (pure jnp) and both a
+single-block variant (used in the AOT artifacts — XLA:CPU fuses it well)
+and a tiled variant whose BlockSpecs document the real-TPU schedule;
+pytest sweeps both against the oracle.
+"""
+
+from . import gather_agg, matmul, ref  # noqa: F401

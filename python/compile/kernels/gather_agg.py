@@ -1,0 +1,138 @@
+"""Fixed-fanout gather + masked-mean aggregation as a Pallas kernel.
+
+The paper's hot spot is sparse neighborhood aggregation (SpMM). GPUs run
+it as gather/scatter; TPUs hate scatter, so the Rust block builder emits
+a **fixed-fanout dense layout** (every destination has exactly k neighbor
+slots, padded slots carry weight 0) and this kernel becomes a regular
+gather + weighted reduction — MXU/VPU friendly, no atomics, no sorting.
+
+Two variants:
+
+* :func:`gather_agg` — single-block pallas_call (grid=()). This is what
+  the AOT artifacts embed: with ``interpret=True`` it lowers to the same
+  HLO ops XLA:CPU fuses into the surrounding graph, keeping the request
+  path fast while still exercising the pallas_call machinery.
+* :func:`gather_agg_tiled` — destination axis blocked with ``BlockSpec``;
+  the source matrix stays unblocked (ANY/HBM in the TPU mapping) and each
+  grid step gathers its tile's rows into VMEM. This documents the real
+  TPU schedule; DESIGN.md section 8 derives its VMEM footprint:
+  ``block_rows*(k+1)*d*4 + block_rows*d*4`` bytes of VMEM per step.
+
+Both are asserted against :func:`ref.gather_agg_ref` by hypothesis sweeps
+in ``python/tests/test_kernels.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _kernel(h_ref, nbr_idx_ref, nbr_w_ref, self_idx_ref, self_w_ref, o_ref):
+    """Single-block body: whole arrays are resident."""
+    h = h_ref[...]
+    nbr_idx = nbr_idx_ref[...]
+    nbr_w = nbr_w_ref[...]
+    self_idx = self_idx_ref[...]
+    self_w = self_w_ref[...]
+    gathered = jnp.take(h, nbr_idx, axis=0)  # [n_dst, k, d]
+    agg = jnp.einsum("nkd,nk->nd", gathered, nbr_w)
+    o_ref[...] = agg + jnp.take(h, self_idx, axis=0) * self_w[:, None]
+
+
+@jax.custom_vjp
+def gather_agg(h, nbr_idx, nbr_w, self_idx, self_w):
+    """Aggregate neighbor rows of ``h``: see ``ref.gather_agg_ref``.
+
+    Reverse-mode AD is provided by a custom VJP (`pallas_call` has no
+    automatic transpose): ∂h is the transposed aggregation — a
+    scatter-add, which on TPU would be the one genuinely scatter-shaped
+    op of the pipeline (XLA lowers `.at[].add` to a sorted segment
+    reduction there); ∂nbr_w/∂self_w are row-dot-products.
+    """
+    return _gather_agg_impl(h, nbr_idx, nbr_w, self_idx, self_w)
+
+
+def _gather_agg_impl(h, nbr_idx, nbr_w, self_idx, self_w, *, interpret=True):
+    n_dst = nbr_idx.shape[0]
+    d = h.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((n_dst, d), h.dtype),
+        interpret=interpret,
+    )(h, nbr_idx, nbr_w, self_idx, self_w)
+
+
+def _gather_agg_fwd(h, nbr_idx, nbr_w, self_idx, self_w):
+    out = _gather_agg_impl(h, nbr_idx, nbr_w, self_idx, self_w)
+    return out, (h, nbr_idx, nbr_w, self_idx, self_w)
+
+
+def _gather_agg_bwd(res, g):
+    h, nbr_idx, nbr_w, self_idx, self_w = res
+    # ∂h: scatter-add the weighted output cotangents back to source rows.
+    dh = jnp.zeros_like(h)
+    dh = dh.at[nbr_idx].add(g[:, None, :] * nbr_w[:, :, None])
+    dh = dh.at[self_idx].add(g * self_w[:, None])
+    # ∂weights: dot of cotangent with the gathered rows.
+    dnbr_w = jnp.einsum("nd,nkd->nk", g, jnp.take(h, nbr_idx, axis=0))
+    dself_w = jnp.einsum("nd,nd->n", g, jnp.take(h, self_idx, axis=0))
+    zero_i = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+    return dh, zero_i(nbr_idx), dnbr_w, zero_i(self_idx), dself_w
+
+
+gather_agg.defvjp(_gather_agg_fwd, _gather_agg_bwd)
+
+
+def _tiled_kernel(h_ref, nbr_idx_ref, nbr_w_ref, self_idx_ref, self_w_ref, o_ref):
+    """Tiled body: one destination tile per grid step.
+
+    ``h_ref`` is the *whole* source matrix (no index_map ⇒ identity block
+    covering the array; on TPU this operand would live in ANY/HBM and the
+    gathers below become DMA row fetches into VMEM).
+    """
+    h = h_ref[...]
+    nbr_idx = nbr_idx_ref[...]  # [bm, k]
+    nbr_w = nbr_w_ref[...]
+    gathered = jnp.take(h, nbr_idx, axis=0)  # [bm, k, d]
+    agg = jnp.einsum("nkd,nk->nd", gathered, nbr_w)
+    o_ref[...] = agg + jnp.take(h, self_idx_ref[...], axis=0) * self_w_ref[...][:, None]
+
+
+def gather_agg_tiled(h, nbr_idx, nbr_w, self_idx, self_w, *, block_rows=128, interpret=True):
+    """Tiled variant: grid over destination tiles of ``block_rows`` rows.
+
+    Requires ``n_dst % block_rows == 0`` (the Rust cap planner rounds the
+    layer caps up to the tile size).
+    """
+    n_dst, k = nbr_idx.shape
+    d = h.shape[1]
+    assert n_dst % block_rows == 0, (n_dst, block_rows)
+    grid = (n_dst // block_rows,)
+    return pl.pallas_call(
+        _tiled_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(h.shape, lambda i: (0, 0)),  # whole source matrix
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_dst, d), h.dtype),
+        interpret=interpret,
+    )(h, nbr_idx, nbr_w, self_idx, self_w)
+
+
+@functools.cache
+def vmem_bytes_per_step(block_rows: int, k: int, d: int, dtype_bytes: int = 4) -> int:
+    """VMEM footprint estimate of one tiled grid step (DESIGN.md §8):
+    gathered tile [bm, k, d] + output tile [bm, d] + index/weight tiles.
+    """
+    gathered = block_rows * k * d * dtype_bytes
+    out = block_rows * d * dtype_bytes
+    idx_w = block_rows * k * (4 + dtype_bytes) + block_rows * (4 + dtype_bytes)
+    return gathered + out + idx_w

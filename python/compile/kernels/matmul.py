@@ -1,0 +1,93 @@
+"""Feature-transform matmul as a Pallas kernel.
+
+The GCN layer's dense half (``agg @ W``). The tiled variant blocks M and
+N for the MXU (128x128 systolic array) with the full K panel resident —
+K <= 768 for every model config here, so an (bm, K) x (K, bn) step fits
+VMEM comfortably (see ``vmem_bytes_per_step``). bf16 inputs with f32
+accumulation is the MXU-native mix; the CPU artifacts stay f32.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Single-block pallas matmul (AOT-artifact variant).
+
+    The custom VJP routes both gradient matmuls back through the same
+    pallas kernel — forward *and* backward hot paths are kernel-owned.
+    """
+    return _matmul_impl(x, w)
+
+
+def _matmul_impl(x, w, *, interpret=True):
+    m, _ = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _matmul_impl(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    dx = _matmul_impl(g, w.T)
+    dw = _matmul_impl(x.T, g)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul_tiled(x, w, *, block_m=128, block_n=128, interpret=True):
+    """MXU-tiled matmul: grid over (M/bm, N/bn), K unblocked.
+
+    Requires M % bm == 0 and N % bn == 0 (cap planner guarantees).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and m % block_m == 0 and n % block_n == 0, (x.shape, w.shape)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+@functools.cache
+def vmem_bytes_per_step(block_m: int, block_n: int, k: int, dtype_bytes: int = 4) -> int:
+    """VMEM per tiled step: x tile + w tile + out tile."""
+    return (block_m * k + k * block_n + block_m * block_n) * dtype_bytes
+
+
+@functools.cache
+def mxu_utilization_estimate(block_m: int, block_n: int, k: int) -> float:
+    """Fraction of MXU peak achievable by one (bm, K)x(K, bn) step,
+    assuming the 128x128 systolic array: full when all dims >= 128 and
+    multiples of 128; fractional otherwise (padding waste).
+    """
+    eff = 1.0
+    for dim in (block_m, block_n, k):
+        pad = ((dim + 127) // 128) * 128
+        eff *= dim / pad
+    return eff

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels and the full GCN layer.
+
+These are the correctness ground truth: every kernel variant and the
+whole AOT'd model are asserted allclose against these in
+``python/tests``.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_agg_ref(h, nbr_idx, nbr_w, self_idx, self_w):
+    """Fixed-fanout masked-mean aggregation.
+
+    out[i] = sum_j nbr_w[i, j] * h[nbr_idx[i, j]] + self_w[i] * h[self_idx[i]]
+
+    Args:
+      h:        [n_src, d] source-row features.
+      nbr_idx:  [n_dst, k] int32 indices into h (0 where padded).
+      nbr_w:    [n_dst, k] f32 weights (0 where padded).
+      self_idx: [n_dst]    int32 self index into h.
+      self_w:   [n_dst]    f32 self weight (0 for padding rows).
+
+    Returns:
+      [n_dst, d] aggregated features.
+    """
+    gathered = h[nbr_idx]  # [n_dst, k, d]
+    agg = jnp.einsum("nkd,nk->nd", gathered, nbr_w)
+    return agg + h[self_idx] * self_w[:, None]
+
+
+def matmul_ref(x, w):
+    """Plain matmul oracle, f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def gcn_layer_ref(h, nbr_idx, nbr_w, self_idx, self_w, weight, bias, relu=True):
+    """One full GCN layer: aggregate then transform.
+
+    This is the composition the AOT model runs per layer; used to check
+    kernel composition (agg -> matmul -> bias -> relu) end to end.
+    """
+    agg = gather_agg_ref(h, nbr_idx, nbr_w, self_idx, self_w)
+    out = matmul_ref(agg, weight) + bias
+    return jnp.maximum(out, 0.0) if relu else out

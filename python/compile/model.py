@@ -1,0 +1,192 @@
+"""Layer-2 model: an L-layer GCN over fixed-fanout padded blocks, with
+softmax-CE loss and a fused Adam train step.
+
+The batch layout is the contract with the Rust block builder
+(``rust/src/sampling/block.rs``): for layer l (0 = output layer), the
+destination rows are a **prefix** of the source rows of layer l+1, so
+hidden states chain without re-gathering. All shapes are static (padded
+to the caps in ``aot.CONFIGS``); padding rows have zero weights and are
+masked out of the loss.
+
+Exported entry points (AOT-lowered by ``aot.py``):
+
+* :func:`train_step` — params/opt-state in, params/opt-state + loss +
+  correct-count out. One PJRT execution per minibatch; Python never runs
+  at training time.
+* :func:`forward` — logits for evaluation batches.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gather_agg import gather_agg
+from .kernels.matmul import matmul
+
+
+class ModelDims(NamedTuple):
+    layers: int
+    d_in: int
+    hidden: int
+    classes: int
+
+
+def param_shapes(dims: ModelDims):
+    """Ordered (name, shape) list — the flat AOT calling convention."""
+    shapes = []
+    d_prev = dims.d_in
+    for l in range(dims.layers):
+        d_out = dims.classes if l == dims.layers - 1 else dims.hidden
+        shapes.append((f"w{l}", (d_prev, d_out)))
+        shapes.append((f"b{l}", (d_out,)))
+        d_prev = d_out
+    return shapes
+
+
+def init_params(dims: ModelDims, key):
+    """Glorot-ish init, matching what the Rust trainer seeds via AOT'd
+    `init` is unnecessary — Rust materializes these shapes itself from
+    the manifest and a host RNG; this initializer is for python tests."""
+    params = []
+    for _name, shape in param_shapes(dims):
+        if len(shape) == 2:
+            key, sub = jax.random.split(key)
+            scale = (2.0 / (shape[0] + shape[1])) ** 0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * scale)
+        else:
+            params.append(jnp.zeros(shape, jnp.float32))
+    return params
+
+
+def forward(params, feats, blocks, dims: ModelDims):
+    """GCN forward over an MFG.
+
+    ``blocks`` is a list of L tuples (nbr_idx, nbr_w, self_idx, self_w),
+    index l connecting layer l (dst) to layer l+1 (src); layer L's source
+    rows are ``feats``. Iterates deepest-first.
+    """
+    h = feats
+    for l in range(dims.layers - 1, -1, -1):
+        nbr_idx, nbr_w, self_idx, self_w = blocks[l]
+        agg = gather_agg(h, nbr_idx, nbr_w, self_idx, self_w)
+        # block index l counts from the *output* (l=0) toward the inputs
+        # (l=L-1), params are ordered input-first: depth d = L-1-l.
+        d = dims.layers - 1 - l
+        w, b = params[2 * d], params[2 * d + 1]
+        h = matmul(agg, w) + b
+        if l != 0:
+            h = jnp.maximum(h, 0.0)
+    return h  # [n0, classes] logits
+
+
+def loss_and_metrics(params, feats, blocks, labels, label_mask, dims: ModelDims):
+    """Masked mean cross-entropy + correct-prediction count."""
+    logits = forward(params, feats, blocks, dims)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    denom = jnp.maximum(label_mask.sum(), 1.0)
+    loss = -(picked * label_mask).sum() / denom
+    correct = ((jnp.argmax(logits, axis=-1) == labels) * label_mask).sum()
+    return loss, correct
+
+
+def train_step(params, m_state, v_state, step, feats, blocks, labels, label_mask,
+               lr, dims: ModelDims, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One fused SGD step: grads + Adam update.
+
+    Returns (new_params, new_m, new_v, new_step, loss, correct).
+    ``step`` is the 1-based Adam timestep (f32 scalar, incremented here).
+    """
+    def loss_fn(ps):
+        return loss_and_metrics(ps, feats, blocks, labels, label_mask, dims)
+
+    (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    t = step + 1.0
+    bc1 = 1.0 - beta1 ** t
+    bc2 = 1.0 - beta2 ** t
+    new_params, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, m_state, v_state):
+        m2 = beta1 * m + (1.0 - beta1) * g
+        v2 = beta2 * v + (1.0 - beta2) * (g * g)
+        update = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        new_params.append(p - lr * update)
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_params, new_m, new_v, t, loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Flat calling convention for AOT export.
+#
+# Input order:  params (2L) | m (2L) | v (2L) | step | feats
+#               | per-layer blocks L x (nbr_idx, nbr_w, self_idx, self_w)
+#               | labels | label_mask | lr
+# Output order: params (2L) | m (2L) | v (2L) | step | loss | correct
+# ---------------------------------------------------------------------------
+
+def flat_train_step(dims: ModelDims, *flat):
+    n = 2 * dims.layers
+    params = list(flat[0:n])
+    m_state = list(flat[n:2 * n])
+    v_state = list(flat[2 * n:3 * n])
+    i = 3 * n
+    step = flat[i]; i += 1
+    feats = flat[i]; i += 1
+    blocks = []
+    for _ in range(dims.layers):
+        blocks.append(tuple(flat[i:i + 4]))
+        i += 4
+    labels = flat[i]; i += 1
+    label_mask = flat[i]; i += 1
+    lr = flat[i]; i += 1
+    assert i == len(flat), (i, len(flat))
+    new_params, new_m, new_v, t, loss, correct = train_step(
+        params, m_state, v_state, step, feats, blocks, labels, label_mask, lr, dims)
+    return tuple(new_params + new_m + new_v + [t, loss, correct])
+
+
+def flat_forward(dims: ModelDims, *flat):
+    """Input order: params (2L) | feats | blocks (4L)."""
+    n = 2 * dims.layers
+    params = list(flat[0:n])
+    i = n
+    feats = flat[i]; i += 1
+    blocks = []
+    for _ in range(dims.layers):
+        blocks.append(tuple(flat[i:i + 4]))
+        i += 4
+    assert i == len(flat)
+    return (forward(params, feats, blocks, dims),)
+
+
+def flat_input_specs(dims: ModelDims, caps, mode: str):
+    """ShapeDtypeStructs matching the flat calling convention.
+
+    ``caps`` = dict with keys "k" and "n" (list of L+1 layer caps),
+    mirroring Rust's ShapeCaps. ``mode`` in {"train", "forward"}.
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    k = caps["k"]
+    n = caps["n"]
+    L = dims.layers
+    s = jax.ShapeDtypeStruct
+    specs = []
+    pshapes = [shape for _n, shape in param_shapes(dims)]
+    specs += [s(sh, f32) for sh in pshapes]
+    if mode == "train":
+        specs += [s(sh, f32) for sh in pshapes]  # m
+        specs += [s(sh, f32) for sh in pshapes]  # v
+        specs.append(s((), f32))  # step
+    specs.append(s((n[L], dims.d_in), f32))  # feats
+    for l in range(L):
+        specs.append(s((n[l], k), i32))
+        specs.append(s((n[l], k), f32))
+        specs.append(s((n[l],), i32))
+        specs.append(s((n[l],), f32))
+    if mode == "train":
+        specs.append(s((n[0],), i32))  # labels
+        specs.append(s((n[0],), f32))  # label_mask
+        specs.append(s((), f32))  # lr
+    return specs

@@ -1,0 +1,146 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+Hypothesis sweeps shapes/weights for both the single-block (AOT) and
+tiled (TPU-schedule) variants of each kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gather_agg import (
+    gather_agg,
+    gather_agg_tiled,
+    vmem_bytes_per_step as agg_vmem,
+)
+from compile.kernels.matmul import (
+    matmul,
+    matmul_tiled,
+    mxu_utilization_estimate,
+    vmem_bytes_per_step as mm_vmem,
+)
+from compile.kernels.ref import gather_agg_ref, gcn_layer_ref, matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_agg_inputs(rng, n_src, n_dst, k, d, pad_fraction=0.3):
+    h = rng.standard_normal((n_src, d)).astype(np.float32)
+    nbr_idx = rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32)
+    nbr_w = rng.random((n_dst, k)).astype(np.float32)
+    # zero out a fraction of slots (padding) and whole rows
+    mask = rng.random((n_dst, k)) < pad_fraction
+    nbr_w[mask] = 0.0
+    self_idx = rng.integers(0, n_src, size=(n_dst,)).astype(np.int32)
+    self_w = rng.random((n_dst,)).astype(np.float32)
+    dead_rows = rng.random(n_dst) < 0.1
+    nbr_w[dead_rows, :] = 0.0
+    self_w[dead_rows] = 0.0
+    return h, nbr_idx, nbr_w, self_idx, self_w
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_src=st.integers(4, 200),
+    n_dst_raw=st.integers(1, 150),
+    k=st.integers(1, 12),
+    d=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_agg_matches_ref(n_src, n_dst_raw, k, d, seed):
+    rng = np.random.default_rng(seed)
+    inputs = make_agg_inputs(rng, n_src, n_dst_raw, k, d)
+    got = gather_agg(*[jnp.asarray(x) for x in inputs])
+    want = gather_agg_ref(*[jnp.asarray(x) for x in inputs])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    tiles=st.integers(1, 4),
+    block_rows=st.sampled_from([8, 32, 128]),
+    k=st.integers(1, 10),
+    d=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_gather_agg_tiled_matches_ref(tiles, block_rows, k, d, seed):
+    n_dst = tiles * block_rows
+    rng = np.random.default_rng(seed)
+    inputs = make_agg_inputs(rng, max(4, n_dst), n_dst, k, d)
+    args = [jnp.asarray(x) for x in inputs]
+    got = gather_agg_tiled(*args, block_rows=block_rows)
+    want = gather_agg_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_gather_agg_dtype_bf16():
+    rng = np.random.default_rng(0)
+    h, ni, nw, si, sw = make_agg_inputs(rng, 64, 32, 5, 16)
+    got = gather_agg(
+        jnp.asarray(h, jnp.bfloat16), jnp.asarray(ni),
+        jnp.asarray(nw, jnp.bfloat16), jnp.asarray(si), jnp.asarray(sw, jnp.bfloat16))
+    want = gather_agg_ref(
+        jnp.asarray(h, jnp.bfloat16), jnp.asarray(ni),
+        jnp.asarray(nw, jnp.bfloat16), jnp.asarray(si), jnp.asarray(sw, jnp.bfloat16))
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=3e-2, atol=3e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    np.testing.assert_allclose(matmul(x, w), matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    k=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_tiled_matches_ref(mi, ni, k, seed):
+    bm, bn = 32, 32
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((mi * bm, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, ni * bn)), jnp.float32)
+    got = matmul_tiled(x, w, block_m=bm, block_n=bn)
+    np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_gcn_layer_composition():
+    rng = np.random.default_rng(7)
+    h, ni, nw, si, sw = make_agg_inputs(rng, 100, 40, 6, 24)
+    w = jnp.asarray(rng.standard_normal((24, 16)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(16), jnp.float32)
+    args = [jnp.asarray(x) for x in (h, ni, nw, si, sw)]
+    got = jnp.maximum(matmul(gather_agg(*args), w) + b, 0.0)
+    want = gcn_layer_ref(*args, w, b, relu=True)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimates_sane():
+    # the shipped tiled config must fit a TPU core's ~16 MiB VMEM
+    assert agg_vmem(128, 40, 768) < 16 * 2**20
+    assert mm_vmem(128, 128, 768) < 16 * 2**20
+    assert mxu_utilization_estimate(128, 128, 128) == 1.0
+    assert 0.0 < mxu_utilization_estimate(100, 128, 64) < 1.0
+
+
+def test_padding_rows_produce_zero():
+    rng = np.random.default_rng(3)
+    h, ni, nw, si, sw = make_agg_inputs(rng, 32, 16, 4, 8)
+    nw[5, :] = 0.0
+    sw[5] = 0.0
+    out = np.asarray(gather_agg(*[jnp.asarray(x) for x in (h, ni, nw, si, sw)]))
+    np.testing.assert_allclose(out[5], np.zeros(8), atol=0)

@@ -1,0 +1,172 @@
+"""Layer-2 model correctness: forward vs pure-jnp reference, gradient
+sanity (finite differences), Adam step behavior, and loss descent on a
+planted micro-task through the exact flat AOT calling convention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import gather_agg_ref
+from compile.model import (
+    ModelDims,
+    flat_forward,
+    flat_input_specs,
+    flat_train_step,
+    forward,
+    init_params,
+    loss_and_metrics,
+    param_shapes,
+    train_step,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = ModelDims(layers=2, d_in=6, hidden=8, classes=4)
+
+
+def tiny_batch(rng, dims=DIMS, n=(5, 12, 20), k=3):
+    """Hand-rolled 2-layer padded batch with prefix-nesting semantics."""
+    feats = rng.standard_normal((n[2], dims.d_in)).astype(np.float32)
+    blocks = []
+    for l in range(dims.layers):
+        n_dst, n_src = n[l], n[l + 1]
+        nbr_idx = rng.integers(0, n_src, size=(n_dst, k)).astype(np.int32)
+        deg = rng.integers(0, k, size=n_dst)
+        nbr_w = np.zeros((n_dst, k), np.float32)
+        self_w = np.zeros(n_dst, np.float32)
+        for i in range(n_dst):
+            inv = 1.0 / (deg[i] + 1.0)
+            nbr_w[i, : deg[i]] = inv
+            self_w[i] = inv
+        self_idx = np.arange(n_dst, dtype=np.int32)  # prefix nesting
+        blocks.append(tuple(jnp.asarray(x) for x in (nbr_idx, nbr_w, self_idx, self_w)))
+    labels = rng.integers(0, dims.classes, size=n[0]).astype(np.int32)
+    mask = np.ones(n[0], np.float32)
+    return jnp.asarray(feats), blocks, jnp.asarray(labels), jnp.asarray(mask)
+
+
+def ref_forward(params, feats, blocks, dims):
+    h = feats
+    for l in range(dims.layers - 1, -1, -1):
+        ni, nw, si, sw = blocks[l]
+        agg = gather_agg_ref(h, ni, nw, si, sw)
+        d = dims.layers - 1 - l
+        h = agg @ params[2 * d] + params[2 * d + 1]
+        if l != 0:
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def test_forward_matches_pure_jnp_reference():
+    rng = np.random.default_rng(0)
+    feats, blocks, _, _ = tiny_batch(rng)
+    params = init_params(DIMS, jax.random.PRNGKey(1))
+    got = forward(params, feats, blocks, DIMS)
+    want = ref_forward(params, feats, blocks, DIMS)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_loss_masking():
+    rng = np.random.default_rng(1)
+    feats, blocks, labels, mask = tiny_batch(rng)
+    params = init_params(DIMS, jax.random.PRNGKey(2))
+    full, _ = loss_and_metrics(params, feats, blocks, labels, mask, DIMS)
+    half_mask = mask.at[0].set(0.0)
+    half, _ = loss_and_metrics(params, feats, blocks, labels, half_mask, DIMS)
+    assert np.isfinite(full) and np.isfinite(half)
+    assert not np.allclose(full, half), "masking a row must change the loss"
+
+
+def test_gradients_match_finite_differences():
+    rng = np.random.default_rng(2)
+    feats, blocks, labels, mask = tiny_batch(rng)
+    params = init_params(DIMS, jax.random.PRNGKey(3))
+
+    def loss_of(ps):
+        return loss_and_metrics(ps, feats, blocks, labels, mask, DIMS)[0]
+
+    grads = jax.grad(loss_of)(params)
+    eps = 1e-3
+    # probe a handful of coordinates of w0
+    w0 = params[0]
+    for (i, j) in [(0, 0), (2, 3), (5, 1)]:
+        bumped = [p for p in params]
+        bumped[0] = w0.at[i, j].add(eps)
+        up = loss_of(bumped)
+        bumped[0] = w0.at[i, j].add(-eps)
+        down = loss_of(bumped)
+        fd = (up - down) / (2 * eps)
+        assert abs(fd - grads[0][i, j]) < 5e-3, (i, j, fd, grads[0][i, j])
+
+
+def test_train_step_descends_and_learns():
+    rng = np.random.default_rng(3)
+    feats, blocks, labels, mask = tiny_batch(rng)
+    params = init_params(DIMS, jax.random.PRNGKey(4))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = jnp.asarray(0.0)
+    first = None
+    jit_step = jax.jit(
+        lambda p, m, v, s: train_step(p, m, v, s, feats, blocks, labels, mask, 0.05, DIMS))
+    for it in range(120):
+        params, m, v, step, loss, correct = jit_step(params, m, v, step)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.5, (first, float(loss))
+    assert float(correct) >= 0.8 * float(mask.sum()), "should overfit 5 labels"
+    assert float(step) == 120.0
+
+
+def test_flat_convention_roundtrip():
+    """flat_train_step(flat inputs) == train_step(structured inputs)."""
+    dims = DIMS
+    rng = np.random.default_rng(4)
+    feats, blocks, labels, mask = tiny_batch(rng)
+    params = init_params(dims, jax.random.PRNGKey(5))
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    flat = (
+        list(params) + list(m) + list(v) + [jnp.asarray(0.0), feats]
+        + [x for blk in blocks for x in blk]
+        + [labels, mask, jnp.asarray(0.05)]
+    )
+    flat_out = flat_train_step(dims, *flat)
+    s_params, s_m, s_v, s_t, s_loss, s_correct = train_step(
+        params, m, v, jnp.asarray(0.0), feats, blocks, labels, mask, 0.05, dims)
+    n = 2 * dims.layers
+    for a, b in zip(flat_out[:n], s_params):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    np.testing.assert_allclose(flat_out[3 * n + 1], s_loss, rtol=1e-6)
+    np.testing.assert_allclose(flat_out[3 * n + 2], s_correct, rtol=1e-6)
+
+
+def test_flat_input_specs_counts():
+    dims = ModelDims(layers=3, d_in=16, hidden=32, classes=8)
+    caps = {"k": 40, "n": [32, 512, 2048, 2048]}
+    train_specs = flat_input_specs(dims, caps, "train")
+    fwd_specs = flat_input_specs(dims, caps, "forward")
+    # train: 3*6 params/m/v + step + feats + 12 block tensors + labels+mask+lr
+    assert len(train_specs) == 18 + 1 + 1 + 12 + 3
+    assert len(fwd_specs) == 6 + 1 + 12
+    assert train_specs[19].shape == (2048, 16)
+
+
+def test_flat_forward_shapes():
+    dims = DIMS
+    rng = np.random.default_rng(5)
+    feats, blocks, _, _ = tiny_batch(rng)
+    params = init_params(dims, jax.random.PRNGKey(6))
+    flat = list(params) + [feats] + [x for blk in blocks for x in blk]
+    (logits,) = flat_forward(dims, *flat)
+    assert logits.shape == (5, dims.classes)
+
+
+def test_param_shapes_order():
+    dims = ModelDims(layers=3, d_in=10, hidden=20, classes=5)
+    names = [n for n, _ in param_shapes(dims)]
+    assert names == ["w0", "b0", "w1", "b1", "w2", "b2"]
+    shapes = dict(param_shapes(dims))
+    assert shapes["w0"] == (10, 20)
+    assert shapes["w2"] == (20, 5)

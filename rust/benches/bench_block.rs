@@ -1,0 +1,39 @@
+//! MFG construction + fixed-fanout padding benchmarks — the per-batch
+//! block-building hot path between sampling and PJRT execution.
+
+use coopgnn::graph::generate;
+use coopgnn::sampling::{block, SamplerConfig, SamplerKind};
+use coopgnn::util::stats::bench_ms;
+
+fn main() {
+    let g = generate::chung_lu(222_000, 29.1, 2.4, 1).to_undirected();
+    let seeds: Vec<u32> = (0..1024u32).map(|i| i * 217 % 222_000).collect();
+    let cfg = SamplerConfig::default();
+
+    let mut s = cfg.build(SamplerKind::Labor0, &g, 7);
+    let mut mfg = s.sample_mfg(&seeds);
+    println!("papers-s-sized MFG: counts {:?}", mfg.vertex_counts());
+
+    bench_ms("build_mfg/labor0_b1024", 2, 20, || {
+        mfg = s.sample_mfg(&seeds);
+        s.advance_batch();
+    });
+
+    let caps = block::ShapeCaps { k: 40, n: vec![1024, 13056, 58368, 136704] };
+    bench_ms("pad/papers_caps", 2, 20, || {
+        let pb = mfg.pad(&caps, |_| 3);
+        std::hint::black_box(&pb);
+    });
+
+    // merged (indep-mode) construction
+    let parts: Vec<_> = (0..4)
+        .map(|i| {
+            let mut si = cfg.build(SamplerKind::Labor0, &g, 100 + i);
+            si.sample_mfg(&seeds[..256])
+        })
+        .collect();
+    bench_ms("merge_mfgs/4x256", 2, 20, || {
+        let m = block::merge_mfgs(&parts);
+        std::hint::black_box(&m);
+    });
+}

@@ -1,0 +1,42 @@
+//! LRU cache benchmarks: access throughput in the hit-heavy, miss-heavy,
+//! and thrash regimes (the feature-loading stage consults the cache once
+//! per requested vertex row).
+
+use coopgnn::coop::cache::LruCache;
+use coopgnn::util::rng::Pcg64;
+use coopgnn::util::stats::bench_ms;
+
+fn main() {
+    let n_access = 100_000usize;
+
+    // hit-heavy: universe fits in cache
+    let mut c = LruCache::new(1 << 16);
+    let mut rng = Pcg64::new(1);
+    let keys: Vec<u32> = (0..n_access).map(|_| rng.next_below(1 << 15) as u32).collect();
+    let s = bench_ms("lru/hit_heavy_100k", 2, 30, || {
+        for &k in &keys {
+            std::hint::black_box(c.access(k));
+        }
+    });
+    println!("  -> {:.1} M accesses/s", n_access as f64 / (s.p50 / 1e3) / 1e6);
+
+    // miss-heavy: huge universe
+    let mut c = LruCache::new(1 << 14);
+    let keys: Vec<u32> = (0..n_access).map(|_| rng.next_below(1 << 24) as u32).collect();
+    let s = bench_ms("lru/miss_heavy_100k", 2, 30, || {
+        for &k in &keys {
+            std::hint::black_box(c.access(k));
+        }
+    });
+    println!("  -> {:.1} M accesses/s", n_access as f64 / (s.p50 / 1e3) / 1e6);
+
+    // cyclic thrash: worst case eviction churn
+    let mut c = LruCache::new(10_000);
+    let keys: Vec<u32> = (0..n_access).map(|i| (i % 10_001) as u32).collect();
+    let s = bench_ms("lru/cyclic_thrash_100k", 2, 30, || {
+        for &k in &keys {
+            std::hint::black_box(c.access(k));
+        }
+    });
+    println!("  -> {:.1} M accesses/s", n_access as f64 / (s.p50 / 1e3) / 1e6);
+}

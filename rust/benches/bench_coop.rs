@@ -1,0 +1,50 @@
+//! Cooperative-engine benchmarks: Algorithm 1 sampling rounds, the
+//! all-to-all fabric, and the cooperative vs independent end-to-end
+//! count phase (the inner loop behind Tables 4/7).
+
+use coopgnn::coop::all_to_all::Exchange;
+use coopgnn::coop::coop_sampler::{partition_seeds, sample_cooperative};
+use coopgnn::coop::indep::sample_independent;
+use coopgnn::graph::{generate, partition};
+use coopgnn::sampling::{SamplerConfig, SamplerKind};
+use coopgnn::util::rng::Pcg64;
+use coopgnn::util::stats::bench_ms;
+
+fn main() {
+    let g = generate::chung_lu(89_200, 10.1, 2.5, 1);
+    let part = partition::random(&g, 4, 2);
+    let cfg = SamplerConfig::default();
+    let seeds: Vec<u32> = (0..4096u32).map(|i| i * 19 % 89_200).collect();
+    let per_pe = partition_seeds(&seeds, &part);
+
+    bench_ms("coop_sample/4pe_b1024_labor0", 2, 15, || {
+        let mut samplers: Vec<_> =
+            (0..4).map(|_| cfg.build(SamplerKind::Labor0, &g, 7)).collect();
+        let c = sample_cooperative(&g, &part, &mut samplers, &per_pe, 3);
+        std::hint::black_box(&c);
+    });
+
+    bench_ms("indep_sample/4pe_b1024_labor0", 2, 15, || {
+        let mut samplers: Vec<_> =
+            (0..4).map(|p| cfg.build(SamplerKind::Labor0, &g, 7 + p)).collect();
+        let s = sample_independent(&mut samplers, &per_pe);
+        std::hint::black_box(&s);
+    });
+
+    // raw all-to-all routing throughput
+    let mut rng = Pcg64::new(3);
+    let buckets: Vec<Vec<Vec<u32>>> = (0..8)
+        .map(|_| {
+            (0..8)
+                .map(|_| (0..20_000).map(|_| rng.next_u64() as u32).collect())
+                .collect()
+        })
+        .collect();
+    let items: usize = buckets.iter().flatten().map(|b| b.len()).sum();
+    let s = bench_ms("all_to_all/8pe_1.28M_ids", 2, 20, || {
+        let mut ex = Exchange::new(8);
+        let inboxes = ex.route(&buckets, 4);
+        std::hint::black_box(&inboxes);
+    });
+    println!("  -> {:.1} M ids/s routed", items as f64 / (s.p50 / 1e3) / 1e6);
+}

@@ -1,0 +1,47 @@
+//! Sampler micro-benchmarks: per-algorithm layer-sampling throughput.
+//! The sampling stage is a per-batch hot path on L3 (paper Table 4
+//! "Samp." column); the perf target (EXPERIMENTS.md §Perf) is >10M
+//! examined-edges/s/core for NS/LABOR-0.
+
+use coopgnn::graph::generate;
+use coopgnn::sampling::{Neighborhoods, RwParams, SamplerConfig, SamplerKind};
+use coopgnn::util::stats::bench_ms;
+
+fn main() {
+    let g = generate::chung_lu(89_200, 10.1, 2.5, 1);
+    let seeds: Vec<u32> = (0..4096u32).map(|i| i * 19 % 89_200).collect();
+    // examined edges = sum of seed degrees (the samplers scan full lists)
+    let examined: usize = seeds.iter().map(|&s| g.degree(s)).sum();
+    println!("graph |V|={} |E|={}, 4096 seeds, {examined} examined edges", g.num_vertices(), g.num_edges());
+
+    for kind in SamplerKind::ALL {
+        let cfg = SamplerConfig {
+            rw: RwParams { num_walks: 25, ..Default::default() },
+            ..Default::default()
+        };
+        let mut s = cfg.build(kind, &g, 7);
+        let mut out = Neighborhoods::default();
+        let iters = if kind == SamplerKind::RandomWalk { 10 } else { 50 };
+        let summary = bench_ms(&format!("sample_layer/{}", kind.name()), 3, iters, || {
+            s.sample_layer(&seeds, 0, &mut out);
+            s.advance_batch();
+        });
+        let meps = examined as f64 / (summary.p50 / 1e3) / 1e6;
+        println!("  -> {:.1} M examined-edges/s ({} sampled)", meps, out.num_edges());
+    }
+
+    // dependent-RNG variants: the smoothing path costs two hashes + two
+    // icdf + one cdf per variate — measure the overhead vs κ=1.
+    for kappa in ["1", "64"] {
+        let cfg = SamplerConfig {
+            kappa: coopgnn::sampling::Kappa::parse(kappa).unwrap(),
+            ..Default::default()
+        };
+        let mut s = cfg.build(SamplerKind::Labor0, &g, 9);
+        s.advance_batch(); // move off the pure-z1 fast path for κ=64
+        let mut out = Neighborhoods::default();
+        bench_ms(&format!("sample_layer/LABOR-0 kappa={kappa}"), 3, 50, || {
+            s.sample_layer(&seeds, 0, &mut out);
+        });
+    }
+}

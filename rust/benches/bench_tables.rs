@@ -1,0 +1,32 @@
+//! One bench entry per paper table/figure family: runs each repro
+//! harness in quick mode and reports its wall time, so `cargo bench`
+//! exercises every generator the paper's evaluation needs (Figures 3/5/9,
+//! Tables 3–7, scaling note).
+
+use coopgnn::repro::{self, Ctx};
+use coopgnn::util::stats::Timer;
+use std::path::Path;
+
+fn main() {
+    let out = std::env::temp_dir().join("coopgnn_bench_tables");
+    let have_artifacts = Path::new("artifacts/manifest.json").exists();
+    let ctx = Ctx {
+        out: out.clone(),
+        quick: true,
+        seed: 0xBE7C,
+        artifacts: "artifacts".into(),
+    };
+    let mut ids: Vec<&str> = vec!["fig3", "fig5a", "fig5b", "table4", "table7", "scaling"];
+    if have_artifacts {
+        ids.push("table3");
+        ids.push("fig9");
+    } else {
+        println!("(artifacts/ missing: skipping table3/fig9 training benches)");
+    }
+    for id in ids {
+        let t = Timer::start();
+        repro::run(id, &ctx).unwrap();
+        println!("bench repro/{id:<8} (quick) {:>10.1} ms", t.elapsed_ms());
+    }
+    std::fs::remove_dir_all(&out).ok();
+}

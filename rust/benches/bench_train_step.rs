@@ -1,0 +1,48 @@
+//! End-to-end train-step latency through PJRT (L2/L1 execution from the
+//! L3 hot path) for the tiny and conv artifact configs: the per-batch
+//! breakdown (sample / pad / feature / execute) that the perf pass
+//! optimizes. Skips cleanly when artifacts are absent.
+
+use coopgnn::graph::datasets;
+use coopgnn::runtime::{Manifest, Runtime};
+use coopgnn::train::{Trainer, TrainerOptions};
+use coopgnn::util::stats::Summary;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("bench_train_step: artifacts/ missing (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    for (ds_name, config, iters) in
+        [("tiny", "tiny-b32", 40usize), ("conv", "conv-b256", 15)]
+    {
+        let ds = datasets::build(ds_name, 1).unwrap();
+        let opts = TrainerOptions::default();
+        let mut t = Trainer::new(&rt, &manifest, config, &ds, &opts).unwrap();
+        // warmup
+        for _ in 0..3 {
+            t.step().unwrap();
+        }
+        let (mut samp, mut pad, mut feat, mut exec, mut total) =
+            (vec![], vec![], vec![], vec![], vec![]);
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            let s = t.step().unwrap();
+            total.push(t0.elapsed().as_secs_f64() * 1e3);
+            samp.push(s.sample_ms);
+            pad.push(s.pad_ms);
+            feat.push(s.feature_ms);
+            exec.push(s.exec_ms);
+        }
+        println!("train_step/{config}:");
+        println!("  sample  {}", Summary::of(&samp));
+        println!("  pad     {}", Summary::of(&pad));
+        println!("  feature {}", Summary::of(&feat));
+        println!("  execute {}", Summary::of(&exec));
+        println!("  total   {}", Summary::of(&total));
+    }
+}

@@ -1,0 +1,228 @@
+//! O(1) LRU cache for vertex embeddings (paper §4.2).
+//!
+//! The paper measures *cache miss rate* as the proxy for vertex-embedding
+//! traffic from storage ("the cache miss rate is proportional to the
+//! amount of data that needs to be copied from the vertex embedding
+//! storage"). We only track membership — the actual feature bytes are
+//! regenerated on demand by the dataset — so the cache stores vertex ids
+//! in a classic hashmap + intrusive doubly-linked list arena.
+
+use crate::graph::VertexId;
+use std::collections::HashMap;
+
+const NIL: u32 = u32::MAX;
+
+#[derive(Clone, Debug)]
+struct Node {
+    key: VertexId,
+    prev: u32,
+    next: u32,
+}
+
+/// Fixed-capacity LRU set with hit/miss accounting.
+#[derive(Clone, Debug)]
+pub struct LruCache {
+    map: HashMap<VertexId, u32>,
+    arena: Vec<Node>,
+    head: u32, // most recent
+    tail: u32, // least recent
+    capacity: usize,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl LruCache {
+    pub fn new(capacity: usize) -> Self {
+        LruCache {
+            map: HashMap::with_capacity(capacity.min(1 << 22)),
+            arena: Vec::with_capacity(capacity.min(1 << 22)),
+            head: NIL,
+            tail: NIL,
+            capacity: capacity.max(1),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Access vertex `v`: returns `true` on hit. On miss the vertex is
+    /// inserted (evicting the LRU entry if full). Either way `v` becomes
+    /// most-recently-used.
+    pub fn access(&mut self, v: VertexId) -> bool {
+        if let Some(&idx) = self.map.get(&v) {
+            self.hits += 1;
+            self.move_to_front(idx);
+            true
+        } else {
+            self.misses += 1;
+            self.insert_front(v);
+            false
+        }
+    }
+
+    /// Peek membership without updating recency or stats.
+    pub fn contains(&self, v: VertexId) -> bool {
+        self.map.contains_key(&v)
+    }
+
+    pub fn miss_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.misses as f64 / total as f64
+        }
+    }
+
+    /// Reset statistics (not contents) — used between measurement windows
+    /// so warmup accesses don't pollute reported rates.
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    fn detach(&mut self, idx: u32) {
+        let (prev, next) = {
+            let n = &self.arena[idx as usize];
+            (n.prev, n.next)
+        };
+        if prev != NIL {
+            self.arena[prev as usize].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.arena[next as usize].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn attach_front(&mut self, idx: u32) {
+        self.arena[idx as usize].prev = NIL;
+        self.arena[idx as usize].next = self.head;
+        if self.head != NIL {
+            self.arena[self.head as usize].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    fn move_to_front(&mut self, idx: u32) {
+        if self.head == idx {
+            return;
+        }
+        self.detach(idx);
+        self.attach_front(idx);
+    }
+
+    fn insert_front(&mut self, v: VertexId) {
+        if self.map.len() >= self.capacity {
+            // evict LRU (tail), reuse its arena slot
+            let idx = self.tail;
+            debug_assert_ne!(idx, NIL);
+            self.detach(idx);
+            let old = self.arena[idx as usize].key;
+            self.map.remove(&old);
+            self.arena[idx as usize].key = v;
+            self.map.insert(v, idx);
+            self.attach_front(idx);
+        } else {
+            let idx = self.arena.len() as u32;
+            self.arena.push(Node { key: v, prev: NIL, next: NIL });
+            self.map.insert(v, idx);
+            self.attach_front(idx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut c = LruCache::new(2);
+        assert!(!c.access(1)); // miss
+        assert!(!c.access(2)); // miss
+        assert!(c.access(1)); // hit
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.misses, 2);
+        assert!((c.miss_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = LruCache::new(2);
+        c.access(1);
+        c.access(2);
+        c.access(1); // 1 now MRU, 2 is LRU
+        c.access(3); // evicts 2
+        assert!(c.contains(1));
+        assert!(!c.contains(2));
+        assert!(c.contains(3));
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut c = LruCache::new(10);
+        for v in 0..1000u32 {
+            c.access(v % 37);
+            assert!(c.len() <= 10);
+        }
+    }
+
+    #[test]
+    fn full_scan_cyclic_worst_case() {
+        // classic LRU pathology: cyclic scan of capacity+1 items misses
+        // every time
+        let mut c = LruCache::new(4);
+        for _ in 0..5 {
+            for v in 0..5u32 {
+                c.access(v);
+            }
+        }
+        assert_eq!(c.hits, 0);
+        assert_eq!(c.misses, 25);
+    }
+
+    #[test]
+    fn stats_reset_keeps_contents() {
+        let mut c = LruCache::new(4);
+        c.access(7);
+        c.reset_stats();
+        assert_eq!(c.misses, 0);
+        assert!(c.access(7), "content survives stat reset");
+    }
+
+    #[test]
+    fn stress_against_reference_model() {
+        // Compare against a naive O(n) reference LRU.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(99);
+        let mut c = LruCache::new(16);
+        let mut reference: Vec<u32> = Vec::new(); // front = MRU
+        for _ in 0..5000 {
+            let v = rng.next_below(64) as u32;
+            let hit = c.access(v);
+            let ref_hit = reference.contains(&v);
+            assert_eq!(hit, ref_hit, "divergence on {v}");
+            reference.retain(|&x| x != v);
+            reference.insert(0, v);
+            reference.truncate(16);
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Cooperative sampling — Algorithm 1 of the paper.
+//!
+//! The graph is 1-D partitioned: PE `p` owns vertices `V_p` and their
+//! incoming edges. One *global* batch of seed vertices (size `b·P`) is
+//! partitioned by ownership; then, layer by layer:
+//!
+//! 1. each PE samples the in-neighborhoods of its owned layer vertices
+//!    `S_p^l`, producing edges `E_p^l` and the requested source set
+//!    `S̃_p^{l+1}` (which includes `S_p^l` itself — Eq. 2 self-inclusion);
+//! 2. the requested ids are **all-to-all** redistributed by owner, so each
+//!    PE receives `S_p^{l+1} ⊆ V_p`, the union of everything any PE needs
+//!    from it — deduplicated, hence *zero duplicate work* downstream.
+//!
+//! Because every sampler draws its variates from counter-based hashes
+//! shared across PEs, the union of the per-PE samples is **bit-identical**
+//! to sampling the whole global batch on one PE (tested below). This is
+//! the mechanism by which cooperative minibatching realizes the concave
+//! work curve `E[|S^l(bP)|] ≪ P·E[|S^l(b)|]` (Theorems 3.1/3.2).
+
+use super::all_to_all::Exchange;
+use crate::graph::{Csr, Partition, VertexId};
+use crate::sampling::{Neighborhoods, Sampler};
+
+/// Per-PE, per-layer sample + traffic record.
+#[derive(Clone, Debug, Default)]
+pub struct PeLayer {
+    /// `S_p^l`: owned destination vertices processed by this PE.
+    pub owned: Vec<VertexId>,
+    /// `S̃_p^{l+1}`: unique source ids this PE's sampled edges reference
+    /// (incl. `owned` for self-inclusion).
+    pub tilde: Vec<VertexId>,
+    /// |E_p^l|: sampled edges.
+    pub edges: usize,
+    /// how many of `tilde` live on other PEs (the `c·|S̃|` traffic).
+    pub cross: usize,
+}
+
+/// The result of cooperatively sampling one global minibatch.
+#[derive(Clone, Debug)]
+pub struct CoopSample {
+    pub num_pes: usize,
+    /// `layers[l][p]` for l in 0..L.
+    pub layers: Vec<Vec<PeLayer>>,
+    /// `S_p^{L}` per PE: owned input vertices whose features must load.
+    pub final_owned: Vec<Vec<VertexId>>,
+    /// id-redistribution fabric traffic (4-byte ids).
+    pub exchange: Exchange,
+}
+
+impl CoopSample {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// max over PEs of |S_p^l| (the paper's Table 7 reduction).
+    pub fn max_owned(&self, l: usize) -> usize {
+        if l == self.layers.len() {
+            self.final_owned.iter().map(|v| v.len()).max().unwrap_or(0)
+        } else {
+            self.layers[l].iter().map(|pl| pl.owned.len()).max().unwrap_or(0)
+        }
+    }
+
+    pub fn max_edges(&self, l: usize) -> usize {
+        self.layers[l].iter().map(|pl| pl.edges).max().unwrap_or(0)
+    }
+
+    pub fn max_tilde(&self, l: usize) -> usize {
+        self.layers[l].iter().map(|pl| pl.tilde.len()).max().unwrap_or(0)
+    }
+
+    pub fn max_cross(&self, l: usize) -> usize {
+        self.layers[l].iter().map(|pl| pl.cross).max().unwrap_or(0)
+    }
+
+    /// Union of owned sets at layer `l` (= the global `S^l`), sorted.
+    pub fn union_layer(&self, l: usize) -> Vec<VertexId> {
+        let mut v: Vec<VertexId> = if l == self.layers.len() {
+            self.final_owned.iter().flatten().copied().collect()
+        } else {
+            self.layers[l].iter().flat_map(|pl| pl.owned.iter().copied()).collect()
+        };
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Σ_l |S^l| summed over the union (global work proxy).
+    pub fn total_union_vertices(&self) -> usize {
+        (1..=self.layers.len()).map(|l| self.union_layer(l).len()).sum()
+    }
+}
+
+/// Run Algorithm 1's sampling phase. `per_pe_samplers` must share the
+/// same batch seed (and dependent-RNG phase) for cross-PE consistency;
+/// `per_pe_seeds[p]` must be owned by PE p under `part`.
+pub fn sample_cooperative(
+    _graph: &Csr,
+    part: &Partition,
+    per_pe_samplers: &mut [Sampler<'_>],
+    per_pe_seeds: &[Vec<VertexId>],
+    layers: usize,
+) -> CoopSample {
+    let p_count = part.num_parts;
+    assert_eq!(per_pe_samplers.len(), p_count);
+    assert_eq!(per_pe_seeds.len(), p_count);
+    let mut exchange = Exchange::new(p_count);
+    let mut current: Vec<Vec<VertexId>> = per_pe_seeds.to_vec();
+    let mut out_layers: Vec<Vec<PeLayer>> = Vec::with_capacity(layers);
+    let mut nbh = Neighborhoods::default();
+
+    for l in 0..layers {
+        let mut buckets: Vec<Vec<Vec<VertexId>>> =
+            vec![vec![Vec::new(); p_count]; p_count];
+        let mut layer_rec: Vec<PeLayer> = Vec::with_capacity(p_count);
+        for p in 0..p_count {
+            let owned = std::mem::take(&mut current[p]);
+            per_pe_samplers[p].sample_layer(&owned, l, &mut nbh);
+            // S̃_p^{l+1} = unique(owned ∪ sampled srcs)
+            let mut tilde: Vec<VertexId> = Vec::with_capacity(owned.len() + nbh.nbrs.len());
+            tilde.extend_from_slice(&owned);
+            tilde.extend_from_slice(&nbh.nbrs);
+            tilde.sort_unstable();
+            tilde.dedup();
+            let mut cross = 0usize;
+            for &t in &tilde {
+                let owner = part.part_of(t);
+                if owner != p {
+                    cross += 1;
+                }
+                buckets[p][owner].push(t);
+            }
+            layer_rec.push(PeLayer { owned, tilde, edges: nbh.num_edges(), cross });
+        }
+        // all-to-all: ids travel to their owners
+        let inboxes = exchange.route(&buckets, 4);
+        for p in 0..p_count {
+            let mut next = inboxes[p].clone();
+            next.sort_unstable();
+            next.dedup();
+            current[p] = next;
+        }
+        out_layers.push(layer_rec);
+    }
+
+    CoopSample {
+        num_pes: p_count,
+        layers: out_layers,
+        final_owned: current,
+        exchange,
+    }
+}
+
+/// Partition a global seed batch by vertex owner — the "each PE samples
+/// its seeds from the training vertices in V_p" step.
+pub fn partition_seeds(
+    seeds: &[VertexId],
+    part: &Partition,
+) -> Vec<Vec<VertexId>> {
+    let mut per_pe: Vec<Vec<VertexId>> = vec![Vec::new(); part.num_parts];
+    for &s in seeds {
+        per_pe[part.part_of(s)].push(s);
+    }
+    per_pe
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, partition};
+    use crate::sampling::{SamplerConfig, SamplerKind};
+
+    fn fixture() -> (Csr, Partition) {
+        let g = generate::chung_lu(3000, 14.0, 2.4, 21);
+        let part = partition::random(&g, 4, 5);
+        (g, part)
+    }
+
+    fn run_coop(
+        g: &Csr,
+        part: &Partition,
+        kind: SamplerKind,
+        seeds: &[u32],
+        batch_seed: u64,
+    ) -> CoopSample {
+        let cfg = SamplerConfig::default();
+        let mut samplers: Vec<_> =
+            (0..part.num_parts).map(|_| cfg.build(kind, g, batch_seed)).collect();
+        let per_pe = partition_seeds(seeds, part);
+        sample_cooperative(g, part, &mut samplers, &per_pe, cfg.layers)
+    }
+
+    #[test]
+    fn union_matches_single_pe_global_sample() {
+        // The cooperative union must equal the global sample bit-for-bit
+        // for samplers with shared per-vertex/per-edge coins.
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (0..256).collect();
+        for kind in [SamplerKind::Neighbor, SamplerKind::Labor0] {
+            let coop = run_coop(&g, &part, kind, &seeds, 777);
+            let cfg = SamplerConfig::default();
+            let mut global = cfg.build(kind, &g, 777);
+            let mfg = global.sample_mfg(&seeds);
+            for l in 0..=3 {
+                let mut want = mfg.layer_vertices[l].clone();
+                want.sort_unstable();
+                want.dedup();
+                let got = coop.union_layer(l);
+                assert_eq!(got, want, "{kind:?} layer {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn ownership_invariant() {
+        // every vertex in S_p^l must be owned by p
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (500..756).collect();
+        let coop = run_coop(&g, &part, SamplerKind::Labor0, &seeds, 3);
+        for l in 0..coop.num_layers() {
+            for (p, pl) in coop.layers[l].iter().enumerate() {
+                for &v in &pl.owned {
+                    assert_eq!(part.part_of(v), p, "layer {l} PE {p} vertex {v}");
+                }
+            }
+        }
+        for (p, owned) in coop.final_owned.iter().enumerate() {
+            for &v in owned {
+                assert_eq!(part.part_of(v), p);
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicate_work_across_pes() {
+        // each union vertex appears in exactly one PE's owned set
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (0..512).collect();
+        let coop = run_coop(&g, &part, SamplerKind::Neighbor, &seeds, 9);
+        for l in 1..=coop.num_layers() {
+            let union = coop.union_layer(l);
+            let total: usize = if l == coop.num_layers() {
+                coop.final_owned.iter().map(|v| v.len()).sum()
+            } else {
+                coop.layers[l].iter().map(|pl| pl.owned.len()).sum()
+            };
+            assert_eq!(total, union.len(), "layer {l}: owned sets must be disjoint");
+        }
+    }
+
+    #[test]
+    fn cross_ratio_near_random_partition_expectation() {
+        // with random partitioning, c ≈ (P-1)/P = 0.75 of requested ids
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (0..1024).collect();
+        let coop = run_coop(&g, &part, SamplerKind::Labor0, &seeds, 11);
+        let ratio = coop.exchange.cross_ratio();
+        assert!((0.6..0.9).contains(&ratio), "cross ratio {ratio}");
+    }
+
+    #[test]
+    fn partitioned_graph_reduces_cross_traffic() {
+        let g = generate::community(3000, 12.0, 2.4, 12, 0.8, 31);
+        let rand_p = partition::random(&g, 4, 1);
+        let metis_p = partition::multilevel(&g, 4, 1);
+        let seeds: Vec<u32> = (0..512).collect();
+        let a = run_coop(&g, &rand_p, SamplerKind::Labor0, &seeds, 13);
+        let b = run_coop(&g, &metis_p, SamplerKind::Labor0, &seeds, 13);
+        assert!(
+            b.exchange.cross_items < a.exchange.cross_items,
+            "partitioning should cut cross traffic: {} vs {}",
+            b.exchange.cross_items,
+            a.exchange.cross_items
+        );
+    }
+
+    #[test]
+    fn seed_partitioning_is_exact() {
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (0..100).collect();
+        let per_pe = partition_seeds(&seeds, &part);
+        let total: usize = per_pe.iter().map(|v| v.len()).sum();
+        assert_eq!(total, seeds.len());
+        for (p, vs) in per_pe.iter().enumerate() {
+            for &v in vs {
+                assert_eq!(part.part_of(v), p);
+            }
+        }
+        let _ = g;
+    }
+}

@@ -1,0 +1,332 @@
+//! Multi-batch measurement engine.
+//!
+//! Drives `warmup + measure` minibatches of either mode over a dataset
+//! and aggregates the per-stage counts the paper's complexity model
+//! (Table 1) consumes: per-layer vertex/edge/communication counts
+//! (max-over-PE, averaged over batches), feature-cache traffic, and real
+//! CPU wall-clock per stage. The repro harnesses for Tables 4–7 and
+//! Figure 5 are thin wrappers around [`run`].
+
+use super::cache::LruCache;
+use super::coop_sampler::{partition_seeds, sample_cooperative};
+use super::feature_loader::{load_cooperative, load_independent, FeatureTraffic};
+use super::indep::sample_independent;
+use crate::graph::{Dataset, Partition, VertexId};
+use crate::sampling::{SamplerConfig, SamplerKind};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Timer;
+
+/// Minibatching mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Independent,
+    Cooperative,
+}
+
+impl Mode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mode::Independent => "Indep",
+            Mode::Cooperative => "Coop",
+        }
+    }
+}
+
+/// Engine configuration.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub mode: Mode,
+    pub num_pes: usize,
+    /// per-PE batch size b (global batch = b · P).
+    pub batch_per_pe: usize,
+    pub kind: SamplerKind,
+    pub sampler: SamplerConfig,
+    /// LRU capacity per PE (vertex rows).
+    pub cache_per_pe: usize,
+    pub warmup_batches: usize,
+    pub measure_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            mode: Mode::Independent,
+            num_pes: 4,
+            batch_per_pe: 1024,
+            kind: SamplerKind::Labor0,
+            sampler: SamplerConfig::default(),
+            cache_per_pe: 100_000,
+            warmup_batches: 4,
+            measure_batches: 16,
+            seed: 0xC001,
+        }
+    }
+}
+
+/// Aggregated per-stage counts (averages of per-batch max-over-PE).
+#[derive(Clone, Debug, Default)]
+pub struct EngineReport {
+    pub mode: String,
+    pub num_pes: usize,
+    /// |S^l| per layer (len L+1; l=0 is the seed count).
+    pub s: Vec<f64>,
+    /// |E^l| per layer (len L).
+    pub e: Vec<f64>,
+    /// |S̃^{l+1}| per layer (coop; len L; 0 for indep).
+    pub tilde: Vec<f64>,
+    /// cross-PE portion c·|S̃^{l+1}| (coop; len L).
+    pub cross: Vec<f64>,
+    /// feature stage (per batch averages).
+    pub feat_requested: f64,
+    pub feat_misses: f64,
+    pub feat_fabric_rows: f64,
+    pub cache_miss_rate: f64,
+    /// duplication factor at the deepest layer (indep only; 1.0 for coop).
+    pub dup_factor: f64,
+    /// measured CPU wall-clock (ms per batch, summed across PEs).
+    pub wall_sampling_ms: f64,
+    pub wall_feature_ms: f64,
+}
+
+/// Run the engine over `dataset` with partition `part` (required for
+/// cooperative mode; independent mode uses it only to shard the training
+/// set).
+pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
+    assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
+    let layers = cfg.sampler.layers;
+    let g = &dataset.graph;
+
+    // --- per-PE training shards --------------------------------------
+    // Coop: PE p draws seeds from train ∩ V_p (Algorithm 1). Indep: the
+    // training set is sharded round-robin (classic data parallelism).
+    let shards: Vec<Vec<VertexId>> = match cfg.mode {
+        Mode::Cooperative => {
+            let mut by_owner: Vec<Vec<VertexId>> = vec![Vec::new(); cfg.num_pes];
+            for &v in &dataset.train {
+                by_owner[part.part_of(v)].push(v);
+            }
+            by_owner
+        }
+        Mode::Independent => {
+            let mut shards: Vec<Vec<VertexId>> = vec![Vec::new(); cfg.num_pes];
+            for (i, &v) in dataset.train.iter().enumerate() {
+                shards[i % cfg.num_pes].push(v);
+            }
+            shards
+        }
+    };
+
+    let mut samplers: Vec<_> =
+        (0..cfg.num_pes).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
+    let mut caches: Vec<LruCache> =
+        (0..cfg.num_pes).map(|_| LruCache::new(cfg.cache_per_pe)).collect();
+    let mut seed_rngs: Vec<Pcg64> =
+        (0..cfg.num_pes).map(|p| Pcg64::new(cfg.seed ^ (p as u64 + 1) * 0x9E37)).collect();
+
+    let mut report = EngineReport {
+        mode: cfg.mode.name().to_string(),
+        num_pes: cfg.num_pes,
+        s: vec![0.0; layers + 1],
+        e: vec![0.0; layers],
+        tilde: vec![0.0; layers],
+        cross: vec![0.0; layers],
+        dup_factor: 1.0,
+        ..Default::default()
+    };
+    let mut dup_acc = 0.0;
+    let mut measured = 0usize;
+    let mut total_hits = 0u64;
+    let mut total_misses = 0u64;
+
+    for batch in 0..(cfg.warmup_batches + cfg.measure_batches) {
+        let measuring = batch >= cfg.warmup_batches;
+        // draw per-PE seeds
+        let per_pe_seeds: Vec<Vec<VertexId>> = shards
+            .iter()
+            .zip(seed_rngs.iter_mut())
+            .map(|(shard, rng)| {
+                let b = cfg.batch_per_pe.min(shard.len());
+                rng.sample_distinct(shard.len(), b)
+                    .into_iter()
+                    .map(|i| shard[i as usize])
+                    .collect()
+            })
+            .collect();
+
+        let timer = Timer::start();
+        let (inputs, traffic): (Vec<Vec<VertexId>>, FeatureTraffic) = match cfg.mode {
+            Mode::Cooperative => {
+                // sampling must see the per-PE *ownership* re-partition of
+                // whatever seeds were drawn (identity here by construction)
+                let flat: Vec<VertexId> = per_pe_seeds.iter().flatten().copied().collect();
+                let per_pe = partition_seeds(&flat, part);
+                let coop = sample_cooperative(g, part, &mut samplers, &per_pe, layers);
+                let samp_ms = timer.elapsed_ms();
+                if measuring {
+                    for l in 0..layers {
+                        report.s[l] += coop.max_owned(l) as f64;
+                        report.e[l] += coop.max_edges(l) as f64;
+                        report.tilde[l] += coop.max_tilde(l) as f64;
+                        report.cross[l] += coop.max_cross(l) as f64;
+                    }
+                    report.s[layers] += coop.max_owned(layers) as f64;
+                    report.wall_sampling_ms += samp_ms;
+                }
+                let fabric: Vec<u64> =
+                    coop.layers[layers - 1].iter().map(|pl| pl.cross as u64).collect();
+                let ft = Timer::start();
+                let traffic = load_cooperative(&coop.final_owned, &fabric, &mut caches);
+                if measuring {
+                    report.wall_feature_ms += ft.elapsed_ms();
+                }
+                (coop.final_owned, traffic)
+            }
+            Mode::Independent => {
+                let s = sample_independent(&mut samplers, &per_pe_seeds);
+                let samp_ms = timer.elapsed_ms();
+                if measuring {
+                    for l in 0..layers {
+                        report.s[l] += s.max_vertices(l) as f64;
+                        report.e[l] += s.max_edges(l) as f64;
+                    }
+                    report.s[layers] += s.max_vertices(layers) as f64;
+                    report.wall_sampling_ms += samp_ms;
+                    dup_acc += s.duplication(layers);
+                }
+                let inputs: Vec<Vec<VertexId>> =
+                    s.per_pe.iter().map(|m| m.input_vertices().to_vec()).collect();
+                let ft = Timer::start();
+                let traffic = load_independent(&inputs, &mut caches);
+                if measuring {
+                    report.wall_feature_ms += ft.elapsed_ms();
+                }
+                (inputs, traffic)
+            }
+        };
+        let _ = inputs;
+        if measuring {
+            measured += 1;
+            report.feat_requested += traffic.max_requested as f64;
+            report.feat_misses += traffic.max_misses as f64;
+            report.feat_fabric_rows += traffic.max_fabric_rows as f64;
+            total_hits += traffic.total_requested - traffic.total_misses;
+            total_misses += traffic.total_misses;
+        }
+        for s in samplers.iter_mut() {
+            s.advance_batch();
+        }
+    }
+
+    let m = measured.max(1) as f64;
+    for v in report
+        .s
+        .iter_mut()
+        .chain(report.e.iter_mut())
+        .chain(report.tilde.iter_mut())
+        .chain(report.cross.iter_mut())
+    {
+        *v /= m;
+    }
+    report.feat_requested /= m;
+    report.feat_misses /= m;
+    report.feat_fabric_rows /= m;
+    report.wall_sampling_ms /= m;
+    report.wall_feature_ms /= m;
+    if cfg.mode == Mode::Independent {
+        report.dup_factor = dup_acc / m;
+    }
+    report.cache_miss_rate = if total_hits + total_misses == 0 {
+        0.0
+    } else {
+        total_misses as f64 / (total_hits + total_misses) as f64
+    };
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{datasets, partition};
+    use crate::sampling::Kappa;
+
+    fn fixture() -> (Dataset, Partition) {
+        let ds = datasets::build("tiny", 1).unwrap();
+        let part = partition::random(&ds.graph, 4, 2);
+        (ds, part)
+    }
+
+    fn small_cfg(mode: Mode) -> EngineConfig {
+        EngineConfig {
+            mode,
+            num_pes: 4,
+            batch_per_pe: 32,
+            cache_per_pe: 200,
+            warmup_batches: 2,
+            measure_batches: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn indep_report_shape() {
+        let (ds, part) = fixture();
+        let r = run(&ds, &part, &small_cfg(Mode::Independent));
+        assert_eq!(r.s.len(), 4);
+        assert_eq!(r.e.len(), 3);
+        assert!(r.s[0] > 0.0 && r.s[3] >= r.s[1]);
+        assert!(r.dup_factor >= 1.0);
+        assert!(r.feat_requested > 0.0);
+        assert!((0.0..=1.0).contains(&r.cache_miss_rate));
+    }
+
+    #[test]
+    fn coop_report_has_fabric_traffic() {
+        let (ds, part) = fixture();
+        let r = run(&ds, &part, &small_cfg(Mode::Cooperative));
+        assert!(r.tilde[0] > 0.0, "coop must record S̃ counts");
+        assert!(r.cross[0] > 0.0, "random partition ⇒ cross traffic");
+        assert!(r.feat_fabric_rows > 0.0);
+    }
+
+    #[test]
+    fn coop_per_pe_work_less_than_indep_same_global_batch() {
+        // The headline effect: with identical global batch size, coop's
+        // per-PE deepest-layer work |S_p^L| (max) is below indep's |S^L|.
+        let (ds, part) = fixture();
+        let ri = run(&ds, &part, &small_cfg(Mode::Independent));
+        let rc = run(&ds, &part, &small_cfg(Mode::Cooperative));
+        let l = 3;
+        assert!(
+            rc.s[l] < ri.s[l],
+            "coop per-PE work {} must beat indep {}",
+            rc.s[l],
+            ri.s[l]
+        );
+    }
+
+    #[test]
+    fn dependent_batches_reduce_miss_rate() {
+        // κ=64 must reduce the LRU miss rate vs κ=1 (Figure 5 effect).
+        let (ds, part) = fixture();
+        let mut base = small_cfg(Mode::Independent);
+        base.num_pes = 1;
+        base.batch_per_pe = 64;
+        base.cache_per_pe = 400;
+        base.warmup_batches = 4;
+        base.measure_batches = 12;
+        // rebuild partition for 1 PE
+        let part1 = partition::random(&ds.graph, 1, 3);
+        let _ = part;
+        let r1 = run(&ds, &part1, &base);
+        let mut dep = base.clone();
+        dep.sampler.kappa = Kappa::Finite(64);
+        let r64 = run(&ds, &part1, &dep);
+        assert!(
+            r64.cache_miss_rate < r1.cache_miss_rate,
+            "κ=64 miss {} must beat κ=1 miss {}",
+            r64.cache_miss_rate,
+            r1.cache_miss_rate
+        );
+    }
+}

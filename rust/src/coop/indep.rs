@@ -1,0 +1,115 @@
+//! Independent Minibatching — the baseline (paper §2.3).
+//!
+//! Each PE draws its own `b`-sized seed batch and samples a full MFG with
+//! **no communication**. The price is duplicate work: the same vertex can
+//! appear in several PEs' L-hop neighborhoods and is then fetched and
+//! processed once *per PE*. [`IndepSample::duplication`] measures exactly
+//! that overlap — the quantity cooperative minibatching eliminates.
+
+use crate::graph::VertexId;
+use crate::sampling::{Mfg, Sampler};
+
+/// Per-PE MFGs for one independent global step.
+#[derive(Clone, Debug)]
+pub struct IndepSample {
+    pub per_pe: Vec<Mfg>,
+}
+
+impl IndepSample {
+    pub fn num_pes(&self) -> usize {
+        self.per_pe.len()
+    }
+
+    /// max over PEs of |S^l| (Table 7's reduction).
+    pub fn max_vertices(&self, l: usize) -> usize {
+        self.per_pe.iter().map(|m| m.layer_vertices[l].len()).max().unwrap_or(0)
+    }
+
+    pub fn max_edges(&self, l: usize) -> usize {
+        self.per_pe.iter().map(|m| m.layer_edges[l].num_edges()).max().unwrap_or(0)
+    }
+
+    /// Σ over PEs of |S^l| — the actual work performed.
+    pub fn sum_vertices(&self, l: usize) -> usize {
+        self.per_pe.iter().map(|m| m.layer_vertices[l].len()).sum()
+    }
+
+    /// |∪_p S_p^l| — the work that *would* suffice without duplication.
+    pub fn union_vertices(&self, l: usize) -> usize {
+        let mut v: Vec<VertexId> = self
+            .per_pe
+            .iter()
+            .flat_map(|m| m.layer_vertices[l].iter().copied())
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+
+    /// Duplication factor at layer `l`: performed / necessary (≥ 1).
+    pub fn duplication(&self, l: usize) -> f64 {
+        let union = self.union_vertices(l);
+        if union == 0 {
+            1.0
+        } else {
+            self.sum_vertices(l) as f64 / union as f64
+        }
+    }
+}
+
+/// Sample one independent global step: PE `p` gets `per_pe_seeds[p]` and
+/// samples alone. Samplers may share a batch seed (harmless — there is no
+/// cross-PE interaction to exploit it).
+pub fn sample_independent(
+    per_pe_samplers: &mut [Sampler<'_>],
+    per_pe_seeds: &[Vec<VertexId>],
+) -> IndepSample {
+    assert_eq!(per_pe_samplers.len(), per_pe_seeds.len());
+    let per_pe = per_pe_samplers
+        .iter_mut()
+        .zip(per_pe_seeds.iter())
+        .map(|(s, seeds)| s.sample_mfg(seeds))
+        .collect();
+    IndepSample { per_pe }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::sampling::{SamplerConfig, SamplerKind};
+
+    #[test]
+    fn duplication_exceeds_one_with_overlapping_batches() {
+        let g = generate::chung_lu(2000, 20.0, 2.3, 40);
+        let cfg = SamplerConfig::default();
+        let mut samplers: Vec<_> = (0..4).map(|p| cfg.build(SamplerKind::Labor0, &g, 100 + p)).collect();
+        let seeds: Vec<Vec<u32>> = (0..4).map(|p| (p * 64..(p + 1) * 64).collect()).collect();
+        let s = sample_independent(&mut samplers, &seeds);
+        assert_eq!(s.num_pes(), 4);
+        // deep layers overlap heavily on a power-law graph
+        let dup3 = s.duplication(3);
+        assert!(dup3 > 1.2, "expected duplicated work at layer 3, got {dup3}");
+        // seeds are disjoint, so layer 0 has no duplication
+        assert!((s.duplication(0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplication_grows_with_pe_count() {
+        // More PEs at fixed global batch ⇒ more duplicate work (paper §3).
+        let g = generate::chung_lu(2000, 20.0, 2.3, 41);
+        let cfg = SamplerConfig::default();
+        let global: Vec<u32> = (0..512).collect();
+        let dup_at = |p_count: usize| -> f64 {
+            let b = global.len() / p_count;
+            let mut samplers: Vec<_> =
+                (0..p_count).map(|p| cfg.build(SamplerKind::Labor0, &g, 7 + p as u64)).collect();
+            let seeds: Vec<Vec<u32>> =
+                (0..p_count).map(|p| global[p * b..(p + 1) * b].to_vec()).collect();
+            sample_independent(&mut samplers, &seeds).duplication(3)
+        };
+        let d2 = dup_at(2);
+        let d8 = dup_at(8);
+        assert!(d8 > d2, "duplication must grow with P: P=2 {d2} vs P=8 {d8}");
+    }
+}

@@ -1,0 +1,39 @@
+//! The multi-PE minibatching engine — the paper's Layer-3 system
+//! contribution.
+//!
+//! * [`indep`] — **Independent Minibatching** (paper §2.3): every PE
+//!   samples and processes its own `b`-sized batch; no communication, but
+//!   vertices/edges shared across PEs are fetched and computed P times.
+//! * [`coop_sampler`] — **Cooperative Minibatching** (paper §3.1,
+//!   Algorithm 1): the graph is 1-D partitioned; a single global batch of
+//!   size `bP` is sampled layer-by-layer with all-to-all vertex-id
+//!   redistribution, eliminating duplicate work entirely.
+//! * [`all_to_all`] — the exchange fabric (the simulated NVLink): routes
+//!   per-PE buckets and accounts every byte moved, which the cost model
+//!   converts into α-bandwidth time.
+//! * [`cache`] + [`feature_loader`] — per-PE LRU vertex-embedding caches
+//!   and the storage/exchange traffic accounting for the feature-loading
+//!   stage (β vs α in the paper's Table 1).
+//! * [`engine`] — multi-batch drivers producing the count/traffic reports
+//!   the repro harnesses feed into the cost model (Tables 4–7, Fig. 5).
+//!
+//! ### Determinism note
+//! All samplers draw per-vertex/per-edge variates from counter-based
+//! hashes keyed by a batch seed shared across PEs, so the union of the
+//! cooperatively-sampled per-PE subgraphs is *bit-identical* to sampling
+//! the global batch on one PE (tested in `coop_sampler::tests` and
+//! `rust/tests/integration_coop.rs`). LABOR-*'s importance weights are
+//! computed over PE-local seed sets, a documented approximation.
+
+pub mod all_to_all;
+pub mod cache;
+pub mod coop_sampler;
+pub mod indep;
+pub mod feature_loader;
+pub mod engine;
+
+pub use all_to_all::Exchange;
+pub use cache::LruCache;
+pub use coop_sampler::{sample_cooperative, CoopSample};
+pub use indep::{sample_independent, IndepSample};
+pub use engine::{EngineConfig, Mode};

@@ -1,0 +1,260 @@
+//! Compressed Sparse Row graph storage.
+//!
+//! Edges are stored by *destination*: `neighbors(s)` returns the in-
+//! neighborhood `N(s) = { t | (t -> s) in E }`, matching the paper's
+//! message-flow convention (embeddings flow from `t` to `s`, Eq. 1).
+
+use crate::util::rng::Pcg64;
+
+/// Vertex identifier. u32 bounds us at ~4B vertices; the synthetic
+/// datasets here stay well below that while halving index memory.
+pub type VertexId = u32;
+
+/// Immutable CSR graph.
+#[derive(Clone, Debug, Default)]
+pub struct Csr {
+    /// `indptr[v]..indptr[v+1]` spans `indices` entries holding N(v).
+    pub indptr: Vec<u64>,
+    /// Concatenated in-neighbor lists.
+    pub indices: Vec<VertexId>,
+}
+
+impl Csr {
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.indptr.len().saturating_sub(1)
+    }
+
+    /// Number of (directed) edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        (self.indptr[v as usize + 1] - self.indptr[v as usize]) as usize
+    }
+
+    /// In-neighborhood slice of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.indptr[v as usize] as usize;
+        let hi = self.indptr[v as usize + 1] as usize;
+        &self.indices[lo..hi]
+    }
+
+    /// Average degree |E| / |V|.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_vertices() as f64
+        }
+    }
+
+    /// Maximum in-degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Build the reverse graph (out-neighborhoods become in-neighborhoods).
+    pub fn reverse(&self) -> Csr {
+        let n = self.num_vertices();
+        let mut b = CsrBuilder::new(n);
+        for s in 0..n as VertexId {
+            for &t in self.neighbors(s) {
+                b.add_edge(s, t); // reversed: s -> t in the new graph
+            }
+        }
+        b.finish()
+    }
+
+    /// Make the graph undirected by unioning each edge with its reverse
+    /// (dedup applied). The paper does this for papers100M/mag240M and for
+    /// the edge-prediction experiments.
+    pub fn to_undirected(&self) -> Csr {
+        let n = self.num_vertices();
+        let mut b = CsrBuilder::new(n);
+        for s in 0..n as VertexId {
+            for &t in self.neighbors(s) {
+                b.add_edge(t, s);
+                b.add_edge(s, t);
+            }
+        }
+        b.dedup = true;
+        b.finish()
+    }
+
+    /// Uniformly random existing edge `(t -> s)`; used by the
+    /// edge-prediction workload generator.
+    pub fn random_edge(&self, rng: &mut Pcg64) -> (VertexId, VertexId) {
+        debug_assert!(self.num_edges() > 0);
+        let e = rng.next_below(self.num_edges() as u64) as usize;
+        // binary search for the destination owning edge slot e
+        let s = match self.indptr.binary_search(&(e as u64)) {
+            Ok(mut i) => {
+                // land on the first vertex whose range starts at e and is non-empty
+                while (i + 1) < self.indptr.len() && self.indptr[i + 1] == e as u64 {
+                    i += 1;
+                }
+                i
+            }
+            Err(i) => i - 1,
+        };
+        (self.indices[e], s as VertexId)
+    }
+
+    /// True if `(t -> s)` exists (binary search; neighbor lists are sorted
+    /// by the builder).
+    pub fn has_edge(&self, t: VertexId, s: VertexId) -> bool {
+        self.neighbors(s).binary_search(&t).is_ok()
+    }
+}
+
+/// Incremental builder accumulating (dst, src) pairs, producing sorted
+/// (optionally deduplicated) CSR.
+#[derive(Clone, Debug)]
+pub struct CsrBuilder {
+    n: usize,
+    /// (dst, src) pairs.
+    pairs: Vec<(VertexId, VertexId)>,
+    /// Deduplicate parallel edges on finish.
+    pub dedup: bool,
+}
+
+impl CsrBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        CsrBuilder { n: num_vertices, pairs: Vec::new(), dedup: false }
+    }
+
+    pub fn with_capacity(num_vertices: usize, num_edges: usize) -> Self {
+        CsrBuilder { n: num_vertices, pairs: Vec::with_capacity(num_edges), dedup: false }
+    }
+
+    /// Record edge `t -> s` (message from t to s; stored under s).
+    #[inline]
+    pub fn add_edge(&mut self, t: VertexId, s: VertexId) {
+        debug_assert!((t as usize) < self.n && (s as usize) < self.n);
+        self.pairs.push((s, t));
+    }
+
+    pub fn num_pairs(&self) -> usize {
+        self.pairs.len()
+    }
+
+    /// Sort, optionally dedup, and produce the CSR.
+    pub fn finish(mut self) -> Csr {
+        self.pairs.sort_unstable();
+        if self.dedup {
+            self.pairs.dedup();
+        }
+        let mut indptr = vec![0u64; self.n + 1];
+        for &(s, _) in &self.pairs {
+            indptr[s as usize + 1] += 1;
+        }
+        for i in 0..self.n {
+            indptr[i + 1] += indptr[i];
+        }
+        let indices: Vec<VertexId> = self.pairs.iter().map(|&(_, t)| t).collect();
+        Csr { indptr, indices }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Csr {
+        // edges: 0->1, 1->2, 2->0 and 0->2
+        let mut b = CsrBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(2, 0);
+        b.add_edge(0, 2);
+        b.finish()
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(1), &[0]);
+        let mut n2 = g.neighbors(2).to_vec();
+        n2.sort_unstable();
+        assert_eq!(n2, vec![0, 1]);
+        assert_eq!(g.degree(0), 1);
+        assert!((g.avg_degree() - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn has_edge_works() {
+        let g = triangle();
+        assert!(g.has_edge(0, 1));
+        assert!(!g.has_edge(1, 0));
+        assert!(g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn reverse_round_trip() {
+        let g = triangle();
+        let r = g.reverse().reverse();
+        assert_eq!(g.indptr, r.indptr);
+        assert_eq!(g.indices, r.indices);
+    }
+
+    #[test]
+    fn undirected_symmetric() {
+        let g = triangle().to_undirected();
+        for s in 0..3u32 {
+            for &t in g.neighbors(s) {
+                assert!(g.has_edge(s, t), "symmetry {t}<->{s}");
+            }
+        }
+    }
+
+    #[test]
+    fn dedup_removes_parallel_edges() {
+        let mut b = CsrBuilder::new(2);
+        b.add_edge(0, 1);
+        b.add_edge(0, 1);
+        b.dedup = true;
+        let g = b.finish();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn random_edge_is_valid() {
+        let g = triangle();
+        let mut rng = Pcg64::new(1);
+        for _ in 0..200 {
+            let (t, s) = g.random_edge(&mut rng);
+            assert!(g.has_edge(t, s), "({t}->{s}) must exist");
+        }
+    }
+
+    #[test]
+    fn random_edge_covers_all() {
+        let g = triangle();
+        let mut rng = Pcg64::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            seen.insert(g.random_edge(&mut rng));
+        }
+        assert_eq!(seen.len(), g.num_edges());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrBuilder::new(0).finish();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.avg_degree(), 0.0);
+    }
+}

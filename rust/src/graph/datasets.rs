@@ -1,0 +1,356 @@
+//! Synthetic dataset registry.
+//!
+//! The paper evaluates on reddit / yelp / flickr / papers100M / mag240M
+//! (its Table 2). Those datasets are not available offline, so each entry
+//! here is a *scaled synthetic twin*: a Chung–Lu power-law graph matched to
+//! the original's average degree and split percentages, with |V| scaled to
+//! CPU-simulation size. Cache sizes keep the original cache/|S³| *pressure*
+//! ratio (see [`Spec::cache_s3_ratio`]), so the LRU-miss-rate experiments
+//! (paper Fig. 5) sit in the same regime.
+//!
+//! Features are **hash-generated on demand** (O(1) storage; see
+//! [`Dataset::write_features`]) and labels come from a **planted 1-hop
+//! teacher**: `y(v) = argmax_c  w_c · mean_{u ∈ N(v) ∪ {v}} x_u` with label
+//! noise. Node classification on this target is learnable by a GCN but not
+//! by a featureless or graph-free model, giving meaningful convergence
+//! curves for the κ-dependence and coop-vs-indep experiments
+//! (paper Table 3, Figures 4/8/9).
+
+use super::csr::{Csr, VertexId};
+use super::generate;
+use crate::util::rng::{counter_hash2, counter_hash3, Pcg64};
+
+/// A fully materialized synthetic dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: Csr,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub labels: Vec<u16>,
+    pub train: Vec<VertexId>,
+    pub val: Vec<VertexId>,
+    pub test: Vec<VertexId>,
+    /// LRU capacity for vertex-embedding caching (paper Table 2 ratio).
+    pub cache_size: usize,
+    feat_seed: u64,
+}
+
+/// Registry entry: the recipe for a dataset twin.
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub name: &'static str,
+    /// Description of which paper dataset this mirrors.
+    pub mirrors: &'static str,
+    pub num_vertices: usize,
+    pub avg_degree: f64,
+    pub gamma: f64,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    /// (train, val, test) percentages, paper Table 2.
+    pub split: (f64, f64, f64),
+    /// LRU capacity as a multiple of one batch's |S³| (b=1024, LABOR-0).
+    ///
+    /// The paper sizes caches in absolute rows (Table 2); what governs
+    /// the miss-rate dynamics of Figure 5 is the *cache pressure* —
+    /// capacity relative to the per-batch working set. Scaling |V| down
+    /// while keeping b=1024 would break that regime if we scaled the
+    /// cache by |V|, so the twins anchor capacity to the measured |S³|
+    /// with the paper's cache/|S³| ratios (papers100M: 2M/463k ≈ 4.3,
+    /// mag: 2M/443k ≈ 4.5, reddit: 60k/37k ≈ 1.6, flickr ≈ 1.4,
+    /// yelp ≈ 1.3 — Tables 2/7).
+    pub cache_s3_ratio: f64,
+    pub undirected: bool,
+    /// planted community structure `(blocks, p_in)` — citation-network
+    /// twins (papers/mag) get this so graph partitioning has something to
+    /// cut, like the paper's METIS rows in Table 7 (pure Chung–Lu is an
+    /// expander; real citation graphs cluster by field).
+    pub community: Option<(usize, f64)>,
+}
+
+/// The registry. Scale factors vs the paper: flickr 1:1, yelp 1:5,
+/// reddit 1:4 with degree clipped to 120 (CPU memory), papers100M 1:500,
+/// mag240M 1:1000. Two extra entries support tests (`tiny`) and the
+/// convergence studies (`conv`).
+pub const SPECS: &[Spec] = &[
+    Spec { name: "flickr-s", mirrors: "flickr (1:1)", num_vertices: 89_200, avg_degree: 10.09, gamma: 2.5, feat_dim: 500, num_classes: 7, split: (0.50, 0.25, 0.25), cache_s3_ratio: 1.4, undirected: false, community: None },
+    Spec { name: "yelp-s", mirrors: "yelp (1:5)", num_vertices: 143_400, avg_degree: 19.52, gamma: 2.4, feat_dim: 300, num_classes: 16, split: (0.75, 0.10, 0.15), cache_s3_ratio: 1.3, undirected: false, community: None },
+    Spec { name: "reddit-s", mirrors: "reddit (1:1 vertices, degree clipped 493→120)", num_vertices: 233_000, avg_degree: 120.0, gamma: 2.2, feat_dim: 602, num_classes: 41, split: (0.66, 0.10, 0.24), cache_s3_ratio: 1.6, undirected: false, community: None },
+    Spec { name: "papers-s", mirrors: "ogbn-papers100M (1:500)", num_vertices: 222_000, avg_degree: 29.10, gamma: 2.4, feat_dim: 128, num_classes: 32, split: (0.10, 0.011, 0.019), cache_s3_ratio: 4.3, undirected: true, community: Some((64, 0.6)) },
+    Spec { name: "mag-s", mirrors: "mag240M (1:1000)", num_vertices: 244_000, avg_degree: 14.16, gamma: 2.4, feat_dim: 768, num_classes: 64, split: (0.08, 0.006, 0.004), cache_s3_ratio: 4.5, undirected: true, community: Some((64, 0.6)) },
+    Spec { name: "conv", mirrors: "convergence-study twin (small, dense splits)", num_vertices: 12_000, avg_degree: 12.0, gamma: 2.4, feat_dim: 64, num_classes: 16, split: (0.50, 0.20, 0.30), cache_s3_ratio: 1.5, undirected: true, community: None },
+    Spec { name: "tiny", mirrors: "test fixture", num_vertices: 2_000, avg_degree: 8.0, gamma: 2.5, feat_dim: 16, num_classes: 8, split: (0.5, 0.2, 0.3), cache_s3_ratio: 1.5, undirected: true, community: None },
+];
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Option<&'static Spec> {
+    SPECS.iter().find(|s| s.name == name)
+}
+
+/// Build a dataset by registry name. `seed` controls all randomness
+/// (graph, labels, splits); the same (name, seed) is bit-reproducible.
+pub fn build(name: &str, seed: u64) -> crate::Result<Dataset> {
+    let sp = spec(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset `{name}`; known: {:?}",
+            SPECS.iter().map(|s| s.name).collect::<Vec<_>>()))?;
+    Ok(build_from_spec(sp, seed))
+}
+
+/// Build from an explicit spec (used by tests with custom sizes).
+pub fn build_from_spec(sp: &Spec, seed: u64) -> Dataset {
+    let mut g = match sp.community {
+        Some((blocks, p_in)) => {
+            generate::community(sp.num_vertices, sp.avg_degree, sp.gamma, blocks, p_in, seed ^ 0xD5)
+        }
+        None => generate::chung_lu(sp.num_vertices, sp.avg_degree, sp.gamma, seed ^ 0xD5),
+    };
+    if sp.undirected {
+        g = g.to_undirected();
+    }
+    let feat_seed = seed ^ 0xFEA7;
+    let labels = plant_labels(&g, sp, feat_seed, seed ^ 0x1AB5);
+    let (train, val, test) = make_splits(sp, g.num_vertices(), seed ^ 0x5B11);
+    let cache_size = probe_cache_size(&g, sp, seed);
+    Dataset {
+        name: sp.name.to_string(),
+        graph: g,
+        feat_dim: sp.feat_dim,
+        num_classes: sp.num_classes,
+        labels,
+        train,
+        val,
+        test,
+        cache_size,
+        feat_seed,
+    }
+}
+
+/// Anchor the LRU capacity to the measured per-batch working set: sample
+/// one reference MFG (LABOR-0, L=3, k=10, b=min(1024, |V|/2)) and apply
+/// the spec's cache/|S³| ratio, clamped to `[0.05·|V|, 0.8·|V|]` — the
+/// twins' L-hop expansions cover a larger |V| fraction than the paper's
+/// giant graphs, so an unclamped ratio could exceed |V| (trivially zero
+/// misses) or starve the cache into pure scan-thrash; the clamp keeps
+/// every twin inside the regime where Figure 5's dynamics live.
+fn probe_cache_size(g: &Csr, sp: &Spec, seed: u64) -> usize {
+    use crate::sampling::{SamplerConfig, SamplerKind};
+    let n = g.num_vertices();
+    let b = 1024.min(n / 2).max(8);
+    let cfg = SamplerConfig::default();
+    let mut sampler = cfg.build(SamplerKind::Labor0, g, seed ^ 0xCACE);
+    let mut rng = Pcg64::new(seed ^ 0x5EEE);
+    let seeds: Vec<VertexId> = rng.sample_distinct(n, b);
+    let s3 = sampler.sample_mfg(&seeds).input_vertices().len();
+    let raw = (s3 as f64) * sp.cache_s3_ratio;
+    raw.clamp(0.05 * n as f64, 0.80 * n as f64) as usize
+}
+
+impl Dataset {
+    /// Write the feature vector of `v` into `out` (len = feat_dim).
+    /// Features are iid U(-1, 1) derived from a counter hash — free to
+    /// "store", deterministic to regenerate, identical across PEs.
+    #[inline]
+    pub fn write_features(&self, v: VertexId, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.feat_dim);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = feat_value(self.feat_seed, v, j as u64);
+        }
+    }
+
+    /// Materialize features for a list of vertices into a flat row-major
+    /// buffer (used by the feature loader / trainer).
+    pub fn gather_features(&self, vs: &[VertexId], out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(vs.len() * self.feat_dim, 0.0);
+        for (i, &v) in vs.iter().enumerate() {
+            let row = &mut out[i * self.feat_dim..(i + 1) * self.feat_dim];
+            self.write_features(v, row);
+        }
+    }
+
+    /// Bytes of one vertex embedding (f32 features).
+    pub fn feat_bytes(&self) -> usize {
+        self.feat_dim * 4
+    }
+
+    pub fn label(&self, v: VertexId) -> u16 {
+        self.labels[v as usize]
+    }
+}
+
+#[inline]
+fn feat_value(seed: u64, v: VertexId, j: u64) -> f32 {
+    let h = counter_hash3(seed, v as u64, j);
+    ((h >> 40) as f32) * (2.0 / (1u64 << 24) as f32) - 1.0
+}
+
+/// Planted teacher labels: project each vertex's 1-hop mean-aggregated
+/// feature through a random class matrix, take the argmax, flip 10% of
+/// labels uniformly (noise floor so 100% accuracy is unreachable).
+fn plant_labels(g: &Csr, sp: &Spec, feat_seed: u64, label_seed: u64) -> Vec<u16> {
+    let n = g.num_vertices();
+    let d = sp.feat_dim;
+    let c = sp.num_classes;
+    let mut rng = Pcg64::new(label_seed);
+    // Random class projection with unit-ish rows.
+    let mut w = vec![0f32; c * d];
+    for x in w.iter_mut() {
+        *x = rng.next_normal() as f32 / (d as f32).sqrt();
+    }
+    let mut labels = vec![0u16; n];
+    let mut agg = vec![0f32; d];
+    let mut tmp = vec![0f32; d];
+    // Cap the teacher's neighborhood at 16 deterministic samples per
+    // vertex: the teacher stays structure-dependent while label planting
+    // stays O(|V|·16·d) instead of O(|E|·d) (reddit-s has 28M edges).
+    const TEACHER_CAP: usize = 16;
+    for v in 0..n as VertexId {
+        // mean over sampled(N(v)) ∪ {v}
+        for a in agg.iter_mut() {
+            *a = 0.0;
+        }
+        let nbrs = g.neighbors(v);
+        let step = (nbrs.len() / TEACHER_CAP).max(1);
+        let mut used = 0usize;
+        let mut i = (v as usize) % step; // deterministic stagger
+        while i < nbrs.len() && used < TEACHER_CAP {
+            let t = nbrs[i];
+            for j in 0..d {
+                tmp[j] = feat_value(feat_seed, t, j as u64);
+            }
+            for j in 0..d {
+                agg[j] += tmp[j];
+            }
+            used += 1;
+            i += step;
+        }
+        for j in 0..d {
+            agg[j] += feat_value(feat_seed, v, j as u64);
+        }
+        let inv = 1.0 / (used as f32 + 1.0);
+        let mut best = 0usize;
+        let mut best_score = f32::NEG_INFINITY;
+        for cls in 0..c {
+            let row = &w[cls * d..(cls + 1) * d];
+            let score: f32 = row.iter().zip(agg.iter()).map(|(a, b)| a * b * inv).sum();
+            if score > best_score {
+                best_score = score;
+                best = cls;
+            }
+        }
+        // 5% label noise (keeps a noise floor without hiding convergence
+        // differences in the κ ablations)
+        labels[v as usize] = if u64_noise(label_seed, v) < 0.05 {
+            Pcg64::new(counter_hash2(label_seed, v as u64)).next_below(c as u64) as u16
+        } else {
+            best as u16
+        };
+    }
+    labels
+}
+
+#[inline]
+fn u64_noise(seed: u64, v: VertexId) -> f64 {
+    crate::util::rng::u64_to_unit_f64(counter_hash2(seed ^ 0x901, v as u64))
+}
+
+fn make_splits(sp: &Spec, n: usize, seed: u64) -> (Vec<VertexId>, Vec<VertexId>, Vec<VertexId>) {
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    Pcg64::new(seed).shuffle(&mut order);
+    let (tr, va, te) = sp.split;
+    let n_tr = ((n as f64) * tr).round() as usize;
+    let n_va = ((n as f64) * va).round() as usize;
+    let n_te = ((n as f64) * te).round() as usize;
+    let train = order[..n_tr].to_vec();
+    let val = order[n_tr..n_tr + n_va].to_vec();
+    let test = order[n_tr + n_va..(n_tr + n_va + n_te).min(n)].to_vec();
+    (train, val, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_unique() {
+        let mut names: Vec<_> = SPECS.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), SPECS.len());
+    }
+
+    #[test]
+    fn tiny_builds_and_is_consistent() {
+        let ds = build("tiny", 1).unwrap();
+        assert_eq!(ds.graph.num_vertices(), 2000);
+        assert_eq!(ds.labels.len(), 2000);
+        assert!(ds.labels.iter().all(|&l| (l as usize) < ds.num_classes));
+        // splits are disjoint
+        let mut all: Vec<u32> = ds
+            .train
+            .iter()
+            .chain(ds.val.iter())
+            .chain(ds.test.iter())
+            .copied()
+            .collect();
+        let total = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total, "splits must be disjoint");
+    }
+
+    #[test]
+    fn features_deterministic_and_bounded() {
+        let ds = build("tiny", 2).unwrap();
+        let mut a = vec![0f32; ds.feat_dim];
+        let mut b = vec![0f32; ds.feat_dim];
+        ds.write_features(5, &mut a);
+        ds.write_features(5, &mut b);
+        assert_eq!(a, b);
+        ds.write_features(6, &mut b);
+        assert_ne!(a, b);
+        assert!(a.iter().all(|x| (-1.0..=1.0).contains(x)));
+    }
+
+    #[test]
+    fn gather_features_layout() {
+        let ds = build("tiny", 3).unwrap();
+        let mut buf = Vec::new();
+        ds.gather_features(&[3, 9], &mut buf);
+        assert_eq!(buf.len(), 2 * ds.feat_dim);
+        let mut row = vec![0f32; ds.feat_dim];
+        ds.write_features(9, &mut row);
+        assert_eq!(&buf[ds.feat_dim..], &row[..]);
+    }
+
+    #[test]
+    fn labels_have_structure_not_uniform() {
+        // The planted teacher must produce a class distribution measurably
+        // different from uniform noise (it projects a smooth aggregate).
+        let ds = build("tiny", 4).unwrap();
+        let mut counts = vec![0usize; ds.num_classes];
+        for &l in &ds.labels {
+            counts[l as usize] += 1;
+        }
+        let max = *counts.iter().max().unwrap() as f64;
+        let min = *counts.iter().min().unwrap() as f64;
+        assert!(max / min.max(1.0) > 1.2, "teacher classes should be skewed: {counts:?}");
+    }
+
+    #[test]
+    fn same_seed_same_dataset() {
+        let a = build("tiny", 7).unwrap();
+        let b = build("tiny", 7).unwrap();
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.graph.indices, b.graph.indices);
+    }
+
+    #[test]
+    fn conv_split_sizes() {
+        let ds = build("conv", 5).unwrap();
+        let n = ds.graph.num_vertices() as f64;
+        assert!((ds.train.len() as f64 / n - 0.5).abs() < 0.01);
+        assert!((ds.val.len() as f64 / n - 0.2).abs() < 0.01);
+    }
+}

@@ -1,0 +1,316 @@
+//! Synthetic graph generators.
+//!
+//! The paper's datasets are power-law web/social graphs (its §1 cites
+//! Artico et al. on power-law prevalence); the monotonicity/concavity
+//! phenomena it studies depend only on the degree distribution and the
+//! overlap structure of L-hop neighborhoods. We provide:
+//!
+//! * [`chung_lu`] — expected-degree model with a Pareto weight sequence:
+//!   the workhorse for the dataset registry (controllable |V|, avg degree,
+//!   and tail exponent).
+//! * [`rmat`] — Kronecker-style recursive matrix generator (Graph500
+//!   defaults), for skewed, community-ish structure.
+//! * [`erdos_renyi`] — flat-degree control case (work curves should be
+//!   much less concave: minimal neighborhood overlap).
+//! * [`preferential_attachment`] — Barabási–Albert, as a second heavy-tail
+//!   family for robustness checks.
+
+use super::csr::{Csr, CsrBuilder, VertexId};
+use crate::util::rng::Pcg64;
+
+/// Chung–Lu expected-degree graph.
+///
+/// Vertex weights follow a Pareto law `w_i ∝ (i + i0)^(-1/(gamma-1))`
+/// normalized so the expected number of directed edges is
+/// `n * avg_degree`. Edges are drawn by sampling endpoint pairs
+/// proportionally to weight (cumulative-table inversion), which yields the
+/// classic power-law degree distribution with exponent `gamma`.
+pub fn chung_lu(n: usize, avg_degree: f64, gamma: f64, seed: u64) -> Csr {
+    assert!(n > 1 && avg_degree > 0.0 && gamma > 2.0);
+    let mut rng = Pcg64::new(seed);
+    let m = (n as f64 * avg_degree) as usize;
+    // Pareto weights; i0 shifts the head so the max degree stays bounded.
+    let alpha = 1.0 / (gamma - 1.0);
+    let i0 = 10.0_f64.max(n as f64 * 0.001);
+    let mut weights = Vec::with_capacity(n);
+    for i in 0..n {
+        weights.push((i as f64 + i0).powf(-alpha));
+    }
+    // Shuffle weight-to-id assignment so vertex ids carry no degree info.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    // Cumulative table over the *unshuffled* weights; map through perm.
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w;
+        cum.push(acc);
+    }
+    let total = acc;
+    let draw = |rng: &mut Pcg64| -> VertexId {
+        let x = rng.next_f64() * total;
+        let idx = match cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i,
+        };
+        perm[idx.min(n - 1)]
+    };
+    let mut b = CsrBuilder::with_capacity(n, m);
+    b.dedup = true;
+    let mut added = 0usize;
+    // Sample a few more than m to compensate for dedup + self-loop rejects.
+    let budget = m + m / 8 + 16;
+    for _ in 0..budget {
+        let t = draw(&mut rng);
+        let s = draw(&mut rng);
+        if t == s {
+            continue;
+        }
+        b.add_edge(t, s);
+        added += 1;
+        if added >= budget {
+            break;
+        }
+    }
+    b.finish()
+}
+
+/// R-MAT generator (recursive quadrant descent with probabilities
+/// a, b, c, d; Graph500 uses 0.57/0.19/0.19/0.05). `scale` gives
+/// `n = 2^scale` vertices; `edge_factor` gives `m = n * edge_factor`.
+pub fn rmat(scale: u32, edge_factor: usize, probs: (f64, f64, f64, f64), seed: u64) -> Csr {
+    let (a, b_, c, d) = probs;
+    assert!((a + b_ + c + d - 1.0).abs() < 1e-9);
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Pcg64::new(seed);
+    // Random vertex relabeling kills the id-locality artifact of R-MAT.
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    let mut builder = CsrBuilder::with_capacity(n, m);
+    builder.dedup = true;
+    for _ in 0..m {
+        let (mut lo_t, mut lo_s) = (0usize, 0usize);
+        let mut half = n >> 1;
+        while half > 0 {
+            // Noise the quadrant probabilities slightly per level (standard
+            // trick avoiding exact self-similarity artifacts).
+            let u = rng.next_f64();
+            let (dt, ds) = if u < a {
+                (0, 0)
+            } else if u < a + b_ {
+                (0, 1)
+            } else if u < a + b_ + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            lo_t += dt * half;
+            lo_s += ds * half;
+            half >>= 1;
+        }
+        if lo_t != lo_s {
+            builder.add_edge(perm[lo_t], perm[lo_s]);
+        }
+    }
+    builder.finish()
+}
+
+/// Erdős–Rényi G(n, m): m uniform random directed edges, no self loops.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Csr {
+    let mut rng = Pcg64::new(seed);
+    let mut b = CsrBuilder::with_capacity(n, m);
+    b.dedup = true;
+    let mut added = 0;
+    while added < m {
+        let t = rng.next_below(n as u64) as VertexId;
+        let s = rng.next_below(n as u64) as VertexId;
+        if t == s {
+            continue;
+        }
+        b.add_edge(t, s);
+        added += 1;
+    }
+    b.finish()
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches
+/// `m_per` edges to existing vertices chosen ∝ degree (implemented with
+/// the repeated-endpoint list trick). Edges are stored in both directions
+/// (BA is an undirected model), so hubs carry large in-neighborhoods.
+pub fn preferential_attachment(n: usize, m_per: usize, seed: u64) -> Csr {
+    assert!(n > m_per && m_per >= 1);
+    let mut rng = Pcg64::new(seed);
+    let mut endpoint_pool: Vec<VertexId> = Vec::with_capacity(2 * n * m_per);
+    let mut b = CsrBuilder::with_capacity(n, 2 * n * m_per);
+    b.dedup = true;
+    // Seed clique among the first m_per+1 vertices.
+    for v in 0..=(m_per as VertexId) {
+        for u in 0..v {
+            b.add_edge(u, v);
+            b.add_edge(v, u);
+            endpoint_pool.push(u);
+            endpoint_pool.push(v);
+        }
+    }
+    for v in (m_per + 1)..n {
+        for _ in 0..m_per {
+            let u = endpoint_pool[rng.next_below(endpoint_pool.len() as u64) as usize];
+            if u == v as VertexId {
+                continue;
+            }
+            b.add_edge(u, v as VertexId);
+            b.add_edge(v as VertexId, u);
+            endpoint_pool.push(u);
+            endpoint_pool.push(v as VertexId);
+        }
+    }
+    b.finish()
+}
+
+/// Power-law graph with planted community structure: vertices are split
+/// into `blocks` equal communities; each sampled edge keeps both endpoints
+/// in one community with probability `p_in` (otherwise endpoints are
+/// drawn globally). Degrees still follow the Chung–Lu Pareto law. This is
+/// what makes the paper's partitioning experiments (Table 7 `metis` rows)
+/// meaningful: pure Chung–Lu graphs are expanders with nothing to cut.
+pub fn community(
+    n: usize,
+    avg_degree: f64,
+    gamma: f64,
+    blocks: usize,
+    p_in: f64,
+    seed: u64,
+) -> Csr {
+    assert!(n > 1 && blocks >= 1 && (0.0..=1.0).contains(&p_in));
+    let mut rng = Pcg64::new(seed);
+    let m = (n as f64 * avg_degree) as usize;
+    let alpha = 1.0 / (gamma - 1.0);
+    let i0 = 10.0_f64.max(n as f64 * 0.001);
+    // Per-block weight tables; vertex v belongs to block v % blocks so the
+    // within-block cumulative tables stay contiguous.
+    let block_of = |v: usize| v % blocks;
+    let mut weights = Vec::with_capacity(n);
+    for i in 0..n {
+        weights.push((i as f64 + i0).powf(-alpha));
+    }
+    let mut perm: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut perm);
+    // global cumulative
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w;
+        cum.push(acc);
+    }
+    let total = acc;
+    // per-block member lists + block cumulative over the same weights
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); blocks];
+    for i in 0..n {
+        members[block_of(perm[i] as usize)].push(i as u32); // store weight idx
+    }
+    let mut block_cum: Vec<Vec<f64>> = Vec::with_capacity(blocks);
+    let mut block_tot: Vec<f64> = Vec::with_capacity(blocks);
+    for b in 0..blocks {
+        let mut c = Vec::with_capacity(members[b].len());
+        let mut a = 0.0;
+        for &wi in &members[b] {
+            a += weights[wi as usize];
+            c.push(a);
+        }
+        block_cum.push(c);
+        block_tot.push(a);
+    }
+    let draw_global = |rng: &mut Pcg64| -> VertexId {
+        let x = rng.next_f64() * total;
+        let idx = cum.partition_point(|&c| c < x);
+        perm[idx.min(n - 1)]
+    };
+    let draw_in_block = |rng: &mut Pcg64, b: usize| -> VertexId {
+        let x = rng.next_f64() * block_tot[b];
+        let idx = block_cum[b].partition_point(|&c| c < x);
+        perm[members[b][idx.min(members[b].len() - 1)] as usize]
+    };
+    let mut builder = CsrBuilder::with_capacity(n, m);
+    builder.dedup = true;
+    let budget = m + m / 8 + 16;
+    for _ in 0..budget {
+        let t = draw_global(&mut rng);
+        let s = if rng.next_f64() < p_in {
+            draw_in_block(&mut rng, block_of(t as usize))
+        } else {
+            draw_global(&mut rng)
+        };
+        if t != s {
+            builder.add_edge(t, s);
+        }
+    }
+    builder.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chung_lu_matches_target_size() {
+        let g = chung_lu(2000, 8.0, 2.5, 42);
+        assert_eq!(g.num_vertices(), 2000);
+        let avg = g.avg_degree();
+        assert!(avg > 5.0 && avg < 11.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn chung_lu_heavy_tail() {
+        let g = chung_lu(5000, 10.0, 2.3, 7);
+        // Power-law: max degree far above average.
+        assert!(g.max_degree() as f64 > 5.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn chung_lu_deterministic() {
+        let a = chung_lu(500, 6.0, 2.5, 9);
+        let b = chung_lu(500, 6.0, 2.5, 9);
+        assert_eq!(a.indices, b.indices);
+        let c = chung_lu(500, 6.0, 2.5, 10);
+        assert_ne!(a.indices, c.indices);
+    }
+
+    #[test]
+    fn rmat_shape() {
+        let g = rmat(10, 8, (0.57, 0.19, 0.19, 0.05), 3);
+        assert_eq!(g.num_vertices(), 1024);
+        assert!(g.num_edges() > 1024 * 4, "edges {}", g.num_edges());
+        assert!(g.max_degree() as f64 > 3.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn er_flat_degrees() {
+        let g = erdos_renyi(2000, 16_000, 5);
+        assert_eq!(g.num_vertices(), 2000);
+        // ER max degree stays within a small factor of the mean.
+        assert!((g.max_degree() as f64) < 4.0 * g.avg_degree() + 10.0);
+    }
+
+    #[test]
+    fn ba_grows_connected_tail() {
+        let g = preferential_attachment(1000, 4, 11);
+        assert_eq!(g.num_vertices(), 1000);
+        assert!(g.num_edges() >= 900 * 3);
+        assert!(g.max_degree() as f64 > 4.0 * g.avg_degree());
+    }
+
+    #[test]
+    fn no_self_loops_anywhere() {
+        for g in [
+            chung_lu(800, 6.0, 2.5, 1),
+            rmat(9, 6, (0.57, 0.19, 0.19, 0.05), 2),
+            erdos_renyi(800, 4000, 3),
+            preferential_attachment(800, 3, 4),
+        ] {
+            for s in 0..g.num_vertices() as u32 {
+                assert!(!g.neighbors(s).contains(&s), "self loop at {s}");
+            }
+        }
+    }
+}

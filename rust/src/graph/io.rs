@@ -1,0 +1,131 @@
+//! Binary graph / partition IO.
+//!
+//! Datasets regenerate deterministically from the registry, so this format
+//! is a *cache* to avoid re-running generation inside the repro harnesses
+//! (papers-s takes a couple seconds to synthesize). Format: magic,
+//! version, u64 sizes, raw little-endian arrays.
+
+use super::csr::Csr;
+use super::partition::Partition;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"COOPGNN1";
+
+/// Serialize a CSR graph to `path`.
+pub fn save_graph(g: &Csr, path: &Path) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(g.indptr.len() as u64).to_le_bytes())?;
+    f.write_all(&(g.indices.len() as u64).to_le_bytes())?;
+    for v in &g.indptr {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for v in &g.indices {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a CSR graph from `path`.
+pub fn load_graph(path: &Path) -> crate::Result<Csr> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
+    let np = read_u64(&mut f)? as usize;
+    let ne = read_u64(&mut f)? as usize;
+    let mut indptr = vec![0u64; np];
+    for v in indptr.iter_mut() {
+        *v = read_u64(&mut f)?;
+    }
+    let mut indices = vec![0u32; ne];
+    let mut buf = [0u8; 4];
+    for v in indices.iter_mut() {
+        f.read_exact(&mut buf)?;
+        *v = u32::from_le_bytes(buf);
+    }
+    Ok(Csr { indptr, indices })
+}
+
+/// Serialize a partition.
+pub fn save_partition(p: &Partition, path: &Path) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(p.num_parts as u64).to_le_bytes())?;
+    f.write_all(&(p.assignment.len() as u64).to_le_bytes())?;
+    for a in &p.assignment {
+        f.write_all(&a.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a partition.
+pub fn load_partition(path: &Path) -> crate::Result<Partition> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {path:?}");
+    let num_parts = read_u64(&mut f)? as usize;
+    let n = read_u64(&mut f)? as usize;
+    let mut assignment = vec![0u16; n];
+    let mut buf = [0u8; 2];
+    for a in assignment.iter_mut() {
+        f.read_exact(&mut buf)?;
+        *a = u16::from_le_bytes(buf);
+    }
+    Ok(Partition { assignment, num_parts })
+}
+
+fn read_u64<R: Read>(r: &mut R) -> std::io::Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generate, partition};
+
+    #[test]
+    fn graph_roundtrip() {
+        let g = generate::erdos_renyi(300, 1500, 8);
+        let dir = std::env::temp_dir().join("coopgnn_io_test");
+        let path = dir.join("g.bin");
+        save_graph(&g, &path).unwrap();
+        let g2 = load_graph(&path).unwrap();
+        assert_eq!(g.indptr, g2.indptr);
+        assert_eq!(g.indices, g2.indices);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn partition_roundtrip() {
+        let g = generate::erdos_renyi(200, 800, 9);
+        let p = partition::random(&g, 4, 1);
+        let dir = std::env::temp_dir().join("coopgnn_io_test2");
+        let path = dir.join("p.bin");
+        save_partition(&p, &path).unwrap();
+        let p2 = load_partition(&path).unwrap();
+        assert_eq!(p.assignment, p2.assignment);
+        assert_eq!(p.num_parts, p2.num_parts);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("coopgnn_io_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOTMAGIC        ").unwrap();
+        assert!(load_graph(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,17 @@
+//! Graph substrate: CSR storage, synthetic generators, partitioners, the
+//! dataset registry mirroring the paper's Table 2 (scaled), and binary IO.
+//!
+//! Everything downstream (samplers, the cooperative engine, the repro
+//! harnesses) consumes [`Csr`] through `neighbors()` / `degree()`; the
+//! partitioners produce a [`partition::Partition`] mapping every vertex to
+//! a PE, which is the 1-D partitioning of paper §3.1.
+
+pub mod csr;
+pub mod generate;
+pub mod partition;
+pub mod datasets;
+pub mod io;
+
+pub use csr::{Csr, CsrBuilder, VertexId};
+pub use partition::Partition;
+pub use datasets::Dataset;

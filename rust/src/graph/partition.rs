@@ -1,0 +1,409 @@
+//! 1-D graph partitioning (paper §3.1: "we first partition the graph in 1D
+//! fashion by logically assigning each vertex and its incoming edges to
+//! PEs").
+//!
+//! Three quality tiers, matching what the paper evaluates in Table 7:
+//!
+//! * [`random`] — hash partitioning; cross-edge ratio `c ≈ (P-1)/P`.
+//! * [`ldg`] — streaming Linear Deterministic Greedy; a cheap middle
+//!   ground.
+//! * [`multilevel`] — heavy-edge-matching coarsening + greedy growth +
+//!   boundary refinement: our stand-in for METIS (the paper's partitioner).
+//!   Only the resulting cross-edge ratio `c` and neighborhood overlap feed
+//!   the experiments, so a METIS-quality-ish `c` is sufficient.
+
+use super::csr::{Csr, VertexId};
+use crate::util::rng::Pcg64;
+
+/// A vertex -> PE assignment.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub assignment: Vec<u16>,
+    pub num_parts: usize,
+}
+
+impl Partition {
+    /// PE owning vertex `v`.
+    #[inline]
+    pub fn part_of(&self, v: VertexId) -> usize {
+        self.assignment[v as usize] as usize
+    }
+
+    /// Vertices per part.
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.num_parts];
+        for &p in &self.assignment {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Fraction of edges whose endpoints live on different PEs — the `c`
+    /// of the paper's Table 1 complexity model.
+    pub fn cross_edge_ratio(&self, g: &Csr) -> f64 {
+        if g.num_edges() == 0 {
+            return 0.0;
+        }
+        let mut cross = 0usize;
+        for s in 0..g.num_vertices() as VertexId {
+            let ps = self.part_of(s);
+            for &t in g.neighbors(s) {
+                if self.part_of(t) != ps {
+                    cross += 1;
+                }
+            }
+        }
+        cross as f64 / g.num_edges() as f64
+    }
+
+    /// Load imbalance: max part size / ideal part size.
+    pub fn imbalance(&self) -> f64 {
+        let sizes = self.part_sizes();
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        let ideal = self.assignment.len() as f64 / self.num_parts as f64;
+        if ideal == 0.0 { 1.0 } else { max / ideal }
+    }
+
+    /// Vertices owned by part `p`, in id order.
+    pub fn members(&self, p: usize) -> Vec<VertexId> {
+        self.assignment
+            .iter()
+            .enumerate()
+            .filter(|(_, &a)| a as usize == p)
+            .map(|(v, _)| v as VertexId)
+            .collect()
+    }
+}
+
+/// Hash/random partitioning.
+pub fn random(g: &Csr, num_parts: usize, seed: u64) -> Partition {
+    let mut rng = Pcg64::new(seed);
+    let assignment = (0..g.num_vertices())
+        .map(|_| rng.next_below(num_parts as u64) as u16)
+        .collect();
+    Partition { assignment, num_parts }
+}
+
+/// Contiguous range partitioning (useful as a baseline when vertex ids
+/// carry locality, e.g. R-MAT before relabeling).
+pub fn range(g: &Csr, num_parts: usize) -> Partition {
+    let n = g.num_vertices();
+    let assignment = (0..n)
+        .map(|v| ((v * num_parts) / n.max(1)).min(num_parts - 1) as u16)
+        .collect();
+    Partition { assignment, num_parts }
+}
+
+/// Streaming Linear Deterministic Greedy: each vertex goes to the part
+/// holding most of its (already-assigned) neighbors, damped by a load
+/// penalty `(1 - size/capacity)`.
+pub fn ldg(g: &Csr, num_parts: usize, seed: u64) -> Partition {
+    let n = g.num_vertices();
+    let capacity = (n as f64 / num_parts as f64) * 1.05 + 1.0;
+    let mut assignment = vec![u16::MAX; n];
+    let mut sizes = vec![0usize; num_parts];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    Pcg64::new(seed).shuffle(&mut order);
+    let mut nbr_counts = vec![0u32; num_parts];
+    for &v in &order {
+        for c in nbr_counts.iter_mut() {
+            *c = 0;
+        }
+        for &t in g.neighbors(v) {
+            let a = assignment[t as usize];
+            if a != u16::MAX {
+                nbr_counts[a as usize] += 1;
+            }
+        }
+        let mut best = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for p in 0..num_parts {
+            if (sizes[p] as f64) >= capacity {
+                continue;
+            }
+            // load penalty both scales the neighbor affinity and breaks
+            // zero-affinity ties toward the lightest part
+            let load = 1.0 - sizes[p] as f64 / capacity;
+            let score = nbr_counts[p] as f64 * load + 1e-3 * load;
+            if score > best_score {
+                best_score = score;
+                best = p;
+            }
+        }
+        assignment[v as usize] = best as u16;
+        sizes[best] += 1;
+    }
+    Partition { assignment, num_parts }
+}
+
+/// Multilevel partitioning: heavy-edge-matching coarsening until the graph
+/// is small, greedy BFS-growth initial partitioning, then projected back
+/// with a boundary-refinement (FM-lite) pass per level.
+pub fn multilevel(g: &Csr, num_parts: usize, seed: u64) -> Partition {
+    const COARSE_TARGET: usize = 2048;
+    let mut rng = Pcg64::new(seed);
+
+    // --- Coarsening ---------------------------------------------------
+    // levels[i] = mapping from level-i vertex to level-(i+1) coarse vertex
+    let mut graphs: Vec<Csr> = vec![symmetrize(g)];
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    while graphs.last().unwrap().num_vertices() > COARSE_TARGET.max(num_parts * 8) {
+        let cur = graphs.last().unwrap();
+        let (coarse, map) = coarsen_hem(cur, &mut rng);
+        // Stop if coarsening stalls (matching shrank < 10%).
+        if coarse.num_vertices() as f64 > cur.num_vertices() as f64 * 0.95 {
+            break;
+        }
+        graphs.push(coarse);
+        maps.push(map);
+    }
+
+    // --- Initial partitioning on the coarsest graph --------------------
+    let coarsest = graphs.last().unwrap();
+    let mut assignment = greedy_growth(coarsest, num_parts, &mut rng);
+    refine(coarsest, &mut assignment, num_parts, 4);
+
+    // --- Uncoarsen + refine --------------------------------------------
+    for level in (0..maps.len()).rev() {
+        let fine = &graphs[level];
+        let map = &maps[level];
+        let mut fine_assignment = vec![0u16; fine.num_vertices()];
+        for v in 0..fine.num_vertices() {
+            fine_assignment[v] = assignment[map[v] as usize];
+        }
+        assignment = fine_assignment;
+        refine(fine, &mut assignment, num_parts, 2);
+    }
+
+    Partition { assignment, num_parts }
+}
+
+/// Union of in+out neighborhoods — partition quality should ignore edge
+/// direction.
+fn symmetrize(g: &Csr) -> Csr {
+    g.to_undirected()
+}
+
+/// One round of heavy-edge matching: visit vertices in random order, match
+/// each unmatched vertex with its most-connected unmatched neighbor
+/// (multi-edges from symmetrize() act as weights via repetition counting).
+fn coarsen_hem(g: &Csr, rng: &mut Pcg64) -> (Csr, Vec<u32>) {
+    let n = g.num_vertices();
+    let mut matched = vec![u32::MAX; n];
+    let mut order: Vec<u32> = (0..n as u32).collect();
+    rng.shuffle(&mut order);
+    let mut next_coarse = 0u32;
+    let mut coarse_of = vec![u32::MAX; n];
+    for &v in &order {
+        if coarse_of[v as usize] != u32::MAX {
+            continue;
+        }
+        // count multiplicity to emulate edge weights
+        let mut best: Option<(u32, u32)> = None; // (count, nbr)
+        let nbrs = g.neighbors(v);
+        let mut i = 0;
+        while i < nbrs.len() {
+            let u = nbrs[i];
+            let mut cnt = 1u32;
+            while i + 1 < nbrs.len() && nbrs[i + 1] == u {
+                cnt += 1;
+                i += 1;
+            }
+            if u != v && coarse_of[u as usize] == u32::MAX {
+                if best.map_or(true, |(bc, _)| cnt > bc) {
+                    best = Some((cnt, u));
+                }
+            }
+            i += 1;
+        }
+        let c = next_coarse;
+        next_coarse += 1;
+        coarse_of[v as usize] = c;
+        if let Some((_, u)) = best {
+            coarse_of[u as usize] = c;
+            matched[v as usize] = u;
+            matched[u as usize] = v;
+        }
+    }
+    // Build the coarse graph.
+    let mut b = super::csr::CsrBuilder::new(next_coarse as usize);
+    for s in 0..n as VertexId {
+        let cs = coarse_of[s as usize];
+        for &t in g.neighbors(s) {
+            let ct = coarse_of[t as usize];
+            if cs != ct {
+                b.add_edge(ct, cs);
+            }
+        }
+    }
+    (b.finish(), coarse_of)
+}
+
+/// Greedy BFS growth: pick P random roots, grow regions breadth-first,
+/// assigning unclaimed vertices round-robin across frontiers.
+fn greedy_growth(g: &Csr, num_parts: usize, rng: &mut Pcg64) -> Vec<u16> {
+    let n = g.num_vertices();
+    let mut assignment = vec![u16::MAX; n];
+    let cap = n / num_parts + 1;
+    let mut sizes = vec![0usize; num_parts];
+    let mut frontiers: Vec<std::collections::VecDeque<u32>> = (0..num_parts)
+        .map(|_| std::collections::VecDeque::new())
+        .collect();
+    for p in 0..num_parts {
+        // find an unassigned random root
+        for _ in 0..64 {
+            let r = rng.next_below(n as u64) as usize;
+            if assignment[r] == u16::MAX {
+                assignment[r] = p as u16;
+                sizes[p] += 1;
+                frontiers[p].push_back(r as u32);
+                break;
+            }
+        }
+    }
+    let mut remaining: Vec<u32> =
+        (0..n as u32).filter(|&v| assignment[v as usize] == u16::MAX).collect();
+    let mut active = true;
+    while active {
+        active = false;
+        for p in 0..num_parts {
+            if sizes[p] >= cap {
+                continue;
+            }
+            if let Some(v) = frontiers[p].pop_front() {
+                active = true;
+                for &u in g.neighbors(v) {
+                    if assignment[u as usize] == u16::MAX && sizes[p] < cap {
+                        assignment[u as usize] = p as u16;
+                        sizes[p] += 1;
+                        frontiers[p].push_back(u);
+                    }
+                }
+            }
+        }
+    }
+    // Disconnected leftovers: round-robin into the lightest parts.
+    remaining.retain(|&v| assignment[v as usize] == u16::MAX);
+    for v in remaining {
+        let p = sizes
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, &s)| s)
+            .map(|(i, _)| i)
+            .unwrap();
+        assignment[v as usize] = p as u16;
+        sizes[p] += 1;
+    }
+    assignment
+}
+
+/// Boundary refinement: move a vertex to the neighboring part with maximal
+/// gain (external - internal edges) if balance allows. `passes` sweeps.
+fn refine(g: &Csr, assignment: &mut [u16], num_parts: usize, passes: usize) {
+    let n = g.num_vertices();
+    let cap = (n as f64 / num_parts as f64 * 1.03) as usize + 1;
+    let mut sizes = vec![0usize; num_parts];
+    for &a in assignment.iter() {
+        sizes[a as usize] += 1;
+    }
+    let mut counts = vec![0i64; num_parts];
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..n as VertexId {
+            let cur = assignment[v as usize] as usize;
+            for c in counts.iter_mut() {
+                *c = 0;
+            }
+            for &t in g.neighbors(v) {
+                counts[assignment[t as usize] as usize] += 1;
+            }
+            let (mut best, mut best_gain) = (cur, 0i64);
+            for p in 0..num_parts {
+                if p == cur || sizes[p] >= cap {
+                    continue;
+                }
+                let gain = counts[p] - counts[cur];
+                if gain > best_gain {
+                    best_gain = gain;
+                    best = p;
+                }
+            }
+            if best != cur {
+                assignment[v as usize] = best as u16;
+                sizes[cur] -= 1;
+                sizes[best] += 1;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    fn test_graph() -> Csr {
+        // community structure so partitioners have something to find
+        // (pure Chung–Lu is an expander — even METIS barely beats random)
+        generate::community(4000, 8.0, 2.5, 16, 0.8, 17)
+    }
+
+    #[test]
+    fn random_is_balanced_and_covers() {
+        let g = test_graph();
+        let p = random(&g, 4, 1);
+        assert_eq!(p.assignment.len(), g.num_vertices());
+        assert!(p.imbalance() < 1.15, "imbalance {}", p.imbalance());
+        let c = p.cross_edge_ratio(&g);
+        assert!((c - 0.75).abs() < 0.05, "random c ≈ (P-1)/P, got {c}");
+    }
+
+    #[test]
+    fn range_is_exact_cover() {
+        let g = test_graph();
+        let p = range(&g, 7);
+        let sizes = p.part_sizes();
+        assert_eq!(sizes.iter().sum::<usize>(), g.num_vertices());
+        assert!(p.imbalance() < 1.05);
+    }
+
+    #[test]
+    fn ldg_beats_random() {
+        let g = test_graph();
+        let cr = random(&g, 4, 2).cross_edge_ratio(&g);
+        let cl = ldg(&g, 4, 2).cross_edge_ratio(&g);
+        assert!(cl < cr, "ldg {cl} should beat random {cr}");
+    }
+
+    #[test]
+    fn multilevel_beats_random_and_balances() {
+        let g = test_graph();
+        let p = multilevel(&g, 4, 3);
+        let cm = p.cross_edge_ratio(&g);
+        let cr = random(&g, 4, 3).cross_edge_ratio(&g);
+        assert!(cm < cr * 0.7, "multilevel {cm} vs random {cr}");
+        assert!(p.imbalance() < 1.35, "imbalance {}", p.imbalance());
+        assert_eq!(p.part_sizes().iter().sum::<usize>(), g.num_vertices());
+    }
+
+    #[test]
+    fn members_partition_the_vertex_set() {
+        let g = test_graph();
+        let p = multilevel(&g, 3, 5);
+        let mut all: Vec<u32> = (0..3).flat_map(|q| p.members(q)).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..g.num_vertices() as u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_part_degenerate() {
+        let g = test_graph();
+        let p = random(&g, 1, 9);
+        assert_eq!(p.cross_edge_ratio(&g), 0.0);
+        assert_eq!(p.imbalance(), 1.0);
+    }
+}

@@ -1,0 +1,44 @@
+//! # coopgnn — Cooperative Minibatching in Graph Neural Networks
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *Cooperative
+//! Minibatching in Graph Neural Networks* (Balın, LaSalle, Çatalyürek, 2023).
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the graph store, the
+//! graph samplers (NS / LABOR-0 / LABOR-* / RW), the multi-PE cooperative
+//! minibatching engine (Algorithm 1 of the paper), the dependent-minibatch
+//! RNG (Appendix A.7), the LRU vertex-embedding cache, the training loop,
+//! and the bandwidth cost model used to reproduce the paper's runtime
+//! tables. Model forward/backward (Layer 2, JAX) and the aggregation
+//! kernels (Layer 1, Pallas) are AOT-compiled to HLO text by
+//! `python/compile/aot.py` and executed from Rust through PJRT
+//! (`runtime` module); Python is never on the training path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use coopgnn::graph::datasets;
+//! use coopgnn::sampling::{SamplerKind, SamplerConfig};
+//!
+//! // Build a synthetic dataset mirroring the paper's `flickr` traits.
+//! let ds = datasets::build("flickr-s", 1).unwrap();
+//! let cfg = SamplerConfig { fanout: 10, layers: 3, ..Default::default() };
+//! let mut sampler = cfg.build(SamplerKind::Labor0, &ds.graph, 1234);
+//! let mfg = sampler.sample_mfg(&[0, 1, 2, 3]);
+//! assert_eq!(mfg.seeds().len(), 4);
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a harness in [`repro`].
+
+pub mod util;
+pub mod graph;
+pub mod sampling;
+pub mod coop;
+pub mod costmodel;
+pub mod metrics;
+pub mod runtime;
+pub mod train;
+pub mod repro;
+
+/// Crate-wide result alias (anyhow is the only non-xla dependency).
+pub type Result<T> = anyhow::Result<T>;

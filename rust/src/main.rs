@@ -1,0 +1,267 @@
+//! `coopgnn` — the leader CLI.
+//!
+//! ```text
+//! coopgnn repro <id|all> [--out DIR] [--quick] [--seed N]
+//! coopgnn train --config NAME [--dataset NAME] [--steps N] [--kappa K]
+//!               [--sampler ns|labor0|labor*|rw] [--lr F] [--eval-every N]
+//! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
+//!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
+//! coopgnn caps --dataset NAME --batch B [--sampler S]
+//! coopgnn info
+//! ```
+//!
+//! (Hand-rolled arg parsing — the offline build has no clap.)
+
+use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
+use coopgnn::graph::{datasets, partition};
+use coopgnn::repro::{self, Ctx};
+use coopgnn::runtime::{Manifest, Runtime};
+use coopgnn::sampling::{block, Kappa, SamplerConfig, SamplerKind};
+use coopgnn::train::{Trainer, TrainerOptions};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` and `--flag` style args after the subcommand.
+struct Args {
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(rest: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), rest[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                eprintln!("warning: ignoring stray argument {a}");
+                i += 1;
+            }
+        }
+        Args { flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn real_main() -> coopgnn::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(|s| s.as_str()) else {
+        print_usage();
+        return Ok(());
+    };
+    match cmd {
+        "repro" => {
+            let id = argv.get(1).map(|s| s.as_str()).unwrap_or("all");
+            let rest = Args::parse(argv.get(2..).unwrap_or(&[]));
+            let ctx = Ctx {
+                out: PathBuf::from(rest.get_or("out", "results")),
+                quick: rest.has("quick"),
+                seed: rest.u64_or("seed", 0xC0FFEE),
+                artifacts: PathBuf::from(rest.get_or("artifacts", "artifacts")),
+            };
+            repro::run(id, &ctx)
+        }
+        "train" => cmd_train(&Args::parse(&argv[1..])),
+        "engine" => cmd_engine(&Args::parse(&argv[1..])),
+        "caps" => cmd_caps(&Args::parse(&argv[1..])),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command `{other}`")
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> coopgnn::Result<()> {
+    let config = args.get_or("config", "tiny-b32").to_string();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&artifacts)?;
+    let art = manifest.get(&config)?;
+    let ds_name = args.get_or("dataset", &art.dataset).to_string();
+    let ds = datasets::build(&ds_name, args.u64_or("seed", 1))?;
+    let steps = args.usize_or("steps", 300);
+    let eval_every = args.usize_or("eval-every", 50);
+    let opts = TrainerOptions {
+        kind: SamplerKind::parse(args.get_or("sampler", "labor0"))
+            .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
+        kappa: Kappa::parse(args.get_or("kappa", "1"))
+            .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
+        fanout: args.usize_or("fanout", 10),
+        seed: args.u64_or("seed", 0x7EA1),
+        lr: args.get("lr").and_then(|v| v.parse().ok()),
+    };
+    let mut trainer = Trainer::new(&rt, &manifest, &config, &ds, &opts)?;
+    println!(
+        "training {config} on {ds_name}: {} params, {} train vertices, batch {}",
+        trainer.state.num_scalars(),
+        ds.train.len(),
+        trainer.art.batch
+    );
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let s = trainer.step()?;
+        if step % eval_every == 0 || step == 1 || step == steps {
+            let val = trainer.evaluate(&ds.val, 1234)?;
+            println!(
+                "step {step:>5}  loss {:.4}  batch-acc {:.3}  val-acc {:.4}  val-F1 {:.4}  \
+                 [samp {:.1}ms pad {:.1}ms feat {:.1}ms exec {:.1}ms]",
+                s.loss, s.acc, val.accuracy, val.macro_f1,
+                s.sample_ms, s.pad_ms, s.feature_ms, s.exec_ms
+            );
+        }
+    }
+    let test = trainer.evaluate(&ds.test, 1234)?;
+    println!(
+        "done in {:.1}s: test acc {:.4}, test F1 {:.4}",
+        t0.elapsed().as_secs_f64(),
+        test.accuracy,
+        test.macro_f1
+    );
+    Ok(())
+}
+
+fn cmd_engine(args: &Args) -> coopgnn::Result<()> {
+    let ds = datasets::build(args.get_or("dataset", "tiny"), args.u64_or("seed", 1))?;
+    let pes = args.usize_or("pes", 4);
+    let mode = match args.get_or("mode", "coop") {
+        "coop" => Mode::Cooperative,
+        "indep" => Mode::Independent,
+        other => anyhow::bail!("bad --mode {other}"),
+    };
+    let part = match args.get_or("partitioner", "random") {
+        "random" => partition::random(&ds.graph, pes, 1),
+        "metis" => partition::multilevel(&ds.graph, pes, 1),
+        "ldg" => partition::ldg(&ds.graph, pes, 1),
+        other => anyhow::bail!("bad --partitioner {other}"),
+    };
+    let mut cfg = EngineConfig {
+        mode,
+        num_pes: pes,
+        batch_per_pe: args.usize_or("batch", 1024),
+        cache_per_pe: args.usize_or("cache", ds.cache_size / pes.max(1)),
+        kind: SamplerKind::parse(args.get_or("sampler", "labor0"))
+            .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
+        warmup_batches: args.usize_or("warmup", 4),
+        measure_batches: args.usize_or("batches", 8),
+        seed: args.u64_or("seed", 2),
+        ..Default::default()
+    };
+    cfg.sampler.kappa =
+        Kappa::parse(args.get_or("kappa", "1")).ok_or_else(|| anyhow::anyhow!("bad --kappa"))?;
+    let r = engine_run(&ds, &part, &cfg);
+    println!("mode={} PEs={} cross-edge-ratio={:.3}", r.mode, r.num_pes, part.cross_edge_ratio(&ds.graph));
+    println!("per-layer S (max/PE, avg): {:?}", r.s.iter().map(|x| *x as u64).collect::<Vec<_>>());
+    println!("per-layer E: {:?}", r.e.iter().map(|x| *x as u64).collect::<Vec<_>>());
+    println!("per-layer S~: {:?}", r.tilde.iter().map(|x| *x as u64).collect::<Vec<_>>());
+    println!("per-layer cross: {:?}", r.cross.iter().map(|x| *x as u64).collect::<Vec<_>>());
+    println!(
+        "feature: requested {:.0}/batch, misses {:.0}, fabric rows {:.0}, miss rate {:.4}",
+        r.feat_requested, r.feat_misses, r.feat_fabric_rows, r.cache_miss_rate
+    );
+    println!("dup factor @L: {:.3}", r.dup_factor);
+    println!(
+        "CPU wall: sampling {:.2} ms/batch, feature {:.2} ms/batch",
+        r.wall_sampling_ms, r.wall_feature_ms
+    );
+    Ok(())
+}
+
+fn cmd_caps(args: &Args) -> coopgnn::Result<()> {
+    let ds = datasets::build(args.get_or("dataset", "tiny"), args.u64_or("seed", 1))?;
+    let batch = args.usize_or("batch", 256);
+    let kind = SamplerKind::parse(args.get_or("sampler", "labor0"))
+        .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?;
+    let cfg = SamplerConfig::default();
+    let caps = block::estimate_caps(
+        &cfg,
+        kind,
+        &ds.graph,
+        &ds.train,
+        batch,
+        args.usize_or("trials", 5),
+        1.25,
+        args.u64_or("seed", 42),
+    );
+    println!("dataset {} batch {batch} {}: k={} n={:?}", ds.name, kind.name(), caps.k, caps.n);
+    Ok(())
+}
+
+fn cmd_info() -> coopgnn::Result<()> {
+    println!("coopgnn — Cooperative Minibatching in GNNs (reproduction)");
+    println!("\ndatasets:");
+    for s in datasets::SPECS {
+        println!(
+            "  {:<10} |V|={:<8} deg={:<6.1} d={:<4} C={:<3} mirrors {}",
+            s.name, s.num_vertices, s.avg_degree, s.feat_dim, s.num_classes, s.mirrors
+        );
+    }
+    if let Ok(m) = Manifest::load(&PathBuf::from("artifacts")) {
+        println!("\nartifact configs:");
+        for c in &m.configs {
+            println!(
+                "  {:<14} dataset={:<9} b={:<5} dims=({},{},{}) caps k={} n={:?}",
+                c.name, c.dataset, c.batch, c.d_in, c.hidden, c.classes, c.caps.k, c.caps.n
+            );
+        }
+    } else {
+        println!("\n(no artifacts/ yet — run `make artifacts`)");
+    }
+    if let Ok(rt) = Runtime::cpu() {
+        println!("\nPJRT platform: {}", rt.platform());
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "coopgnn — Cooperative Minibatching in GNNs\n\
+         \n\
+         USAGE:\n\
+         \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|all>\n\
+         \x20        [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
+         \x20 coopgnn train --config NAME [--steps N] [--kappa K|inf] [--sampler ns|labor0|labor*|rw]\n\
+         \x20        [--lr F] [--eval-every N] [--seed N]\n\
+         \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
+         \x20        [--partitioner random|metis|ldg] [--batches N]\n\
+         \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
+         \x20 coopgnn info"
+    );
+}

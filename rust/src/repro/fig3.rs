@@ -1,0 +1,132 @@
+//! Figures 3 and 6: monotonicity of work and concavity of E[|S³|].
+//!
+//! Sweeps the batch size for node- and edge-prediction workloads across
+//! all four samplers and reports `E[|S³|]/|S⁰|` (work ratio) and
+//! `E[|S³|]` (subgraph size). Asserts the theorem shapes: ratios are
+//! monotonically nonincreasing (Thm 3.1) and counts concave (Thm 3.2),
+//! within sampling noise.
+
+use super::Ctx;
+use crate::graph::datasets;
+use crate::sampling::{edge_pred, RwParams, SamplerConfig, SamplerKind};
+use crate::util::csv::Table;
+use crate::util::rng::Pcg64;
+
+pub fn run(ctx: &Ctx) -> crate::Result<()> {
+    let (ds_names, batches, trials, walks): (&[&str], Vec<usize>, usize, usize) = if ctx.quick {
+        (&["flickr-s"], vec![256, 1024, 4096], 1, 10)
+    } else {
+        (
+            &["flickr-s", "yelp-s", "reddit-s", "papers-s"],
+            vec![64, 256, 1024, 4096, 16384],
+            3,
+            25,
+        )
+    };
+    let mut table = Table::new(
+        "Figures 3/6: work per epoch vs batch size (L=3, k=10)",
+        &["dataset", "task", "sampler", "batch", "E[S3]", "ratio", "monotone_ok", "concave_ok"],
+    );
+    for ds_name in ds_names {
+        let ds = datasets::build(ds_name, ctx.seed)?;
+        // edge prediction needs an undirected view
+        let und = ds.graph.to_undirected();
+        for task in ["node", "edge"] {
+            for kind in SamplerKind::ALL {
+                let cfg = SamplerConfig {
+                    rw: RwParams { num_walks: walks, ..Default::default() },
+                    ..Default::default()
+                };
+                let mut prev_ratio = f64::INFINITY;
+                let mut counts: Vec<(usize, f64)> = Vec::new();
+                for &b in &batches {
+                    let mut acc = 0.0;
+                    for t in 0..trials {
+                        let g = if task == "edge" { &und } else { &ds.graph };
+                        let mut sampler =
+                            cfg.build(kind, g, ctx.seed ^ ((t as u64 + 1) << 24));
+                        let mut rng = Pcg64::new(ctx.seed ^ (b as u64) ^ (t as u64) << 8);
+                        let seeds: Vec<u32> = if task == "node" {
+                            rng.sample_distinct(g.num_vertices(), b.min(g.num_vertices()))
+                        } else {
+                            let samples = edge_pred::sample_edges(g, b / 3 + 1, &mut rng);
+                            edge_pred::seeds_of(&samples).into_iter().take(b).collect()
+                        };
+                        let mfg = sampler.sample_mfg(&seeds);
+                        acc += mfg.input_vertices().len() as f64;
+                    }
+                    let e_s3 = acc / trials as f64;
+                    let ratio = e_s3 / b as f64;
+                    let monotone_ok = ratio <= prev_ratio * 1.08; // noise slack
+                    counts.push((b, e_s3));
+                    let concave_ok = check_concave(&counts);
+                    table.push_row(&[
+                        ds_name.to_string(),
+                        task.to_string(),
+                        kind.name().to_string(),
+                        b.to_string(),
+                        format!("{e_s3:.0}"),
+                        format!("{ratio:.2}"),
+                        monotone_ok.to_string(),
+                        concave_ok.to_string(),
+                    ]);
+                    prev_ratio = ratio;
+                }
+            }
+            println!("fig3: {ds_name}/{task} done");
+        }
+        // durable partial results: dataset sweeps are minutes each
+        table.write(&ctx.out, "fig3")?;
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+/// Discrete concavity check on (batch, count) points: successive secant
+/// slopes must not increase (with noise slack).
+fn check_concave(points: &[(usize, f64)]) -> bool {
+    if points.len() < 3 {
+        return true;
+    }
+    let slope = |a: (usize, f64), b: (usize, f64)| (b.1 - a.1) / (b.0 as f64 - a.0 as f64);
+    let mut prev = f64::INFINITY;
+    for w in points.windows(2) {
+        let s = slope(w[0], w[1]);
+        if s > prev * 1.10 + 1e-9 {
+            return false;
+        }
+        prev = s;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concavity_checker() {
+        // perfectly concave
+        assert!(check_concave(&[(1, 10.0), (2, 18.0), (4, 30.0), (8, 44.0)]));
+        // convex violation
+        assert!(!check_concave(&[(1, 1.0), (2, 2.0), (4, 10.0), (8, 40.0)]));
+        // short series trivially pass
+        assert!(check_concave(&[(1, 5.0)]));
+    }
+
+    #[test]
+    fn quick_run_flickr() {
+        let dir = std::env::temp_dir().join("coopgnn_fig3_test");
+        let ctx = Ctx { out: dir.clone(), quick: true, ..Default::default() };
+        run(&ctx).unwrap();
+        assert!(dir.join("fig3.csv").exists());
+        let csv = std::fs::read_to_string(dir.join("fig3.csv")).unwrap();
+        // 1 dataset x 2 tasks x 4 samplers x 3 batches + header
+        assert_eq!(csv.lines().count(), 1 + 2 * 4 * 3);
+        // every row must report monotone_ok=true
+        for line in csv.lines().skip(1) {
+            assert!(line.contains("true"), "shape violated: {line}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,159 @@
+//! Figure 5: LRU cache miss rates vs batch dependency κ.
+//!
+//! * 5a — one PE, per-dataset cache sizes from the Table 2 ratios.
+//! * 5b — four cooperating PEs, per-PE caches (ownership-disjoint), the
+//!   "cooperative feature loading effectively increases the global cache
+//!   size" effect.
+//!
+//! Expected shapes: miss rate falls monotonically with κ; the drop is
+//! larger for denser graphs (paper: "improvement is monotonically
+//! increasing as a function of |E|/|V|"); coop 4-PE misses sit below
+//! 1-PE independent at equal per-PE cache.
+
+use super::Ctx;
+use crate::coop::engine::{run as engine_run, EngineConfig, Mode};
+use crate::graph::{datasets, partition};
+use crate::sampling::Kappa;
+use crate::util::csv::Table;
+
+const KAPPAS: &[Kappa] = &[
+    Kappa::Finite(1),
+    Kappa::Finite(4),
+    Kappa::Finite(16),
+    Kappa::Finite(64),
+    Kappa::Finite(256),
+    Kappa::Infinite,
+];
+
+pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
+    let ds_names: &[&str] = if ctx.quick {
+        &["flickr-s"]
+    } else {
+        &["flickr-s", "yelp-s", "reddit-s", "papers-s", "mag-s"]
+    };
+    let mut table = Table::new(
+        "Figure 5a: 1-PE LRU miss rate vs κ (LABOR-0, b=1024)",
+        &["dataset", "kappa", "miss_rate", "requested/batch", "misses/batch"],
+    );
+    for ds_name in ds_names {
+        let ds = datasets::build(ds_name, ctx.seed)?;
+        let part = partition::random(&ds.graph, 1, ctx.seed);
+        let mut prev = 1.0f64;
+        for &kappa in KAPPAS {
+            let mut cfg = EngineConfig {
+                mode: Mode::Independent,
+                num_pes: 1,
+                batch_per_pe: 1024.min(ds.train.len().max(64)),
+                cache_per_pe: ds.cache_size,
+                warmup_batches: if ctx.quick { 3 } else { 8 },
+                measure_batches: if ctx.quick { 6 } else { 16 },
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            cfg.sampler.kappa = kappa;
+            let r = engine_run(&ds, &part, &cfg);
+            table.push_row(&[
+                ds_name.to_string(),
+                kappa.label(),
+                format!("{:.4}", r.cache_miss_rate),
+                format!("{:.0}", r.feat_requested),
+                format!("{:.0}", r.feat_misses),
+            ]);
+            // shape check (warn, don't fail: small caches are noisy)
+            if r.cache_miss_rate > prev * 1.10 {
+                eprintln!(
+                    "WARN fig5a: miss rate rose at {ds_name} κ={} ({prev:.3} -> {:.3})",
+                    kappa.label(),
+                    r.cache_miss_rate
+                );
+            }
+            prev = r.cache_miss_rate;
+        }
+        println!("fig5a: {ds_name} done");
+    }
+    table.write(&ctx.out, "fig5a")?;
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
+    let ds_names: &[&str] =
+        if ctx.quick { &["flickr-s"] } else { &["papers-s", "mag-s", "reddit-s", "yelp-s"] };
+    let mut table = Table::new(
+        "Figure 5b: 4 cooperating PEs, per-PE cache, miss rate vs κ (LABOR-0, b=1024/PE)",
+        &["dataset", "kappa", "miss_rate", "fabric_rows/batch"],
+    );
+    for ds_name in ds_names {
+        let ds = datasets::build(ds_name, ctx.seed)?;
+        let part = partition::random(&ds.graph, 4, ctx.seed);
+        // Cache sizing: the paper gives each GPU a 1M-row cache, ~8x its
+        // per-PE per-batch request on papers100M. The twins' per-PE vertex
+        // universes are far smaller (|V|/4), so a direct ratio either
+        // covers the whole universe (flat 0 misses) or under-runs the
+        // per-batch request (LRU scan-thrash, flat 1). We probe the
+        // per-PE request size and set capacity to 1.15x it — inside the
+        // regime where Figure 5b's κ dynamics are observable.
+        let probe_cfg = EngineConfig {
+            mode: Mode::Cooperative,
+            num_pes: 4,
+            batch_per_pe: 1024.min(ds.train.len() / 4).max(32),
+            cache_per_pe: ds.graph.num_vertices(), // effectively infinite
+            warmup_batches: 0,
+            measure_batches: 2,
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let probe = engine_run(&ds, &part, &probe_cfg);
+        let per_pe_cache = ((probe.feat_requested * 1.15) as usize).max(64);
+        for &kappa in KAPPAS {
+            let mut cfg = EngineConfig {
+                mode: Mode::Cooperative,
+                num_pes: 4,
+                batch_per_pe: 1024.min(ds.train.len() / 4).max(32),
+                cache_per_pe: per_pe_cache.max(64),
+                warmup_batches: if ctx.quick { 3 } else { 8 },
+                measure_batches: if ctx.quick { 6 } else { 16 },
+                seed: ctx.seed,
+                ..Default::default()
+            };
+            cfg.sampler.kappa = kappa;
+            let r = engine_run(&ds, &part, &cfg);
+            table.push_row(&[
+                ds_name.to_string(),
+                kappa.label(),
+                format!("{:.4}", r.cache_miss_rate),
+                format!("{:.0}", r.feat_fabric_rows),
+            ]);
+        }
+        // write incrementally: dataset builds are slow, keep partial
+        // results durable if the run is interrupted
+        table.write(&ctx.out, "fig5b")?;
+        println!("fig5b: {ds_name} done");
+    }
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5a_quick_shape() {
+        let dir = std::env::temp_dir().join("coopgnn_fig5a_test");
+        let ctx = Ctx { out: dir.clone(), quick: true, ..Default::default() };
+        run_fig5a(&ctx).unwrap();
+        let csv = std::fs::read_to_string(dir.join("fig5a.csv")).unwrap();
+        let rows: Vec<&str> = csv.lines().skip(1).collect();
+        assert_eq!(rows.len(), KAPPAS.len());
+        // κ=1 (first) vs κ=inf (last): misses must drop substantially
+        let miss = |row: &str| -> f64 { row.split(',').nth(2).unwrap().parse().unwrap() };
+        let first = miss(rows[0]);
+        let last = miss(rows[rows.len() - 1]);
+        // flickr has the paper's smallest κ benefit (lowest |E|/|V|):
+        // require a clear but modest drop here; the full (non-quick) run
+        // exhibits the 4x reddit-style drops recorded in EXPERIMENTS.md.
+        assert!(last < first * 0.92, "κ=∞ miss {last} must beat κ=1 {first}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,74 @@
+//! Repro harnesses — one per table/figure of the paper's evaluation.
+//!
+//! Every harness writes `<out>/<id>.csv` + `<out>/<id>.md` and prints the
+//! table; EXPERIMENTS.md records paper-vs-measured for each. See
+//! DESIGN.md §6 for the experiment index.
+//!
+//! | id        | paper artifact                 | harness |
+//! |-----------|--------------------------------|---------|
+//! | `fig3`    | Fig. 3 + Fig. 6 work curves    | [`fig3`] |
+//! | `table3`  | Table 3 + Fig. 4/8 κ-F1        | [`table3`] |
+//! | `fig5a`   | Fig. 5a 1-PE miss rates        | [`fig5`] |
+//! | `fig5b`   | Fig. 5b 4-PE coop miss rates   | [`fig5`] |
+//! | `table4`  | Table 4 stage times            | [`table4`] |
+//! | `table5`  | Table 5 coop speedups          | [`table4`] (derived) |
+//! | `table6`  | Table 6 κ improvements         | [`table4`] (derived) |
+//! | `table7`  | Table 7 per-PE counts          | [`table7`] |
+//! | `fig9`    | Fig. 9 coop-vs-indep converg.  | [`fig9`] |
+//! | `scaling` | §4.3 F/B vs #cooperating PEs   | [`scaling`] |
+
+pub mod fig3;
+pub mod table3;
+pub mod fig5;
+pub mod table4;
+pub mod table7;
+pub mod fig9;
+pub mod scaling;
+
+use std::path::PathBuf;
+
+/// Shared harness context.
+#[derive(Clone, Debug)]
+pub struct Ctx {
+    pub out: PathBuf,
+    /// reduced sweeps for smoke runs.
+    pub quick: bool,
+    pub seed: u64,
+    /// artifacts directory (for harnesses that train).
+    pub artifacts: PathBuf,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx {
+            out: PathBuf::from("results"),
+            quick: false,
+            seed: 0xC0FFEE,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+/// Run one experiment by id; `all` runs everything.
+pub fn run(id: &str, ctx: &Ctx) -> crate::Result<()> {
+    match id {
+        "fig3" => fig3::run(ctx),
+        "table3" => table3::run(ctx),
+        "fig5a" => fig5::run_fig5a(ctx),
+        "fig5b" => fig5::run_fig5b(ctx),
+        "table4" | "table5" | "table6" => table4::run(ctx),
+        "table7" => table7::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "scaling" => scaling::run(ctx),
+        "all" => {
+            for id in ["fig3", "fig5a", "fig5b", "table4", "table7", "scaling", "fig9", "table3"] {
+                println!("=== repro {id} ===");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment `{other}`; try fig3 table3 fig5a fig5b table4 table7 fig9 scaling all"
+        ),
+    }
+}

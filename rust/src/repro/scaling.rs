@@ -1,0 +1,85 @@
+//! §4.3 scaling note: per-PE F/B time vs number of cooperating PEs at
+//! fixed per-PE batch size (paper: 200/194/187/183 ms on mag240M R-GCN
+//! with 1/2/3/4 cooperating GPUs — the decrease is the concave work
+//! curve in action, since the *global* batch grows with P).
+
+use super::Ctx;
+use crate::coop::engine::{run as engine_run, EngineConfig, Mode};
+use crate::costmodel::{estimate, ModelCost, SystemPreset};
+use crate::graph::{datasets, partition};
+use crate::util::csv::Table;
+
+pub fn run(ctx: &Ctx) -> crate::Result<()> {
+    let (ds_name, model, b) = if ctx.quick {
+        ("tiny", ModelCost::gcn(16, 32), 64usize)
+    } else {
+        ("mag-s", ModelCost::rgcn(768, 1024), 1024)
+    };
+    let ds = datasets::build(ds_name, ctx.seed)?;
+    let mut table = Table::new(
+        "F/B per-PE time vs #cooperating PEs (fixed b per PE; paper §4.3)",
+        &["PEs", "global_batch", "S3_per_pe", "fb_ms_est", "fb_vs_1pe"],
+    );
+    let mut fb1 = None;
+    for p in [1usize, 2, 3, 4] {
+        let preset = SystemPreset {
+            name: "A100-family",
+            num_pes: p,
+            gamma: 2000.0,
+            alpha: 600.0,
+            beta: 64.0,
+        };
+        let part = partition::random(&ds.graph, p, ctx.seed);
+        let cfg = EngineConfig {
+            mode: Mode::Cooperative,
+            num_pes: p,
+            batch_per_pe: b.min(ds.train.len() / p).max(16),
+            cache_per_pe: 1024,
+            warmup_batches: 1,
+            measure_batches: if ctx.quick { 2 } else { 6 },
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let r = engine_run(&ds, &part, &cfg);
+        let t = estimate(&r, &preset, &model, ds.feat_dim);
+        let fb = t.fb_ms;
+        if p == 1 {
+            fb1 = Some(fb);
+        }
+        table.push_row(&[
+            p.to_string(),
+            (cfg.batch_per_pe * p).to_string(),
+            format!("{:.0}", r.s[3]),
+            format!("{fb:.2}"),
+            format!("{:.3}", fb / fb1.unwrap()),
+        ]);
+        println!("scaling: P={p} done");
+    }
+    table.write(&ctx.out, "scaling")?;
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fb_per_pe_decreases_with_cooperation() {
+        let dir = std::env::temp_dir().join("coopgnn_scaling_test");
+        let ctx = Ctx { out: dir.clone(), quick: true, ..Default::default() };
+        run(&ctx).unwrap();
+        let csv = std::fs::read_to_string(dir.join("scaling.csv")).unwrap();
+        let ratios: Vec<f64> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.rsplit(',').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(ratios.len(), 4);
+        assert!(
+            ratios[3] < ratios[0],
+            "4-PE coop F/B per PE must be below 1-PE: {ratios:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

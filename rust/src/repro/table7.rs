@@ -1,0 +1,96 @@
+//! Table 7: per-PE sampled vertex/edge/communication counts with random
+//! vs multilevel ("metis") partitioning, Independent vs Cooperative,
+//! LABOR-0, P=4, b=1024 — max over PEs, averaged over batches, reported
+//! in thousands like the paper.
+
+use super::Ctx;
+use crate::coop::engine::{run as engine_run, EngineConfig, Mode};
+use crate::graph::{datasets, partition};
+use crate::util::csv::Table;
+
+pub fn run(ctx: &Ctx) -> crate::Result<()> {
+    let ds_names: &[&str] = if ctx.quick { &["tiny"] } else { &["papers-s", "mag-s"] };
+    let mut table = Table::new(
+        "Table 7: per-PE counts (thousands; max over 4 PEs, avg over batches), LABOR-0, b=1024",
+        &[
+            "dataset", "part", "mode", "S3", "cS3~", "S3~", "E2", "S2", "cS2~", "S2~", "E1",
+            "S1", "dup_L",
+        ],
+    );
+    for ds_name in ds_names {
+        let ds = datasets::build(ds_name, ctx.seed)?;
+        let parts: Vec<(&str, partition::Partition)> = vec![
+            ("random", partition::random(&ds.graph, 4, ctx.seed)),
+            ("metis", partition::multilevel(&ds.graph, 4, ctx.seed)),
+        ];
+        for (pname, part) in &parts {
+            for mode in [Mode::Independent, Mode::Cooperative] {
+                // independent counts don't depend on partition quality —
+                // print them only once (random row), like the paper
+                if mode == Mode::Independent && *pname == "metis" {
+                    continue;
+                }
+                let cfg = EngineConfig {
+                    mode,
+                    num_pes: 4,
+                    batch_per_pe: if ctx.quick { 32 } else { 1024 },
+                    cache_per_pe: 1024,
+                    warmup_batches: 1,
+                    measure_batches: if ctx.quick { 2 } else { 6 },
+                    seed: ctx.seed,
+                    ..Default::default()
+                };
+                let r = engine_run(&ds, part, &cfg);
+                let k = |x: f64| format!("{:.2}", x / 1e3);
+                table.push_row(&[
+                    ds_name.to_string(),
+                    pname.to_string(),
+                    mode.name().to_string(),
+                    k(r.s[3]),
+                    k(r.cross.get(2).copied().unwrap_or(0.0)),
+                    k(r.tilde.get(2).copied().unwrap_or(r.s[3])),
+                    k(r.e[2]),
+                    k(r.s[2]),
+                    k(r.cross.get(1).copied().unwrap_or(0.0)),
+                    k(r.tilde.get(1).copied().unwrap_or(r.s[2])),
+                    k(r.e[1]),
+                    k(r.s[1]),
+                    format!("{:.2}", r.dup_factor),
+                ]);
+                println!("table7: {ds_name} {pname} {} done", mode.name());
+            }
+        }
+    }
+    table.write(&ctx.out, "table7")?;
+    println!("{}", table.to_markdown());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_table7_shapes() {
+        let dir = std::env::temp_dir().join("coopgnn_table7_test");
+        let ctx = Ctx { out: dir.clone(), quick: true, ..Default::default() };
+        run(&ctx).unwrap();
+        let csv = std::fs::read_to_string(dir.join("table7.csv")).unwrap();
+        let rows: Vec<Vec<String>> = csv
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|s| s.to_string()).collect())
+            .collect();
+        assert_eq!(rows.len(), 3, "indep-random, coop-random, coop-metis");
+        let s3 = |r: &Vec<String>| -> f64 { r[3].parse().unwrap() };
+        let cross3 = |r: &Vec<String>| -> f64 { r[4].parse().unwrap() };
+        let indep = &rows[0];
+        let coop_rand = &rows[1];
+        let coop_metis = &rows[2];
+        // coop per-PE deepest-layer work < indep (the core claim)
+        assert!(s3(coop_rand) < s3(indep), "coop S3 {coop_rand:?} vs indep {indep:?}");
+        // partitioning reduces cross traffic
+        assert!(cross3(coop_metis) <= cross3(coop_rand) * 1.05);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,70 @@
+//! PJRT client + executable wrappers over the `xla` crate.
+//!
+//! HLO **text** is the interchange format (see python/compile/aot.py);
+//! `HloModuleProto::from_text_file` reassigns instruction ids so jax≥0.5
+//! modules load cleanly on xla_extension 0.5.1.
+
+use std::path::Path;
+use std::time::Instant;
+
+/// The process-wide PJRT client. Construction is expensive (plugin
+/// init); share one per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> crate::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it (once; executions reuse
+    /// the compiled module).
+    pub fn load_hlo_text(&self, path: &Path) -> crate::Result<Executable> {
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            compile_ms: t.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+}
+
+/// One compiled model-variant executable.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    pub compile_ms: f64,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the flattened output tuple.
+    /// (aot.py lowers with `return_tuple=True`, so the single output is a
+    /// tuple literal which we decompose.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> crate::Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {}: {e:?}", self.name))?;
+        let lit = outs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch result {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("decompose tuple {}: {e:?}", self.name))
+    }
+}

@@ -1,0 +1,143 @@
+//! `artifacts/manifest.json` — the single source of truth for the padded
+//! tensor shapes negotiated between the Rust block builder and the AOT'd
+//! model (see python/compile/aot.py).
+
+use crate::sampling::ShapeCaps;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT'd model configuration.
+#[derive(Clone, Debug)]
+pub struct ArtifactConfig {
+    pub name: String,
+    pub dataset: String,
+    pub batch: usize,
+    pub layers: usize,
+    pub d_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub caps: ShapeCaps,
+    pub lr: f32,
+    pub train_hlo: PathBuf,
+    pub forward_hlo: PathBuf,
+    pub num_train_inputs: usize,
+    pub num_forward_inputs: usize,
+}
+
+impl ArtifactConfig {
+    /// Ordered parameter shapes (must mirror python model.param_shapes).
+    pub fn param_shapes(&self) -> Vec<(String, Vec<usize>)> {
+        let mut shapes = Vec::new();
+        let mut d_prev = self.d_in;
+        for l in 0..self.layers {
+            let d_out = if l == self.layers - 1 { self.classes } else { self.hidden };
+            shapes.push((format!("w{l}"), vec![d_prev, d_out]));
+            shapes.push((format!("b{l}"), vec![d_out]));
+            d_prev = d_out;
+        }
+        shapes
+    }
+
+    pub fn num_params(&self) -> usize {
+        2 * self.layers
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub configs: Vec<ArtifactConfig>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> crate::Result<Manifest> {
+        let text = std::fs::read_to_string(artifacts_dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("manifest.json missing (run `make artifacts`): {e}"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let configs_obj = root
+            .get("configs")
+            .and_then(|c| c.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing configs"))?;
+        let mut configs = Vec::new();
+        for (name, cfg) in configs_obj {
+            let req = |key: &str| -> crate::Result<&Json> {
+                cfg.get(key).ok_or_else(|| anyhow::anyhow!("config {name} missing {key}"))
+            };
+            let dims = req("dims")?;
+            let caps = req("caps")?;
+            let n: Vec<usize> = caps
+                .get("n")
+                .and_then(|n| n.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("caps.n missing"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            configs.push(ArtifactConfig {
+                name: name.clone(),
+                dataset: req("dataset")?.as_str().unwrap_or_default().to_string(),
+                batch: req("batch")?.as_usize().unwrap_or(0),
+                layers: dims.get("layers").and_then(|v| v.as_usize()).unwrap_or(3),
+                d_in: dims.get("d_in").and_then(|v| v.as_usize()).unwrap_or(0),
+                hidden: dims.get("hidden").and_then(|v| v.as_usize()).unwrap_or(0),
+                classes: dims.get("classes").and_then(|v| v.as_usize()).unwrap_or(0),
+                caps: ShapeCaps {
+                    k: caps.get("k").and_then(|v| v.as_usize()).unwrap_or(0),
+                    n,
+                },
+                lr: req("lr")?.as_f64().unwrap_or(1e-3) as f32,
+                train_hlo: artifacts_dir.join(req("train_hlo")?.as_str().unwrap_or_default()),
+                forward_hlo: artifacts_dir
+                    .join(req("forward_hlo")?.as_str().unwrap_or_default()),
+                num_train_inputs: req("num_train_inputs")?.as_usize().unwrap_or(0),
+                num_forward_inputs: req("num_forward_inputs")?.as_usize().unwrap_or(0),
+            });
+        }
+        Ok(Manifest { configs })
+    }
+
+    pub fn get(&self, name: &str) -> crate::Result<&ArtifactConfig> {
+        self.configs.iter().find(|c| c.name == name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact config `{name}` not in manifest; have: {:?}",
+                self.configs.iter().map(|c| &c.name).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Pick the config for (dataset, batch).
+    pub fn for_dataset(&self, dataset: &str, batch: usize) -> crate::Result<&ArtifactConfig> {
+        self.configs
+            .iter()
+            .find(|c| c.dataset == dataset && c.batch == batch)
+            .ok_or_else(|| anyhow::anyhow!("no artifact for dataset {dataset} batch {batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_shapes_mirror_python_convention() {
+        let cfg = ArtifactConfig {
+            name: "t".into(),
+            dataset: "tiny".into(),
+            batch: 32,
+            layers: 3,
+            d_in: 16,
+            hidden: 32,
+            classes: 8,
+            caps: ShapeCaps { k: 40, n: vec![32, 512, 2048, 2048] },
+            lr: 0.01,
+            train_hlo: PathBuf::new(),
+            forward_hlo: PathBuf::new(),
+            num_train_inputs: 35,
+            num_forward_inputs: 19,
+        };
+        let shapes = cfg.param_shapes();
+        assert_eq!(shapes.len(), 6);
+        assert_eq!(shapes[0], ("w0".to_string(), vec![16, 32]));
+        assert_eq!(shapes[4], ("w2".to_string(), vec![32, 8]));
+        assert_eq!(shapes[5], ("b2".to_string(), vec![8]));
+    }
+}

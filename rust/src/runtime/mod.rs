@@ -1,0 +1,11 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the Rust hot path. Python never runs here — `make artifacts`
+//! produced the HLO once; this module compiles it on the PJRT CPU client
+//! at startup and then executes per minibatch.
+
+pub mod manifest;
+pub mod client;
+pub mod tensors;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{ArtifactConfig, Manifest};

@@ -1,0 +1,225 @@
+//! Host-buffer <-> PJRT literal helpers and the padded-batch -> input
+//! literal assembly implementing the flat AOT calling convention
+//! (python/compile/model.py `flat_train_step` / `flat_forward`).
+
+use super::manifest::ArtifactConfig;
+use crate::sampling::PaddedBatch;
+use crate::util::rng::Pcg64;
+
+/// f32 tensor literal of the given dims.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_f32 {dims:?} vs {} elems", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// i32 tensor literal.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> crate::Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "lit_i32 {dims:?} vs {} elems", data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims_i64)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> crate::Result<f32> {
+    let v = to_vec_f32(lit)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
+    Ok(v[0])
+}
+
+/// Model parameters + optimizer state held host-side between steps.
+pub struct ParamState {
+    /// flat f32 buffers in `ArtifactConfig::param_shapes` order.
+    pub params: Vec<Vec<f32>>,
+    pub m: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+    pub step: f32,
+    shapes: Vec<Vec<usize>>,
+}
+
+impl ParamState {
+    /// Glorot-normal init (matching python model.init_params).
+    pub fn init(cfg: &ArtifactConfig, seed: u64) -> ParamState {
+        let mut rng = Pcg64::new(seed);
+        let mut params = Vec::new();
+        let mut shapes = Vec::new();
+        for (_name, shape) in cfg.param_shapes() {
+            let n: usize = shape.iter().product();
+            let buf = if shape.len() == 2 {
+                let scale = (2.0 / (shape[0] + shape[1]) as f64).sqrt();
+                (0..n).map(|_| (rng.next_normal() * scale) as f32).collect()
+            } else {
+                vec![0f32; n]
+            };
+            params.push(buf);
+            shapes.push(shape);
+        }
+        let m = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        let v = params.iter().map(|p| vec![0f32; p.len()]).collect();
+        ParamState { params, m, v, step: 0.0, shapes }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Total scalar parameter count.
+    pub fn num_scalars(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn shapes(&self) -> &[Vec<usize>] {
+        &self.shapes
+    }
+
+    /// Absorb the outputs of a train step: `outs` is the flat output
+    /// tuple (params | m | v | step | loss | correct). Returns
+    /// (loss, correct).
+    pub fn absorb(&mut self, outs: &[xla::Literal]) -> crate::Result<(f32, f32)> {
+        let np = self.params.len();
+        anyhow::ensure!(outs.len() == 3 * np + 3, "expected {} outs, got {}", 3 * np + 3, outs.len());
+        for i in 0..np {
+            self.params[i] = to_vec_f32(&outs[i])?;
+            self.m[i] = to_vec_f32(&outs[np + i])?;
+            self.v[i] = to_vec_f32(&outs[2 * np + i])?;
+        }
+        self.step = scalar_f32(&outs[3 * np])?;
+        let loss = scalar_f32(&outs[3 * np + 1])?;
+        let correct = scalar_f32(&outs[3 * np + 2])?;
+        Ok((loss, correct))
+    }
+}
+
+/// Assemble the flat train-step input literals:
+/// params | m | v | step | feats | blocks | labels | mask | lr.
+pub fn train_inputs(
+    cfg: &ArtifactConfig,
+    state: &ParamState,
+    feats: &[f32],
+    batch: &PaddedBatch,
+    lr: f32,
+) -> crate::Result<Vec<xla::Literal>> {
+    let caps = &cfg.caps;
+    let l_count = cfg.layers;
+    let mut inputs = Vec::with_capacity(cfg.num_train_inputs);
+    for (buf, shape) in state.params.iter().zip(state.shapes()) {
+        inputs.push(lit_f32(buf, shape)?);
+    }
+    for (buf, shape) in state.m.iter().zip(state.shapes()) {
+        inputs.push(lit_f32(buf, shape)?);
+    }
+    for (buf, shape) in state.v.iter().zip(state.shapes()) {
+        inputs.push(lit_f32(buf, shape)?);
+    }
+    inputs.push(lit_scalar(state.step));
+    inputs.push(lit_f32(feats, &[caps.n[l_count], cfg.d_in])?);
+    push_blocks(&mut inputs, caps, batch, l_count)?;
+    inputs.push(lit_i32(&batch.labels, &[caps.n[0]])?);
+    inputs.push(lit_f32(&batch.label_mask, &[caps.n[0]])?);
+    inputs.push(lit_scalar(lr));
+    anyhow::ensure!(
+        inputs.len() == cfg.num_train_inputs,
+        "assembled {} train inputs, manifest says {}",
+        inputs.len(),
+        cfg.num_train_inputs
+    );
+    Ok(inputs)
+}
+
+/// Assemble the flat forward input literals: params | feats | blocks.
+pub fn forward_inputs(
+    cfg: &ArtifactConfig,
+    state: &ParamState,
+    feats: &[f32],
+    batch: &PaddedBatch,
+) -> crate::Result<Vec<xla::Literal>> {
+    let caps = &cfg.caps;
+    let l_count = cfg.layers;
+    let mut inputs = Vec::with_capacity(cfg.num_forward_inputs);
+    for (buf, shape) in state.params.iter().zip(state.shapes()) {
+        inputs.push(lit_f32(buf, shape)?);
+    }
+    inputs.push(lit_f32(feats, &[caps.n[l_count], cfg.d_in])?);
+    push_blocks(&mut inputs, caps, batch, l_count)?;
+    anyhow::ensure!(
+        inputs.len() == cfg.num_forward_inputs,
+        "assembled {} forward inputs, manifest says {}",
+        inputs.len(),
+        cfg.num_forward_inputs
+    );
+    Ok(inputs)
+}
+
+fn push_blocks(
+    inputs: &mut Vec<xla::Literal>,
+    caps: &crate::sampling::ShapeCaps,
+    batch: &PaddedBatch,
+    l_count: usize,
+) -> crate::Result<()> {
+    anyhow::ensure!(batch.caps.n == caps.n && batch.caps.k == caps.k, "batch caps mismatch");
+    for l in 0..l_count {
+        inputs.push(lit_i32(&batch.nbr_idx[l], &[caps.n[l], caps.k])?);
+        inputs.push(lit_f32(&batch.nbr_w[l], &[caps.n[l], caps.k])?);
+        inputs.push(lit_i32(&batch.self_idx[l], &[caps.n[l]])?);
+        inputs.push(lit_f32(&batch.self_w[l], &[caps.n[l]])?);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::ShapeCaps;
+    use std::path::PathBuf;
+
+    fn cfg() -> ArtifactConfig {
+        ArtifactConfig {
+            name: "t".into(),
+            dataset: "tiny".into(),
+            batch: 32,
+            layers: 3,
+            d_in: 16,
+            hidden: 32,
+            classes: 8,
+            caps: ShapeCaps { k: 40, n: vec![32, 512, 2048, 2048] },
+            lr: 0.01,
+            train_hlo: PathBuf::new(),
+            forward_hlo: PathBuf::new(),
+            num_train_inputs: 35,
+            num_forward_inputs: 19,
+        }
+    }
+
+    #[test]
+    fn param_state_init_shapes_and_determinism() {
+        let c = cfg();
+        let a = ParamState::init(&c, 5);
+        let b = ParamState::init(&c, 5);
+        assert_eq!(a.num_params(), 6);
+        assert_eq!(a.params[0].len(), 16 * 32);
+        assert_eq!(a.params[5].len(), 8);
+        assert_eq!(a.params[0], b.params[0]);
+        assert!(a.params[1].iter().all(|&x| x == 0.0), "biases start at zero");
+        assert_eq!(a.num_scalars(), 16 * 32 + 32 + 32 * 32 + 32 + 32 * 8 + 8);
+    }
+
+    #[test]
+    fn literal_shape_checks() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).is_ok());
+        assert!(lit_i32(&[1, 2, 3], &[3, 1]).is_ok());
+    }
+}

@@ -1,0 +1,512 @@
+//! Multi-layer bipartite blocks (MFGs) and their fixed-fanout padded
+//! tensor form — the L3 ↔ L2 contract.
+//!
+//! [`build_mfg`] applies the paper's expansion rule (Eq. 2)
+//! `S^{l+1} = S^l ∪ N_sampled(S^l)` layer by layer. The vertex array of
+//! layer `l+1` lists the layer-`l` vertices **first** (prefix-nesting), so
+//! position `i` refers to the same vertex in every deeper layer — the AOT
+//! model exploits this to chain aggregations without re-gather.
+//!
+//! [`Mfg::pad`] converts an MFG into [`PaddedBatch`]: dense
+//! `[cap_l × k]` neighbor-index/weight tensors (fanout ≤ k always holds
+//! for NS/RW; LABOR can exceed k for a few seeds — overflow edges are
+//! dropped with weight renormalization and counted). TPU rationale: this
+//! turns scatter-style SpMM into regular gather + masked mean, see
+//! DESIGN.md §Hardware-Adaptation.
+
+use super::{Neighborhoods, Sampler};
+use crate::graph::VertexId;
+use std::collections::HashMap;
+
+/// Per-layer edges of an MFG: for dst `i` (position in layer l's vertex
+/// array), `nbr_local[offsets[i]..offsets[i+1]]` are positions in layer
+/// (l+1)'s vertex array.
+#[derive(Clone, Debug, Default)]
+pub struct LayerEdges {
+    pub offsets: Vec<u32>,
+    pub nbr_local: Vec<u32>,
+}
+
+impl LayerEdges {
+    pub fn num_edges(&self) -> usize {
+        self.nbr_local.len()
+    }
+    pub fn of(&self, i: usize) -> &[u32] {
+        &self.nbr_local[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+}
+
+/// A sampled L-layer message-flow graph.
+#[derive(Clone, Debug, Default)]
+pub struct Mfg {
+    /// `layer_vertices[l]` = global ids of S^l; `layer_vertices[l]` is a
+    /// prefix of `layer_vertices[l+1]` (unless `self_pos` overrides).
+    pub layer_vertices: Vec<Vec<VertexId>>,
+    /// `layer_edges[l]` connects layer l (dst) to layer l+1 (src).
+    pub layer_edges: Vec<LayerEdges>,
+    /// Position of dst `i` of layer l inside layer l+1's vertex array.
+    /// `None` ⇒ prefix nesting (position = i). Merged MFGs (block-
+    /// diagonal unions of independent per-PE batches) set this
+    /// explicitly because concatenation breaks prefix nesting.
+    pub self_pos: Option<Vec<Vec<u32>>>,
+}
+
+impl Mfg {
+    pub fn num_layers(&self) -> usize {
+        self.layer_edges.len()
+    }
+    pub fn seeds(&self) -> &[VertexId] {
+        &self.layer_vertices[0]
+    }
+    /// The input-feature vertex set S^L (deepest layer).
+    pub fn input_vertices(&self) -> &[VertexId] {
+        self.layer_vertices.last().unwrap()
+    }
+    /// |S^l| per layer.
+    pub fn vertex_counts(&self) -> Vec<usize> {
+        self.layer_vertices.iter().map(|v| v.len()).collect()
+    }
+    /// |E^l| per layer.
+    pub fn edge_counts(&self) -> Vec<usize> {
+        self.layer_edges.iter().map(|e| e.num_edges()).collect()
+    }
+    /// Total work proxy Σ_l |S^l| (paper Eq. 3 numerator).
+    pub fn total_vertices(&self) -> usize {
+        self.layer_vertices.iter().skip(1).map(|v| v.len()).sum()
+    }
+}
+
+/// Build an MFG by recursive sampling (paper Eq. 2).
+pub fn build_mfg(sampler: &mut Sampler<'_>, seeds: &[VertexId]) -> Mfg {
+    let layers = sampler.cfg.layers;
+    let mut mfg = Mfg::default();
+    mfg.layer_vertices.push(seeds.to_vec());
+    let mut nbh = Neighborhoods::default();
+    for l in 0..layers {
+        let dst = mfg.layer_vertices[l].clone();
+        sampler.sample_layer(&dst, l, &mut nbh);
+        // next layer's vertex array: dst first, then newly-seen sources
+        let mut next: Vec<VertexId> = dst.clone();
+        let mut local: HashMap<VertexId, u32> = HashMap::with_capacity(next.len() * 2);
+        for (i, &v) in next.iter().enumerate() {
+            local.insert(v, i as u32);
+        }
+        let mut edges = LayerEdges::default();
+        edges.offsets.push(0);
+        for i in 0..dst.len() {
+            for &t in nbh.of(i) {
+                let idx = *local.entry(t).or_insert_with(|| {
+                    next.push(t);
+                    (next.len() - 1) as u32
+                });
+                edges.nbr_local.push(idx);
+            }
+            edges.offsets.push(edges.nbr_local.len() as u32);
+        }
+        mfg.layer_vertices.push(next);
+        mfg.layer_edges.push(edges);
+    }
+    mfg
+}
+
+/// Fixed tensor shape caps negotiated with the AOT artifacts
+/// (`artifacts/manifest.json` mirrors these).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShapeCaps {
+    /// fanout k (second dim of the neighbor tensors).
+    pub k: usize,
+    /// vertex-array cap per layer, `n[0]` = seed cap … `n[L]` = input cap.
+    pub n: Vec<usize>,
+}
+
+impl ShapeCaps {
+    pub fn layers(&self) -> usize {
+        self.n.len() - 1
+    }
+}
+
+/// An MFG padded/truncated to fixed shapes, plus batch labels. All
+/// vectors are row-major and sized exactly to the cap so they can be
+/// wrapped into PJRT literals without copies.
+#[derive(Clone, Debug)]
+pub struct PaddedBatch {
+    pub caps: ShapeCaps,
+    /// actual |S^l| before padding (≤ cap after truncation accounting).
+    pub actual: Vec<usize>,
+    /// per layer l: `[cap_l * k]` indices into layer l+1 rows.
+    pub nbr_idx: Vec<Vec<i32>>,
+    /// per layer l: `[cap_l * k]` weights (1/(deg+1) or 0 for padding).
+    pub nbr_w: Vec<Vec<f32>>,
+    /// per layer l: `[cap_l]` self index into layer l+1 rows.
+    pub self_idx: Vec<Vec<i32>>,
+    /// per layer l: `[cap_l]` self weight.
+    pub self_w: Vec<Vec<f32>>,
+    /// `[cap_0]` class labels (0 where masked).
+    pub labels: Vec<i32>,
+    /// `[cap_0]` 1.0 for real seeds, 0.0 for padding.
+    pub label_mask: Vec<f32>,
+    /// diagnostics: vertices/edges dropped by cap truncation.
+    pub truncated_vertices: usize,
+    pub truncated_edges: usize,
+}
+
+impl Mfg {
+    /// Pad to `caps`, reading labels from `labels_of` (global-id ->
+    /// class). Vertices beyond a layer cap are dropped; edges pointing at
+    /// dropped vertices (or beyond the per-dst fanout cap k) are dropped
+    /// and the mean renormalized over survivors.
+    pub fn pad(&self, caps: &ShapeCaps, labels_of: impl Fn(VertexId) -> u16) -> PaddedBatch {
+        assert_eq!(caps.layers(), self.num_layers(), "cap layer mismatch");
+        let layers = self.num_layers();
+        let k = caps.k;
+        let mut out = PaddedBatch {
+            caps: caps.clone(),
+            actual: self.vertex_counts(),
+            nbr_idx: Vec::with_capacity(layers),
+            nbr_w: Vec::with_capacity(layers),
+            self_idx: Vec::with_capacity(layers),
+            self_w: Vec::with_capacity(layers),
+            labels: vec![0; caps.n[0]],
+            label_mask: vec![0.0; caps.n[0]],
+            truncated_vertices: 0,
+            truncated_edges: 0,
+        };
+        for l in 0..layers {
+            let cap_dst = caps.n[l];
+            let cap_src = caps.n[l + 1];
+            let n_dst = self.layer_vertices[l].len().min(cap_dst);
+            out.truncated_vertices += self.layer_vertices[l].len().saturating_sub(cap_dst);
+            let mut nbr_idx = vec![0i32; cap_dst * k];
+            let mut nbr_w = vec![0f32; cap_dst * k];
+            let mut self_idx = vec![0i32; cap_dst];
+            let mut self_w = vec![0f32; cap_dst];
+            let edges = &self.layer_edges[l];
+            for i in 0..n_dst {
+                // survivors: sampled neighbors within both caps
+                let nbrs = edges.of(i);
+                let mut kept = 0usize;
+                for &j in nbrs {
+                    if (j as usize) < cap_src && kept < k {
+                        nbr_idx[i * k + kept] = j as i32;
+                        kept += 1;
+                    } else {
+                        out.truncated_edges += 1;
+                    }
+                }
+                // dst i's own row in layer l+1: position i under prefix
+                // nesting, or the explicit merged position
+                let pos = match &self.self_pos {
+                    Some(sp) => sp[l][i] as usize,
+                    None => i,
+                };
+                if pos >= cap_src {
+                    // self row truncated away: zero the whole row
+                    out.truncated_edges += 1;
+                    self_idx[i] = 0;
+                    self_w[i] = 0.0;
+                    for slot in 0..k {
+                        nbr_w[i * k + slot] = 0.0;
+                    }
+                    continue;
+                }
+                self_idx[i] = pos as i32;
+                let inv = 1.0 / (kept as f32 + 1.0); // +1 for self
+                for slot in 0..kept {
+                    nbr_w[i * k + slot] = inv;
+                }
+                self_w[i] = inv;
+            }
+            out.nbr_idx.push(nbr_idx);
+            out.nbr_w.push(nbr_w);
+            out.self_idx.push(self_idx);
+            out.self_w.push(self_w);
+        }
+        let n0 = self.layer_vertices[0].len().min(caps.n[0]);
+        for i in 0..n0 {
+            out.labels[i] = labels_of(self.layer_vertices[0][i]) as i32;
+            out.label_mask[i] = 1.0;
+        }
+        // the last-layer vertex count drives feature gathering; count its
+        // truncation too
+        out.truncated_vertices +=
+            self.input_vertices().len().saturating_sub(*caps.n.last().unwrap());
+        out
+    }
+
+    /// The input vertices clipped to the feature cap — what the feature
+    /// loader must gather, in row order.
+    pub fn clipped_input_vertices(&self, caps: &ShapeCaps) -> &[VertexId] {
+        let cap = *caps.n.last().unwrap();
+        let vs = self.input_vertices();
+        &vs[..vs.len().min(cap)]
+    }
+}
+
+/// Block-diagonal merge of independently-sampled MFGs — the exact
+/// semantics of Independent Minibatching with gradient averaging: P PEs
+/// compute on their private MFGs and all-reduce; numerically this equals
+/// one step on the concatenated batch (shared vertices appear once *per
+/// PE*, each with its PE's own sampled neighborhood — the duplication the
+/// paper quantifies). Prefix nesting breaks under concatenation, so the
+/// merged MFG carries explicit `self_pos`.
+pub fn merge_mfgs(parts: &[Mfg]) -> Mfg {
+    assert!(!parts.is_empty());
+    let layers = parts[0].num_layers();
+    assert!(parts.iter().all(|m| m.num_layers() == layers));
+    let mut out = Mfg {
+        layer_vertices: vec![Vec::new(); layers + 1],
+        layer_edges: (0..layers).map(|_| LayerEdges { offsets: vec![0], nbr_local: vec![] }).collect(),
+        self_pos: Some(vec![Vec::new(); layers]),
+    };
+    for l in 0..=layers {
+        for m in parts {
+            out.layer_vertices[l].extend_from_slice(&m.layer_vertices[l]);
+        }
+    }
+    for l in 0..layers {
+        // offset of part i inside the merged layer-(l+1) array
+        let mut src_offset = 0u32;
+        for m in parts {
+            let e = &m.layer_edges[l];
+            let n_dst = m.layer_vertices[l].len();
+            for i in 0..n_dst {
+                for &j in e.of(i) {
+                    out.layer_edges[l].nbr_local.push(src_offset + j);
+                }
+                let end = out.layer_edges[l].nbr_local.len() as u32;
+                out.layer_edges[l].offsets.push(end);
+                let pos = match &m.self_pos {
+                    Some(sp) => sp[l][i],
+                    None => i as u32,
+                };
+                out.self_pos.as_mut().unwrap()[l].push(src_offset + pos);
+            }
+            src_offset += m.layer_vertices[l + 1].len() as u32;
+        }
+    }
+    out
+}
+
+/// Estimate safe caps for a (dataset, sampler, batch-size) combo by
+/// sampling `trials` probe batches and taking the max per-layer count
+/// with `margin` headroom. Used by config tooling and tests; the shipped
+/// artifact configs freeze the result in `artifacts/manifest.json`.
+pub fn estimate_caps(
+    sampler_cfg: &super::SamplerConfig,
+    kind: super::SamplerKind,
+    graph: &crate::graph::Csr,
+    train: &[VertexId],
+    batch_size: usize,
+    trials: usize,
+    margin: f64,
+    seed: u64,
+) -> ShapeCaps {
+    use crate::util::rng::Pcg64;
+    let mut rng = Pcg64::new(seed);
+    let mut maxima = vec![0usize; sampler_cfg.layers + 1];
+    // LABOR samples *expected* fanout k; individual seeds can exceed it,
+    // so the padded-tensor k must be the observed max (with margin).
+    let mut max_fanout = sampler_cfg.fanout;
+    for t in 0..trials {
+        let mut s = sampler_cfg.build(kind, graph, seed ^ (t as u64) << 16);
+        let idx = rng.sample_distinct(train.len(), batch_size.min(train.len()));
+        let seeds: Vec<VertexId> = idx.iter().map(|&i| train[i as usize]).collect();
+        let mfg = s.sample_mfg(&seeds);
+        for (l, c) in mfg.vertex_counts().iter().enumerate() {
+            maxima[l] = maxima[l].max(*c);
+        }
+        for e in &mfg.layer_edges {
+            for i in 0..e.offsets.len() - 1 {
+                max_fanout = max_fanout.max(e.of(i).len());
+            }
+        }
+    }
+    ShapeCaps {
+        k: ((max_fanout as f64) * margin).ceil() as usize,
+        n: maxima
+            .iter()
+            .enumerate()
+            .map(|(l, &m)| {
+                if l == 0 {
+                    batch_size
+                } else {
+                    ((m as f64) * margin).ceil() as usize
+                }
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::sampling::{Kappa, SamplerConfig, SamplerKind};
+
+    fn mfg_fixture(seed: u64) -> (crate::graph::Csr, Mfg) {
+        let g = generate::chung_lu(1500, 14.0, 2.4, seed);
+        let cfg = SamplerConfig { layers: 3, fanout: 10, kappa: Kappa::Finite(1), ..Default::default() };
+        let mut s = cfg.build(SamplerKind::Labor0, &g, seed);
+        let seeds: Vec<u32> = (0..64).collect();
+        let mfg = s.sample_mfg(&seeds);
+        (g, mfg)
+    }
+
+    #[test]
+    fn prefix_nesting_invariant() {
+        let (_, mfg) = mfg_fixture(1);
+        for l in 0..mfg.num_layers() {
+            let a = &mfg.layer_vertices[l];
+            let b = &mfg.layer_vertices[l + 1];
+            assert!(b.len() >= a.len());
+            assert_eq!(&b[..a.len()], &a[..], "layer {l} prefix nesting");
+        }
+    }
+
+    #[test]
+    fn monotone_expansion_eq2() {
+        let (_, mfg) = mfg_fixture(2);
+        let counts = mfg.vertex_counts();
+        for l in 0..counts.len() - 1 {
+            assert!(counts[l + 1] >= counts[l], "S^l grows: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn edges_reference_valid_sources() {
+        let (g, mfg) = mfg_fixture(3);
+        for l in 0..mfg.num_layers() {
+            let dst = &mfg.layer_vertices[l];
+            let src = &mfg.layer_vertices[l + 1];
+            let e = &mfg.layer_edges[l];
+            for i in 0..dst.len() {
+                for &j in e.of(i) {
+                    let t = src[j as usize];
+                    assert!(g.neighbors(dst[i]).contains(&t), "edge maps to a real neighbor");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_duplicate_vertices_within_layer() {
+        let (_, mfg) = mfg_fixture(4);
+        for vs in &mfg.layer_vertices {
+            let set: std::collections::HashSet<_> = vs.iter().collect();
+            assert_eq!(set.len(), vs.len());
+        }
+    }
+
+    #[test]
+    fn pad_roundtrip_no_truncation() {
+        let (_, mfg) = mfg_fixture(5);
+        let counts = mfg.vertex_counts();
+        // k cap must exceed LABOR's max realized fanout (expected k=10,
+        // but individual seeds overshoot)
+        let k = 32;
+        let caps = ShapeCaps { k, n: counts.iter().map(|c| c + 8).collect() };
+        let pb = mfg.pad(&caps, |_| 3);
+        assert_eq!(pb.truncated_vertices, 0);
+        assert_eq!(pb.truncated_edges, 0);
+        // weights of each real dst row sum to ~1 (mean over deg+1)
+        for l in 0..mfg.num_layers() {
+            for i in 0..counts[l] {
+                let wsum: f32 = pb.nbr_w[l][i * k..(i + 1) * k].iter().sum::<f32>()
+                    + pb.self_w[l][i];
+                assert!((wsum - 1.0).abs() < 1e-5, "layer {l} row {i} wsum {wsum}");
+            }
+            // padding rows are fully zeroed
+            for i in counts[l]..caps.n[l] {
+                assert_eq!(pb.self_w[l][i], 0.0);
+                assert!(pb.nbr_w[l][i * k..(i + 1) * k].iter().all(|&w| w == 0.0));
+            }
+        }
+        // labels
+        assert_eq!(pb.label_mask.iter().filter(|&&m| m == 1.0).count(), counts[0]);
+        assert!(pb.labels[..counts[0]].iter().all(|&l| l == 3));
+    }
+
+    #[test]
+    fn pad_truncation_renormalizes() {
+        let (_, mfg) = mfg_fixture(6);
+        let counts = mfg.vertex_counts();
+        // squeeze the deepest layer hard
+        let mut n = counts.clone();
+        let full = n[3];
+        n[3] = (full * 2) / 3;
+        let k = 32;
+        let caps = ShapeCaps { k, n };
+        let pb = mfg.pad(&caps, |_| 0);
+        assert!(pb.truncated_vertices > 0 || pb.truncated_edges > 0);
+        // every surviving row still has weights summing to 1 or 0
+        for i in 0..counts[2].min(pb.caps.n[2]) {
+            let wsum: f32 =
+                pb.nbr_w[2][i * k..(i + 1) * k].iter().sum::<f32>() + pb.self_w[2][i];
+            assert!(
+                (wsum - 1.0).abs() < 1e-5 || wsum == 0.0,
+                "renormalized wsum {wsum} at row {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn merged_mfg_preserves_per_part_semantics() {
+        let g = generate::chung_lu(1500, 14.0, 2.4, 8);
+        let cfg = SamplerConfig { layers: 2, fanout: 6, ..Default::default() };
+        // two *independent* RNGs (different batch seeds) like indep PEs
+        let mut s1 = cfg.build(SamplerKind::Labor0, &g, 1);
+        let mut s2 = cfg.build(SamplerKind::Labor0, &g, 2);
+        let m1 = s1.sample_mfg(&(0..32).collect::<Vec<u32>>());
+        let m2 = s2.sample_mfg(&(32..64).collect::<Vec<u32>>());
+        let merged = merge_mfgs(&[m1.clone(), m2.clone()]);
+        // layer sizes are sums
+        for l in 0..=2 {
+            assert_eq!(
+                merged.layer_vertices[l].len(),
+                m1.layer_vertices[l].len() + m2.layer_vertices[l].len()
+            );
+        }
+        // every merged edge maps to the same global vertex pair as the
+        // part it came from
+        let sp = merged.self_pos.as_ref().unwrap();
+        for l in 0..2 {
+            let dst = &merged.layer_vertices[l];
+            let src = &merged.layer_vertices[l + 1];
+            let e = &merged.layer_edges[l];
+            for i in 0..dst.len() {
+                // self position points at the same vertex id
+                assert_eq!(src[sp[l][i] as usize], dst[i], "self pos layer {l} dst {i}");
+                for &j in e.of(i) {
+                    assert!(g.neighbors(dst[i]).contains(&src[j as usize]));
+                }
+            }
+        }
+        // padding the merged MFG keeps weight normalization
+        let caps = ShapeCaps {
+            k: 32,
+            n: merged.vertex_counts().iter().map(|c| c + 4).collect(),
+        };
+        let pb = merged.pad(&caps, |_| 1);
+        assert_eq!(pb.truncated_vertices, 0);
+        for i in 0..merged.layer_vertices[0].len() {
+            let wsum: f32 =
+                pb.nbr_w[0][i * 32..(i + 1) * 32].iter().sum::<f32>() + pb.self_w[0][i];
+            assert!((wsum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn estimate_caps_covers_observations() {
+        let g = generate::chung_lu(1500, 14.0, 2.4, 9);
+        let cfg = SamplerConfig::default();
+        let train: Vec<u32> = (0..800).collect();
+        let caps = estimate_caps(&cfg, SamplerKind::Labor0, &g, &train, 64, 5, 1.2, 7);
+        assert_eq!(caps.n[0], 64);
+        // fresh batches should fit with margin almost surely
+        let mut s = cfg.build(SamplerKind::Labor0, &g, 1234);
+        let seeds: Vec<u32> = (100..164).collect();
+        let mfg = s.sample_mfg(&seeds);
+        let pb = mfg.pad(&caps, |_| 0);
+        assert_eq!(pb.truncated_vertices, 0, "caps {:?} counts {:?}", caps.n, mfg.vertex_counts());
+    }
+}

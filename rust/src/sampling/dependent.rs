@@ -1,0 +1,326 @@
+//! Smoothed dependent minibatching (paper §3.2 and Appendix A.7).
+//!
+//! Every sampler consumes uniform random variates keyed by vertex
+//! (`r_t`, LABOR) or edge (`r_ts`, NS/RW). Ordinarily each minibatch uses
+//! a fresh PRNG seed, so the variates — and hence the sampled
+//! neighborhoods — are independent across batches. The smoothed dependent
+//! scheme instead interpolates between two seeds `z₁, z₂` over a window of
+//! κ batches: for batch `i` in the window, with `c = i/κ`,
+//!
+//! ```text
+//!   n(c)  = cos(cπ/2)·n₁ + sin(cπ/2)·n₂ ,  n₁ = Φ⁻¹(U(hash(z₁,·))),
+//!   r(c)  = Φ(n(c))                        n₂ = Φ⁻¹(U(hash(z₂,·)))
+//! ```
+//!
+//! `n(c)` is standard normal for every `c` (the cos/sin coefficients keep
+//! unit variance), so **each individual batch is sampled from exactly the
+//! same distribution as the independent scheme** — only the *correlation*
+//! between consecutive batches changes. After κ batches, `z₁ ← z₂` and a
+//! fresh `z₂` is drawn, so neighborhoods decorrelate fully every κ steps.
+//! κ=1 degenerates to independent batches; κ=∞ freezes neighborhoods.
+
+use crate::util::mathx::{normal_cdf, normal_icdf};
+use crate::util::rng::{counter_hash2, counter_hash3, u64_to_unit_f64, Pcg64};
+
+/// The batch-dependency parameter κ.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kappa {
+    /// Decorrelate fully every `k` batches (k=1 ⇒ independent batches).
+    Finite(u32),
+    /// Neighborhoods never change (paper's κ=∞ ablation).
+    Infinite,
+}
+
+impl Kappa {
+    pub fn parse(s: &str) -> Option<Kappa> {
+        if s == "inf" || s == "∞" {
+            Some(Kappa::Infinite)
+        } else {
+            s.parse::<u32>().ok().filter(|&k| k >= 1).map(Kappa::Finite)
+        }
+    }
+    pub fn label(&self) -> String {
+        match self {
+            Kappa::Finite(k) => k.to_string(),
+            Kappa::Infinite => "inf".to_string(),
+        }
+    }
+}
+
+/// Stateless-per-query, stateful-per-batch variate generator.
+#[derive(Clone, Debug)]
+pub struct DependentRng {
+    z1: u64,
+    z2: u64,
+    kappa: Kappa,
+    /// batch index within the current κ window.
+    i: u32,
+    /// stream for drawing fresh seeds at window boundaries.
+    seeder: Pcg64,
+    /// cached cos/sin of the current interpolation coefficient.
+    cos_c: f64,
+    sin_c: f64,
+}
+
+impl DependentRng {
+    pub fn new(seed: u64, kappa: Kappa) -> Self {
+        let mut seeder = Pcg64::new(seed);
+        let z1 = seeder.next_u64();
+        let z2 = seeder.next_u64();
+        let mut rng = DependentRng { z1, z2, kappa, i: 0, seeder, cos_c: 1.0, sin_c: 0.0 };
+        rng.refresh_coeffs();
+        rng
+    }
+
+    pub fn kappa(&self) -> Kappa {
+        self.kappa
+    }
+
+    fn refresh_coeffs(&mut self) {
+        let c = match self.kappa {
+            Kappa::Infinite => 0.0,
+            Kappa::Finite(k) => self.i as f64 / k as f64,
+        };
+        let a = c * std::f64::consts::FRAC_PI_2;
+        self.cos_c = a.cos();
+        self.sin_c = a.sin();
+    }
+
+    /// Advance to the next minibatch: step `i`, rotate seeds at window
+    /// boundaries. No-op for κ=∞.
+    pub fn advance(&mut self) {
+        if let Kappa::Finite(k) = self.kappa {
+            self.i += 1;
+            if self.i >= k {
+                self.i = 0;
+                self.z1 = self.z2;
+                self.z2 = self.seeder.next_u64();
+            }
+            self.refresh_coeffs();
+        }
+    }
+
+    /// Interpolate two hash-uniforms into the current window's uniform.
+    #[inline]
+    fn smooth(&self, h1: u64, h2: u64) -> f64 {
+        if self.sin_c == 0.0 {
+            // fast path: pure z1 (κ=∞ always, and i=0 of every window)
+            return u64_to_unit_f64(h1);
+        }
+        let n1 = normal_icdf(clamp_open(u64_to_unit_f64(h1)));
+        let n2 = normal_icdf(clamp_open(u64_to_unit_f64(h2)));
+        normal_cdf(self.cos_c * n1 + self.sin_c * n2)
+    }
+
+    /// Per-vertex variate `r_t` (LABOR family). `domain` separates GNN
+    /// layers so each layer rolls independent coins.
+    #[inline]
+    pub fn vertex_variate(&self, domain: u64, t: u64) -> f64 {
+        let key = domain.wrapping_mul(0x9E37_79B9).wrapping_add(t);
+        self.smooth(counter_hash2(self.z1, key), counter_hash2(self.z2, key))
+    }
+
+    /// Per-edge variate `r_ts` (NS).
+    #[inline]
+    pub fn edge_variate(&self, domain: u64, t: u64, s: u64) -> f64 {
+        self.smooth(
+            counter_hash3(self.z1 ^ domain, t, s),
+            counter_hash3(self.z2 ^ domain, t, s),
+        )
+    }
+
+    /// A sequential stream seeded from the current window state — used by
+    /// the random-walk sampler, which needs many variates per (seed, walk)
+    /// rather than one per edge. Walks stay frozen under κ=∞ and rotate
+    /// smoothly otherwise (the stream seed interpolates discretely: it
+    /// reuses z1 for a `1-i/κ` fraction of walks and z2 for the rest).
+    #[inline]
+    pub fn walk_stream(&self, domain: u64, s: u64, walk: u64) -> Pcg64 {
+        let frac = match self.kappa {
+            Kappa::Infinite => 0.0,
+            Kappa::Finite(k) => self.i as f64 / k as f64,
+        };
+        // walk-index-hash decides which seed this walk currently uses
+        let gate = u64_to_unit_f64(counter_hash3(0xA11CE, s, walk));
+        let z = if gate < frac { self.z2 } else { self.z1 };
+        Pcg64::new(counter_hash3(z ^ domain, s, walk))
+    }
+}
+
+#[inline]
+fn clamp_open(u: f64) -> f64 {
+    u.clamp(1e-12, 1.0 - 1e-12)
+}
+
+/// Per-layer memo for `vertex_variate`: the LABOR samplers query `r_t`
+/// once per *edge examined*, but the value only depends on the vertex —
+/// with average degree `d̄`, memoization removes `(d̄-1)/d̄` of the hash +
+/// Φ/Φ⁻¹ work (the dominant cost of the κ>1 smoothing path; see
+/// EXPERIMENTS.md §Perf). Generation-stamped so `begin_layer` is O(1).
+#[derive(Clone, Debug, Default)]
+pub struct VariateCache {
+    gen: Vec<u32>,
+    val: Vec<f64>,
+    cur: u32,
+}
+
+impl VariateCache {
+    /// Start a new memo window (new layer or new batch).
+    pub fn begin(&mut self, num_vertices: usize) {
+        if self.gen.len() < num_vertices {
+            self.gen.resize(num_vertices, 0);
+            self.val.resize(num_vertices, 0.0);
+        }
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            // stamp wrap: invalidate everything explicitly
+            self.gen.iter_mut().for_each(|g| *g = u32::MAX);
+            self.cur = 1;
+        }
+    }
+
+    /// Memoized `rng.vertex_variate(domain, t)`.
+    ///
+    /// Perf note: memoization only pays when the variate is expensive —
+    /// the κ>1 smoothing path costs two hashes + 2Φ⁻¹ + Φ, while the
+    /// κ=1 / window-start fast path is a single hash (cheaper than the
+    /// memo's two random-access table touches; measured −2.4× when
+    /// memoizing unconditionally, EXPERIMENTS.md §Perf). So the memo is
+    /// bypassed on the fast path.
+    #[inline]
+    pub fn get(&mut self, rng: &DependentRng, domain: u64, t: u64) -> f64 {
+        if rng.sin_c == 0.0 {
+            // fast path: one hash, cheaper than the memo itself
+            return rng.vertex_variate(domain, t);
+        }
+        let i = t as usize;
+        debug_assert!(i < self.gen.len());
+        if self.gen[i] == self.cur {
+            self.val[i]
+        } else {
+            let v = rng.vertex_variate(domain, t);
+            self.gen[i] = self.cur;
+            self.val[i] = v;
+            v
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kappa_parse() {
+        assert_eq!(Kappa::parse("1"), Some(Kappa::Finite(1)));
+        assert_eq!(Kappa::parse("256"), Some(Kappa::Finite(256)));
+        assert_eq!(Kappa::parse("inf"), Some(Kappa::Infinite));
+        assert_eq!(Kappa::parse("0"), None);
+    }
+
+    #[test]
+    fn infinite_kappa_is_frozen() {
+        let mut r = DependentRng::new(5, Kappa::Infinite);
+        let before: Vec<f64> = (0..50).map(|t| r.vertex_variate(0, t)).collect();
+        for _ in 0..100 {
+            r.advance();
+        }
+        let after: Vec<f64> = (0..50).map(|t| r.vertex_variate(0, t)).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn kappa_one_decorrelates_every_batch() {
+        let mut r = DependentRng::new(6, Kappa::Finite(1));
+        let a: Vec<f64> = (0..100).map(|t| r.vertex_variate(0, t)).collect();
+        r.advance();
+        let b: Vec<f64> = (0..100).map(|t| r.vertex_variate(0, t)).collect();
+        let same = a.iter().zip(&b).filter(|(x, y)| x == y).count();
+        assert!(same < 3, "κ=1 batches must be independent, {same} identical");
+    }
+
+    #[test]
+    fn variates_uniform_at_every_phase() {
+        // The smoothing must preserve marginal uniformity for any c.
+        for phase in 0..4 {
+            let mut r = DependentRng::new(7, Kappa::Finite(4));
+            for _ in 0..phase {
+                r.advance();
+            }
+            let n = 20_000u64;
+            let mean: f64 = (0..n).map(|t| r.vertex_variate(1, t)).sum::<f64>() / n as f64;
+            assert!((mean - 0.5).abs() < 0.02, "phase {phase} mean {mean}");
+            // second moment of U(0,1) is 1/3
+            let m2: f64 =
+                (0..n).map(|t| r.vertex_variate(1, t).powi(2)).sum::<f64>() / n as f64;
+            assert!((m2 - 1.0 / 3.0).abs() < 0.02, "phase {phase} m2 {m2}");
+        }
+    }
+
+    #[test]
+    fn correlation_decays_with_phase_distance() {
+        // Within a window, variates at phase i and i+1 must be *more*
+        // correlated for larger κ (slower change).
+        let corr = |kappa: u32| -> f64 {
+            let mut r = DependentRng::new(8, Kappa::Finite(kappa));
+            let a: Vec<f64> = (0..5000).map(|t| r.vertex_variate(0, t)).collect();
+            r.advance();
+            let b: Vec<f64> = (0..5000).map(|t| r.vertex_variate(0, t)).collect();
+            pearson(&a, &b)
+        };
+        let c2 = corr(2);
+        let c16 = corr(16);
+        let c256 = corr(256);
+        assert!(c16 > c2, "κ=16 corr {c16} should exceed κ=2 corr {c2}");
+        assert!(c256 > c16, "κ=256 corr {c256} should exceed κ=16 corr {c16}");
+        assert!(c256 > 0.99, "κ=256 adjacent batches nearly identical, got {c256}");
+    }
+
+    #[test]
+    fn window_rotation_reaches_fresh_seed() {
+        // After exactly κ advances the old z2 becomes z1: variates at the
+        // window start must equal the previous window's c→1 limit trend —
+        // and, critically, after 2κ advances nothing of the original z1
+        // remains (full decorrelation).
+        let mut r = DependentRng::new(9, Kappa::Finite(8));
+        let a: Vec<f64> = (0..2000).map(|t| r.vertex_variate(0, t)).collect();
+        for _ in 0..16 {
+            r.advance();
+        }
+        let b: Vec<f64> = (0..2000).map(|t| r.vertex_variate(0, t)).collect();
+        let c = pearson(&a, &b);
+        assert!(c.abs() < 0.1, "2κ-separated batches must decorrelate, corr {c}");
+    }
+
+    #[test]
+    fn edge_variate_distinct_per_edge() {
+        let r = DependentRng::new(10, Kappa::Finite(1));
+        let v1 = r.edge_variate(0, 1, 2);
+        let v2 = r.edge_variate(0, 2, 1);
+        let v3 = r.edge_variate(1, 1, 2);
+        assert_ne!(v1, v2);
+        assert_ne!(v1, v3);
+        assert_eq!(v1, r.edge_variate(0, 1, 2), "stateless repeatability");
+    }
+
+    #[test]
+    fn walk_stream_frozen_under_infinite_kappa() {
+        let mut r = DependentRng::new(11, Kappa::Infinite);
+        let mut s1 = r.walk_stream(0, 5, 3);
+        r.advance();
+        let mut s2 = r.walk_stream(0, 5, 3);
+        for _ in 0..10 {
+            assert_eq!(s1.next_u64(), s2.next_u64());
+        }
+    }
+
+    fn pearson(a: &[f64], b: &[f64]) -> f64 {
+        let n = a.len() as f64;
+        let ma = a.iter().sum::<f64>() / n;
+        let mb = b.iter().sum::<f64>() / n;
+        let cov: f64 = a.iter().zip(b).map(|(x, y)| (x - ma) * (y - mb)).sum::<f64>() / n;
+        let va: f64 = a.iter().map(|x| (x - ma).powi(2)).sum::<f64>() / n;
+        let vb: f64 = b.iter().map(|y| (y - mb).powi(2)).sum::<f64>() / n;
+        cov / (va * vb).sqrt()
+    }
+}

@@ -1,0 +1,107 @@
+//! Edge-prediction workload generation (paper §4.1, bottom rows of
+//! Figures 3/6).
+//!
+//! "We add reverse edges to the graph making it undirected and sample a
+//! batch of edges. For each of these edges a random negative edge (an
+//! edge that is not part of E) with one endpoint coinciding with the
+//! positive edge is sampled. Then, all of the endpoints of these positive
+//! and negative edges are used as seed vertices."
+
+use crate::graph::{Csr, VertexId};
+use crate::util::rng::Pcg64;
+
+/// One positive edge + its coupled negative edge.
+#[derive(Clone, Copy, Debug)]
+pub struct EdgeSample {
+    pub pos: (VertexId, VertexId),
+    pub neg: (VertexId, VertexId),
+}
+
+/// Sample `batch_size` positive edges with coupled negatives from an
+/// (assumed undirected) graph.
+pub fn sample_edges(g: &Csr, batch_size: usize, rng: &mut Pcg64) -> Vec<EdgeSample> {
+    let n = g.num_vertices() as u64;
+    let mut out = Vec::with_capacity(batch_size);
+    for _ in 0..batch_size {
+        let pos = g.random_edge(rng);
+        // keep one endpoint, resample the other until the pair is a
+        // non-edge (graphs here are sparse, so this terminates fast)
+        let keep_src = rng.next_f64() < 0.5;
+        let anchor = if keep_src { pos.0 } else { pos.1 };
+        let mut neg = pos;
+        for _ in 0..64 {
+            let other = rng.next_below(n) as VertexId;
+            if other == anchor {
+                continue;
+            }
+            let cand = if keep_src { (anchor, other) } else { (other, anchor) };
+            if !g.has_edge(cand.0, cand.1) {
+                neg = cand;
+                break;
+            }
+        }
+        out.push(EdgeSample { pos, neg });
+    }
+    out
+}
+
+/// Collect the distinct endpoints of a batch of edge samples — the seed
+/// set handed to the node samplers.
+pub fn seeds_of(samples: &[EdgeSample]) -> Vec<VertexId> {
+    let mut set = std::collections::HashSet::with_capacity(samples.len() * 4);
+    let mut seeds = Vec::with_capacity(samples.len() * 4);
+    for e in samples {
+        for v in [e.pos.0, e.pos.1, e.neg.0, e.neg.1] {
+            if set.insert(v) {
+                seeds.push(v);
+            }
+        }
+    }
+    seeds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn positives_exist_negatives_do_not() {
+        let g = generate::chung_lu(2000, 10.0, 2.4, 3).to_undirected();
+        let mut rng = Pcg64::new(5);
+        let batch = sample_edges(&g, 128, &mut rng);
+        assert_eq!(batch.len(), 128);
+        let mut neg_ok = 0;
+        for e in &batch {
+            assert!(g.has_edge(e.pos.0, e.pos.1));
+            if !g.has_edge(e.neg.0, e.neg.1) {
+                neg_ok += 1;
+            }
+            // negative shares an endpoint with the positive
+            assert!(
+                e.neg.0 == e.pos.0
+                    || e.neg.0 == e.pos.1
+                    || e.neg.1 == e.pos.0
+                    || e.neg.1 == e.pos.1
+            );
+        }
+        assert!(neg_ok >= 126, "negatives must (almost) always be non-edges: {neg_ok}");
+    }
+
+    #[test]
+    fn seeds_are_distinct_and_cover_endpoints() {
+        let g = generate::chung_lu(1000, 8.0, 2.4, 4).to_undirected();
+        let mut rng = Pcg64::new(6);
+        let batch = sample_edges(&g, 64, &mut rng);
+        let seeds = seeds_of(&batch);
+        let set: std::collections::HashSet<_> = seeds.iter().collect();
+        assert_eq!(set.len(), seeds.len());
+        for e in &batch {
+            assert!(set.contains(&e.pos.0) && set.contains(&e.pos.1));
+            assert!(set.contains(&e.neg.0) && set.contains(&e.neg.1));
+        }
+        // ~4 endpoints per sample minus collisions
+        assert!(seeds.len() <= 64 * 4);
+        assert!(seeds.len() > 64, "should have many distinct endpoints");
+    }
+}

@@ -1,0 +1,393 @@
+//! LABOR sampling (Balin & Çatalyürek 2023; paper Appendix A.1.2).
+//!
+//! **LABOR-0**: every vertex `t` rolls one uniform variate `r_t` per
+//! batch/layer; the edge `(t→s)` is kept iff `r_t ≤ k / deg(s)`. Because
+//! all seeds consult the *same* `r_t` for a shared source `t`, the number
+//! of unique sampled vertices is smaller than NS's in expectation — the
+//! property the paper's concavity arguments amplify.
+//!
+//! **LABOR-***: the importance-sampling variant. Edge `(t→s)` is kept iff
+//! `r_t ≤ min(1, c_s · π_t)` where per-seed normalizers `c_s` solve
+//! `Σ_{t∈N(s)} min(1, c_s π_t) = k` (expected per-seed fanout = k, the
+//! LABOR paper's first-moment constraint) and the importance weights π are
+//! iterated toward the fixed point that concentrates probability on
+//! vertices shared by many seeds: `π_t ∝ sqrt(Σ_{s : t∈N(s)} c_s²)`.
+//! A few rounds suffice. This follows the LABOR paper's construction with
+//! the variance constraint replaced by the first-moment constraint; the
+//! orderings the paper relies on (|LABOR-*| ≤ |LABOR-0| ≤ |NS| unique
+//! vertices) are preserved, which is what Figures 3/6 consume.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): per-vertex variates are memoized per
+//! layer through [`VariateCache`], and LABOR-*'s π/accumulator tables are
+//! dense generation-stamped arrays owned by [`LaborScratch`] — the
+//! original HashMap implementation ran at 4.6 M examined-edges/s; the
+//! dense version removes all per-edge hashing.
+
+use super::dependent::{DependentRng, VariateCache};
+use super::Neighborhoods;
+use crate::graph::{Csr, VertexId};
+
+/// Reusable scratch owned by the sampler (no allocation per batch after
+/// warmup).
+#[derive(Clone, Debug, Default)]
+pub struct LaborScratch {
+    pub variates: VariateCache,
+    /// dense π table, generation stamped.
+    pi_gen: Vec<u32>,
+    pi_val: Vec<f64>,
+    cur: u32,
+    /// vertices touched by the current batch (for O(batch) iteration).
+    touched: Vec<VertexId>,
+    /// per-seed sorted-π buffer for the c_s solver.
+    pis: Vec<f64>,
+    /// suffix-sum buffer for the c_s solver.
+    suffix: Vec<f64>,
+    /// c_s per seed.
+    c_of_seed: Vec<f64>,
+    /// sqrt-accumulator values (reuses pi stamps: valid iff acc_gen==cur).
+    acc_gen: Vec<u32>,
+    acc_val: Vec<f64>,
+}
+
+impl LaborScratch {
+    fn begin(&mut self, n: usize) {
+        if self.pi_gen.len() < n {
+            self.pi_gen.resize(n, 0);
+            self.pi_val.resize(n, 0.0);
+            self.acc_gen.resize(n, 0);
+            self.acc_val.resize(n, 0.0);
+        }
+        self.cur = self.cur.wrapping_add(1);
+        if self.cur == 0 {
+            self.pi_gen.iter_mut().for_each(|g| *g = u32::MAX);
+            self.acc_gen.iter_mut().for_each(|g| *g = u32::MAX);
+            self.cur = 1;
+        }
+        self.touched.clear();
+    }
+
+    #[inline]
+    fn pi(&self, t: VertexId) -> f64 {
+        debug_assert_eq!(self.pi_gen[t as usize], self.cur);
+        self.pi_val[t as usize]
+    }
+}
+
+/// LABOR-0: keep `(t→s)` iff `r_t ≤ k/deg(s)`.
+pub fn sample_labor0(
+    g: &Csr,
+    seeds: &[VertexId],
+    fanout: usize,
+    rng: &DependentRng,
+    layer: usize,
+    scratch: &mut LaborScratch,
+    out: &mut Neighborhoods,
+) {
+    let domain = layer as u64;
+    scratch.variates.begin(g.num_vertices());
+    for &s in seeds {
+        let nbrs = g.neighbors(s);
+        if nbrs.len() <= fanout {
+            out.nbrs.extend_from_slice(nbrs);
+        } else {
+            let thresh = fanout as f64 / nbrs.len() as f64;
+            for &t in nbrs {
+                if scratch.variates.get(rng, domain, t as u64) <= thresh {
+                    out.nbrs.push(t);
+                }
+            }
+        }
+        out.offsets.push(out.nbrs.len() as u32);
+    }
+}
+
+/// LABOR-*: importance-weighted per-vertex thresholds, iterated `rounds`
+/// times over the batch before the final sampling pass.
+pub fn sample_labor_star(
+    g: &Csr,
+    seeds: &[VertexId],
+    fanout: usize,
+    rounds: usize,
+    rng: &DependentRng,
+    layer: usize,
+    scratch: &mut LaborScratch,
+    out: &mut Neighborhoods,
+) {
+    let domain = layer as u64;
+    scratch.begin(g.num_vertices());
+    scratch.variates.begin(g.num_vertices());
+
+    // Initialize π = 1 over the batch's source universe.
+    for &s in seeds {
+        for &t in g.neighbors(s) {
+            let i = t as usize;
+            if scratch.pi_gen[i] != scratch.cur {
+                scratch.pi_gen[i] = scratch.cur;
+                scratch.pi_val[i] = 1.0;
+                scratch.touched.push(t);
+            }
+        }
+    }
+
+    // c_s solver: given the seed's neighbor π values (sorted descending
+    // in `pis`), find c with Σ min(1, c·π_i) = k. deg ≤ k ⇒ take all.
+    fn solve_c(pis: &mut [f64], suffix: &mut Vec<f64>, k: usize) -> f64 {
+        if pis.len() <= k {
+            return f64::INFINITY;
+        }
+        pis.sort_unstable_by(|a, b| b.partial_cmp(a).unwrap());
+        let n = pis.len();
+        suffix.clear();
+        suffix.resize(n + 1, 0.0);
+        for i in (0..n).rev() {
+            suffix[i] = suffix[i + 1] + pis[i];
+        }
+        for m in 0..n {
+            let c = (k as f64 - m as f64) / suffix[m].max(1e-300);
+            let upper_ok = m == 0 || c * pis[m - 1] >= 1.0 - 1e-12;
+            let lower_ok = c * pis[m] <= 1.0 + 1e-12;
+            if c > 0.0 && upper_ok && lower_ok {
+                return c;
+            }
+        }
+        1.0 / pis[n - 1].max(1e-300)
+    }
+
+    scratch.c_of_seed.clear();
+    scratch.c_of_seed.resize(seeds.len(), 0.0);
+    for _round in 0..rounds.max(1) {
+        // 1) solve all c_s under current π
+        for (i, &s) in seeds.iter().enumerate() {
+            let mut pis = std::mem::take(&mut scratch.pis);
+            let mut suffix = std::mem::take(&mut scratch.suffix);
+            pis.clear();
+            for &t in g.neighbors(s) {
+                pis.push(scratch.pi(t));
+            }
+            scratch.c_of_seed[i] = solve_c(&mut pis, &mut suffix, fanout);
+            scratch.pis = pis;
+            scratch.suffix = suffix;
+        }
+        // 2) π_t ← sqrt(Σ_s c_s²) over finite-c seeds touching t
+        let cur = scratch.cur;
+        let mut any = false;
+        for (i, &s) in seeds.iter().enumerate() {
+            let c = scratch.c_of_seed[i];
+            if !c.is_finite() {
+                continue;
+            }
+            any = true;
+            for &t in g.neighbors(s) {
+                let j = t as usize;
+                if scratch.acc_gen[j] != cur {
+                    scratch.acc_gen[j] = cur;
+                    scratch.acc_val[j] = 0.0;
+                }
+                scratch.acc_val[j] += c * c;
+            }
+        }
+        if !any {
+            break; // every seed takes its full neighborhood
+        }
+        let mut max_pi = 0.0f64;
+        for &t in &scratch.touched {
+            let j = t as usize;
+            let v = if scratch.acc_gen[j] == cur { scratch.acc_val[j].sqrt() } else { 0.0 };
+            scratch.pi_val[j] = v;
+            max_pi = max_pi.max(v);
+            // reset acc stamp for the next round
+            scratch.acc_gen[j] = cur.wrapping_sub(1);
+        }
+        if max_pi > 0.0 {
+            for &t in &scratch.touched {
+                scratch.pi_val[t as usize] /= max_pi;
+            }
+        } else {
+            for &t in &scratch.touched {
+                scratch.pi_val[t as usize] = 1.0;
+            }
+        }
+    }
+
+    // Final sampling pass (memoized variates).
+    for (i, &s) in seeds.iter().enumerate() {
+        let nbrs = g.neighbors(s);
+        let c = scratch.c_of_seed[i];
+        if !c.is_finite() || nbrs.len() <= fanout {
+            out.nbrs.extend_from_slice(nbrs);
+        } else {
+            for &t in nbrs {
+                let p = (c * scratch.pi(t)).min(1.0);
+                if scratch.variates.get(rng, domain, t as u64) <= p {
+                    out.nbrs.push(t);
+                }
+            }
+        }
+        out.offsets.push(out.nbrs.len() as u32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::sampling::Kappa;
+    use std::collections::HashMap;
+
+    fn run0(g: &Csr, seeds: &[u32], fanout: usize, seed: u64) -> Neighborhoods {
+        let rng = DependentRng::new(seed, Kappa::Finite(1));
+        let mut scratch = LaborScratch::default();
+        let mut out = Neighborhoods::default();
+        out.offsets.push(0);
+        sample_labor0(g, seeds, fanout, &rng, 0, &mut scratch, &mut out);
+        out
+    }
+
+    fn run_star(g: &Csr, seeds: &[u32], fanout: usize, seed: u64) -> Neighborhoods {
+        let rng = DependentRng::new(seed, Kappa::Finite(1));
+        let mut scratch = LaborScratch::default();
+        let mut out = Neighborhoods::default();
+        out.offsets.push(0);
+        sample_labor_star(g, seeds, fanout, 3, &rng, 0, &mut scratch, &mut out);
+        out
+    }
+
+    #[test]
+    fn labor0_expected_fanout_k() {
+        // E[#sampled per seed] = deg * k/deg = k for deg > k.
+        let g = generate::chung_lu(2000, 30.0, 2.2, 2);
+        let seeds: Vec<u32> = (0..2000u32).filter(|&v| g.degree(v) > 10).take(100).collect();
+        let mut total = 0usize;
+        let trials = 50;
+        for t in 0..trials as u64 {
+            let out = run0(&g, &seeds, 10, 500 + t);
+            total += out.nbrs.len();
+        }
+        let avg_per_seed = total as f64 / trials as f64 / seeds.len() as f64;
+        assert!((avg_per_seed - 10.0).abs() < 0.8, "avg fanout {avg_per_seed}, want ≈10");
+    }
+
+    #[test]
+    fn labor0_small_degree_takes_all() {
+        let g = generate::chung_lu(1000, 6.0, 2.5, 3);
+        let v = (0..1000u32).find(|&v| (1..=5).contains(&g.degree(v))).unwrap();
+        let out = run0(&g, &[v], 10, 1);
+        assert_eq!(out.of(0).len(), g.degree(v));
+    }
+
+    #[test]
+    fn labor0_same_variate_shared_across_seeds() {
+        // If two seeds share a neighbor t with identical thresholds, then
+        // t is sampled by both or neither.
+        let g = generate::chung_lu(500, 30.0, 2.2, 4);
+        let mut found = None;
+        'outer: for a in 0..500u32 {
+            if g.degree(a) <= 10 {
+                continue;
+            }
+            for b in (a + 1)..500u32 {
+                if g.degree(b) == g.degree(a) {
+                    let na: std::collections::HashSet<u32> =
+                        g.neighbors(a).iter().copied().collect();
+                    if let Some(&t) = g.neighbors(b).iter().find(|t| na.contains(t)) {
+                        found = Some((a, b, t));
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        if let Some((a, b, t)) = found {
+            for s in 0..100u64 {
+                let out = run0(&g, &[a, b], 10, s);
+                let in_a = out.of(0).contains(&t);
+                let in_b = out.of(1).contains(&t);
+                assert_eq!(in_a, in_b, "shared coin violated for t={t} seed={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn labor_star_keeps_expected_fanout() {
+        // The first-moment constraint should hold: E[#edges per seed] ≈ k.
+        let g = generate::chung_lu(2000, 30.0, 2.2, 5);
+        let seeds: Vec<u32> = (0..300).collect();
+        let trials = 30;
+        let mut total = 0usize;
+        let mut nseeds_big = 0usize;
+        for t in 0..trials as u64 {
+            let out = run_star(&g, &seeds, 10, 700 + t);
+            for (i, &s) in seeds.iter().enumerate() {
+                if g.degree(s) > 10 {
+                    total += out.of(i).len();
+                    nseeds_big += 1;
+                }
+            }
+        }
+        let avg = total as f64 / nseeds_big as f64;
+        assert!((avg - 10.0).abs() < 1.5, "LABOR-* avg fanout {avg}, want ≈10");
+    }
+
+    #[test]
+    fn labor_star_subsets_real_neighbors() {
+        let g = generate::chung_lu(800, 20.0, 2.3, 6);
+        let seeds: Vec<u32> = (0..100).collect();
+        let out = run_star(&g, &seeds, 10, 11);
+        for (i, &s) in seeds.iter().enumerate() {
+            for &t in out.of(i) {
+                assert!(g.neighbors(s).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_equivalent_to_fresh() {
+        // running twice through the same scratch must equal fresh runs
+        let g = generate::chung_lu(600, 25.0, 2.3, 8);
+        let seeds_a: Vec<u32> = (0..150).collect();
+        let seeds_b: Vec<u32> = (150..300).collect();
+        let rng = DependentRng::new(77, Kappa::Finite(1));
+        let mut scratch = LaborScratch::default();
+        let mut out1 = Neighborhoods::default();
+        out1.offsets.push(0);
+        sample_labor_star(&g, &seeds_a, 10, 3, &rng, 0, &mut scratch, &mut out1);
+        let mut out2 = Neighborhoods::default();
+        out2.offsets.push(0);
+        sample_labor_star(&g, &seeds_b, 10, 3, &rng, 0, &mut scratch, &mut out2);
+        // fresh
+        let mut fresh = LaborScratch::default();
+        let mut out2f = Neighborhoods::default();
+        out2f.offsets.push(0);
+        sample_labor_star(&g, &seeds_b, 10, 3, &rng, 0, &mut fresh, &mut out2f);
+        assert_eq!(out2.nbrs, out2f.nbrs, "scratch reuse changed results");
+    }
+
+    #[test]
+    fn c_solver_monotone_effect() {
+        // Hub vertices (shared by many seeds) are sampled at rates no
+        // lower than under LABOR-0.
+        let g = generate::chung_lu(600, 35.0, 2.15, 7);
+        let seeds: Vec<u32> = (0..300).collect();
+        let mut freq: HashMap<u32, usize> = HashMap::new();
+        for &s in &seeds {
+            for &t in g.neighbors(s) {
+                *freq.entry(t).or_insert(0) += 1;
+            }
+        }
+        let hub = *freq.iter().max_by_key(|(_, &c)| c).unwrap().0;
+        let trials = 60u64;
+        let mut star_hits = 0usize;
+        let mut l0_hits = 0usize;
+        for t in 0..trials {
+            if run_star(&g, &seeds, 10, 900 + t).nbrs.contains(&hub) {
+                star_hits += 1;
+            }
+            if run0(&g, &seeds, 10, 900 + t).nbrs.contains(&hub) {
+                l0_hits += 1;
+            }
+        }
+        assert!(
+            star_hits >= l0_hits,
+            "hub should be at least as likely under LABOR-*: {star_hits} vs {l0_hits}"
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! Evaluation metrics: accuracy and macro-F1 from predicted/true labels.
+//! (The paper reports F1-scores — micro-F1 equals accuracy for
+//! single-label multiclass, so we report accuracy plus macro-F1.)
+
+/// Confusion-derived metrics.
+#[derive(Clone, Debug, Default)]
+pub struct EvalStats {
+    pub n: usize,
+    pub accuracy: f64,
+    pub macro_f1: f64,
+    pub loss_proxy: f64,
+}
+
+/// Compute accuracy + macro-F1.
+pub fn score(num_classes: usize, pairs: &[(u16, u16)]) -> EvalStats {
+    if pairs.is_empty() {
+        return EvalStats::default();
+    }
+    let mut tp = vec![0usize; num_classes];
+    let mut fp = vec![0usize; num_classes];
+    let mut fn_ = vec![0usize; num_classes];
+    let mut correct = 0usize;
+    for &(pred, truth) in pairs {
+        if pred == truth {
+            correct += 1;
+            tp[truth as usize] += 1;
+        } else {
+            fp[pred as usize] += 1;
+            fn_[truth as usize] += 1;
+        }
+    }
+    // macro-F1 over classes that appear (as truth or prediction)
+    let mut f1_sum = 0.0;
+    let mut f1_n = 0usize;
+    for c in 0..num_classes {
+        let denom_p = tp[c] + fp[c];
+        let denom_r = tp[c] + fn_[c];
+        if denom_p + denom_r == 0 {
+            continue;
+        }
+        let p = if denom_p == 0 { 0.0 } else { tp[c] as f64 / denom_p as f64 };
+        let r = if denom_r == 0 { 0.0 } else { tp[c] as f64 / denom_r as f64 };
+        f1_sum += if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) };
+        f1_n += 1;
+    }
+    EvalStats {
+        n: pairs.len(),
+        accuracy: correct as f64 / pairs.len() as f64,
+        macro_f1: if f1_n == 0 { 0.0 } else { f1_sum / f1_n as f64 },
+        loss_proxy: 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let pairs: Vec<(u16, u16)> = (0..10).map(|i| (i % 3, i % 3)).collect();
+        let s = score(3, &pairs);
+        assert_eq!(s.accuracy, 1.0);
+        assert!((s.macro_f1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_wrong() {
+        let pairs: Vec<(u16, u16)> = (0..10).map(|i| ((i % 2) as u16, ((i + 1) % 2) as u16)).collect();
+        let s = score(2, &pairs);
+        assert_eq!(s.accuracy, 0.0);
+        assert_eq!(s.macro_f1, 0.0);
+    }
+
+    #[test]
+    fn known_confusion() {
+        // class 0: tp=2 fp=1 fn=0 -> p=2/3 r=1 f1=0.8
+        // class 1: tp=1 fp=0 fn=1 -> p=1 r=0.5 f1=2/3
+        let pairs = vec![(0u16, 0u16), (0, 0), (0, 1), (1, 1)];
+        let s = score(2, &pairs);
+        assert!((s.accuracy - 0.75).abs() < 1e-12);
+        assert!((s.macro_f1 - (0.8 + 2.0 / 3.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(score(4, &[]).n, 0);
+    }
+}

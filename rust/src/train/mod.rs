@@ -1,0 +1,13 @@
+//! The training loop: samplers → padded blocks → AOT train-step → metrics.
+//!
+//! [`trainer::Trainer`] owns the compiled train/forward executables, the
+//! host-side parameter/optimizer state, the (dependent) sampler, and the
+//! batch drawing. One [`Trainer::step`] = one PJRT execution; Python is
+//! never involved. [`evalx`] adds accuracy / macro-F1 evaluation over the
+//! validation/test splits through the forward executable.
+
+pub mod trainer;
+pub mod evalx;
+
+pub use trainer::{StepStats, Trainer, TrainerOptions};
+pub use evalx::EvalStats;

@@ -1,0 +1,232 @@
+//! The Trainer: everything needed to train the paper's GCN end to end
+//! from Rust through PJRT.
+
+use super::evalx::{score, EvalStats};
+use crate::graph::{Dataset, VertexId};
+use crate::runtime::manifest::ArtifactConfig;
+use crate::runtime::tensors::{forward_inputs, to_vec_f32, train_inputs, ParamState};
+use crate::runtime::{Executable, Manifest, Runtime};
+use crate::sampling::{block, Kappa, Mfg, Sampler, SamplerConfig, SamplerKind};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Timer;
+
+/// Trainer construction options.
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    pub kind: SamplerKind,
+    pub kappa: Kappa,
+    pub fanout: usize,
+    pub seed: u64,
+    /// learning-rate override (None = manifest value).
+    pub lr: Option<f32>,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions {
+            kind: SamplerKind::Labor0,
+            kappa: Kappa::Finite(1),
+            fanout: 10,
+            seed: 0x7EA1,
+            lr: None,
+        }
+    }
+}
+
+/// Per-step statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepStats {
+    pub loss: f32,
+    /// training accuracy on the batch.
+    pub acc: f32,
+    pub sample_ms: f64,
+    pub pad_ms: f64,
+    pub feature_ms: f64,
+    pub exec_ms: f64,
+    pub truncated_vertices: usize,
+    pub truncated_edges: usize,
+    /// |S^L| actually sampled (before padding).
+    pub input_vertices: usize,
+}
+
+/// End-to-end trainer bound to a dataset + artifact config.
+pub struct Trainer<'d> {
+    pub ds: &'d Dataset,
+    pub art: ArtifactConfig,
+    train_exe: Executable,
+    forward_exe: Executable,
+    pub state: ParamState,
+    sampler: Sampler<'d>,
+    seed_rng: Pcg64,
+    lr: f32,
+    feat_buf: Vec<f32>,
+}
+
+impl<'d> Trainer<'d> {
+    /// Load artifacts for `config_name` and bind to `ds`.
+    pub fn new(
+        rt: &Runtime,
+        manifest: &Manifest,
+        config_name: &str,
+        ds: &'d Dataset,
+        opts: &TrainerOptions,
+    ) -> crate::Result<Trainer<'d>> {
+        let art = manifest.get(config_name)?.clone();
+        anyhow::ensure!(
+            art.d_in == ds.feat_dim && art.classes >= ds.num_classes,
+            "artifact {} dims (d_in={}, C={}) incompatible with dataset {} (d={}, C={})",
+            art.name, art.d_in, art.classes, ds.name, ds.feat_dim, ds.num_classes
+        );
+        let train_exe = rt.load_hlo_text(&art.train_hlo)?;
+        let forward_exe = rt.load_hlo_text(&art.forward_hlo)?;
+        let sampler_cfg = SamplerConfig {
+            fanout: opts.fanout,
+            layers: art.layers,
+            kappa: opts.kappa,
+            ..Default::default()
+        };
+        let sampler = sampler_cfg.build(opts.kind, &ds.graph, opts.seed);
+        let state = ParamState::init(&art, opts.seed ^ 0xFACE);
+        let lr = opts.lr.unwrap_or(art.lr);
+        Ok(Trainer {
+            ds,
+            art,
+            train_exe,
+            forward_exe,
+            state,
+            sampler,
+            seed_rng: Pcg64::new(opts.seed ^ 0x5EED),
+            lr,
+            feat_buf: Vec::new(),
+        })
+    }
+
+    /// Draw the next training seed batch (uniform without replacement).
+    pub fn next_seeds(&mut self) -> Vec<VertexId> {
+        let b = self.art.batch.min(self.ds.train.len());
+        self.seed_rng
+            .sample_distinct(self.ds.train.len(), b)
+            .into_iter()
+            .map(|i| self.ds.train[i as usize])
+            .collect()
+    }
+
+    /// One training step on freshly drawn seeds.
+    pub fn step(&mut self) -> crate::Result<StepStats> {
+        let seeds = self.next_seeds();
+        self.step_on_seeds(&seeds)
+    }
+
+    /// One training step on given seeds (samples an MFG internally and
+    /// advances the dependent-batch RNG).
+    pub fn step_on_seeds(&mut self, seeds: &[VertexId]) -> crate::Result<StepStats> {
+        let t = Timer::start();
+        let mfg = self.sampler.sample_mfg(seeds);
+        self.sampler.advance_batch();
+        let sample_ms = t.elapsed_ms();
+        let mut stats = self.step_on_mfg(&mfg)?;
+        stats.sample_ms = sample_ms;
+        Ok(stats)
+    }
+
+    /// One training step on a pre-built MFG (used by the coop/indep
+    /// convergence harnesses that construct global or merged batches).
+    pub fn step_on_mfg(&mut self, mfg: &Mfg) -> crate::Result<StepStats> {
+        let mut stats = StepStats::default();
+        let t = Timer::start();
+        let labels = &self.ds.labels;
+        let batch = mfg.pad(&self.art.caps, |v| labels[v as usize]);
+        stats.pad_ms = t.elapsed_ms();
+        stats.truncated_vertices = batch.truncated_vertices;
+        stats.truncated_edges = batch.truncated_edges;
+        stats.input_vertices = mfg.input_vertices().len();
+
+        let t = Timer::start();
+        self.gather_padded_features(mfg);
+        stats.feature_ms = t.elapsed_ms();
+
+        let t = Timer::start();
+        let inputs = train_inputs(&self.art, &self.state, &self.feat_buf, &batch, self.lr)?;
+        let outs = self.train_exe.run(&inputs)?;
+        let (loss, correct) = self.state.absorb(&outs)?;
+        stats.exec_ms = t.elapsed_ms();
+        stats.loss = loss;
+        let denom = batch.label_mask.iter().sum::<f32>().max(1.0);
+        stats.acc = correct / denom;
+        Ok(stats)
+    }
+
+    fn gather_padded_features(&mut self, mfg: &Mfg) {
+        let cap = *self.art.caps.n.last().unwrap();
+        let d = self.art.d_in;
+        self.feat_buf.clear();
+        self.feat_buf.resize(cap * d, 0.0);
+        let vs = mfg.clipped_input_vertices(&self.art.caps);
+        for (i, &v) in vs.iter().enumerate() {
+            self.ds.write_features(v, &mut self.feat_buf[i * d..(i + 1) * d]);
+        }
+    }
+
+    /// Evaluate accuracy/macro-F1 on `nodes` (validation or test split)
+    /// using sampled neighborhoods with an evaluation-only RNG (the
+    /// training dependent-RNG state is untouched). `eval_seed` fixes the
+    /// sampled neighborhoods across calls for comparability.
+    pub fn evaluate(&mut self, nodes: &[VertexId], eval_seed: u64) -> crate::Result<EvalStats> {
+        let b = self.art.caps.n[0];
+        let sampler_cfg = SamplerConfig {
+            fanout: self.sampler.cfg.fanout,
+            layers: self.art.layers,
+            kappa: Kappa::Finite(1),
+            ..Default::default()
+        };
+        let mut eval_sampler = sampler_cfg.build(self.sampler.kind, &self.ds.graph, eval_seed);
+        let mut pairs: Vec<(u16, u16)> = Vec::with_capacity(nodes.len());
+        for chunk in nodes.chunks(b) {
+            let mfg = eval_sampler.sample_mfg(chunk);
+            let batch = {
+                let labels = &self.ds.labels;
+                mfg.pad(&self.art.caps, |v| labels[v as usize])
+            };
+            self.gather_padded_features(&mfg);
+            let inputs = forward_inputs(&self.art, &self.state, &self.feat_buf, &batch)?;
+            let outs = self.forward_exe.run(&inputs)?;
+            anyhow::ensure!(outs.len() == 1, "forward returns 1 output");
+            let logits = to_vec_f32(&outs[0])?;
+            let c = self.art.classes;
+            for (i, &v) in chunk.iter().enumerate() {
+                let row = &logits[i * c..(i + 1) * c];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j as u16)
+                    .unwrap_or(0);
+                pairs.push((pred, self.ds.label(v)));
+            }
+        }
+        Ok(score(self.ds.num_classes, &pairs))
+    }
+
+    /// Build one cooperative global MFG: sampling the global batch with
+    /// the shared-coin sampler — exactly the union Algorithm 1 produces
+    /// (see coop_sampler tests).
+    pub fn sample_global_mfg(&mut self, seeds: &[VertexId]) -> Mfg {
+        let mfg = self.sampler.sample_mfg(seeds);
+        self.sampler.advance_batch();
+        mfg
+    }
+
+    /// Build a merged block-diagonal MFG of `p` independent sub-batches
+    /// (Independent Minibatching semantics: per-PE RNG, duplicates kept).
+    pub fn sample_indep_merged_mfg(&mut self, seeds: &[VertexId], p: usize, batch_seed: u64) -> Mfg {
+        let per = seeds.len() / p;
+        let cfg = self.sampler.cfg;
+        let parts: Vec<Mfg> = (0..p)
+            .map(|i| {
+                let mut s = cfg.build(self.sampler.kind, &self.ds.graph, batch_seed ^ ((i as u64 + 1) << 32));
+                s.sample_mfg(&seeds[i * per..(i + 1) * per])
+            })
+            .collect();
+        block::merge_mfgs(&parts)
+    }
+}

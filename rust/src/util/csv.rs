@@ -1,0 +1,91 @@
+//! Tiny CSV/markdown table writers for the repro harnesses. Every paper
+//! table/figure harness emits (a) a machine-readable CSV and (b) a
+//! human-readable markdown table into `results/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// A rectangular table with a header row.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push_row<S: ToString>(&mut self, row: &[S]) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row.iter().map(|s| s.to_string()).collect());
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        writeln!(out, "{}", self.header.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","))
+            .unwrap();
+        for r in &self.rows {
+            writeln!(out, "{}", r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(",")).unwrap();
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "### {}\n", self.title).unwrap();
+        writeln!(out, "| {} |", self.header.join(" | ")).unwrap();
+        writeln!(out, "|{}|", vec!["---"; self.header.len()].join("|")).unwrap();
+        for r in &self.rows {
+            writeln!(out, "| {} |", r.join(" | ")).unwrap();
+        }
+        out
+    }
+
+    /// Write `<dir>/<stem>.csv` and `<dir>/<stem>.md`.
+    pub fn write(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.csv")))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        let mut f = std::fs::File::create(dir.join(format!("{stem}.md")))?;
+        f.write_all(self.to_markdown().as_bytes())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(&["1", "x,y"]);
+        let csv = t.to_csv();
+        assert!(csv.contains("a,b"));
+        assert!(csv.contains("\"x,y\""));
+        let md = t.to_markdown();
+        assert!(md.contains("| a | b |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.push_row(&["1"]);
+    }
+}

@@ -1,0 +1,121 @@
+//! Scalar math needed by the smoothed dependent sampler (Appendix A.7):
+//! the standard-normal CDF Φ (to turn interpolated Gaussians back into
+//! uniforms, `r = Φ(n(c))`) and its inverse (to turn hash-uniforms into
+//! Gaussians without Box–Muller pairs).
+
+/// Error function, Abramowitz & Stegun 7.1.26 (|ε| ≤ 1.5e-7) with the
+/// sign-symmetry extension. Accurate enough for sampling thresholds.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    const A1: f64 = 0.254829592;
+    const A2: f64 = -0.284496736;
+    const A3: f64 = 1.421413741;
+    const A4: f64 = -1.453152027;
+    const A5: f64 = 1.061405429;
+    const P: f64 = 0.3275911;
+    let t = 1.0 / (1.0 + P * x);
+    let y = 1.0 - (((((A5 * t + A4) * t) + A3) * t + A2) * t + A1) * t * (-x * x).exp();
+    sign * y
+}
+
+/// Standard normal CDF Φ(x) = P(Z ≤ x).
+#[inline]
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation,
+/// |relative ε| < 1.15e-9 over (0,1)).
+pub fn normal_icdf(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-6); // A&S 7.1.26 has |ε| ≤ 1.5e-7
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((erf(3.0) - 0.9999779095).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cdf_symmetry_and_bounds() {
+        for i in -40..=40 {
+            let x = i as f64 * 0.1;
+            let p = normal_cdf(x);
+            assert!((0.0..=1.0).contains(&p));
+            assert!((p + normal_cdf(-x) - 1.0).abs() < 1e-6);
+        }
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-6);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 2e-4);
+    }
+
+    #[test]
+    fn icdf_inverts_cdf() {
+        for i in 1..100 {
+            let p = i as f64 / 100.0;
+            let x = normal_icdf(p);
+            assert!((normal_cdf(x) - p).abs() < 2e-4, "p={p} x={x}");
+        }
+    }
+
+    #[test]
+    fn icdf_tails_monotone() {
+        let mut prev = f64::NEG_INFINITY;
+        for i in 1..10_000 {
+            let p = i as f64 / 10_000.0;
+            let x = normal_icdf(p);
+            assert!(x >= prev, "monotone at p={p}");
+            prev = x;
+        }
+    }
+}

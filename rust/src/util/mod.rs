@@ -1,0 +1,16 @@
+//! Small zero-dependency utilities shared across the crate: deterministic
+//! RNG (stream and counter-based), normal/erf math for the smoothed
+//! dependent sampler, timing/statistics helpers for the bench harness, and
+//! a tiny property-testing loop used by the test suite (the offline build
+//! has no `proptest`).
+
+pub mod rng;
+pub mod mathx;
+pub mod stats;
+pub mod propcheck;
+pub mod csv;
+pub mod json;
+
+pub use rng::{Pcg64, counter_hash2, counter_hash3, u64_to_unit_f64};
+pub use mathx::{erf, normal_cdf, normal_icdf};
+pub use stats::{Timer, Summary};

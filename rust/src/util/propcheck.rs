@@ -1,0 +1,59 @@
+//! Minimal property-testing loop (offline stand-in for `proptest`).
+//!
+//! A property is a closure over a seeded [`Pcg64`]; [`check`] runs it for
+//! `cases` independent seeds and reports the first failing seed so a
+//! failure is reproducible by pinning that seed in a regression test.
+
+use super::rng::Pcg64;
+
+/// Run `prop` for `cases` random cases. Panics with the failing case seed
+/// on the first violation. `base_seed` pins the whole run.
+pub fn check<F>(name: &str, base_seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg64) -> std::result::Result<(), String>,
+{
+    let mut meta = Pcg64::new(base_seed);
+    for case in 0..cases {
+        let case_seed = meta.next_u64();
+        let mut rng = Pcg64::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed on case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Helper: assert-like error constructor for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 1, 25, |rng| {
+            count += 1;
+            let x = rng.next_f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("out of range {x}"))
+            }
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `bad`")]
+    fn failing_property_panics_with_seed() {
+        check("bad", 2, 10, |_rng| Err("always fails".into()));
+    }
+}

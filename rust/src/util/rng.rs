@@ -1,0 +1,242 @@
+//! Deterministic random number generation.
+//!
+//! Two flavors are needed by the paper's algorithms:
+//!
+//! * **Stream RNG** ([`Pcg64`]) — an ordinary sequential generator used for
+//!   seed permutation, graph generation, weight init, etc.
+//! * **Counter-based RNG** ([`counter_hash2`] / [`counter_hash3`]) — a
+//!   stateless hash `(seed, key...) -> u64`. LABOR requires that the *same*
+//!   random variate `r_t` be produced for a source vertex `t` regardless of
+//!   which seed vertex reached it, and the smoothed dependent sampler of
+//!   Appendix A.7 requires re-producing `n_ts` for a fixed seed `z` at any
+//!   time. A counter-based construction gives both properties for free.
+
+/// PCG-XSH-RR-like 64-bit generator (splitmix64-stepped, xorshift-mixed).
+/// Deterministic, seedable, `Clone` — good enough statistical quality for
+/// simulation work while staying dependency-free.
+#[derive(Clone, Debug)]
+pub struct Pcg64 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg64 {
+    /// Create a generator from a seed; distinct seeds give independent
+    /// streams in practice (seeded through splitmix64 twice).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let state = splitmix64(&mut sm);
+        let inc = splitmix64(&mut sm) | 1;
+        Pcg64 { state, inc }
+    }
+
+    /// Derive a child stream; used to give each PE / each epoch its own
+    /// independent generator deterministically.
+    pub fn fork(&mut self, tag: u64) -> Self {
+        Pcg64::new(self.next_u64() ^ mix(tag))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // LCG step + output mix (PCG style).
+        let old = self.state;
+        self.state = old
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(self.inc);
+        mix(old)
+    }
+
+    /// Uniform in `[0, 1)`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        u64_to_unit_f64(self.next_u64())
+    }
+
+    /// Uniform in `[0, 1)` as f32.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire-style rejection-free is overkill;
+    /// modulo bias is negligible for n << 2^64 but we debias anyway).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply method (unbiased enough for all practical n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Standard normal via Box–Muller (single value; second is discarded —
+    /// the stream use-cases here are not throughput critical).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let u2 = self.next_f64();
+        let r = (-2.0 * (1.0 - u1).max(f64::MIN_POSITIVE).ln()).sqrt();
+        r * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (floyd's algorithm for
+    /// k << n; falls back to shuffle otherwise).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<u32> {
+        assert!(k <= n);
+        if k * 4 >= n {
+            let mut all: Vec<u32> = (0..n as u32).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            return all;
+        }
+        let mut seen = std::collections::HashSet::with_capacity(k * 2);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.next_below(j as u64 + 1) as u32;
+            if seen.insert(t) {
+                out.push(t);
+            } else {
+                seen.insert(j as u32);
+                out.push(j as u32);
+            }
+        }
+        out
+    }
+}
+
+/// splitmix64 step — used for seeding only.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Strong 64-bit mixer (xxhash/murmur finalizer family).
+#[inline]
+pub fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 33)).wrapping_mul(0xFF51AFD7ED558CCD);
+    z = (z ^ (z >> 33)).wrapping_mul(0xC4CEB9FE1A85EC53);
+    z ^ (z >> 33)
+}
+
+/// Counter-based hash of `(seed, a)` — the per-vertex variate generator
+/// used by LABOR (`r_t = U(hash(z, t))`).
+#[inline]
+pub fn counter_hash2(seed: u64, a: u64) -> u64 {
+    mix(seed ^ a.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(31))
+}
+
+/// Counter-based hash of `(seed, a, b)` — the per-edge variate generator
+/// used by NS (`r_ts = U(hash(z, t, s))`).
+#[inline]
+pub fn counter_hash3(seed: u64, a: u64, b: u64) -> u64 {
+    let h = seed
+        ^ a.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(31)
+        ^ b.wrapping_mul(0xC2B2AE3D27D4EB4F).rotate_left(17);
+    mix(h)
+}
+
+/// Map a u64 to a uniform f64 in `[0, 1)` using the top 53 bits.
+#[inline]
+pub fn u64_to_unit_f64(x: u64) -> f64 {
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn unit_interval() {
+        let mut r = Pcg64::new(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            let y = r.next_f32();
+            assert!((0.0..1.0).contains(&y));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Pcg64::new(9);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = r.next_below(10) as usize;
+            assert!(v < 10);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn counter_hash_is_stateless_and_keyed() {
+        assert_eq!(counter_hash2(1, 2), counter_hash2(1, 2));
+        assert_ne!(counter_hash2(1, 2), counter_hash2(1, 3));
+        assert_ne!(counter_hash2(1, 2), counter_hash2(2, 2));
+        assert_ne!(counter_hash3(1, 2, 3), counter_hash3(1, 3, 2));
+    }
+
+    #[test]
+    fn counter_hash_uniformity_rough() {
+        // Mean of mapped uniforms should be ~0.5.
+        let n = 100_000u64;
+        let mean: f64 = (0..n)
+            .map(|i| u64_to_unit_f64(counter_hash2(123, i)))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg64::new(5);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.03, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn sample_distinct_props() {
+        let mut r = Pcg64::new(11);
+        for &(n, k) in &[(100usize, 5usize), (50, 50), (1000, 100), (10, 9)] {
+            let s = r.sample_distinct(n, k);
+            assert_eq!(s.len(), k);
+            let set: std::collections::HashSet<_> = s.iter().collect();
+            assert_eq!(set.len(), k, "distinct");
+            assert!(s.iter().all(|&x| (x as usize) < n));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,121 @@
+//! Engine-level integration: Cooperative vs Independent across datasets,
+//! partitioners, and PE counts — the invariants behind Tables 4–7.
+
+use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
+use coopgnn::costmodel::{estimate, ModelCost, PRESETS};
+use coopgnn::graph::{datasets, partition};
+use coopgnn::sampling::{Kappa, SamplerKind};
+
+fn cfg(mode: Mode, pes: usize, b: usize) -> EngineConfig {
+    EngineConfig {
+        mode,
+        num_pes: pes,
+        batch_per_pe: b,
+        cache_per_pe: 500,
+        warmup_batches: 2,
+        measure_batches: 4,
+        seed: 99,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn coop_advantage_grows_with_pe_count() {
+    // Theorem 3.1 consequence: at fixed global batch, indep per-PE work
+    // tracks |S^L(B/P)| while coop tracks |S^L(B)|/P — the gap widens
+    // with P.
+    let ds = datasets::build("tiny", 4).unwrap();
+    let global = 128usize;
+    let mut gaps = Vec::new();
+    for p in [2usize, 4, 8] {
+        let part = partition::random(&ds.graph, p, 1);
+        let ri = engine_run(&ds, &part, &cfg(Mode::Independent, p, global / p));
+        let rc = engine_run(&ds, &part, &cfg(Mode::Cooperative, p, global / p));
+        let gap = ri.s[3] / rc.s[3].max(1.0);
+        gaps.push(gap);
+    }
+    assert!(gaps[0] > 1.0, "coop must do less per-PE work: {gaps:?}");
+    assert!(
+        gaps[2] > gaps[0],
+        "advantage must grow with P (paper Table 5 shape): {gaps:?}"
+    );
+}
+
+#[test]
+fn every_sampler_supports_both_modes() {
+    let ds = datasets::build("tiny", 5).unwrap();
+    let part = partition::random(&ds.graph, 4, 2);
+    for kind in SamplerKind::ALL {
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            let mut c = cfg(mode, 4, 16);
+            c.kind = kind;
+            c.sampler.rw.num_walks = 10;
+            let r = engine_run(&ds, &part, &c);
+            assert!(r.s[3] > 0.0, "{kind:?}/{mode:?} produced no work");
+        }
+    }
+}
+
+#[test]
+fn metis_partition_cuts_coop_cross_traffic_and_estimated_time() {
+    let ds = datasets::build("conv", 6).unwrap();
+    let rand_p = partition::random(&ds.graph, 4, 3);
+    let metis_p = partition::multilevel(&ds.graph, 4, 3);
+    let rr = engine_run(&ds, &rand_p, &cfg(Mode::Cooperative, 4, 128));
+    let rm = engine_run(&ds, &metis_p, &cfg(Mode::Cooperative, 4, 128));
+    let cross_r: f64 = rr.cross.iter().sum();
+    let cross_m: f64 = rm.cross.iter().sum();
+    assert!(
+        cross_m < cross_r,
+        "multilevel must cut cross ids: {cross_m} vs {cross_r}"
+    );
+    // Note: total *time* can go either way — partitioning trades fabric
+    // traffic against per-PE load imbalance (the paper observes exactly
+    // this on mag240M, Appendix A.6 obs. 5) — so we only require that
+    // the communication term shrank and the estimates stay finite.
+    let model = ModelCost::gcn(ds.feat_dim, 64);
+    let tr = estimate(&rr, &PRESETS[0], &model, ds.feat_dim);
+    let tm = estimate(&rm, &PRESETS[0], &model, ds.feat_dim);
+    assert!(tm.total_ms().is_finite() && tr.total_ms().is_finite());
+}
+
+#[test]
+fn dependent_kappa_mass_effect_on_coop_caches() {
+    // Figure 5b: κ helps cooperative caching too. Needs a graph whose
+    // per-batch working set does not cover the per-PE vertex universe
+    // (conv/tiny are too small — every row ends up cached regardless).
+    let ds = datasets::build("flickr-s", 7).unwrap();
+    let part = partition::random(&ds.graph, 4, 4);
+    let mut c1 = cfg(Mode::Cooperative, 4, 1024);
+    // per-PE cache slightly above the per-PE working set (~|S³(4b)|/4):
+    // below it LRU scan-thrash pins the miss rate at 1 for every κ
+    c1.cache_per_pe = ds.cache_size * 3 / 10;
+    c1.warmup_batches = 4;
+    c1.measure_batches = 10;
+    let mut c256 = c1.clone();
+    c256.sampler.kappa = Kappa::Finite(256);
+    let r1 = engine_run(&ds, &part, &c1);
+    let r256 = engine_run(&ds, &part, &c256);
+    assert!(
+        r256.cache_miss_rate < r1.cache_miss_rate,
+        "κ=256 coop miss {} must beat κ=1 {}",
+        r256.cache_miss_rate,
+        r1.cache_miss_rate
+    );
+}
+
+#[test]
+fn indep_mode_has_no_fabric_traffic() {
+    let ds = datasets::build("tiny", 8).unwrap();
+    let part = partition::random(&ds.graph, 4, 5);
+    let r = engine_run(&ds, &part, &cfg(Mode::Independent, 4, 32));
+    assert!(r.cross.iter().all(|&c| c == 0.0));
+    assert_eq!(r.feat_fabric_rows, 0.0);
+    assert!(r.dup_factor >= 1.0);
+}
+
+#[test]
+fn presets_cover_paper_systems() {
+    assert_eq!(PRESETS.len(), 3);
+    assert!(PRESETS.iter().any(|p| p.num_pes == 16));
+}

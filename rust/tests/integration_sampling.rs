@@ -1,0 +1,94 @@
+//! Cross-module integration tests: datasets × samplers × blocks, and the
+//! cap-planning consistency with the AOT manifest configs.
+
+use coopgnn::graph::datasets;
+use coopgnn::sampling::{block, Kappa, SamplerConfig, SamplerKind};
+
+/// Print measured shape caps for the artifact configs (run with
+/// `cargo test --release --test integration_sampling -- --nocapture caps_report`).
+/// The numbers frozen in python/compile/aot.py CONFIGS must dominate these.
+#[test]
+fn caps_report() {
+    for (ds_name, batch) in
+        [("tiny", 32), ("conv", 256), ("conv", 1024), ("papers-s", 256), ("papers-s", 1024)]
+    {
+        let ds = datasets::build(ds_name, 1).unwrap();
+        let cfg = SamplerConfig { kappa: Kappa::Finite(1), ..Default::default() };
+        // Bound caps with the least concave sampler (NS) and the
+        // trainer's sampler (LABOR-0).
+        for kind in [SamplerKind::Neighbor, SamplerKind::Labor0] {
+            let train: Vec<u32> = if ds.train.len() >= batch {
+                ds.train.clone()
+            } else {
+                (0..ds.graph.num_vertices() as u32).collect()
+            };
+            let caps = block::estimate_caps(&cfg, kind, &ds.graph, &train, batch, 5, 1.25, 42);
+            println!("caps {ds_name} b={batch} {}: k={} n={:?}", kind.name(), caps.k, caps.n);
+        }
+    }
+}
+
+#[test]
+fn mfg_on_every_registry_dataset_small_batch() {
+    for spec in datasets::SPECS.iter().filter(|s| s.num_vertices <= 100_000) {
+        let ds = datasets::build(spec.name, 3).unwrap();
+        let cfg = SamplerConfig::default();
+        let mut s = cfg.build(SamplerKind::Labor0, &ds.graph, 9);
+        let seeds: Vec<u32> = ds.train.iter().take(64).copied().collect();
+        if seeds.is_empty() {
+            continue;
+        }
+        let mfg = s.sample_mfg(&seeds);
+        assert_eq!(mfg.num_layers(), 3);
+        assert!(mfg.total_vertices() >= seeds.len());
+    }
+}
+
+#[test]
+fn work_per_seed_decreases_with_batch_size_theorem31() {
+    // Empirical Theorem 3.1 on a registry dataset: E|S^3|/|S^0| is
+    // monotone nonincreasing in |S^0|.
+    let ds = datasets::build("tiny", 5).unwrap();
+    let cfg = SamplerConfig::default();
+    let n = ds.graph.num_vertices();
+    let mut prev = f64::INFINITY;
+    for &b in &[16usize, 64, 256, 1024] {
+        let mut acc = 0.0;
+        let trials = 8;
+        for t in 0..trials {
+            let mut s = cfg.build(SamplerKind::Labor0, &ds.graph, 100 + t);
+            let seeds: Vec<u32> = (0..n as u32).step_by(n / b).take(b).collect();
+            let mfg = s.sample_mfg(&seeds);
+            acc += mfg.input_vertices().len() as f64 / seeds.len() as f64;
+        }
+        let ratio = acc / trials as f64;
+        assert!(
+            ratio <= prev * 1.05,
+            "work ratio must not increase: b={b} ratio={ratio} prev={prev}"
+        );
+        prev = ratio;
+    }
+}
+
+#[test]
+fn dependent_batches_overlap_more_than_independent() {
+    // κ=64 consecutive batches share far more of S^3 than κ=1 batches —
+    // the locality mechanism behind Figure 5.
+    let ds = datasets::build("tiny", 7).unwrap();
+    let overlap = |kappa: Kappa| -> f64 {
+        let cfg = SamplerConfig { kappa, ..Default::default() };
+        let mut s = cfg.build(SamplerKind::Labor0, &ds.graph, 11);
+        let seeds: Vec<u32> = ds.train.iter().take(64).copied().collect();
+        let a: std::collections::HashSet<u32> =
+            s.sample_mfg(&seeds).input_vertices().iter().copied().collect();
+        s.advance_batch();
+        let b: std::collections::HashSet<u32> =
+            s.sample_mfg(&seeds).input_vertices().iter().copied().collect();
+        a.intersection(&b).count() as f64 / a.len().max(1) as f64
+    };
+    let o1 = overlap(Kappa::Finite(1));
+    let o64 = overlap(Kappa::Finite(64));
+    let oinf = overlap(Kappa::Infinite);
+    assert!(o64 > o1, "κ=64 overlap {o64} must beat κ=1 {o1}");
+    assert!(oinf > 0.999, "κ=∞ batches identical, got {oinf}");
+}

@@ -1,0 +1,75 @@
+//! Training-path integration on the `conv` dataset (the convergence-study
+//! twin): κ-dependence leaves single-batch distributions intact, merged
+//! independent batches train, and the full repro harness plumbing works
+//! end to end in quick mode.
+
+use coopgnn::graph::datasets;
+use coopgnn::repro::{self, Ctx};
+use coopgnn::runtime::{Manifest, Runtime};
+use coopgnn::sampling::Kappa;
+use coopgnn::train::{Trainer, TrainerOptions};
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(Box::leak(p.into_boxed_path()))
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn kappa_dependent_training_converges_like_independent() {
+    // Table 3's central claim, scaled down: κ=64 training quality is
+    // within noise of κ=1 on a short run.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let manifest = Manifest::load(dir).unwrap();
+    let ds = datasets::build("tiny", 9).unwrap();
+    let mut accs = Vec::new();
+    for kappa in [Kappa::Finite(1), Kappa::Finite(64)] {
+        let opts = TrainerOptions { kappa, lr: Some(0.02), seed: 31, ..Default::default() };
+        let mut t = Trainer::new(&rt, &manifest, "tiny-b32", &ds, &opts).unwrap();
+        for _ in 0..120 {
+            t.step().unwrap();
+        }
+        accs.push(t.evaluate(&ds.val, 5).unwrap().accuracy);
+    }
+    let (a1, a64) = (accs[0], accs[1]);
+    assert!(
+        (a1 - a64).abs() < 0.12,
+        "κ=64 must not derail convergence: κ=1 {a1:.3} vs κ=64 {a64:.3}"
+    );
+}
+
+#[test]
+fn quick_repro_harnesses_run_end_to_end() {
+    // Smoke the whole harness plumbing (fig3/fig5/table4/table7/scaling
+    // already covered by their own unit tests; here: table3 + fig9 which
+    // need PJRT).
+    let Some(dir) = artifacts_dir() else { return };
+    let out = std::env::temp_dir().join("coopgnn_repro_quick");
+    let ctx = Ctx {
+        out: out.clone(),
+        quick: true,
+        seed: 0xBEEF,
+        artifacts: dir.to_path_buf(),
+    };
+    repro::run("table3", &ctx).unwrap();
+    assert!(out.join("table3.csv").exists());
+    assert!(out.join("fig4.csv").exists());
+    repro::run("fig9", &ctx).unwrap();
+    assert!(out.join("fig9.csv").exists());
+    // coop and indep finals should both exist and be sane
+    let fig9 = std::fs::read_to_string(out.join("fig9.csv")).unwrap();
+    let finals: Vec<f64> = fig9
+        .lines()
+        .skip(1)
+        .filter_map(|l| l.split(',').nth(3)?.parse().ok())
+        .collect();
+    assert!(!finals.is_empty());
+    assert!(finals.iter().all(|a| (0.0..=1.0).contains(a)));
+    std::fs::remove_dir_all(&out).ok();
+}

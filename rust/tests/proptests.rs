@@ -1,0 +1,240 @@
+//! Property-based tests (via the in-house `propcheck` loop — the offline
+//! build has no proptest) over the coordinator's core invariants:
+//! sampling, routing/partitioning, batching/state, cache, exchange.
+
+use coopgnn::coop::all_to_all::Exchange;
+use coopgnn::coop::cache::LruCache;
+use coopgnn::coop::coop_sampler::{partition_seeds, sample_cooperative};
+use coopgnn::graph::{generate, partition};
+use coopgnn::prop_assert;
+use coopgnn::sampling::{block, Kappa, SamplerConfig, SamplerKind};
+use coopgnn::util::propcheck::check;
+use coopgnn::util::rng::Pcg64;
+
+#[test]
+fn prop_sampled_neighborhoods_are_subsets() {
+    check("subset", 0xA1, 30, |rng| {
+        let n = 200 + rng.next_below(800) as usize;
+        let deg = 4.0 + rng.next_f64() * 20.0;
+        let g = generate::chung_lu(n, deg, 2.5, rng.next_u64());
+        let kind = match rng.next_below(3) {
+            0 => SamplerKind::Neighbor,
+            1 => SamplerKind::Labor0,
+            _ => SamplerKind::LaborStar,
+        };
+        let cfg = SamplerConfig { fanout: 1 + rng.next_below(15) as usize, ..Default::default() };
+        let mut s = cfg.build(kind, &g, rng.next_u64());
+        let k = 1 + rng.next_below(64) as usize;
+        let seeds: Vec<u32> = rng.sample_distinct(n, k);
+        let mut out = coopgnn::sampling::Neighborhoods::default();
+        out.offsets.push(0);
+        s.sample_layer(&seeds, 0, &mut out);
+        for (i, &seed) in seeds.iter().enumerate() {
+            for &t in out.of(i) {
+                prop_assert!(
+                    g.neighbors(seed).contains(&t),
+                    "{kind:?}: sampled {t} not a neighbor of {seed}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mfg_layers_nest_and_edges_resolve() {
+    check("mfg-nesting", 0xA2, 20, |rng| {
+        let g = generate::chung_lu(500 + rng.next_below(1500) as usize, 10.0, 2.4, rng.next_u64());
+        let cfg = SamplerConfig {
+            layers: 1 + rng.next_below(4) as usize,
+            fanout: 2 + rng.next_below(12) as usize,
+            ..Default::default()
+        };
+        let mut s = cfg.build(SamplerKind::Labor0, &g, rng.next_u64());
+        let k = 1 + rng.next_below(64) as usize;
+        let seeds: Vec<u32> = rng.sample_distinct(g.num_vertices(), k);
+        let mfg = s.sample_mfg(&seeds);
+        for l in 0..mfg.num_layers() {
+            let a = &mfg.layer_vertices[l];
+            let b = &mfg.layer_vertices[l + 1];
+            prop_assert!(b.len() >= a.len(), "layer {l} shrank");
+            prop_assert!(&b[..a.len()] == &a[..], "layer {l} not a prefix");
+            let e = &mfg.layer_edges[l];
+            for i in 0..a.len() {
+                for &j in e.of(i) {
+                    prop_assert!((j as usize) < b.len(), "edge index out of range");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_is_exact_cover_and_coop_union_disjoint() {
+    check("routing", 0xA3, 12, |rng| {
+        let g = generate::chung_lu(800 + rng.next_below(1200) as usize, 8.0, 2.4, rng.next_u64());
+        let p_count = 2 + rng.next_below(7) as usize;
+        let part = match rng.next_below(3) {
+            0 => partition::random(&g, p_count, rng.next_u64()),
+            1 => partition::ldg(&g, p_count, rng.next_u64()),
+            _ => partition::multilevel(&g, p_count, rng.next_u64()),
+        };
+        let sizes = part.part_sizes();
+        prop_assert!(
+            sizes.iter().sum::<usize>() == g.num_vertices(),
+            "partition must cover all vertices"
+        );
+        // coop sampling: per-layer owned sets must be disjoint by owner
+        let cfg = SamplerConfig { layers: 2, ..Default::default() };
+        let mut samplers: Vec<_> =
+            (0..p_count).map(|_| cfg.build(SamplerKind::Labor0, &g, 7)).collect();
+        let seeds: Vec<u32> = rng.sample_distinct(g.num_vertices(), 64.min(g.num_vertices()));
+        let per_pe = partition_seeds(&seeds, &part);
+        let coop = sample_cooperative(&g, &part, &mut samplers, &per_pe, 2);
+        for l in 0..coop.num_layers() {
+            for (p, pl) in coop.layers[l].iter().enumerate() {
+                for &v in &pl.owned {
+                    prop_assert!(part.part_of(v) == p, "vertex {v} on wrong PE");
+                }
+            }
+        }
+        let union = coop.union_layer(2);
+        let total: usize = coop.final_owned.iter().map(|v| v.len()).sum();
+        prop_assert!(total == union.len(), "owned sets overlap: {total} vs {}", union.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exchange_conserves_items() {
+    check("exchange", 0xA4, 40, |rng| {
+        let p = 2 + rng.next_below(6) as usize;
+        let mut ex = Exchange::new(p);
+        let mut buckets: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); p]; p];
+        let mut sent = 0usize;
+        for row in buckets.iter_mut() {
+            for b in row.iter_mut() {
+                let k = rng.next_below(20) as usize;
+                for _ in 0..k {
+                    b.push(rng.next_u64() as u32);
+                }
+                sent += k;
+            }
+        }
+        let inboxes = ex.route(&buckets, 4);
+        let recv: usize = inboxes.iter().map(|b| b.len()).sum();
+        prop_assert!(sent == recv, "lost items: sent {sent} recv {recv}");
+        prop_assert!(
+            ex.cross_items + ex.local_items == sent as u64,
+            "accounting mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lru_never_exceeds_capacity_and_counts_add_up() {
+    check("lru", 0xA5, 30, |rng| {
+        let cap = 1 + rng.next_below(64) as usize;
+        let mut c = LruCache::new(cap);
+        let universe = 1 + rng.next_below(200);
+        let accesses = 500;
+        for _ in 0..accesses {
+            c.access(rng.next_below(universe) as u32);
+            prop_assert!(c.len() <= cap, "cache overflow");
+        }
+        prop_assert!(
+            c.hits + c.misses == accesses as u64,
+            "hit+miss must equal accesses"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_padding_weights_normalized_or_zero() {
+    check("padding", 0xA6, 15, |rng| {
+        let g = generate::chung_lu(600, 12.0, 2.4, rng.next_u64());
+        let cfg = SamplerConfig::default();
+        let mut s = cfg.build(SamplerKind::Labor0, &g, rng.next_u64());
+        let seeds: Vec<u32> = rng.sample_distinct(600, 32);
+        let mfg = s.sample_mfg(&seeds);
+        let counts = mfg.vertex_counts();
+        // randomly squeeze or relax the caps
+        let caps = block::ShapeCaps {
+            k: 16 + rng.next_below(32) as usize,
+            n: counts
+                .iter()
+                .map(|&c| {
+                    let jitter = rng.next_below(40) as i64 - 20;
+                    ((c as i64 + jitter).max(4)) as usize
+                })
+                .collect(),
+        };
+        let pb = mfg.pad(&caps, |_| 0);
+        for l in 0..mfg.num_layers() {
+            for i in 0..caps.n[l] {
+                let w: f32 = pb.nbr_w[l][i * caps.k..(i + 1) * caps.k].iter().sum::<f32>()
+                    + pb.self_w[l][i];
+                prop_assert!(
+                    (w - 1.0).abs() < 1e-4 || w == 0.0,
+                    "row weight must be 1 or 0, got {w} (layer {l} row {i})"
+                );
+                // indices in range
+                for &ix in &pb.nbr_idx[l][i * caps.k..(i + 1) * caps.k] {
+                    prop_assert!((ix as usize) < caps.n[l + 1], "nbr idx out of cap");
+                }
+                prop_assert!(
+                    (pb.self_idx[l][i] as usize) < caps.n[l + 1],
+                    "self idx out of cap (layer {l} row {i})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_dependent_rng_marginally_uniform_any_phase() {
+    check("dependent-uniform", 0xA7, 10, |rng| {
+        let kappa = 1 + rng.next_below(300) as u32;
+        let mut d = coopgnn::sampling::DependentRng::new(rng.next_u64(), Kappa::Finite(kappa));
+        for _ in 0..rng.next_below(kappa as u64 * 2) {
+            d.advance();
+        }
+        let n = 5000u64;
+        let mean: f64 = (0..n).map(|t| d.vertex_variate(0, t)).sum::<f64>() / n as f64;
+        prop_assert!((mean - 0.5).abs() < 0.05, "mean {mean} off at κ={kappa}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_engine_seed_determinism() {
+    // identical config + seed ⇒ identical report (batching/state mgmt is
+    // deterministic end to end)
+    use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
+    use coopgnn::graph::datasets;
+    let ds = datasets::build("tiny", 42).unwrap();
+    let part = partition::random(&ds.graph, 4, 1);
+    let mk = || EngineConfig {
+        mode: Mode::Cooperative,
+        num_pes: 4,
+        batch_per_pe: 32,
+        cache_per_pe: 256,
+        warmup_batches: 1,
+        measure_batches: 3,
+        seed: 777,
+        ..Default::default()
+    };
+    let mut a = engine_run(&ds, &part, &mk());
+    let mut b = engine_run(&ds, &part, &mk());
+    // wall-clock fields are (rightly) not deterministic — zero them
+    a.wall_sampling_ms = 0.0;
+    a.wall_feature_ms = 0.0;
+    b.wall_sampling_ms = 0.0;
+    b.wall_feature_ms = 0.0;
+    assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    let _ = Pcg64::new(0); // keep util linked
+}
