@@ -3,24 +3,28 @@
 
 use coopgnn::graph::generate;
 use coopgnn::sampling::{block, SamplerConfig, SamplerKind};
-use coopgnn::util::stats::bench_ms;
+use coopgnn::util::stats::{bench_ms, smoke_mode};
 
 fn main() {
-    let g = generate::chung_lu(222_000, 29.1, 2.4, 1).to_undirected();
-    let seeds: Vec<u32> = (0..1024u32).map(|i| i * 217 % 222_000).collect();
+    let smoke = smoke_mode();
+    let nv: usize = if smoke { 20_000 } else { 222_000 };
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 20) };
+    let g = generate::chung_lu(nv, 29.1, 2.4, 1).to_undirected();
+    let seeds: Vec<u32> = (0..1024u32).map(|i| i * 217 % nv as u32).collect();
     let cfg = SamplerConfig::default();
 
     let mut s = cfg.build(SamplerKind::Labor0, &g, 7);
     let mut mfg = s.sample_mfg(&seeds);
     println!("papers-s-sized MFG: counts {:?}", mfg.vertex_counts());
 
-    bench_ms("build_mfg/labor0_b1024", 2, 20, || {
+    bench_ms("build_mfg/labor0_b1024", warmup, iters, || {
         mfg = s.sample_mfg(&seeds);
         s.advance_batch();
     });
 
-    let caps = block::ShapeCaps { k: 40, n: vec![1024, 13056, 58368, 136704] };
-    bench_ms("pad/papers_caps", 2, 20, || {
+    let counts = mfg.vertex_counts();
+    let caps = block::ShapeCaps { k: 40, n: counts.iter().map(|c| c + c / 4 + 8).collect() };
+    bench_ms("pad/measured_caps", warmup, iters, || {
         let pb = mfg.pad(&caps, |_| 3);
         std::hint::black_box(&pb);
     });
@@ -32,7 +36,7 @@ fn main() {
             si.sample_mfg(&seeds[..256])
         })
         .collect();
-    bench_ms("merge_mfgs/4x256", 2, 20, || {
+    bench_ms("merge_mfgs/4x256", warmup, iters, || {
         let m = block::merge_mfgs(&parts);
         std::hint::black_box(&m);
     });

@@ -4,16 +4,18 @@
 
 use coopgnn::coop::cache::LruCache;
 use coopgnn::util::rng::Pcg64;
-use coopgnn::util::stats::bench_ms;
+use coopgnn::util::stats::{bench_ms, smoke_mode};
 
 fn main() {
-    let n_access = 100_000usize;
+    let smoke = smoke_mode();
+    let n_access = if smoke { 10_000usize } else { 100_000 };
+    let (warmup, iters) = if smoke { (1, 3) } else { (2, 30) };
 
     // hit-heavy: universe fits in cache
     let mut c = LruCache::new(1 << 16);
     let mut rng = Pcg64::new(1);
     let keys: Vec<u32> = (0..n_access).map(|_| rng.next_below(1 << 15) as u32).collect();
-    let s = bench_ms("lru/hit_heavy_100k", 2, 30, || {
+    let s = bench_ms("lru/hit_heavy", warmup, iters, || {
         for &k in &keys {
             std::hint::black_box(c.access(k));
         }
@@ -23,7 +25,7 @@ fn main() {
     // miss-heavy: huge universe
     let mut c = LruCache::new(1 << 14);
     let keys: Vec<u32> = (0..n_access).map(|_| rng.next_below(1 << 24) as u32).collect();
-    let s = bench_ms("lru/miss_heavy_100k", 2, 30, || {
+    let s = bench_ms("lru/miss_heavy", warmup, iters, || {
         for &k in &keys {
             std::hint::black_box(c.access(k));
         }
@@ -33,7 +35,7 @@ fn main() {
     // cyclic thrash: worst case eviction churn
     let mut c = LruCache::new(10_000);
     let keys: Vec<u32> = (0..n_access).map(|i| (i % 10_001) as u32).collect();
-    let s = bench_ms("lru/cyclic_thrash_100k", 2, 30, || {
+    let s = bench_ms("lru/cyclic_thrash", warmup, iters, || {
         for &k in &keys {
             std::hint::black_box(c.access(k));
         }

@@ -5,14 +5,21 @@
 
 use coopgnn::graph::generate;
 use coopgnn::sampling::{Neighborhoods, RwParams, SamplerConfig, SamplerKind};
-use coopgnn::util::stats::bench_ms;
+use coopgnn::util::stats::{bench_ms, smoke_mode};
 
 fn main() {
-    let g = generate::chung_lu(89_200, 10.1, 2.5, 1);
-    let seeds: Vec<u32> = (0..4096u32).map(|i| i * 19 % 89_200).collect();
+    let smoke = smoke_mode();
+    let nv: usize = if smoke { 20_000 } else { 89_200 };
+    let n_seeds: u32 = if smoke { 512 } else { 4096 };
+    let g = generate::chung_lu(nv, 10.1, 2.5, 1);
+    let seeds: Vec<u32> = (0..n_seeds).map(|i| i * 19 % nv as u32).collect();
     // examined edges = sum of seed degrees (the samplers scan full lists)
     let examined: usize = seeds.iter().map(|&s| g.degree(s)).sum();
-    println!("graph |V|={} |E|={}, 4096 seeds, {examined} examined edges", g.num_vertices(), g.num_edges());
+    println!(
+        "graph |V|={} |E|={}, {n_seeds} seeds, {examined} examined edges",
+        g.num_vertices(),
+        g.num_edges()
+    );
 
     for kind in SamplerKind::ALL {
         let cfg = SamplerConfig {
@@ -21,7 +28,11 @@ fn main() {
         };
         let mut s = cfg.build(kind, &g, 7);
         let mut out = Neighborhoods::default();
-        let iters = if kind == SamplerKind::RandomWalk { 10 } else { 50 };
+        let iters = match (smoke, kind == SamplerKind::RandomWalk) {
+            (true, _) => 3,
+            (false, true) => 10,
+            (false, false) => 50,
+        };
         let summary = bench_ms(&format!("sample_layer/{}", kind.name()), 3, iters, || {
             s.sample_layer(&seeds, 0, &mut out);
             s.advance_batch();
@@ -40,7 +51,8 @@ fn main() {
         let mut s = cfg.build(SamplerKind::Labor0, &g, 9);
         s.advance_batch(); // move off the pure-z1 fast path for κ=64
         let mut out = Neighborhoods::default();
-        bench_ms(&format!("sample_layer/LABOR-0 kappa={kappa}"), 3, 50, || {
+        let iters = if smoke { 3 } else { 50 };
+        bench_ms(&format!("sample_layer/LABOR-0 kappa={kappa}"), if smoke { 1 } else { 3 }, iters, || {
             s.sample_layer(&seeds, 0, &mut out);
         });
     }

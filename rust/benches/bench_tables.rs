@@ -4,10 +4,11 @@
 //! Tables 3–7, scaling note).
 
 use coopgnn::repro::{self, Ctx};
-use coopgnn::util::stats::Timer;
+use coopgnn::util::stats::{smoke_mode, Timer};
 use std::path::Path;
 
 fn main() {
+    let smoke = smoke_mode();
     let out = std::env::temp_dir().join("coopgnn_bench_tables");
     let have_artifacts = Path::new("artifacts/manifest.json").exists();
     let ctx = Ctx {
@@ -15,8 +16,13 @@ fn main() {
         quick: true,
         seed: 0xBE7C,
         artifacts: "artifacts".into(),
+        ..Default::default()
     };
-    let mut ids: Vec<&str> = vec!["fig3", "fig5a", "fig5b", "table4", "table7", "scaling"];
+    let mut ids: Vec<&str> = if smoke {
+        vec!["table7", "scaling"]
+    } else {
+        vec!["fig3", "fig5a", "fig5b", "table4", "table7", "scaling"]
+    };
     if have_artifacts {
         ids.push("table3");
         ids.push("fig9");

@@ -1,21 +1,62 @@
-//! End-to-end train-step latency through PJRT (L2/L1 execution from the
-//! L3 hot path) for the tiny and conv artifact configs: the per-batch
-//! breakdown (sample / pad / feature / execute) that the perf pass
-//! optimizes. Skips cleanly when artifacts are absent.
+//! Train-step path benchmarks.
+//!
+//! Part 1 (always runs): the multi-PE sampling front half of a training
+//! step — the block-diagonal merged MFG of P independent sub-batches —
+//! serial vs one-thread-per-PE, driving `train::sample_indep_parts`,
+//! the exact function `Trainer::sample_indep_merged_mfg` uses.
+//!
+//! Part 2 (needs `make artifacts` + a PJRT-enabled build): end-to-end
+//! train-step latency through the runtime with the per-batch breakdown
+//! (sample / pad / feature / execute). Skips cleanly otherwise.
 
+use coopgnn::coop::engine::ExecMode;
 use coopgnn::graph::datasets;
 use coopgnn::runtime::{Manifest, Runtime};
-use coopgnn::train::{Trainer, TrainerOptions};
-use coopgnn::util::stats::Summary;
+use coopgnn::sampling::{block, SamplerConfig, SamplerKind};
+use coopgnn::train::{sample_indep_parts, Trainer, TrainerOptions};
+use coopgnn::util::stats::{bench_ms, smoke_mode, Summary};
 use std::path::Path;
 
 fn main() {
+    let smoke = smoke_mode();
+
+    // ---- part 1: merged-MFG sampling, serial vs thread-per-PE ----------
+    let (ds_name, batch, warmup, iters) =
+        if smoke { ("tiny", 128usize, 1, 4) } else { ("conv", 1024, 2, 12) };
+    let ds = datasets::build(ds_name, 1).expect("registry dataset");
+    let cfg = SamplerConfig::default();
+    let p = 4usize;
+    let seeds: Vec<u32> = ds.train.iter().take(batch).copied().collect();
+
+    for exec in [ExecMode::Serial, ExecMode::Threaded] {
+        bench_ms(&format!("merged_mfg/{ds_name}_4pe_{}", exec.name()), warmup, iters, || {
+            let parts = sample_indep_parts(
+                &ds.graph,
+                cfg,
+                SamplerKind::Labor0,
+                &seeds,
+                p,
+                99,
+                exec,
+            );
+            let m = block::merge_mfgs(&parts);
+            std::hint::black_box(&m);
+        });
+    }
+
+    // ---- part 2: PJRT train-step latency (artifact-gated) --------------
     let dir = Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
-        println!("bench_train_step: artifacts/ missing (run `make artifacts`); skipping");
+        println!("bench_train_step: artifacts/ missing (run `make artifacts`); skipping PJRT part");
         return;
     }
-    let rt = Runtime::cpu().unwrap();
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("bench_train_step: {e}; skipping PJRT part");
+            return;
+        }
+    };
     let manifest = Manifest::load(dir).unwrap();
     for (ds_name, config, iters) in
         [("tiny", "tiny-b32", 40usize), ("conv", "conv-b256", 15)]

@@ -1,11 +1,27 @@
-//! All-to-all exchange fabric — the simulated NVLink of Algorithm 1.
+//! All-to-all exchange fabric — the NVLink of Algorithm 1.
 //!
-//! [`Exchange`] routes per-(src PE, dst PE) buckets of items and accounts
-//! the traffic: *cross-PE* items (the `c·|S̃|` of the paper's Table 1) are
-//! what a real fabric would move at α bandwidth; same-PE buckets are local
-//! and free. The cost model ([`crate::costmodel`]) turns the recorded item
-//! counts into time; the engine also measures real wall-clock for the
-//! CPU-side data movement.
+//! Two implementations share the same accounting model:
+//!
+//! * [`Exchange`] — the single-threaded reference: routes per-(src PE,
+//!   dst PE) buckets in one call. Used by the serial engine mode, the
+//!   coop-sampler reference implementation, and as the oracle the
+//!   threaded fabric is tested against.
+//! * [`Fabric`] / [`PeEndpoint`] — the **real** exchange: one endpoint
+//!   per PE thread, mpsc channels between all PE pairs, and a barrier per
+//!   all-to-all round. Each PE sends its buckets and blocks until it has
+//!   received exactly one bucket from every peer, so the exchange runs
+//!   with true concurrency while staying deterministic (inboxes are
+//!   reassembled in src-major order, matching [`Exchange::route`]).
+//!
+//! *Cross-PE* items (the `c·|S̃|` of the paper's Table 1) are what the
+//! fabric moves at α bandwidth; same-PE buckets are local and free. The
+//! cost model ([`crate::costmodel`]) turns the recorded item counts into
+//! time; the engine also measures real wall-clock for the CPU-side data
+//! movement.
+
+use crate::graph::VertexId;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Barrier};
 
 /// Byte/item accounting for one logical fabric.
 #[derive(Clone, Debug, Default)]
@@ -68,6 +84,93 @@ impl Exchange {
     }
 }
 
+/// One message on the threaded fabric: (src PE, items for the receiver).
+type Msg = (usize, Vec<VertexId>);
+
+/// Constructor for the per-PE endpoints of a threaded all-to-all fabric.
+pub struct Fabric;
+
+impl Fabric {
+    /// Build `num_pes` connected endpoints. Move endpoint `p` into PE
+    /// thread `p`; every endpoint must participate in every round (the
+    /// per-round barrier synchronizes all of them).
+    pub fn endpoints(num_pes: usize) -> Vec<PeEndpoint> {
+        assert!(num_pes > 0);
+        let barrier = Arc::new(Barrier::new(num_pes));
+        let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(num_pes);
+        let mut rxs: Vec<Receiver<Msg>> = Vec::with_capacity(num_pes);
+        for _ in 0..num_pes {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        rxs.into_iter()
+            .enumerate()
+            .map(|(pe, rx)| PeEndpoint {
+                pe,
+                num_pes,
+                txs: txs.clone(),
+                rx,
+                barrier: Arc::clone(&barrier),
+                cross_items: 0,
+                local_items: 0,
+                cross_bytes: 0,
+                rounds: 0,
+            })
+            .collect()
+    }
+}
+
+/// One PE's handle on the threaded fabric. Accounting fields mirror
+/// [`Exchange`] but are *per-endpoint*; summing them across the endpoints
+/// of one fabric reproduces the serial totals exactly.
+pub struct PeEndpoint {
+    pub pe: usize,
+    pub num_pes: usize,
+    txs: Vec<Sender<Msg>>,
+    rx: Receiver<Msg>,
+    barrier: Arc<Barrier>,
+    pub cross_items: u64,
+    pub local_items: u64,
+    pub cross_bytes: u64,
+    pub rounds: u64,
+}
+
+impl PeEndpoint {
+    /// One all-to-all round: send `buckets[dst]` to every peer (the
+    /// self bucket goes straight into the inbox), receive exactly one
+    /// bucket from every peer, and barrier so no message of the next
+    /// round can overtake this one. Returns the inbox indexed by src PE
+    /// (src-major, the same order [`Exchange::route`] concatenates in).
+    pub fn all_to_all(
+        &mut self,
+        buckets: Vec<Vec<VertexId>>,
+        item_bytes: usize,
+    ) -> Vec<Vec<VertexId>> {
+        assert_eq!(buckets.len(), self.num_pes, "PE {} bucket width", self.pe);
+        self.rounds += 1;
+        let mut inbox: Vec<Vec<VertexId>> = (0..self.num_pes).map(|_| Vec::new()).collect();
+        for (dst, items) in buckets.into_iter().enumerate() {
+            if dst == self.pe {
+                // local bucket (often the largest under a good partition):
+                // place it straight into the inbox, no channel hop
+                self.local_items += items.len() as u64;
+                inbox[self.pe] = items;
+            } else {
+                self.cross_items += items.len() as u64;
+                self.cross_bytes += (items.len() * item_bytes) as u64;
+                self.txs[dst].send((self.pe, items)).expect("fabric peer hung up (send)");
+            }
+        }
+        for _ in 0..self.num_pes - 1 {
+            let (src, items) = self.rx.recv().expect("fabric peer hung up (recv)");
+            inbox[src] = items;
+        }
+        self.barrier.wait();
+        inbox
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -119,5 +222,85 @@ mod tests {
         ex.account_virtual(100, 256);
         assert_eq!(ex.cross_bytes, 25_600);
         assert_eq!(ex.rounds, 1);
+    }
+
+    /// The threaded fabric must reproduce the serial reference exactly:
+    /// same inboxes (src-major), same cross/local accounting when summed
+    /// over endpoints, over multiple rounds.
+    #[test]
+    fn threaded_fabric_matches_serial_exchange() {
+        use crate::util::rng::Pcg64;
+        let p = 4usize;
+        let rounds = 3usize;
+        // deterministic random buckets per (round, src, dst)
+        let mut rng = Pcg64::new(0xFAB);
+        let all_buckets: Vec<Vec<Vec<Vec<VertexId>>>> = (0..rounds)
+            .map(|_| {
+                (0..p)
+                    .map(|_| {
+                        (0..p)
+                            .map(|_| {
+                                let k = rng.next_below(30) as usize;
+                                (0..k).map(|_| rng.next_u64() as VertexId).collect()
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        // serial oracle
+        let mut ex = Exchange::new(p);
+        let mut serial_inboxes: Vec<Vec<Vec<VertexId>>> = Vec::new();
+        for round in &all_buckets {
+            serial_inboxes.push(ex.route(round, 4));
+        }
+
+        // threaded run: PE thread q routes its own rows of every round
+        let endpoints = Fabric::endpoints(p);
+        let results: Vec<(Vec<Vec<Vec<VertexId>>>, u64, u64, u64)> =
+            std::thread::scope(|scope| {
+                let all_buckets = &all_buckets;
+                let handles: Vec<_> = endpoints
+                    .into_iter()
+                    .map(|mut ep| {
+                        scope.spawn(move || {
+                            let pe = ep.pe;
+                            let mut inboxes = Vec::new();
+                            for round in all_buckets {
+                                let per_src = ep.all_to_all(round[pe].clone(), 4);
+                                inboxes.push(per_src);
+                            }
+                            (inboxes, ep.cross_items, ep.local_items, ep.cross_bytes)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+        // inbox equality: serial concatenates src-major; threaded returns
+        // per-src slots
+        for (r, serial_round) in serial_inboxes.iter().enumerate() {
+            for (q, serial_inbox) in serial_round.iter().enumerate() {
+                let threaded: Vec<VertexId> = results[q].0[r].concat();
+                assert_eq!(&threaded, serial_inbox, "round {r} PE {q}");
+            }
+        }
+        // accounting equality (summed over endpoints)
+        let cross: u64 = results.iter().map(|r| r.1).sum();
+        let local: u64 = results.iter().map(|r| r.2).sum();
+        let bytes: u64 = results.iter().map(|r| r.3).sum();
+        assert_eq!(cross, ex.cross_items);
+        assert_eq!(local, ex.local_items);
+        assert_eq!(bytes, ex.cross_bytes);
+    }
+
+    #[test]
+    fn single_pe_fabric_is_local_only() {
+        let mut ep = Fabric::endpoints(1).pop().unwrap();
+        let inbox = ep.all_to_all(vec![vec![1, 2, 3]], 4);
+        assert_eq!(inbox, vec![vec![1, 2, 3]]);
+        assert_eq!(ep.cross_items, 0);
+        assert_eq!(ep.local_items, 3);
     }
 }

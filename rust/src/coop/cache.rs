@@ -6,6 +6,12 @@
 //! storage"). We only track membership — the actual feature bytes are
 //! regenerated on demand by the dataset — so the cache stores vertex ids
 //! in a classic hashmap + intrusive doubly-linked list arena.
+//!
+//! Concurrency contract: the cache is deliberately **not** shared-state —
+//! in the threaded engine every PE thread owns one `LruCache` instance
+//! behind its thread boundary (the type is `Send`, not `Sync`-shared),
+//! mirroring the paper's private per-GPU caches and keeping hit/miss
+//! streams bit-deterministic regardless of scheduling.
 
 use crate::graph::VertexId;
 use std::collections::HashMap;
@@ -152,6 +158,14 @@ impl LruCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Each PE thread owns its cache instance in the threaded engine —
+    /// the type must stay `Send` (compile-time check).
+    #[test]
+    fn cache_is_send_for_per_pe_threads() {
+        fn assert_send<T: Send>() {}
+        assert_send::<LruCache>();
+    }
 
     #[test]
     fn hit_miss_accounting() {

@@ -151,6 +151,72 @@ pub fn sample_cooperative(
     }
 }
 
+/// One PE's view of a cooperatively-sampled minibatch, produced by
+/// [`sample_cooperative_pe`] running inside that PE's thread.
+#[derive(Clone, Debug)]
+pub struct PeCoopSample {
+    /// `layers[l]` for l in 0..L — identical to `CoopSample.layers[l][pe]`
+    /// of the serial reference.
+    pub layers: Vec<PeLayer>,
+    /// `S_p^L`: owned input vertices whose features must load.
+    pub final_owned: Vec<VertexId>,
+}
+
+/// Algorithm 1's sampling phase for **one PE thread**, exchanging ids
+/// over a live [`PeEndpoint`] instead of the simulated [`Exchange`].
+///
+/// Every PE of the fabric must call this concurrently with the same
+/// `layers` and a sampler built from the same batch seed; `seeds` must be
+/// owned by this endpoint's PE under `part`. The per-PE results are
+/// bit-identical to the serial [`sample_cooperative`] (tested below):
+/// samplers draw from counter-based hashes, and inboxes are reassembled
+/// src-major before the sort+dedup, so thread scheduling cannot leak into
+/// the sample.
+pub fn sample_cooperative_pe(
+    _graph: &Csr,
+    part: &Partition,
+    sampler: &mut Sampler<'_>,
+    ep: &mut crate::coop::all_to_all::PeEndpoint,
+    seeds: Vec<VertexId>,
+    layers: usize,
+) -> PeCoopSample {
+    let pe = ep.pe;
+    let p_count = ep.num_pes;
+    assert_eq!(p_count, part.num_parts, "fabric/partition mismatch");
+    let mut current = seeds;
+    let mut nbh = Neighborhoods::default();
+    let mut out_layers: Vec<PeLayer> = Vec::with_capacity(layers);
+
+    for l in 0..layers {
+        let owned = std::mem::take(&mut current);
+        sampler.sample_layer(&owned, l, &mut nbh);
+        // S̃_p^{l+1} = unique(owned ∪ sampled srcs)
+        let mut tilde: Vec<VertexId> = Vec::with_capacity(owned.len() + nbh.nbrs.len());
+        tilde.extend_from_slice(&owned);
+        tilde.extend_from_slice(&nbh.nbrs);
+        tilde.sort_unstable();
+        tilde.dedup();
+        let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); p_count];
+        let mut cross = 0usize;
+        for &t in &tilde {
+            let owner = part.part_of(t);
+            if owner != pe {
+                cross += 1;
+            }
+            buckets[owner].push(t);
+        }
+        // live all-to-all: ids travel to their owners
+        let inbox = ep.all_to_all(buckets, 4);
+        let mut next: Vec<VertexId> = inbox.concat();
+        next.sort_unstable();
+        next.dedup();
+        current = next;
+        out_layers.push(PeLayer { owned, tilde, edges: nbh.num_edges(), cross });
+    }
+
+    PeCoopSample { layers: out_layers, final_owned: current }
+}
+
 /// Partition a global seed batch by vertex owner — the "each PE samples
 /// its seeds from the training vertices in V_p" step.
 pub fn partition_seeds(
@@ -272,6 +338,65 @@ mod tests {
             b.exchange.cross_items,
             a.exchange.cross_items
         );
+    }
+
+    /// The thread-per-PE sampler must be bit-identical to the serial
+    /// reference, per PE and per layer, including exchange accounting.
+    #[test]
+    fn threaded_pe_sampling_matches_serial_reference() {
+        use crate::coop::all_to_all::Fabric;
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (0..300).collect();
+        let cfg = SamplerConfig::default();
+        let per_pe = partition_seeds(&seeds, &part);
+        for kind in [SamplerKind::Neighbor, SamplerKind::Labor0, SamplerKind::LaborStar] {
+            // serial oracle
+            let mut samplers: Vec<_> =
+                (0..part.num_parts).map(|_| cfg.build(kind, &g, 4242)).collect();
+            let serial = sample_cooperative(&g, &part, &mut samplers, &per_pe, cfg.layers);
+
+            // one real thread per PE over a live fabric
+            let endpoints = Fabric::endpoints(part.num_parts);
+            let results: Vec<(PeCoopSample, u64, u64)> = std::thread::scope(|scope| {
+                let g = &g;
+                let part = &part;
+                let per_pe = &per_pe;
+                let handles: Vec<_> = endpoints
+                    .into_iter()
+                    .map(|mut ep| {
+                        scope.spawn(move || {
+                            let pe = ep.pe;
+                            let mut sampler = cfg.build(kind, g, 4242);
+                            let ps = sample_cooperative_pe(
+                                g,
+                                part,
+                                &mut sampler,
+                                &mut ep,
+                                per_pe[pe].clone(),
+                                cfg.layers,
+                            );
+                            (ps, ep.cross_items, ep.local_items)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+
+            for (p, (ps, _, _)) in results.iter().enumerate() {
+                for l in 0..cfg.layers {
+                    let want = &serial.layers[l][p];
+                    assert_eq!(ps.layers[l].owned, want.owned, "{kind:?} L{l} PE{p} owned");
+                    assert_eq!(ps.layers[l].tilde, want.tilde, "{kind:?} L{l} PE{p} tilde");
+                    assert_eq!(ps.layers[l].edges, want.edges, "{kind:?} L{l} PE{p} edges");
+                    assert_eq!(ps.layers[l].cross, want.cross, "{kind:?} L{l} PE{p} cross");
+                }
+                assert_eq!(ps.final_owned, serial.final_owned[p], "{kind:?} PE{p} final");
+            }
+            let cross: u64 = results.iter().map(|r| r.1).sum();
+            let local: u64 = results.iter().map(|r| r.2).sum();
+            assert_eq!(cross, serial.exchange.cross_items, "{kind:?} cross accounting");
+            assert_eq!(local, serial.exchange.local_items, "{kind:?} local accounting");
+        }
     }
 
     #[test]

@@ -1,4 +1,4 @@
-//! Multi-batch measurement engine.
+//! Multi-batch measurement engine with a real thread-per-PE runtime.
 //!
 //! Drives `warmup + measure` minibatches of either mode over a dataset
 //! and aggregates the per-stage counts the paper's complexity model
@@ -6,15 +6,39 @@
 //! (max-over-PE, averaged over batches), feature-cache traffic, and real
 //! CPU wall-clock per stage. The repro harnesses for Tables 4–7 and
 //! Figure 5 are thin wrappers around [`run`].
+//!
+//! ## Execution modes
+//!
+//! * [`ExecMode::Threaded`] (default) — **one OS thread per PE** (scoped
+//!   threads). Each PE owns its sampler, its seed RNG stream, and its LRU
+//!   cache behind the thread boundary; cooperative sampling exchanges ids
+//!   over the live channel fabric ([`super::all_to_all::Fabric`]) with a
+//!   barrier per all-to-all round. Sampling and feature loading of
+//!   different PEs genuinely overlap: [`EngineReport::wall_batch_ms`]
+//!   (batch wall-clock) drops below the *serial* mode's batch wall-clock
+//!   for the identical workload — the concurrency the paper's
+//!   max-over-PE cost model assumes (`benches/bench_coop.rs` prints the
+//!   comparison).
+//! * [`ExecMode::Serial`] — the single-threaded reference (debugging
+//!   fallback; CLI `--exec serial`).
+//!
+//! Both modes are **bit-identical**: per-PE RNG streams are split from
+//! the engine seed the same way, samplers share counter-based coins, and
+//! per-batch statistics are reduced through one code path
+//! ([`reduce`]/[`finalize`]), so every count field of the report matches
+//! exactly (tested below and in `tests/integration_coop.rs`). Only the
+//! wall-clock fields differ.
 
+use super::all_to_all::Fabric;
 use super::cache::LruCache;
-use super::coop_sampler::{partition_seeds, sample_cooperative};
-use super::feature_loader::{load_cooperative, load_independent, FeatureTraffic};
+use super::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
+use super::feature_loader::load_pe;
 use super::indep::sample_independent;
 use crate::graph::{Dataset, Partition, VertexId};
-use crate::sampling::{SamplerConfig, SamplerKind};
+use crate::sampling::{Mfg, SamplerConfig, SamplerKind};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Timer;
+use std::sync::Mutex;
 
 /// Minibatching mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,10 +56,38 @@ impl Mode {
     }
 }
 
+/// How the engine schedules PE work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Single-threaded reference loop (debugging fallback).
+    Serial,
+    /// One OS thread per PE with a live channel fabric (default).
+    Threaded,
+}
+
+impl ExecMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecMode::Serial => "serial",
+            ExecMode::Threaded => "threaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ExecMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "serial" => Some(ExecMode::Serial),
+            "threaded" | "parallel" => Some(ExecMode::Threaded),
+            _ => None,
+        }
+    }
+}
+
 /// Engine configuration.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub mode: Mode,
+    /// thread-per-PE or the serial reference loop.
+    pub exec: ExecMode,
     pub num_pes: usize,
     /// per-PE batch size b (global batch = b · P).
     pub batch_per_pe: usize,
@@ -52,6 +104,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             mode: Mode::Independent,
+            exec: ExecMode::Threaded,
             num_pes: 4,
             batch_per_pe: 1024,
             kind: SamplerKind::Labor0,
@@ -84,23 +137,112 @@ pub struct EngineReport {
     pub cache_miss_rate: f64,
     /// duplication factor at the deepest layer (indep only; 1.0 for coop).
     pub dup_factor: f64,
-    /// measured CPU wall-clock (ms per batch, summed across PEs).
+    /// measured CPU stage time (ms per batch, **summed across PEs** —
+    /// each PE's own elapsed sampling / feature-loading time; in
+    /// threaded mode this includes time blocked in the exchange, so the
+    /// sum over PEs is an upper bound on useful work).
     pub wall_sampling_ms: f64,
     pub wall_feature_ms: f64,
+    /// wall-clock per batch (ms). Threaded mode: elapsed between the
+    /// batch-start and batch-end barriers, i.e. the real concurrent
+    /// latency; compare against a `Serial` run of the same config for
+    /// the concurrency speedup. Serial mode: ≈ the stage sum by
+    /// construction.
+    pub wall_batch_ms: f64,
 }
 
-/// Run the engine over `dataset` with partition `part` (required for
-/// cooperative mode; independent mode uses it only to shard the training
-/// set).
-pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
-    assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
-    let layers = cfg.sampler.layers;
-    let g = &dataset.graph;
+/// One PE's raw counts for one batch (deposited by the PE thread, or
+/// synthesized by the serial loop — both feed [`reduce`]).
+struct PeBatch {
+    /// |S_p^l| for l in 0..=L (final entry = owned input vertices).
+    counts_s: Vec<u64>,
+    counts_e: Vec<u64>,
+    counts_tilde: Vec<u64>,
+    counts_cross: Vec<u64>,
+    requested: u64,
+    misses: u64,
+    fabric: u64,
+    /// S_p^L vertex list (indep measuring only; feeds the duplication
+    /// factor union).
+    input_vertices: Option<Vec<VertexId>>,
+    samp_ms: f64,
+    feat_ms: f64,
+}
 
-    // --- per-PE training shards --------------------------------------
-    // Coop: PE p draws seeds from train ∩ V_p (Algorithm 1). Indep: the
-    // training set is sharded round-robin (classic data parallelism).
-    let shards: Vec<Vec<VertexId>> = match cfg.mode {
+/// Cross-PE reduction of one batch (max-over-PE counts, totals, dup).
+struct BatchStats {
+    s: Vec<u64>,
+    e: Vec<u64>,
+    tilde: Vec<u64>,
+    cross: Vec<u64>,
+    feat_requested: u64,
+    feat_misses: u64,
+    feat_fabric_rows: u64,
+    total_requested: u64,
+    total_misses: u64,
+    dup: f64,
+    samp_ms: f64,
+    feat_ms: f64,
+    wall_ms: f64,
+}
+
+/// Per-PE seed RNG stream, split deterministically from the engine seed
+/// (identical in serial and threaded modes).
+fn pe_seed(seed: u64, pe: usize) -> u64 {
+    seed ^ ((pe as u64 + 1) * 0x9E37)
+}
+
+/// Assemble one PE's cooperative-mode batch record: pull the owned input
+/// rows through this PE's cache and collect per-layer counts. Shared by
+/// both exec modes so the construction can never drift between them
+/// (stage times are assigned by the caller).
+fn coop_pe_batch(
+    layers: usize,
+    pe_layers: &[&PeLayer],
+    final_owned: &[VertexId],
+    cache: &mut LruCache,
+) -> PeBatch {
+    let (requested, misses) = load_pe(final_owned, cache);
+    let mut counts_s: Vec<u64> = pe_layers.iter().map(|pl| pl.owned.len() as u64).collect();
+    counts_s.push(final_owned.len() as u64);
+    PeBatch {
+        counts_s,
+        counts_e: pe_layers.iter().map(|pl| pl.edges as u64).collect(),
+        counts_tilde: pe_layers.iter().map(|pl| pl.tilde.len() as u64).collect(),
+        counts_cross: pe_layers.iter().map(|pl| pl.cross as u64).collect(),
+        requested,
+        misses,
+        fabric: pe_layers[layers - 1].cross as u64,
+        input_vertices: None,
+        samp_ms: 0.0,
+        feat_ms: 0.0,
+    }
+}
+
+/// Assemble one PE's independent-mode batch record from its private MFG
+/// (shared by both exec modes; `keep_inputs` retains the S^L vertex list
+/// for the duplication-factor union on measured batches).
+fn indep_pe_batch(mfg: &Mfg, layers: usize, keep_inputs: bool, cache: &mut LruCache) -> PeBatch {
+    let (requested, misses) = load_pe(mfg.input_vertices(), cache);
+    PeBatch {
+        counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
+        counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
+        counts_tilde: vec![0; layers],
+        counts_cross: vec![0; layers],
+        requested,
+        misses,
+        fabric: 0,
+        input_vertices: if keep_inputs { Some(mfg.input_vertices().to_vec()) } else { None },
+        samp_ms: 0.0,
+        feat_ms: 0.0,
+    }
+}
+
+/// Per-PE training shards. Coop: PE p draws seeds from train ∩ V_p
+/// (Algorithm 1). Indep: the training set is sharded round-robin
+/// (classic data parallelism).
+fn make_shards(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> Vec<Vec<VertexId>> {
+    match cfg.mode {
         Mode::Cooperative => {
             let mut by_owner: Vec<Vec<VertexId>> = vec![Vec::new(); cfg.num_pes];
             for &v in &dataset.train {
@@ -115,33 +257,44 @@ pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineRep
             }
             shards
         }
-    };
+    }
+}
 
+/// Run the engine over `dataset` with partition `part` (required for
+/// cooperative mode; independent mode uses it only to shard the training
+/// set).
+pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
+    assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
+    assert!(cfg.sampler.layers >= 1, "engine needs at least one GNN layer");
+    let shards = make_shards(dataset, part, cfg);
+    let stats = match cfg.exec {
+        ExecMode::Serial => run_serial(dataset, part, cfg, &shards),
+        ExecMode::Threaded => run_threaded(dataset, part, cfg, &shards),
+    };
+    finalize(cfg, &stats)
+}
+
+/// Single-threaded reference loop.
+fn run_serial(
+    dataset: &Dataset,
+    part: &Partition,
+    cfg: &EngineConfig,
+    shards: &[Vec<VertexId>],
+) -> Vec<BatchStats> {
+    let g = &dataset.graph;
+    let layers = cfg.sampler.layers;
+    let p_count = cfg.num_pes;
     let mut samplers: Vec<_> =
-        (0..cfg.num_pes).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
+        (0..p_count).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
     let mut caches: Vec<LruCache> =
-        (0..cfg.num_pes).map(|_| LruCache::new(cfg.cache_per_pe)).collect();
+        (0..p_count).map(|_| LruCache::new(cfg.cache_per_pe)).collect();
     let mut seed_rngs: Vec<Pcg64> =
-        (0..cfg.num_pes).map(|p| Pcg64::new(cfg.seed ^ (p as u64 + 1) * 0x9E37)).collect();
-
-    let mut report = EngineReport {
-        mode: cfg.mode.name().to_string(),
-        num_pes: cfg.num_pes,
-        s: vec![0.0; layers + 1],
-        e: vec![0.0; layers],
-        tilde: vec![0.0; layers],
-        cross: vec![0.0; layers],
-        dup_factor: 1.0,
-        ..Default::default()
-    };
-    let mut dup_acc = 0.0;
-    let mut measured = 0usize;
-    let mut total_hits = 0u64;
-    let mut total_misses = 0u64;
+        (0..p_count).map(|p| Pcg64::new(pe_seed(cfg.seed, p))).collect();
+    let mut out: Vec<BatchStats> = Vec::with_capacity(cfg.measure_batches);
 
     for batch in 0..(cfg.warmup_batches + cfg.measure_batches) {
         let measuring = batch >= cfg.warmup_batches;
-        // draw per-PE seeds
+        let wall = Timer::start();
         let per_pe_seeds: Vec<Vec<VertexId>> = shards
             .iter()
             .zip(seed_rngs.iter_mut())
@@ -154,71 +307,264 @@ pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineRep
             })
             .collect();
 
-        let timer = Timer::start();
-        let (inputs, traffic): (Vec<Vec<VertexId>>, FeatureTraffic) = match cfg.mode {
+        let (mut per_pe, samp_ms, feat_ms): (Vec<PeBatch>, f64, f64) = match cfg.mode {
             Mode::Cooperative => {
-                // sampling must see the per-PE *ownership* re-partition of
-                // whatever seeds were drawn (identity here by construction)
-                let flat: Vec<VertexId> = per_pe_seeds.iter().flatten().copied().collect();
-                let per_pe = partition_seeds(&flat, part);
-                let coop = sample_cooperative(g, part, &mut samplers, &per_pe, layers);
-                let samp_ms = timer.elapsed_ms();
-                if measuring {
-                    for l in 0..layers {
-                        report.s[l] += coop.max_owned(l) as f64;
-                        report.e[l] += coop.max_edges(l) as f64;
-                        report.tilde[l] += coop.max_tilde(l) as f64;
-                        report.cross[l] += coop.max_cross(l) as f64;
-                    }
-                    report.s[layers] += coop.max_owned(layers) as f64;
-                    report.wall_sampling_ms += samp_ms;
-                }
-                let fabric: Vec<u64> =
-                    coop.layers[layers - 1].iter().map(|pl| pl.cross as u64).collect();
-                let ft = Timer::start();
-                let traffic = load_cooperative(&coop.final_owned, &fabric, &mut caches);
-                if measuring {
-                    report.wall_feature_ms += ft.elapsed_ms();
-                }
-                (coop.final_owned, traffic)
+                let t = Timer::start();
+                let coop = sample_cooperative(g, part, &mut samplers, &per_pe_seeds, layers);
+                let samp_ms = t.elapsed_ms();
+                let t = Timer::start();
+                let per_pe = (0..p_count)
+                    .map(|p| {
+                        let pe_layers: Vec<&PeLayer> =
+                            (0..layers).map(|l| &coop.layers[l][p]).collect();
+                        coop_pe_batch(layers, &pe_layers, &coop.final_owned[p], &mut caches[p])
+                    })
+                    .collect();
+                (per_pe, samp_ms, t.elapsed_ms())
             }
             Mode::Independent => {
+                let t = Timer::start();
                 let s = sample_independent(&mut samplers, &per_pe_seeds);
-                let samp_ms = timer.elapsed_ms();
-                if measuring {
-                    for l in 0..layers {
-                        report.s[l] += s.max_vertices(l) as f64;
-                        report.e[l] += s.max_edges(l) as f64;
-                    }
-                    report.s[layers] += s.max_vertices(layers) as f64;
-                    report.wall_sampling_ms += samp_ms;
-                    dup_acc += s.duplication(layers);
-                }
-                let inputs: Vec<Vec<VertexId>> =
-                    s.per_pe.iter().map(|m| m.input_vertices().to_vec()).collect();
-                let ft = Timer::start();
-                let traffic = load_independent(&inputs, &mut caches);
-                if measuring {
-                    report.wall_feature_ms += ft.elapsed_ms();
-                }
-                (inputs, traffic)
+                let samp_ms = t.elapsed_ms();
+                let t = Timer::start();
+                let per_pe = s
+                    .per_pe
+                    .iter()
+                    .enumerate()
+                    .map(|(p, mfg)| indep_pe_batch(mfg, layers, measuring, &mut caches[p]))
+                    .collect();
+                (per_pe, samp_ms, t.elapsed_ms())
             }
         };
-        let _ = inputs;
-        if measuring {
-            measured += 1;
-            report.feat_requested += traffic.max_requested as f64;
-            report.feat_misses += traffic.max_misses as f64;
-            report.feat_fabric_rows += traffic.max_fabric_rows as f64;
-            total_hits += traffic.total_requested - traffic.total_misses;
-            total_misses += traffic.total_misses;
-        }
         for s in samplers.iter_mut() {
             s.advance_batch();
         }
+        // capture the batch latency before the cross-PE reduction so the
+        // reported wall clock covers exactly the batch's work
+        let wall_ms = wall.elapsed_ms();
+        if measuring {
+            // serial does all PEs' work inline: assign the batch stage
+            // times to one entry so the cross-PE sum matches semantics
+            per_pe[0].samp_ms = samp_ms;
+            per_pe[0].feat_ms = feat_ms;
+            let mut bs = reduce(cfg.mode, layers, &per_pe);
+            bs.wall_ms = wall_ms;
+            out.push(bs);
+        }
     }
+    out
+}
 
-    let m = measured.max(1) as f64;
+/// Converts a PE-thread panic into a fast process abort. `std::sync::
+/// Barrier` has no poisoning and every surviving endpoint keeps live
+/// `Sender` clones for all peers, so a single panicking PE would
+/// otherwise leave the remaining threads blocked forever in `wait()` /
+/// `recv()` — a silent CI hang instead of a failure. A panic inside a PE
+/// thread is always a bug; after the default hook prints it, failing the
+/// whole process immediately is strictly better than deadlock.
+struct AbortOnPeerPanic;
+
+impl Drop for AbortOnPeerPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!("engine: PE thread panicked; aborting to avoid deadlocking peer PEs");
+            std::process::abort();
+        }
+    }
+}
+
+/// Thread-per-PE runtime: spawn one scoped OS thread per PE; each owns
+/// its sampler, seed-RNG stream, and LRU cache, and exchanges ids over
+/// the live channel fabric. PE 0 reduces the per-batch deposits between
+/// barriers.
+fn run_threaded(
+    dataset: &Dataset,
+    part: &Partition,
+    cfg: &EngineConfig,
+    shards: &[Vec<VertexId>],
+) -> Vec<BatchStats> {
+    let g = &dataset.graph;
+    let layers = cfg.sampler.layers;
+    let p_count = cfg.num_pes;
+    let total = cfg.warmup_batches + cfg.measure_batches;
+    let barrier = std::sync::Barrier::new(p_count);
+    let endpoints = Fabric::endpoints(p_count);
+    let deposits: Vec<Mutex<Option<PeBatch>>> = (0..p_count).map(|_| Mutex::new(None)).collect();
+    let collected: Mutex<Vec<BatchStats>> = Mutex::new(Vec::with_capacity(cfg.measure_batches));
+
+    std::thread::scope(|scope| {
+        let barrier = &barrier;
+        let deposits = &deposits;
+        let collected = &collected;
+        for (pe, mut ep) in endpoints.into_iter().enumerate() {
+            let shard = &shards[pe];
+            scope.spawn(move || {
+                let _abort_guard = AbortOnPeerPanic;
+                let mut sampler = cfg.sampler.build(cfg.kind, g, cfg.seed);
+                let mut cache = LruCache::new(cfg.cache_per_pe);
+                let mut seed_rng = Pcg64::new(pe_seed(cfg.seed, pe));
+                for batch in 0..total {
+                    let measuring = batch >= cfg.warmup_batches;
+                    // align all PEs so the wall timer sees the true
+                    // concurrent latency of this batch
+                    barrier.wait();
+                    let wall = Timer::start();
+                    let b = cfg.batch_per_pe.min(shard.len());
+                    let seeds: Vec<VertexId> = seed_rng
+                        .sample_distinct(shard.len(), b)
+                        .into_iter()
+                        .map(|i| shard[i as usize])
+                        .collect();
+                    let pb = match cfg.mode {
+                        Mode::Cooperative => {
+                            let t = Timer::start();
+                            let ps = sample_cooperative_pe(
+                                g,
+                                part,
+                                &mut sampler,
+                                &mut ep,
+                                seeds,
+                                layers,
+                            );
+                            let samp_ms = t.elapsed_ms();
+                            let t = Timer::start();
+                            let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
+                            let mut pb =
+                                coop_pe_batch(layers, &pe_layers, &ps.final_owned, &mut cache);
+                            pb.samp_ms = samp_ms;
+                            pb.feat_ms = t.elapsed_ms();
+                            pb
+                        }
+                        Mode::Independent => {
+                            let t = Timer::start();
+                            let mfg = sampler.sample_mfg(&seeds);
+                            let samp_ms = t.elapsed_ms();
+                            let t = Timer::start();
+                            let mut pb = indep_pe_batch(&mfg, layers, measuring, &mut cache);
+                            pb.samp_ms = samp_ms;
+                            pb.feat_ms = t.elapsed_ms();
+                            pb
+                        }
+                    };
+                    sampler.advance_batch();
+                    if measuring {
+                        *deposits[pe].lock().unwrap() = Some(pb);
+                    }
+                    // every PE finished this batch's work
+                    barrier.wait();
+                    // batch latency ends at the batch-end barrier — the
+                    // cross-PE reduction below is bookkeeping, not batch
+                    // work, and must not inflate the reported wall clock
+                    let wall_ms = wall.elapsed_ms();
+                    if pe == 0 && measuring {
+                        let per_pe: Vec<PeBatch> = deposits
+                            .iter()
+                            .map(|d| d.lock().unwrap().take().expect("missing PE deposit"))
+                            .collect();
+                        let mut bs = reduce(cfg.mode, layers, &per_pe);
+                        bs.wall_ms = wall_ms;
+                        collected.lock().unwrap().push(bs);
+                    }
+                    // other PEs wait at the next batch's start barrier
+                    // until PE 0 finished reducing, so deposits are never
+                    // overwritten mid-reduce
+                }
+            });
+        }
+    });
+    collected.into_inner().unwrap()
+}
+
+/// Max/total reduction of one batch across PEs — shared by both exec
+/// modes so the aggregated numbers are bit-identical.
+fn reduce(mode: Mode, layers: usize, per_pe: &[PeBatch]) -> BatchStats {
+    let mut bs = BatchStats {
+        s: vec![0; layers + 1],
+        e: vec![0; layers],
+        tilde: vec![0; layers],
+        cross: vec![0; layers],
+        feat_requested: 0,
+        feat_misses: 0,
+        feat_fabric_rows: 0,
+        total_requested: 0,
+        total_misses: 0,
+        dup: 1.0,
+        samp_ms: 0.0,
+        feat_ms: 0.0,
+        wall_ms: 0.0,
+    };
+    for pb in per_pe {
+        for l in 0..=layers {
+            bs.s[l] = bs.s[l].max(pb.counts_s[l]);
+        }
+        for l in 0..layers {
+            bs.e[l] = bs.e[l].max(pb.counts_e[l]);
+            bs.tilde[l] = bs.tilde[l].max(pb.counts_tilde[l]);
+            bs.cross[l] = bs.cross[l].max(pb.counts_cross[l]);
+        }
+        bs.feat_requested = bs.feat_requested.max(pb.requested);
+        bs.feat_misses = bs.feat_misses.max(pb.misses);
+        bs.feat_fabric_rows = bs.feat_fabric_rows.max(pb.fabric);
+        bs.total_requested += pb.requested;
+        bs.total_misses += pb.misses;
+        bs.samp_ms += pb.samp_ms;
+        bs.feat_ms += pb.feat_ms;
+    }
+    if mode == Mode::Independent {
+        let sum: usize = per_pe
+            .iter()
+            .filter_map(|p| p.input_vertices.as_ref().map(|v| v.len()))
+            .sum();
+        let mut union: Vec<VertexId> = per_pe
+            .iter()
+            .filter_map(|p| p.input_vertices.as_ref())
+            .flat_map(|v| v.iter().copied())
+            .collect();
+        union.sort_unstable();
+        union.dedup();
+        if !union.is_empty() {
+            bs.dup = sum as f64 / union.len() as f64;
+        }
+    }
+    bs
+}
+
+/// Average the per-batch reductions into the report.
+fn finalize(cfg: &EngineConfig, stats: &[BatchStats]) -> EngineReport {
+    let layers = cfg.sampler.layers;
+    let mut report = EngineReport {
+        mode: cfg.mode.name().to_string(),
+        num_pes: cfg.num_pes,
+        s: vec![0.0; layers + 1],
+        e: vec![0.0; layers],
+        tilde: vec![0.0; layers],
+        cross: vec![0.0; layers],
+        dup_factor: 1.0,
+        ..Default::default()
+    };
+    let m = stats.len().max(1) as f64;
+    let mut total_hits = 0u64;
+    let mut total_misses = 0u64;
+    let mut dup_acc = 0.0;
+    for bs in stats {
+        for l in 0..=layers {
+            report.s[l] += bs.s[l] as f64;
+        }
+        for l in 0..layers {
+            report.e[l] += bs.e[l] as f64;
+            report.tilde[l] += bs.tilde[l] as f64;
+            report.cross[l] += bs.cross[l] as f64;
+        }
+        report.feat_requested += bs.feat_requested as f64;
+        report.feat_misses += bs.feat_misses as f64;
+        report.feat_fabric_rows += bs.feat_fabric_rows as f64;
+        total_hits += bs.total_requested - bs.total_misses;
+        total_misses += bs.total_misses;
+        dup_acc += bs.dup;
+        report.wall_sampling_ms += bs.samp_ms;
+        report.wall_feature_ms += bs.feat_ms;
+        report.wall_batch_ms += bs.wall_ms;
+    }
     for v in report
         .s
         .iter_mut()
@@ -233,6 +579,7 @@ pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineRep
     report.feat_fabric_rows /= m;
     report.wall_sampling_ms /= m;
     report.wall_feature_ms /= m;
+    report.wall_batch_ms /= m;
     if cfg.mode == Mode::Independent {
         report.dup_factor = dup_acc / m;
     }
@@ -278,6 +625,7 @@ mod tests {
         assert!(r.dup_factor >= 1.0);
         assert!(r.feat_requested > 0.0);
         assert!((0.0..=1.0).contains(&r.cache_miss_rate));
+        assert!(r.wall_batch_ms >= 0.0);
     }
 
     #[test]
@@ -328,5 +676,59 @@ mod tests {
             r64.cache_miss_rate,
             r1.cache_miss_rate
         );
+    }
+
+    /// Assert every count field of two reports is exactly equal (wall
+    /// clocks excluded — those are the only legitimately nondeterministic
+    /// fields).
+    fn assert_counts_identical(a: &EngineReport, b: &EngineReport, ctx: &str) {
+        assert_eq!(a.s, b.s, "{ctx}: S");
+        assert_eq!(a.e, b.e, "{ctx}: E");
+        assert_eq!(a.tilde, b.tilde, "{ctx}: S~");
+        assert_eq!(a.cross, b.cross, "{ctx}: cross");
+        assert_eq!(a.feat_requested, b.feat_requested, "{ctx}: requested");
+        assert_eq!(a.feat_misses, b.feat_misses, "{ctx}: misses");
+        assert_eq!(a.feat_fabric_rows, b.feat_fabric_rows, "{ctx}: fabric");
+        assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
+        assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup");
+    }
+
+    #[test]
+    fn serial_and_threaded_reports_bit_identical() {
+        let (ds, part) = fixture();
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            let mut cs = small_cfg(mode);
+            cs.exec = ExecMode::Serial;
+            let mut ct = small_cfg(mode);
+            ct.exec = ExecMode::Threaded;
+            let a = run(&ds, &part, &cs);
+            let b = run(&ds, &part, &ct);
+            assert_counts_identical(&a, &b, mode.name());
+        }
+    }
+
+    #[test]
+    fn serial_and_threaded_identical_under_dependent_batches() {
+        // the κ>1 smoothing path must stay deterministic per PE thread
+        let (ds, part) = fixture();
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            let mut cs = small_cfg(mode);
+            cs.sampler.kappa = Kappa::Finite(16);
+            cs.exec = ExecMode::Serial;
+            let mut ct = cs.clone();
+            ct.exec = ExecMode::Threaded;
+            let a = run(&ds, &part, &cs);
+            let b = run(&ds, &part, &ct);
+            assert_counts_identical(&a, &b, &format!("{} kappa=16", mode.name()));
+        }
+    }
+
+    #[test]
+    fn threaded_run_is_self_deterministic() {
+        let (ds, part) = fixture();
+        let cfg = small_cfg(Mode::Cooperative);
+        let a = run(&ds, &part, &cfg);
+        let b = run(&ds, &part, &cfg);
+        assert_counts_identical(&a, &b, "repeat threaded");
     }
 }

@@ -39,20 +39,36 @@ impl FeatureTraffic {
     }
 }
 
+/// Pull one PE's requested rows through that PE's private cache —
+/// the per-thread unit of the feature-loading stage. Returns
+/// `(requested, misses)`. The cache lives behind the PE's thread
+/// boundary in the threaded engine; this function is the only thing that
+/// touches it during loading.
+pub fn load_pe(vs: &[VertexId], cache: &mut LruCache) -> (u64, u64) {
+    let mut misses = 0u64;
+    for &v in vs {
+        if !cache.access(v) {
+            misses += 1;
+        }
+    }
+    (vs.len() as u64, misses)
+}
+
 /// Independent loading: `inputs[p]` = S^L of PE p's private MFG.
+///
+/// Note: the engine itself aggregates feature traffic per PE thread via
+/// [`load_pe`] + its batch reduction; `load_independent` /
+/// [`load_cooperative`] are the standalone whole-fabric equivalents
+/// (public API + reference for the accounting semantics). Both route
+/// through [`load_pe`], so the cache behavior cannot diverge.
 pub fn load_independent(inputs: &[Vec<VertexId>], caches: &mut [LruCache]) -> FeatureTraffic {
     assert_eq!(inputs.len(), caches.len());
     let mut t = FeatureTraffic::default();
     for (vs, cache) in inputs.iter().zip(caches.iter_mut()) {
-        let mut misses = 0u64;
-        for &v in vs {
-            if !cache.access(v) {
-                misses += 1;
-            }
-        }
-        t.max_requested = t.max_requested.max(vs.len() as u64);
+        let (requested, misses) = load_pe(vs, cache);
+        t.max_requested = t.max_requested.max(requested);
         t.max_misses = t.max_misses.max(misses);
-        t.total_requested += vs.len() as u64;
+        t.total_requested += requested;
         t.total_misses += misses;
     }
     t
@@ -70,15 +86,10 @@ pub fn load_cooperative(
     assert_eq!(owned.len(), caches.len());
     let mut t = FeatureTraffic::default();
     for ((vs, cache), &fab) in owned.iter().zip(caches.iter_mut()).zip(fabric_rows.iter()) {
-        let mut misses = 0u64;
-        for &v in vs {
-            if !cache.access(v) {
-                misses += 1;
-            }
-        }
-        t.max_requested = t.max_requested.max(vs.len() as u64);
+        let (requested, misses) = load_pe(vs, cache);
+        t.max_requested = t.max_requested.max(requested);
         t.max_misses = t.max_misses.max(misses);
-        t.total_requested += vs.len() as u64;
+        t.total_requested += requested;
         t.total_misses += misses;
         t.max_fabric_rows = t.max_fabric_rows.max(fab);
         t.total_fabric_rows += fab;

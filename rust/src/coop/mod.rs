@@ -8,14 +8,22 @@
 //!   Algorithm 1): the graph is 1-D partitioned; a single global batch of
 //!   size `bP` is sampled layer-by-layer with all-to-all vertex-id
 //!   redistribution, eliminating duplicate work entirely.
-//! * [`all_to_all`] — the exchange fabric (the simulated NVLink): routes
-//!   per-PE buckets and accounts every byte moved, which the cost model
-//!   converts into α-bandwidth time.
+//! * [`all_to_all`] — the exchange fabric (the NVLink): the serial
+//!   [`Exchange`] reference plus the live channel-based [`Fabric`] /
+//!   [`PeEndpoint`] used by PE threads; both account every byte moved,
+//!   which the cost model converts into α-bandwidth time.
 //! * [`cache`] + [`feature_loader`] — per-PE LRU vertex-embedding caches
-//!   and the storage/exchange traffic accounting for the feature-loading
-//!   stage (β vs α in the paper's Table 1).
-//! * [`engine`] — multi-batch drivers producing the count/traffic reports
-//!   the repro harnesses feed into the cost model (Tables 4–7, Fig. 5).
+//!   (owned behind each PE's thread boundary in threaded mode) and the
+//!   storage/exchange traffic accounting for the feature-loading stage
+//!   (β vs α in the paper's Table 1).
+//! * [`engine`] — the multi-batch driver producing the count/traffic
+//!   reports the repro harnesses feed into the cost model (Tables 4–7,
+//!   Fig. 5). Runs **thread-per-PE by default**
+//!   ([`engine::ExecMode::Threaded`]): one scoped OS thread per PE with
+//!   its own deterministic RNG stream split from the engine seed, real
+//!   channel all-to-all with per-round barriers, and per-PE caches.
+//!   [`engine::ExecMode::Serial`] is the bit-identical single-threaded
+//!   fallback for debugging.
 //!
 //! ### Determinism note
 //! All samplers draw per-vertex/per-edge variates from counter-based
@@ -32,8 +40,8 @@ pub mod indep;
 pub mod feature_loader;
 pub mod engine;
 
-pub use all_to_all::Exchange;
+pub use all_to_all::{Exchange, Fabric, PeEndpoint};
 pub use cache::LruCache;
-pub use coop_sampler::{sample_cooperative, CoopSample};
+pub use coop_sampler::{sample_cooperative, sample_cooperative_pe, CoopSample, PeCoopSample};
 pub use indep::{sample_independent, IndepSample};
-pub use engine::{EngineConfig, Mode};
+pub use engine::{EngineConfig, EngineReport, ExecMode, Mode};

@@ -186,8 +186,7 @@ mod tests {
             feat_fabric_rows: if mode == "Coop" { 110_000.0 * scale } else { 0.0 },
             cache_miss_rate: 0.6,
             dup_factor: 1.4,
-            wall_sampling_ms: 0.0,
-            wall_feature_ms: 0.0,
+            ..Default::default()
         }
     }
 

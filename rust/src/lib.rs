@@ -8,10 +8,31 @@
 //! minibatching engine (Algorithm 1 of the paper), the dependent-minibatch
 //! RNG (Appendix A.7), the LRU vertex-embedding cache, the training loop,
 //! and the bandwidth cost model used to reproduce the paper's runtime
-//! tables. Model forward/backward (Layer 2, JAX) and the aggregation
-//! kernels (Layer 1, Pallas) are AOT-compiled to HLO text by
+//! tables.
+//!
+//! ## Truly parallel cooperative engine
+//!
+//! The cooperative engine is **no longer a simulation**: by default it
+//! spawns one OS thread per PE (scoped threads), gives each PE its own
+//! deterministic RNG stream split from the engine seed, and runs the
+//! all-to-all id redistribution of Algorithm 1 as real channel-based
+//! message exchange with a barrier per round
+//! ([`coop::engine::ExecMode::Threaded`]). Per-PE LRU caches live behind
+//! their thread boundaries. A bit-identical single-threaded fallback
+//! remains for debugging: set [`coop::engine::ExecMode::Serial`] on
+//! [`coop::engine::EngineConfig::exec`] (CLI: `--exec serial`); the
+//! determinism tests in `coop::engine` and `tests/integration_coop.rs`
+//! assert that every count field of the [`coop::engine::EngineReport`]
+//! matches across modes.
+//!
+//! Model forward/backward (Layer 2, JAX) and the aggregation kernels
+//! (Layer 1, Pallas) are AOT-compiled to HLO text by
 //! `python/compile/aot.py` and executed from Rust through PJRT
-//! (`runtime` module); Python is never on the training path.
+//! (`runtime` module); Python is never on the training path. This build
+//! ships a host-side stub for the PJRT client (the offline toolchain
+//! cannot vendor the `xla` crate — see `runtime::client`), so train/eval
+//! paths report "runtime unavailable" while sampling, the engine, and the
+//! count-based repro harnesses run natively.
 //!
 //! ## Quick tour
 //!

@@ -6,13 +6,14 @@
 //!               [--sampler ns|labor0|labor*|rw] [--lr F] [--eval-every N]
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
+//!               [--exec serial|threaded]
 //! coopgnn caps --dataset NAME --batch B [--sampler S]
 //! coopgnn info
 //! ```
 //!
 //! (Hand-rolled arg parsing — the offline build has no clap.)
 
-use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
+use coopgnn::coop::engine::{run as engine_run, EngineConfig, ExecMode, Mode};
 use coopgnn::graph::{datasets, partition};
 use coopgnn::repro::{self, Ctx};
 use coopgnn::runtime::{Manifest, Runtime};
@@ -91,6 +92,8 @@ fn real_main() -> coopgnn::Result<()> {
                 quick: rest.has("quick"),
                 seed: rest.u64_or("seed", 0xC0FFEE),
                 artifacts: PathBuf::from(rest.get_or("artifacts", "artifacts")),
+                exec: ExecMode::parse(rest.get_or("exec", "threaded"))
+                    .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
             };
             repro::run(id, &ctx)
         }
@@ -127,6 +130,7 @@ fn cmd_train(args: &Args) -> coopgnn::Result<()> {
         fanout: args.usize_or("fanout", 10),
         seed: args.u64_or("seed", 0x7EA1),
         lr: args.get("lr").and_then(|v| v.parse().ok()),
+        ..Default::default()
     };
     let mut trainer = Trainer::new(&rt, &manifest, &config, &ds, &opts)?;
     println!(
@@ -174,6 +178,8 @@ fn cmd_engine(args: &Args) -> coopgnn::Result<()> {
     };
     let mut cfg = EngineConfig {
         mode,
+        exec: ExecMode::parse(args.get_or("exec", "threaded"))
+            .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
         num_pes: pes,
         batch_per_pe: args.usize_or("batch", 1024),
         cache_per_pe: args.usize_or("cache", ds.cache_size / pes.max(1)),
@@ -187,7 +193,13 @@ fn cmd_engine(args: &Args) -> coopgnn::Result<()> {
     cfg.sampler.kappa =
         Kappa::parse(args.get_or("kappa", "1")).ok_or_else(|| anyhow::anyhow!("bad --kappa"))?;
     let r = engine_run(&ds, &part, &cfg);
-    println!("mode={} PEs={} cross-edge-ratio={:.3}", r.mode, r.num_pes, part.cross_edge_ratio(&ds.graph));
+    println!(
+        "mode={} exec={} PEs={} cross-edge-ratio={:.3}",
+        r.mode,
+        cfg.exec.name(),
+        r.num_pes,
+        part.cross_edge_ratio(&ds.graph)
+    );
     println!("per-layer S (max/PE, avg): {:?}", r.s.iter().map(|x| *x as u64).collect::<Vec<_>>());
     println!("per-layer E: {:?}", r.e.iter().map(|x| *x as u64).collect::<Vec<_>>());
     println!("per-layer S~: {:?}", r.tilde.iter().map(|x| *x as u64).collect::<Vec<_>>());
@@ -198,8 +210,10 @@ fn cmd_engine(args: &Args) -> coopgnn::Result<()> {
     );
     println!("dup factor @L: {:.3}", r.dup_factor);
     println!(
-        "CPU wall: sampling {:.2} ms/batch, feature {:.2} ms/batch",
-        r.wall_sampling_ms, r.wall_feature_ms
+        "CPU wall: sampling {:.2} ms/batch + feature {:.2} ms/batch (per-PE elapsed, summed; \
+         includes exchange waits in threaded mode); batch wall {:.2} ms \
+         (compare --exec serial vs threaded for the concurrency speedup)",
+        r.wall_sampling_ms, r.wall_feature_ms, r.wall_batch_ms
     );
     Ok(())
 }
@@ -256,11 +270,11 @@ fn print_usage() {
          \n\
          USAGE:\n\
          \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|all>\n\
-         \x20        [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
+         \x20        [--out DIR] [--quick] [--seed N] [--artifacts DIR] [--exec serial|threaded]\n\
          \x20 coopgnn train --config NAME [--steps N] [--kappa K|inf] [--sampler ns|labor0|labor*|rw]\n\
          \x20        [--lr F] [--eval-every N] [--seed N]\n\
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
-         \x20        [--partitioner random|metis|ldg] [--batches N]\n\
+         \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
          \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
          \x20 coopgnn info"
     );

@@ -42,6 +42,7 @@ pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
         for &kappa in KAPPAS {
             let mut cfg = EngineConfig {
                 mode: Mode::Independent,
+                exec: ctx.exec,
                 num_pes: 1,
                 batch_per_pe: 1024.min(ds.train.len().max(64)),
                 cache_per_pe: ds.cache_size,
@@ -95,6 +96,7 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
         // regime where Figure 5b's κ dynamics are observable.
         let probe_cfg = EngineConfig {
             mode: Mode::Cooperative,
+            exec: ctx.exec,
             num_pes: 4,
             batch_per_pe: 1024.min(ds.train.len() / 4).max(32),
             cache_per_pe: ds.graph.num_vertices(), // effectively infinite
@@ -108,6 +110,7 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
         for &kappa in KAPPAS {
             let mut cfg = EngineConfig {
                 mode: Mode::Cooperative,
+                exec: ctx.exec,
                 num_pes: 4,
                 batch_per_pe: 1024.min(ds.train.len() / 4).max(32),
                 cache_per_pe: per_pe_cache.max(64),

@@ -25,6 +25,7 @@ pub mod table7;
 pub mod fig9;
 pub mod scaling;
 
+use crate::coop::engine::ExecMode;
 use std::path::PathBuf;
 
 /// Shared harness context.
@@ -36,6 +37,9 @@ pub struct Ctx {
     pub seed: u64,
     /// artifacts directory (for harnesses that train).
     pub artifacts: PathBuf,
+    /// engine execution mode (thread-per-PE by default; `--exec serial`
+    /// falls back to the bit-identical reference loop).
+    pub exec: ExecMode,
 }
 
 impl Default for Ctx {
@@ -45,6 +49,7 @@ impl Default for Ctx {
             quick: false,
             seed: 0xC0FFEE,
             artifacts: PathBuf::from("artifacts"),
+            exec: ExecMode::Threaded,
         }
     }
 }

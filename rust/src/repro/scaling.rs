@@ -32,6 +32,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         let part = partition::random(&ds.graph, p, ctx.seed);
         let cfg = EngineConfig {
             mode: Mode::Cooperative,
+            exec: ctx.exec,
             num_pes: p,
             batch_per_pe: b.min(ds.train.len() / p).max(16),
             cache_per_pe: 1024,

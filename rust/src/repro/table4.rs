@@ -59,6 +59,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             // transfer to the scaled twins).
             let probe_cfg = EngineConfig {
                 mode: Mode::Independent,
+                exec: ctx.exec,
                 num_pes: preset.num_pes,
                 batch_per_pe: b,
                 cache_per_pe: ds.graph.num_vertices(),
@@ -75,6 +76,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                     let run_engine = |kappa: Kappa| -> EngineReport {
                         let mut cfg = EngineConfig {
                             mode,
+                            exec: ctx.exec,
                             num_pes: preset.num_pes,
                             batch_per_pe: b,
                             cache_per_pe: cache,

@@ -32,6 +32,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 }
                 let cfg = EngineConfig {
                     mode,
+                    exec: ctx.exec,
                     num_pes: 4,
                     batch_per_pe: if ctx.quick { 32 } else { 1024 },
                     cache_per_pe: 1024,

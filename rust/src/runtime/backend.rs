@@ -1,0 +1,144 @@
+//! Host-side tensor literals — the data-interchange type between the
+//! batch assembly in [`super::tensors`] and the execution backend.
+//!
+//! The upstream design hands `xla::Literal`s to a PJRT client. The
+//! offline toolchain cannot vendor the `xla` crate, so this module keeps
+//! the same API surface (`vec1` / `reshape` / `scalar` / `to_vec`) on a
+//! plain host buffer. A future `pjrt`-feature backend converts these
+//! buffers to device literals at the [`super::client`] boundary; every
+//! caller above that boundary is backend-agnostic.
+
+/// Typed flat storage of a literal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Shape/type mismatch error (Debug-printable, mirroring the xla crate's
+/// error usage at call sites).
+#[derive(Clone, Debug)]
+pub struct LiteralError(pub String);
+
+impl std::fmt::Display for LiteralError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// A host tensor: flat payload + dims (row-major).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+}
+
+/// Element types storable in a [`Literal`].
+pub trait Element: Copy {
+    fn wrap(data: Vec<Self>) -> Payload;
+    fn unwrap(payload: &Payload) -> Result<Vec<Self>, LiteralError>;
+}
+
+impl Element for f32 {
+    fn wrap(data: Vec<f32>) -> Payload {
+        Payload::F32(data)
+    }
+    fn unwrap(payload: &Payload) -> Result<Vec<f32>, LiteralError> {
+        match payload {
+            Payload::F32(v) => Ok(v.clone()),
+            Payload::I32(_) => Err(LiteralError("literal holds i32, requested f32".into())),
+        }
+    }
+}
+
+impl Element for i32 {
+    fn wrap(data: Vec<i32>) -> Payload {
+        Payload::I32(data)
+    }
+    fn unwrap(payload: &Payload) -> Result<Vec<i32>, LiteralError> {
+        match payload {
+            Payload::I32(v) => Ok(v.clone()),
+            Payload::F32(_) => Err(LiteralError("literal holds f32, requested i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: Element>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], payload: T::wrap(data.to_vec()) }
+    }
+
+    /// Rank-0 (scalar) f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal { payload: Payload::F32(vec![v]), dims: Vec::new() }
+    }
+
+    /// Reinterpret under new dims; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, LiteralError> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.payload.len() {
+            return Err(LiteralError(format!(
+                "reshape {:?} -> {dims:?}: {} elements vs {}",
+                self.dims,
+                self.payload.len(),
+                n
+            )));
+        }
+        Ok(Literal { payload: self.payload.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Copy out as a flat vector of `T`.
+    pub fn to_vec<T: Element>(&self) -> Result<Vec<T>, LiteralError> {
+        T::unwrap(&self.payload)
+    }
+
+    /// Decompose a tuple literal. Host literals are never tuples (tuples
+    /// only arise from device executions), so this always errors here.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, LiteralError> {
+        Err(LiteralError("host literal is not a tuple".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_type_checks() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.element_count(), 1);
+        assert!(s.dims().is_empty());
+        assert!(s.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7]);
+        assert!(i.clone().to_tuple().is_err());
+    }
+}

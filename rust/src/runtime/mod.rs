@@ -1,11 +1,17 @@
-//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
-//! from the Rust hot path. Python never runs here — `make artifacts`
-//! produced the HLO once; this module compiles it on the PJRT CPU client
-//! at startup and then executes per minibatch.
+//! Execution runtime: host tensor literals ([`backend`]), the artifact
+//! manifest ([`manifest`]), batch → literal assembly ([`tensors`]), and
+//! the execution client facade ([`client`]).
+//!
+//! The upstream design executes AOT-compiled HLO-text artifacts on a PJRT
+//! CPU client (`make artifacts` produces the HLO once; Python never runs
+//! on the training path). This build ships without an XLA backend — see
+//! [`client`] for the stub contract and how to restore execution.
 
+pub mod backend;
 pub mod manifest;
 pub mod client;
 pub mod tensors;
 
+pub use backend::Literal;
 pub use client::{Executable, Runtime};
 pub use manifest::{ArtifactConfig, Manifest};

@@ -2,39 +2,40 @@
 //! literal assembly implementing the flat AOT calling convention
 //! (python/compile/model.py `flat_train_step` / `flat_forward`).
 
+use super::backend::Literal;
 use super::manifest::ArtifactConfig;
 use crate::sampling::PaddedBatch;
 use crate::util::rng::Pcg64;
 
 /// f32 tensor literal of the given dims.
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> crate::Result<xla::Literal> {
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> crate::Result<Literal> {
     let n: usize = dims.iter().product();
     anyhow::ensure!(n == data.len(), "lit_f32 {dims:?} vs {} elems", data.len());
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
+    Literal::vec1(data)
         .reshape(&dims_i64)
         .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
 }
 
 /// i32 tensor literal.
-pub fn lit_i32(data: &[i32], dims: &[usize]) -> crate::Result<xla::Literal> {
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> crate::Result<Literal> {
     let n: usize = dims.iter().product();
     anyhow::ensure!(n == data.len(), "lit_i32 {dims:?} vs {} elems", data.len());
     let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
+    Literal::vec1(data)
         .reshape(&dims_i64)
         .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
 }
 
-pub fn lit_scalar(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
+pub fn lit_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
 }
 
-pub fn to_vec_f32(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+pub fn to_vec_f32(lit: &Literal) -> crate::Result<Vec<f32>> {
     lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))
 }
 
-pub fn scalar_f32(lit: &xla::Literal) -> crate::Result<f32> {
+pub fn scalar_f32(lit: &Literal) -> crate::Result<f32> {
     let v = to_vec_f32(lit)?;
     anyhow::ensure!(v.len() == 1, "expected scalar, got {} elems", v.len());
     Ok(v[0])
@@ -88,7 +89,7 @@ impl ParamState {
     /// Absorb the outputs of a train step: `outs` is the flat output
     /// tuple (params | m | v | step | loss | correct). Returns
     /// (loss, correct).
-    pub fn absorb(&mut self, outs: &[xla::Literal]) -> crate::Result<(f32, f32)> {
+    pub fn absorb(&mut self, outs: &[Literal]) -> crate::Result<(f32, f32)> {
         let np = self.params.len();
         anyhow::ensure!(outs.len() == 3 * np + 3, "expected {} outs, got {}", 3 * np + 3, outs.len());
         for i in 0..np {
@@ -111,7 +112,7 @@ pub fn train_inputs(
     feats: &[f32],
     batch: &PaddedBatch,
     lr: f32,
-) -> crate::Result<Vec<xla::Literal>> {
+) -> crate::Result<Vec<Literal>> {
     let caps = &cfg.caps;
     let l_count = cfg.layers;
     let mut inputs = Vec::with_capacity(cfg.num_train_inputs);
@@ -145,7 +146,7 @@ pub fn forward_inputs(
     state: &ParamState,
     feats: &[f32],
     batch: &PaddedBatch,
-) -> crate::Result<Vec<xla::Literal>> {
+) -> crate::Result<Vec<Literal>> {
     let caps = &cfg.caps;
     let l_count = cfg.layers;
     let mut inputs = Vec::with_capacity(cfg.num_forward_inputs);
@@ -164,7 +165,7 @@ pub fn forward_inputs(
 }
 
 fn push_blocks(
-    inputs: &mut Vec<xla::Literal>,
+    inputs: &mut Vec<Literal>,
     caps: &crate::sampling::ShapeCaps,
     batch: &PaddedBatch,
     l_count: usize,

@@ -9,5 +9,5 @@
 pub mod trainer;
 pub mod evalx;
 
-pub use trainer::{StepStats, Trainer, TrainerOptions};
+pub use trainer::{sample_indep_parts, StepStats, Trainer, TrainerOptions};
 pub use evalx::EvalStats;

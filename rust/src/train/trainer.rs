@@ -2,7 +2,8 @@
 //! from Rust through PJRT.
 
 use super::evalx::{score, EvalStats};
-use crate::graph::{Dataset, VertexId};
+use crate::coop::engine::ExecMode;
+use crate::graph::{Csr, Dataset, VertexId};
 use crate::runtime::manifest::ArtifactConfig;
 use crate::runtime::tensors::{forward_inputs, to_vec_f32, train_inputs, ParamState};
 use crate::runtime::{Executable, Manifest, Runtime};
@@ -19,6 +20,10 @@ pub struct TrainerOptions {
     pub seed: u64,
     /// learning-rate override (None = manifest value).
     pub lr: Option<f32>,
+    /// execution mode for the multi-PE sampling helpers
+    /// ([`Trainer::sample_indep_merged_mfg`] runs one thread per PE when
+    /// `Threaded`; `Serial` is the bit-identical debugging fallback).
+    pub exec: ExecMode,
 }
 
 impl Default for TrainerOptions {
@@ -29,6 +34,7 @@ impl Default for TrainerOptions {
             fanout: 10,
             seed: 0x7EA1,
             lr: None,
+            exec: ExecMode::Threaded,
         }
     }
 }
@@ -59,6 +65,7 @@ pub struct Trainer<'d> {
     sampler: Sampler<'d>,
     seed_rng: Pcg64,
     lr: f32,
+    exec: ExecMode,
     feat_buf: Vec<f32>,
 }
 
@@ -97,6 +104,7 @@ impl<'d> Trainer<'d> {
             sampler,
             seed_rng: Pcg64::new(opts.seed ^ 0x5EED),
             lr,
+            exec: opts.exec,
             feat_buf: Vec::new(),
         })
     }
@@ -218,15 +226,89 @@ impl<'d> Trainer<'d> {
 
     /// Build a merged block-diagonal MFG of `p` independent sub-batches
     /// (Independent Minibatching semantics: per-PE RNG, duplicates kept).
+    ///
+    /// With [`ExecMode::Threaded`] (the default) each sub-batch is sampled
+    /// by its own PE thread — see [`sample_indep_parts`].
     pub fn sample_indep_merged_mfg(&mut self, seeds: &[VertexId], p: usize, batch_seed: u64) -> Mfg {
-        let per = seeds.len() / p;
-        let cfg = self.sampler.cfg;
-        let parts: Vec<Mfg> = (0..p)
-            .map(|i| {
-                let mut s = cfg.build(self.sampler.kind, &self.ds.graph, batch_seed ^ ((i as u64 + 1) << 32));
-                s.sample_mfg(&seeds[i * per..(i + 1) * per])
-            })
-            .collect();
+        let parts = sample_indep_parts(
+            &self.ds.graph,
+            self.sampler.cfg,
+            self.sampler.kind,
+            seeds,
+            p,
+            batch_seed,
+            self.exec,
+        );
         block::merge_mfgs(&parts)
+    }
+}
+
+/// Sample the `p` per-PE sub-batches of one Independent-Minibatching
+/// global step — the Runtime-free core of
+/// [`Trainer::sample_indep_merged_mfg`], also driven directly by
+/// `benches/bench_train_step.rs` so trainer and bench cannot drift.
+///
+/// PE `i`'s sampler is seeded `batch_seed ^ ((i+1) << 32)` in **both**
+/// exec modes, so the result is bit-identical regardless of scheduling;
+/// only the wall-clock changes (tested below).
+pub fn sample_indep_parts(
+    graph: &Csr,
+    cfg: SamplerConfig,
+    kind: SamplerKind,
+    seeds: &[VertexId],
+    p: usize,
+    batch_seed: u64,
+    exec: ExecMode,
+) -> Vec<Mfg> {
+    let per = seeds.len() / p;
+    let pe_sample = |i: usize, chunk: &[VertexId]| -> Mfg {
+        let mut s = cfg.build(kind, graph, batch_seed ^ ((i as u64 + 1) << 32));
+        s.sample_mfg(chunk)
+    };
+    match exec {
+        ExecMode::Serial => {
+            (0..p).map(|i| pe_sample(i, &seeds[i * per..(i + 1) * per])).collect()
+        }
+        ExecMode::Threaded => std::thread::scope(|scope| {
+            let pe_sample = &pe_sample;
+            let handles: Vec<_> = (0..p)
+                .map(|i| {
+                    let chunk = &seeds[i * per..(i + 1) * per];
+                    scope.spawn(move || pe_sample(i, chunk))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("PE sampling thread panicked"))
+                .collect()
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn indep_parts_serial_and_threaded_bit_identical() {
+        let g = generate::chung_lu(2000, 12.0, 2.4, 5);
+        let cfg = SamplerConfig::default();
+        let seeds: Vec<VertexId> = (0..256).collect();
+        for kind in [SamplerKind::Labor0, SamplerKind::Neighbor] {
+            let a = sample_indep_parts(&g, cfg, kind, &seeds, 4, 77, ExecMode::Serial);
+            let b = sample_indep_parts(&g, cfg, kind, &seeds, 4, 77, ExecMode::Threaded);
+            assert_eq!(a.len(), b.len());
+            for (pe, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.layer_vertices, y.layer_vertices, "{kind:?} PE{pe} vertices");
+                for (l, (ex, ey)) in x.layer_edges.iter().zip(&y.layer_edges).enumerate() {
+                    assert_eq!(ex.offsets, ey.offsets, "{kind:?} PE{pe} L{l} offsets");
+                    assert_eq!(ex.nbr_local, ey.nbr_local, "{kind:?} PE{pe} L{l} edges");
+                }
+            }
+            let ma = block::merge_mfgs(&a);
+            let mb = block::merge_mfgs(&b);
+            assert_eq!(ma.layer_vertices, mb.layer_vertices, "{kind:?} merged");
+        }
     }
 }

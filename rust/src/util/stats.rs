@@ -69,6 +69,13 @@ impl std::fmt::Display for Summary {
     }
 }
 
+/// True when the bench binary was invoked as `cargo bench -- --test`
+/// (cargo forwards `--test` to every `harness = false` bench): run a
+/// minimal smoke configuration instead of the full measurement.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--test")
+}
+
 /// Benchmark runner: warms up, then measures `iters` runs of `f`,
 /// reporting a per-iteration Summary in milliseconds. Used by all
 /// `rust/benches/*` targets.

@@ -1,7 +1,7 @@
 //! Engine-level integration: Cooperative vs Independent across datasets,
 //! partitioners, and PE counts — the invariants behind Tables 4–7.
 
-use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
+use coopgnn::coop::engine::{run as engine_run, EngineConfig, ExecMode, Mode};
 use coopgnn::costmodel::{estimate, ModelCost, PRESETS};
 use coopgnn::graph::{datasets, partition};
 use coopgnn::sampling::{Kappa, SamplerKind};
@@ -118,4 +118,51 @@ fn indep_mode_has_no_fabric_traffic() {
 fn presets_cover_paper_systems() {
     assert_eq!(PRESETS.len(), 3);
     assert!(PRESETS.iter().any(|p| p.num_pes == 16));
+}
+
+/// Engine determinism across execution runtimes: the thread-per-PE engine
+/// and the serial reference must produce identical `EngineReport`
+/// vertex/edge/communication/cache counts for a fixed seed — for both
+/// modes, several samplers, and κ>1 dependent batches.
+#[test]
+fn thread_per_pe_engine_matches_serial_reference() {
+    let ds = datasets::build("tiny", 21).unwrap();
+    let part = partition::random(&ds.graph, 4, 9);
+    for kind in [SamplerKind::Labor0, SamplerKind::Neighbor] {
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            for kappa in [Kappa::Finite(1), Kappa::Finite(32)] {
+                let mut serial = cfg(mode, 4, 32);
+                serial.kind = kind;
+                serial.sampler.kappa = kappa;
+                serial.exec = ExecMode::Serial;
+                let mut threaded = serial.clone();
+                threaded.exec = ExecMode::Threaded;
+                let a = engine_run(&ds, &part, &serial);
+                let b = engine_run(&ds, &part, &threaded);
+                let ctx = format!("{kind:?}/{mode:?}/κ={:?}", kappa);
+                assert_eq!(a.s, b.s, "{ctx}: S counts");
+                assert_eq!(a.e, b.e, "{ctx}: E counts");
+                assert_eq!(a.tilde, b.tilde, "{ctx}: S~ counts");
+                assert_eq!(a.cross, b.cross, "{ctx}: cross counts");
+                assert_eq!(a.feat_requested, b.feat_requested, "{ctx}: requested");
+                assert_eq!(a.feat_misses, b.feat_misses, "{ctx}: misses");
+                assert_eq!(a.feat_fabric_rows, b.feat_fabric_rows, "{ctx}: fabric rows");
+                assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
+                assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup factor");
+            }
+        }
+    }
+}
+
+/// The threaded engine must report a real per-batch wall clock. The
+/// strict concurrency demonstration (threaded batch wall < serial batch
+/// wall on the identical workload) lives in `benches/bench_coop.rs`
+/// where batches are big enough to dominate scheduling noise.
+#[test]
+fn threaded_engine_reports_batch_wall_clock() {
+    let ds = datasets::build("tiny", 22).unwrap();
+    let part = partition::random(&ds.graph, 4, 10);
+    let r = engine_run(&ds, &part, &cfg(Mode::Cooperative, 4, 64));
+    assert!(r.wall_batch_ms > 0.0, "wall clock must be measured");
+    assert!(r.wall_sampling_ms > 0.0, "per-PE sampling time must be measured");
 }

@@ -18,6 +18,18 @@ fn artifacts_dir() -> Option<&'static Path> {
     }
 }
 
+/// Execution-runtime gate: this build may ship the PJRT stub, in which
+/// case every runtime-dependent test skips (even when artifacts exist).
+fn runtime() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
+}
+
 #[test]
 fn manifest_loads_and_is_consistent() {
     let Some(dir) = artifacts_dir() else { return };
@@ -34,7 +46,7 @@ fn manifest_loads_and_is_consistent() {
 #[test]
 fn train_step_executes_and_loss_decreases() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let manifest = Manifest::load(dir).unwrap();
     let ds = datasets::build("tiny", 1).unwrap();
     let opts = TrainerOptions {
@@ -72,7 +84,7 @@ fn train_step_executes_and_loss_decreases() {
 #[test]
 fn evaluate_runs_and_improves_over_random() {
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let manifest = Manifest::load(dir).unwrap();
     let ds = datasets::build("tiny", 2).unwrap();
     let opts = TrainerOptions { lr: Some(0.02), ..Default::default() };
@@ -99,7 +111,7 @@ fn merged_indep_mfg_executes() {
     // The merged block-diagonal MFG (Figure 9 indep baseline) must fit
     // and execute with the tiny caps when merging 2 sub-batches of 16.
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let manifest = Manifest::load(dir).unwrap();
     let ds = datasets::build("tiny", 3).unwrap();
     let opts = TrainerOptions { lr: Some(0.02), ..Default::default() };

@@ -20,12 +20,24 @@ fn artifacts_dir() -> Option<&'static Path> {
     }
 }
 
+/// Execution-runtime gate: this build may ship the PJRT stub, in which
+/// case every runtime-dependent test skips (even when artifacts exist).
+fn runtime() -> Option<Runtime> {
+    match Runtime::cpu() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e}");
+            None
+        }
+    }
+}
+
 #[test]
 fn kappa_dependent_training_converges_like_independent() {
     // Table 3's central claim, scaled down: κ=64 training quality is
     // within noise of κ=1 on a short run.
     let Some(dir) = artifacts_dir() else { return };
-    let rt = Runtime::cpu().unwrap();
+    let Some(rt) = runtime() else { return };
     let manifest = Manifest::load(dir).unwrap();
     let ds = datasets::build("tiny", 9).unwrap();
     let mut accs = Vec::new();
@@ -50,12 +62,14 @@ fn quick_repro_harnesses_run_end_to_end() {
     // already covered by their own unit tests; here: table3 + fig9 which
     // need PJRT).
     let Some(dir) = artifacts_dir() else { return };
+    let Some(_rt) = runtime() else { return };
     let out = std::env::temp_dir().join("coopgnn_repro_quick");
     let ctx = Ctx {
         out: out.clone(),
         quick: true,
         seed: 0xBEEF,
         artifacts: dir.to_path_buf(),
+        ..Default::default()
     };
     repro::run("table3", &ctx).unwrap();
     assert!(out.join("table3.csv").exists());

@@ -233,8 +233,62 @@ fn prop_engine_seed_determinism() {
     // wall-clock fields are (rightly) not deterministic — zero them
     a.wall_sampling_ms = 0.0;
     a.wall_feature_ms = 0.0;
+    a.wall_batch_ms = 0.0;
     b.wall_sampling_ms = 0.0;
     b.wall_feature_ms = 0.0;
+    b.wall_batch_ms = 0.0;
     assert_eq!(format!("{a:?}"), format!("{b:?}"));
     let _ = Pcg64::new(0); // keep util linked
+}
+
+#[test]
+fn prop_exec_modes_bit_identical_across_random_configs() {
+    // The thread-per-PE runtime must equal the serial reference for any
+    // (PE count, batch size, mode, layers) draw — the engine-determinism
+    // contract, property-tested.
+    use coopgnn::coop::engine::{run as engine_run, EngineConfig, ExecMode, Mode};
+    check("exec-mode-equivalence", 0xA8, 6, |rng| {
+        let ds = coopgnn::graph::datasets::build_from_spec(
+            &coopgnn::graph::datasets::Spec {
+                name: "prop",
+                mirrors: "property-test twin",
+                num_vertices: 800 + rng.next_below(1200) as usize,
+                avg_degree: 10.0,
+                gamma: 2.4,
+                feat_dim: 8,
+                num_classes: 4,
+                split: (0.5, 0.2, 0.3),
+                cache_s3_ratio: 1.5,
+                undirected: false,
+                community: None,
+            },
+            rng.next_u64(),
+        );
+        let p_count = 1 + rng.next_below(6) as usize;
+        let part = partition::random(&ds.graph, p_count, rng.next_u64());
+        let mode = if rng.next_below(2) == 0 { Mode::Independent } else { Mode::Cooperative };
+        let batch = 8 + rng.next_below(48) as usize;
+        let seed = rng.next_u64();
+        let mk = |exec: ExecMode| EngineConfig {
+            mode,
+            exec,
+            num_pes: p_count,
+            batch_per_pe: batch,
+            cache_per_pe: 128,
+            warmup_batches: 1,
+            measure_batches: 2,
+            seed,
+            sampler: SamplerConfig { layers: 2, ..Default::default() },
+            ..Default::default()
+        };
+        let a = engine_run(&ds, &part, &mk(ExecMode::Serial));
+        let b = engine_run(&ds, &part, &mk(ExecMode::Threaded));
+        prop_assert!(a.s == b.s, "S diverged: {:?} vs {:?}", a.s, b.s);
+        prop_assert!(a.e == b.e, "E diverged");
+        prop_assert!(a.cross == b.cross, "cross diverged");
+        prop_assert!(a.feat_misses == b.feat_misses, "misses diverged");
+        prop_assert!(a.cache_miss_rate == b.cache_miss_rate, "miss rate diverged");
+        prop_assert!(a.dup_factor == b.dup_factor, "dup diverged");
+        Ok(())
+    });
 }

@@ -1,0 +1,178 @@
+//! Minimal offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate.
+//!
+//! This workspace builds in environments with **no crates.io access**, so
+//! the real `anyhow` cannot be resolved. The subset implemented here is
+//! exactly what the `coopgnn` crate uses:
+//!
+//! * [`Error`] — a string-backed, `Send + Sync` error value with `Display`
+//!   (the `{e:#}` alternate form prints the same message) and `Debug`.
+//! * [`Result`] — `Result<T, Error>` with a defaulted error type.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the standard constructor macros
+//!   with inline format captures.
+//! * A blanket `From<E: std::error::Error>` so `?` converts `io::Error`
+//!   and friends, and a [`Context`] extension trait for `Result`/`Option`.
+//!
+//! Swapping back to the real crate is a one-line `Cargo.toml` change; no
+//! call sites need to change.
+
+use std::fmt;
+
+/// String-backed error value.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend context, mirroring `anyhow::Error::context` semantics
+    /// (outermost context first).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`; that
+// keeps the blanket conversion below coherent (same trick as real anyhow).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Include the source chain, innermost last.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+/// Context extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{context}: {e}")))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/a8f2")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format_and_capture() {
+        let x = 7;
+        let e = anyhow!("value {x} and {}", 8);
+        assert_eq!(e.to_string(), "value 7 and 8");
+        let plain = anyhow!("plain");
+        assert_eq!(format!("{plain:#}"), "plain");
+
+        fn bails() -> Result<()> {
+            bail!("bad {}", 1)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "bad 1");
+
+        fn ensures(ok: bool) -> Result<u32> {
+            ensure!(ok, "must hold, got {ok}");
+            Ok(3)
+        }
+        assert_eq!(ensures(true).unwrap(), 3);
+        assert_eq!(ensures(false).unwrap_err().to_string(), "must hold, got false");
+    }
+
+    #[test]
+    fn context_chains() {
+        let r: std::result::Result<(), String> = Err("inner".to_string());
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let n: Option<u32> = None;
+        assert_eq!(n.context("missing").unwrap_err().to_string(), "missing");
+    }
+}
