@@ -1,5 +1,6 @@
 //! Cooperative vs Independent minibatching, side by side (a Table 4-style
-//! comparison on one system preset).
+//! comparison on one system preset). One `PipelineBuilder` call stands up
+//! the workload; only `cfg.mode` is toggled between the two reports.
 //!
 //! ```sh
 //! cargo run --release --example coop_vs_indep -- [dataset] [pes] [batch]
@@ -7,9 +8,9 @@
 //! Defaults: tiny, 4 PEs, b=64 (use `papers-s 4 1024` for the paper-scale
 //! run; takes ~1 min of sampling).
 
-use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
+use coopgnn::coop::engine::Mode;
 use coopgnn::costmodel::{estimate, ModelCost, PRESETS};
-use coopgnn::graph::{datasets, partition};
+use coopgnn::pipeline::PipelineBuilder;
 
 fn main() -> coopgnn::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -17,33 +18,31 @@ fn main() -> coopgnn::Result<()> {
     let pes: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
 
-    let ds = datasets::build(ds_name, 7)?;
-    let part = partition::random(&ds.graph, pes, 7);
+    let mut pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .num_pes(pes)
+        .batch_per_pe(batch)
+        .warmup_batches(3)
+        .measure_batches(6)
+        .seed(7)
+        .build()?;
+    pipe.cfg.cache_per_pe = Some((pipe.ds.cache_size / pes).max(64));
     let preset = PRESETS.iter().find(|p| p.num_pes == pes).unwrap_or(&PRESETS[0]);
-    let model = ModelCost::gcn(ds.feat_dim, 256);
+    let model = ModelCost::gcn(pipe.ds.feat_dim, 256);
 
     println!(
         "{ds_name}: |V|={} |E|={}, {pes} PEs, b={batch}/PE (global {})",
-        ds.graph.num_vertices(),
-        ds.graph.num_edges(),
+        pipe.ds.graph.num_vertices(),
+        pipe.ds.graph.num_edges(),
         batch * pes
     );
     println!("system preset {} (γ={} α={} β={} GB/s)\n", preset.name, preset.gamma, preset.alpha, preset.beta);
 
     let mut totals = Vec::new();
     for mode in [Mode::Independent, Mode::Cooperative] {
-        let cfg = EngineConfig {
-            mode,
-            num_pes: pes,
-            batch_per_pe: batch,
-            cache_per_pe: (ds.cache_size / pes).max(64),
-            warmup_batches: 3,
-            measure_batches: 6,
-            seed: 7,
-            ..Default::default()
-        };
-        let r = engine_run(&ds, &part, &cfg);
-        let t = estimate(&r, preset, &model, ds.feat_dim);
+        pipe.cfg.mode = mode;
+        let r = pipe.engine_report();
+        let t = estimate(&r, preset, &model, pipe.ds.feat_dim);
         println!("== {} ==", r.mode);
         println!("  per-PE |S^l| (max, avg/batch): {:?}", r.s.iter().map(|x| *x as u64).collect::<Vec<_>>());
         if mode == Mode::Independent {

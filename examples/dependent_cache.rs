@@ -1,13 +1,13 @@
-//! Dependent minibatching (§3.2) in action: sweep κ and watch the LRU
-//! vertex-embedding cache miss rate fall (the Figure 5a effect) without
-//! changing any single batch's distribution.
+//! Dependent minibatching (§3.2) in action: sweep κ on one pipeline and
+//! watch the LRU vertex-embedding cache miss rate fall (the Figure 5a
+//! effect) without changing any single batch's distribution.
 //!
 //! ```sh
 //! cargo run --release --example dependent_cache -- [dataset] [batch]
 //! ```
 
-use coopgnn::coop::engine::{run as engine_run, EngineConfig, Mode};
-use coopgnn::graph::{datasets, partition};
+use coopgnn::coop::engine::Mode;
+use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::sampling::Kappa;
 
 fn main() -> coopgnn::Result<()> {
@@ -15,13 +15,21 @@ fn main() -> coopgnn::Result<()> {
     let ds_name = args.first().map(|s| s.as_str()).unwrap_or("flickr-s");
     let batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1024);
 
-    let ds = datasets::build(ds_name, 11)?;
-    let part = partition::random(&ds.graph, 1, 11);
+    let mut pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .mode(Mode::Independent)
+        .num_pes(1)
+        .warmup_batches(6)
+        .measure_batches(12)
+        .seed(11)
+        .build()?;
+    pipe.cfg.batch_per_pe = batch.min(pipe.ds.train.len());
+    pipe.cfg.cache_per_pe = Some(pipe.ds.cache_size);
     println!(
         "{ds_name}: |V|={} |E|/|V|={:.1}, cache={} rows, b={batch}, LABOR-0",
-        ds.graph.num_vertices(),
-        ds.graph.avg_degree(),
-        ds.cache_size
+        pipe.ds.graph.num_vertices(),
+        pipe.ds.graph.avg_degree(),
+        pipe.ds.cache_size
     );
     println!("{:<8} {:>10} {:>12} {:>12}", "kappa", "miss rate", "misses/b", "requested/b");
     let mut baseline = None;
@@ -33,18 +41,8 @@ fn main() -> coopgnn::Result<()> {
         Kappa::Finite(256),
         Kappa::Infinite,
     ] {
-        let mut cfg = EngineConfig {
-            mode: Mode::Independent,
-            num_pes: 1,
-            batch_per_pe: batch.min(ds.train.len()),
-            cache_per_pe: ds.cache_size,
-            warmup_batches: 6,
-            measure_batches: 12,
-            seed: 11,
-            ..Default::default()
-        };
-        cfg.sampler.kappa = kappa;
-        let r = engine_run(&ds, &part, &cfg);
+        pipe.cfg.kappa = kappa;
+        let r = pipe.engine_report();
         if baseline.is_none() {
             baseline = Some(r.cache_miss_rate);
         }

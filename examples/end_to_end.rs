@@ -1,6 +1,6 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): trains the paper's 3-layer
 //! GCN on the `conv` synthetic corpus for several hundred steps through
-//! the full stack — Rust sampler → fixed-fanout padded blocks → PJRT
+//! the full stack — pipeline stream → fixed-fanout padded blocks → PJRT
 //! execution of the AOT'd JAX+Pallas train step — logging the loss curve
 //! and final quality, then repeats a short large-scale run on `papers-s`
 //! (222k vertices) to prove the big-graph path composes.
@@ -9,10 +9,10 @@
 //! make artifacts && cargo run --release --example end_to_end [-- steps]
 //! ```
 
-use coopgnn::graph::datasets;
+use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{Kappa, SamplerKind};
-use coopgnn::train::{Trainer, TrainerOptions};
+use coopgnn::train::Trainer;
 use std::io::Write;
 use std::path::Path;
 
@@ -23,14 +23,16 @@ fn main() -> coopgnn::Result<()> {
     std::fs::create_dir_all("results")?;
 
     // ---- phase 1: full training run on `conv` -------------------------
-    let ds = datasets::build("conv", 42)?;
-    let opts = TrainerOptions {
-        kind: SamplerKind::Labor0,
-        kappa: Kappa::Finite(16),
-        lr: Some(0.01),
-        ..Default::default()
-    };
-    let mut trainer = Trainer::new(&rt, &manifest, "conv-b256", &ds, &opts)?;
+    let pipe = PipelineBuilder::new()
+        .dataset("conv")
+        .sampler(SamplerKind::Labor0)
+        .kappa(Kappa::Finite(16))
+        .seed(42)
+        .build()?;
+    let ds = &pipe.ds;
+    let mut opts = pipe.trainer_options();
+    opts.lr = Some(0.01);
+    let mut trainer = Trainer::new(&rt, &manifest, "conv-b256", ds, &opts)?;
     println!(
         "[conv] |V|={} |E|={} params={} batch={} steps={steps}",
         ds.graph.num_vertices(),
@@ -72,14 +74,15 @@ fn main() -> coopgnn::Result<()> {
 
     // ---- phase 2: large-graph smoke (papers-s, 222k vertices) ---------
     let big_steps = (steps / 10).max(5);
-    let ds_big = datasets::build("papers-s", 42)?;
-    let mut big = Trainer::new(
-        &rt,
-        &manifest,
-        "papers-b256",
-        &ds_big,
-        &TrainerOptions { kind: SamplerKind::Labor0, lr: Some(0.003), ..Default::default() },
-    )?;
+    let big_pipe = PipelineBuilder::new()
+        .dataset("papers-s")
+        .sampler(SamplerKind::Labor0)
+        .seed(42)
+        .build()?;
+    let ds_big = &big_pipe.ds;
+    let mut big_opts = big_pipe.trainer_options();
+    big_opts.lr = Some(0.003);
+    let mut big = Trainer::new(&rt, &manifest, "papers-b256", ds_big, &big_opts)?;
     println!(
         "[papers-s] |V|={} |E|={} params={} steps={big_steps}",
         ds_big.graph.num_vertices(),

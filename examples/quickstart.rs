@@ -1,42 +1,44 @@
-//! Quickstart: build a synthetic dataset, train the AOT-compiled GCN for
-//! a hundred steps, evaluate. Run with:
+//! Quickstart: stand up a pipeline, train the AOT-compiled GCN for a
+//! hundred steps, evaluate. Run with:
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use coopgnn::graph::datasets;
+use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{Kappa, SamplerKind};
-use coopgnn::train::{Trainer, TrainerOptions};
+use coopgnn::train::Trainer;
 use std::path::Path;
 
 fn main() -> coopgnn::Result<()> {
-    // 1. A synthetic power-law dataset (a scaled twin of the paper's
-    //    `flickr`; see `coopgnn info` for the registry).
-    let ds = datasets::build("tiny", 42)?;
+    // 1. One builder call: a synthetic power-law dataset (a scaled twin
+    //    of the paper's `flickr`; see `coopgnn info` for the registry)
+    //    with the paper's LABOR-0 sampler and κ=4 dependent minibatches
+    //    (§3.2 — better cache locality, same convergence).
+    let pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .sampler(SamplerKind::Labor0)
+        .kappa(Kappa::Finite(4))
+        .seed(42)
+        .build()?;
     println!(
         "dataset: |V|={} |E|={} d={} classes={} train={}",
-        ds.graph.num_vertices(),
-        ds.graph.num_edges(),
-        ds.feat_dim,
-        ds.num_classes,
-        ds.train.len()
+        pipe.ds.graph.num_vertices(),
+        pipe.ds.graph.num_edges(),
+        pipe.ds.feat_dim,
+        pipe.ds.num_classes,
+        pipe.ds.train.len()
     );
 
     // 2. The PJRT runtime + the AOT'd train/forward executables.
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(Path::new("artifacts"))?;
 
-    // 3. A trainer with the paper's LABOR-0 sampler and κ=4 dependent
-    //    minibatches (§3.2 — better cache locality, same convergence).
-    let opts = TrainerOptions {
-        kind: SamplerKind::Labor0,
-        kappa: Kappa::Finite(4),
-        lr: Some(0.02),
-        ..Default::default()
-    };
-    let mut trainer = Trainer::new(&rt, &manifest, "tiny-b32", &ds, &opts)?;
+    // 3. A trainer consuming the pipeline's stream.
+    let mut opts = pipe.trainer_options();
+    opts.lr = Some(0.02);
+    let mut trainer = Trainer::new(&rt, &manifest, "tiny-b32", &pipe.ds, &opts)?;
     println!("model: {} parameters", trainer.state.num_scalars());
 
     // 4. Train.
@@ -48,8 +50,8 @@ fn main() -> coopgnn::Result<()> {
     }
 
     // 5. Evaluate.
-    let val = trainer.evaluate(&ds.val, 7)?;
-    let test = trainer.evaluate(&ds.test, 7)?;
+    let val = trainer.evaluate(&pipe.ds.val, 7)?;
+    let test = trainer.evaluate(&pipe.ds.test, 7)?;
     println!("val  acc {:.4}  macro-F1 {:.4}", val.accuracy, val.macro_f1);
     println!("test acc {:.4}  macro-F1 {:.4}", test.accuracy, test.macro_f1);
     Ok(())

@@ -3,13 +3,16 @@
 //! the serial reference, demonstrating real concurrency: with 4 PEs the
 //! cooperative batch wall-clock sits well below the summed per-PE stage
 //! times (`cargo bench --bench bench_coop`; `-- --test` runs the smoke
-//! configuration CI uploads as the perf-trajectory artifact).
+//! configuration CI uploads as the perf-trajectory artifact). The engine
+//! comparison is constructed through `pipeline::PipelineBuilder`, like
+//! every other entry stack.
 
 use coopgnn::coop::all_to_all::Exchange;
 use coopgnn::coop::coop_sampler::{partition_seeds, sample_cooperative};
-use coopgnn::coop::engine::{run as engine_run, EngineConfig, ExecMode, Mode};
+use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::coop::indep::sample_independent;
-use coopgnn::graph::{datasets, generate, partition};
+use coopgnn::graph::{generate, partition};
+use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::sampling::{SamplerConfig, SamplerKind};
 use coopgnn::util::rng::Pcg64;
 use coopgnn::util::stats::{bench_ms, smoke_mode, Timer};
@@ -64,25 +67,25 @@ fn main() {
     // times are also printed, but in threaded mode they include exchange
     // waits, so their sum exceeding the wall is necessary, not
     // sufficient, for real overlap.) Registry dataset so the numbers
-    // track a real workload shape across PRs.
+    // track a real workload shape across PRs. One PipelineBuilder call
+    // stands up the workload; only `cfg.exec` is toggled between runs.
     let (ds_name, b, measure) = if smoke { ("tiny", 128, 3) } else { ("flickr-s", 1024, 8) };
-    let ds = datasets::build(ds_name, 1).expect("registry dataset");
-    let epart = partition::random(&ds.graph, 4, 2);
+    let mut pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .mode(Mode::Cooperative)
+        .num_pes(4)
+        .batch_per_pe(b)
+        .warmup_batches(1)
+        .measure_batches(measure)
+        .seed(7)
+        .build()
+        .expect("registry dataset");
+    pipe.cfg.cache_per_pe = Some((pipe.ds.cache_size / 4).max(64));
     let mut batch_walls: Vec<f64> = Vec::new();
     for exec in [ExecMode::Serial, ExecMode::Threaded] {
-        let ecfg = EngineConfig {
-            mode: Mode::Cooperative,
-            exec,
-            num_pes: 4,
-            batch_per_pe: b,
-            cache_per_pe: (ds.cache_size / 4).max(64),
-            warmup_batches: 1,
-            measure_batches: measure,
-            seed: 7,
-            ..Default::default()
-        };
+        pipe.cfg.exec = exec;
         let t = Timer::start();
-        let r = engine_run(&ds, &epart, &ecfg);
+        let r = pipe.engine_report();
         let total_ms = t.elapsed_ms();
         batch_walls.push(r.wall_batch_ms);
         println!(

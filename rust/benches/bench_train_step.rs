@@ -2,18 +2,22 @@
 //!
 //! Part 1 (always runs): the multi-PE sampling front half of a training
 //! step — the block-diagonal merged MFG of P independent sub-batches —
-//! serial vs one-thread-per-PE, driving `train::sample_indep_parts`,
-//! the exact function `Trainer::sample_indep_merged_mfg` uses.
+//! serial vs one-thread-per-PE, driving `pipeline::sample_indep_parts`
+//! (the `Batching::IndepMerged` core) plus the full
+//! `pipeline::TrainStream` through the `MinibatchStream` seam, exactly
+//! what `Trainer` consumes.
 //!
 //! Part 2 (needs `make artifacts` + a PJRT-enabled build): end-to-end
 //! train-step latency through the runtime with the per-batch breakdown
 //! (sample / pad / feature / execute). Skips cleanly otherwise.
 
 use coopgnn::coop::engine::ExecMode;
-use coopgnn::graph::datasets;
+use coopgnn::pipeline::{
+    sample_indep_parts, Batching, MinibatchStream, PipelineBuilder, TrainStream,
+};
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{block, SamplerConfig, SamplerKind};
-use coopgnn::train::{sample_indep_parts, Trainer, TrainerOptions};
+use coopgnn::train::Trainer;
 use coopgnn::util::stats::{bench_ms, smoke_mode, Summary};
 use std::path::Path;
 
@@ -23,15 +27,19 @@ fn main() {
     // ---- part 1: merged-MFG sampling, serial vs thread-per-PE ----------
     let (ds_name, batch, warmup, iters) =
         if smoke { ("tiny", 128usize, 1, 4) } else { ("conv", 1024, 2, 12) };
-    let ds = datasets::build(ds_name, 1).expect("registry dataset");
+    let pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .seed(1)
+        .build()
+        .expect("registry dataset");
     let cfg = SamplerConfig::default();
     let p = 4usize;
-    let seeds: Vec<u32> = ds.train.iter().take(batch).copied().collect();
+    let seeds: Vec<u32> = pipe.ds.train.iter().take(batch).copied().collect();
 
     for exec in [ExecMode::Serial, ExecMode::Threaded] {
         bench_ms(&format!("merged_mfg/{ds_name}_4pe_{}", exec.name()), warmup, iters, || {
             let parts = sample_indep_parts(
-                &ds.graph,
+                &pipe.ds.graph,
                 cfg,
                 SamplerKind::Labor0,
                 &seeds,
@@ -43,6 +51,22 @@ fn main() {
             std::hint::black_box(&m);
         });
     }
+
+    // the same front half through the stream seam the Trainer pulls from
+    // (seed drawing + per-step re-seeded sub-batches + merge)
+    let mut stream = TrainStream::new(
+        &pipe.ds,
+        SamplerKind::Labor0,
+        cfg,
+        batch,
+        99,
+        ExecMode::Threaded,
+        Batching::IndepMerged { pes: p },
+    );
+    bench_ms(&format!("merged_mfg/{ds_name}_4pe_stream"), warmup, iters, || {
+        let mb = stream.next_batch();
+        std::hint::black_box(&mb);
+    });
 
     // ---- part 2: PJRT train-step latency (artifact-gated) --------------
     let dir = Path::new("artifacts");
@@ -61,9 +85,9 @@ fn main() {
     for (ds_name, config, iters) in
         [("tiny", "tiny-b32", 40usize), ("conv", "conv-b256", 15)]
     {
-        let ds = datasets::build(ds_name, 1).unwrap();
-        let opts = TrainerOptions::default();
-        let mut t = Trainer::new(&rt, &manifest, config, &ds, &opts).unwrap();
+        let tpipe = PipelineBuilder::new().dataset(ds_name).seed(1).build().unwrap();
+        let opts = tpipe.trainer_options();
+        let mut t = Trainer::new(&rt, &manifest, config, &tpipe.ds, &opts).unwrap();
         // warmup
         for _ in 0..3 {
             t.step().unwrap();

@@ -1,44 +1,39 @@
-//! Multi-batch measurement engine with a real thread-per-PE runtime.
+//! Multi-batch measurement engine — a thin aggregator over the
+//! pipeline's [`MinibatchStream`].
 //!
-//! Drives `warmup + measure` minibatches of either mode over a dataset
-//! and aggregates the per-stage counts the paper's complexity model
-//! (Table 1) consumes: per-layer vertex/edge/communication counts
-//! (max-over-PE, averaged over batches), feature-cache traffic, and real
-//! CPU wall-clock per stage. The repro harnesses for Tables 4–7 and
-//! Figure 5 are thin wrappers around [`run`].
+//! [`run`] drains `warmup + measure` minibatches from a
+//! [`crate::pipeline::EngineStream`] and reduces the per-PE work records
+//! into the per-stage counts the paper's complexity model (Table 1)
+//! consumes: per-layer vertex/edge/communication counts (max-over-PE,
+//! averaged over batches), feature-cache traffic, and real CPU
+//! wall-clock per stage. The repro harnesses for Tables 4–7 and Figure 5
+//! are thin wrappers around [`run`] via
+//! [`crate::pipeline::Pipeline::engine_report`].
 //!
 //! ## Execution modes
 //!
 //! * [`ExecMode::Threaded`] (default) — **one OS thread per PE** (scoped
-//!   threads). Each PE owns its sampler, its seed RNG stream, and its LRU
-//!   cache behind the thread boundary; cooperative sampling exchanges ids
-//!   over the live channel fabric ([`super::all_to_all::Fabric`]) with a
-//!   barrier per all-to-all round. Sampling and feature loading of
-//!   different PEs genuinely overlap: [`EngineReport::wall_batch_ms`]
-//!   (batch wall-clock) drops below the *serial* mode's batch wall-clock
-//!   for the identical workload — the concurrency the paper's
-//!   max-over-PE cost model assumes (`benches/bench_coop.rs` prints the
-//!   comparison).
+//!   threads, spawned per batch over state the stream persists between
+//!   batches). Each PE owns its sampler, its seed RNG stream, and its
+//!   LRU cache; cooperative sampling exchanges ids over the live channel
+//!   fabric ([`super::all_to_all::Fabric`]) with a barrier per
+//!   all-to-all round. Sampling and feature loading of different PEs
+//!   genuinely overlap: [`EngineReport::wall_batch_ms`] drops below the
+//!   *serial* mode's batch wall-clock for the identical workload
+//!   (`benches/bench_coop.rs` prints the comparison).
 //! * [`ExecMode::Serial`] — the single-threaded reference (debugging
 //!   fallback; CLI `--exec serial`).
 //!
 //! Both modes are **bit-identical**: per-PE RNG streams are split from
 //! the engine seed the same way, samplers share counter-based coins, and
-//! per-batch statistics are reduced through one code path
-//! ([`reduce`]/[`finalize`]), so every count field of the report matches
-//! exactly (tested below and in `tests/integration_coop.rs`). Only the
-//! wall-clock fields differ.
+//! per-batch statistics are reduced through one code path, so every
+//! count field of the report matches exactly — across exec modes *and*
+//! against the PR-1 pre-stream engine loops, which are preserved
+//! verbatim as a test oracle below. Only the wall-clock fields differ.
 
-use super::all_to_all::Fabric;
-use super::cache::LruCache;
-use super::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
-use super::feature_loader::load_pe;
-use super::indep::sample_independent;
 use crate::graph::{Dataset, Partition, VertexId};
-use crate::sampling::{Mfg, SamplerConfig, SamplerKind};
-use crate::util::rng::Pcg64;
-use crate::util::stats::Timer;
-use std::sync::Mutex;
+use crate::pipeline::{EngineStream, MinibatchStream, PeWork};
+use crate::sampling::{SamplerConfig, SamplerKind};
 
 /// Minibatching mode.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -52,6 +47,14 @@ impl Mode {
         match self {
             Mode::Independent => "Indep",
             Mode::Cooperative => "Coop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Mode> {
+        match s.to_ascii_lowercase().as_str() {
+            "indep" | "independent" => Some(Mode::Independent),
+            "coop" | "cooperative" => Some(Mode::Cooperative),
+            _ => None,
         }
     }
 }
@@ -82,7 +85,9 @@ impl ExecMode {
     }
 }
 
-/// Engine configuration.
+/// Engine configuration (the lowered form of
+/// [`crate::pipeline::PipelineConfig`], with the cache default already
+/// resolved).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub mode: Mode,
@@ -112,7 +117,7 @@ impl Default for EngineConfig {
             cache_per_pe: 100_000,
             warmup_batches: 4,
             measure_batches: 16,
-            seed: 0xC001,
+            seed: crate::pipeline::DEFAULT_SEED,
         }
     }
 }
@@ -143,30 +148,11 @@ pub struct EngineReport {
     /// sum over PEs is an upper bound on useful work).
     pub wall_sampling_ms: f64,
     pub wall_feature_ms: f64,
-    /// wall-clock per batch (ms). Threaded mode: elapsed between the
-    /// batch-start and batch-end barriers, i.e. the real concurrent
-    /// latency; compare against a `Serial` run of the same config for
-    /// the concurrency speedup. Serial mode: ≈ the stage sum by
-    /// construction.
+    /// wall-clock per batch (ms). Threaded mode: the real concurrent
+    /// latency of the batch; compare against a `Serial` run of the same
+    /// config for the concurrency speedup. Serial mode: ≈ the stage sum
+    /// by construction.
     pub wall_batch_ms: f64,
-}
-
-/// One PE's raw counts for one batch (deposited by the PE thread, or
-/// synthesized by the serial loop — both feed [`reduce`]).
-struct PeBatch {
-    /// |S_p^l| for l in 0..=L (final entry = owned input vertices).
-    counts_s: Vec<u64>,
-    counts_e: Vec<u64>,
-    counts_tilde: Vec<u64>,
-    counts_cross: Vec<u64>,
-    requested: u64,
-    misses: u64,
-    fabric: u64,
-    /// S_p^L vertex list (indep measuring only; feeds the duplication
-    /// factor union).
-    input_vertices: Option<Vec<VertexId>>,
-    samp_ms: f64,
-    feat_ms: f64,
 }
 
 /// Cross-PE reduction of one batch (max-over-PE counts, totals, dup).
@@ -186,298 +172,41 @@ struct BatchStats {
     wall_ms: f64,
 }
 
-/// Per-PE seed RNG stream, split deterministically from the engine seed
-/// (identical in serial and threaded modes).
-fn pe_seed(seed: u64, pe: usize) -> u64 {
-    seed ^ ((pe as u64 + 1) * 0x9E37)
-}
-
-/// Assemble one PE's cooperative-mode batch record: pull the owned input
-/// rows through this PE's cache and collect per-layer counts. Shared by
-/// both exec modes so the construction can never drift between them
-/// (stage times are assigned by the caller).
-fn coop_pe_batch(
-    layers: usize,
-    pe_layers: &[&PeLayer],
-    final_owned: &[VertexId],
-    cache: &mut LruCache,
-) -> PeBatch {
-    let (requested, misses) = load_pe(final_owned, cache);
-    let mut counts_s: Vec<u64> = pe_layers.iter().map(|pl| pl.owned.len() as u64).collect();
-    counts_s.push(final_owned.len() as u64);
-    PeBatch {
-        counts_s,
-        counts_e: pe_layers.iter().map(|pl| pl.edges as u64).collect(),
-        counts_tilde: pe_layers.iter().map(|pl| pl.tilde.len() as u64).collect(),
-        counts_cross: pe_layers.iter().map(|pl| pl.cross as u64).collect(),
-        requested,
-        misses,
-        fabric: pe_layers[layers - 1].cross as u64,
-        input_vertices: None,
-        samp_ms: 0.0,
-        feat_ms: 0.0,
-    }
-}
-
-/// Assemble one PE's independent-mode batch record from its private MFG
-/// (shared by both exec modes; `keep_inputs` retains the S^L vertex list
-/// for the duplication-factor union on measured batches).
-fn indep_pe_batch(mfg: &Mfg, layers: usize, keep_inputs: bool, cache: &mut LruCache) -> PeBatch {
-    let (requested, misses) = load_pe(mfg.input_vertices(), cache);
-    PeBatch {
-        counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
-        counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
-        counts_tilde: vec![0; layers],
-        counts_cross: vec![0; layers],
-        requested,
-        misses,
-        fabric: 0,
-        input_vertices: if keep_inputs { Some(mfg.input_vertices().to_vec()) } else { None },
-        samp_ms: 0.0,
-        feat_ms: 0.0,
-    }
-}
-
-/// Per-PE training shards. Coop: PE p draws seeds from train ∩ V_p
-/// (Algorithm 1). Indep: the training set is sharded round-robin
-/// (classic data parallelism).
-fn make_shards(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> Vec<Vec<VertexId>> {
-    match cfg.mode {
-        Mode::Cooperative => {
-            let mut by_owner: Vec<Vec<VertexId>> = vec![Vec::new(); cfg.num_pes];
-            for &v in &dataset.train {
-                by_owner[part.part_of(v)].push(v);
-            }
-            by_owner
-        }
-        Mode::Independent => {
-            let mut shards: Vec<Vec<VertexId>> = vec![Vec::new(); cfg.num_pes];
-            for (i, &v) in dataset.train.iter().enumerate() {
-                shards[i % cfg.num_pes].push(v);
-            }
-            shards
-        }
-    }
-}
-
 /// Run the engine over `dataset` with partition `part` (required for
 /// cooperative mode; independent mode uses it only to shard the training
-/// set).
+/// set): build the measurement stream and drain it.
 pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
-    assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
-    assert!(cfg.sampler.layers >= 1, "engine needs at least one GNN layer");
-    let shards = make_shards(dataset, part, cfg);
-    let stats = match cfg.exec {
-        ExecMode::Serial => run_serial(dataset, part, cfg, &shards),
-        ExecMode::Threaded => run_threaded(dataset, part, cfg, &shards),
-    };
-    finalize(cfg, &stats)
+    let mut stream = EngineStream::new(dataset, part, cfg);
+    drain(&mut stream, cfg)
 }
 
-/// Single-threaded reference loop.
-fn run_serial(
-    dataset: &Dataset,
-    part: &Partition,
-    cfg: &EngineConfig,
-    shards: &[Vec<VertexId>],
-) -> Vec<BatchStats> {
-    let g = &dataset.graph;
-    let layers = cfg.sampler.layers;
-    let p_count = cfg.num_pes;
-    let mut samplers: Vec<_> =
-        (0..p_count).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
-    let mut caches: Vec<LruCache> =
-        (0..p_count).map(|_| LruCache::new(cfg.cache_per_pe)).collect();
-    let mut seed_rngs: Vec<Pcg64> =
-        (0..p_count).map(|p| Pcg64::new(pe_seed(cfg.seed, p))).collect();
-    let mut out: Vec<BatchStats> = Vec::with_capacity(cfg.measure_batches);
-
+/// Drain `warmup + measure` batches from any stream and aggregate the
+/// measured ones — the engine reduced to what it is: an aggregator.
+///
+/// Mode, layer count, and PE count come from the stream itself (the
+/// only party that knows what it yields); `cfg` contributes only the
+/// measurement window, so a stream whose shape disagrees with the
+/// config that happened to build it cannot be mis-reduced.
+pub fn drain(stream: &mut dyn MinibatchStream, cfg: &EngineConfig) -> EngineReport {
+    let layers = stream.layers();
+    let mode = stream.mode();
+    let num_pes = stream.num_pes();
+    let mut stats: Vec<BatchStats> = Vec::with_capacity(cfg.measure_batches);
     for batch in 0..(cfg.warmup_batches + cfg.measure_batches) {
-        let measuring = batch >= cfg.warmup_batches;
-        let wall = Timer::start();
-        let per_pe_seeds: Vec<Vec<VertexId>> = shards
-            .iter()
-            .zip(seed_rngs.iter_mut())
-            .map(|(shard, rng)| {
-                let b = cfg.batch_per_pe.min(shard.len());
-                rng.sample_distinct(shard.len(), b)
-                    .into_iter()
-                    .map(|i| shard[i as usize])
-                    .collect()
-            })
-            .collect();
-
-        let (mut per_pe, samp_ms, feat_ms): (Vec<PeBatch>, f64, f64) = match cfg.mode {
-            Mode::Cooperative => {
-                let t = Timer::start();
-                let coop = sample_cooperative(g, part, &mut samplers, &per_pe_seeds, layers);
-                let samp_ms = t.elapsed_ms();
-                let t = Timer::start();
-                let per_pe = (0..p_count)
-                    .map(|p| {
-                        let pe_layers: Vec<&PeLayer> =
-                            (0..layers).map(|l| &coop.layers[l][p]).collect();
-                        coop_pe_batch(layers, &pe_layers, &coop.final_owned[p], &mut caches[p])
-                    })
-                    .collect();
-                (per_pe, samp_ms, t.elapsed_ms())
-            }
-            Mode::Independent => {
-                let t = Timer::start();
-                let s = sample_independent(&mut samplers, &per_pe_seeds);
-                let samp_ms = t.elapsed_ms();
-                let t = Timer::start();
-                let per_pe = s
-                    .per_pe
-                    .iter()
-                    .enumerate()
-                    .map(|(p, mfg)| indep_pe_batch(mfg, layers, measuring, &mut caches[p]))
-                    .collect();
-                (per_pe, samp_ms, t.elapsed_ms())
-            }
-        };
-        for s in samplers.iter_mut() {
-            s.advance_batch();
-        }
-        // capture the batch latency before the cross-PE reduction so the
-        // reported wall clock covers exactly the batch's work
-        let wall_ms = wall.elapsed_ms();
-        if measuring {
-            // serial does all PEs' work inline: assign the batch stage
-            // times to one entry so the cross-PE sum matches semantics
-            per_pe[0].samp_ms = samp_ms;
-            per_pe[0].feat_ms = feat_ms;
-            let mut bs = reduce(cfg.mode, layers, &per_pe);
-            bs.wall_ms = wall_ms;
-            out.push(bs);
+        let mb = stream.next_batch();
+        if batch >= cfg.warmup_batches {
+            let mut bs = reduce(mode, layers, &mb.per_pe);
+            bs.wall_ms = mb.wall_ms;
+            stats.push(bs);
         }
     }
-    out
+    finalize(mode, num_pes, layers, &stats)
 }
 
-/// Converts a PE-thread panic into a fast process abort. `std::sync::
-/// Barrier` has no poisoning and every surviving endpoint keeps live
-/// `Sender` clones for all peers, so a single panicking PE would
-/// otherwise leave the remaining threads blocked forever in `wait()` /
-/// `recv()` — a silent CI hang instead of a failure. A panic inside a PE
-/// thread is always a bug; after the default hook prints it, failing the
-/// whole process immediately is strictly better than deadlock.
-struct AbortOnPeerPanic;
-
-impl Drop for AbortOnPeerPanic {
-    fn drop(&mut self) {
-        if std::thread::panicking() {
-            eprintln!("engine: PE thread panicked; aborting to avoid deadlocking peer PEs");
-            std::process::abort();
-        }
-    }
-}
-
-/// Thread-per-PE runtime: spawn one scoped OS thread per PE; each owns
-/// its sampler, seed-RNG stream, and LRU cache, and exchanges ids over
-/// the live channel fabric. PE 0 reduces the per-batch deposits between
-/// barriers.
-fn run_threaded(
-    dataset: &Dataset,
-    part: &Partition,
-    cfg: &EngineConfig,
-    shards: &[Vec<VertexId>],
-) -> Vec<BatchStats> {
-    let g = &dataset.graph;
-    let layers = cfg.sampler.layers;
-    let p_count = cfg.num_pes;
-    let total = cfg.warmup_batches + cfg.measure_batches;
-    let barrier = std::sync::Barrier::new(p_count);
-    let endpoints = Fabric::endpoints(p_count);
-    let deposits: Vec<Mutex<Option<PeBatch>>> = (0..p_count).map(|_| Mutex::new(None)).collect();
-    let collected: Mutex<Vec<BatchStats>> = Mutex::new(Vec::with_capacity(cfg.measure_batches));
-
-    std::thread::scope(|scope| {
-        let barrier = &barrier;
-        let deposits = &deposits;
-        let collected = &collected;
-        for (pe, mut ep) in endpoints.into_iter().enumerate() {
-            let shard = &shards[pe];
-            scope.spawn(move || {
-                let _abort_guard = AbortOnPeerPanic;
-                let mut sampler = cfg.sampler.build(cfg.kind, g, cfg.seed);
-                let mut cache = LruCache::new(cfg.cache_per_pe);
-                let mut seed_rng = Pcg64::new(pe_seed(cfg.seed, pe));
-                for batch in 0..total {
-                    let measuring = batch >= cfg.warmup_batches;
-                    // align all PEs so the wall timer sees the true
-                    // concurrent latency of this batch
-                    barrier.wait();
-                    let wall = Timer::start();
-                    let b = cfg.batch_per_pe.min(shard.len());
-                    let seeds: Vec<VertexId> = seed_rng
-                        .sample_distinct(shard.len(), b)
-                        .into_iter()
-                        .map(|i| shard[i as usize])
-                        .collect();
-                    let pb = match cfg.mode {
-                        Mode::Cooperative => {
-                            let t = Timer::start();
-                            let ps = sample_cooperative_pe(
-                                g,
-                                part,
-                                &mut sampler,
-                                &mut ep,
-                                seeds,
-                                layers,
-                            );
-                            let samp_ms = t.elapsed_ms();
-                            let t = Timer::start();
-                            let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
-                            let mut pb =
-                                coop_pe_batch(layers, &pe_layers, &ps.final_owned, &mut cache);
-                            pb.samp_ms = samp_ms;
-                            pb.feat_ms = t.elapsed_ms();
-                            pb
-                        }
-                        Mode::Independent => {
-                            let t = Timer::start();
-                            let mfg = sampler.sample_mfg(&seeds);
-                            let samp_ms = t.elapsed_ms();
-                            let t = Timer::start();
-                            let mut pb = indep_pe_batch(&mfg, layers, measuring, &mut cache);
-                            pb.samp_ms = samp_ms;
-                            pb.feat_ms = t.elapsed_ms();
-                            pb
-                        }
-                    };
-                    sampler.advance_batch();
-                    if measuring {
-                        *deposits[pe].lock().unwrap() = Some(pb);
-                    }
-                    // every PE finished this batch's work
-                    barrier.wait();
-                    // batch latency ends at the batch-end barrier — the
-                    // cross-PE reduction below is bookkeeping, not batch
-                    // work, and must not inflate the reported wall clock
-                    let wall_ms = wall.elapsed_ms();
-                    if pe == 0 && measuring {
-                        let per_pe: Vec<PeBatch> = deposits
-                            .iter()
-                            .map(|d| d.lock().unwrap().take().expect("missing PE deposit"))
-                            .collect();
-                        let mut bs = reduce(cfg.mode, layers, &per_pe);
-                        bs.wall_ms = wall_ms;
-                        collected.lock().unwrap().push(bs);
-                    }
-                    // other PEs wait at the next batch's start barrier
-                    // until PE 0 finished reducing, so deposits are never
-                    // overwritten mid-reduce
-                }
-            });
-        }
-    });
-    collected.into_inner().unwrap()
-}
-
-/// Max/total reduction of one batch across PEs — shared by both exec
-/// modes so the aggregated numbers are bit-identical.
-fn reduce(mode: Mode, layers: usize, per_pe: &[PeBatch]) -> BatchStats {
+/// Max/total reduction of one batch across PEs — one code path for
+/// every exec mode and stream, so the aggregated numbers are
+/// bit-identical by construction.
+fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
     let mut bs = BatchStats {
         s: vec![0; layers + 1],
         e: vec![0; layers],
@@ -493,22 +222,22 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeBatch]) -> BatchStats {
         feat_ms: 0.0,
         wall_ms: 0.0,
     };
-    for pb in per_pe {
+    for pw in per_pe {
         for l in 0..=layers {
-            bs.s[l] = bs.s[l].max(pb.counts_s[l]);
+            bs.s[l] = bs.s[l].max(pw.counts_s[l]);
         }
         for l in 0..layers {
-            bs.e[l] = bs.e[l].max(pb.counts_e[l]);
-            bs.tilde[l] = bs.tilde[l].max(pb.counts_tilde[l]);
-            bs.cross[l] = bs.cross[l].max(pb.counts_cross[l]);
+            bs.e[l] = bs.e[l].max(pw.counts_e[l]);
+            bs.tilde[l] = bs.tilde[l].max(pw.counts_tilde[l]);
+            bs.cross[l] = bs.cross[l].max(pw.counts_cross[l]);
         }
-        bs.feat_requested = bs.feat_requested.max(pb.requested);
-        bs.feat_misses = bs.feat_misses.max(pb.misses);
-        bs.feat_fabric_rows = bs.feat_fabric_rows.max(pb.fabric);
-        bs.total_requested += pb.requested;
-        bs.total_misses += pb.misses;
-        bs.samp_ms += pb.samp_ms;
-        bs.feat_ms += pb.feat_ms;
+        bs.feat_requested = bs.feat_requested.max(pw.requested);
+        bs.feat_misses = bs.feat_misses.max(pw.misses);
+        bs.feat_fabric_rows = bs.feat_fabric_rows.max(pw.fabric);
+        bs.total_requested += pw.requested;
+        bs.total_misses += pw.misses;
+        bs.samp_ms += pw.samp_ms;
+        bs.feat_ms += pw.feat_ms;
     }
     if mode == Mode::Independent {
         let sum: usize = per_pe
@@ -530,11 +259,10 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeBatch]) -> BatchStats {
 }
 
 /// Average the per-batch reductions into the report.
-fn finalize(cfg: &EngineConfig, stats: &[BatchStats]) -> EngineReport {
-    let layers = cfg.sampler.layers;
+fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> EngineReport {
     let mut report = EngineReport {
-        mode: cfg.mode.name().to_string(),
-        num_pes: cfg.num_pes,
+        mode: mode.name().to_string(),
+        num_pes,
         s: vec![0.0; layers + 1],
         e: vec![0.0; layers],
         tilde: vec![0.0; layers],
@@ -580,7 +308,7 @@ fn finalize(cfg: &EngineConfig, stats: &[BatchStats]) -> EngineReport {
     report.wall_sampling_ms /= m;
     report.wall_feature_ms /= m;
     report.wall_batch_ms /= m;
-    if cfg.mode == Mode::Independent {
+    if mode == Mode::Independent {
         report.dup_factor = dup_acc / m;
     }
     report.cache_miss_rate = if total_hits + total_misses == 0 {
@@ -730,5 +458,192 @@ mod tests {
         let a = run(&ds, &part, &cfg);
         let b = run(&ds, &part, &cfg);
         assert_counts_identical(&a, &b, "repeat threaded");
+    }
+
+    /// The PR-1 engine loops, preserved verbatim as the equivalence
+    /// oracle for the stream redesign: the pre-stream serial batch loop
+    /// and the pre-stream thread-per-*run* runtime (one long-lived OS
+    /// thread per PE for the whole run, deposits reduced by PE 0 between
+    /// barriers). The stream-based [`run`] must reproduce their counts
+    /// bit-for-bit.
+    mod pr1_reference {
+        use super::*;
+        use crate::coop::all_to_all::Fabric;
+        use crate::coop::cache::LruCache;
+        use crate::coop::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
+        use crate::coop::indep::sample_independent;
+        use crate::pipeline::stream::{
+            coop_pe_work, indep_pe_work, make_shards, pe_seed, AbortOnPeerPanic,
+        };
+        use crate::util::rng::Pcg64;
+        use crate::util::stats::Timer;
+        use std::sync::Mutex;
+
+        pub fn run_pr1(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
+            assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
+            let shards = make_shards(dataset, part, cfg.mode, cfg.num_pes);
+            let stats = match cfg.exec {
+                ExecMode::Serial => run_serial(dataset, part, cfg, &shards),
+                ExecMode::Threaded => run_threaded(dataset, part, cfg, &shards),
+            };
+            finalize(cfg.mode, cfg.num_pes, cfg.sampler.layers, &stats)
+        }
+
+        fn run_serial(
+            dataset: &Dataset,
+            part: &Partition,
+            cfg: &EngineConfig,
+            shards: &[Vec<VertexId>],
+        ) -> Vec<BatchStats> {
+            let g = &dataset.graph;
+            let layers = cfg.sampler.layers;
+            let p_count = cfg.num_pes;
+            let mut samplers: Vec<_> =
+                (0..p_count).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
+            let mut caches: Vec<LruCache> =
+                (0..p_count).map(|_| LruCache::new(cfg.cache_per_pe)).collect();
+            let mut seed_rngs: Vec<Pcg64> =
+                (0..p_count).map(|p| Pcg64::new(pe_seed(cfg.seed, p))).collect();
+            let mut out: Vec<BatchStats> = Vec::with_capacity(cfg.measure_batches);
+
+            for batch in 0..(cfg.warmup_batches + cfg.measure_batches) {
+                let measuring = batch >= cfg.warmup_batches;
+                let per_pe_seeds: Vec<Vec<VertexId>> = shards
+                    .iter()
+                    .zip(seed_rngs.iter_mut())
+                    .map(|(shard, rng)| {
+                        let b = cfg.batch_per_pe.min(shard.len());
+                        rng.sample_distinct(shard.len(), b)
+                            .into_iter()
+                            .map(|i| shard[i as usize])
+                            .collect()
+                    })
+                    .collect();
+
+                let per_pe: Vec<_> = match cfg.mode {
+                    Mode::Cooperative => {
+                        let coop =
+                            sample_cooperative(g, part, &mut samplers, &per_pe_seeds, layers);
+                        (0..p_count)
+                            .map(|p| {
+                                let pe_layers: Vec<&PeLayer> =
+                                    (0..layers).map(|l| &coop.layers[l][p]).collect();
+                                coop_pe_work(
+                                    layers,
+                                    &pe_layers,
+                                    &coop.final_owned[p],
+                                    &mut caches[p],
+                                )
+                            })
+                            .collect()
+                    }
+                    Mode::Independent => {
+                        let s = sample_independent(&mut samplers, &per_pe_seeds);
+                        s.per_pe
+                            .iter()
+                            .enumerate()
+                            .map(|(p, mfg)| indep_pe_work(mfg, layers, measuring, &mut caches[p]))
+                            .collect()
+                    }
+                };
+                for s in samplers.iter_mut() {
+                    s.advance_batch();
+                }
+                if measuring {
+                    out.push(reduce(cfg.mode, layers, &per_pe));
+                }
+            }
+            out
+        }
+
+        fn run_threaded(
+            dataset: &Dataset,
+            part: &Partition,
+            cfg: &EngineConfig,
+            shards: &[Vec<VertexId>],
+        ) -> Vec<BatchStats> {
+            let g = &dataset.graph;
+            let layers = cfg.sampler.layers;
+            let p_count = cfg.num_pes;
+            let total = cfg.warmup_batches + cfg.measure_batches;
+            let barrier = std::sync::Barrier::new(p_count);
+            let endpoints = Fabric::endpoints(p_count);
+            let deposits: Vec<Mutex<Option<crate::pipeline::PeWork>>> =
+                (0..p_count).map(|_| Mutex::new(None)).collect();
+            let collected: Mutex<Vec<BatchStats>> =
+                Mutex::new(Vec::with_capacity(cfg.measure_batches));
+
+            std::thread::scope(|scope| {
+                let barrier = &barrier;
+                let deposits = &deposits;
+                let collected = &collected;
+                for (pe, mut ep) in endpoints.into_iter().enumerate() {
+                    let shard = &shards[pe];
+                    scope.spawn(move || {
+                        let _abort_guard = AbortOnPeerPanic;
+                        let mut sampler = cfg.sampler.build(cfg.kind, g, cfg.seed);
+                        let mut cache = LruCache::new(cfg.cache_per_pe);
+                        let mut seed_rng = Pcg64::new(pe_seed(cfg.seed, pe));
+                        for batch in 0..total {
+                            let measuring = batch >= cfg.warmup_batches;
+                            barrier.wait();
+                            let wall = Timer::start();
+                            let b = cfg.batch_per_pe.min(shard.len());
+                            let seeds: Vec<VertexId> = seed_rng
+                                .sample_distinct(shard.len(), b)
+                                .into_iter()
+                                .map(|i| shard[i as usize])
+                                .collect();
+                            let pw = match cfg.mode {
+                                Mode::Cooperative => {
+                                    let ps = sample_cooperative_pe(
+                                        g, part, &mut sampler, &mut ep, seeds, layers,
+                                    );
+                                    let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
+                                    coop_pe_work(layers, &pe_layers, &ps.final_owned, &mut cache)
+                                }
+                                Mode::Independent => {
+                                    let mfg = sampler.sample_mfg(&seeds);
+                                    indep_pe_work(&mfg, layers, measuring, &mut cache)
+                                }
+                            };
+                            sampler.advance_batch();
+                            if measuring {
+                                *deposits[pe].lock().unwrap() = Some(pw);
+                            }
+                            barrier.wait();
+                            let wall_ms = wall.elapsed_ms();
+                            if pe == 0 && measuring {
+                                let per_pe: Vec<crate::pipeline::PeWork> = deposits
+                                    .iter()
+                                    .map(|d| d.lock().unwrap().take().expect("missing PE deposit"))
+                                    .collect();
+                                let mut bs = reduce(cfg.mode, layers, &per_pe);
+                                bs.wall_ms = wall_ms;
+                                collected.lock().unwrap().push(bs);
+                            }
+                        }
+                    });
+                }
+            });
+            collected.into_inner().unwrap()
+        }
+    }
+
+    #[test]
+    fn stream_engine_matches_pr1_reference() {
+        // API-equivalence contract of the pipeline redesign: for both
+        // modes × both exec modes, the stream-drained report is
+        // bit-identical to the PR-1 engine loops at a fixed seed.
+        let (ds, part) = fixture();
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            for exec in [ExecMode::Serial, ExecMode::Threaded] {
+                let mut cfg = small_cfg(mode);
+                cfg.exec = exec;
+                let new = run(&ds, &part, &cfg);
+                let old = pr1_reference::run_pr1(&ds, &part, &cfg);
+                assert_counts_identical(&new, &old, &format!("{}/{}", mode.name(), exec.name()));
+            }
+        }
     }
 }

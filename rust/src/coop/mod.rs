@@ -16,14 +16,13 @@
 //!   (owned behind each PE's thread boundary in threaded mode) and the
 //!   storage/exchange traffic accounting for the feature-loading stage
 //!   (β vs α in the paper's Table 1).
-//! * [`engine`] — the multi-batch driver producing the count/traffic
-//!   reports the repro harnesses feed into the cost model (Tables 4–7,
-//!   Fig. 5). Runs **thread-per-PE by default**
-//!   ([`engine::ExecMode::Threaded`]): one scoped OS thread per PE with
-//!   its own deterministic RNG stream split from the engine seed, real
-//!   channel all-to-all with per-round barriers, and per-PE caches.
-//!   [`engine::ExecMode::Serial`] is the bit-identical single-threaded
-//!   fallback for debugging.
+//! * [`engine`] — the aggregation layer: [`engine::run`] drains a
+//!   [`crate::pipeline::EngineStream`] (which owns the per-PE samplers,
+//!   RNG streams, caches, and fabric — thread-per-PE by default,
+//!   [`engine::ExecMode::Serial`] as the bit-identical fallback) and
+//!   reduces the per-PE work records into the count/traffic reports the
+//!   repro harnesses feed into the cost model (Tables 4–7, Fig. 5).
+//!   Construct runs through [`crate::pipeline::PipelineBuilder`].
 //!
 //! ### Determinism note
 //! All samplers draw per-vertex/per-edge variates from counter-based

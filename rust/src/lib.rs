@@ -10,20 +10,38 @@
 //! and the bandwidth cost model used to reproduce the paper's runtime
 //! tables.
 //!
+//! ## One pipeline behind everything
+//!
+//! The public API is organized around [`pipeline`]: a typed
+//! [`pipeline::PipelineConfig`] / [`pipeline::PipelineBuilder`] (one
+//! validated description of a run, one seed default —
+//! [`pipeline::DEFAULT_SEED`]) and the [`pipeline::MinibatchStream`]
+//! trait (`next_batch()` → per-PE MFG work + feature/fabric traffic).
+//! The CLI subcommands, the repro harnesses, the benches, and the
+//! examples are all thin consumers of that one seam:
+//!
+//! * [`coop::engine::run`] drains a [`pipeline::EngineStream`] into an
+//!   [`coop::engine::EngineReport`] (the count/traffic aggregates behind
+//!   Tables 4–7 and Figure 5);
+//! * [`train::Trainer`] executes batches pulled from a
+//!   [`pipeline::TrainStream`] (shared-coin global batches, or merged
+//!   independent sub-batches — the Figure 9 arms);
+//! * κ > 1 dependent minibatching is a [`sampling::Kappa`] knob on the
+//!   same streams.
+//!
 //! ## Truly parallel cooperative engine
 //!
-//! The cooperative engine is **no longer a simulation**: by default it
-//! spawns one OS thread per PE (scoped threads), gives each PE its own
-//! deterministic RNG stream split from the engine seed, and runs the
-//! all-to-all id redistribution of Algorithm 1 as real channel-based
-//! message exchange with a barrier per round
-//! ([`coop::engine::ExecMode::Threaded`]). Per-PE LRU caches live behind
-//! their thread boundaries. A bit-identical single-threaded fallback
-//! remains for debugging: set [`coop::engine::ExecMode::Serial`] on
-//! [`coop::engine::EngineConfig::exec`] (CLI: `--exec serial`); the
-//! determinism tests in `coop::engine` and `tests/integration_coop.rs`
-//! assert that every count field of the [`coop::engine::EngineReport`]
-//! matches across modes.
+//! The cooperative stream runs **one OS thread per PE**
+//! ([`coop::engine::ExecMode::Threaded`], the default): each PE owns its
+//! sampler, a deterministic RNG stream split from the engine seed, and
+//! its LRU cache, and the all-to-all id redistribution of Algorithm 1 is
+//! real channel-based message exchange with a barrier per round
+//! ([`coop::all_to_all::Fabric`]). A bit-identical single-threaded
+//! fallback remains for debugging ([`coop::engine::ExecMode::Serial`],
+//! CLI `--exec serial`); determinism tests in `coop::engine` and
+//! `tests/integration_coop.rs` assert that every count field of the
+//! report matches across exec modes *and* against the preserved PR-1
+//! engine loops.
 //!
 //! Model forward/backward (Layer 2, JAX) and the aggregation kernels
 //! (Layer 1, Pallas) are AOT-compiled to HLO text by
@@ -37,15 +55,21 @@
 //! ## Quick tour
 //!
 //! ```no_run
-//! use coopgnn::graph::datasets;
-//! use coopgnn::sampling::{SamplerKind, SamplerConfig};
+//! use coopgnn::coop::engine::Mode;
+//! use coopgnn::pipeline::PipelineBuilder;
+//! use coopgnn::sampling::Kappa;
 //!
-//! // Build a synthetic dataset mirroring the paper's `flickr` traits.
-//! let ds = datasets::build("flickr-s", 1).unwrap();
-//! let cfg = SamplerConfig { fanout: 10, layers: 3, ..Default::default() };
-//! let mut sampler = cfg.build(SamplerKind::Labor0, &ds.graph, 1234);
-//! let mfg = sampler.sample_mfg(&[0, 1, 2, 3]);
-//! assert_eq!(mfg.seeds().len(), 4);
+//! // One builder call stands up dataset + partition + streams.
+//! let pipe = PipelineBuilder::new()
+//!     .dataset("flickr-s")       // synthetic twin of the paper's flickr
+//!     .mode(Mode::Cooperative)   // vs Mode::Independent
+//!     .num_pes(4)
+//!     .batch_per_pe(1024)
+//!     .kappa(Kappa::Finite(64))  // dependent minibatching (§3.2)
+//!     .build()
+//!     .unwrap();
+//! let report = pipe.engine_report();
+//! println!("per-PE |S^3| = {:.0}, miss rate {:.3}", report.s[3], report.cache_miss_rate);
 //! ```
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
@@ -55,6 +79,7 @@ pub mod util;
 pub mod graph;
 pub mod sampling;
 pub mod coop;
+pub mod pipeline;
 pub mod costmodel;
 pub mod metrics;
 pub mod runtime;

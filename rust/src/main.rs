@@ -11,15 +11,19 @@
 //! coopgnn info
 //! ```
 //!
-//! (Hand-rolled arg parsing — the offline build has no clap.)
+//! Every subcommand parses through `pipeline::args` (strict: unknown
+//! flags and malformed values are errors) and constructs its run through
+//! `pipeline::PipelineBuilder`. All seed defaults are
+//! `pipeline::DEFAULT_SEED`.
 
-use coopgnn::coop::engine::{run as engine_run, EngineConfig, ExecMode, Mode};
-use coopgnn::graph::{datasets, partition};
+use coopgnn::coop::engine::{ExecMode, Mode};
+use coopgnn::graph::datasets;
+use coopgnn::pipeline::args::{switch, val, ArgMap, ArgSpec};
+use coopgnn::pipeline::{Partitioner, PipelineBuilder, DEFAULT_SEED};
 use coopgnn::repro::{self, Ctx};
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{block, Kappa, SamplerConfig, SamplerKind};
-use coopgnn::train::{Trainer, TrainerOptions};
-use std::collections::HashMap;
+use coopgnn::train::Trainer;
 use std::path::PathBuf;
 
 fn main() {
@@ -29,53 +33,52 @@ fn main() {
     }
 }
 
-/// Parse `--key value` and `--flag` style args after the subcommand.
-struct Args {
-    flags: HashMap<String, String>,
-}
+const REPRO_SPECS: &[ArgSpec] = &[
+    val("out", "output directory (default: results)"),
+    switch("quick", "reduced sweeps for smoke runs"),
+    val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+    val("artifacts", "AOT artifacts directory (default: artifacts)"),
+    val("exec", "serial|threaded (default: threaded)"),
+];
 
-impl Args {
-    fn parse(rest: &[String]) -> Args {
-        let mut flags = HashMap::new();
-        let mut i = 0;
-        while i < rest.len() {
-            let a = &rest[i];
-            if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                    flags.insert(key.to_string(), rest[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.insert(key.to_string(), "true".to_string());
-                    i += 1;
-                }
-            } else {
-                eprintln!("warning: ignoring stray argument {a}");
-                i += 1;
-            }
-        }
-        Args { flags }
-    }
+const TRAIN_SPECS: &[ArgSpec] = &[
+    val("config", "artifact config name (default: tiny-b32)"),
+    val("dataset", "registry dataset (default: the config's dataset)"),
+    val("steps", "training steps (default: 300)"),
+    val("eval-every", "evaluation interval (default: 50)"),
+    val("sampler", "ns|labor0|labor*|rw (default: labor0)"),
+    val("kappa", "batch dependency K or `inf` (default: 1)"),
+    val("fanout", "sampler fanout (default: 10)"),
+    val("lr", "learning-rate override (may be negative — rejected later)"),
+    val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+    val("artifacts", "AOT artifacts directory (default: artifacts)"),
+    val("exec", "serial|threaded (default: threaded)"),
+];
 
-    fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
-    }
+const ENGINE_SPECS: &[ArgSpec] = &[
+    val("mode", "coop|indep (default: coop)"),
+    val("dataset", "registry dataset (default: tiny)"),
+    val("pes", "number of PEs (default: 4)"),
+    val("batch", "per-PE batch size (default: 1024)"),
+    val("cache", "LRU rows per PE (default: dataset-derived)"),
+    val("sampler", "ns|labor0|labor*|rw (default: labor0)"),
+    val("kappa", "batch dependency K or `inf` (default: 1)"),
+    val("fanout", "sampler fanout (default: 10)"),
+    val("layers", "GNN layers (default: 3)"),
+    val("partitioner", "random|metis|ldg (default: random)"),
+    val("exec", "serial|threaded (default: threaded)"),
+    val("warmup", "warmup batches (default: 4)"),
+    val("batches", "measured batches (default: 8)"),
+    val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+];
 
-    fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
-        self.get(key).unwrap_or(default)
-    }
-
-    fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-
-    fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
-    }
-
-    fn has(&self, key: &str) -> bool {
-        self.flags.contains_key(key)
-    }
-}
+const CAPS_SPECS: &[ArgSpec] = &[
+    val("dataset", "registry dataset (default: tiny)"),
+    val("batch", "batch size (default: 256)"),
+    val("sampler", "ns|labor0|labor*|rw (default: labor0)"),
+    val("trials", "estimation trials (default: 5)"),
+    val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+];
 
 fn real_main() -> coopgnn::Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -86,20 +89,20 @@ fn real_main() -> coopgnn::Result<()> {
     match cmd {
         "repro" => {
             let id = argv.get(1).map(|s| s.as_str()).unwrap_or("all");
-            let rest = Args::parse(argv.get(2..).unwrap_or(&[]));
+            let rest = ArgMap::parse(argv.get(2..).unwrap_or(&[]), REPRO_SPECS)?;
             let ctx = Ctx {
                 out: PathBuf::from(rest.get_or("out", "results")),
                 quick: rest.has("quick"),
-                seed: rest.u64_or("seed", 0xC0FFEE),
+                seed: rest.or("seed", DEFAULT_SEED)?,
                 artifacts: PathBuf::from(rest.get_or("artifacts", "artifacts")),
                 exec: ExecMode::parse(rest.get_or("exec", "threaded"))
                     .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
             };
             repro::run(id, &ctx)
         }
-        "train" => cmd_train(&Args::parse(&argv[1..])),
-        "engine" => cmd_engine(&Args::parse(&argv[1..])),
-        "caps" => cmd_caps(&Args::parse(&argv[1..])),
+        "train" => cmd_train(&ArgMap::parse(&argv[1..], TRAIN_SPECS)?),
+        "engine" => cmd_engine(&ArgMap::parse(&argv[1..], ENGINE_SPECS)?),
+        "caps" => cmd_caps(&ArgMap::parse(&argv[1..], CAPS_SPECS)?),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
             print_usage();
@@ -112,38 +115,46 @@ fn real_main() -> coopgnn::Result<()> {
     }
 }
 
-fn cmd_train(args: &Args) -> coopgnn::Result<()> {
+fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
     let config = args.get_or("config", "tiny-b32").to_string();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&artifacts)?;
     let art = manifest.get(&config)?;
-    let ds_name = args.get_or("dataset", &art.dataset).to_string();
-    let ds = datasets::build(&ds_name, args.u64_or("seed", 1))?;
-    let steps = args.usize_or("steps", 300);
-    let eval_every = args.usize_or("eval-every", 50);
-    let opts = TrainerOptions {
-        kind: SamplerKind::parse(args.get_or("sampler", "labor0"))
-            .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
-        kappa: Kappa::parse(args.get_or("kappa", "1"))
-            .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
-        fanout: args.usize_or("fanout", 10),
-        seed: args.u64_or("seed", 0x7EA1),
-        lr: args.get("lr").and_then(|v| v.parse().ok()),
-        ..Default::default()
-    };
-    let mut trainer = Trainer::new(&rt, &manifest, &config, &ds, &opts)?;
+    let pipe = PipelineBuilder::new()
+        .dataset(args.get_or("dataset", &art.dataset))
+        .sampler(
+            SamplerKind::parse(args.get_or("sampler", "labor0"))
+                .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
+        )
+        .kappa(
+            Kappa::parse(args.get_or("kappa", "1"))
+                .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
+        )
+        .fanout(args.or("fanout", 10usize)?)
+        .seed(args.or("seed", DEFAULT_SEED)?)
+        .exec(
+            ExecMode::parse(args.get_or("exec", "threaded"))
+                .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
+        )
+        .build()?;
+    let steps = args.or("steps", 300usize)?;
+    let eval_every = args.or("eval-every", 50usize)?;
+    let mut opts = pipe.trainer_options();
+    opts.lr = args.opt("lr")?;
+    let mut trainer = Trainer::new(&rt, &manifest, &config, &pipe.ds, &opts)?;
     println!(
-        "training {config} on {ds_name}: {} params, {} train vertices, batch {}",
+        "training {config} on {}: {} params, {} train vertices, batch {}",
+        pipe.ds.name,
         trainer.state.num_scalars(),
-        ds.train.len(),
+        pipe.ds.train.len(),
         trainer.art.batch
     );
     let t0 = std::time::Instant::now();
     for step in 1..=steps {
         let s = trainer.step()?;
         if step % eval_every == 0 || step == 1 || step == steps {
-            let val = trainer.evaluate(&ds.val, 1234)?;
+            let val = trainer.evaluate(&pipe.ds.val, 1234)?;
             println!(
                 "step {step:>5}  loss {:.4}  batch-acc {:.3}  val-acc {:.4}  val-F1 {:.4}  \
                  [samp {:.1}ms pad {:.1}ms feat {:.1}ms exec {:.1}ms]",
@@ -152,7 +163,7 @@ fn cmd_train(args: &Args) -> coopgnn::Result<()> {
             );
         }
     }
-    let test = trainer.evaluate(&ds.test, 1234)?;
+    let test = trainer.evaluate(&pipe.ds.test, 1234)?;
     println!(
         "done in {:.1}s: test acc {:.4}, test F1 {:.4}",
         t0.elapsed().as_secs_f64(),
@@ -162,43 +173,47 @@ fn cmd_train(args: &Args) -> coopgnn::Result<()> {
     Ok(())
 }
 
-fn cmd_engine(args: &Args) -> coopgnn::Result<()> {
-    let ds = datasets::build(args.get_or("dataset", "tiny"), args.u64_or("seed", 1))?;
-    let pes = args.usize_or("pes", 4);
-    let mode = match args.get_or("mode", "coop") {
-        "coop" => Mode::Cooperative,
-        "indep" => Mode::Independent,
-        other => anyhow::bail!("bad --mode {other}"),
-    };
-    let part = match args.get_or("partitioner", "random") {
-        "random" => partition::random(&ds.graph, pes, 1),
-        "metis" => partition::multilevel(&ds.graph, pes, 1),
-        "ldg" => partition::ldg(&ds.graph, pes, 1),
-        other => anyhow::bail!("bad --partitioner {other}"),
-    };
-    let mut cfg = EngineConfig {
-        mode,
-        exec: ExecMode::parse(args.get_or("exec", "threaded"))
-            .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
-        num_pes: pes,
-        batch_per_pe: args.usize_or("batch", 1024),
-        cache_per_pe: args.usize_or("cache", ds.cache_size / pes.max(1)),
-        kind: SamplerKind::parse(args.get_or("sampler", "labor0"))
-            .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
-        warmup_batches: args.usize_or("warmup", 4),
-        measure_batches: args.usize_or("batches", 8),
-        seed: args.u64_or("seed", 2),
-        ..Default::default()
-    };
-    cfg.sampler.kappa =
-        Kappa::parse(args.get_or("kappa", "1")).ok_or_else(|| anyhow::anyhow!("bad --kappa"))?;
-    let r = engine_run(&ds, &part, &cfg);
+fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
+    let mut b = PipelineBuilder::new()
+        .dataset(args.get_or("dataset", "tiny"))
+        .mode(
+            Mode::parse(args.get_or("mode", "coop"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mode (coop|indep)"))?,
+        )
+        .exec(
+            ExecMode::parse(args.get_or("exec", "threaded"))
+                .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
+        )
+        .num_pes(args.or("pes", 4usize)?)
+        .batch_per_pe(args.or("batch", 1024usize)?)
+        .partitioner(
+            Partitioner::parse(args.get_or("partitioner", "random"))
+                .ok_or_else(|| anyhow::anyhow!("bad --partitioner (random|metis|ldg)"))?,
+        )
+        .sampler(
+            SamplerKind::parse(args.get_or("sampler", "labor0"))
+                .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
+        )
+        .kappa(
+            Kappa::parse(args.get_or("kappa", "1"))
+                .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
+        )
+        .fanout(args.or("fanout", 10usize)?)
+        .layers(args.or("layers", 3usize)?)
+        .warmup_batches(args.or("warmup", 4usize)?)
+        .measure_batches(args.or("batches", 8usize)?)
+        .seed(args.or("seed", DEFAULT_SEED)?);
+    if let Some(cache) = args.opt::<usize>("cache")? {
+        b = b.cache_per_pe(cache);
+    }
+    let pipe = b.build()?;
+    let r = pipe.engine_report();
     println!(
         "mode={} exec={} PEs={} cross-edge-ratio={:.3}",
         r.mode,
-        cfg.exec.name(),
+        pipe.cfg.exec.name(),
         r.num_pes,
-        part.cross_edge_ratio(&ds.graph)
+        pipe.part.cross_edge_ratio(&pipe.ds.graph)
     );
     println!("per-layer S (max/PE, avg): {:?}", r.s.iter().map(|x| *x as u64).collect::<Vec<_>>());
     println!("per-layer E: {:?}", r.e.iter().map(|x| *x as u64).collect::<Vec<_>>());
@@ -218,23 +233,33 @@ fn cmd_engine(args: &Args) -> coopgnn::Result<()> {
     Ok(())
 }
 
-fn cmd_caps(args: &Args) -> coopgnn::Result<()> {
-    let ds = datasets::build(args.get_or("dataset", "tiny"), args.u64_or("seed", 1))?;
-    let batch = args.usize_or("batch", 256);
+fn cmd_caps(args: &ArgMap) -> coopgnn::Result<()> {
     let kind = SamplerKind::parse(args.get_or("sampler", "labor0"))
         .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?;
+    let pipe = PipelineBuilder::new()
+        .dataset(args.get_or("dataset", "tiny"))
+        .sampler(kind)
+        .seed(args.or("seed", DEFAULT_SEED)?)
+        .build()?;
+    let batch = args.or("batch", 256usize)?;
     let cfg = SamplerConfig::default();
     let caps = block::estimate_caps(
         &cfg,
         kind,
-        &ds.graph,
-        &ds.train,
+        &pipe.ds.graph,
+        &pipe.ds.train,
         batch,
-        args.usize_or("trials", 5),
+        args.or("trials", 5usize)?,
         1.25,
-        args.u64_or("seed", 42),
+        args.or("seed", DEFAULT_SEED)?,
     );
-    println!("dataset {} batch {batch} {}: k={} n={:?}", ds.name, kind.name(), caps.k, caps.n);
+    println!(
+        "dataset {} batch {batch} {}: k={} n={:?}",
+        pipe.ds.name,
+        kind.name(),
+        caps.k,
+        caps.n
+    );
     Ok(())
 }
 
@@ -267,6 +292,9 @@ fn cmd_info() -> coopgnn::Result<()> {
 fn print_usage() {
     println!(
         "coopgnn — Cooperative Minibatching in GNNs\n\
+         \n\
+         All runs are built through coopgnn::pipeline (one seed default: 0xC0FFEE);\n\
+         unknown flags and malformed values are errors.\n\
          \n\
          USAGE:\n\
          \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|all>\n\

@@ -1,0 +1,194 @@
+//! The single `--key value` parse layer behind every CLI surface.
+//!
+//! Replaces the hand-rolled per-subcommand `Args` struct that used to
+//! live in `main.rs`, fixing its two silent failure modes:
+//!
+//! * **unknown keys were swallowed** — `--batchs 12` went into a map
+//!   nobody read and the run proceeded with the default. Here every
+//!   subcommand declares its [`ArgSpec`] table and an unknown flag is a
+//!   hard error listing the valid flags.
+//! * **malformed and negative values** — a value that fails to parse
+//!   used to fall back to the default without a word (`usize_or`
+//!   swallowed the parse error); now it errors. Negative numbers
+//!   (`--lr -0.5`) are recognised as values, never misread as flags.
+
+use std::collections::HashMap;
+
+/// Whether a flag carries a value (`--seed 7`) or is a bare switch
+/// (`--quick`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    Value,
+    Switch,
+}
+
+/// One legal flag of a subcommand: its key (without `--`), kind, and the
+/// help line shown when parsing fails.
+#[derive(Clone, Copy, Debug)]
+pub struct ArgSpec {
+    pub key: &'static str,
+    pub kind: ArgKind,
+    pub help: &'static str,
+}
+
+/// Declare a value-carrying flag.
+pub const fn val(key: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { key, kind: ArgKind::Value, help }
+}
+
+/// Declare a bare switch.
+pub const fn switch(key: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { key, kind: ArgKind::Switch, help }
+}
+
+fn listing(specs: &[ArgSpec]) -> String {
+    specs
+        .iter()
+        .map(|s| match s.kind {
+            ArgKind::Value => format!("  --{} <value>  {}", s.key, s.help),
+            ArgKind::Switch => format!("  --{}  {}", s.key, s.help),
+        })
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Parsed flags, validated against an [`ArgSpec`] table.
+#[derive(Clone, Debug, Default)]
+pub struct ArgMap {
+    flags: HashMap<String, String>,
+}
+
+impl ArgMap {
+    /// Parse `--key value` / `--switch` tokens. Errors on: unknown keys
+    /// (listing the valid ones), stray positional tokens, duplicate
+    /// flags, and value flags with a missing value.
+    pub fn parse(rest: &[String], specs: &[ArgSpec]) -> crate::Result<ArgMap> {
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            let Some(key) = a.strip_prefix("--") else {
+                anyhow::bail!(
+                    "unexpected argument `{a}` (flags are --key value); valid flags:\n{}",
+                    listing(specs)
+                );
+            };
+            let Some(spec) = specs.iter().find(|s| s.key == key) else {
+                anyhow::bail!("unknown flag --{key}; valid flags:\n{}", listing(specs));
+            };
+            let value = match spec.kind {
+                ArgKind::Switch => {
+                    i += 1;
+                    "true".to_string()
+                }
+                ArgKind::Value => {
+                    let Some(v) = rest.get(i + 1) else {
+                        anyhow::bail!("flag --{key} requires a value");
+                    };
+                    // a following `--token` is the next flag, not a value;
+                    // negative numbers (`-0.5`) carry a single dash and are
+                    // consumed as ordinary values
+                    if v.starts_with("--") {
+                        anyhow::bail!("flag --{key} requires a value (found flag `{v}`)");
+                    }
+                    i += 2;
+                    v.clone()
+                }
+            };
+            if flags.insert(key.to_string(), value).is_some() {
+                anyhow::bail!("flag --{key} given twice");
+            }
+        }
+        Ok(ArgMap { flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    /// Typed access: `Ok(None)` when absent, `Err` when present but
+    /// malformed — a bad value never silently falls back to a default.
+    pub fn opt<T: std::str::FromStr>(&self, key: &str) -> crate::Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(raw) => raw.parse::<T>().map(Some).map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid value `{raw}` for --{key} (expected {})",
+                    std::any::type_name::<T>()
+                )
+            }),
+        }
+    }
+
+    /// Typed access with a default for absent flags; malformed values
+    /// still error.
+    pub fn or<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T> {
+        Ok(self.opt(key)?.unwrap_or(default))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPECS: &[ArgSpec] = &[
+        val("seed", "rng seed"),
+        val("lr", "learning rate"),
+        val("steps", "step count"),
+        switch("quick", "reduced sweep"),
+    ];
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let m = ArgMap::parse(&args(&["--seed", "7", "--quick"]), SPECS).unwrap();
+        assert_eq!(m.or::<u64>("seed", 0).unwrap(), 7);
+        assert!(m.has("quick"));
+        assert_eq!(m.or::<usize>("steps", 300).unwrap(), 300);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_with_listing() {
+        let e = ArgMap::parse(&args(&["--sede", "7"]), SPECS).unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("unknown flag --sede"), "{msg}");
+        assert!(msg.contains("--seed"), "listing must name valid flags: {msg}");
+        assert!(msg.contains("--quick"), "listing must name valid flags: {msg}");
+    }
+
+    #[test]
+    fn accepts_negative_numbers_as_values() {
+        let m = ArgMap::parse(&args(&["--lr", "-0.5", "--steps", "-3"]), SPECS).unwrap();
+        assert_eq!(m.opt::<f32>("lr").unwrap(), Some(-0.5));
+        assert_eq!(m.opt::<i64>("steps").unwrap(), Some(-3));
+    }
+
+    #[test]
+    fn rejects_malformed_values_instead_of_defaulting() {
+        let m = ArgMap::parse(&args(&["--steps", "many"]), SPECS).unwrap();
+        assert!(m.or::<usize>("steps", 300).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(ArgMap::parse(&args(&["--seed"]), SPECS).is_err());
+        assert!(ArgMap::parse(&args(&["--seed", "--quick"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn rejects_stray_positionals_and_duplicates() {
+        assert!(ArgMap::parse(&args(&["stray"]), SPECS).is_err());
+        assert!(ArgMap::parse(&args(&["--seed", "1", "--seed", "2"]), SPECS).is_err());
+    }
+}

@@ -1,0 +1,340 @@
+//! Typed pipeline configuration + builder — the one construction path
+//! behind the CLI subcommands, the repro harnesses, the benches, and the
+//! examples.
+
+use super::stream::EngineStream;
+use super::train_stream::Batching;
+use crate::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
+use crate::graph::{datasets, partition, Csr, Dataset, Partition};
+use crate::sampling::{Kappa, SamplerConfig, SamplerKind};
+use crate::train::TrainerOptions;
+
+/// The crate-wide default RNG seed.
+///
+/// Before the pipeline redesign every stack had its own default
+/// (`repro` 0xC0FFEE, `train` mixed 1 and 0x7EA1, `engine` 1 and 2);
+/// now everything that does not receive an explicit seed derives from
+/// this one constant: the dataset generator, the partitioner, the per-PE
+/// seed-RNG streams, and the sampler coins. Subcommand `--seed` flags
+/// and explicit config fields still override it.
+pub const DEFAULT_SEED: u64 = 0xC0FFEE;
+
+/// Which 1-D graph partitioner assigns vertices to PEs (paper §3.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// uniform random assignment (the paper's baseline).
+    Random,
+    /// multilevel coarsen–partition–refine ("metis" on the CLI).
+    Multilevel,
+    /// linear deterministic greedy streaming.
+    Ldg,
+}
+
+impl Partitioner {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Random => "random",
+            Partitioner::Multilevel => "metis",
+            Partitioner::Ldg => "ldg",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Partitioner> {
+        match s.to_ascii_lowercase().as_str() {
+            "random" => Some(Partitioner::Random),
+            "metis" | "multilevel" => Some(Partitioner::Multilevel),
+            "ldg" => Some(Partitioner::Ldg),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self, g: &Csr, num_parts: usize, seed: u64) -> Partition {
+        match self {
+            Partitioner::Random => partition::random(g, num_parts, seed),
+            Partitioner::Multilevel => partition::multilevel(g, num_parts, seed),
+            Partitioner::Ldg => partition::ldg(g, num_parts, seed),
+        }
+    }
+}
+
+/// Everything needed to stand up a minibatch pipeline: dataset, PE
+/// topology, minibatching strategy, sampler, cache, and measurement
+/// window. Validated by [`PipelineConfig::validate`]; constructed
+/// fluently through [`PipelineBuilder`].
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// registry dataset name (see `coopgnn info`).
+    pub dataset: String,
+    pub mode: Mode,
+    pub exec: ExecMode,
+    pub num_pes: usize,
+    /// per-PE batch size b (global batch = b · P).
+    pub batch_per_pe: usize,
+    pub partitioner: Partitioner,
+    pub kind: SamplerKind,
+    pub fanout: usize,
+    pub layers: usize,
+    /// batch-dependency κ of paper §3.2 (1 = independent batches).
+    pub kappa: Kappa,
+    /// LRU rows per PE; `None` = dataset-derived
+    /// (`ds.cache_size / num_pes`, floored at 64).
+    pub cache_per_pe: Option<usize>,
+    pub warmup_batches: usize,
+    pub measure_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        let s = SamplerConfig::default();
+        PipelineConfig {
+            dataset: "tiny".to_string(),
+            mode: Mode::Independent,
+            exec: ExecMode::Threaded,
+            num_pes: 4,
+            batch_per_pe: 1024,
+            partitioner: Partitioner::Random,
+            kind: SamplerKind::Labor0,
+            fanout: s.fanout,
+            layers: s.layers,
+            kappa: s.kappa,
+            cache_per_pe: None,
+            warmup_batches: 4,
+            measure_batches: 16,
+            seed: DEFAULT_SEED,
+        }
+    }
+}
+
+impl PipelineConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.num_pes >= 1, "pipeline needs at least one PE");
+        anyhow::ensure!(self.batch_per_pe >= 1, "per-PE batch size must be >= 1");
+        anyhow::ensure!(self.layers >= 1, "pipeline needs at least one GNN layer");
+        anyhow::ensure!(self.fanout >= 1, "sampler fanout must be >= 1");
+        anyhow::ensure!(self.measure_batches >= 1, "need at least one measured batch");
+        anyhow::ensure!(
+            datasets::spec(&self.dataset).is_some(),
+            "unknown dataset `{}`; registry: {:?}",
+            self.dataset,
+            datasets::SPECS.iter().map(|s| s.name).collect::<Vec<_>>()
+        );
+        Ok(())
+    }
+
+    pub fn sampler_config(&self) -> SamplerConfig {
+        SamplerConfig {
+            fanout: self.fanout,
+            layers: self.layers,
+            kappa: self.kappa,
+            ..Default::default()
+        }
+    }
+
+    /// Lower to the engine's config, resolving the dataset-derived cache
+    /// default.
+    pub fn engine_config(&self, ds: &Dataset) -> EngineConfig {
+        EngineConfig {
+            mode: self.mode,
+            exec: self.exec,
+            num_pes: self.num_pes,
+            batch_per_pe: self.batch_per_pe,
+            kind: self.kind,
+            sampler: self.sampler_config(),
+            cache_per_pe: self
+                .cache_per_pe
+                .unwrap_or_else(|| (ds.cache_size / self.num_pes).max(64)),
+            warmup_batches: self.warmup_batches,
+            measure_batches: self.measure_batches,
+            seed: self.seed,
+        }
+    }
+
+    /// Trainer options mirroring this pipeline (sampler, κ, fanout,
+    /// seed, exec; single-sampler batching).
+    pub fn trainer_options(&self) -> TrainerOptions {
+        TrainerOptions {
+            kind: self.kind,
+            kappa: self.kappa,
+            fanout: self.fanout,
+            seed: self.seed,
+            lr: None,
+            exec: self.exec,
+            batching: Batching::Single,
+        }
+    }
+}
+
+/// Fluent constructor for a [`Pipeline`]. Every setter has the
+/// [`PipelineConfig`] field of the same name; [`PipelineBuilder::build`]
+/// validates, generates the dataset, and partitions the graph.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineBuilder {
+    cfg: PipelineConfig,
+}
+
+impl PipelineBuilder {
+    pub fn new() -> PipelineBuilder {
+        PipelineBuilder::default()
+    }
+
+    pub fn dataset(mut self, name: &str) -> Self {
+        self.cfg.dataset = name.to_string();
+        self
+    }
+
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.cfg.mode = mode;
+        self
+    }
+
+    pub fn exec(mut self, exec: ExecMode) -> Self {
+        self.cfg.exec = exec;
+        self
+    }
+
+    pub fn num_pes(mut self, p: usize) -> Self {
+        self.cfg.num_pes = p;
+        self
+    }
+
+    pub fn batch_per_pe(mut self, b: usize) -> Self {
+        self.cfg.batch_per_pe = b;
+        self
+    }
+
+    pub fn partitioner(mut self, p: Partitioner) -> Self {
+        self.cfg.partitioner = p;
+        self
+    }
+
+    pub fn sampler(mut self, kind: SamplerKind) -> Self {
+        self.cfg.kind = kind;
+        self
+    }
+
+    pub fn fanout(mut self, k: usize) -> Self {
+        self.cfg.fanout = k;
+        self
+    }
+
+    pub fn layers(mut self, l: usize) -> Self {
+        self.cfg.layers = l;
+        self
+    }
+
+    pub fn kappa(mut self, kappa: Kappa) -> Self {
+        self.cfg.kappa = kappa;
+        self
+    }
+
+    pub fn cache_per_pe(mut self, rows: usize) -> Self {
+        self.cfg.cache_per_pe = Some(rows);
+        self
+    }
+
+    pub fn warmup_batches(mut self, n: usize) -> Self {
+        self.cfg.warmup_batches = n;
+        self
+    }
+
+    pub fn measure_batches(mut self, n: usize) -> Self {
+        self.cfg.measure_batches = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Validate, build the dataset (seeded from `cfg.seed`), and
+    /// partition the graph.
+    pub fn build(self) -> crate::Result<Pipeline> {
+        self.cfg.validate()?;
+        let ds = datasets::build(&self.cfg.dataset, self.cfg.seed)?;
+        let part = self.cfg.partitioner.build(&ds.graph, self.cfg.num_pes, self.cfg.seed);
+        Ok(Pipeline { cfg: self.cfg, ds, part })
+    }
+}
+
+/// A built pipeline: validated config + generated dataset + partition.
+///
+/// `cfg` is public so sweeps (κ, cache size, mode, exec, batch window)
+/// can retune between [`Pipeline::engine_report`] calls without
+/// regenerating the dataset; anything that changes the partition
+/// (PE count, partitioner) must go through the `set_*` helpers.
+pub struct Pipeline {
+    pub cfg: PipelineConfig,
+    pub ds: Dataset,
+    pub part: Partition,
+}
+
+impl Pipeline {
+    /// A fresh measurement stream over the current config.
+    pub fn stream(&self) -> EngineStream<'_> {
+        EngineStream::new(&self.ds, &self.part, &self.cfg.engine_config(&self.ds))
+    }
+
+    /// Drain a fresh stream into the aggregated engine report
+    /// (warmup + measure batches per the current config).
+    pub fn engine_report(&self) -> EngineReport {
+        engine::run(&self.ds, &self.part, &self.cfg.engine_config(&self.ds))
+    }
+
+    /// Trainer options mirroring this pipeline.
+    pub fn trainer_options(&self) -> TrainerOptions {
+        self.cfg.trainer_options()
+    }
+
+    /// Re-partition the current graph with a different partitioner.
+    pub fn set_partitioner(&mut self, p: Partitioner) {
+        self.cfg.partitioner = p;
+        self.part = p.build(&self.ds.graph, self.cfg.num_pes, self.cfg.seed);
+    }
+
+    /// Change the PE count (re-partitions the graph).
+    pub fn set_num_pes(&mut self, num_pes: usize) {
+        self.cfg.num_pes = num_pes;
+        self.part = self.cfg.partitioner.build(&self.ds.graph, num_pes, self.cfg.seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_rejects_invalid_configs() {
+        assert!(PipelineBuilder::new().dataset("no-such-dataset").build().is_err());
+        assert!(PipelineBuilder::new().num_pes(0).build().is_err());
+        assert!(PipelineBuilder::new().layers(0).build().is_err());
+        assert!(PipelineBuilder::new().batch_per_pe(0).build().is_err());
+        assert!(PipelineBuilder::new().measure_batches(0).build().is_err());
+    }
+
+    #[test]
+    fn build_partitions_to_pe_count() {
+        let pipe = PipelineBuilder::new().dataset("tiny").num_pes(3).build().unwrap();
+        assert_eq!(pipe.part.num_parts, 3);
+        assert_eq!(pipe.cfg.seed, DEFAULT_SEED);
+    }
+
+    #[test]
+    fn set_num_pes_repartitions() {
+        let mut pipe = PipelineBuilder::new().dataset("tiny").num_pes(2).build().unwrap();
+        pipe.set_num_pes(5);
+        assert_eq!(pipe.part.num_parts, 5);
+        pipe.set_partitioner(Partitioner::Multilevel);
+        assert_eq!(pipe.part.num_parts, 5);
+    }
+
+    #[test]
+    fn cache_default_derives_from_dataset()  {
+        let pipe = PipelineBuilder::new().dataset("tiny").num_pes(4).build().unwrap();
+        let ec = pipe.cfg.engine_config(&pipe.ds);
+        assert_eq!(ec.cache_per_pe, (pipe.ds.cache_size / 4).max(64));
+        let pipe2 = PipelineBuilder::new().dataset("tiny").cache_per_pe(123).build().unwrap();
+        assert_eq!(pipe2.cfg.engine_config(&pipe2.ds).cache_per_pe, 123);
+    }
+}

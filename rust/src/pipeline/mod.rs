@@ -1,0 +1,51 @@
+//! The unified minibatch pipeline — one construction path, one stream.
+//!
+//! The paper's central claim is that cooperative, independent, and
+//! dependent (κ > 1) minibatching are interchangeable strategies over
+//! the *same* stream of minibatches. This module is that claim as API:
+//!
+//! * [`args`] — the single strict `--key value` parse layer (unknown
+//!   flags error with a listing; malformed values never silently
+//!   default; negative numbers are values, not flags).
+//! * [`PipelineConfig`] / [`PipelineBuilder`] — one typed, validated
+//!   description of a run (dataset, PEs, mode, exec, partitioner,
+//!   sampler, fanout, κ, cache, seed), replacing the per-stack config
+//!   plumbing that used to be duplicated across `main.rs`, `repro::Ctx`,
+//!   the benches, and the examples. All seed defaults funnel through
+//!   [`DEFAULT_SEED`].
+//! * [`MinibatchStream`] — `fn next_batch(&mut self) -> Minibatch`:
+//!   per-PE MFG work plus feature/fabric traffic accounting.
+//!   [`EngineStream`] is the thread-per-PE measurement stream
+//!   `coop::engine::run` drains; [`TrainStream`] is the training front
+//!   half (`Batching::Single` shared-coin global batches or
+//!   `Batching::IndepMerged` block-diagonal merges) the `Trainer`
+//!   consumes.
+//!
+//! Every entry stack — CLI `engine`/`train`, the repro harnesses,
+//! `bench_coop`/`bench_train_step`, and all four examples — builds its
+//! run through here, so a new workload is a one-line consumer change
+//! rather than a fifth stack.
+//!
+//! ```no_run
+//! use coopgnn::coop::engine::Mode;
+//! use coopgnn::pipeline::PipelineBuilder;
+//!
+//! let pipe = PipelineBuilder::new()
+//!     .dataset("tiny")
+//!     .mode(Mode::Cooperative)
+//!     .num_pes(4)
+//!     .batch_per_pe(64)
+//!     .build()
+//!     .unwrap();
+//! let report = pipe.engine_report();
+//! println!("per-PE |S^3| = {:.0}", report.s[3]);
+//! ```
+
+pub mod args;
+pub mod config;
+pub mod stream;
+pub mod train_stream;
+
+pub use config::{Partitioner, Pipeline, PipelineBuilder, PipelineConfig, DEFAULT_SEED};
+pub use stream::{EngineStream, Minibatch, MinibatchStream, PeWork};
+pub use train_stream::{sample_indep_parts, Batching, TrainStream, SEED_DRAW_SALT};

@@ -1,0 +1,422 @@
+//! `MinibatchStream` — the one seam every consumer pulls batches from.
+//!
+//! The paper's three strategies (independent, cooperative, dependent
+//! κ > 1) are interchangeable policies over the *same* stream of
+//! minibatches. This module makes that literal: a stream yields one
+//! [`Minibatch`] per call — per-PE work records with feature/fabric
+//! traffic accounting, plus (for training streams) a merged MFG — and
+//! the consumers differ only in what they do with it:
+//!
+//! * `coop::engine::run` drains a stream and reduces the per-PE records
+//!   into an `EngineReport` (Tables 4–7, Figure 5);
+//! * `train::Trainer` executes the merged MFG through the AOT train step;
+//! * benches time `next_batch` directly.
+//!
+//! [`EngineStream`] is the measurement stream: it owns the per-PE
+//! samplers, seed-RNG streams, LRU caches, and (cooperative mode) the
+//! live channel fabric, and preserves the engine's determinism contract —
+//! for a fixed seed, [`ExecMode::Serial`] and [`ExecMode::Threaded`]
+//! yield bit-identical counts, and both match the pre-stream PR-1 engine
+//! loops (tested in `coop::engine`). Training streams live in
+//! [`super::train_stream`].
+
+use crate::coop::all_to_all::{Fabric, PeEndpoint};
+use crate::coop::cache::LruCache;
+use crate::coop::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
+use crate::coop::engine::{EngineConfig, ExecMode, Mode};
+use crate::coop::feature_loader::load_pe;
+use crate::coop::indep::sample_independent;
+use crate::graph::{Csr, Dataset, Partition, VertexId};
+use crate::sampling::{Mfg, Sampler};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Timer;
+
+/// One PE's work record for one minibatch: the per-layer counts of the
+/// paper's Table 1 plus feature/fabric traffic and stage wall-clock.
+#[derive(Clone, Debug, Default)]
+pub struct PeWork {
+    /// |S_p^l| for l in 0..=L (final entry = owned input vertices).
+    pub counts_s: Vec<u64>,
+    /// |E_p^l| for l in 0..L.
+    pub counts_e: Vec<u64>,
+    /// |S̃_p^{l+1}| for l in 0..L (cooperative; 0 for independent).
+    pub counts_tilde: Vec<u64>,
+    /// cross-PE portion c·|S̃_p^{l+1}| for l in 0..L.
+    pub counts_cross: Vec<u64>,
+    /// vertex rows requested through this PE's cache.
+    pub requested: u64,
+    /// cache misses (rows read from storage at β bandwidth).
+    pub misses: u64,
+    /// feature rows crossing the fabric (cooperative; α bandwidth).
+    pub fabric: u64,
+    /// S_p^L vertex list (independent mode; feeds the duplication-factor
+    /// union in the engine reduction).
+    pub input_vertices: Option<Vec<VertexId>>,
+    /// this PE's elapsed sampling time (includes exchange waits in
+    /// threaded mode).
+    pub samp_ms: f64,
+    /// this PE's elapsed feature-loading time.
+    pub feat_ms: f64,
+}
+
+/// One minibatch pulled from a stream.
+#[derive(Clone, Debug, Default)]
+pub struct Minibatch {
+    /// 0-based position in the stream.
+    pub index: usize,
+    /// one record per PE.
+    pub per_pe: Vec<PeWork>,
+    /// the merged global MFG, when the stream materializes one (training
+    /// streams do; measurement streams yield counts only).
+    pub merged: Option<Mfg>,
+    /// wall-clock of the whole batch (all PEs, concurrent in threaded
+    /// mode).
+    pub wall_ms: f64,
+}
+
+/// A source of minibatches. Object-safe: consumers hold
+/// `&mut dyn MinibatchStream` and stay agnostic of the strategy behind
+/// it.
+pub trait MinibatchStream {
+    /// Produce the next minibatch, advancing all per-PE RNG/cache state.
+    fn next_batch(&mut self) -> Minibatch;
+    fn num_pes(&self) -> usize;
+    fn layers(&self) -> usize;
+    fn mode(&self) -> Mode;
+}
+
+/// Per-PE seed RNG stream, split deterministically from the engine seed
+/// (identical in serial and threaded modes).
+pub(crate) fn pe_seed(seed: u64, pe: usize) -> u64 {
+    seed ^ ((pe as u64 + 1) * 0x9E37)
+}
+
+/// Per-PE training shards. Coop: PE p draws seeds from train ∩ V_p
+/// (Algorithm 1). Indep: the training set is sharded round-robin
+/// (classic data parallelism).
+pub(crate) fn make_shards(
+    dataset: &Dataset,
+    part: &Partition,
+    mode: Mode,
+    num_pes: usize,
+) -> Vec<Vec<VertexId>> {
+    match mode {
+        Mode::Cooperative => {
+            let mut by_owner: Vec<Vec<VertexId>> = vec![Vec::new(); num_pes];
+            for &v in &dataset.train {
+                by_owner[part.part_of(v)].push(v);
+            }
+            by_owner
+        }
+        Mode::Independent => {
+            let mut shards: Vec<Vec<VertexId>> = vec![Vec::new(); num_pes];
+            for (i, &v) in dataset.train.iter().enumerate() {
+                shards[i % num_pes].push(v);
+            }
+            shards
+        }
+    }
+}
+
+/// Assemble one PE's cooperative-mode work record: pull the owned input
+/// rows through this PE's cache and collect per-layer counts. Shared by
+/// both exec modes so the construction can never drift between them
+/// (stage times are assigned by the caller).
+pub(crate) fn coop_pe_work(
+    layers: usize,
+    pe_layers: &[&PeLayer],
+    final_owned: &[VertexId],
+    cache: &mut LruCache,
+) -> PeWork {
+    let (requested, misses) = load_pe(final_owned, cache);
+    let mut counts_s: Vec<u64> = pe_layers.iter().map(|pl| pl.owned.len() as u64).collect();
+    counts_s.push(final_owned.len() as u64);
+    PeWork {
+        counts_s,
+        counts_e: pe_layers.iter().map(|pl| pl.edges as u64).collect(),
+        counts_tilde: pe_layers.iter().map(|pl| pl.tilde.len() as u64).collect(),
+        counts_cross: pe_layers.iter().map(|pl| pl.cross as u64).collect(),
+        requested,
+        misses,
+        fabric: pe_layers[layers - 1].cross as u64,
+        input_vertices: None,
+        samp_ms: 0.0,
+        feat_ms: 0.0,
+    }
+}
+
+/// Assemble one PE's independent-mode work record from its private MFG
+/// (shared by both exec modes; `keep_inputs` retains the S^L vertex list
+/// for the duplication-factor union).
+pub(crate) fn indep_pe_work(
+    mfg: &Mfg,
+    layers: usize,
+    keep_inputs: bool,
+    cache: &mut LruCache,
+) -> PeWork {
+    let (requested, misses) = load_pe(mfg.input_vertices(), cache);
+    PeWork {
+        counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
+        counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
+        counts_tilde: vec![0; layers],
+        counts_cross: vec![0; layers],
+        requested,
+        misses,
+        fabric: 0,
+        input_vertices: if keep_inputs { Some(mfg.input_vertices().to_vec()) } else { None },
+        samp_ms: 0.0,
+        feat_ms: 0.0,
+    }
+}
+
+/// Converts a PE-thread panic into a fast process abort. `std::sync::
+/// Barrier` has no poisoning and every surviving endpoint keeps live
+/// `Sender` clones for all peers, so a single panicking PE would
+/// otherwise leave the remaining threads blocked forever in `wait()` /
+/// `recv()` — a silent CI hang instead of a failure. A panic inside a PE
+/// thread is always a bug; after the default hook prints it, failing the
+/// whole process immediately is strictly better than deadlock.
+pub(crate) struct AbortOnPeerPanic;
+
+impl Drop for AbortOnPeerPanic {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            eprintln!("engine: PE thread panicked; aborting to avoid deadlocking peer PEs");
+            std::process::abort();
+        }
+    }
+}
+
+/// The measurement stream behind `coop::engine::run`: per-PE samplers,
+/// deterministic seed-RNG streams, LRU caches, and (cooperative +
+/// threaded) the live channel fabric, all persistent across batches.
+///
+/// `ExecMode::Threaded` runs one scoped OS thread per PE *per batch*;
+/// the per-PE state lives in the stream between calls, so the RNG/cache
+/// sequences — and therefore every count — are bit-identical to the
+/// serial loop and to the PR-1 thread-per-run engine.
+pub struct EngineStream<'d> {
+    mode: Mode,
+    exec: ExecMode,
+    layers: usize,
+    batch_per_pe: usize,
+    /// batches before this index are warmup: their S^L input-vertex
+    /// lists are never reduced, so the stream skips retaining them.
+    warmup_batches: usize,
+    graph: &'d Csr,
+    part: &'d Partition,
+    shards: Vec<Vec<VertexId>>,
+    samplers: Vec<Sampler<'d>>,
+    caches: Vec<LruCache>,
+    seed_rngs: Vec<Pcg64>,
+    /// live fabric endpoints (cooperative + threaded only).
+    endpoints: Vec<Option<PeEndpoint>>,
+    index: usize,
+}
+
+impl<'d> EngineStream<'d> {
+    /// Build a stream over `dataset` with partition `part` (cooperative
+    /// mode requires it; independent mode uses it only to shard the
+    /// training set).
+    pub fn new(dataset: &'d Dataset, part: &'d Partition, cfg: &EngineConfig) -> EngineStream<'d> {
+        assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
+        assert!(cfg.sampler.layers >= 1, "engine needs at least one GNN layer");
+        let p = cfg.num_pes;
+        let g = &dataset.graph;
+        let endpoints: Vec<Option<PeEndpoint>> =
+            if cfg.mode == Mode::Cooperative && cfg.exec == ExecMode::Threaded {
+                Fabric::endpoints(p).into_iter().map(Some).collect()
+            } else {
+                (0..p).map(|_| None).collect()
+            };
+        EngineStream {
+            mode: cfg.mode,
+            exec: cfg.exec,
+            layers: cfg.sampler.layers,
+            batch_per_pe: cfg.batch_per_pe,
+            warmup_batches: cfg.warmup_batches,
+            graph: g,
+            part,
+            shards: make_shards(dataset, part, cfg.mode, p),
+            samplers: (0..p).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect(),
+            caches: (0..p).map(|_| LruCache::new(cfg.cache_per_pe)).collect(),
+            seed_rngs: (0..p).map(|pe| Pcg64::new(pe_seed(cfg.seed, pe))).collect(),
+            endpoints,
+            index: 0,
+        }
+    }
+
+    /// Single-threaded reference: all PEs' work inline, batch stage
+    /// times assigned to the first record so the cross-PE sum keeps its
+    /// meaning.
+    fn next_serial(&mut self) -> Vec<PeWork> {
+        let p_count = self.samplers.len();
+        let layers = self.layers;
+        let b = self.batch_per_pe;
+        let measuring = self.index >= self.warmup_batches;
+        let per_pe_seeds: Vec<Vec<VertexId>> = self
+            .shards
+            .iter()
+            .zip(self.seed_rngs.iter_mut())
+            .map(|(shard, rng)| {
+                let k = b.min(shard.len());
+                rng.sample_distinct(shard.len(), k)
+                    .into_iter()
+                    .map(|i| shard[i as usize])
+                    .collect()
+            })
+            .collect();
+
+        let (mut per_pe, samp_ms, feat_ms): (Vec<PeWork>, f64, f64) = match self.mode {
+            Mode::Cooperative => {
+                let t = Timer::start();
+                let coop = sample_cooperative(
+                    self.graph,
+                    self.part,
+                    &mut self.samplers,
+                    &per_pe_seeds,
+                    layers,
+                );
+                let samp_ms = t.elapsed_ms();
+                let t = Timer::start();
+                let per_pe = (0..p_count)
+                    .map(|p| {
+                        let pe_layers: Vec<&PeLayer> =
+                            (0..layers).map(|l| &coop.layers[l][p]).collect();
+                        coop_pe_work(layers, &pe_layers, &coop.final_owned[p], &mut self.caches[p])
+                    })
+                    .collect();
+                (per_pe, samp_ms, t.elapsed_ms())
+            }
+            Mode::Independent => {
+                let t = Timer::start();
+                let s = sample_independent(&mut self.samplers, &per_pe_seeds);
+                let samp_ms = t.elapsed_ms();
+                let t = Timer::start();
+                let per_pe = s
+                    .per_pe
+                    .iter()
+                    .enumerate()
+                    .map(|(p, mfg)| indep_pe_work(mfg, layers, measuring, &mut self.caches[p]))
+                    .collect();
+                (per_pe, samp_ms, t.elapsed_ms())
+            }
+        };
+        for s in self.samplers.iter_mut() {
+            s.advance_batch();
+        }
+        per_pe[0].samp_ms = samp_ms;
+        per_pe[0].feat_ms = feat_ms;
+        per_pe
+    }
+
+    /// Thread-per-PE runtime: one scoped OS thread per PE for this
+    /// batch; each owns its sampler, seed-RNG stream, cache, and fabric
+    /// endpoint (all persistent in the stream between batches) and
+    /// exchanges ids over the live channels.
+    ///
+    /// Returns the per-PE records plus the batch wall-clock, measured
+    /// from a start barrier inside the threads (max over PEs of
+    /// barrier→done), so thread spawn/join overhead does not bias the
+    /// threaded-vs-serial comparison — the same barrier-to-barrier
+    /// semantics as the PR-1 thread-per-run engine.
+    fn next_threaded(&mut self) -> (Vec<PeWork>, f64) {
+        let mode = self.mode;
+        let layers = self.layers;
+        let b = self.batch_per_pe;
+        let measuring = self.index >= self.warmup_batches;
+        let graph = self.graph;
+        let part = self.part;
+        let shards = &self.shards;
+        let start = std::sync::Barrier::new(self.samplers.len());
+        let start = &start;
+        let results: Vec<(PeWork, f64)> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .samplers
+                .iter_mut()
+                .zip(self.caches.iter_mut())
+                .zip(self.seed_rngs.iter_mut())
+                .zip(self.endpoints.iter_mut())
+                .zip(shards.iter())
+                .map(|((((sampler, cache), seed_rng), ep), shard)| {
+                    scope.spawn(move || {
+                        let _abort_guard = AbortOnPeerPanic;
+                        // align all PEs so the wall timer sees the true
+                        // concurrent latency of this batch
+                        start.wait();
+                        let wall = Timer::start();
+                        let k = b.min(shard.len());
+                        let seeds: Vec<VertexId> = seed_rng
+                            .sample_distinct(shard.len(), k)
+                            .into_iter()
+                            .map(|i| shard[i as usize])
+                            .collect();
+                        let pw = match mode {
+                            Mode::Cooperative => {
+                                let ep = ep.as_mut().expect("coop threaded stream has endpoints");
+                                let t = Timer::start();
+                                let ps = sample_cooperative_pe(
+                                    graph, part, sampler, ep, seeds, layers,
+                                );
+                                let samp_ms = t.elapsed_ms();
+                                let t = Timer::start();
+                                let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
+                                let mut pw =
+                                    coop_pe_work(layers, &pe_layers, &ps.final_owned, cache);
+                                pw.samp_ms = samp_ms;
+                                pw.feat_ms = t.elapsed_ms();
+                                pw
+                            }
+                            Mode::Independent => {
+                                let t = Timer::start();
+                                let mfg = sampler.sample_mfg(&seeds);
+                                let samp_ms = t.elapsed_ms();
+                                let t = Timer::start();
+                                let mut pw = indep_pe_work(&mfg, layers, measuring, cache);
+                                pw.samp_ms = samp_ms;
+                                pw.feat_ms = t.elapsed_ms();
+                                pw
+                            }
+                        };
+                        sampler.advance_batch();
+                        (pw, wall.elapsed_ms())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("PE thread panicked"))
+                .collect()
+        });
+        let wall_ms = results.iter().map(|(_, w)| *w).fold(0.0, f64::max);
+        (results.into_iter().map(|(pw, _)| pw).collect(), wall_ms)
+    }
+}
+
+impl MinibatchStream for EngineStream<'_> {
+    fn next_batch(&mut self) -> Minibatch {
+        let (per_pe, wall_ms) = match self.exec {
+            ExecMode::Serial => {
+                let wall = Timer::start();
+                let per_pe = self.next_serial();
+                (per_pe, wall.elapsed_ms())
+            }
+            ExecMode::Threaded => self.next_threaded(),
+        };
+        let index = self.index;
+        self.index += 1;
+        Minibatch { index, per_pe, merged: None, wall_ms }
+    }
+
+    fn num_pes(&self) -> usize {
+        self.samplers.len()
+    }
+
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn mode(&self) -> Mode {
+        self.mode
+    }
+}

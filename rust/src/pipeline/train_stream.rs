@@ -1,0 +1,274 @@
+//! Training streams: the seed-drawing + MFG-sampling front half of a
+//! training step, behind [`MinibatchStream`].
+//!
+//! `Trainer` used to own this logic privately (a sampler, a seed RNG,
+//! and a `sample_indep_merged_mfg` fork); now both of its batching
+//! strategies are [`TrainStream`] policies over the same stream seam:
+//!
+//! * [`Batching::Single`] — one shared-coin sampler over the global
+//!   batch. By the coop-sampler determinism contract this is exactly the
+//!   union Algorithm 1 computes, so it doubles as the *cooperative*
+//!   convergence arm (Figure 9) and as classic 1-PE training.
+//! * [`Batching::IndepMerged`] — P per-PE sub-batches sampled with
+//!   independent RNGs and merged block-diagonally: bit-equivalent to P
+//!   PEs computing privately and all-reducing gradients (the Figure 9
+//!   independent baseline).
+//!
+//! Seed-drawing matches the PR-1 `Trainer` exactly: the seed RNG is
+//! `Pcg64::new(seed ^ `[`SEED_DRAW_SALT`]`)` and per-step sub-batch
+//! sampler seeds follow the same formulas, so training trajectories are
+//! unchanged at a fixed seed (tested in `tests/integration_pipeline.rs`).
+
+use super::stream::{Minibatch, MinibatchStream, PeWork};
+use crate::coop::engine::{ExecMode, Mode};
+use crate::graph::{Csr, Dataset, VertexId};
+use crate::sampling::{block, Mfg, Sampler, SamplerConfig, SamplerKind};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Timer;
+
+/// Salt mixed into the stream seed for the training-seed draw RNG —
+/// the same constant the PR-1 `Trainer` used, kept so fixed-seed
+/// trajectories survive the redesign.
+pub const SEED_DRAW_SALT: u64 = 0x5EED;
+
+/// How a [`TrainStream`] assembles the global minibatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Batching {
+    /// One shared-coin sampler over the whole batch (cooperative
+    /// semantics; the default, and the PR-1 `Trainer::step` behavior).
+    Single,
+    /// `pes` independently-seeded sub-batches merged block-diagonally
+    /// (independent-minibatching semantics).
+    IndepMerged { pes: usize },
+}
+
+/// A training minibatch stream bound to a dataset.
+pub struct TrainStream<'d> {
+    ds: &'d Dataset,
+    kind: SamplerKind,
+    cfg: SamplerConfig,
+    /// global batch size (seeds per step).
+    batch: usize,
+    seed: u64,
+    exec: ExecMode,
+    batching: Batching,
+    /// persistent dependent-RNG sampler (Single batching only).
+    sampler: Option<Sampler<'d>>,
+    seed_rng: Pcg64,
+    step: u64,
+}
+
+impl<'d> TrainStream<'d> {
+    pub fn new(
+        ds: &'d Dataset,
+        kind: SamplerKind,
+        cfg: SamplerConfig,
+        batch: usize,
+        seed: u64,
+        exec: ExecMode,
+        batching: Batching,
+    ) -> TrainStream<'d> {
+        let sampler = match batching {
+            Batching::Single => Some(cfg.build(kind, &ds.graph, seed)),
+            Batching::IndepMerged { .. } => None,
+        };
+        TrainStream {
+            ds,
+            kind,
+            cfg,
+            batch,
+            seed,
+            exec,
+            batching,
+            sampler,
+            seed_rng: Pcg64::new(seed ^ SEED_DRAW_SALT),
+            step: 0,
+        }
+    }
+
+    pub fn batching(&self) -> Batching {
+        self.batching
+    }
+
+    pub fn kind(&self) -> SamplerKind {
+        self.kind
+    }
+
+    pub fn config(&self) -> SamplerConfig {
+        self.cfg
+    }
+
+    /// Draw the next training seed batch (uniform without replacement).
+    pub fn next_seeds(&mut self) -> Vec<VertexId> {
+        let b = self.batch.min(self.ds.train.len());
+        self.seed_rng
+            .sample_distinct(self.ds.train.len(), b)
+            .into_iter()
+            .map(|i| self.ds.train[i as usize])
+            .collect()
+    }
+
+    /// Sample the global MFG for `seeds`, advancing per-batch RNG state.
+    pub fn sample_on(&mut self, seeds: &[VertexId]) -> Mfg {
+        self.step += 1;
+        match self.batching {
+            Batching::Single => {
+                let sampler = self.sampler.as_mut().expect("Single batching owns a sampler");
+                let mfg = sampler.sample_mfg(seeds);
+                sampler.advance_batch();
+                mfg
+            }
+            Batching::IndepMerged { pes } => {
+                // fresh per-PE samplers every step, seeded from the
+                // stream seed and the step index (the PR-1 Figure 9
+                // recipe, verbatim)
+                let batch_seed = self.seed ^ (self.step << 16);
+                let parts = sample_indep_parts(
+                    &self.ds.graph,
+                    self.cfg,
+                    self.kind,
+                    seeds,
+                    pes,
+                    batch_seed,
+                    self.exec,
+                );
+                block::merge_mfgs(&parts)
+            }
+        }
+    }
+}
+
+impl MinibatchStream for TrainStream<'_> {
+    fn next_batch(&mut self) -> Minibatch {
+        let wall = Timer::start();
+        let seeds = self.next_seeds();
+        let mfg = self.sample_on(&seeds);
+        let wall_ms = wall.elapsed_ms();
+        let layers = self.cfg.layers;
+        // one logical record for the merged batch: counts from the MFG,
+        // feature rows = |S^L| (training gathers every input row)
+        let work = PeWork {
+            counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
+            counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
+            counts_tilde: vec![0; layers],
+            counts_cross: vec![0; layers],
+            requested: mfg.input_vertices().len() as u64,
+            misses: 0,
+            fabric: 0,
+            input_vertices: None,
+            samp_ms: wall_ms,
+            feat_ms: 0.0,
+        };
+        let index = (self.step - 1) as usize;
+        Minibatch { index, per_pe: vec![work], merged: Some(mfg), wall_ms }
+    }
+
+    fn num_pes(&self) -> usize {
+        match self.batching {
+            Batching::Single => 1,
+            Batching::IndepMerged { pes } => pes,
+        }
+    }
+
+    fn layers(&self) -> usize {
+        self.cfg.layers
+    }
+
+    fn mode(&self) -> Mode {
+        match self.batching {
+            Batching::Single => Mode::Cooperative,
+            Batching::IndepMerged { .. } => Mode::Independent,
+        }
+    }
+}
+
+/// Sample the `p` per-PE sub-batches of one Independent-Minibatching
+/// global step — the core of [`Batching::IndepMerged`], also driven
+/// directly by `benches/bench_train_step.rs` so stream and bench cannot
+/// drift.
+///
+/// PE `i`'s sampler is seeded `batch_seed ^ ((i+1) << 32)` in **both**
+/// exec modes, so the result is bit-identical regardless of scheduling;
+/// only the wall-clock changes (tested below).
+pub fn sample_indep_parts(
+    graph: &Csr,
+    cfg: SamplerConfig,
+    kind: SamplerKind,
+    seeds: &[VertexId],
+    p: usize,
+    batch_seed: u64,
+    exec: ExecMode,
+) -> Vec<Mfg> {
+    let per = seeds.len() / p;
+    let pe_sample = |i: usize, chunk: &[VertexId]| -> Mfg {
+        let mut s = cfg.build(kind, graph, batch_seed ^ ((i as u64 + 1) << 32));
+        s.sample_mfg(chunk)
+    };
+    match exec {
+        ExecMode::Serial => {
+            (0..p).map(|i| pe_sample(i, &seeds[i * per..(i + 1) * per])).collect()
+        }
+        ExecMode::Threaded => std::thread::scope(|scope| {
+            let pe_sample = &pe_sample;
+            let handles: Vec<_> = (0..p)
+                .map(|i| {
+                    let chunk = &seeds[i * per..(i + 1) * per];
+                    scope.spawn(move || pe_sample(i, chunk))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("PE sampling thread panicked"))
+                .collect()
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+
+    #[test]
+    fn indep_parts_serial_and_threaded_bit_identical() {
+        let g = generate::chung_lu(2000, 12.0, 2.4, 5);
+        let cfg = SamplerConfig::default();
+        let seeds: Vec<VertexId> = (0..256).collect();
+        for kind in [SamplerKind::Labor0, SamplerKind::Neighbor] {
+            let a = sample_indep_parts(&g, cfg, kind, &seeds, 4, 77, ExecMode::Serial);
+            let b = sample_indep_parts(&g, cfg, kind, &seeds, 4, 77, ExecMode::Threaded);
+            assert_eq!(a.len(), b.len());
+            for (pe, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(x.layer_vertices, y.layer_vertices, "{kind:?} PE{pe} vertices");
+                for (l, (ex, ey)) in x.layer_edges.iter().zip(&y.layer_edges).enumerate() {
+                    assert_eq!(ex.offsets, ey.offsets, "{kind:?} PE{pe} L{l} offsets");
+                    assert_eq!(ex.nbr_local, ey.nbr_local, "{kind:?} PE{pe} L{l} edges");
+                }
+            }
+            let ma = block::merge_mfgs(&a);
+            let mb = block::merge_mfgs(&b);
+            assert_eq!(ma.layer_vertices, mb.layer_vertices, "{kind:?} merged");
+        }
+    }
+
+    #[test]
+    fn single_stream_yields_merged_mfg_with_counts() {
+        let ds = crate::graph::datasets::build("tiny", 3).unwrap();
+        let cfg = SamplerConfig::default();
+        let mut s = TrainStream::new(
+            &ds,
+            SamplerKind::Labor0,
+            cfg,
+            32,
+            7,
+            ExecMode::Serial,
+            Batching::Single,
+        );
+        let mb = s.next_batch();
+        let mfg = mb.merged.expect("train streams materialize the MFG");
+        assert_eq!(mfg.seeds().len(), 32);
+        assert_eq!(mb.per_pe.len(), 1);
+        assert_eq!(mb.per_pe[0].counts_s.len(), cfg.layers + 1);
+        assert!(mb.per_pe[0].requested > 0);
+    }
+}

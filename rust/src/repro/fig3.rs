@@ -7,7 +7,7 @@
 //! within sampling noise.
 
 use super::Ctx;
-use crate::graph::datasets;
+use crate::pipeline::PipelineBuilder;
 use crate::sampling::{edge_pred, RwParams, SamplerConfig, SamplerKind};
 use crate::util::csv::Table;
 use crate::util::rng::Pcg64;
@@ -28,7 +28,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         &["dataset", "task", "sampler", "batch", "E[S3]", "ratio", "monotone_ok", "concave_ok"],
     );
     for ds_name in ds_names {
-        let ds = datasets::build(ds_name, ctx.seed)?;
+        let ds = PipelineBuilder::new().dataset(ds_name).seed(ctx.seed).build()?.ds;
         // edge prediction needs an undirected view
         let und = ds.graph.to_undirected();
         for task in ["node", "edge"] {

@@ -11,8 +11,8 @@
 //! 1-PE independent at equal per-PE cache.
 
 use super::Ctx;
-use crate::coop::engine::{run as engine_run, EngineConfig, Mode};
-use crate::graph::{datasets, partition};
+use crate::coop::engine::Mode;
+use crate::pipeline::PipelineBuilder;
 use crate::sampling::Kappa;
 use crate::util::csv::Table;
 
@@ -36,23 +36,21 @@ pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
         &["dataset", "kappa", "miss_rate", "requested/batch", "misses/batch"],
     );
     for ds_name in ds_names {
-        let ds = datasets::build(ds_name, ctx.seed)?;
-        let part = partition::random(&ds.graph, 1, ctx.seed);
+        let mut pipe = PipelineBuilder::new()
+            .dataset(ds_name)
+            .mode(Mode::Independent)
+            .exec(ctx.exec)
+            .num_pes(1)
+            .warmup_batches(if ctx.quick { 3 } else { 8 })
+            .measure_batches(if ctx.quick { 6 } else { 16 })
+            .seed(ctx.seed)
+            .build()?;
+        pipe.cfg.batch_per_pe = 1024.min(pipe.ds.train.len().max(64));
+        pipe.cfg.cache_per_pe = Some(pipe.ds.cache_size);
         let mut prev = 1.0f64;
         for &kappa in KAPPAS {
-            let mut cfg = EngineConfig {
-                mode: Mode::Independent,
-                exec: ctx.exec,
-                num_pes: 1,
-                batch_per_pe: 1024.min(ds.train.len().max(64)),
-                cache_per_pe: ds.cache_size,
-                warmup_batches: if ctx.quick { 3 } else { 8 },
-                measure_batches: if ctx.quick { 6 } else { 16 },
-                seed: ctx.seed,
-                ..Default::default()
-            };
-            cfg.sampler.kappa = kappa;
-            let r = engine_run(&ds, &part, &cfg);
+            pipe.cfg.kappa = kappa;
+            let r = pipe.engine_report();
             table.push_row(&[
                 ds_name.to_string(),
                 kappa.label(),
@@ -85,8 +83,14 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
         &["dataset", "kappa", "miss_rate", "fabric_rows/batch"],
     );
     for ds_name in ds_names {
-        let ds = datasets::build(ds_name, ctx.seed)?;
-        let part = partition::random(&ds.graph, 4, ctx.seed);
+        let mut pipe = PipelineBuilder::new()
+            .dataset(ds_name)
+            .mode(Mode::Cooperative)
+            .exec(ctx.exec)
+            .num_pes(4)
+            .seed(ctx.seed)
+            .build()?;
+        pipe.cfg.batch_per_pe = 1024.min(pipe.ds.train.len() / 4).max(32);
         // Cache sizing: the paper gives each GPU a 1M-row cache, ~8x its
         // per-PE per-batch request on papers100M. The twins' per-PE vertex
         // universes are far smaller (|V|/4), so a direct ratio either
@@ -94,33 +98,16 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
         // per-batch request (LRU scan-thrash, flat 1). We probe the
         // per-PE request size and set capacity to 1.15x it — inside the
         // regime where Figure 5b's κ dynamics are observable.
-        let probe_cfg = EngineConfig {
-            mode: Mode::Cooperative,
-            exec: ctx.exec,
-            num_pes: 4,
-            batch_per_pe: 1024.min(ds.train.len() / 4).max(32),
-            cache_per_pe: ds.graph.num_vertices(), // effectively infinite
-            warmup_batches: 0,
-            measure_batches: 2,
-            seed: ctx.seed,
-            ..Default::default()
-        };
-        let probe = engine_run(&ds, &part, &probe_cfg);
-        let per_pe_cache = ((probe.feat_requested * 1.15) as usize).max(64);
+        pipe.cfg.cache_per_pe = Some(pipe.ds.graph.num_vertices()); // effectively infinite
+        pipe.cfg.warmup_batches = 0;
+        pipe.cfg.measure_batches = 2;
+        let probe = pipe.engine_report();
+        pipe.cfg.cache_per_pe = Some(((probe.feat_requested * 1.15) as usize).max(64));
+        pipe.cfg.warmup_batches = if ctx.quick { 3 } else { 8 };
+        pipe.cfg.measure_batches = if ctx.quick { 6 } else { 16 };
         for &kappa in KAPPAS {
-            let mut cfg = EngineConfig {
-                mode: Mode::Cooperative,
-                exec: ctx.exec,
-                num_pes: 4,
-                batch_per_pe: 1024.min(ds.train.len() / 4).max(32),
-                cache_per_pe: per_pe_cache.max(64),
-                warmup_batches: if ctx.quick { 3 } else { 8 },
-                measure_batches: if ctx.quick { 6 } else { 16 },
-                seed: ctx.seed,
-                ..Default::default()
-            };
-            cfg.sampler.kappa = kappa;
-            let r = engine_run(&ds, &part, &cfg);
+            pipe.cfg.kappa = kappa;
+            let r = pipe.engine_report();
             table.push_row(&[
                 ds_name.to_string(),
                 kappa.label(),

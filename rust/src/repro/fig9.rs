@@ -1,18 +1,20 @@
 //! Figure 9: convergence of Cooperative vs Independent minibatching at
 //! identical global batch size.
 //!
-//! Cooperative = one global MFG sampled with shared coins (exactly the
-//! union Algorithm 1 computes — see coop_sampler tests). Independent =
-//! block-diagonal merge of P per-PE MFGs sampled with *independent*
-//! RNGs, which is bit-equivalent to P PEs computing privately and
-//! all-reducing gradients. Expected shape: the loss/accuracy curves
-//! overlap within noise (paper Appendix A.9).
+//! Both arms run through the same pipeline stream seam
+//! (`pipeline::TrainStream`), differing only in the batching policy:
+//! `Batching::Single` = one global MFG sampled with shared coins
+//! (exactly the union Algorithm 1 computes — see coop_sampler tests);
+//! `Batching::IndepMerged` = block-diagonal merge of P per-PE MFGs
+//! sampled with *independent* RNGs, which is bit-equivalent to P PEs
+//! computing privately and all-reducing gradients. Expected shape: the
+//! loss/accuracy curves overlap within noise (paper Appendix A.9).
 
 use super::Ctx;
-use crate::graph::datasets;
+use crate::pipeline::{Batching, PipelineBuilder};
 use crate::runtime::{Manifest, Runtime};
 use crate::sampling::SamplerKind;
-use crate::train::{Trainer, TrainerOptions};
+use crate::train::Trainer;
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
@@ -37,35 +39,30 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             return Ok(());
         }
     };
-    let ds = datasets::build(ds_name, ctx.seed)?;
+    let pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .sampler(SamplerKind::Labor0)
+        .exec(ctx.exec)
+        .seed(ctx.seed)
+        .build()?;
+    let ds = &pipe.ds;
     let mut table = Table::new(
         "Figure 9: coop vs indep convergence, identical global batch",
         &["mode", "step", "train_loss", "val_acc", "val_f1"],
     );
 
     let mut finals = Vec::new();
-    for (mode, art) in [("coop", coop_art), ("indep", indep_art)] {
-        let opts = TrainerOptions {
-            kind: SamplerKind::Labor0,
-            seed: ctx.seed,
-            lr: Some(0.01),
-            ..Default::default()
-        };
-        let mut trainer = Trainer::new(&rt, &manifest, art, &ds, &opts)?;
+    for (mode, art, batching) in [
+        ("coop", coop_art, Batching::Single),
+        ("indep", indep_art, Batching::IndepMerged { pes: p }),
+    ] {
+        let mut opts = pipe.trainer_options();
+        opts.lr = Some(0.01);
+        opts.batching = batching;
+        let mut trainer = Trainer::new(&rt, &manifest, art, ds, &opts)?;
         let mut final_acc = 0.0;
         for step in 1..=steps {
-            let seeds = trainer.next_seeds();
-            let stats = if mode == "coop" {
-                let mfg = trainer.sample_global_mfg(&seeds);
-                trainer.step_on_mfg(&mfg)?
-            } else {
-                let mfg = trainer.sample_indep_merged_mfg(
-                    &seeds,
-                    p,
-                    ctx.seed ^ (step as u64) << 16,
-                );
-                trainer.step_on_mfg(&mfg)?
-            };
+            let stats = trainer.step()?;
             if step % eval_every == 0 || step == steps {
                 let val = trainer.evaluate(&ds.val, 777)?;
                 final_acc = val.accuracy;

@@ -28,12 +28,15 @@ pub mod scaling;
 use crate::coop::engine::ExecMode;
 use std::path::PathBuf;
 
-/// Shared harness context.
+/// Shared harness context. Each harness lowers this into a
+/// [`crate::pipeline::PipelineBuilder`] call, so `seed` feeds the
+/// dataset generator, the partitioner, and the engine alike.
 #[derive(Clone, Debug)]
 pub struct Ctx {
     pub out: PathBuf,
     /// reduced sweeps for smoke runs.
     pub quick: bool,
+    /// defaults to [`crate::pipeline::DEFAULT_SEED`].
     pub seed: u64,
     /// artifacts directory (for harnesses that train).
     pub artifacts: PathBuf,
@@ -47,7 +50,7 @@ impl Default for Ctx {
         Ctx {
             out: PathBuf::from("results"),
             quick: false,
-            seed: 0xC0FFEE,
+            seed: crate::pipeline::DEFAULT_SEED,
             artifacts: PathBuf::from("artifacts"),
             exec: ExecMode::Threaded,
         }

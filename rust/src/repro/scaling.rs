@@ -4,9 +4,9 @@
 //! curve in action, since the *global* batch grows with P).
 
 use super::Ctx;
-use crate::coop::engine::{run as engine_run, EngineConfig, Mode};
+use crate::coop::engine::Mode;
 use crate::costmodel::{estimate, ModelCost, SystemPreset};
-use crate::graph::{datasets, partition};
+use crate::pipeline::PipelineBuilder;
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
@@ -15,7 +15,16 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
     } else {
         ("mag-s", ModelCost::rgcn(768, 1024), 1024)
     };
-    let ds = datasets::build(ds_name, ctx.seed)?;
+    let mut pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .mode(Mode::Cooperative)
+        .exec(ctx.exec)
+        .num_pes(1)
+        .cache_per_pe(1024)
+        .warmup_batches(1)
+        .measure_batches(if ctx.quick { 2 } else { 6 })
+        .seed(ctx.seed)
+        .build()?;
     let mut table = Table::new(
         "F/B per-PE time vs #cooperating PEs (fixed b per PE; paper §4.3)",
         &["PEs", "global_batch", "S3_per_pe", "fb_ms_est", "fb_vs_1pe"],
@@ -29,27 +38,17 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             alpha: 600.0,
             beta: 64.0,
         };
-        let part = partition::random(&ds.graph, p, ctx.seed);
-        let cfg = EngineConfig {
-            mode: Mode::Cooperative,
-            exec: ctx.exec,
-            num_pes: p,
-            batch_per_pe: b.min(ds.train.len() / p).max(16),
-            cache_per_pe: 1024,
-            warmup_batches: 1,
-            measure_batches: if ctx.quick { 2 } else { 6 },
-            seed: ctx.seed,
-            ..Default::default()
-        };
-        let r = engine_run(&ds, &part, &cfg);
-        let t = estimate(&r, &preset, &model, ds.feat_dim);
+        pipe.set_num_pes(p);
+        pipe.cfg.batch_per_pe = b.min(pipe.ds.train.len() / p).max(16);
+        let r = pipe.engine_report();
+        let t = estimate(&r, &preset, &model, pipe.ds.feat_dim);
         let fb = t.fb_ms;
         if p == 1 {
             fb1 = Some(fb);
         }
         table.push_row(&[
             p.to_string(),
-            (cfg.batch_per_pe * p).to_string(),
+            (pipe.cfg.batch_per_pe * p).to_string(),
             format!("{:.0}", r.s[3]),
             format!("{fb:.2}"),
             format!("{:.3}", fb / fb1.unwrap()),

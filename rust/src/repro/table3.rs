@@ -7,10 +7,10 @@
 //! from κ=1; κ=∞ (frozen neighborhoods) degrades.
 
 use super::Ctx;
-use crate::graph::datasets;
+use crate::pipeline::PipelineBuilder;
 use crate::runtime::{Manifest, Runtime};
 use crate::sampling::{Kappa, SamplerKind};
-use crate::train::{Trainer, TrainerOptions};
+use crate::train::Trainer;
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
@@ -50,7 +50,13 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             return Ok(());
         }
     };
-    let ds = datasets::build(ds_name, ctx.seed)?;
+    let pipe = PipelineBuilder::new()
+        .dataset(ds_name)
+        .sampler(SamplerKind::Labor0)
+        .exec(ctx.exec)
+        .seed(ctx.seed)
+        .build()?;
+    let ds = &pipe.ds;
 
     let mut t3 = Table::new(
         "Table 3: test F1/accuracy at best-validation checkpoint vs κ",
@@ -67,14 +73,11 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         let mut test_accs = Vec::new();
         let mut final_losses = Vec::new();
         for run_idx in 0..runs {
-            let opts = TrainerOptions {
-                kind: SamplerKind::Labor0,
-                kappa,
-                seed: ctx.seed ^ (run_idx + 1) << 20,
-                lr: Some(0.01),
-                ..Default::default()
-            };
-            let mut trainer = Trainer::new(&rt, &manifest, art_name, &ds, &opts)?;
+            let mut opts = pipe.trainer_options();
+            opts.kappa = kappa;
+            opts.seed = ctx.seed ^ (run_idx + 1) << 20;
+            opts.lr = Some(0.01);
+            let mut trainer = Trainer::new(&rt, &manifest, art_name, ds, &opts)?;
             let mut best_val = 0.0f64;
             let mut test_at_best = (0.0f64, 0.0f64);
             let mut last_loss = 0.0f32;

@@ -8,9 +8,9 @@
 //! b=1024/PE on the A100 systems, b=512/PE on the 16×V100 system.
 
 use super::Ctx;
-use crate::coop::engine::{run as engine_run, EngineConfig, EngineReport, Mode};
+use crate::coop::engine::{EngineReport, Mode};
 use crate::costmodel::{estimate, feature_cache_ms_for, ModelCost, StageTimes, PRESETS};
-use crate::graph::{datasets, partition};
+use crate::pipeline::PipelineBuilder;
 use crate::sampling::{Kappa, SamplerKind};
 use crate::util::csv::Table;
 
@@ -50,54 +50,44 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
     for preset in PRESETS.iter().filter(|p| !ctx.quick || p.num_pes == 4) {
         let b = if preset.name == "16xV100" { 512 } else { 1024 };
         for (ds_name, model) in &ds_specs {
-            let ds = datasets::build(ds_name, ctx.seed)?;
-            let part = partition::random(&ds.graph, preset.num_pes, ctx.seed);
+            let mut pipe = PipelineBuilder::new()
+                .dataset(ds_name)
+                .exec(ctx.exec)
+                .num_pes(preset.num_pes)
+                .batch_per_pe(b)
+                .seed(ctx.seed)
+                .build()?;
             // paper Table 4 cache: 1e6 rows per A100 ≈ 2.2x the per-GPU
             // per-batch request on papers100M (Table 7: |S^3| = 463k).
             // Keep that *pressure* ratio: probe the per-PE request size
             // and scale (see fig5/datasets for why raw row counts do not
             // transfer to the scaled twins).
-            let probe_cfg = EngineConfig {
-                mode: Mode::Independent,
-                exec: ctx.exec,
-                num_pes: preset.num_pes,
-                batch_per_pe: b,
-                cache_per_pe: ds.graph.num_vertices(),
-                warmup_batches: 0,
-                measure_batches: 2,
-                seed: ctx.seed,
-                ..Default::default()
-            };
-            let probe = engine_run(&ds, &part, &probe_cfg);
+            pipe.cfg.mode = Mode::Independent;
+            pipe.cfg.cache_per_pe = Some(pipe.ds.graph.num_vertices());
+            pipe.cfg.warmup_batches = 0;
+            pipe.cfg.measure_batches = 2;
+            let probe = pipe.engine_report();
             let pressure = if preset.name == "16xV100" { 1.1 } else { 2.2 };
             let cache = ((probe.feat_requested * pressure) as usize).max(64);
+            pipe.cfg.cache_per_pe = Some(cache);
+            pipe.cfg.warmup_batches = if ctx.quick { 2 } else { 6 };
+            pipe.cfg.measure_batches = if ctx.quick { 3 } else { 8 };
+            let feat_dim = pipe.ds.feat_dim;
             for &kind in &samplers {
+                pipe.cfg.kind = kind;
                 for mode in [Mode::Independent, Mode::Cooperative] {
-                    let run_engine = |kappa: Kappa| -> EngineReport {
-                        let mut cfg = EngineConfig {
-                            mode,
-                            exec: ctx.exec,
-                            num_pes: preset.num_pes,
-                            batch_per_pe: b,
-                            cache_per_pe: cache,
-                            kind,
-                            warmup_batches: if ctx.quick { 2 } else { 6 },
-                            measure_batches: if ctx.quick { 3 } else { 8 },
-                            seed: ctx.seed,
-                            ..Default::default()
-                        };
-                        cfg.sampler.kappa = kappa;
-                        engine_run(&ds, &part, &cfg)
-                    };
-                    let r1 = run_engine(Kappa::Finite(1));
-                    let times = estimate(&r1, preset, model, ds.feat_dim);
+                    pipe.cfg.mode = mode;
+                    pipe.cfg.kappa = Kappa::Finite(1);
+                    let r1: EngineReport = pipe.engine_report();
+                    let times = estimate(&r1, preset, model, feat_dim);
                     // Cache,κ column: LABOR-0 only (as in the paper)
                     let cache_kappa_ms = if kind == SamplerKind::Labor0 {
-                        let r256 = run_engine(Kappa::Finite(256));
+                        pipe.cfg.kappa = Kappa::Finite(256);
+                        let r256 = pipe.engine_report();
                         feature_cache_ms_for(
                             &r256,
                             preset,
-                            ds.feat_dim,
+                            feat_dim,
                             r256.feat_misses,
                             r256.feat_fabric_rows,
                         )

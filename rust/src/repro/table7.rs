@@ -4,8 +4,8 @@
 //! in thousands like the paper.
 
 use super::Ctx;
-use crate::coop::engine::{run as engine_run, EngineConfig, Mode};
-use crate::graph::{datasets, partition};
+use crate::coop::engine::Mode;
+use crate::pipeline::{Partitioner, PipelineBuilder};
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
@@ -18,30 +18,28 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         ],
     );
     for ds_name in ds_names {
-        let ds = datasets::build(ds_name, ctx.seed)?;
-        let parts: Vec<(&str, partition::Partition)> = vec![
-            ("random", partition::random(&ds.graph, 4, ctx.seed)),
-            ("metis", partition::multilevel(&ds.graph, 4, ctx.seed)),
-        ];
-        for (pname, part) in &parts {
+        let mut pipe = PipelineBuilder::new()
+            .dataset(ds_name)
+            .exec(ctx.exec)
+            .num_pes(4)
+            .batch_per_pe(if ctx.quick { 32 } else { 1024 })
+            .cache_per_pe(1024)
+            .warmup_batches(1)
+            .measure_batches(if ctx.quick { 2 } else { 6 })
+            .seed(ctx.seed)
+            .build()?;
+        for (pname, partitioner) in
+            [("random", Partitioner::Random), ("metis", Partitioner::Multilevel)]
+        {
+            pipe.set_partitioner(partitioner);
             for mode in [Mode::Independent, Mode::Cooperative] {
                 // independent counts don't depend on partition quality —
                 // print them only once (random row), like the paper
-                if mode == Mode::Independent && *pname == "metis" {
+                if mode == Mode::Independent && pname == "metis" {
                     continue;
                 }
-                let cfg = EngineConfig {
-                    mode,
-                    exec: ctx.exec,
-                    num_pes: 4,
-                    batch_per_pe: if ctx.quick { 32 } else { 1024 },
-                    cache_per_pe: 1024,
-                    warmup_batches: 1,
-                    measure_batches: if ctx.quick { 2 } else { 6 },
-                    seed: ctx.seed,
-                    ..Default::default()
-                };
-                let r = engine_run(&ds, part, &cfg);
+                pipe.cfg.mode = mode;
+                let r = pipe.engine_report();
                 let k = |x: f64| format!("{:.2}", x / 1e3);
                 table.push_row(&[
                     ds_name.to_string(),

@@ -1,13 +1,21 @@
-//! The training loop: samplers → padded blocks → AOT train-step → metrics.
+//! The training loop: pipeline stream → padded blocks → AOT train-step
+//! → metrics.
 //!
-//! [`trainer::Trainer`] owns the compiled train/forward executables, the
-//! host-side parameter/optimizer state, the (dependent) sampler, and the
-//! batch drawing. One [`Trainer::step`] = one PJRT execution; Python is
-//! never involved. [`evalx`] adds accuracy / macro-F1 evaluation over the
+//! [`trainer::Trainer`] owns the compiled train/forward executables and
+//! the host-side parameter/optimizer state; batch drawing and MFG
+//! sampling come from a [`crate::pipeline::TrainStream`] (the trainer's
+//! own, configured by [`TrainerOptions`], or any external
+//! [`crate::pipeline::MinibatchStream`] via [`Trainer::step_from`]).
+//! One [`Trainer::step`] = one PJRT execution; Python is never involved.
+//! [`evalx`] adds accuracy / macro-F1 evaluation over the
 //! validation/test splits through the forward executable.
 
 pub mod trainer;
 pub mod evalx;
 
-pub use trainer::{sample_indep_parts, StepStats, Trainer, TrainerOptions};
+pub use trainer::{StepStats, Trainer, TrainerOptions};
 pub use evalx::EvalStats;
+
+// retained re-export: the indep-merged sampling core moved to the
+// pipeline with the rest of the batch-assembly logic
+pub use crate::pipeline::sample_indep_parts;

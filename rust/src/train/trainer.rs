@@ -1,14 +1,22 @@
-//! The Trainer: everything needed to train the paper's GCN end to end
-//! from Rust through PJRT.
+//! The Trainer: the compute half of a training step (padding, feature
+//! gather, PJRT execution, optimizer state), fed by a pipeline
+//! [`TrainStream`].
+//!
+//! Since the pipeline redesign the Trainer no longer owns private
+//! sampling plumbing: batch drawing and MFG sampling live in
+//! [`crate::pipeline::TrainStream`], and the Trainer either pulls from
+//! its own stream ([`Trainer::step`], configured by
+//! [`TrainerOptions::batching`]) or from any external
+//! [`MinibatchStream`] ([`Trainer::step_from`]).
 
 use super::evalx::{score, EvalStats};
 use crate::coop::engine::ExecMode;
-use crate::graph::{Csr, Dataset, VertexId};
+use crate::graph::{Dataset, VertexId};
+use crate::pipeline::{Batching, MinibatchStream, TrainStream};
 use crate::runtime::manifest::ArtifactConfig;
 use crate::runtime::tensors::{forward_inputs, to_vec_f32, train_inputs, ParamState};
 use crate::runtime::{Executable, Manifest, Runtime};
-use crate::sampling::{block, Kappa, Mfg, Sampler, SamplerConfig, SamplerKind};
-use crate::util::rng::Pcg64;
+use crate::sampling::{Kappa, Mfg, SamplerConfig, SamplerKind};
 use crate::util::stats::Timer;
 
 /// Trainer construction options.
@@ -20,10 +28,12 @@ pub struct TrainerOptions {
     pub seed: u64,
     /// learning-rate override (None = manifest value).
     pub lr: Option<f32>,
-    /// execution mode for the multi-PE sampling helpers
-    /// ([`Trainer::sample_indep_merged_mfg`] runs one thread per PE when
-    /// `Threaded`; `Serial` is the bit-identical debugging fallback).
+    /// execution mode for multi-PE sampling (`Batching::IndepMerged`
+    /// samples one sub-batch per PE thread when `Threaded`; `Serial` is
+    /// the bit-identical debugging fallback).
     pub exec: ExecMode,
+    /// how the trainer's stream assembles the global batch.
+    pub batching: Batching,
 }
 
 impl Default for TrainerOptions {
@@ -32,9 +42,10 @@ impl Default for TrainerOptions {
             kind: SamplerKind::Labor0,
             kappa: Kappa::Finite(1),
             fanout: 10,
-            seed: 0x7EA1,
+            seed: crate::pipeline::DEFAULT_SEED,
             lr: None,
             exec: ExecMode::Threaded,
+            batching: Batching::Single,
         }
     }
 }
@@ -62,10 +73,8 @@ pub struct Trainer<'d> {
     train_exe: Executable,
     forward_exe: Executable,
     pub state: ParamState,
-    sampler: Sampler<'d>,
-    seed_rng: Pcg64,
+    stream: TrainStream<'d>,
     lr: f32,
-    exec: ExecMode,
     feat_buf: Vec<f32>,
 }
 
@@ -92,7 +101,15 @@ impl<'d> Trainer<'d> {
             kappa: opts.kappa,
             ..Default::default()
         };
-        let sampler = sampler_cfg.build(opts.kind, &ds.graph, opts.seed);
+        let stream = TrainStream::new(
+            ds,
+            opts.kind,
+            sampler_cfg,
+            art.batch,
+            opts.seed,
+            opts.exec,
+            opts.batching,
+        );
         let state = ParamState::init(&art, opts.seed ^ 0xFACE);
         let lr = opts.lr.unwrap_or(art.lr);
         Ok(Trainer {
@@ -101,44 +118,50 @@ impl<'d> Trainer<'d> {
             train_exe,
             forward_exe,
             state,
-            sampler,
-            seed_rng: Pcg64::new(opts.seed ^ 0x5EED),
+            stream,
             lr,
-            exec: opts.exec,
             feat_buf: Vec::new(),
         })
     }
 
     /// Draw the next training seed batch (uniform without replacement).
     pub fn next_seeds(&mut self) -> Vec<VertexId> {
-        let b = self.art.batch.min(self.ds.train.len());
-        self.seed_rng
-            .sample_distinct(self.ds.train.len(), b)
-            .into_iter()
-            .map(|i| self.ds.train[i as usize])
-            .collect()
+        self.stream.next_seeds()
     }
 
-    /// One training step on freshly drawn seeds.
+    /// One training step on freshly drawn seeds from the trainer's own
+    /// stream.
     pub fn step(&mut self) -> crate::Result<StepStats> {
         let seeds = self.next_seeds();
         self.step_on_seeds(&seeds)
     }
 
-    /// One training step on given seeds (samples an MFG internally and
-    /// advances the dependent-batch RNG).
+    /// One training step pulled from an external stream (e.g. the
+    /// Figure 9 convergence arms). The stream must materialize a merged
+    /// MFG; engine measurement streams yield counts only.
+    pub fn step_from(&mut self, stream: &mut dyn MinibatchStream) -> crate::Result<StepStats> {
+        let mb = stream.next_batch();
+        let mfg = mb
+            .merged
+            .ok_or_else(|| anyhow::anyhow!("stream yields no merged MFG (measurement stream?)"))?;
+        let mut stats = self.step_on_mfg(&mfg)?;
+        stats.sample_ms = mb.wall_ms;
+        Ok(stats)
+    }
+
+    /// One training step on given seeds (samples via the trainer's
+    /// stream, advancing its dependent-batch RNG).
     pub fn step_on_seeds(&mut self, seeds: &[VertexId]) -> crate::Result<StepStats> {
         let t = Timer::start();
-        let mfg = self.sampler.sample_mfg(seeds);
-        self.sampler.advance_batch();
+        let mfg = self.stream.sample_on(seeds);
         let sample_ms = t.elapsed_ms();
         let mut stats = self.step_on_mfg(&mfg)?;
         stats.sample_ms = sample_ms;
         Ok(stats)
     }
 
-    /// One training step on a pre-built MFG (used by the coop/indep
-    /// convergence harnesses that construct global or merged batches).
+    /// One training step on a pre-built MFG (used by harnesses that
+    /// construct batches through external streams).
     pub fn step_on_mfg(&mut self, mfg: &Mfg) -> crate::Result<StepStats> {
         let mut stats = StepStats::default();
         let t = Timer::start();
@@ -182,12 +205,12 @@ impl<'d> Trainer<'d> {
     pub fn evaluate(&mut self, nodes: &[VertexId], eval_seed: u64) -> crate::Result<EvalStats> {
         let b = self.art.caps.n[0];
         let sampler_cfg = SamplerConfig {
-            fanout: self.sampler.cfg.fanout,
+            fanout: self.stream.config().fanout,
             layers: self.art.layers,
             kappa: Kappa::Finite(1),
             ..Default::default()
         };
-        let mut eval_sampler = sampler_cfg.build(self.sampler.kind, &self.ds.graph, eval_seed);
+        let mut eval_sampler = sampler_cfg.build(self.stream.kind(), &self.ds.graph, eval_seed);
         let mut pairs: Vec<(u16, u16)> = Vec::with_capacity(nodes.len());
         for chunk in nodes.chunks(b) {
             let mfg = eval_sampler.sample_mfg(chunk);
@@ -213,102 +236,5 @@ impl<'d> Trainer<'d> {
             }
         }
         Ok(score(self.ds.num_classes, &pairs))
-    }
-
-    /// Build one cooperative global MFG: sampling the global batch with
-    /// the shared-coin sampler — exactly the union Algorithm 1 produces
-    /// (see coop_sampler tests).
-    pub fn sample_global_mfg(&mut self, seeds: &[VertexId]) -> Mfg {
-        let mfg = self.sampler.sample_mfg(seeds);
-        self.sampler.advance_batch();
-        mfg
-    }
-
-    /// Build a merged block-diagonal MFG of `p` independent sub-batches
-    /// (Independent Minibatching semantics: per-PE RNG, duplicates kept).
-    ///
-    /// With [`ExecMode::Threaded`] (the default) each sub-batch is sampled
-    /// by its own PE thread — see [`sample_indep_parts`].
-    pub fn sample_indep_merged_mfg(&mut self, seeds: &[VertexId], p: usize, batch_seed: u64) -> Mfg {
-        let parts = sample_indep_parts(
-            &self.ds.graph,
-            self.sampler.cfg,
-            self.sampler.kind,
-            seeds,
-            p,
-            batch_seed,
-            self.exec,
-        );
-        block::merge_mfgs(&parts)
-    }
-}
-
-/// Sample the `p` per-PE sub-batches of one Independent-Minibatching
-/// global step — the Runtime-free core of
-/// [`Trainer::sample_indep_merged_mfg`], also driven directly by
-/// `benches/bench_train_step.rs` so trainer and bench cannot drift.
-///
-/// PE `i`'s sampler is seeded `batch_seed ^ ((i+1) << 32)` in **both**
-/// exec modes, so the result is bit-identical regardless of scheduling;
-/// only the wall-clock changes (tested below).
-pub fn sample_indep_parts(
-    graph: &Csr,
-    cfg: SamplerConfig,
-    kind: SamplerKind,
-    seeds: &[VertexId],
-    p: usize,
-    batch_seed: u64,
-    exec: ExecMode,
-) -> Vec<Mfg> {
-    let per = seeds.len() / p;
-    let pe_sample = |i: usize, chunk: &[VertexId]| -> Mfg {
-        let mut s = cfg.build(kind, graph, batch_seed ^ ((i as u64 + 1) << 32));
-        s.sample_mfg(chunk)
-    };
-    match exec {
-        ExecMode::Serial => {
-            (0..p).map(|i| pe_sample(i, &seeds[i * per..(i + 1) * per])).collect()
-        }
-        ExecMode::Threaded => std::thread::scope(|scope| {
-            let pe_sample = &pe_sample;
-            let handles: Vec<_> = (0..p)
-                .map(|i| {
-                    let chunk = &seeds[i * per..(i + 1) * per];
-                    scope.spawn(move || pe_sample(i, chunk))
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("PE sampling thread panicked"))
-                .collect()
-        }),
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::graph::generate;
-
-    #[test]
-    fn indep_parts_serial_and_threaded_bit_identical() {
-        let g = generate::chung_lu(2000, 12.0, 2.4, 5);
-        let cfg = SamplerConfig::default();
-        let seeds: Vec<VertexId> = (0..256).collect();
-        for kind in [SamplerKind::Labor0, SamplerKind::Neighbor] {
-            let a = sample_indep_parts(&g, cfg, kind, &seeds, 4, 77, ExecMode::Serial);
-            let b = sample_indep_parts(&g, cfg, kind, &seeds, 4, 77, ExecMode::Threaded);
-            assert_eq!(a.len(), b.len());
-            for (pe, (x, y)) in a.iter().zip(&b).enumerate() {
-                assert_eq!(x.layer_vertices, y.layer_vertices, "{kind:?} PE{pe} vertices");
-                for (l, (ex, ey)) in x.layer_edges.iter().zip(&y.layer_edges).enumerate() {
-                    assert_eq!(ex.offsets, ey.offsets, "{kind:?} PE{pe} L{l} offsets");
-                    assert_eq!(ex.nbr_local, ey.nbr_local, "{kind:?} PE{pe} L{l} edges");
-                }
-            }
-            let ma = block::merge_mfgs(&a);
-            let mb = block::merge_mfgs(&b);
-            assert_eq!(ma.layer_vertices, mb.layer_vertices, "{kind:?} merged");
-        }
     }
 }

@@ -1,0 +1,254 @@
+//! Pipeline API equivalence: the redesigned construction path
+//! (`PipelineBuilder` / `MinibatchStream`) must reproduce the PR-1
+//! behavior bit-for-bit at fixed seeds.
+//!
+//! * builder-driven engine reports == direct `engine::run` with a
+//!   hand-assembled dataset/partition/config (coop and indep, serial and
+//!   threaded); the deeper oracle — stream engine vs the preserved PR-1
+//!   engine loops — lives in `coop::engine::tests`.
+//! * `TrainStream` reproduces the PR-1 `Trainer` sampling recipes
+//!   exactly (seed draw `Pcg64(seed ^ 0x5EED)`, single shared-coin
+//!   sampler; per-step re-seeded merged independent sub-batches), which
+//!   pins training trajectories: the train-step compute is a
+//!   deterministic function of (MFG, params, lr), so identical MFG
+//!   sequences at a fixed seed imply identical loss/accuracy curves.
+
+use coopgnn::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
+use coopgnn::graph::{datasets, partition};
+use coopgnn::pipeline::{
+    Batching, MinibatchStream, PipelineBuilder, TrainStream, SEED_DRAW_SALT,
+};
+use coopgnn::sampling::{block, Kappa, Mfg, SamplerConfig, SamplerKind};
+use coopgnn::train::sample_indep_parts;
+use coopgnn::util::rng::Pcg64;
+
+fn assert_counts_identical(a: &EngineReport, b: &EngineReport, ctx: &str) {
+    assert_eq!(a.s, b.s, "{ctx}: S");
+    assert_eq!(a.e, b.e, "{ctx}: E");
+    assert_eq!(a.tilde, b.tilde, "{ctx}: S~");
+    assert_eq!(a.cross, b.cross, "{ctx}: cross");
+    assert_eq!(a.feat_requested, b.feat_requested, "{ctx}: requested");
+    assert_eq!(a.feat_misses, b.feat_misses, "{ctx}: misses");
+    assert_eq!(a.feat_fabric_rows, b.feat_fabric_rows, "{ctx}: fabric");
+    assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
+    assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup");
+}
+
+#[test]
+fn builder_reports_match_direct_engine_run() {
+    // the builder path (dataset seeded from cfg.seed, random partition
+    // seeded from cfg.seed) vs assembling the same pieces by hand and
+    // calling engine::run directly — both modes, both exec modes
+    let seed = 0x5EA5;
+    for mode in [Mode::Independent, Mode::Cooperative] {
+        for exec in [ExecMode::Serial, ExecMode::Threaded] {
+            let pipe = PipelineBuilder::new()
+                .dataset("tiny")
+                .mode(mode)
+                .exec(exec)
+                .num_pes(4)
+                .batch_per_pe(32)
+                .cache_per_pe(200)
+                .warmup_batches(2)
+                .measure_batches(4)
+                .seed(seed)
+                .build()
+                .unwrap();
+            let via_pipeline = pipe.engine_report();
+
+            let ds = datasets::build("tiny", seed).unwrap();
+            let part = partition::random(&ds.graph, 4, seed);
+            let cfg = EngineConfig {
+                mode,
+                exec,
+                num_pes: 4,
+                batch_per_pe: 32,
+                cache_per_pe: 200,
+                warmup_batches: 2,
+                measure_batches: 4,
+                seed,
+                ..Default::default()
+            };
+            let direct = engine::run(&ds, &part, &cfg);
+            assert_counts_identical(
+                &via_pipeline,
+                &direct,
+                &format!("{}/{}", mode.name(), exec.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn pipeline_stream_drained_by_trait_object_matches_report() {
+    // Pipeline::stream() + engine::drain over &mut dyn MinibatchStream
+    // is the same thing engine_report() does internally
+    let pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Cooperative)
+        .num_pes(4)
+        .batch_per_pe(32)
+        .cache_per_pe(200)
+        .warmup_batches(1)
+        .measure_batches(3)
+        .seed(9)
+        .build()
+        .unwrap();
+    let mut stream = pipe.stream();
+    let drained = engine::drain(&mut stream, &pipe.cfg.engine_config(&pipe.ds));
+    let report = pipe.engine_report();
+    assert_counts_identical(&drained, &report, "drain vs engine_report");
+}
+
+fn assert_mfgs_equal(a: &Mfg, b: &Mfg, ctx: &str) {
+    assert_eq!(a.layer_vertices, b.layer_vertices, "{ctx}: vertices");
+    for (l, (ea, eb)) in a.layer_edges.iter().zip(&b.layer_edges).enumerate() {
+        assert_eq!(ea.offsets, eb.offsets, "{ctx}: L{l} offsets");
+        assert_eq!(ea.nbr_local, eb.nbr_local, "{ctx}: L{l} edges");
+    }
+}
+
+#[test]
+fn single_train_stream_reproduces_pr1_trainer_sampling() {
+    // PR-1 Trainer::step sampled like this: seeds from
+    // Pcg64(seed ^ 0x5EED) over the train split, one persistent
+    // shared-coin sampler built with `seed`, advance_batch per step.
+    // TrainStream::Single must yield the identical MFG sequence — and
+    // since the train-step compute is deterministic in the MFG, this
+    // pins the loss/accuracy trajectory at a fixed seed.
+    let ds = datasets::build("tiny", 3).unwrap();
+    let seed = 0x7EA1;
+    let batch = 32usize;
+    let cfg = SamplerConfig::default();
+
+    let mut stream = TrainStream::new(
+        &ds,
+        SamplerKind::Labor0,
+        cfg,
+        batch,
+        seed,
+        ExecMode::Threaded,
+        Batching::Single,
+    );
+
+    // the PR-1 recipe, inline
+    let mut legacy_sampler = cfg.build(SamplerKind::Labor0, &ds.graph, seed);
+    let mut legacy_rng = Pcg64::new(seed ^ SEED_DRAW_SALT);
+
+    for step in 0..5 {
+        let b = batch.min(ds.train.len());
+        let legacy_seeds: Vec<u32> = legacy_rng
+            .sample_distinct(ds.train.len(), b)
+            .into_iter()
+            .map(|i| ds.train[i as usize])
+            .collect();
+        let legacy_mfg = legacy_sampler.sample_mfg(&legacy_seeds);
+        legacy_sampler.advance_batch();
+
+        let mb = stream.next_batch();
+        let stream_mfg = mb.merged.expect("train stream yields MFGs");
+        assert_eq!(stream_mfg.seeds(), legacy_seeds.as_slice(), "step {step}: seed draw");
+        assert_mfgs_equal(&stream_mfg, &legacy_mfg, &format!("step {step}"));
+    }
+}
+
+#[test]
+fn indep_merged_train_stream_reproduces_pr1_fig9_recipe() {
+    // PR-1 Figure 9 independent arm: per-step batch seed
+    // `seed ^ (step << 16)` (step 1-based), P sub-batches with sampler
+    // seeds `batch_seed ^ ((i+1) << 32)`, merged block-diagonally.
+    let ds = datasets::build("tiny", 3).unwrap();
+    let seed = 0xBEEF;
+    let batch = 32usize;
+    let p = 4usize;
+    let cfg = SamplerConfig::default();
+
+    let mut stream = TrainStream::new(
+        &ds,
+        SamplerKind::Labor0,
+        cfg,
+        batch,
+        seed,
+        ExecMode::Threaded,
+        Batching::IndepMerged { pes: p },
+    );
+    let mut legacy_rng = Pcg64::new(seed ^ SEED_DRAW_SALT);
+
+    for step in 1u64..=4 {
+        let b = batch.min(ds.train.len());
+        let legacy_seeds: Vec<u32> = legacy_rng
+            .sample_distinct(ds.train.len(), b)
+            .into_iter()
+            .map(|i| ds.train[i as usize])
+            .collect();
+        let batch_seed = seed ^ (step << 16);
+        let parts = sample_indep_parts(
+            &ds.graph,
+            cfg,
+            SamplerKind::Labor0,
+            &legacy_seeds,
+            p,
+            batch_seed,
+            ExecMode::Serial,
+        );
+        let legacy_merged = block::merge_mfgs(&parts);
+
+        let mb = stream.next_batch();
+        let stream_mfg = mb.merged.expect("train stream yields MFGs");
+        assert_mfgs_equal(&stream_mfg, &legacy_merged, &format!("step {step}"));
+    }
+}
+
+#[test]
+fn kappa_flows_through_the_builder() {
+    // dependent minibatching is a config knob on the same stream: κ=64
+    // must cut the miss rate exactly as it does through raw EngineConfig
+    let mk = |kappa: Kappa| {
+        let mut pipe = PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(Mode::Independent)
+            .num_pes(1)
+            .batch_per_pe(64)
+            .cache_per_pe(400)
+            .warmup_batches(4)
+            .measure_batches(12)
+            .seed(1)
+            .build()
+            .unwrap();
+        pipe.cfg.kappa = kappa;
+        pipe.engine_report()
+    };
+    let r1 = mk(Kappa::Finite(1));
+    let r64 = mk(Kappa::Finite(64));
+    assert!(
+        r64.cache_miss_rate < r1.cache_miss_rate,
+        "κ=64 miss {} must beat κ=1 {}",
+        r64.cache_miss_rate,
+        r1.cache_miss_rate
+    );
+}
+
+#[test]
+fn train_stream_exec_modes_agree() {
+    // Batching::IndepMerged must be scheduling-independent: serial and
+    // threaded sub-batch sampling produce the same merged MFG stream
+    let ds = datasets::build("tiny", 5).unwrap();
+    let cfg = SamplerConfig::default();
+    let mut mk = |exec: ExecMode| {
+        let mut s = TrainStream::new(
+            &ds,
+            SamplerKind::Labor0,
+            cfg,
+            32,
+            7,
+            exec,
+            Batching::IndepMerged { pes: 4 },
+        );
+        (0..3).map(|_| s.next_batch().merged.unwrap()).collect::<Vec<_>>()
+    };
+    let serial = mk(ExecMode::Serial);
+    let threaded = mk(ExecMode::Threaded);
+    for (i, (a, b)) in serial.iter().zip(&threaded).enumerate() {
+        assert_mfgs_equal(a, b, &format!("batch {i}"));
+    }
+}

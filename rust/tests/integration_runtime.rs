@@ -2,9 +2,11 @@
 //! verify end-to-end numerics (loss descent, eval plumbing). Requires
 //! `make artifacts` to have run (skipped with a message otherwise).
 
+use coopgnn::coop::engine::ExecMode;
 use coopgnn::graph::datasets;
+use coopgnn::pipeline::{Batching, TrainStream};
 use coopgnn::runtime::{Manifest, Runtime};
-use coopgnn::sampling::{Kappa, SamplerKind};
+use coopgnn::sampling::{Kappa, SamplerConfig, SamplerKind};
 use coopgnn::train::{Trainer, TrainerOptions};
 use std::path::Path;
 
@@ -109,16 +111,25 @@ fn evaluate_runs_and_improves_over_random() {
 #[test]
 fn merged_indep_mfg_executes() {
     // The merged block-diagonal MFG (Figure 9 indep baseline) must fit
-    // and execute with the tiny caps when merging 2 sub-batches of 16.
+    // and execute with the tiny caps when merging 2 sub-batches of 16 —
+    // built through the pipeline stream and fed to the trainer via
+    // step_from.
     let Some(dir) = artifacts_dir() else { return };
     let Some(rt) = runtime() else { return };
     let manifest = Manifest::load(dir).unwrap();
     let ds = datasets::build("tiny", 3).unwrap();
     let opts = TrainerOptions { lr: Some(0.02), ..Default::default() };
     let mut t = Trainer::new(&rt, &manifest, "tiny-b32", &ds, &opts).unwrap();
-    let seeds: Vec<u32> = ds.train.iter().take(32).copied().collect();
-    let merged = t.sample_indep_merged_mfg(&seeds, 2, 7);
-    let s = t.step_on_mfg(&merged).unwrap();
+    let mut stream = TrainStream::new(
+        &ds,
+        SamplerKind::Labor0,
+        SamplerConfig { layers: t.art.layers, ..Default::default() },
+        32,
+        7,
+        ExecMode::Threaded,
+        Batching::IndepMerged { pes: 2 },
+    );
+    let s = t.step_from(&mut stream).unwrap();
     assert!(s.loss.is_finite());
     eprintln!("merged step: loss={} truncated_v={}", s.loss, s.truncated_vertices);
 }
