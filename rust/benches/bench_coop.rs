@@ -14,8 +14,11 @@ use coopgnn::coop::indep::sample_independent;
 use coopgnn::graph::{generate, partition};
 use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::sampling::{SamplerConfig, SamplerKind};
+use coopgnn::util::json::{merge_section, Json};
 use coopgnn::util::rng::Pcg64;
 use coopgnn::util::stats::{bench_ms, smoke_mode, Timer};
+use std::collections::BTreeMap;
+use std::path::Path;
 
 fn main() {
     let smoke = smoke_mode();
@@ -81,25 +84,41 @@ fn main() {
         .build()
         .expect("registry dataset");
     pipe.cfg.cache_per_pe = Some((pipe.ds.cache_size / 4).max(64));
-    let mut batch_walls: Vec<f64> = Vec::new();
-    for exec in [ExecMode::Serial, ExecMode::Threaded] {
+    // (exec, prefetch) arms; since the feature-plane refactor each batch
+    // really moves its feature bytes, so walls include storage + fabric
+    // payload movement. wall_batch_ms is producer-side (barrier-to-
+    // barrier inside the stream), so prefetch cannot move it — the
+    // end-to-end ms/batch (run wall over all batches, consumer side) is
+    // the number the prefetch arm exists to track.
+    let batches = (1 + measure) as f64;
+    let mut arms: Vec<(&str, f64, f64, f64, f64)> = Vec::new();
+    for (label, exec, prefetch) in [
+        ("serial", ExecMode::Serial, false),
+        ("threaded", ExecMode::Threaded, false),
+        ("threaded_prefetch", ExecMode::Threaded, true),
+    ] {
         pipe.cfg.exec = exec;
+        pipe.cfg.prefetch = prefetch;
         let t = Timer::start();
         let r = pipe.engine_report();
-        let total_ms = t.elapsed_ms();
-        batch_walls.push(r.wall_batch_ms);
+        let e2e_ms = t.elapsed_ms() / batches;
+        arms.push((label, r.wall_batch_ms, e2e_ms, r.feat_storage_bytes, r.feat_fabric_bytes));
         println!(
-            "engine/coop_4pe_{ds_name} exec={:<8} total {:>8.1} ms | per batch: wall {:>7.2} ms, \
-             per-PE stage sum {:>7.2} ms (sampling {:.2} + feature {:.2}; incl. exchange waits)",
+            "engine/coop_4pe_{ds_name} exec={:<8} prefetch={} end-to-end {:>7.2} ms/batch | \
+             producer wall {:>7.2} ms, per-PE stage sum {:>7.2} ms (sampling {:.2} + feature \
+             {:.2}; incl. exchange waits), {:>8.1} KiB from storage, {:>8.1} KiB over fabric",
             exec.name(),
-            total_ms,
+            prefetch as u8,
+            e2e_ms,
             r.wall_batch_ms,
             r.wall_sampling_ms + r.wall_feature_ms,
             r.wall_sampling_ms,
             r.wall_feature_ms,
+            r.feat_storage_bytes / 1024.0,
+            r.feat_fabric_bytes / 1024.0,
         );
     }
-    let (serial_wall, threaded_wall) = (batch_walls[0], batch_walls[1]);
+    let (serial_wall, threaded_wall) = (arms[0].1, arms[1].1);
     let speedup = if threaded_wall > 0.0 { serial_wall / threaded_wall } else { 0.0 };
     println!(
         "engine/coop_4pe_{ds_name} parallelism check: serial {serial_wall:.2} ms/batch vs \
@@ -110,4 +129,33 @@ fn main() {
             "WARNING: no speedup over serial (single-core runner or batch too small?)"
         }
     );
+    let prefetch_gain = if arms[2].2 > 0.0 { arms[1].2 / arms[2].2 } else { 0.0 };
+    println!(
+        "engine/coop_4pe_{ds_name} prefetch check: threaded {:.2} -> prefetch {:.2} \
+         end-to-end ms/batch = {prefetch_gain:.2}x",
+        arms[1].2, arms[2].2
+    );
+
+    // machine-readable perf trajectory: BENCH_pipeline.json, uploaded by
+    // CI so batch walls and byte movement are tracked across PRs
+    let mut section = BTreeMap::new();
+    section.insert("dataset".to_string(), Json::Str(ds_name.to_string()));
+    section.insert("pes".to_string(), Json::Num(4.0));
+    section.insert("batch_per_pe".to_string(), Json::Num(b as f64));
+    section.insert("smoke".to_string(), Json::Bool(smoke));
+    for (label, wall, e2e, storage, fabric) in &arms {
+        let mut arm = BTreeMap::new();
+        arm.insert("wall_batch_ms".to_string(), Json::Num(*wall));
+        arm.insert("end_to_end_ms_per_batch".to_string(), Json::Num(*e2e));
+        arm.insert("storage_bytes_per_batch".to_string(), Json::Num(*storage));
+        arm.insert("fabric_bytes_per_batch".to_string(), Json::Num(*fabric));
+        section.insert(label.to_string(), Json::Obj(arm));
+    }
+    section.insert("threaded_speedup_vs_serial".to_string(), Json::Num(speedup));
+    section.insert("prefetch_end_to_end_gain".to_string(), Json::Num(prefetch_gain));
+    let path = Path::new("BENCH_pipeline.json");
+    match merge_section(path, "bench_coop", Json::Obj(section)) {
+        Ok(()) => println!("bench_coop: wrote section `bench_coop` to {}", path.display()),
+        Err(e) => eprintln!("bench_coop: could not write {}: {e}", path.display()),
+    }
 }

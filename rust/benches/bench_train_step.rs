@@ -7,19 +7,50 @@
 //! `pipeline::TrainStream` through the `MinibatchStream` seam, exactly
 //! what `Trainer` consumes.
 //!
+//! Part 1.5 (always runs): **prefetch overlap** — the threaded 4-PE
+//! `TrainStream` (sampling + real feature gathering) driven `--prefetch`
+//! off vs on against a deterministic compute stand-in that sweeps the
+//! gathered feature buffer (the PJRT runtime is stubbed in this build,
+//! so the stand-in models the execution half's cost). With prefetch the
+//! producer samples + gathers batch t+1 while the consumer sweeps batch
+//! t, so per-step wall approaches max(produce, consume) instead of
+//! their sum; checksums assert the batches are bit-identical either
+//! way. Results land in `BENCH_pipeline.json` (section
+//! `bench_train_step`) for the CI perf-trajectory artifact.
+//!
 //! Part 2 (needs `make artifacts` + a PJRT-enabled build): end-to-end
-//! train-step latency through the runtime with the per-batch breakdown
-//! (sample / pad / feature / execute). Skips cleanly otherwise.
+//! train-step latency through the runtime, prefetch off vs on, with the
+//! per-batch breakdown (sample / pad / feature / execute). Skips
+//! cleanly otherwise.
 
 use coopgnn::coop::engine::ExecMode;
 use coopgnn::pipeline::{
-    sample_indep_parts, Batching, MinibatchStream, PipelineBuilder, TrainStream,
+    sample_indep_parts, with_prefetch, Batching, MinibatchStream, PipelineBuilder,
+    PrefetchedStream, TrainStream,
 };
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{block, SamplerConfig, SamplerKind};
 use coopgnn::train::Trainer;
-use coopgnn::util::stats::{bench_ms, smoke_mode, Summary};
+use coopgnn::util::json::{merge_section, Json};
+use coopgnn::util::stats::{bench_ms, smoke_mode, Summary, Timer};
+use std::collections::BTreeMap;
 use std::path::Path;
+
+/// Deterministic stand-in for the train-step compute: `passes` scaled
+/// sweeps over the gathered feature buffer. Returns a checksum so the
+/// prefetch-on/off runs can assert bit-identical batch content.
+fn consume_features(features: &[f32], passes: usize) -> f64 {
+    let mut acc = 0f64;
+    for p in 0..passes {
+        let scale = 1.0 + p as f64 * 1e-6;
+        let mut pass = 0f64;
+        for &x in features {
+            pass += x as f64;
+        }
+        acc += pass * scale;
+    }
+    acc
+}
 
 fn main() {
     let smoke = smoke_mode();
@@ -53,7 +84,7 @@ fn main() {
     }
 
     // the same front half through the stream seam the Trainer pulls from
-    // (seed drawing + per-step re-seeded sub-batches + merge)
+    // (seed drawing + per-step re-seeded sub-batches + merge + gather)
     let mut stream = TrainStream::new(
         &pipe.ds,
         SamplerKind::Labor0,
@@ -67,6 +98,99 @@ fn main() {
         let mb = stream.next_batch();
         std::hint::black_box(&mb);
     });
+
+    // ---- part 1.5: prefetch overlap on the threaded TrainStream --------
+    let (steps, passes) = if smoke { (6usize, 4usize) } else { (16, 8) };
+    let mk_stream = || {
+        TrainStream::new(
+            &pipe.ds,
+            SamplerKind::Labor0,
+            cfg,
+            batch,
+            4242,
+            ExecMode::Threaded,
+            Batching::IndepMerged { pes: p },
+        )
+    };
+    fn drive(
+        s: &mut dyn MinibatchStream,
+        steps: usize,
+        passes: usize,
+        sums: &mut Vec<f64>,
+        storage: &mut u64,
+    ) {
+        for _ in 0..steps {
+            let mb = s.next_batch();
+            let w = &mb.per_pe[0];
+            *storage += w.bytes_from_storage;
+            let feats = w.features.as_ref().expect("train stream gathers features");
+            sums.push(consume_features(feats, passes));
+        }
+    }
+    let mut walls = Vec::new();
+    let mut checksums = Vec::new();
+    let mut bytes_per_batch = 0f64;
+    for prefetch in [false, true] {
+        let mut step_checksums: Vec<f64> = Vec::with_capacity(steps);
+        let mut storage_bytes = 0u64;
+        let t = Timer::start();
+        if prefetch {
+            with_prefetch(mk_stream(), |s| {
+                drive(s, steps, passes, &mut step_checksums, &mut storage_bytes)
+            });
+        } else {
+            let mut s = mk_stream();
+            drive(&mut s, steps, passes, &mut step_checksums, &mut storage_bytes);
+        }
+        let per_step = t.elapsed_ms() / steps as f64;
+        println!(
+            "train_stream/{ds_name}_4pe prefetch={} {:>8.2} ms/step \
+             ({:.1} KiB gathered/step, {passes} consumer passes)",
+            prefetch as u8,
+            per_step,
+            storage_bytes as f64 / steps as f64 / 1024.0,
+        );
+        bytes_per_batch = storage_bytes as f64 / steps as f64;
+        walls.push(per_step);
+        checksums.push(step_checksums);
+    }
+    assert_eq!(
+        checksums[0], checksums[1],
+        "prefetch must not change batch content (checksum mismatch)"
+    );
+    let overlap_speedup = if walls[1] > 0.0 { walls[0] / walls[1] } else { 0.0 };
+    println!(
+        "train_stream/{ds_name}_4pe prefetch overlap: {:.2} -> {:.2} ms/step = {:.2}x \
+         (identical checksums): {}",
+        walls[0],
+        walls[1],
+        overlap_speedup,
+        if overlap_speedup > 1.05 {
+            "OVERLAPPED (producer gathers batch t+1 during batch t's compute)"
+        } else {
+            "WARNING: no overlap gain (single-core runner or consumer too cheap?)"
+        }
+    );
+
+    let mut section = BTreeMap::new();
+    section.insert("dataset".to_string(), Json::Str(ds_name.to_string()));
+    section.insert("pes".to_string(), Json::Num(p as f64));
+    section.insert("global_batch".to_string(), Json::Num(batch as f64));
+    section.insert("smoke".to_string(), Json::Bool(smoke));
+    section.insert("prefetch0_ms_per_step".to_string(), Json::Num(walls[0]));
+    section.insert("prefetch1_ms_per_step".to_string(), Json::Num(walls[1]));
+    section.insert("prefetch_speedup".to_string(), Json::Num(overlap_speedup));
+    section.insert("storage_bytes_per_batch".to_string(), Json::Num(bytes_per_batch));
+    section.insert("fabric_bytes_per_batch".to_string(), Json::Num(0.0));
+    section.insert("checksums_identical".to_string(), Json::Bool(true));
+    let json_path = Path::new("BENCH_pipeline.json");
+    match merge_section(json_path, "bench_train_step", Json::Obj(section)) {
+        Ok(()) => {
+            println!("bench_train_step: wrote section `bench_train_step` to {}",
+                json_path.display())
+        }
+        Err(e) => eprintln!("bench_train_step: could not write {}: {e}", json_path.display()),
+    }
 
     // ---- part 2: PJRT train-step latency (artifact-gated) --------------
     let dir = Path::new("artifacts");
@@ -87,27 +211,51 @@ fn main() {
     {
         let tpipe = PipelineBuilder::new().dataset(ds_name).seed(1).build().unwrap();
         let opts = tpipe.trainer_options();
-        let mut t = Trainer::new(&rt, &manifest, config, &tpipe.ds, &opts).unwrap();
-        // warmup
-        for _ in 0..3 {
-            t.step().unwrap();
+        for prefetch in [false, true] {
+            let mut t = Trainer::new(&rt, &manifest, config, &tpipe.ds, &opts).unwrap();
+            let (mut samp, mut pad, mut feat, mut exec, mut total) =
+                (vec![], vec![], vec![], vec![], vec![]);
+            let mut losses: Vec<f32> = Vec::new();
+            {
+                let mut one_step = |t: &mut Trainer,
+                                    s: Option<&mut PrefetchedStream>,
+                                    record: bool| {
+                    let t0 = std::time::Instant::now();
+                    let st = match s {
+                        Some(stream) => t.step_from(stream).unwrap(),
+                        None => t.step().unwrap(),
+                    };
+                    if record {
+                        total.push(t0.elapsed().as_secs_f64() * 1e3);
+                        samp.push(st.sample_ms);
+                        pad.push(st.pad_ms);
+                        feat.push(st.feature_ms);
+                        exec.push(st.exec_ms);
+                        losses.push(st.loss);
+                    }
+                };
+                if prefetch {
+                    // the trainer's own recipe, shared store — no second
+                    // materialization, no drift
+                    let stream = t.make_stream();
+                    with_prefetch(stream, |s| {
+                        for i in 0..(3 + iters) {
+                            one_step(&mut t, Some(&mut *s), i >= 3);
+                        }
+                    });
+                } else {
+                    for i in 0..(3 + iters) {
+                        one_step(&mut t, None, i >= 3);
+                    }
+                }
+            }
+            println!("train_step/{config} prefetch={}:", prefetch as u8);
+            println!("  sample  {}", Summary::of(&samp));
+            println!("  pad     {}", Summary::of(&pad));
+            println!("  feature {}", Summary::of(&feat));
+            println!("  execute {}", Summary::of(&exec));
+            println!("  total   {}", Summary::of(&total));
+            println!("  final loss {:.5}", losses.last().copied().unwrap_or(f32::NAN));
         }
-        let (mut samp, mut pad, mut feat, mut exec, mut total) =
-            (vec![], vec![], vec![], vec![], vec![]);
-        for _ in 0..iters {
-            let t0 = std::time::Instant::now();
-            let s = t.step().unwrap();
-            total.push(t0.elapsed().as_secs_f64() * 1e3);
-            samp.push(s.sample_ms);
-            pad.push(s.pad_ms);
-            feat.push(s.feature_ms);
-            exec.push(s.exec_ms);
-        }
-        println!("train_step/{config}:");
-        println!("  sample  {}", Summary::of(&samp));
-        println!("  pad     {}", Summary::of(&pad));
-        println!("  feature {}", Summary::of(&feat));
-        println!("  execute {}", Summary::of(&exec));
-        println!("  total   {}", Summary::of(&total));
     }
 }

@@ -13,11 +13,24 @@
 //!   with true concurrency while staying deterministic (inboxes are
 //!   reassembled in src-major order, matching [`Exchange::route`]).
 //!
-//! *Cross-PE* items (the `c·|S̃|` of the paper's Table 1) are what the
-//! fabric moves at α bandwidth; same-PE buckets are local and free. The
-//! cost model ([`crate::costmodel`]) turns the recorded item counts into
-//! time; the engine also measures real wall-clock for the CPU-side data
-//! movement.
+//! The fabric moves two payload classes, in globally-ordered
+//! barrier-delimited rounds:
+//!
+//! * **vertex ids** (4 bytes each) — the sampling-phase redistribution
+//!   of Algorithm 1 ([`PeEndpoint::all_to_all`] / [`Exchange::route`]);
+//! * **feature rows** (flat f32, `dim` floats per row) — cooperative
+//!   feature loading's α-bandwidth payload
+//!   ([`PeEndpoint::all_to_all_rows`] / [`Exchange::route_rows`]): after
+//!   the owners pull their rows from storage, the fabric carries the
+//!   actual bytes to the requesting PEs. Row traffic is accounted
+//!   separately (`cross_rows` / `cross_row_bytes`) from id traffic
+//!   (`cross_items` / `cross_bytes`) so Table 1's `c·|S̃|` id column and
+//!   the feature-loading row column cannot blur.
+//!
+//! *Cross-PE* payloads are what the fabric moves at α bandwidth; same-PE
+//! buckets are local and free. The cost model ([`crate::costmodel`])
+//! turns the recorded counts into time; the engine also measures real
+//! wall-clock for the CPU-side data movement.
 
 use crate::graph::VertexId;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,6 +46,12 @@ pub struct Exchange {
     pub local_items: u64,
     /// cross bytes (items * item_size accumulated by callers)
     pub cross_bytes: u64,
+    /// feature rows moved between distinct PEs.
+    pub cross_rows: u64,
+    /// feature rows kept local (no fabric cost).
+    pub local_rows: u64,
+    /// f32 bytes of cross-PE feature rows.
+    pub cross_row_bytes: u64,
     /// number of all-to-all rounds executed
     pub rounds: u64,
 }
@@ -64,6 +83,36 @@ impl Exchange {
         inboxes
     }
 
+    /// Route feature-row buckets `buckets[src][dst]` (flat f32, `dim`
+    /// floats per row). Takes the buckets by value — row payloads are
+    /// orders of magnitude larger than id lists, so they are moved, not
+    /// copied. Returns per-destination inboxes **indexed by src**
+    /// (`out[dst][src]`), matching the per-src inbox shape of
+    /// [`PeEndpoint::all_to_all_rows`], because the requester reassembles
+    /// its dense buffer by interleaving per-owner streams.
+    pub fn route_rows(&mut self, buckets: Vec<Vec<Vec<f32>>>, dim: usize) -> Vec<Vec<Vec<f32>>> {
+        assert_eq!(buckets.len(), self.num_pes);
+        assert!(dim > 0, "row routing needs a feature dimension");
+        self.rounds += 1;
+        let mut inboxes: Vec<Vec<Vec<f32>>> =
+            (0..self.num_pes).map(|_| vec![Vec::new(); self.num_pes]).collect();
+        for (src, per_dst) in buckets.into_iter().enumerate() {
+            assert_eq!(per_dst.len(), self.num_pes, "row bucket row {src} width");
+            for (dst, rows) in per_dst.into_iter().enumerate() {
+                debug_assert_eq!(rows.len() % dim, 0, "ragged row bucket {src}->{dst}");
+                let n = (rows.len() / dim) as u64;
+                if src == dst {
+                    self.local_rows += n;
+                } else {
+                    self.cross_rows += n;
+                    self.cross_row_bytes += rows.len() as u64 * 4;
+                }
+                inboxes[dst][src] = rows;
+            }
+        }
+        inboxes
+    }
+
     /// Account a cross-PE payload without routing real data (used for
     /// activation/gradient traffic whose numeric payload lives inside the
     /// monolithic train-step executable; only its *size* matters here).
@@ -84,8 +133,16 @@ impl Exchange {
     }
 }
 
-/// One message on the threaded fabric: (src PE, items for the receiver).
-type Msg = (usize, Vec<VertexId>);
+/// One message payload on the threaded fabric. Rounds are globally
+/// ordered (barrier per round, every PE runs the same protocol), so a
+/// class mismatch on receive is a protocol bug and panics.
+enum Payload {
+    Ids(Vec<VertexId>),
+    Rows(Vec<f32>),
+}
+
+/// One message on the threaded fabric: (src PE, payload for the receiver).
+type Msg = (usize, Payload);
 
 /// Constructor for the per-PE endpoints of a threaded all-to-all fabric.
 pub struct Fabric;
@@ -115,6 +172,9 @@ impl Fabric {
                 cross_items: 0,
                 local_items: 0,
                 cross_bytes: 0,
+                cross_rows: 0,
+                local_rows: 0,
+                cross_row_bytes: 0,
                 rounds: 0,
             })
             .collect()
@@ -123,7 +183,11 @@ impl Fabric {
 
 /// One PE's handle on the threaded fabric. Accounting fields mirror
 /// [`Exchange`] but are *per-endpoint*; summing them across the endpoints
-/// of one fabric reproduces the serial totals exactly.
+/// of one fabric reproduces the serial totals exactly. Id traffic is
+/// accounted at the **sender**; row traffic likewise counts the rows this
+/// endpoint ships to other PEs (receivers can count arrivals themselves —
+/// globally the two views agree since every cross row has one sender and
+/// one receiver).
 pub struct PeEndpoint {
     pub pe: usize,
     pub num_pes: usize,
@@ -133,11 +197,14 @@ pub struct PeEndpoint {
     pub cross_items: u64,
     pub local_items: u64,
     pub cross_bytes: u64,
+    pub cross_rows: u64,
+    pub local_rows: u64,
+    pub cross_row_bytes: u64,
     pub rounds: u64,
 }
 
 impl PeEndpoint {
-    /// One all-to-all round: send `buckets[dst]` to every peer (the
+    /// One id all-to-all round: send `buckets[dst]` to every peer (the
     /// self bucket goes straight into the inbox), receive exactly one
     /// bucket from every peer, and barrier so no message of the next
     /// round can overtake this one. Returns the inbox indexed by src PE
@@ -159,12 +226,48 @@ impl PeEndpoint {
             } else {
                 self.cross_items += items.len() as u64;
                 self.cross_bytes += (items.len() * item_bytes) as u64;
-                self.txs[dst].send((self.pe, items)).expect("fabric peer hung up (send)");
+                self.txs[dst].send((self.pe, Payload::Ids(items))).expect("fabric peer hung up (send)");
             }
         }
         for _ in 0..self.num_pes - 1 {
-            let (src, items) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Ids(items) = payload else {
+                panic!("fabric protocol error: PE {} got rows in an id round", self.pe);
+            };
             inbox[src] = items;
+        }
+        self.barrier.wait();
+        inbox
+    }
+
+    /// One feature-row all-to-all round: `buckets[dst]` is the flat f32
+    /// payload (`dim` floats per row) this PE ships to `dst` — the rows
+    /// `dst` requested from this PE's storage shard during the sampling
+    /// rounds. Returns the inbox indexed by src PE: `inbox[src]` holds
+    /// the rows owner `src` sent back, in the order this PE requested
+    /// them. Same barrier discipline as the id round.
+    pub fn all_to_all_rows(&mut self, buckets: Vec<Vec<f32>>, dim: usize) -> Vec<Vec<f32>> {
+        assert_eq!(buckets.len(), self.num_pes, "PE {} row bucket width", self.pe);
+        assert!(dim > 0, "row exchange needs a feature dimension");
+        self.rounds += 1;
+        let mut inbox: Vec<Vec<f32>> = (0..self.num_pes).map(|_| Vec::new()).collect();
+        for (dst, rows) in buckets.into_iter().enumerate() {
+            debug_assert_eq!(rows.len() % dim, 0, "PE {} ragged row bucket", self.pe);
+            if dst == self.pe {
+                self.local_rows += (rows.len() / dim) as u64;
+                inbox[self.pe] = rows;
+            } else {
+                self.cross_rows += (rows.len() / dim) as u64;
+                self.cross_row_bytes += rows.len() as u64 * 4;
+                self.txs[dst].send((self.pe, Payload::Rows(rows))).expect("fabric peer hung up (send)");
+            }
+        }
+        for _ in 0..self.num_pes - 1 {
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Rows(rows) = payload else {
+                panic!("fabric protocol error: PE {} got ids in a row round", self.pe);
+            };
+            inbox[src] = rows;
         }
         self.barrier.wait();
         inbox
@@ -222,6 +325,28 @@ mod tests {
         ex.account_virtual(100, 256);
         assert_eq!(ex.cross_bytes, 25_600);
         assert_eq!(ex.rounds, 1);
+    }
+
+    #[test]
+    fn row_routing_accounts_rows_and_bytes_separately_from_ids() {
+        let mut ex = Exchange::new(2);
+        let d = 3usize;
+        // PE0 keeps one row local and ships two to PE1; PE1 ships one back
+        let buckets = vec![
+            vec![vec![0.0; d], vec![1.0; 2 * d]],
+            vec![vec![2.0; d], vec![]],
+        ];
+        let inboxes = ex.route_rows(buckets, d);
+        assert_eq!(ex.local_rows, 1);
+        assert_eq!(ex.cross_rows, 3);
+        assert_eq!(ex.cross_row_bytes, 3 * d as u64 * 4);
+        // id counters untouched by row rounds
+        assert_eq!(ex.cross_items, 0);
+        assert_eq!(ex.cross_bytes, 0);
+        // inbox[dst][src] carries the exact payloads
+        assert_eq!(inboxes[1][0], vec![1.0; 2 * d]);
+        assert_eq!(inboxes[0][1], vec![2.0; d]);
+        assert_eq!(inboxes[0][0], vec![0.0; d]);
     }
 
     /// The threaded fabric must reproduce the serial reference exactly:
@@ -295,6 +420,71 @@ mod tests {
         assert_eq!(bytes, ex.cross_bytes);
     }
 
+    /// Row rounds over the threaded fabric must match the serial
+    /// `route_rows` reference: same per-src inboxes (payload bytes
+    /// included) and same row/byte accounting summed over endpoints —
+    /// interleaved with id rounds to exercise the shared channels.
+    #[test]
+    fn threaded_row_fabric_matches_serial_reference() {
+        use crate::util::rng::Pcg64;
+        let p = 3usize;
+        let d = 4usize;
+        let mut rng = Pcg64::new(0xFEA7);
+        let row_buckets: Vec<Vec<Vec<f32>>> = (0..p)
+            .map(|_| {
+                (0..p)
+                    .map(|_| {
+                        let k = rng.next_below(6) as usize;
+                        (0..k * d).map(|_| rng.next_f64() as f32).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        let id_buckets: Vec<Vec<Vec<VertexId>>> = (0..p)
+            .map(|_| {
+                (0..p)
+                    .map(|_| {
+                        let k = rng.next_below(8) as usize;
+                        (0..k).map(|_| rng.next_u64() as VertexId).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut ex = Exchange::new(p);
+        let serial_ids = ex.route(&id_buckets, 4);
+        let serial_rows = ex.route_rows(row_buckets.clone(), d);
+
+        let endpoints = Fabric::endpoints(p);
+        type RowResult = (Vec<Vec<VertexId>>, Vec<Vec<f32>>, u64, u64, u64);
+        let results: Vec<RowResult> = std::thread::scope(|scope| {
+            let (ids, rows) = (&id_buckets, &row_buckets);
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let pe = ep.pe;
+                        let id_inbox = ep.all_to_all(ids[pe].clone(), 4);
+                        let row_inbox = ep.all_to_all_rows(rows[pe].clone(), d);
+                        (id_inbox, row_inbox, ep.cross_rows, ep.local_rows, ep.cross_row_bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for (q, res) in results.iter().enumerate() {
+            assert_eq!(res.0.concat(), serial_ids[q], "PE {q} id inbox");
+            assert_eq!(res.1, serial_rows[q], "PE {q} row inbox");
+        }
+        let cross: u64 = results.iter().map(|r| r.2).sum();
+        let local: u64 = results.iter().map(|r| r.3).sum();
+        let bytes: u64 = results.iter().map(|r| r.4).sum();
+        assert_eq!(cross, ex.cross_rows);
+        assert_eq!(local, ex.local_rows);
+        assert_eq!(bytes, ex.cross_row_bytes);
+    }
+
     #[test]
     fn single_pe_fabric_is_local_only() {
         let mut ep = Fabric::endpoints(1).pop().unwrap();
@@ -302,5 +492,9 @@ mod tests {
         assert_eq!(inbox, vec![vec![1, 2, 3]]);
         assert_eq!(ep.cross_items, 0);
         assert_eq!(ep.local_items, 3);
+        let rows = ep.all_to_all_rows(vec![vec![0.5; 8]], 4);
+        assert_eq!(rows, vec![vec![0.5; 8]]);
+        assert_eq!(ep.cross_rows, 0);
+        assert_eq!(ep.local_rows, 2);
     }
 }

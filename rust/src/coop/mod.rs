@@ -10,12 +10,16 @@
 //!   redistribution, eliminating duplicate work entirely.
 //! * [`all_to_all`] — the exchange fabric (the NVLink): the serial
 //!   [`Exchange`] reference plus the live channel-based [`Fabric`] /
-//!   [`PeEndpoint`] used by PE threads; both account every byte moved,
-//!   which the cost model converts into α-bandwidth time.
-//! * [`cache`] + [`feature_loader`] — per-PE LRU vertex-embedding caches
-//!   (owned behind each PE's thread boundary in threaded mode) and the
-//!   storage/exchange traffic accounting for the feature-loading stage
-//!   (β vs α in the paper's Table 1).
+//!   [`PeEndpoint`] used by PE threads. It carries two payload classes —
+//!   vertex ids for the sampling rounds and **f32 feature rows** for
+//!   cooperative loading — and accounts every byte moved, which the cost
+//!   model converts into α-bandwidth time.
+//! * [`cache`] + [`feature_loader`] — per-PE LRU **row** caches (hits
+//!   return bytes from the arena; misses fill from the PE's
+//!   [`crate::feature::FeatureStore`] shard, owned behind each PE's
+//!   thread boundary in threaded mode) and the loaders that produce each
+//!   PE's dense input-feature buffer while accounting storage/fabric
+//!   traffic (β vs α in the paper's Table 1) from the actual movement.
 //! * [`engine`] — the aggregation layer: [`engine::run`] drains a
 //!   [`crate::pipeline::EngineStream`] (which owns the per-PE samplers,
 //!   RNG streams, caches, and fabric — thread-per-PE by default,

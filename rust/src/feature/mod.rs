@@ -1,0 +1,17 @@
+//! The feature plane's storage tier.
+//!
+//! The paper's bandwidth model distinguishes *storage* reads (β, a cache
+//! miss pulls a row out of vertex-embedding storage) from *fabric*
+//! transfers (α, cooperative loading redistributes rows between PEs).
+//! This module is the storage side: [`FeatureStore`] is the read seam,
+//! [`PartitionedFeatureStore`] the in-memory one-shard-per-PE
+//! implementation built from [`crate::graph::Dataset::write_features`]
+//! at pipeline build time. The caches ([`crate::coop::cache`]), the
+//! loader ([`crate::coop::feature_loader`]), and the training streams
+//! ([`crate::pipeline::TrainStream`]) all read rows through it, so the
+//! byte accounting in [`crate::coop::engine::EngineReport`] is derived
+//! from real movement.
+
+pub mod store;
+
+pub use store::{FeatureStore, PartitionedFeatureStore};

@@ -1,0 +1,207 @@
+//! The vertex-embedding storage tier (the β-bandwidth side of the
+//! paper's Table 1).
+//!
+//! [`FeatureStore`] is the one seam the feature plane reads rows
+//! through: LRU caches fill their arenas from it on a miss, training
+//! streams gather dense input buffers from it, and every byte copied
+//! out of it is a byte "from storage" in the bandwidth accounting.
+//!
+//! [`PartitionedFeatureStore`] is the in-memory implementation: one
+//! shard per PE holding its owned vertices' f32 rows row-major,
+//! materialized from [`Dataset::write_features`] once at pipeline build
+//! time. A [`PartitionedFeatureStore::single_shard`] constructor covers
+//! the 1-PE / training case (the whole matrix in shard 0).
+
+use crate::graph::{Dataset, Partition, VertexId};
+
+/// Read access to vertex feature rows. Object-safe; implementations must
+/// be shareable across PE threads (`Send + Sync`) since every PE reads
+/// its own shard concurrently.
+pub trait FeatureStore: Send + Sync {
+    /// Feature dimensionality (floats per row).
+    fn dim(&self) -> usize;
+
+    /// Bytes of one row (f32 features).
+    fn row_bytes(&self) -> usize {
+        self.dim() * 4
+    }
+
+    /// The stored row of vertex `v`.
+    fn row(&self, v: VertexId) -> &[f32];
+
+    /// Copy the row of `v` into `out` (`out.len() == dim()`).
+    fn copy_row(&self, v: VertexId, out: &mut [f32]) {
+        out.copy_from_slice(self.row(v));
+    }
+
+    /// Batched gather into a dense row-major buffer (replaces the old
+    /// `Dataset::gather_features` hash-regeneration path on every
+    /// consumer).
+    fn gather(&self, vs: &[VertexId], out: &mut Vec<f32>) {
+        let d = self.dim();
+        out.clear();
+        out.resize(vs.len() * d, 0.0);
+        self.gather_into(vs, out);
+    }
+
+    /// Gather into a preallocated slice (`out.len() == vs.len() * dim()`)
+    /// — used by the trainer to fill the prefix of its padded buffer
+    /// without an intermediate copy.
+    fn gather_into(&self, vs: &[VertexId], out: &mut [f32]) {
+        let d = self.dim();
+        assert_eq!(out.len(), vs.len() * d, "gather_into buffer shape");
+        for (i, &v) in vs.iter().enumerate() {
+            self.copy_row(v, &mut out[i * d..(i + 1) * d]);
+        }
+    }
+}
+
+/// In-memory partitioned feature storage: shard `p` holds the rows of
+/// the vertices PE `p` owns, row-major in owner-local row order.
+///
+/// Lookup is O(1): a per-vertex `(shard, row)` index built at
+/// construction. Rows are materialized once from
+/// [`Dataset::write_features`]; after that, the dataset's hash generator
+/// is off the feature path entirely — all bytes come from here.
+pub struct PartitionedFeatureStore {
+    dim: usize,
+    shards: Vec<Vec<f32>>,
+    shard_of: Vec<u32>,
+    row_of: Vec<u32>,
+}
+
+impl PartitionedFeatureStore {
+    /// Materialize one shard per PE from `part` (the pipeline-build-time
+    /// constructor).
+    pub fn build(ds: &Dataset, part: &Partition) -> PartitionedFeatureStore {
+        let n = ds.graph.num_vertices();
+        let d = ds.feat_dim;
+        let p = part.num_parts;
+        let mut shard_of = vec![0u32; n];
+        let mut row_of = vec![0u32; n];
+        let mut counts = vec![0usize; p];
+        for v in 0..n {
+            let s = part.part_of(v as VertexId);
+            shard_of[v] = s as u32;
+            row_of[v] = counts[s] as u32;
+            counts[s] += 1;
+        }
+        let mut shards: Vec<Vec<f32>> = counts.iter().map(|&c| vec![0.0; c * d]).collect();
+        for v in 0..n {
+            let s = shard_of[v] as usize;
+            let r = row_of[v] as usize;
+            ds.write_features(v as VertexId, &mut shards[s][r * d..(r + 1) * d]);
+        }
+        PartitionedFeatureStore { dim: d, shards, shard_of, row_of }
+    }
+
+    /// The whole feature matrix in one shard — the training-stream /
+    /// single-PE layout.
+    pub fn single_shard(ds: &Dataset) -> PartitionedFeatureStore {
+        let n = ds.graph.num_vertices();
+        let d = ds.feat_dim;
+        let mut shard = vec![0.0f32; n * d];
+        for v in 0..n {
+            ds.write_features(v as VertexId, &mut shard[v * d..(v + 1) * d]);
+        }
+        PartitionedFeatureStore {
+            dim: d,
+            shards: vec![shard],
+            shard_of: vec![0; n],
+            row_of: (0..n as u32).collect(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard (owning PE) holds `v`'s row.
+    pub fn shard_of(&self, v: VertexId) -> usize {
+        self.shard_of[v as usize] as usize
+    }
+
+    /// Rows held by shard `p`.
+    pub fn shard_rows(&self, p: usize) -> usize {
+        self.shards[p].len() / self.dim.max(1)
+    }
+
+    /// Total resident bytes across all shards.
+    pub fn total_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.len() * 4).sum()
+    }
+}
+
+impl FeatureStore for PartitionedFeatureStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn row(&self, v: VertexId) -> &[f32] {
+        let s = self.shard_of[v as usize] as usize;
+        let r = self.row_of[v as usize] as usize;
+        &self.shards[s][r * self.dim..(r + 1) * self.dim]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{datasets, partition};
+
+    #[test]
+    fn partitioned_rows_match_dataset_hash_truth() {
+        let ds = datasets::build("tiny", 3).unwrap();
+        let part = partition::random(&ds.graph, 4, 5);
+        let store = PartitionedFeatureStore::build(&ds, &part);
+        assert_eq!(store.dim(), ds.feat_dim);
+        assert_eq!(store.num_shards(), 4);
+        let mut want = vec![0f32; ds.feat_dim];
+        for v in [0u32, 7, 999, 1999] {
+            ds.write_features(v, &mut want);
+            assert_eq!(store.row(v), &want[..], "vertex {v}");
+            assert_eq!(store.shard_of(v), part.part_of(v));
+        }
+    }
+
+    #[test]
+    fn shard_sizes_cover_the_partition() {
+        let ds = datasets::build("tiny", 1).unwrap();
+        let part = partition::random(&ds.graph, 3, 2);
+        let store = PartitionedFeatureStore::build(&ds, &part);
+        let sizes = part.part_sizes();
+        for p in 0..3 {
+            assert_eq!(store.shard_rows(p), sizes[p], "shard {p}");
+        }
+        assert_eq!(store.total_bytes(), ds.graph.num_vertices() * ds.row_bytes());
+    }
+
+    #[test]
+    fn single_shard_matches_partitioned() {
+        let ds = datasets::build("tiny", 2).unwrap();
+        let part = partition::random(&ds.graph, 2, 9);
+        let a = PartitionedFeatureStore::single_shard(&ds);
+        let b = PartitionedFeatureStore::build(&ds, &part);
+        for v in (0..ds.graph.num_vertices() as u32).step_by(97) {
+            assert_eq!(a.row(v), b.row(v), "vertex {v}");
+        }
+        assert_eq!(a.num_shards(), 1);
+    }
+
+    #[test]
+    fn gather_layouts_agree() {
+        let ds = datasets::build("tiny", 4).unwrap();
+        let store = PartitionedFeatureStore::single_shard(&ds);
+        let vs = [5u32, 3, 3, 1900];
+        let mut dense = Vec::new();
+        store.gather(&vs, &mut dense);
+        assert_eq!(dense.len(), vs.len() * store.dim());
+        let mut fixed = vec![0f32; vs.len() * store.dim()];
+        store.gather_into(&vs, &mut fixed);
+        assert_eq!(dense, fixed);
+        let d = store.dim();
+        for (i, &v) in vs.iter().enumerate() {
+            assert_eq!(&dense[i * d..(i + 1) * d], store.row(v), "row {i}");
+        }
+    }
+}

@@ -158,7 +158,10 @@ impl Dataset {
     }
 
     /// Materialize features for a list of vertices into a flat row-major
-    /// buffer (used by the feature loader / trainer).
+    /// buffer. Hash-generation fallback only — the pipeline's hot paths
+    /// read materialized rows through
+    /// [`crate::feature::FeatureStore::gather`] instead, so gathered
+    /// bytes are accounted as real storage traffic.
     pub fn gather_features(&self, vs: &[VertexId], out: &mut Vec<f32>) {
         out.clear();
         out.resize(vs.len() * self.feat_dim, 0.0);
@@ -168,8 +171,9 @@ impl Dataset {
         }
     }
 
-    /// Bytes of one vertex embedding (f32 features).
-    pub fn feat_bytes(&self) -> usize {
+    /// Bytes of one vertex embedding row (f32 features) — the unit every
+    /// storage/fabric byte counter is a multiple of.
+    pub fn row_bytes(&self) -> usize {
         self.feat_dim * 4
     }
 

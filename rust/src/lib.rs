@@ -6,9 +6,21 @@
 //! The crate is the **Layer-3 coordinator**: it owns the graph store, the
 //! graph samplers (NS / LABOR-0 / LABOR-* / RW), the multi-PE cooperative
 //! minibatching engine (Algorithm 1 of the paper), the dependent-minibatch
-//! RNG (Appendix A.7), the LRU vertex-embedding cache, the training loop,
-//! and the bandwidth cost model used to reproduce the paper's runtime
-//! tables.
+//! RNG (Appendix A.7), the partitioned vertex-embedding store + per-PE LRU
+//! row caches ([`feature`], [`coop::cache`]), the training loop, and the
+//! bandwidth cost model used to reproduce the paper's runtime tables.
+//!
+//! ## A real feature plane
+//!
+//! Feature loading moves **actual bytes**: vertex rows are materialized
+//! once into a [`feature::PartitionedFeatureStore`] (one shard per PE),
+//! cache misses copy rows out of storage (β bandwidth), cooperative
+//! loading ships rows between PEs over the channel fabric (α bandwidth,
+//! [`coop::all_to_all::PeEndpoint::all_to_all_rows`]), and every
+//! [`coop::engine::EngineReport`] traffic figure is derived from that
+//! movement. `--prefetch 1` ([`pipeline::with_prefetch`]) double-buffers
+//! the stream so batch t+1's sampling + gathering overlaps batch t's
+//! compute.
 //!
 //! ## One pipeline behind everything
 //!
@@ -77,6 +89,7 @@
 
 pub mod util;
 pub mod graph;
+pub mod feature;
 pub mod sampling;
 pub mod coop;
 pub mod pipeline;

@@ -19,11 +19,11 @@
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::graph::datasets;
 use coopgnn::pipeline::args::{switch, val, ArgMap, ArgSpec};
-use coopgnn::pipeline::{Partitioner, PipelineBuilder, DEFAULT_SEED};
+use coopgnn::pipeline::{with_prefetch, Partitioner, PipelineBuilder, DEFAULT_SEED};
 use coopgnn::repro::{self, Ctx};
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{block, Kappa, SamplerConfig, SamplerKind};
-use coopgnn::train::Trainer;
+use coopgnn::train::{StepStats, Trainer};
 use std::path::PathBuf;
 
 fn main() {
@@ -53,6 +53,7 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
     val("artifacts", "AOT artifacts directory (default: artifacts)"),
     val("exec", "serial|threaded (default: threaded)"),
+    val("prefetch", "0|1 double-buffer sampling+gather behind execution (default: 0)"),
 ];
 
 const ENGINE_SPECS: &[ArgSpec] = &[
@@ -67,6 +68,7 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("layers", "GNN layers (default: 3)"),
     val("partitioner", "random|metis|ldg (default: random)"),
     val("exec", "serial|threaded (default: threaded)"),
+    val("prefetch", "0|1 double-buffer batch production (default: 0)"),
     val("warmup", "warmup batches (default: 4)"),
     val("batches", "measured batches (default: 8)"),
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
@@ -140,19 +142,19 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         .build()?;
     let steps = args.or("steps", 300usize)?;
     let eval_every = args.or("eval-every", 50usize)?;
+    let prefetch = args.or("prefetch", 0u8)? != 0;
     let mut opts = pipe.trainer_options();
     opts.lr = args.opt("lr")?;
     let mut trainer = Trainer::new(&rt, &manifest, &config, &pipe.ds, &opts)?;
     println!(
-        "training {config} on {}: {} params, {} train vertices, batch {}",
+        "training {config} on {}: {} params, {} train vertices, batch {}{}",
         pipe.ds.name,
         trainer.state.num_scalars(),
         pipe.ds.train.len(),
-        trainer.art.batch
+        trainer.art.batch,
+        if prefetch { " (prefetch: sampling+gather overlap execution)" } else { "" }
     );
-    let t0 = std::time::Instant::now();
-    for step in 1..=steps {
-        let s = trainer.step()?;
+    let mut report_step = |trainer: &mut Trainer, step: usize, s: StepStats| -> coopgnn::Result<()> {
         if step % eval_every == 0 || step == 1 || step == steps {
             let val = trainer.evaluate(&pipe.ds.val, 1234)?;
             println!(
@@ -161,6 +163,26 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
                 s.loss, s.acc, val.accuracy, val.macro_f1,
                 s.sample_ms, s.pad_ms, s.feature_ms, s.exec_ms
             );
+        }
+        Ok(())
+    };
+    let t0 = std::time::Instant::now();
+    if prefetch {
+        // the trainer's own stream recipe (shared feature store), moved
+        // onto a producer thread — trajectories are bit-identical to
+        // prefetch=0 at the same seed (pipeline determinism tests)
+        let stream = trainer.make_stream();
+        with_prefetch(stream, |s| -> coopgnn::Result<()> {
+            for step in 1..=steps {
+                let stats = trainer.step_from(s)?;
+                report_step(&mut trainer, step, stats)?;
+            }
+            Ok(())
+        })?;
+    } else {
+        for step in 1..=steps {
+            let s = trainer.step()?;
+            report_step(&mut trainer, step, s)?;
         }
     }
     let test = trainer.evaluate(&pipe.ds.test, 1234)?;
@@ -200,6 +222,7 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
         )
         .fanout(args.or("fanout", 10usize)?)
         .layers(args.or("layers", 3usize)?)
+        .prefetch(args.or("prefetch", 0u8)? != 0)
         .warmup_batches(args.or("warmup", 4usize)?)
         .measure_batches(args.or("batches", 8usize)?)
         .seed(args.or("seed", DEFAULT_SEED)?);
@@ -222,6 +245,13 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
     println!(
         "feature: requested {:.0}/batch, misses {:.0}, fabric rows {:.0}, miss rate {:.4}",
         r.feat_requested, r.feat_misses, r.feat_fabric_rows, r.cache_miss_rate
+    );
+    println!(
+        "feature bytes/batch: {:.1} KiB from storage (β), {:.1} KiB over fabric (α); \
+         byte-derived miss rate {:.4}",
+        r.feat_storage_bytes / 1024.0,
+        r.feat_fabric_bytes / 1024.0,
+        r.derived_miss_rate
     );
     println!("dup factor @L: {:.3}", r.dup_factor);
     println!(
@@ -300,9 +330,10 @@ fn print_usage() {
          \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|all>\n\
          \x20        [--out DIR] [--quick] [--seed N] [--artifacts DIR] [--exec serial|threaded]\n\
          \x20 coopgnn train --config NAME [--steps N] [--kappa K|inf] [--sampler ns|labor0|labor*|rw]\n\
-         \x20        [--lr F] [--eval-every N] [--seed N]\n\
+         \x20        [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
+         \x20        [--prefetch 0|1]\n\
          \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
          \x20 coopgnn info"
     );

@@ -5,9 +5,11 @@
 use super::stream::EngineStream;
 use super::train_stream::Batching;
 use crate::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
+use crate::feature::PartitionedFeatureStore;
 use crate::graph::{datasets, partition, Csr, Dataset, Partition};
 use crate::sampling::{Kappa, SamplerConfig, SamplerKind};
 use crate::train::TrainerOptions;
+use std::sync::{Arc, Mutex};
 
 /// The crate-wide default RNG seed.
 ///
@@ -79,6 +81,10 @@ pub struct PipelineConfig {
     /// LRU rows per PE; `None` = dataset-derived
     /// (`ds.cache_size / num_pes`, floored at 64).
     pub cache_per_pe: Option<usize>,
+    /// double-buffer the stream: a producer thread samples + gathers
+    /// batch t+1 while the consumer processes batch t (`--prefetch 1`).
+    /// Bit-identical results either way; only the overlap changes.
+    pub prefetch: bool,
     pub warmup_batches: usize,
     pub measure_batches: usize,
     pub seed: u64,
@@ -99,6 +105,7 @@ impl Default for PipelineConfig {
             layers: s.layers,
             kappa: s.kappa,
             cache_per_pe: None,
+            prefetch: false,
             warmup_batches: 4,
             measure_batches: 16,
             seed: DEFAULT_SEED,
@@ -144,6 +151,7 @@ impl PipelineConfig {
             cache_per_pe: self
                 .cache_per_pe
                 .unwrap_or_else(|| (ds.cache_size / self.num_pes).max(64)),
+            prefetch: self.prefetch,
             warmup_batches: self.warmup_batches,
             measure_batches: self.measure_batches,
             seed: self.seed,
@@ -233,6 +241,11 @@ impl PipelineBuilder {
         self
     }
 
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.cfg.prefetch = on;
+        self
+    }
+
     pub fn warmup_batches(mut self, n: usize) -> Self {
         self.cfg.warmup_batches = n;
         self
@@ -254,7 +267,7 @@ impl PipelineBuilder {
         self.cfg.validate()?;
         let ds = datasets::build(&self.cfg.dataset, self.cfg.seed)?;
         let part = self.cfg.partitioner.build(&ds.graph, self.cfg.num_pes, self.cfg.seed);
-        Ok(Pipeline { cfg: self.cfg, ds, part })
+        Ok(Pipeline { cfg: self.cfg, ds, part, store: Mutex::new(None) })
     }
 }
 
@@ -263,23 +276,45 @@ impl PipelineBuilder {
 /// `cfg` is public so sweeps (κ, cache size, mode, exec, batch window)
 /// can retune between [`Pipeline::engine_report`] calls without
 /// regenerating the dataset; anything that changes the partition
-/// (PE count, partitioner) must go through the `set_*` helpers.
+/// (PE count, partitioner) must go through the `set_*` helpers, which
+/// also invalidate the cached feature store (its shard layout follows
+/// the partition).
 pub struct Pipeline {
     pub cfg: PipelineConfig,
     pub ds: Dataset,
     pub part: Partition,
+    /// lazily-materialized partitioned feature store, shared by every
+    /// stream this pipeline hands out (building one is an O(|V|·d) pass).
+    store: Mutex<Option<Arc<PartitionedFeatureStore>>>,
 }
 
 impl Pipeline {
-    /// A fresh measurement stream over the current config.
+    /// The partitioned feature store for the current partition,
+    /// materializing it on first use.
+    pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
+        let mut guard = self.store.lock().unwrap();
+        guard
+            .get_or_insert_with(|| Arc::new(PartitionedFeatureStore::build(&self.ds, &self.part)))
+            .clone()
+    }
+
+    /// A fresh measurement stream over the current config (sharing the
+    /// pipeline's feature store).
     pub fn stream(&self) -> EngineStream<'_> {
-        EngineStream::new(&self.ds, &self.part, &self.cfg.engine_config(&self.ds))
+        EngineStream::with_store(
+            &self.ds,
+            &self.part,
+            &self.cfg.engine_config(&self.ds),
+            self.feature_store(),
+        )
     }
 
     /// Drain a fresh stream into the aggregated engine report
-    /// (warmup + measure batches per the current config).
+    /// (warmup + measure batches per the current config; double-buffered
+    /// when `cfg.prefetch` is on).
     pub fn engine_report(&self) -> EngineReport {
-        engine::run(&self.ds, &self.part, &self.cfg.engine_config(&self.ds))
+        let cfg = self.cfg.engine_config(&self.ds);
+        engine::run_stream(self.stream(), &cfg)
     }
 
     /// Trainer options mirroring this pipeline.
@@ -291,12 +326,14 @@ impl Pipeline {
     pub fn set_partitioner(&mut self, p: Partitioner) {
         self.cfg.partitioner = p;
         self.part = p.build(&self.ds.graph, self.cfg.num_pes, self.cfg.seed);
+        *self.store.lock().unwrap() = None;
     }
 
     /// Change the PE count (re-partitions the graph).
     pub fn set_num_pes(&mut self, num_pes: usize) {
         self.cfg.num_pes = num_pes;
         self.part = self.cfg.partitioner.build(&self.ds.graph, num_pes, self.cfg.seed);
+        *self.store.lock().unwrap() = None;
     }
 }
 

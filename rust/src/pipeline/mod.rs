@@ -14,12 +14,17 @@
 //!   the benches, and the examples. All seed defaults funnel through
 //!   [`DEFAULT_SEED`].
 //! * [`MinibatchStream`] — `fn next_batch(&mut self) -> Minibatch`:
-//!   per-PE MFG work plus feature/fabric traffic accounting.
-//!   [`EngineStream`] is the thread-per-PE measurement stream
-//!   `coop::engine::run` drains; [`TrainStream`] is the training front
-//!   half (`Batching::Single` shared-coin global batches or
-//!   `Batching::IndepMerged` block-diagonal merges) the `Trainer`
-//!   consumes.
+//!   per-PE MFG work plus feature/fabric traffic accounting **and the
+//!   dense input-feature buffers** (real rows out of the partitioned
+//!   [`crate::feature::FeatureStore`], through per-PE LRU row caches
+//!   and, cooperatively, over the channel fabric). [`EngineStream`] is
+//!   the thread-per-PE measurement stream `coop::engine::run` drains;
+//!   [`TrainStream`] is the training front half (`Batching::Single`
+//!   shared-coin global batches or `Batching::IndepMerged`
+//!   block-diagonal merges) the `Trainer` consumes.
+//! * [`prefetch`] — [`with_prefetch`] double-buffers any `Send` stream
+//!   behind a producer thread (`--prefetch 1`): batch t+1's sampling +
+//!   gathering overlaps batch t's consumption, bit-identically.
 //!
 //! Every entry stack — CLI `engine`/`train`, the repro harnesses,
 //! `bench_coop`/`bench_train_step`, and all four examples — builds its
@@ -43,9 +48,11 @@
 
 pub mod args;
 pub mod config;
+pub mod prefetch;
 pub mod stream;
 pub mod train_stream;
 
 pub use config::{Partitioner, Pipeline, PipelineBuilder, PipelineConfig, DEFAULT_SEED};
+pub use prefetch::{with_prefetch, PrefetchedStream};
 pub use stream::{EngineStream, Minibatch, MinibatchStream, PeWork};
 pub use train_stream::{sample_indep_parts, Batching, TrainStream, SEED_DRAW_SALT};

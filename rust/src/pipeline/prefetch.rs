@@ -1,0 +1,156 @@
+//! Double-buffered stream production: sample + gather batch `t+1` on a
+//! producer thread while the consumer (engine reduction or
+//! `Trainer::step_from`) executes batch `t`.
+//!
+//! [`with_prefetch`] moves any `Send` [`MinibatchStream`] onto a scoped
+//! producer thread feeding a **depth-1** rendezvous channel — classic
+//! double buffering: at any moment one batch is being consumed while at
+//! most one finished batch waits and the producer works on the next.
+//! The consumer sees a [`PrefetchedStream`], itself a
+//! [`MinibatchStream`], so every consumer is prefetch-agnostic.
+//!
+//! Determinism: the producer is the *same* stream advancing the same
+//! RNG/cache state in the same order — prefetching changes only *when*
+//! batches are computed, never *what* they contain, so reports and
+//! training trajectories are bit-identical with the flag on or off
+//! (asserted in `tests/integration_pipeline.rs` and the engine's
+//! prefetch determinism test). After the consumer closure returns, the
+//! producer may have run up to two batches past the last one consumed;
+//! that tail state is discarded with the stream.
+//!
+//! This is the CLI `--prefetch {0,1}` pipeline flag
+//! ([`crate::pipeline::PipelineConfig::prefetch`]).
+
+use super::stream::{Minibatch, MinibatchStream};
+use crate::coop::engine::Mode;
+use std::sync::mpsc::{sync_channel, Receiver};
+
+/// The consumer-side handle of a prefetching producer thread. Dropping
+/// it (or returning from [`with_prefetch`]'s closure) stops the
+/// producer at its next send.
+pub struct PrefetchedStream {
+    rx: Receiver<Minibatch>,
+    num_pes: usize,
+    layers: usize,
+    mode: Mode,
+}
+
+impl MinibatchStream for PrefetchedStream {
+    fn next_batch(&mut self) -> Minibatch {
+        self.rx
+            .recv()
+            .expect("prefetch producer thread died (its panic is reported on stderr)")
+    }
+
+    fn num_pes(&self) -> usize {
+        self.num_pes
+    }
+
+    fn layers(&self) -> usize {
+        self.layers
+    }
+
+    fn mode(&self) -> Mode {
+        self.mode
+    }
+}
+
+/// Run `consume` against a double-buffered view of `stream`: a scoped
+/// producer thread calls `stream.next_batch()` ahead of the consumer,
+/// overlapping batch `t+1`'s sampling + feature gathering with batch
+/// `t`'s processing. Returns the closure's result after joining the
+/// producer.
+pub fn with_prefetch<S, R>(mut stream: S, consume: impl FnOnce(&mut PrefetchedStream) -> R) -> R
+where
+    S: MinibatchStream + Send,
+{
+    let (num_pes, layers, mode) = (stream.num_pes(), stream.layers(), stream.mode());
+    std::thread::scope(|scope| {
+        // depth 1: one batch in flight at the consumer, one buffered,
+        // one in production — the producer blocks in `send` beyond that
+        let (tx, rx) = sync_channel::<Minibatch>(1);
+        scope.spawn(move || {
+            loop {
+                let mb = stream.next_batch();
+                if tx.send(mb).is_err() {
+                    // consumer dropped its handle: done
+                    break;
+                }
+            }
+        });
+        let mut handle = PrefetchedStream { rx, num_pes, layers, mode };
+        let result = consume(&mut handle);
+        drop(handle); // unblock + stop the producer before the scope joins it
+        result
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coop::engine::{EngineConfig, ExecMode};
+    use crate::graph::{datasets, partition};
+    use crate::pipeline::EngineStream;
+
+    fn cfg(exec: ExecMode) -> EngineConfig {
+        EngineConfig {
+            mode: Mode::Cooperative,
+            exec,
+            num_pes: 2,
+            batch_per_pe: 16,
+            cache_per_pe: 128,
+            warmup_batches: 0,
+            measure_batches: 3,
+            seed: 33,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn prefetched_batches_equal_inline_batches() {
+        let ds = datasets::build("tiny", 8).unwrap();
+        let part = partition::random(&ds.graph, 2, 3);
+        for exec in [ExecMode::Serial, ExecMode::Threaded] {
+            let c = cfg(exec);
+            let mut inline = EngineStream::new(&ds, &part, &c);
+            let direct: Vec<Minibatch> = (0..4).map(|_| inline.next_batch()).collect();
+
+            let stream = EngineStream::new(&ds, &part, &c);
+            let prefetched: Vec<Minibatch> =
+                with_prefetch(stream, |s| (0..4).map(|_| s.next_batch()).collect());
+
+            for (a, b) in direct.iter().zip(&prefetched) {
+                assert_eq!(a.index, b.index);
+                for (pa, pb) in a.per_pe.iter().zip(&b.per_pe) {
+                    assert_eq!(pa.counts_s, pb.counts_s, "{exec:?} S");
+                    assert_eq!(pa.misses, pb.misses, "{exec:?} misses");
+                    assert_eq!(pa.bytes_from_storage, pb.bytes_from_storage, "{exec:?} bytes");
+                    assert_eq!(pa.features, pb.features, "{exec:?} payload");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn consumer_can_stop_early_without_hanging() {
+        let ds = datasets::build("tiny", 8).unwrap();
+        let part = partition::random(&ds.graph, 2, 3);
+        let stream = EngineStream::new(&ds, &part, &cfg(ExecMode::Serial));
+        // consume fewer batches than the producer would happily make —
+        // with_prefetch must still join cleanly
+        let first = with_prefetch(stream, |s| s.next_batch());
+        assert_eq!(first.index, 0);
+    }
+
+    #[test]
+    fn metadata_passes_through() {
+        let ds = datasets::build("tiny", 8).unwrap();
+        let part = partition::random(&ds.graph, 2, 3);
+        let stream = EngineStream::new(&ds, &part, &cfg(ExecMode::Serial));
+        with_prefetch(stream, |s| {
+            assert_eq!(s.num_pes(), 2);
+            assert_eq!(s.layers(), 3);
+            assert_eq!(s.mode(), Mode::Cooperative);
+        });
+    }
+}

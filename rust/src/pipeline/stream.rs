@@ -4,35 +4,43 @@
 //! κ > 1) are interchangeable policies over the *same* stream of
 //! minibatches. This module makes that literal: a stream yields one
 //! [`Minibatch`] per call — per-PE work records with feature/fabric
-//! traffic accounting, plus (for training streams) a merged MFG — and
-//! the consumers differ only in what they do with it:
+//! traffic accounting **and the dense input-feature buffers themselves**
+//! (real bytes, pulled through per-PE row caches from the partitioned
+//! [`crate::feature::FeatureStore`] and, in cooperative mode, over the
+//! channel fabric) — and the consumers differ only in what they do with
+//! it:
 //!
 //! * `coop::engine::run` drains a stream and reduces the per-PE records
 //!   into an `EngineReport` (Tables 4–7, Figure 5);
-//! * `train::Trainer` executes the merged MFG through the AOT train step;
+//! * `train::Trainer` executes the merged MFG through the AOT train step,
+//!   consuming the stream's pre-gathered feature buffer;
 //! * benches time `next_batch` directly.
 //!
 //! [`EngineStream`] is the measurement stream: it owns the per-PE
-//! samplers, seed-RNG streams, LRU caches, and (cooperative mode) the
-//! live channel fabric, and preserves the engine's determinism contract —
-//! for a fixed seed, [`ExecMode::Serial`] and [`ExecMode::Threaded`]
-//! yield bit-identical counts, and both match the pre-stream PR-1 engine
-//! loops (tested in `coop::engine`). Training streams live in
-//! [`super::train_stream`].
+//! samplers, seed-RNG streams, LRU row caches, the feature-store shards,
+//! and (cooperative mode) the live channel fabric, and preserves the
+//! engine's determinism contract — for a fixed seed,
+//! [`ExecMode::Serial`] and [`ExecMode::Threaded`] yield bit-identical
+//! counts, and both match the pre-stream PR-1 engine loops (tested in
+//! `coop::engine`). Training streams live in [`super::train_stream`];
+//! the double-buffered producer wrapper lives in [`super::prefetch`].
 
-use crate::coop::all_to_all::{Fabric, PeEndpoint};
+use crate::coop::all_to_all::{Exchange, Fabric, PeEndpoint};
 use crate::coop::cache::LruCache;
 use crate::coop::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
 use crate::coop::engine::{EngineConfig, ExecMode, Mode};
-use crate::coop::feature_loader::load_pe;
+use crate::coop::feature_loader::{load_cooperative, load_pe, load_pe_cooperative, PeLoad};
 use crate::coop::indep::sample_independent;
+use crate::feature::{FeatureStore, PartitionedFeatureStore};
 use crate::graph::{Csr, Dataset, Partition, VertexId};
 use crate::sampling::{Mfg, Sampler};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Timer;
+use std::sync::Arc;
 
 /// One PE's work record for one minibatch: the per-layer counts of the
-/// paper's Table 1 plus feature/fabric traffic and stage wall-clock.
+/// paper's Table 1 plus feature/fabric traffic (counts *and* measured
+/// bytes) and stage wall-clock.
 #[derive(Clone, Debug, Default)]
 pub struct PeWork {
     /// |S_p^l| for l in 0..=L (final entry = owned input vertices).
@@ -49,6 +57,19 @@ pub struct PeWork {
     pub misses: u64,
     /// feature rows crossing the fabric (cooperative; α bandwidth).
     pub fabric: u64,
+    /// bytes of one feature row for this stream (constant per stream;
+    /// lets the reduction derive byte-based rates without the store).
+    pub row_bytes: u64,
+    /// f32 bytes actually copied out of storage this batch (β).
+    pub bytes_from_storage: u64,
+    /// f32 bytes that arrived over the fabric this batch (α).
+    pub fabric_bytes: u64,
+    /// this PE's dense row-major input-feature buffer, in
+    /// `feature_vertices` order (the payload consumers execute on).
+    pub features: Option<Vec<f32>>,
+    /// the vertex list `features` covers: `S^L` (independent) or sorted
+    /// `S̃^L` (cooperative).
+    pub feature_vertices: Option<Vec<VertexId>>,
     /// S_p^L vertex list (independent mode; feeds the duplication-factor
     /// union in the engine reduction).
     pub input_vertices: Option<Vec<VertexId>>,
@@ -118,27 +139,37 @@ pub(crate) fn make_shards(
     }
 }
 
-/// Assemble one PE's cooperative-mode work record: pull the owned input
-/// rows through this PE's cache and collect per-layer counts. Shared by
-/// both exec modes so the construction can never drift between them
-/// (stage times are assigned by the caller).
+/// Assemble one PE's cooperative-mode work record from its per-layer
+/// counts and its feature-loading result (owner-side storage pull +
+/// requester-side fabric arrivals + the dense buffer). Shared by both
+/// exec modes so the construction can never drift between them (stage
+/// times are assigned by the caller).
 pub(crate) fn coop_pe_work(
     layers: usize,
     pe_layers: &[&PeLayer],
-    final_owned: &[VertexId],
-    cache: &mut LruCache,
+    row_bytes: u64,
+    load: PeLoad,
 ) -> PeWork {
-    let (requested, misses) = load_pe(final_owned, cache);
     let mut counts_s: Vec<u64> = pe_layers.iter().map(|pl| pl.owned.len() as u64).collect();
-    counts_s.push(final_owned.len() as u64);
+    counts_s.push(load.requested);
+    debug_assert_eq!(
+        load.fabric_rows,
+        pe_layers[layers - 1].cross as u64,
+        "measured fabric rows must equal the sampled cross count"
+    );
     PeWork {
         counts_s,
         counts_e: pe_layers.iter().map(|pl| pl.edges as u64).collect(),
         counts_tilde: pe_layers.iter().map(|pl| pl.tilde.len() as u64).collect(),
         counts_cross: pe_layers.iter().map(|pl| pl.cross as u64).collect(),
-        requested,
-        misses,
-        fabric: pe_layers[layers - 1].cross as u64,
+        requested: load.requested,
+        misses: load.misses,
+        fabric: load.fabric_rows,
+        row_bytes,
+        bytes_from_storage: load.bytes_from_storage,
+        fabric_bytes: load.fabric_bytes,
+        features: Some(load.features),
+        feature_vertices: Some(pe_layers[layers - 1].tilde.clone()),
         input_vertices: None,
         samp_ms: 0.0,
         feat_ms: 0.0,
@@ -146,26 +177,51 @@ pub(crate) fn coop_pe_work(
 }
 
 /// Assemble one PE's independent-mode work record from its private MFG
-/// (shared by both exec modes; `keep_inputs` retains the S^L vertex list
-/// for the duplication-factor union).
+/// and feature-loading result (shared by both exec modes; `keep_inputs`
+/// retains the S^L vertex list for the duplication-factor union).
 pub(crate) fn indep_pe_work(
     mfg: &Mfg,
     layers: usize,
     keep_inputs: bool,
-    cache: &mut LruCache,
+    row_bytes: u64,
+    load: PeLoad,
 ) -> PeWork {
-    let (requested, misses) = load_pe(mfg.input_vertices(), cache);
     PeWork {
         counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
         counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
         counts_tilde: vec![0; layers],
         counts_cross: vec![0; layers],
-        requested,
-        misses,
+        requested: load.requested,
+        misses: load.misses,
         fabric: 0,
+        row_bytes,
+        bytes_from_storage: load.bytes_from_storage,
+        fabric_bytes: 0,
+        features: Some(load.features),
+        feature_vertices: Some(mfg.input_vertices().to_vec()),
         input_vertices: if keep_inputs { Some(mfg.input_vertices().to_vec()) } else { None },
         samp_ms: 0.0,
         feat_ms: 0.0,
+    }
+}
+
+/// Pull one independent-mode PE's input rows through its cache into a
+/// [`PeLoad`] (no fabric traffic). Shared with the PR-1 oracle loops in
+/// `coop::engine::tests`.
+pub(crate) fn load_indep_pe(
+    vs: &[VertexId],
+    cache: &mut LruCache,
+    store: &PartitionedFeatureStore,
+) -> PeLoad {
+    let mut features = Vec::new();
+    let stats = load_pe(vs, cache, store, &mut features);
+    PeLoad {
+        requested: stats.requested,
+        misses: stats.misses,
+        bytes_from_storage: stats.bytes_from_storage,
+        fabric_rows: 0,
+        fabric_bytes: 0,
+        features,
     }
 }
 
@@ -188,8 +244,9 @@ impl Drop for AbortOnPeerPanic {
 }
 
 /// The measurement stream behind `coop::engine::run`: per-PE samplers,
-/// deterministic seed-RNG streams, LRU caches, and (cooperative +
-/// threaded) the live channel fabric, all persistent across batches.
+/// deterministic seed-RNG streams, LRU row caches, the partitioned
+/// feature store, and (cooperative + threaded) the live channel fabric,
+/// all persistent across batches.
 ///
 /// `ExecMode::Threaded` runs one scoped OS thread per PE *per batch*;
 /// the per-PE state lives in the stream between calls, so the RNG/cache
@@ -205,6 +262,7 @@ pub struct EngineStream<'d> {
     warmup_batches: usize,
     graph: &'d Csr,
     part: &'d Partition,
+    store: Arc<PartitionedFeatureStore>,
     shards: Vec<Vec<VertexId>>,
     samplers: Vec<Sampler<'d>>,
     caches: Vec<LruCache>,
@@ -216,11 +274,26 @@ pub struct EngineStream<'d> {
 
 impl<'d> EngineStream<'d> {
     /// Build a stream over `dataset` with partition `part` (cooperative
-    /// mode requires it; independent mode uses it only to shard the
-    /// training set).
+    /// mode requires it; independent mode uses it to shard the training
+    /// set and the feature store). Materializes the partitioned feature
+    /// store — reuse one via [`EngineStream::with_store`] when standing
+    /// up many streams over the same dataset + partition.
     pub fn new(dataset: &'d Dataset, part: &'d Partition, cfg: &EngineConfig) -> EngineStream<'d> {
+        let store = Arc::new(PartitionedFeatureStore::build(dataset, part));
+        EngineStream::with_store(dataset, part, cfg, store)
+    }
+
+    /// Build a stream sharing an existing feature store (must have been
+    /// built from the same `dataset` + `part`).
+    pub fn with_store(
+        dataset: &'d Dataset,
+        part: &'d Partition,
+        cfg: &EngineConfig,
+        store: Arc<PartitionedFeatureStore>,
+    ) -> EngineStream<'d> {
         assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
         assert!(cfg.sampler.layers >= 1, "engine needs at least one GNN layer");
+        assert_eq!(store.dim(), dataset.feat_dim, "store/dataset row shape mismatch");
         let p = cfg.num_pes;
         let g = &dataset.graph;
         let endpoints: Vec<Option<PeEndpoint>> =
@@ -237,13 +310,21 @@ impl<'d> EngineStream<'d> {
             warmup_batches: cfg.warmup_batches,
             graph: g,
             part,
+            store,
             shards: make_shards(dataset, part, cfg.mode, p),
             samplers: (0..p).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect(),
-            caches: (0..p).map(|_| LruCache::new(cfg.cache_per_pe)).collect(),
+            caches: (0..p)
+                .map(|_| LruCache::with_rows(cfg.cache_per_pe, dataset.feat_dim))
+                .collect(),
             seed_rngs: (0..p).map(|pe| Pcg64::new(pe_seed(cfg.seed, pe))).collect(),
             endpoints,
             index: 0,
         }
+    }
+
+    /// The partitioned feature store backing this stream.
+    pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
+        Arc::clone(&self.store)
     }
 
     /// Single-threaded reference: all PEs' work inline, batch stage
@@ -254,6 +335,7 @@ impl<'d> EngineStream<'d> {
         let layers = self.layers;
         let b = self.batch_per_pe;
         let measuring = self.index >= self.warmup_batches;
+        let row_bytes = self.store.row_bytes() as u64;
         let per_pe_seeds: Vec<Vec<VertexId>> = self
             .shards
             .iter()
@@ -279,11 +361,25 @@ impl<'d> EngineStream<'d> {
                 );
                 let samp_ms = t.elapsed_ms();
                 let t = Timer::start();
-                let per_pe = (0..p_count)
-                    .map(|p| {
+                let tildes: Vec<Vec<VertexId>> =
+                    coop.layers[layers - 1].iter().map(|pl| pl.tilde.clone()).collect();
+                let mut row_fabric = Exchange::new(p_count);
+                let loads = load_cooperative(
+                    &tildes,
+                    &coop.final_requests,
+                    &coop.final_owned,
+                    self.part,
+                    &mut self.caches,
+                    &*self.store,
+                    &mut row_fabric,
+                );
+                let per_pe = loads
+                    .into_iter()
+                    .enumerate()
+                    .map(|(p, load)| {
                         let pe_layers: Vec<&PeLayer> =
                             (0..layers).map(|l| &coop.layers[l][p]).collect();
-                        coop_pe_work(layers, &pe_layers, &coop.final_owned[p], &mut self.caches[p])
+                        coop_pe_work(layers, &pe_layers, row_bytes, load)
                     })
                     .collect();
                 (per_pe, samp_ms, t.elapsed_ms())
@@ -296,8 +392,11 @@ impl<'d> EngineStream<'d> {
                 let per_pe = s
                     .per_pe
                     .iter()
-                    .enumerate()
-                    .map(|(p, mfg)| indep_pe_work(mfg, layers, measuring, &mut self.caches[p]))
+                    .zip(self.caches.iter_mut())
+                    .map(|(mfg, cache)| {
+                        let load = load_indep_pe(mfg.input_vertices(), cache, &self.store);
+                        indep_pe_work(mfg, layers, measuring, row_bytes, load)
+                    })
                     .collect();
                 (per_pe, samp_ms, t.elapsed_ms())
             }
@@ -311,9 +410,10 @@ impl<'d> EngineStream<'d> {
     }
 
     /// Thread-per-PE runtime: one scoped OS thread per PE for this
-    /// batch; each owns its sampler, seed-RNG stream, cache, and fabric
-    /// endpoint (all persistent in the stream between batches) and
-    /// exchanges ids over the live channels.
+    /// batch; each owns its sampler, seed-RNG stream, row cache, store
+    /// shard, and fabric endpoint (all persistent in the stream between
+    /// batches), exchanging ids — and feature-row payloads — over the
+    /// live channels.
     ///
     /// Returns the per-PE records plus the batch wall-clock, measured
     /// from a start barrier inside the threads (max over PEs of
@@ -327,6 +427,8 @@ impl<'d> EngineStream<'d> {
         let measuring = self.index >= self.warmup_batches;
         let graph = self.graph;
         let part = self.part;
+        let store: &PartitionedFeatureStore = &self.store;
+        let row_bytes = store.row_bytes() as u64;
         let shards = &self.shards;
         let start = std::sync::Barrier::new(self.samplers.len());
         let start = &start;
@@ -360,9 +462,17 @@ impl<'d> EngineStream<'d> {
                                 );
                                 let samp_ms = t.elapsed_ms();
                                 let t = Timer::start();
+                                let load = load_pe_cooperative(
+                                    ep,
+                                    part,
+                                    &ps.layers[layers - 1].tilde,
+                                    &ps.final_owned,
+                                    &ps.final_requests,
+                                    cache,
+                                    store,
+                                );
                                 let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
-                                let mut pw =
-                                    coop_pe_work(layers, &pe_layers, &ps.final_owned, cache);
+                                let mut pw = coop_pe_work(layers, &pe_layers, row_bytes, load);
                                 pw.samp_ms = samp_ms;
                                 pw.feat_ms = t.elapsed_ms();
                                 pw
@@ -372,7 +482,9 @@ impl<'d> EngineStream<'d> {
                                 let mfg = sampler.sample_mfg(&seeds);
                                 let samp_ms = t.elapsed_ms();
                                 let t = Timer::start();
-                                let mut pw = indep_pe_work(&mfg, layers, measuring, cache);
+                                let load = load_indep_pe(mfg.input_vertices(), cache, store);
+                                let mut pw =
+                                    indep_pe_work(&mfg, layers, measuring, row_bytes, load);
                                 pw.samp_ms = samp_ms;
                                 pw.feat_ms = t.elapsed_ms();
                                 pw

@@ -1,8 +1,9 @@
-//! Training streams: the seed-drawing + MFG-sampling front half of a
-//! training step, behind [`MinibatchStream`].
+//! Training streams: the seed-drawing + MFG-sampling + feature-gathering
+//! front half of a training step, behind [`MinibatchStream`].
 //!
-//! `Trainer` used to own this logic privately (a sampler, a seed RNG,
-//! and a `sample_indep_merged_mfg` fork); now both of its batching
+//! `Trainer` used to own this logic privately (a sampler, a seed RNG, a
+//! `sample_indep_merged_mfg` fork, and a per-step feature-gather loop
+//! that re-synthesized rows from the dataset); now both of its batching
 //! strategies are [`TrainStream`] policies over the same stream seam:
 //!
 //! * [`Batching::Single`] — one shared-coin sampler over the global
@@ -14,6 +15,13 @@
 //!   PEs computing privately and all-reducing gradients (the Figure 9
 //!   independent baseline).
 //!
+//! Since the feature-plane refactor the stream also owns a
+//! [`FeatureStore`] (single shard over the dataset) and
+//! [`TrainStream::next_batch`] ships the dense input-feature buffer with
+//! the MFG, so the trainer's compute half starts from pre-gathered bytes
+//! — and, wrapped in [`super::prefetch::with_prefetch`], batch `t+1`'s
+//! sampling + gathering overlaps batch `t`'s execution.
+//!
 //! Seed-drawing matches the PR-1 `Trainer` exactly: the seed RNG is
 //! `Pcg64::new(seed ^ `[`SEED_DRAW_SALT`]`)` and per-step sub-batch
 //! sampler seeds follow the same formulas, so training trajectories are
@@ -21,10 +29,12 @@
 
 use super::stream::{Minibatch, MinibatchStream, PeWork};
 use crate::coop::engine::{ExecMode, Mode};
+use crate::feature::{FeatureStore, PartitionedFeatureStore};
 use crate::graph::{Csr, Dataset, VertexId};
 use crate::sampling::{block, Mfg, Sampler, SamplerConfig, SamplerKind};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Timer;
+use std::sync::Arc;
 
 /// Salt mixed into the stream seed for the training-seed draw RNG —
 /// the same constant the PR-1 `Trainer` used, kept so fixed-seed
@@ -54,6 +64,10 @@ pub struct TrainStream<'d> {
     batching: Batching,
     /// persistent dependent-RNG sampler (Single batching only).
     sampler: Option<Sampler<'d>>,
+    /// materialized feature rows (single shard: training reads the whole
+    /// matrix from "storage" every batch — there is no cache tier on the
+    /// training path).
+    store: Arc<PartitionedFeatureStore>,
     seed_rng: Pcg64,
     step: u64,
 }
@@ -81,6 +95,7 @@ impl<'d> TrainStream<'d> {
             exec,
             batching,
             sampler,
+            store: Arc::new(PartitionedFeatureStore::single_shard(ds)),
             seed_rng: Pcg64::new(seed ^ SEED_DRAW_SALT),
             step: 0,
         }
@@ -96,6 +111,38 @@ impl<'d> TrainStream<'d> {
 
     pub fn config(&self) -> SamplerConfig {
         self.cfg
+    }
+
+    /// The feature store backing this stream (shared with the trainer's
+    /// evaluation path).
+    pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
+        Arc::clone(&self.store)
+    }
+
+    /// A fresh stream with this stream's exact recipe — same dataset,
+    /// sampler kind/config, batch, seed, exec mode, and batching — and
+    /// **sharing its feature store** (no second materialization). The
+    /// clone starts from step 0, so it yields the identical batch
+    /// sequence this stream would have yielded from construction: wrap
+    /// it in [`super::prefetch::with_prefetch`] to overlap production
+    /// with consumption without risking recipe drift.
+    pub fn fresh_clone(&self) -> TrainStream<'d> {
+        TrainStream {
+            ds: self.ds,
+            kind: self.kind,
+            cfg: self.cfg,
+            batch: self.batch,
+            seed: self.seed,
+            exec: self.exec,
+            batching: self.batching,
+            sampler: match self.batching {
+                Batching::Single => Some(self.cfg.build(self.kind, &self.ds.graph, self.seed)),
+                Batching::IndepMerged { .. } => None,
+            },
+            store: Arc::clone(&self.store),
+            seed_rng: Pcg64::new(self.seed ^ SEED_DRAW_SALT),
+            step: 0,
+        }
     }
 
     /// Draw the next training seed batch (uniform without replacement).
@@ -143,21 +190,35 @@ impl MinibatchStream for TrainStream<'_> {
         let wall = Timer::start();
         let seeds = self.next_seeds();
         let mfg = self.sample_on(&seeds);
+        let samp_ms = wall.elapsed_ms();
+        // gather the dense input-feature buffer the train step executes
+        // on — every row comes off the store (β): the training path has
+        // no cache tier, so requested == misses by definition
+        let t = Timer::start();
+        let inputs = mfg.input_vertices().to_vec();
+        let mut features = Vec::new();
+        self.store.gather(&inputs, &mut features);
+        let feat_ms = t.elapsed_ms();
         let wall_ms = wall.elapsed_ms();
         let layers = self.cfg.layers;
-        // one logical record for the merged batch: counts from the MFG,
-        // feature rows = |S^L| (training gathers every input row)
+        let row_bytes = self.store.row_bytes() as u64;
+        let n = inputs.len() as u64;
         let work = PeWork {
             counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
             counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
             counts_tilde: vec![0; layers],
             counts_cross: vec![0; layers],
-            requested: mfg.input_vertices().len() as u64,
-            misses: 0,
+            requested: n,
+            misses: n,
             fabric: 0,
+            row_bytes,
+            bytes_from_storage: n * row_bytes,
+            fabric_bytes: 0,
+            features: Some(features),
+            feature_vertices: Some(inputs),
             input_vertices: None,
-            samp_ms: wall_ms,
-            feat_ms: 0.0,
+            samp_ms,
+            feat_ms,
         };
         let index = (self.step - 1) as usize;
         Minibatch { index, per_pe: vec![work], merged: Some(mfg), wall_ms }
@@ -252,7 +313,7 @@ mod tests {
     }
 
     #[test]
-    fn single_stream_yields_merged_mfg_with_counts() {
+    fn single_stream_yields_merged_mfg_with_features() {
         let ds = crate::graph::datasets::build("tiny", 3).unwrap();
         let cfg = SamplerConfig::default();
         let mut s = TrainStream::new(
@@ -264,11 +325,22 @@ mod tests {
             ExecMode::Serial,
             Batching::Single,
         );
+        let store = s.feature_store();
         let mb = s.next_batch();
         let mfg = mb.merged.expect("train streams materialize the MFG");
         assert_eq!(mfg.seeds().len(), 32);
         assert_eq!(mb.per_pe.len(), 1);
-        assert_eq!(mb.per_pe[0].counts_s.len(), cfg.layers + 1);
-        assert!(mb.per_pe[0].requested > 0);
+        let work = &mb.per_pe[0];
+        assert_eq!(work.counts_s.len(), cfg.layers + 1);
+        assert!(work.requested > 0);
+        // the shipped buffer covers S^L, row-for-row from the store
+        let feats = work.features.as_ref().expect("train stream gathers features");
+        let vs = work.feature_vertices.as_ref().unwrap();
+        assert_eq!(vs.as_slice(), mfg.input_vertices());
+        assert_eq!(feats.len(), vs.len() * store.dim());
+        assert_eq!(work.bytes_from_storage, work.requested * work.row_bytes);
+        let mut want = Vec::new();
+        store.gather(vs, &mut want);
+        assert_eq!(feats, &want, "shipped bytes == store rows");
     }
 }

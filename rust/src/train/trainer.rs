@@ -1,5 +1,5 @@
 //! The Trainer: the compute half of a training step (padding, feature
-//! gather, PJRT execution, optimizer state), fed by a pipeline
+//! padding, PJRT execution, optimizer state), fed by a pipeline
 //! [`TrainStream`].
 //!
 //! Since the pipeline redesign the Trainer no longer owns private
@@ -8,9 +8,18 @@
 //! its own stream ([`Trainer::step`], configured by
 //! [`TrainerOptions::batching`]) or from any external
 //! [`MinibatchStream`] ([`Trainer::step_from`]).
+//!
+//! Since the feature-plane refactor the Trainer no longer gathers
+//! features either: the stream ships each batch's dense `S^L × d` buffer
+//! (real rows out of the [`crate::feature::FeatureStore`]), and the
+//! trainer's feature stage is reduced to a prefix memcpy into the padded
+//! `[cap × d]` tensor. Pulled through
+//! [`crate::pipeline::with_prefetch`], batch t+1's sampling + gathering
+//! overlaps batch t's execution (`--prefetch 1` on the train CLI).
 
 use super::evalx::{score, EvalStats};
 use crate::coop::engine::ExecMode;
+use crate::feature::{FeatureStore, PartitionedFeatureStore};
 use crate::graph::{Dataset, VertexId};
 use crate::pipeline::{Batching, MinibatchStream, TrainStream};
 use crate::runtime::manifest::ArtifactConfig;
@@ -18,6 +27,7 @@ use crate::runtime::tensors::{forward_inputs, to_vec_f32, train_inputs, ParamSta
 use crate::runtime::{Executable, Manifest, Runtime};
 use crate::sampling::{Kappa, Mfg, SamplerConfig, SamplerKind};
 use crate::util::stats::Timer;
+use std::sync::Arc;
 
 /// Trainer construction options.
 #[derive(Clone, Debug)]
@@ -74,6 +84,9 @@ pub struct Trainer<'d> {
     forward_exe: Executable,
     pub state: ParamState,
     stream: TrainStream<'d>,
+    /// shared with the trainer's stream; evaluation and the
+    /// no-pre-gathered-buffer fallback read rows from here.
+    store: Arc<PartitionedFeatureStore>,
     lr: f32,
     feat_buf: Vec<f32>,
 }
@@ -110,6 +123,7 @@ impl<'d> Trainer<'d> {
             opts.exec,
             opts.batching,
         );
+        let store = stream.feature_store();
         let state = ParamState::init(&art, opts.seed ^ 0xFACE);
         let lr = opts.lr.unwrap_or(art.lr);
         Ok(Trainer {
@@ -119,6 +133,7 @@ impl<'d> Trainer<'d> {
             forward_exe,
             state,
             stream,
+            store,
             lr,
             feat_buf: Vec::new(),
         })
@@ -129,22 +144,40 @@ impl<'d> Trainer<'d> {
         self.stream.next_seeds()
     }
 
-    /// One training step on freshly drawn seeds from the trainer's own
-    /// stream.
+    /// A fresh external stream with the trainer's exact internal recipe,
+    /// sharing its feature store (see [`TrainStream::fresh_clone`]) —
+    /// wrap in [`crate::pipeline::with_prefetch`] and feed
+    /// [`Trainer::step_from`] for overlapped training with trajectories
+    /// bit-identical to [`Trainer::step`] at the same seed.
+    pub fn make_stream(&self) -> TrainStream<'d> {
+        self.stream.fresh_clone()
+    }
+
+    /// One training step pulled from the trainer's own stream — batch
+    /// drawing, sampling, *and feature gathering* all happen in the
+    /// stream; the trainer pads and executes.
     pub fn step(&mut self) -> crate::Result<StepStats> {
-        let seeds = self.next_seeds();
-        self.step_on_seeds(&seeds)
+        let mb = self.stream.next_batch();
+        self.step_on_batch(mb)
     }
 
     /// One training step pulled from an external stream (e.g. the
-    /// Figure 9 convergence arms). The stream must materialize a merged
-    /// MFG; engine measurement streams yield counts only.
+    /// Figure 9 convergence arms, or a prefetched wrapper of the same
+    /// recipe). The stream must materialize a merged MFG; engine
+    /// measurement streams yield counts only.
     pub fn step_from(&mut self, stream: &mut dyn MinibatchStream) -> crate::Result<StepStats> {
         let mb = stream.next_batch();
+        self.step_on_batch(mb)
+    }
+
+    /// Shared consumer half: pad + execute a stream-produced minibatch,
+    /// using its pre-gathered feature buffer when it ships one.
+    fn step_on_batch(&mut self, mb: crate::pipeline::Minibatch) -> crate::Result<StepStats> {
         let mfg = mb
             .merged
             .ok_or_else(|| anyhow::anyhow!("stream yields no merged MFG (measurement stream?)"))?;
-        let mut stats = self.step_on_mfg(&mfg)?;
+        let pre = mb.per_pe.first().and_then(|w| w.features.as_deref());
+        let mut stats = self.step_on_mfg_with(&mfg, pre)?;
         stats.sample_ms = mb.wall_ms;
         Ok(stats)
     }
@@ -161,8 +194,13 @@ impl<'d> Trainer<'d> {
     }
 
     /// One training step on a pre-built MFG (used by harnesses that
-    /// construct batches through external streams).
+    /// construct batches through external streams); features come from
+    /// the trainer's store.
     pub fn step_on_mfg(&mut self, mfg: &Mfg) -> crate::Result<StepStats> {
+        self.step_on_mfg_with(mfg, None)
+    }
+
+    fn step_on_mfg_with(&mut self, mfg: &Mfg, pre: Option<&[f32]>) -> crate::Result<StepStats> {
         let mut stats = StepStats::default();
         let t = Timer::start();
         let labels = &self.ds.labels;
@@ -173,7 +211,7 @@ impl<'d> Trainer<'d> {
         stats.input_vertices = mfg.input_vertices().len();
 
         let t = Timer::start();
-        self.gather_padded_features(mfg);
+        self.fill_padded_features(mfg, pre);
         stats.feature_ms = t.elapsed_ms();
 
         let t = Timer::start();
@@ -187,14 +225,25 @@ impl<'d> Trainer<'d> {
         Ok(stats)
     }
 
-    fn gather_padded_features(&mut self, mfg: &Mfg) {
+    /// Fill the padded `[cap × d]` input tensor. With a stream-shipped
+    /// buffer (`pre`, dense rows over the full `S^L` in order) this is a
+    /// prefix memcpy — the expensive gather already happened in the
+    /// stream, possibly overlapped with the previous step's execution.
+    /// Without one, the clipped input rows are read from the store.
+    fn fill_padded_features(&mut self, mfg: &Mfg, pre: Option<&[f32]>) {
         let cap = *self.art.caps.n.last().unwrap();
         let d = self.art.d_in;
         self.feat_buf.clear();
         self.feat_buf.resize(cap * d, 0.0);
         let vs = mfg.clipped_input_vertices(&self.art.caps);
-        for (i, &v) in vs.iter().enumerate() {
-            self.ds.write_features(v, &mut self.feat_buf[i * d..(i + 1) * d]);
+        match pre {
+            Some(rows) => {
+                debug_assert_eq!(rows.len(), mfg.input_vertices().len() * d);
+                // the clipped list is a prefix of S^L, so its rows are a
+                // prefix of the shipped buffer
+                self.feat_buf[..vs.len() * d].copy_from_slice(&rows[..vs.len() * d]);
+            }
+            None => self.store.gather_into(vs, &mut self.feat_buf[..vs.len() * d]),
         }
     }
 
@@ -218,7 +267,7 @@ impl<'d> Trainer<'d> {
                 let labels = &self.ds.labels;
                 mfg.pad(&self.art.caps, |v| labels[v as usize])
             };
-            self.gather_padded_features(&mfg);
+            self.fill_padded_features(&mfg, None);
             let inputs = forward_inputs(&self.art, &self.state, &self.feat_buf, &batch)?;
             let outs = self.forward_exe.run(&inputs)?;
             anyhow::ensure!(outs.len() == 1, "forward returns 1 output");

@@ -126,6 +126,28 @@ impl Json {
     }
 }
 
+/// Insert (or replace) top-level `section` in the JSON object file at
+/// `path`, creating the file if absent and starting over if the existing
+/// content is not a JSON object. This is how the benches accumulate
+/// their machine-readable sections into one `BENCH_pipeline.json`
+/// artifact across separate processes.
+pub fn merge_section(
+    path: &std::path::Path,
+    section: &str,
+    value: Json,
+) -> std::io::Result<()> {
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| match j {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        })
+        .unwrap_or_default();
+    root.insert(section.to_string(), value);
+    std::fs::write(path, Json::Obj(root).to_string_pretty())
+}
+
 fn escape(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
@@ -354,5 +376,32 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
         assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn merge_section_accumulates_across_writes() {
+        let path = std::env::temp_dir().join("coopgnn_merge_section_test.json");
+        std::fs::remove_file(&path).ok();
+        let mut a = BTreeMap::new();
+        a.insert("wall_ms".to_string(), Json::Num(1.5));
+        merge_section(&path, "bench_coop", Json::Obj(a)).unwrap();
+        let mut b = BTreeMap::new();
+        b.insert("speedup".to_string(), Json::Num(2.0));
+        merge_section(&path, "bench_train_step", Json::Obj(b)).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(
+            root.get("bench_coop").unwrap().get("wall_ms").unwrap().as_f64(),
+            Some(1.5)
+        );
+        assert_eq!(
+            root.get("bench_train_step").unwrap().get("speedup").unwrap().as_f64(),
+            Some(2.0)
+        );
+        // replacing a section keeps the others
+        merge_section(&path, "bench_coop", Json::Num(7.0)).unwrap();
+        let root = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(root.get("bench_coop").unwrap().as_f64(), Some(7.0));
+        assert!(root.get("bench_train_step").is_some());
+        std::fs::remove_file(&path).ok();
     }
 }

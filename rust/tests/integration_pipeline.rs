@@ -16,7 +16,7 @@
 use coopgnn::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
 use coopgnn::graph::{datasets, partition};
 use coopgnn::pipeline::{
-    Batching, MinibatchStream, PipelineBuilder, TrainStream, SEED_DRAW_SALT,
+    with_prefetch, Batching, MinibatchStream, PipelineBuilder, TrainStream, SEED_DRAW_SALT,
 };
 use coopgnn::sampling::{block, Kappa, Mfg, SamplerConfig, SamplerKind};
 use coopgnn::train::sample_indep_parts;
@@ -31,6 +31,9 @@ fn assert_counts_identical(a: &EngineReport, b: &EngineReport, ctx: &str) {
     assert_eq!(a.feat_misses, b.feat_misses, "{ctx}: misses");
     assert_eq!(a.feat_fabric_rows, b.feat_fabric_rows, "{ctx}: fabric");
     assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
+    assert_eq!(a.feat_storage_bytes, b.feat_storage_bytes, "{ctx}: storage bytes");
+    assert_eq!(a.feat_fabric_bytes, b.feat_fabric_bytes, "{ctx}: fabric bytes");
+    assert_eq!(a.derived_miss_rate, b.derived_miss_rate, "{ctx}: derived rate");
     assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup");
 }
 
@@ -226,6 +229,63 @@ fn kappa_flows_through_the_builder() {
         r64.cache_miss_rate,
         r1.cache_miss_rate
     );
+}
+
+#[test]
+fn prefetched_train_stream_is_bit_identical_to_inline() {
+    // The training-path determinism contract behind `--prefetch 1`:
+    // the prefetched stream yields the same MFGs *and the same feature
+    // bytes* as the inline stream at a fixed seed. The train-step
+    // compute is a deterministic function of (MFG, features, params,
+    // lr), so this pins loss/accuracy trajectories prefetch on vs off.
+    let ds = datasets::build("tiny", 9).unwrap();
+    let cfg = SamplerConfig::default();
+    for batching in [Batching::Single, Batching::IndepMerged { pes: 4 }] {
+        let mk = || {
+            TrainStream::new(&ds, SamplerKind::Labor0, cfg, 32, 21, ExecMode::Threaded, batching)
+        };
+        let mut inline = mk();
+        let direct: Vec<_> = (0..4).map(|_| inline.next_batch()).collect();
+        let prefetched: Vec<_> =
+            with_prefetch(mk(), |s| (0..4).map(|_| s.next_batch()).collect());
+        for (i, (a, b)) in direct.iter().zip(&prefetched).enumerate() {
+            let am = a.merged.as_ref().unwrap();
+            let bm = b.merged.as_ref().unwrap();
+            assert_mfgs_equal(am, bm, &format!("{batching:?} batch {i}"));
+            assert_eq!(
+                a.per_pe[0].features, b.per_pe[0].features,
+                "{batching:?} batch {i}: feature bytes"
+            );
+            assert_eq!(a.per_pe[0].bytes_from_storage, b.per_pe[0].bytes_from_storage);
+        }
+    }
+}
+
+#[test]
+fn train_stream_features_match_trainer_clip_contract() {
+    // the trainer memcpys a prefix of the shipped buffer into its padded
+    // tensor; the stream must therefore ship S^L rows in order
+    let ds = datasets::build("tiny", 10).unwrap();
+    let cfg = SamplerConfig::default();
+    let mut s = TrainStream::new(
+        &ds,
+        SamplerKind::Labor0,
+        cfg,
+        24,
+        5,
+        ExecMode::Serial,
+        Batching::Single,
+    );
+    let mb = s.next_batch();
+    let mfg = mb.merged.unwrap();
+    let feats = mb.per_pe[0].features.as_ref().unwrap();
+    let d = ds.feat_dim;
+    assert_eq!(feats.len(), mfg.input_vertices().len() * d);
+    let mut row = vec![0f32; d];
+    for (i, &v) in mfg.input_vertices().iter().enumerate().step_by(7) {
+        ds.write_features(v, &mut row);
+        assert_eq!(&feats[i * d..(i + 1) * d], &row[..], "row {i}");
+    }
 }
 
 #[test]

@@ -145,7 +145,7 @@ fn prop_lru_never_exceeds_capacity_and_counts_add_up() {
             prop_assert!(c.len() <= cap, "cache overflow");
         }
         prop_assert!(
-            c.hits + c.misses == accesses as u64,
+            c.hits() + c.misses() == accesses as u64,
             "hit+miss must equal accesses"
         );
         Ok(())
@@ -239,6 +239,78 @@ fn prop_engine_seed_determinism() {
     b.wall_batch_ms = 0.0;
     assert_eq!(format!("{a:?}"), format!("{b:?}"));
     let _ = Pcg64::new(0); // keep util linked
+}
+
+/// The byte-accounting satellite: storage/fabric byte counters must be
+/// exact multiples of the legacy synthetic counts — `misses * row_bytes
+/// == bytes_from_storage` and `fabric_rows * row_bytes == fabric_bytes`
+/// — per PE, per batch, across modes, exec modes, κ values, and seeds;
+/// and the shipped buffers must byte-equal the dataset's hash truth
+/// (rows really did travel through cache + store + fabric intact).
+#[test]
+fn prop_byte_accounting_equals_synthetic_counts() {
+    use coopgnn::coop::engine::{EngineConfig, ExecMode, Mode};
+    use coopgnn::graph::datasets;
+    use coopgnn::pipeline::{EngineStream, MinibatchStream};
+    check("byte-accounting", 0xA9, 5, |rng| {
+        let ds = datasets::build("tiny", rng.next_u64()).unwrap();
+        let rb = ds.row_bytes() as u64;
+        let d = ds.feat_dim;
+        let p_count = 1 + rng.next_below(4) as usize;
+        let part = partition::random(&ds.graph, p_count, rng.next_u64());
+        let mode = if rng.next_below(2) == 0 { Mode::Independent } else { Mode::Cooperative };
+        let exec = if rng.next_below(2) == 0 { ExecMode::Serial } else { ExecMode::Threaded };
+        let kappa =
+            if rng.next_below(2) == 0 { Kappa::Finite(1) } else { Kappa::Finite(8) };
+        let cfg = EngineConfig {
+            mode,
+            exec,
+            num_pes: p_count,
+            batch_per_pe: 8 + rng.next_below(40) as usize,
+            cache_per_pe: 64 + rng.next_below(256) as usize,
+            seed: rng.next_u64(),
+            sampler: SamplerConfig { layers: 2, kappa, ..Default::default() },
+            ..Default::default()
+        };
+        let mut stream = EngineStream::new(&ds, &part, &cfg);
+        let mut row = vec![0f32; d];
+        for batch in 0..3 {
+            let mb = stream.next_batch();
+            for (pe, pw) in mb.per_pe.iter().enumerate() {
+                let ctx = format!("{mode:?}/{exec:?} batch {batch} PE {pe}");
+                prop_assert!(pw.row_bytes == rb, "{ctx}: row_bytes {} vs {rb}", pw.row_bytes);
+                prop_assert!(
+                    pw.bytes_from_storage == pw.misses * rb,
+                    "{ctx}: storage bytes {} != misses {} * {rb}",
+                    pw.bytes_from_storage,
+                    pw.misses
+                );
+                prop_assert!(
+                    pw.fabric_bytes == pw.fabric * rb,
+                    "{ctx}: fabric bytes {} != rows {} * {rb}",
+                    pw.fabric_bytes,
+                    pw.fabric
+                );
+                let feats = pw.features.as_ref().expect("engine streams ship buffers");
+                let vs = pw.feature_vertices.as_ref().expect("and their vertex lists");
+                prop_assert!(
+                    feats.len() == vs.len() * d,
+                    "{ctx}: buffer shape {} vs {} rows",
+                    feats.len(),
+                    vs.len()
+                );
+                // content equals hash truth, independently of the store
+                for (i, &v) in vs.iter().enumerate() {
+                    ds.write_features(v, &mut row);
+                    prop_assert!(
+                        feats[i * d..(i + 1) * d] == row[..],
+                        "{ctx}: row {i} (vertex {v}) corrupted in transit"
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]
