@@ -36,7 +36,10 @@ fn main() -> coopgnn::Result<()> {
         pipe.ds.graph.num_edges(),
         batch * pes
     );
-    println!("system preset {} (γ={} α={} β={} GB/s)\n", preset.name, preset.gamma, preset.alpha, preset.beta);
+    println!(
+        "system preset {} (γ={} α={} β={} GB/s)\n",
+        preset.name, preset.gamma, preset.alpha, preset.beta
+    );
 
     let mut totals = Vec::new();
     for mode in [Mode::Independent, Mode::Cooperative] {
@@ -44,11 +47,13 @@ fn main() -> coopgnn::Result<()> {
         let r = pipe.engine_report();
         let t = estimate(&r, preset, &model, pipe.ds.feat_dim);
         println!("== {} ==", r.mode);
-        println!("  per-PE |S^l| (max, avg/batch): {:?}", r.s.iter().map(|x| *x as u64).collect::<Vec<_>>());
+        let s_per_layer: Vec<u64> = r.s.iter().map(|x| *x as u64).collect();
+        println!("  per-PE |S^l| (max, avg/batch): {s_per_layer:?}");
         if mode == Mode::Independent {
             println!("  duplication factor @ layer L: {:.2}x", r.dup_factor);
         } else {
-            println!("  fabric ids cross/batch: {:?}", r.cross.iter().map(|x| *x as u64).collect::<Vec<_>>());
+            let cross: Vec<u64> = r.cross.iter().map(|x| *x as u64).collect();
+            println!("  fabric ids cross/batch: {cross:?}");
         }
         println!("  cache miss rate: {:.3}", r.cache_miss_rate);
         println!(

@@ -52,7 +52,8 @@ fn main() {
         s.advance_batch(); // move off the pure-z1 fast path for κ=64
         let mut out = Neighborhoods::default();
         let iters = if smoke { 3 } else { 50 };
-        bench_ms(&format!("sample_layer/LABOR-0 kappa={kappa}"), if smoke { 1 } else { 3 }, iters, || {
+        let warm = if smoke { 1 } else { 3 };
+        bench_ms(&format!("sample_layer/LABOR-0 kappa={kappa}"), warm, iters, || {
             s.sample_layer(&seeds, 0, &mut out);
         });
     }

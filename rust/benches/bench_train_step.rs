@@ -18,12 +18,20 @@
 //! way. Results land in `BENCH_pipeline.json` (section
 //! `bench_train_step`) for the CI perf-trajectory artifact.
 //!
+//! Part 1.75 (always runs): the **multi-PE training plane** — 4 trainer
+//! replicas over the engine stream (independent vs cooperative
+//! minibatching) with the fabric gradient all-reduce, asserting replica
+//! lockstep and recording ms/step + storage/fabric/gradient bytes per
+//! step into the `multi_pe_train` field of the JSON section (`repro
+//! end2end` is the full multi-PE-count table).
+//!
 //! Part 2 (needs `make artifacts` + a PJRT-enabled build): end-to-end
 //! train-step latency through the runtime, prefetch off vs on, with the
 //! per-batch breakdown (sample / pad / feature / execute). Skips
 //! cleanly otherwise.
 
-use coopgnn::coop::engine::ExecMode;
+use coopgnn::coop::all_to_all::AllReduceStrategy;
+use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::pipeline::{
     sample_indep_parts, with_prefetch, Batching, MinibatchStream, PipelineBuilder,
     PrefetchedStream, TrainStream,
@@ -172,6 +180,63 @@ fn main() {
         }
     );
 
+    // ---- part 1.75: multi-PE training plane, indep vs coop -------------
+    // The end-to-end arm: per-PE trainer replicas over the engine stream
+    // with the fabric gradient all-reduce (`repro end2end` is the full
+    // table; this keeps one comparison point in the perf trajectory).
+    let (mp_batch, mp_steps) = if smoke { (64usize, 4usize) } else { (512, 10) };
+    let mp_pes = 4usize;
+    let mut multi = BTreeMap::new();
+    multi.insert("pes".to_string(), Json::Num(mp_pes as f64));
+    multi.insert("batch_per_pe".to_string(), Json::Num(mp_batch as f64));
+    multi.insert("steps".to_string(), Json::Num(mp_steps as f64));
+    let mut mode_ms = Vec::new();
+    for mode in [Mode::Independent, Mode::Cooperative] {
+        let mpipe = PipelineBuilder::new()
+            .dataset(ds_name)
+            .mode(mode)
+            .num_pes(mp_pes)
+            .batch_per_pe(mp_batch)
+            .seed(1)
+            .build()
+            .expect("registry dataset");
+        let mut stream = mpipe.stream();
+        let mut trainer = mpipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        let rep = trainer.run(&mut stream, mp_steps, &mpipe.ds.labels);
+        assert!(
+            trainer.replicas_in_lockstep(),
+            "bench: {mp_pes}-PE replicas must stay bit-identical"
+        );
+        println!(
+            "parallel_train/{ds_name}_{}pe_{} {:>8.2} ms/step (compute {:.2}, all-reduce {:.2}; \
+             {:.1} KiB storage + {:.1} KiB feat fabric + {:.1} KiB grads per step)",
+            mp_pes,
+            mode.name(),
+            rep.ms_per_step,
+            rep.compute_ms,
+            rep.allreduce_ms,
+            rep.storage_bytes_per_step / 1024.0,
+            rep.fabric_bytes_per_step / 1024.0,
+            rep.grad_bytes_per_step / 1024.0,
+        );
+        let mut arm = BTreeMap::new();
+        arm.insert("ms_per_step".to_string(), Json::Num(rep.ms_per_step));
+        arm.insert("compute_ms".to_string(), Json::Num(rep.compute_ms));
+        arm.insert("allreduce_ms".to_string(), Json::Num(rep.allreduce_ms));
+        arm.insert("storage_bytes_per_step".to_string(), Json::Num(rep.storage_bytes_per_step));
+        arm.insert("fabric_bytes_per_step".to_string(), Json::Num(rep.fabric_bytes_per_step));
+        arm.insert("grad_bytes_per_step".to_string(), Json::Num(rep.grad_bytes_per_step));
+        multi.insert(mode.name().to_lowercase(), Json::Obj(arm));
+        mode_ms.push(rep.ms_per_step);
+    }
+    let coop_speedup = if mode_ms[1] > 0.0 { mode_ms[0] / mode_ms[1] } else { 0.0 };
+    multi.insert("coop_speedup_vs_indep".to_string(), Json::Num(coop_speedup));
+    println!(
+        "parallel_train/{ds_name}_{mp_pes}pe coop-vs-indep end-to-end: {:.2} / {:.2} ms/step = \
+         {coop_speedup:.2}x",
+        mode_ms[0], mode_ms[1]
+    );
+
     let mut section = BTreeMap::new();
     section.insert("dataset".to_string(), Json::Str(ds_name.to_string()));
     section.insert("pes".to_string(), Json::Num(p as f64));
@@ -183,6 +248,7 @@ fn main() {
     section.insert("storage_bytes_per_batch".to_string(), Json::Num(bytes_per_batch));
     section.insert("fabric_bytes_per_batch".to_string(), Json::Num(0.0));
     section.insert("checksums_identical".to_string(), Json::Bool(true));
+    section.insert("multi_pe_train".to_string(), Json::Obj(multi));
     let json_path = Path::new("BENCH_pipeline.json");
     match merge_section(json_path, "bench_train_step", Json::Obj(section)) {
         Ok(()) => {

@@ -13,7 +13,7 @@
 //!   with true concurrency while staying deterministic (inboxes are
 //!   reassembled in src-major order, matching [`Exchange::route`]).
 //!
-//! The fabric moves two payload classes, in globally-ordered
+//! The fabric moves three payload classes, in globally-ordered
 //! barrier-delimited rounds:
 //!
 //! * **vertex ids** (4 bytes each) — the sampling-phase redistribution
@@ -26,6 +26,17 @@
 //!   separately (`cross_rows` / `cross_row_bytes`) from id traffic
 //!   (`cross_items` / `cross_bytes`) so Table 1's `c·|S̃|` id column and
 //!   the feature-loading row column cannot blur.
+//! * **gradients** (flat f32) — the training plane's all-reduce
+//!   ([`PeEndpoint::all_reduce_f32`] / [`Exchange::all_reduce_f32`]):
+//!   after each PE computes its local gradient, the fabric reduces the
+//!   replicas into one globally-summed buffer held identically by every
+//!   PE, keeping the replicated optimizer states in lockstep. Two
+//!   [`AllReduceStrategy`]s share one numeric contract (the canonical
+//!   ascending-PE summation order, so results are bit-identical across
+//!   strategies and exec modes) and differ only in message pattern and
+//!   byte profile; traffic is accounted in its own counters
+//!   (`cross_grad_reduce_bytes` / `cross_grad_gather_bytes`), separate
+//!   from id and row traffic.
 //!
 //! *Cross-PE* payloads are what the fabric moves at α bandwidth; same-PE
 //! buckets are local and free. The cost model ([`crate::costmodel`])
@@ -52,8 +63,79 @@ pub struct Exchange {
     pub local_rows: u64,
     /// f32 bytes of cross-PE feature rows.
     pub cross_row_bytes: u64,
+    /// f32 bytes of cross-PE gradient traffic in all-reduce *reduce*
+    /// phases (unreduced contributions on their way to being summed).
+    pub cross_grad_reduce_bytes: u64,
+    /// f32 bytes of cross-PE gradient traffic in all-reduce *gather*
+    /// phases (reduced chunks broadcast back; 0 for [`AllReduceStrategy::Naive`]).
+    pub cross_grad_gather_bytes: u64,
     /// number of all-to-all rounds executed
     pub rounds: u64,
+}
+
+/// Message/byte profile of a gradient all-reduce. Both strategies
+/// produce the **bit-identical** canonical result (contributions summed
+/// in ascending PE order, starting from PE 0's buffer), so the choice is
+/// purely a bandwidth/latency trade — and `Serial` vs `Threaded`
+/// trajectories stay exact either way.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AllReduceStrategy {
+    /// Each PE sends its full buffer to every peer and sums all `P`
+    /// contributions locally. One round, `(P-1) · payload` bytes sent
+    /// *per endpoint* (`P·(P-1)·payload` fabric-wide) — latency-optimal
+    /// for small payloads.
+    Naive,
+    /// Reduce-scatter + all-gather with the byte profile of a ring
+    /// all-reduce: the buffer is split into `P` owner chunks, each PE
+    /// ships its contribution of chunk `o` to owner `o` (reduce phase,
+    /// `(P-1) · payload` bytes fabric-wide), owners sum canonically, then
+    /// broadcast their reduced chunk (gather phase, another
+    /// `(P-1) · payload` fabric-wide). The message schedule is
+    /// owner-direct rather than neighbor-hopping so the summation order
+    /// stays canonical — determinism over topology fidelity.
+    Ring,
+}
+
+impl AllReduceStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AllReduceStrategy::Naive => "naive",
+            AllReduceStrategy::Ring => "ring",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AllReduceStrategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "naive" => Some(AllReduceStrategy::Naive),
+            "ring" => Some(AllReduceStrategy::Ring),
+            _ => None,
+        }
+    }
+}
+
+/// The owner chunk of element range a ring all-reduce assigns PE `o`
+/// over a `len`-element buffer: contiguous, sizes differing by at most
+/// one (`len % p` leading owners get the extra element).
+fn ring_chunk(len: usize, p: usize, o: usize) -> std::ops::Range<usize> {
+    let base = len / p;
+    let rem = len % p;
+    let start = o * base + o.min(rem);
+    start..start + base + usize::from(o < rem)
+}
+
+/// The canonical all-reduce sum: contributions added in ascending PE
+/// order, seeded from PE 0's buffer (no zero seed, so `-0.0` and other
+/// f32 edge values survive bit-exactly). Both fabric strategies and the
+/// serial reference reduce through this one function.
+fn canonical_sum(contribs: &[&[f32]]) -> Vec<f32> {
+    let mut acc = contribs[0].to_vec();
+    for c in &contribs[1..] {
+        debug_assert_eq!(c.len(), acc.len(), "ragged all-reduce contribution");
+        for (a, &x) in acc.iter_mut().zip(c.iter()) {
+            *a += x;
+        }
+    }
+    acc
 }
 
 impl Exchange {
@@ -122,6 +204,37 @@ impl Exchange {
         self.cross_bytes += cross_items * item_bytes as u64;
     }
 
+    /// Serial reference of the gradient all-reduce: sum every PE's
+    /// buffer in canonical (ascending-PE) order and write the result
+    /// back into all of them, accounting the bytes the given threaded
+    /// strategy would have moved — so a serial training step reports the
+    /// identical gradient traffic as its threaded twin, and the threaded
+    /// [`PeEndpoint::all_reduce_f32`] is tested against this oracle.
+    pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>], strategy: AllReduceStrategy) {
+        assert_eq!(bufs.len(), self.num_pes, "one buffer per PE");
+        let len = bufs[0].len();
+        assert!(bufs.iter().all(|b| b.len() == len), "ragged all-reduce buffers");
+        self.rounds += 1;
+        let acc = canonical_sum(&bufs.iter().map(|b| b.as_slice()).collect::<Vec<_>>());
+        for b in bufs.iter_mut() {
+            b.copy_from_slice(&acc);
+        }
+        let p = self.num_pes as u64;
+        let payload = (len * 4) as u64;
+        match strategy {
+            // every endpoint ships its full buffer to P-1 peers
+            AllReduceStrategy::Naive => {
+                self.cross_grad_reduce_bytes += p * (p - 1) * payload;
+            }
+            // chunked: each element crosses once toward its owner and
+            // once per non-owner on the way back
+            AllReduceStrategy::Ring => {
+                self.cross_grad_reduce_bytes += (p - 1) * payload;
+                self.cross_grad_gather_bytes += (p - 1) * payload;
+            }
+        }
+    }
+
     /// Fraction of routed items that crossed PEs (empirical `c`).
     pub fn cross_ratio(&self) -> f64 {
         let total = self.cross_items + self.local_items;
@@ -139,6 +252,7 @@ impl Exchange {
 enum Payload {
     Ids(Vec<VertexId>),
     Rows(Vec<f32>),
+    Grads(Vec<f32>),
 }
 
 /// One message on the threaded fabric: (src PE, payload for the receiver).
@@ -175,6 +289,8 @@ impl Fabric {
                 cross_rows: 0,
                 local_rows: 0,
                 cross_row_bytes: 0,
+                cross_grad_reduce_bytes: 0,
+                cross_grad_gather_bytes: 0,
                 rounds: 0,
             })
             .collect()
@@ -200,6 +316,10 @@ pub struct PeEndpoint {
     pub cross_rows: u64,
     pub local_rows: u64,
     pub cross_row_bytes: u64,
+    /// f32 bytes this endpoint sent in all-reduce reduce phases.
+    pub cross_grad_reduce_bytes: u64,
+    /// f32 bytes this endpoint sent in all-reduce gather phases.
+    pub cross_grad_gather_bytes: u64,
     pub rounds: u64,
 }
 
@@ -226,7 +346,9 @@ impl PeEndpoint {
             } else {
                 self.cross_items += items.len() as u64;
                 self.cross_bytes += (items.len() * item_bytes) as u64;
-                self.txs[dst].send((self.pe, Payload::Ids(items))).expect("fabric peer hung up (send)");
+                self.txs[dst]
+                    .send((self.pe, Payload::Ids(items)))
+                    .expect("fabric peer hung up (send)");
             }
         }
         for _ in 0..self.num_pes - 1 {
@@ -259,7 +381,9 @@ impl PeEndpoint {
             } else {
                 self.cross_rows += (rows.len() / dim) as u64;
                 self.cross_row_bytes += rows.len() as u64 * 4;
-                self.txs[dst].send((self.pe, Payload::Rows(rows))).expect("fabric peer hung up (send)");
+                self.txs[dst]
+                    .send((self.pe, Payload::Rows(rows)))
+                    .expect("fabric peer hung up (send)");
             }
         }
         for _ in 0..self.num_pes - 1 {
@@ -271,6 +395,105 @@ impl PeEndpoint {
         }
         self.barrier.wait();
         inbox
+    }
+
+    /// One gradient all-reduce round: every endpoint calls this with its
+    /// local contribution in `buf`; on return every PE's `buf` holds the
+    /// **identical** canonical sum (ascending-PE order — bit-equal to
+    /// [`Exchange::all_reduce_f32`] and across both strategies). Same
+    /// barrier discipline as the id/row rounds, so gradient traffic can
+    /// interleave with sampling and feature rounds on one fabric.
+    pub fn all_reduce_f32(&mut self, buf: &mut [f32], strategy: AllReduceStrategy) {
+        self.rounds += 1;
+        if self.num_pes == 1 {
+            return;
+        }
+        match strategy {
+            AllReduceStrategy::Naive => self.all_reduce_naive(buf),
+            AllReduceStrategy::Ring => self.all_reduce_ring(buf),
+        }
+    }
+
+    /// Full-buffer broadcast + local canonical sum.
+    fn all_reduce_naive(&mut self, buf: &mut [f32]) {
+        let p = self.num_pes;
+        let payload = (buf.len() * 4) as u64;
+        for (dst, tx) in self.txs.iter().enumerate() {
+            if dst != self.pe {
+                self.cross_grad_reduce_bytes += payload;
+                tx.send((self.pe, Payload::Grads(buf.to_vec())))
+                    .expect("fabric peer hung up (send)");
+            }
+        }
+        let mut contribs: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+        for _ in 0..p - 1 {
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(g) = payload else {
+                panic!("fabric protocol error: PE {} expected grads in a reduce round", self.pe);
+            };
+            contribs[src] = Some(g);
+        }
+        let slices: Vec<&[f32]> = (0..p)
+            .map(|src| if src == self.pe { &*buf } else { contribs[src].as_deref().unwrap() })
+            .collect();
+        let acc = canonical_sum(&slices);
+        buf.copy_from_slice(&acc);
+        self.barrier.wait();
+    }
+
+    /// Owner-direct reduce-scatter + all-gather (the ring byte profile
+    /// with canonical summation; see [`AllReduceStrategy::Ring`]). Two
+    /// barrier-delimited phases so a fast peer's gather message can never
+    /// be mistaken for a straggler's reduce contribution.
+    fn all_reduce_ring(&mut self, buf: &mut [f32]) {
+        let p = self.num_pes;
+        let len = buf.len();
+        // reduce phase: ship this PE's contribution of chunk o to owner o
+        for (dst, tx) in self.txs.iter().enumerate() {
+            if dst != self.pe {
+                let r = ring_chunk(len, p, dst);
+                self.cross_grad_reduce_bytes += (r.len() * 4) as u64;
+                tx.send((self.pe, Payload::Grads(buf[r].to_vec())))
+                    .expect("fabric peer hung up (send)");
+            }
+        }
+        let my_range = ring_chunk(len, p, self.pe);
+        let mut contribs: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+        for _ in 0..p - 1 {
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(g) = payload else {
+                panic!("fabric protocol error: PE {} expected grads in a reduce round", self.pe);
+            };
+            contribs[src] = Some(g);
+        }
+        let slices: Vec<&[f32]> = (0..p)
+            .map(|src| {
+                if src == self.pe {
+                    &buf[my_range.clone()]
+                } else {
+                    contribs[src].as_deref().unwrap()
+                }
+            })
+            .collect();
+        let acc = canonical_sum(&slices);
+        buf[my_range.clone()].copy_from_slice(&acc);
+        self.barrier.wait();
+        // gather phase: broadcast this PE's reduced chunk
+        for (dst, tx) in self.txs.iter().enumerate() {
+            if dst != self.pe {
+                self.cross_grad_gather_bytes += (acc.len() * 4) as u64;
+                tx.send((self.pe, Payload::Grads(acc.clone())))
+                    .expect("fabric peer hung up (send)");
+            }
+        }
+        for _ in 0..p - 1 {
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(g) = payload else {
+                panic!("fabric protocol error: PE {} expected grads in a gather round", self.pe);
+            };
+            buf[ring_chunk(len, p, src)].copy_from_slice(&g);
+        }
+        self.barrier.wait();
     }
 }
 
@@ -483,6 +706,62 @@ mod tests {
         assert_eq!(cross, ex.cross_rows);
         assert_eq!(local, ex.local_rows);
         assert_eq!(bytes, ex.cross_row_bytes);
+    }
+
+    // The oracle-equality and byte-closed-form contract of both
+    // all-reduce strategies (threaded == serial == sum-then-broadcast,
+    // naive per-endpoint and ring fabric-total (P-1)·payload accounting)
+    // is covered by the randomized property test
+    // `prop_all_reduce_equals_sum_then_broadcast_oracle` in
+    // tests/proptests.rs; here only the fabric-specific behaviors that
+    // the property test does not exercise are pinned.
+
+    /// All-reduce rounds interleave with id and row rounds on one fabric
+    /// without cross-talk, and a buffer shorter than the PE count (empty
+    /// ring chunks) still reduces exactly.
+    #[test]
+    fn all_reduce_interleaves_with_id_and_row_rounds() {
+        let p = 3usize;
+        let ids: Vec<Vec<Vec<VertexId>>> =
+            (0..p).map(|s| (0..p).map(|d| vec![(s * p + d) as VertexId]).collect()).collect();
+        let grads: Vec<Vec<f32>> = (0..p).map(|q| vec![q as f32 + 0.5, -(q as f32)]).collect();
+
+        let mut ex = Exchange::new(p);
+        let serial_ids = ex.route(&ids, 4);
+        let mut serial_grads = grads.clone();
+        ex.all_reduce_f32(&mut serial_grads, AllReduceStrategy::Ring);
+
+        let endpoints = Fabric::endpoints(p);
+        let results: Vec<(Vec<VertexId>, Vec<f32>)> = std::thread::scope(|scope| {
+            let ids = &ids;
+            let grads = &grads;
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let pe = ep.pe;
+                        let inbox = ep.all_to_all(ids[pe].clone(), 4).concat();
+                        let mut buf = grads[pe].clone();
+                        ep.all_reduce_f32(&mut buf, AllReduceStrategy::Ring);
+                        (inbox, buf)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, (inbox, buf)) in results.iter().enumerate() {
+            assert_eq!(inbox, &serial_ids[q], "PE {q} ids");
+            assert_eq!(buf, &serial_grads[q], "PE {q} grads");
+        }
+    }
+
+    #[test]
+    fn single_pe_all_reduce_is_identity() {
+        let mut ep = Fabric::endpoints(1).pop().unwrap();
+        let mut buf = vec![1.5f32, -2.0];
+        ep.all_reduce_f32(&mut buf, AllReduceStrategy::Ring);
+        assert_eq!(buf, vec![1.5, -2.0]);
+        assert_eq!(ep.cross_grad_reduce_bytes + ep.cross_grad_gather_bytes, 0);
     }
 
     #[test]

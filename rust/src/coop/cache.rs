@@ -16,7 +16,9 @@
 //! nominally huge capacity costs nothing until rows actually land.
 //! [`LruCache::new`] builds a membership-only cache (`dim == 0`, no row
 //! arena) for count-only consumers; [`LruCache::with_rows`] is the
-//! feature-plane constructor.
+//! feature-plane constructor. Capacity 0 means **no cache**: a true
+//! pass-through where every access misses straight to storage and
+//! nothing is allocated or retained.
 //!
 //! Hit/miss counters are private — read them through [`LruCache::hits`] /
 //! [`LruCache::misses`] and clear them with [`LruCache::reset_counters`]
@@ -69,6 +71,11 @@ impl LruCache {
 
     /// Row-storing cache: each slot carries a `dim`-float feature row,
     /// accessed through [`LruCache::access_row`].
+    ///
+    /// Capacity 0 is a true pass-through — "no cache": every access is a
+    /// miss served straight from storage, nothing is inserted, and no
+    /// arena is ever allocated (so `--cache 0` stores zero bytes, rather
+    /// than silently running a capacity-1 cache as it used to).
     pub fn with_rows(capacity: usize, dim: usize) -> Self {
         LruCache {
             map: HashMap::with_capacity(capacity.min(1 << 22)),
@@ -77,7 +84,7 @@ impl LruCache {
             dim,
             head: NIL,
             tail: NIL,
-            capacity: capacity.max(1),
+            capacity,
             hits: 0,
             misses: 0,
         }
@@ -124,6 +131,11 @@ impl LruCache {
     /// row-carrying accesses must not be mixed on one cache; the feature
     /// plane always goes through [`LruCache::access_row`].
     pub fn access(&mut self, v: VertexId) -> bool {
+        if self.capacity == 0 {
+            // pass-through: unconditional miss, nothing retained
+            self.misses += 1;
+            return false;
+        }
         if let Some(&idx) = self.map.get(&v) {
             self.hits += 1;
             self.move_to_front(idx);
@@ -143,9 +155,19 @@ impl LruCache {
     /// discipline is identical to [`LruCache::access`], so row caches
     /// and the legacy membership caches report the same hit/miss stream
     /// for the same access sequence.
-    pub fn access_row<F: FnOnce(&mut [f32])>(&mut self, v: VertexId, out: &mut [f32], fill: F) -> bool {
+    pub fn access_row<F>(&mut self, v: VertexId, out: &mut [f32], fill: F) -> bool
+    where
+        F: FnOnce(&mut [f32]),
+    {
         debug_assert!(self.dim > 0, "access_row needs a row cache (with_rows)");
         debug_assert_eq!(out.len(), self.dim);
+        if self.capacity == 0 {
+            // pass-through: the storage read lands directly in the
+            // caller's buffer, no arena slot exists to fill
+            self.misses += 1;
+            fill(out);
+            return false;
+        }
         if let Some(&idx) = self.map.get(&v) {
             self.hits += 1;
             self.move_to_front(idx);
@@ -236,6 +258,7 @@ impl LruCache {
     /// Insert `v` as MRU, evicting the LRU entry when full. Returns the
     /// arena slot index so callers can fill the row in place.
     fn insert_front(&mut self, v: VertexId) -> u32 {
+        debug_assert!(self.capacity > 0, "pass-through caches never insert");
         if self.map.len() >= self.capacity {
             // evict LRU (tail), reuse its arena slot (and its row slot)
             let idx = self.tail;
@@ -407,6 +430,41 @@ mod tests {
         }
         assert_eq!(membership.hits(), rows.hits());
         assert_eq!(membership.misses(), rows.misses());
+    }
+
+    /// Regression: `--cache 0` used to clamp to a capacity-1 cache,
+    /// occasionally hitting and under-reporting storage bytes. Capacity
+    /// 0 must behave as no cache at all: every access a miss, nothing
+    /// resident, no arena bytes.
+    #[test]
+    fn zero_capacity_is_a_true_pass_through() {
+        let mut c = LruCache::new(0);
+        let accesses = 100u64;
+        for i in 0..accesses {
+            // repeated keys included — even back-to-back repeats miss
+            assert!(!c.access((i % 3) as u32), "no access may hit at cap 0");
+        }
+        assert_eq!(c.misses(), accesses, "misses == accesses at cap 0");
+        assert_eq!(c.hits(), 0);
+        assert_eq!(c.len(), 0, "nothing resident");
+        assert_eq!(c.capacity(), 0, "capacity no longer clamped to 1");
+
+        let mut rows = LruCache::with_rows(0, 3);
+        let mut out = [0f32; 3];
+        let mut storage_reads = 0u64;
+        for i in 0..accesses {
+            let v = (i % 3) as u32;
+            let hit = rows.access_row(v, &mut out, |slot| {
+                slot.copy_from_slice(&toy_row(v));
+                storage_reads += 1;
+            });
+            assert!(!hit);
+            assert_eq!(out, toy_row(v), "miss must still deliver the row");
+        }
+        assert_eq!(rows.misses(), accesses);
+        assert_eq!(storage_reads, accesses, "every access reads storage");
+        assert_eq!(rows.rows.len(), 0, "no arena is ever allocated");
+        assert!(rows.peek_row(0).is_none());
     }
 
     #[test]

@@ -239,6 +239,9 @@ pub fn drain(stream: &mut dyn MinibatchStream, cfg: &EngineConfig) -> EngineRepo
             stats.push(bs);
         }
     }
+    // the window is drained: stop any background producer before the
+    // final reduction instead of letting it sample batches nobody reads
+    stream.finish();
     finalize(mode, num_pes, layers, &stats)
 }
 

@@ -83,7 +83,8 @@ mod tests {
     fn duplication_exceeds_one_with_overlapping_batches() {
         let g = generate::chung_lu(2000, 20.0, 2.3, 40);
         let cfg = SamplerConfig::default();
-        let mut samplers: Vec<_> = (0..4).map(|p| cfg.build(SamplerKind::Labor0, &g, 100 + p)).collect();
+        let mut samplers: Vec<_> =
+            (0..4).map(|p| cfg.build(SamplerKind::Labor0, &g, 100 + p)).collect();
         let seeds: Vec<Vec<u32>> = (0..4).map(|p| (p * 64..(p + 1) * 64).collect()).collect();
         let s = sample_independent(&mut samplers, &seeds);
         assert_eq!(s.num_pes(), 4);

@@ -72,7 +72,10 @@ pub struct Spec {
 /// reddit 1:4 with degree clipped to 120 (CPU memory), papers100M 1:500,
 /// mag240M 1:1000. Two extra entries support tests (`tiny`) and the
 /// convergence studies (`conv`).
+#[rustfmt::skip]
 pub const SPECS: &[Spec] = &[
+    // (tabular on purpose — one registry row per line beats rustfmt's
+    // exploded struct literals for scanning the corpus side by side)
     Spec { name: "flickr-s", mirrors: "flickr (1:1)", num_vertices: 89_200, avg_degree: 10.09, gamma: 2.5, feat_dim: 500, num_classes: 7, split: (0.50, 0.25, 0.25), cache_s3_ratio: 1.4, undirected: false, community: None },
     Spec { name: "yelp-s", mirrors: "yelp (1:5)", num_vertices: 143_400, avg_degree: 19.52, gamma: 2.4, feat_dim: 300, num_classes: 16, split: (0.75, 0.10, 0.15), cache_s3_ratio: 1.3, undirected: false, community: None },
     Spec { name: "reddit-s", mirrors: "reddit (1:1 vertices, degree clipped 493→120)", num_vertices: 233_000, avg_degree: 120.0, gamma: 2.2, feat_dim: 602, num_classes: 41, split: (0.66, 0.10, 0.24), cache_s3_ratio: 1.6, undirected: false, community: None },

@@ -38,6 +38,12 @@
 //! * [`train::Trainer`] executes batches pulled from a
 //!   [`pipeline::TrainStream`] (shared-coin global batches, or merged
 //!   independent sub-batches — the Figure 9 arms);
+//! * [`train::ParallelTrainer`] is the **multi-PE training plane**: one
+//!   trainer replica per PE over an [`pipeline::EngineStream`], kept in
+//!   bit-identical lockstep by a gradient all-reduce on the fabric
+//!   ([`coop::all_to_all::PeEndpoint::all_reduce_f32`], ring/naive) —
+//!   `repro end2end` and `train --train-pes N` run through it, natively
+//!   in this build;
 //! * κ > 1 dependent minibatching is a [`sampling::Kappa`] knob on the
 //!   same streams.
 //!

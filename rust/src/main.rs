@@ -4,6 +4,7 @@
 //! coopgnn repro <id|all> [--out DIR] [--quick] [--seed N]
 //! coopgnn train --config NAME [--dataset NAME] [--steps N] [--kappa K]
 //!               [--sampler ns|labor0|labor*|rw] [--lr F] [--eval-every N]
+//! coopgnn train --train-pes P [--mode coop|indep] [--batch B] [--allreduce ring|naive]
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
 //!               [--exec serial|threaded]
@@ -16,6 +17,7 @@
 //! `pipeline::PipelineBuilder`. All seed defaults are
 //! `pipeline::DEFAULT_SEED`.
 
+use coopgnn::coop::all_to_all::AllReduceStrategy;
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::graph::datasets;
 use coopgnn::pipeline::args::{switch, val, ArgMap, ArgSpec};
@@ -54,6 +56,11 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     val("artifacts", "AOT artifacts directory (default: artifacts)"),
     val("exec", "serial|threaded (default: threaded)"),
     val("prefetch", "0|1 double-buffer sampling+gather behind execution (default: 0)"),
+    val("train-pes", "run the multi-PE training plane with N trainer replicas (host \
+         compute + gradient all-reduce; needs no PJRT/artifacts)"),
+    val("mode", "coop|indep minibatching for --train-pes (default: coop)"),
+    val("batch", "per-PE batch size for --train-pes (default: 256)"),
+    val("allreduce", "ring|naive gradient all-reduce strategy (default: ring)"),
 ];
 
 const ENGINE_SPECS: &[ArgSpec] = &[
@@ -61,7 +68,7 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("dataset", "registry dataset (default: tiny)"),
     val("pes", "number of PEs (default: 4)"),
     val("batch", "per-PE batch size (default: 1024)"),
-    val("cache", "LRU rows per PE (default: dataset-derived)"),
+    val("cache", "LRU rows per PE; 0 = no cache, all accesses hit storage (default: derived)"),
     val("sampler", "ns|labor0|labor*|rw (default: labor0)"),
     val("kappa", "batch dependency K or `inf` (default: 1)"),
     val("fanout", "sampler fanout (default: 10)"),
@@ -117,7 +124,104 @@ fn real_main() -> coopgnn::Result<()> {
     }
 }
 
+/// The multi-PE training plane (`--train-pes N`): per-PE trainer
+/// replicas over the engine stream, lockstep parameters via the fabric
+/// gradient all-reduce — runs natively in this build (no PJRT, no
+/// artifacts).
+fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
+    anyhow::ensure!(pes >= 1, "--train-pes must be >= 1");
+    let strategy = AllReduceStrategy::parse(args.get_or("allreduce", "ring"))
+        .ok_or_else(|| anyhow::anyhow!("bad --allreduce (ring|naive)"))?;
+    let pipe = PipelineBuilder::new()
+        .dataset(args.get_or("dataset", "tiny"))
+        .mode(
+            Mode::parse(args.get_or("mode", "coop"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mode (coop|indep)"))?,
+        )
+        .exec(
+            ExecMode::parse(args.get_or("exec", "threaded"))
+                .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
+        )
+        .num_pes(pes)
+        .batch_per_pe(args.or("batch", 256usize)?)
+        .sampler(
+            SamplerKind::parse(args.get_or("sampler", "labor0"))
+                .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
+        )
+        .kappa(
+            Kappa::parse(args.get_or("kappa", "1"))
+                .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
+        )
+        .fanout(args.or("fanout", 10usize)?)
+        .seed(args.or("seed", DEFAULT_SEED)?)
+        .build()?;
+    let steps = args.or("steps", 300usize)?;
+    let lr = args.or("lr", 0.05f32)?;
+    anyhow::ensure!(lr > 0.0, "--lr must be positive");
+    let prefetch = args.bool01("prefetch", false)?;
+    let mut trainer = pipe.parallel_trainer(lr, strategy);
+    println!(
+        "multi-PE training plane: {} on {}, {} PEs x batch {} ({} exec, {} all-reduce{})",
+        pipe.cfg.mode.name(),
+        pipe.ds.name,
+        pes,
+        pipe.cfg.batch_per_pe,
+        pipe.cfg.exec.name(),
+        strategy.name(),
+        if prefetch { ", prefetch on" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let rep = if prefetch {
+        with_prefetch(pipe.stream(), |s| trainer.run(s, steps, &pipe.ds.labels))
+    } else {
+        trainer.run(&mut pipe.stream(), steps, &pipe.ds.labels)
+    };
+    anyhow::ensure!(trainer.replicas_in_lockstep(), "replicas diverged (all-reduce bug)");
+    let val_acc = trainer.evaluate(&pipe.ds.val, &pipe.ds.labels, &*pipe.feature_store());
+    println!(
+        "{} steps in {:.1}s: {:.2} ms/step (sample {:.2} + feature {:.2} + compute {:.2} + \
+         all-reduce {:.2})",
+        steps,
+        t0.elapsed().as_secs_f64(),
+        rep.ms_per_step,
+        rep.sample_ms,
+        rep.feature_ms,
+        rep.compute_ms,
+        rep.allreduce_ms
+    );
+    println!(
+        "bytes/step: {:.1} KiB storage (β), {:.1} KiB feature fabric (α), {:.1} KiB gradient \
+         all-reduce",
+        rep.storage_bytes_per_step / 1024.0,
+        rep.fabric_bytes_per_step / 1024.0,
+        rep.grad_bytes_per_step / 1024.0
+    );
+    println!(
+        "loss {:.4} -> {:.4}, batch acc {:.3}, val acc {:.4} (replicas bit-identical: yes)",
+        rep.first_loss, rep.last_loss, rep.last_acc, val_acc
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
+    // the two train paths consume disjoint flag subsets; a flag the
+    // chosen path would silently ignore is an error (the strict-args
+    // contract: nothing defaults silently)
+    if let Some(pes) = args.opt::<usize>("train-pes")? {
+        for key in ["config", "eval-every", "artifacts"] {
+            anyhow::ensure!(
+                !args.has(key),
+                "--{key} applies to the PJRT train path and is ignored with --train-pes; drop it"
+            );
+        }
+        return cmd_train_parallel(args, pes);
+    }
+    for key in ["mode", "batch", "allreduce"] {
+        anyhow::ensure!(
+            !args.has(key),
+            "--{key} only applies to the multi-PE training plane; add --train-pes N"
+        );
+    }
     let config = args.get_or("config", "tiny-b32").to_string();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Runtime::cpu()?;
@@ -142,7 +246,7 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         .build()?;
     let steps = args.or("steps", 300usize)?;
     let eval_every = args.or("eval-every", 50usize)?;
-    let prefetch = args.or("prefetch", 0u8)? != 0;
+    let prefetch = args.bool01("prefetch", false)?;
     let mut opts = pipe.trainer_options();
     opts.lr = args.opt("lr")?;
     let mut trainer = Trainer::new(&rt, &manifest, &config, &pipe.ds, &opts)?;
@@ -154,7 +258,10 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         trainer.art.batch,
         if prefetch { " (prefetch: sampling+gather overlap execution)" } else { "" }
     );
-    let mut report_step = |trainer: &mut Trainer, step: usize, s: StepStats| -> coopgnn::Result<()> {
+    let mut report_step = |trainer: &mut Trainer,
+                           step: usize,
+                           s: StepStats|
+     -> coopgnn::Result<()> {
         if step % eval_every == 0 || step == 1 || step == steps {
             let val = trainer.evaluate(&pipe.ds.val, 1234)?;
             println!(
@@ -222,7 +329,7 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
         )
         .fanout(args.or("fanout", 10usize)?)
         .layers(args.or("layers", 3usize)?)
-        .prefetch(args.or("prefetch", 0u8)? != 0)
+        .prefetch(args.bool01("prefetch", false)?)
         .warmup_batches(args.or("warmup", 4usize)?)
         .measure_batches(args.or("batches", 8usize)?)
         .seed(args.or("seed", DEFAULT_SEED)?);
@@ -327,10 +434,15 @@ fn print_usage() {
          unknown flags and malformed values are errors.\n\
          \n\
          USAGE:\n\
-         \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|all>\n\
-         \x20        [--out DIR] [--quick] [--seed N] [--artifacts DIR] [--exec serial|threaded]\n\
+         \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|\n\
+         \x20        end2end|all> [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
+         \x20        [--exec serial|threaded]\n\
          \x20 coopgnn train --config NAME [--steps N] [--kappa K|inf] [--sampler ns|labor0|labor*|rw]\n\
          \x20        [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
+         \x20 coopgnn train --train-pes P [--mode coop|indep] [--dataset NAME] [--batch B]\n\
+         \x20        [--allreduce ring|naive] [--steps N] [--lr F] [--prefetch 0|1]\n\
+         \x20        (multi-PE training plane: per-PE replicas + fabric gradient all-reduce,\n\
+         \x20         runs without PJRT artifacts)\n\
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
          \x20        [--prefetch 0|1]\n\

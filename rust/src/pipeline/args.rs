@@ -133,6 +133,18 @@ impl ArgMap {
     pub fn or<T: std::str::FromStr>(&self, key: &str, default: T) -> crate::Result<T> {
         Ok(self.opt(key)?.unwrap_or(default))
     }
+
+    /// The CLI's `0|1` toggle convention (`--prefetch 1`): strictly 0 or
+    /// 1, anything else errors — `--prefetch yes` must not silently mean
+    /// off.
+    pub fn bool01(&self, key: &str, default: bool) -> crate::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("0") => Ok(false),
+            Some("1") => Ok(true),
+            Some(raw) => anyhow::bail!("invalid value `{raw}` for --{key} (expected 0 or 1)"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -178,6 +190,19 @@ mod tests {
     fn rejects_malformed_values_instead_of_defaulting() {
         let m = ArgMap::parse(&args(&["--steps", "many"]), SPECS).unwrap();
         assert!(m.or::<usize>("steps", 300).is_err());
+    }
+
+    #[test]
+    fn bool01_is_strict() {
+        const B: &[ArgSpec] = &[val("prefetch", "0|1")];
+        let m = ArgMap::parse(&args(&["--prefetch", "1"]), B).unwrap();
+        assert!(m.bool01("prefetch", false).unwrap());
+        let m = ArgMap::parse(&args(&["--prefetch", "0"]), B).unwrap();
+        assert!(!m.bool01("prefetch", true).unwrap());
+        let m = ArgMap::parse(&args(&[]), B).unwrap();
+        assert!(m.bool01("prefetch", true).unwrap());
+        let m = ArgMap::parse(&args(&["--prefetch", "yes"]), B).unwrap();
+        assert!(m.bool01("prefetch", false).is_err(), "non-0|1 must error");
     }
 
     #[test]

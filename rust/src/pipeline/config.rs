@@ -4,11 +4,12 @@
 
 use super::stream::EngineStream;
 use super::train_stream::Batching;
+use crate::coop::all_to_all::AllReduceStrategy;
 use crate::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
 use crate::feature::PartitionedFeatureStore;
 use crate::graph::{datasets, partition, Csr, Dataset, Partition};
 use crate::sampling::{Kappa, SamplerConfig, SamplerKind};
-use crate::train::TrainerOptions;
+use crate::train::{ParallelTrainer, TrainerOptions};
 use std::sync::{Arc, Mutex};
 
 /// The crate-wide default RNG seed.
@@ -320,6 +321,24 @@ impl Pipeline {
     /// Trainer options mirroring this pipeline.
     pub fn trainer_options(&self) -> TrainerOptions {
         self.cfg.trainer_options()
+    }
+
+    /// The multi-PE training plane over this pipeline: one trainer
+    /// replica per PE (shape `feat_dim → num_classes`, init from
+    /// `cfg.seed`), gradient all-reduce in `cfg.exec`'s execution mode.
+    /// Drive it with [`Pipeline::stream`] (optionally prefetch-wrapped);
+    /// the stream and the trainer must agree on `num_pes`, which this
+    /// constructor guarantees.
+    pub fn parallel_trainer(&self, lr: f32, strategy: AllReduceStrategy) -> ParallelTrainer {
+        ParallelTrainer::new(
+            self.cfg.num_pes,
+            self.ds.feat_dim,
+            self.ds.num_classes,
+            self.cfg.seed,
+            lr,
+            self.cfg.exec,
+            strategy,
+        )
     }
 
     /// Re-partition the current graph with a different partitioner.

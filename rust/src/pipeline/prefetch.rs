@@ -14,22 +14,37 @@
 //! batches are computed, never *what* they contain, so reports and
 //! training trajectories are bit-identical with the flag on or off
 //! (asserted in `tests/integration_pipeline.rs` and the engine's
-//! prefetch determinism test). After the consumer closure returns, the
-//! producer may have run up to two batches past the last one consumed;
-//! that tail state is discarded with the stream.
+//! prefetch determinism test).
+//!
+//! Tail discipline: a consumer that knows it just pulled its last batch
+//! calls [`MinibatchStream::finish`] (the engine's `drain`, the
+//! parallel trainer's `run`, and the CLI/bench loops all do). `finish`
+//! drops the receiver and raises a stop flag, so the producer exits at
+//! its next send — or at the loop top, before starting another
+//! sample + gather — instead of burning up to two full batches that
+//! nobody will consume. After `finish` returns, **at most one**
+//! already-in-flight batch completes (asserted by batch counters in the
+//! tests below). Returning from the closure without calling `finish`
+//! still joins cleanly; it just forgoes the early stop.
 //!
 //! This is the CLI `--prefetch {0,1}` pipeline flag
 //! ([`crate::pipeline::PipelineConfig::prefetch`]).
 
 use super::stream::{Minibatch, MinibatchStream};
 use crate::coop::engine::Mode;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
 
 /// The consumer-side handle of a prefetching producer thread. Dropping
-/// it (or returning from [`with_prefetch`]'s closure) stops the
-/// producer at its next send.
+/// it (or calling [`MinibatchStream::finish`], which also stops the
+/// producer from starting further batches) stops the producer at its
+/// next send.
 pub struct PrefetchedStream {
-    rx: Receiver<Minibatch>,
+    /// `None` once finished — the drop is the signal that unblocks a
+    /// producer waiting in `send`.
+    rx: Option<Receiver<Minibatch>>,
+    stop: Arc<AtomicBool>,
     num_pes: usize,
     layers: usize,
     mode: Mode,
@@ -38,6 +53,8 @@ pub struct PrefetchedStream {
 impl MinibatchStream for PrefetchedStream {
     fn next_batch(&mut self) -> Minibatch {
         self.rx
+            .as_ref()
+            .expect("next_batch called on a finished prefetched stream")
             .recv()
             .expect("prefetch producer thread died (its panic is reported on stderr)")
     }
@@ -53,24 +70,42 @@ impl MinibatchStream for PrefetchedStream {
     fn mode(&self) -> Mode {
         self.mode
     }
+
+    /// Stop the producer: raise the flag (checked before every
+    /// production) and drop the receiver (fails any in-flight or future
+    /// send). At most one batch already in production completes after
+    /// this returns.
+    fn finish(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.rx = None;
+    }
 }
 
 /// Run `consume` against a double-buffered view of `stream`: a scoped
 /// producer thread calls `stream.next_batch()` ahead of the consumer,
 /// overlapping batch `t+1`'s sampling + feature gathering with batch
 /// `t`'s processing. Returns the closure's result after joining the
-/// producer.
+/// producer (the handle is finished on the way out, so an early-exiting
+/// consumer never hangs).
 pub fn with_prefetch<S, R>(mut stream: S, consume: impl FnOnce(&mut PrefetchedStream) -> R) -> R
 where
     S: MinibatchStream + Send,
 {
     let (num_pes, layers, mode) = (stream.num_pes(), stream.layers(), stream.mode());
+    let stop = Arc::new(AtomicBool::new(false));
     std::thread::scope(|scope| {
         // depth 1: one batch in flight at the consumer, one buffered,
         // one in production — the producer blocks in `send` beyond that
         let (tx, rx) = sync_channel::<Minibatch>(1);
+        let producer_stop = Arc::clone(&stop);
         scope.spawn(move || {
             loop {
+                // checked before each sample + gather, so a finished
+                // consumer stops production here rather than after one
+                // more full batch
+                if producer_stop.load(Ordering::SeqCst) {
+                    break;
+                }
                 let mb = stream.next_batch();
                 if tx.send(mb).is_err() {
                     // consumer dropped its handle: done
@@ -78,9 +113,9 @@ where
                 }
             }
         });
-        let mut handle = PrefetchedStream { rx, num_pes, layers, mode };
+        let mut handle = PrefetchedStream { rx: Some(rx), stop, num_pes, layers, mode };
         let result = consume(&mut handle);
-        drop(handle); // unblock + stop the producer before the scope joins it
+        handle.finish(); // no-op if the consumer already finished
         result
     })
 }
@@ -91,6 +126,7 @@ mod tests {
     use crate::coop::engine::{EngineConfig, ExecMode};
     use crate::graph::{datasets, partition};
     use crate::pipeline::EngineStream;
+    use std::sync::atomic::AtomicUsize;
 
     fn cfg(exec: ExecMode) -> EngineConfig {
         EngineConfig {
@@ -103,6 +139,31 @@ mod tests {
             measure_batches: 3,
             seed: 33,
             ..Default::default()
+        }
+    }
+
+    /// Counts how many productions *start* — the measure of tail waste.
+    struct CountingStream<S> {
+        inner: S,
+        started: Arc<AtomicUsize>,
+    }
+
+    impl<S: MinibatchStream> MinibatchStream for CountingStream<S> {
+        fn next_batch(&mut self) -> Minibatch {
+            self.started.fetch_add(1, Ordering::SeqCst);
+            self.inner.next_batch()
+        }
+
+        fn num_pes(&self) -> usize {
+            self.inner.num_pes()
+        }
+
+        fn layers(&self) -> usize {
+            self.inner.layers()
+        }
+
+        fn mode(&self) -> Mode {
+            self.inner.mode()
         }
     }
 
@@ -140,6 +201,54 @@ mod tests {
         // with_prefetch must still join cleanly
         let first = with_prefetch(stream, |s| s.next_batch());
         assert_eq!(first.index, 0);
+    }
+
+    /// The tail-waste guarantee: once `finish` returns, at most one
+    /// batch already in production completes — the producer never
+    /// *starts* another sample + gather, even if the consumer lingers
+    /// afterward (here: a deliberate sleep that would previously let it
+    /// run two batches ahead).
+    #[test]
+    fn finish_stops_production_within_one_batch() {
+        let ds = datasets::build("tiny", 8).unwrap();
+        let part = partition::random(&ds.graph, 2, 3);
+        let started = Arc::new(AtomicUsize::new(0));
+        let counting = CountingStream {
+            inner: EngineStream::new(&ds, &part, &cfg(ExecMode::Serial)),
+            started: Arc::clone(&started),
+        };
+        let consumed = 2usize;
+        let at_finish = with_prefetch(counting, |s| {
+            for _ in 0..consumed {
+                s.next_batch();
+            }
+            s.finish();
+            let snapshot = started.load(Ordering::SeqCst);
+            // tail work after the last batch: with the stop flag up, the
+            // producer must not start new batches during it
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            snapshot
+        });
+        let total = started.load(Ordering::SeqCst);
+        assert!(
+            total <= at_finish + 1,
+            "producer started {total} batches, but only {at_finish} had started \
+             when finish() returned (+1 in-flight allowed)"
+        );
+        assert!(total >= consumed, "must have produced everything consumed");
+    }
+
+    #[test]
+    #[should_panic(expected = "finished prefetched stream")]
+    fn next_batch_after_finish_is_a_bug() {
+        let ds = datasets::build("tiny", 8).unwrap();
+        let part = partition::random(&ds.graph, 2, 3);
+        let stream = EngineStream::new(&ds, &part, &cfg(ExecMode::Serial));
+        with_prefetch(stream, |s| {
+            s.next_batch();
+            s.finish();
+            s.next_batch(); // panics
+        });
     }
 
     #[test]

@@ -104,6 +104,17 @@ pub trait MinibatchStream {
     fn num_pes(&self) -> usize;
     fn layers(&self) -> usize;
     fn mode(&self) -> Mode;
+
+    /// Tell the stream no further batch will be pulled. Inline streams
+    /// have nothing to do (the default), but a consumer that knows it
+    /// just pulled its last batch should call this before its tail work:
+    /// [`super::prefetch::PrefetchedStream`] uses it to stop its
+    /// producer thread at the next send instead of sampling + gathering
+    /// batches nobody will consume. Calling [`next_batch`] after
+    /// `finish` is a consumer bug (the prefetched stream panics).
+    ///
+    /// [`next_batch`]: MinibatchStream::next_batch
+    fn finish(&mut self) {}
 }
 
 /// Per-PE seed RNG stream, split deterministically from the engine seed

@@ -20,7 +20,11 @@
 //! [`TrainStream::next_batch`] ships the dense input-feature buffer with
 //! the MFG, so the trainer's compute half starts from pre-gathered bytes
 //! — and, wrapped in [`super::prefetch::with_prefetch`], batch `t+1`'s
-//! sampling + gathering overlaps batch `t`'s execution.
+//! sampling + gathering overlaps batch `t`'s execution. The work record
+//! reports its sampling and gather stages separately (`PeWork::samp_ms`
+//! / `PeWork::feat_ms`), and the trainer keeps them separate in
+//! `StepStats` (`sample_ms` vs `feature_ms`) so prefetch overlap is
+//! attributed to the right stage.
 //!
 //! Seed-drawing matches the PR-1 `Trainer` exactly: the seed RNG is
 //! `Pcg64::new(seed ^ `[`SEED_DRAW_SALT`]`)` and per-step sub-batch

@@ -16,6 +16,7 @@
 //! | `table7`  | Table 7 per-PE counts          | [`table7`] |
 //! | `fig9`    | Fig. 9 coop-vs-indep converg.  | [`fig9`] |
 //! | `scaling` | §4.3 F/B vs #cooperating PEs   | [`scaling`] |
+//! | `end2end` | §4 end-to-end coop-vs-indep ms/step + bytes/step | [`end2end`] |
 
 pub mod fig3;
 pub mod table3;
@@ -24,6 +25,7 @@ pub mod table4;
 pub mod table7;
 pub mod fig9;
 pub mod scaling;
+pub mod end2end;
 
 use crate::coop::engine::ExecMode;
 use std::path::PathBuf;
@@ -68,15 +70,21 @@ pub fn run(id: &str, ctx: &Ctx) -> crate::Result<()> {
         "table7" => table7::run(ctx),
         "fig9" => fig9::run(ctx),
         "scaling" => scaling::run(ctx),
+        "end2end" => end2end::run(ctx),
         "all" => {
-            for id in ["fig3", "fig5a", "fig5b", "table4", "table7", "scaling", "fig9", "table3"] {
+            let ids = [
+                "fig3", "fig5a", "fig5b", "table4", "table7", "scaling", "end2end", "fig9",
+                "table3",
+            ];
+            for id in ids {
                 println!("=== repro {id} ===");
                 run(id, ctx)?;
             }
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment `{other}`; try fig3 table3 fig5a fig5b table4 table7 fig9 scaling all"
+            "unknown experiment `{other}`; try fig3 table3 fig5a fig5b table4 table7 fig9 scaling \
+             end2end all"
         ),
     }
 }

@@ -14,9 +14,11 @@ use crate::train::Trainer;
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
-    let (ds_name, art_name, steps, runs, eval_every, kappas): (_, _, usize, u64, usize, Vec<Kappa>) =
+    type Table3Cfg = (&'static str, &'static str, usize, u64, usize, Vec<Kappa>);
+    let (ds_name, art_name, steps, runs, eval_every, kappas): Table3Cfg =
         if ctx.quick {
-            ("tiny", "tiny-b32", 120, 1, 30, vec![Kappa::Finite(1), Kappa::Finite(256), Kappa::Infinite])
+            let kappas = vec![Kappa::Finite(1), Kappa::Finite(256), Kappa::Infinite];
+            ("tiny", "tiny-b32", 120, 1, 30, kappas)
         } else {
             (
                 "conv",

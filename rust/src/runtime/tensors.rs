@@ -54,10 +54,19 @@ pub struct ParamState {
 impl ParamState {
     /// Glorot-normal init (matching python model.init_params).
     pub fn init(cfg: &ArtifactConfig, seed: u64) -> ParamState {
+        ParamState::with_shapes(cfg.param_shapes().into_iter().map(|(_, s)| s).collect(), seed)
+    }
+
+    /// Init from bare shapes (same Glorot-normal recipe as [`init`],
+    /// without needing an artifact manifest) — the constructor the
+    /// multi-PE training plane uses to stand up replicated states: every
+    /// replica built from the same `(shapes, seed)` is bit-identical.
+    ///
+    /// [`init`]: ParamState::init
+    pub fn with_shapes(shapes: Vec<Vec<usize>>, seed: u64) -> ParamState {
         let mut rng = Pcg64::new(seed);
         let mut params = Vec::new();
-        let mut shapes = Vec::new();
-        for (_name, shape) in cfg.param_shapes() {
+        for shape in &shapes {
             let n: usize = shape.iter().product();
             let buf = if shape.len() == 2 {
                 let scale = (2.0 / (shape[0] + shape[1]) as f64).sqrt();
@@ -66,11 +75,59 @@ impl ParamState {
                 vec![0f32; n]
             };
             params.push(buf);
-            shapes.push(shape);
         }
         let m = params.iter().map(|p| vec![0f32; p.len()]).collect();
         let v = params.iter().map(|p| vec![0f32; p.len()]).collect();
         ParamState { params, m, v, step: 0.0, shapes }
+    }
+
+    /// Host-side Adam update from a flat gradient laid out in parameter
+    /// order (concatenation of each parameter's scalars) — the same
+    /// update rule as the AOT train step (`python/compile/model.py`:
+    /// β1 = 0.9, β2 = 0.999, ε = 1e-8, bias-corrected), so a host
+    /// training plane and a PJRT one move parameters identically given
+    /// identical gradients. Deterministic in f32: replicas applying the
+    /// same flat gradient stay bit-identical.
+    pub fn adam_step(&mut self, flat_grads: &[f32], lr: f32) {
+        assert_eq!(flat_grads.len(), self.num_scalars(), "flat gradient length");
+        const BETA1: f32 = 0.9;
+        const BETA2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        self.step += 1.0;
+        let t = self.step;
+        let bc1 = 1.0 - BETA1.powf(t);
+        let bc2 = 1.0 - BETA2.powf(t);
+        let mut off = 0;
+        for i in 0..self.params.len() {
+            let n = self.params[i].len();
+            let g = &flat_grads[off..off + n];
+            for j in 0..n {
+                let m = BETA1 * self.m[i][j] + (1.0 - BETA1) * g[j];
+                let v = BETA2 * self.v[i][j] + (1.0 - BETA2) * g[j] * g[j];
+                self.m[i][j] = m;
+                self.v[i][j] = v;
+                self.params[i][j] -= lr * (m / bc1) / ((v / bc2).sqrt() + EPS);
+            }
+            off += n;
+        }
+    }
+
+    /// Bitwise equality of the full optimizer state (params, m, v, step)
+    /// — the lockstep invariant the gradient all-reduce maintains across
+    /// replicas (f32 `==` would treat `0.0 == -0.0`; replicas must agree
+    /// on the exact bits).
+    pub fn bits_eq(&self, other: &ParamState) -> bool {
+        let eq = |a: &[Vec<f32>], b: &[Vec<f32>]| {
+            a.len() == b.len()
+                && a.iter().zip(b).all(|(x, y)| {
+                    x.len() == y.len()
+                        && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+                })
+        };
+        self.step.to_bits() == other.step.to_bits()
+            && eq(&self.params, &other.params)
+            && eq(&self.m, &other.m)
+            && eq(&self.v, &other.v)
     }
 
     pub fn num_params(&self) -> usize {
@@ -91,7 +148,8 @@ impl ParamState {
     /// (loss, correct).
     pub fn absorb(&mut self, outs: &[Literal]) -> crate::Result<(f32, f32)> {
         let np = self.params.len();
-        anyhow::ensure!(outs.len() == 3 * np + 3, "expected {} outs, got {}", 3 * np + 3, outs.len());
+        let want = 3 * np + 3;
+        anyhow::ensure!(outs.len() == want, "expected {} outs, got {}", want, outs.len());
         for i in 0..np {
             self.params[i] = to_vec_f32(&outs[i])?;
             self.m[i] = to_vec_f32(&outs[np + i])?;
@@ -215,6 +273,46 @@ mod tests {
         assert_eq!(a.params[0], b.params[0]);
         assert!(a.params[1].iter().all(|&x| x == 0.0), "biases start at zero");
         assert_eq!(a.num_scalars(), 16 * 32 + 32 + 32 * 32 + 32 + 32 * 8 + 8);
+    }
+
+    #[test]
+    fn with_shapes_matches_artifact_init_and_adam_is_deterministic() {
+        let c = cfg();
+        let from_cfg = ParamState::init(&c, 5);
+        let shapes: Vec<Vec<usize>> = from_cfg.shapes().to_vec();
+        let bare = ParamState::with_shapes(shapes, 5);
+        assert!(from_cfg.bits_eq(&bare), "same shapes + seed ⇒ same state");
+
+        // two replicas applying the same flat gradients stay bitwise
+        // lockstep; a diverging gradient breaks it
+        let mut a = ParamState::with_shapes(vec![vec![4, 3], vec![3]], 9);
+        let mut b = ParamState::with_shapes(vec![vec![4, 3], vec![3]], 9);
+        let g: Vec<f32> = (0..a.num_scalars()).map(|i| (i as f32 - 7.0) * 0.01).collect();
+        for _ in 0..5 {
+            a.adam_step(&g, 0.05);
+            b.adam_step(&g, 0.05);
+        }
+        assert!(a.bits_eq(&b));
+        assert!(a.step == 5.0);
+        let g2: Vec<f32> = g.iter().map(|x| x + 1e-3).collect();
+        b.adam_step(&g2, 0.05);
+        a.adam_step(&g, 0.05);
+        assert!(!a.bits_eq(&b), "different gradients must diverge");
+    }
+
+    #[test]
+    fn adam_moves_params_against_gradient() {
+        let mut s = ParamState::with_shapes(vec![vec![2, 2]], 3);
+        let before = s.params[0].clone();
+        let g = vec![1.0f32, -1.0, 1.0, -1.0];
+        s.adam_step(&g, 0.1);
+        for (i, (&b, &a)) in before.iter().zip(&s.params[0]).enumerate() {
+            if g[i] > 0.0 {
+                assert!(a < b, "positive grad must decrease param {i}");
+            } else {
+                assert!(a > b, "negative grad must increase param {i}");
+            }
+        }
     }
 
     #[test]

@@ -255,7 +255,9 @@ pub fn merge_mfgs(parts: &[Mfg]) -> Mfg {
     assert!(parts.iter().all(|m| m.num_layers() == layers));
     let mut out = Mfg {
         layer_vertices: vec![Vec::new(); layers + 1],
-        layer_edges: (0..layers).map(|_| LayerEdges { offsets: vec![0], nbr_local: vec![] }).collect(),
+        layer_edges: (0..layers)
+            .map(|_| LayerEdges { offsets: vec![0], nbr_local: vec![] })
+            .collect(),
         self_pos: Some(vec![Vec::new(); layers]),
     };
     for l in 0..=layers {
@@ -345,7 +347,8 @@ mod tests {
 
     fn mfg_fixture(seed: u64) -> (crate::graph::Csr, Mfg) {
         let g = generate::chung_lu(1500, 14.0, 2.4, seed);
-        let cfg = SamplerConfig { layers: 3, fanout: 10, kappa: Kappa::Finite(1), ..Default::default() };
+        let cfg =
+            SamplerConfig { layers: 3, fanout: 10, kappa: Kappa::Finite(1), ..Default::default() };
         let mut s = cfg.build(SamplerKind::Labor0, &g, seed);
         let seeds: Vec<u32> = (0..64).collect();
         let mfg = s.sample_mfg(&seeds);

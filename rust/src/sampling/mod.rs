@@ -45,8 +45,12 @@ pub enum SamplerKind {
 }
 
 impl SamplerKind {
-    pub const ALL: [SamplerKind; 4] =
-        [SamplerKind::Neighbor, SamplerKind::Labor0, SamplerKind::LaborStar, SamplerKind::RandomWalk];
+    pub const ALL: [SamplerKind; 4] = [
+        SamplerKind::Neighbor,
+        SamplerKind::Labor0,
+        SamplerKind::LaborStar,
+        SamplerKind::RandomWalk,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -189,7 +193,15 @@ impl<'g> Sampler<'g> {
                 out,
             ),
             SamplerKind::RandomWalk => {
-                random_walk::sample(self.graph, seeds, self.cfg.fanout, self.cfg.rw, &self.rng, layer, out)
+                random_walk::sample(
+                    self.graph,
+                    seeds,
+                    self.cfg.fanout,
+                    self.cfg.rw,
+                    &self.rng,
+                    layer,
+                    out,
+                )
             }
         }
         debug_assert_eq!(out.num_seeds(), seeds.len());

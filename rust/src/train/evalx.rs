@@ -65,7 +65,8 @@ mod tests {
 
     #[test]
     fn all_wrong() {
-        let pairs: Vec<(u16, u16)> = (0..10).map(|i| ((i % 2) as u16, ((i + 1) % 2) as u16)).collect();
+        let pairs: Vec<(u16, u16)> =
+            (0..10).map(|i| ((i % 2) as u16, ((i + 1) % 2) as u16)).collect();
         let s = score(2, &pairs);
         assert_eq!(s.accuracy, 0.0);
         assert_eq!(s.macro_f1, 0.0);

@@ -9,12 +9,22 @@
 //! One [`Trainer::step`] = one PJRT execution; Python is never involved.
 //! [`evalx`] adds accuracy / macro-F1 evaluation over the
 //! validation/test splits through the forward executable.
+//!
+//! [`parallel::ParallelTrainer`] is the **multi-PE training plane**: one
+//! trainer replica per PE over a [`crate::pipeline::EngineStream`],
+//! replicated [`crate::runtime::tensors::ParamState`]s kept bit-identical
+//! by a gradient all-reduce on the fabric
+//! ([`crate::coop::all_to_all::PeEndpoint::all_reduce_f32`]) — the
+//! independent-vs-cooperative end-to-end comparison (`repro end2end`,
+//! CLI `train --train-pes N`) runs through it.
 
 pub mod trainer;
 pub mod evalx;
+pub mod parallel;
 
 pub use trainer::{StepStats, Trainer, TrainerOptions};
 pub use evalx::EvalStats;
+pub use parallel::{ParallelRunReport, ParallelStepStats, ParallelTrainer};
 
 // retained re-export: the indep-merged sampling core moved to the
 // pipeline with the rest of the batch-assembly logic

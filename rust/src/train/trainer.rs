@@ -61,6 +61,22 @@ impl Default for TrainerOptions {
 }
 
 /// Per-step statistics.
+///
+/// Stage-time semantics (every field in ms):
+///
+/// * `sample_ms` — batch drawing + MFG sampling **in the stream**. It
+///   does *not* include the stream's feature gather (that used to be
+///   folded in here, which made prefetch-overlap numbers attribute the
+///   gather to sampling).
+/// * `feature_ms` — all feature-byte movement: the stream's dense
+///   gather out of the store **plus** the trainer's prefix copy into
+///   the padded tensor.
+/// * `pad_ms` — MFG → fixed-shape block padding in the trainer.
+/// * `exec_ms` — the train-step execution + optimizer-state absorb.
+///
+/// Under `--prefetch 1` the stream stages (`sample_ms` + the gather
+/// part of `feature_ms`) overlap the previous step's `exec_ms`; the
+/// split is what makes that overlap visible in reports.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepStats {
     pub loss: f32,
@@ -74,6 +90,21 @@ pub struct StepStats {
     pub truncated_edges: usize,
     /// |S^L| actually sampled (before padding).
     pub input_vertices: usize,
+}
+
+impl StepStats {
+    /// Fold a stream-produced minibatch's stage times in: its sampling
+    /// portion becomes `sample_ms`, its gather portion joins
+    /// `feature_ms` (on top of the trainer-side copy already recorded).
+    /// Wall time the stream couldn't attribute to a stage (e.g. merge
+    /// overhead) stays with `sample_ms` so the stages still sum to the
+    /// stream's wall clock.
+    pub(crate) fn absorb_stream_times(&mut self, mb: &crate::pipeline::Minibatch) {
+        let samp: f64 = mb.per_pe.iter().map(|w| w.samp_ms).sum();
+        let feat: f64 = mb.per_pe.iter().map(|w| w.feat_ms).sum();
+        self.sample_ms = (mb.wall_ms - feat).max(samp);
+        self.feature_ms += feat;
+    }
 }
 
 /// End-to-end trainer bound to a dataset + artifact config.
@@ -171,14 +202,17 @@ impl<'d> Trainer<'d> {
     }
 
     /// Shared consumer half: pad + execute a stream-produced minibatch,
-    /// using its pre-gathered feature buffer when it ships one.
+    /// using its pre-gathered feature buffer when it ships one. Stream
+    /// stage times are split per the [`StepStats`] field semantics
+    /// (sampling vs feature gather), not lumped into `sample_ms`.
     fn step_on_batch(&mut self, mb: crate::pipeline::Minibatch) -> crate::Result<StepStats> {
         let mfg = mb
             .merged
+            .as_ref()
             .ok_or_else(|| anyhow::anyhow!("stream yields no merged MFG (measurement stream?)"))?;
         let pre = mb.per_pe.first().and_then(|w| w.features.as_deref());
-        let mut stats = self.step_on_mfg_with(&mfg, pre)?;
-        stats.sample_ms = mb.wall_ms;
+        let mut stats = self.step_on_mfg_with(mfg, pre)?;
+        stats.absorb_stream_times(&mb);
         Ok(stats)
     }
 
@@ -285,5 +319,34 @@ impl<'d> Trainer<'d> {
             }
         }
         Ok(score(self.ds.num_classes, &pairs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{Minibatch, PeWork};
+
+    /// The timing-misattribution regression: the stream's gather time
+    /// must land in `feature_ms` (on top of the trainer-side copy), not
+    /// be folded into `sample_ms`; unattributed stream wall stays with
+    /// sampling so the stages still cover the wall clock.
+    #[test]
+    fn stream_times_split_sampling_from_gather() {
+        let work = PeWork { samp_ms: 6.0, feat_ms: 3.0, ..Default::default() };
+        let mb = Minibatch { index: 0, per_pe: vec![work], merged: None, wall_ms: 10.0 };
+        let mut stats = StepStats { feature_ms: 0.5, ..Default::default() }; // trainer-side copy
+        stats.absorb_stream_times(&mb);
+        assert!((stats.feature_ms - 3.5).abs() < 1e-12, "gather + copy: {}", stats.feature_ms);
+        assert!((stats.sample_ms - 7.0).abs() < 1e-12, "wall minus gather: {}", stats.sample_ms);
+
+        // stage sum can exceed a threaded stream's wall (per-PE elapsed
+        // overlaps); sample_ms then falls back to the reported sampling
+        let work = PeWork { samp_ms: 6.0, feat_ms: 8.0, ..Default::default() };
+        let mb = Minibatch { index: 0, per_pe: vec![work], merged: None, wall_ms: 9.0 };
+        let mut stats = StepStats::default();
+        stats.absorb_stream_times(&mb);
+        assert!((stats.sample_ms - 6.0).abs() < 1e-12);
+        assert!((stats.feature_ms - 8.0).abs() < 1e-12);
     }
 }

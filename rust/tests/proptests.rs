@@ -364,3 +364,93 @@ fn prop_exec_modes_bit_identical_across_random_configs() {
         Ok(())
     });
 }
+
+#[test]
+fn prop_all_reduce_equals_sum_then_broadcast_oracle() {
+    use coopgnn::coop::all_to_all::{AllReduceStrategy, Fabric};
+    check("all_reduce", 0xA11, 30, |rng| {
+        let p = 1 + rng.next_below(6) as usize;
+        // lengths below, at, and above the PE count so ring chunking hits
+        // empty, single-element, and uneven chunks
+        let len = rng.next_below(40) as usize;
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..len).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect())
+            .collect();
+        // the serial sum-then-broadcast oracle: contributions added in
+        // ascending PE order, seeded from PE 0's buffer
+        let mut oracle = inputs[0].clone();
+        for src in 1..p {
+            for (a, &x) in oracle.iter_mut().zip(&inputs[src]) {
+                *a += x;
+            }
+        }
+        for strategy in [AllReduceStrategy::Naive, AllReduceStrategy::Ring] {
+            let endpoints = Fabric::endpoints(p);
+            let results: Vec<(Vec<f32>, u64, u64)> = std::thread::scope(|scope| {
+                let inputs = &inputs;
+                let handles: Vec<_> = endpoints
+                    .into_iter()
+                    .map(|mut ep| {
+                        let mut buf = inputs[ep.pe].clone();
+                        scope.spawn(move || {
+                            ep.all_reduce_f32(&mut buf, strategy);
+                            (buf, ep.cross_grad_reduce_bytes, ep.cross_grad_gather_bytes)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (q, (buf, _, _)) in results.iter().enumerate() {
+                prop_assert!(
+                    buf.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{strategy:?} P={p} len={len} PE {q}: result != oracle"
+                );
+            }
+            // reduce byte accounting matches (num_pes - 1) * payload_bytes
+            // per strategy: per endpoint for Naive (full-buffer broadcast),
+            // fabric-total for Ring (each element crosses to its owner once)
+            let payload = (len * 4) as u64;
+            let reduce_total: u64 = results.iter().map(|r| r.1).sum();
+            let gather_total: u64 = results.iter().map(|r| r.2).sum();
+            match strategy {
+                AllReduceStrategy::Naive => {
+                    for (q, (_, r, g)) in results.iter().enumerate() {
+                        prop_assert!(
+                            *r == (p as u64 - 1) * payload,
+                            "naive PE {q}: reduce bytes {r} != (P-1)*payload"
+                        );
+                        prop_assert!(*g == 0, "naive PE {q}: unexpected gather bytes");
+                    }
+                }
+                AllReduceStrategy::Ring => {
+                    prop_assert!(
+                        reduce_total == (p as u64 - 1) * payload,
+                        "ring reduce total {reduce_total} != (P-1)*payload {payload}*{}",
+                        p - 1
+                    );
+                    prop_assert!(
+                        gather_total == (p as u64 - 1) * payload,
+                        "ring gather total {gather_total} != (P-1)*payload"
+                    );
+                }
+            }
+            // the serial reference fabric reports the same result and the
+            // same byte totals
+            let mut ex = Exchange::new(p);
+            let mut serial = inputs.clone();
+            ex.all_reduce_f32(&mut serial, strategy);
+            for (q, s) in serial.iter().enumerate() {
+                prop_assert!(
+                    s.iter().zip(&oracle).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{strategy:?} serial PE {q} != oracle"
+                );
+            }
+            prop_assert!(
+                ex.cross_grad_reduce_bytes == reduce_total
+                    && ex.cross_grad_gather_bytes == gather_total,
+                "{strategy:?}: serial byte accounting != endpoint totals"
+            );
+        }
+        Ok(())
+    });
+}
