@@ -1,0 +1,58 @@
+//! Serving-plane demo: the same online request stream served twice —
+//! once with the naive fixed-size batcher, once with the SLO-aware
+//! adaptive batcher — over cooperative multi-PE batching. Run with:
+//!
+//! ```sh
+//! cargo run --release --example serve_demo
+//! ```
+//!
+//! Everything is virtual time (integer µs, bit-reproducible at the
+//! seed): the adaptive batcher spends latency headroom under the p99
+//! SLO to grow batches, and the paper's concavity turns that into fewer
+//! data-plane bytes per request than the fixed baseline at the same
+//! offered load.
+
+use coopgnn::coop::engine::Mode;
+use coopgnn::pipeline::PipelineBuilder;
+use coopgnn::serve::{BatcherKind, ServeConfig};
+
+fn main() -> coopgnn::Result<()> {
+    // One pipeline: the tiny test dataset, 2 cooperative PEs. The
+    // serving plane reuses its partition, feature store, row caches,
+    // and fabric through `EngineStream::batch_for_seeds`.
+    let pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Cooperative)
+        .num_pes(2)
+        .seed(42)
+        .build()?;
+    println!(
+        "serving {}: |V|={}, {} PEs, cooperative batching, 20k req/s against a 30 ms p99 SLO\n",
+        pipe.ds.name,
+        pipe.ds.graph.num_vertices(),
+        pipe.cfg.num_pes
+    );
+
+    let mut bytes = Vec::new();
+    for batcher in [BatcherKind::Fixed, BatcherKind::Adaptive] {
+        let scfg = ServeConfig {
+            rate_per_s: 20_000.0,
+            slo_us: 30_000,
+            batcher,
+            duration_batches: 12,
+            fixed_batch_per_pe: 16,
+            ..Default::default()
+        };
+        let out = pipe.server(scfg)?.run();
+        println!("--- {} batcher ---", batcher.name());
+        println!("{}\n", out.report);
+        bytes.push(out.report.bytes_per_req());
+    }
+    let (fixed, adaptive) = (bytes[0], bytes[1]);
+    println!(
+        "adaptive vs fixed bytes/request: {adaptive:.0} vs {fixed:.0} ({:.2}x less data \
+         movement at equal offered load — the paper's concave |S^L(n)| cashing out online)",
+        fixed / adaptive.max(1.0)
+    );
+    Ok(())
+}

@@ -14,7 +14,7 @@ use coopgnn::coop::indep::sample_independent;
 use coopgnn::graph::{generate, partition};
 use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::sampling::{SamplerConfig, SamplerKind};
-use coopgnn::util::json::{merge_section, Json};
+use coopgnn::util::json::{merge_section, stamped, Json};
 use coopgnn::util::rng::Pcg64;
 use coopgnn::util::stats::{bench_ms, smoke_mode, Timer};
 use std::collections::BTreeMap;
@@ -154,7 +154,9 @@ fn main() {
     section.insert("threaded_speedup_vs_serial".to_string(), Json::Num(speedup));
     section.insert("prefetch_end_to_end_gain".to_string(), Json::Num(prefetch_gain));
     let path = Path::new("BENCH_pipeline.json");
-    match merge_section(path, "bench_coop", Json::Obj(section)) {
+    // stamped: schema_version + the builder seed recipe, so artifact
+    // readers can tell when sections stop being comparable across PRs
+    match merge_section(path, "bench_coop", stamped(7, section)) {
         Ok(()) => println!("bench_coop: wrote section `bench_coop` to {}", path.display()),
         Err(e) => eprintln!("bench_coop: could not write {}: {e}", path.display()),
     }

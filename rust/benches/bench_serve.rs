@@ -1,0 +1,112 @@
+//! Serving-plane benchmark: fixed vs adaptive admission under equal
+//! offered load, independent vs cooperative batching — real CPU cost of
+//! the simulation (the executor's sampling + gathering + prediction
+//! work) next to the virtual-time scorecard (p50/p99, req/s,
+//! bytes/request). Merges a `serve` section into `BENCH_pipeline.json`
+//! (stamped with schema version + seed recipe) so the serving numbers
+//! are tracked across PRs alongside `bench_coop`/`bench_train_step`.
+//!
+//! `cargo bench --bench bench_serve` (full) / `-- --test` (CI smoke).
+
+use coopgnn::coop::engine::Mode;
+use coopgnn::pipeline::PipelineBuilder;
+use coopgnn::serve::{BatcherKind, ServeConfig};
+use coopgnn::util::json::{merge_section, stamped, Json};
+use coopgnn::util::stats::{smoke_mode, Timer};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+fn main() {
+    let smoke = smoke_mode();
+    const SEED: u64 = 7;
+    let (ds_name, pes, rate, slo_us, fixed_per_pe, duration): (_, usize, f64, u64, usize, usize) =
+        if smoke {
+            ("tiny", 2, 20_000.0, 30_000, 16, 8)
+        } else {
+            ("flickr-s", 4, 20_000.0, 50_000, 64, 32)
+        };
+
+    let mut section = BTreeMap::new();
+    section.insert("dataset".to_string(), Json::Str(ds_name.to_string()));
+    section.insert("pes".to_string(), Json::Num(pes as f64));
+    section.insert("rate_per_s".to_string(), Json::Num(rate));
+    section.insert("slo_ms".to_string(), Json::Num(slo_us as f64 / 1e3));
+    section.insert("duration_batches".to_string(), Json::Num(duration as f64));
+    section.insert("smoke".to_string(), Json::Bool(smoke));
+
+    let mut adaptive_coop_bytes = 0.0f64;
+    let mut fixed_indep_bytes = 0.0f64;
+    for mode in [Mode::Independent, Mode::Cooperative] {
+        let pipe = PipelineBuilder::new()
+            .dataset(ds_name)
+            .mode(mode)
+            .num_pes(pes)
+            .seed(SEED)
+            .build()
+            .expect("registry dataset");
+        for batcher in [BatcherKind::Fixed, BatcherKind::Adaptive] {
+            let scfg = ServeConfig {
+                rate_per_s: rate,
+                slo_us,
+                batcher,
+                duration_batches: duration,
+                fixed_batch_per_pe: fixed_per_pe,
+                ..Default::default()
+            };
+            let t = Timer::start();
+            let out = pipe.server(scfg).expect("valid serve config").run();
+            let sim_ms = t.elapsed_ms();
+            let r = out.report;
+            let label = format!("{}_{}", mode.name().to_lowercase(), batcher.name());
+            println!(
+                "serve/{ds_name}_{pes}pe {label:<16} served {:>6} in {:>3} batches \
+                 (mean {:>6.1}) | p50 {:>7.2} p99 {:>7.2} ms | {:>6.0} req/s | {:>7.0} \
+                 B/req | sim {sim_ms:>8.1} ms CPU (executor {:>7.1} ms)",
+                r.served,
+                r.batches,
+                r.mean_batch,
+                r.p50_ms,
+                r.p99_ms,
+                r.requests_per_s,
+                r.bytes_per_req(),
+                out.exec_wall_ms
+            );
+            if mode == Mode::Cooperative && batcher == BatcherKind::Adaptive {
+                adaptive_coop_bytes = r.bytes_per_req();
+            }
+            if mode == Mode::Independent && batcher == BatcherKind::Fixed {
+                fixed_indep_bytes = r.bytes_per_req();
+            }
+            let mut arm = BTreeMap::new();
+            arm.insert("served".to_string(), Json::Num(r.served as f64));
+            arm.insert("mean_batch".to_string(), Json::Num(r.mean_batch));
+            arm.insert("p50_ms".to_string(), Json::Num(r.p50_ms));
+            arm.insert("p90_ms".to_string(), Json::Num(r.p90_ms));
+            arm.insert("p99_ms".to_string(), Json::Num(r.p99_ms));
+            arm.insert("requests_per_s".to_string(), Json::Num(r.requests_per_s));
+            arm.insert("bytes_per_req".to_string(), Json::Num(r.bytes_per_req()));
+            arm.insert("slo_violation_rate".to_string(), Json::Num(r.slo_violation_rate));
+            arm.insert("sim_cpu_ms".to_string(), Json::Num(sim_ms));
+            arm.insert("executor_cpu_ms".to_string(), Json::Num(out.exec_wall_ms));
+            section.insert(label, Json::Obj(arm));
+        }
+    }
+    let gain =
+        if adaptive_coop_bytes > 0.0 { fixed_indep_bytes / adaptive_coop_bytes } else { 0.0 };
+    println!(
+        "serve/{ds_name}_{pes}pe bytes-per-request check: fixed-indep {fixed_indep_bytes:.0} vs \
+         adaptive-coop {adaptive_coop_bytes:.0} -> {gain:.2}x: {}",
+        if gain > 1.0 {
+            "COOPERATIVE (adaptive coop moves fewer bytes per request at equal load)"
+        } else {
+            "WARNING: no bytes-per-request win (config too small?)"
+        }
+    );
+    section.insert("adaptive_coop_bytes_gain".to_string(), Json::Num(gain));
+
+    let path = Path::new("BENCH_pipeline.json");
+    match merge_section(path, "serve", stamped(SEED, section)) {
+        Ok(()) => println!("bench_serve: wrote section `serve` to {}", path.display()),
+        Err(e) => eprintln!("bench_serve: could not write {}: {e}", path.display()),
+    }
+}

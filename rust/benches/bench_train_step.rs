@@ -39,7 +39,7 @@ use coopgnn::pipeline::{
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{block, SamplerConfig, SamplerKind};
 use coopgnn::train::Trainer;
-use coopgnn::util::json::{merge_section, Json};
+use coopgnn::util::json::{merge_section, stamped, Json};
 use coopgnn::util::stats::{bench_ms, smoke_mode, Summary, Timer};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -250,7 +250,10 @@ fn main() {
     section.insert("checksums_identical".to_string(), Json::Bool(true));
     section.insert("multi_pe_train".to_string(), Json::Obj(multi));
     let json_path = Path::new("BENCH_pipeline.json");
-    match merge_section(json_path, "bench_train_step", Json::Obj(section)) {
+    // stamped: schema_version + the builder seed recipe (all arms above
+    // build with seed 1), closing the "artifacts silently became
+    // incomparable when seed derivation changed" caveat
+    match merge_section(json_path, "bench_train_step", stamped(1, section)) {
         Ok(()) => {
             println!("bench_train_step: wrote section `bench_train_step` to {}",
                 json_path.display())

@@ -45,7 +45,13 @@
 //!   `repro end2end` and `train --train-pes N` run through it, natively
 //!   in this build;
 //! * κ > 1 dependent minibatching is a [`sampling::Kappa`] knob on the
-//!   same streams.
+//!   same streams;
+//! * [`serve`] is the **online inference serving plane**: a virtual-time
+//!   (integer-µs, bit-reproducible) request simulator whose SLO-aware
+//!   dynamic batcher admits arrivals into cooperative engine batches via
+//!   [`pipeline::EngineStream::batch_for_seeds`], with per-PE caches
+//!   staying warm *across* request batches — `serve` on the CLI,
+//!   `repro serve` for the indep/coop × fixed/adaptive matrix.
 //!
 //! ## Truly parallel cooperative engine
 //!
@@ -103,6 +109,7 @@ pub mod costmodel;
 pub mod metrics;
 pub mod runtime;
 pub mod train;
+pub mod serve;
 pub mod repro;
 
 /// Crate-wide result alias (anyhow is the only non-xla dependency).

@@ -8,6 +8,8 @@
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
 //!               [--exec serial|threaded]
+//! coopgnn serve --rate R --slo-ms MS --batcher fixed|adaptive
+//!               [--duration-batches N] [--pes P] [--mode coop|indep]
 //! coopgnn caps --dataset NAME --batch B [--sampler S]
 //! coopgnn info
 //! ```
@@ -25,6 +27,7 @@ use coopgnn::pipeline::{with_prefetch, Partitioner, PipelineBuilder, DEFAULT_SEE
 use coopgnn::repro::{self, Ctx};
 use coopgnn::runtime::{Manifest, Runtime};
 use coopgnn::sampling::{block, Kappa, SamplerConfig, SamplerKind};
+use coopgnn::serve::{BatcherKind, ServeConfig, WorkloadKind};
 use coopgnn::train::{StepStats, Trainer};
 use std::path::PathBuf;
 
@@ -81,6 +84,26 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
 ];
 
+const SERVE_SPECS: &[ArgSpec] = &[
+    val("dataset", "registry dataset (default: tiny)"),
+    val("pes", "number of PEs (default: 4)"),
+    val("mode", "coop|indep minibatching of admitted batches (default: coop)"),
+    val("exec", "serial|threaded (default: threaded)"),
+    val("rate", "offered load, requests per virtual second (default: 2000)"),
+    val("slo-ms", "p99 latency objective in virtual ms (default: 50)"),
+    val("batcher", "fixed|adaptive admission policy (default: adaptive)"),
+    val("duration-batches", "stop after N dispatched batches (default: 32)"),
+    val("batch", "fixed baseline's per-PE batch size; adaptive cap = 4x (default: 32)"),
+    val("workload", "open|closed arrival discipline (default: open)"),
+    val("clients", "logical clients / closed-loop population (default: 64)"),
+    val("hot", "probability a request targets the 5% hot set (default: 0.8)"),
+    val("preset", "cost-model system: 4xA100|8xA100|16xV100 (default: 4xA100)"),
+    val("kappa", "batch dependency K or `inf` for the samplers (default: 1)"),
+    val("cache", "LRU rows per PE; 0 = no cache (default: derived)"),
+    val("prefetch", "0|1 overlap batch t's predictions with batch t+1's admission (default: 0)"),
+    val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+];
+
 const CAPS_SPECS: &[ArgSpec] = &[
     val("dataset", "registry dataset (default: tiny)"),
     val("batch", "batch size (default: 256)"),
@@ -111,6 +134,7 @@ fn real_main() -> coopgnn::Result<()> {
         }
         "train" => cmd_train(&ArgMap::parse(&argv[1..], TRAIN_SPECS)?),
         "engine" => cmd_engine(&ArgMap::parse(&argv[1..], ENGINE_SPECS)?),
+        "serve" => cmd_serve(&ArgMap::parse(&argv[1..], SERVE_SPECS)?),
         "caps" => cmd_caps(&ArgMap::parse(&argv[1..], CAPS_SPECS)?),
         "info" => cmd_info(),
         "help" | "--help" | "-h" => {
@@ -370,6 +394,75 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
     Ok(())
 }
 
+/// The online inference serving plane: a virtual-time simulation of
+/// SLO-aware dynamic cooperative batching (`coopgnn serve`). Bit
+/// reproducible at a fixed seed — `--exec`/`--prefetch` change real CPU
+/// scheduling, never the ledger.
+fn cmd_serve(args: &ArgMap) -> coopgnn::Result<()> {
+    let mut b = PipelineBuilder::new()
+        .dataset(args.get_or("dataset", "tiny"))
+        .mode(
+            Mode::parse(args.get_or("mode", "coop"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mode (coop|indep)"))?,
+        )
+        .exec(
+            ExecMode::parse(args.get_or("exec", "threaded"))
+                .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
+        )
+        .num_pes(args.or("pes", 4usize)?)
+        .kappa(
+            Kappa::parse(args.get_or("kappa", "1"))
+                .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
+        )
+        .prefetch(args.bool01("prefetch", false)?)
+        .seed(args.or("seed", DEFAULT_SEED)?);
+    if let Some(cache) = args.opt::<usize>("cache")? {
+        b = b.cache_per_pe(cache);
+    }
+    let pipe = b.build()?;
+    let slo_ms = args.or("slo-ms", 50.0f64)?;
+    anyhow::ensure!(slo_ms > 0.0, "--slo-ms must be positive");
+    let scfg = ServeConfig {
+        rate_per_s: args.or("rate", 2000.0f64)?,
+        slo_us: (slo_ms * 1e3).round() as u64,
+        batcher: BatcherKind::parse(args.get_or("batcher", "adaptive"))
+            .ok_or_else(|| anyhow::anyhow!("bad --batcher (fixed|adaptive)"))?,
+        duration_batches: args.or("duration-batches", 32usize)?,
+        fixed_batch_per_pe: args.or("batch", 32usize)?,
+        workload: WorkloadKind::parse(args.get_or("workload", "open"))
+            .ok_or_else(|| anyhow::anyhow!("bad --workload (open|closed)"))?,
+        clients: args.or("clients", 64usize)?,
+        hot_prob: args.or("hot", 0.8f64)?,
+        preset: coopgnn::costmodel::preset(args.get_or("preset", "4xA100"))
+            .ok_or_else(|| anyhow::anyhow!("bad --preset (4xA100|8xA100|16xV100)"))?,
+        ..ServeConfig::default()
+    };
+    println!(
+        "serving {} with {} {}-PE batching: {} workload at {:.0} req/s, SLO {:.1} ms, \
+         {} batcher, {} batches ({} exec{})",
+        pipe.ds.name,
+        pipe.cfg.mode.name(),
+        pipe.cfg.num_pes,
+        scfg.workload.name(),
+        scfg.rate_per_s,
+        slo_ms,
+        scfg.batcher.name(),
+        scfg.duration_batches,
+        pipe.cfg.exec.name(),
+        if pipe.cfg.prefetch { ", prediction prefetch on" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let out = pipe.server(scfg)?.run();
+    println!("{}", out.report);
+    println!(
+        "(simulated in {:.2}s real time; executor CPU {:.1} ms — measured, never consulted \
+         by the virtual clock)",
+        t0.elapsed().as_secs_f64(),
+        out.exec_wall_ms
+    );
+    Ok(())
+}
+
 fn cmd_caps(args: &ArgMap) -> coopgnn::Result<()> {
     let kind = SamplerKind::parse(args.get_or("sampler", "labor0"))
         .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?;
@@ -435,7 +528,7 @@ fn print_usage() {
          \n\
          USAGE:\n\
          \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|\n\
-         \x20        end2end|all> [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
+         \x20        end2end|serve|all> [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
          \x20        [--exec serial|threaded]\n\
          \x20 coopgnn train --config NAME [--steps N] [--kappa K|inf] [--sampler ns|labor0|labor*|rw]\n\
          \x20        [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
@@ -446,6 +539,11 @@ fn print_usage() {
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
          \x20        [--prefetch 0|1]\n\
+         \x20 coopgnn serve [--dataset NAME] [--pes P] [--mode coop|indep] [--rate R]\n\
+         \x20        [--slo-ms MS] [--batcher fixed|adaptive] [--duration-batches N]\n\
+         \x20        [--batch B] [--workload open|closed] [--kappa K] [--cache ROWS]\n\
+         \x20        [--exec serial|threaded] [--prefetch 0|1]\n\
+         \x20        (online inference: virtual-time SLO-aware dynamic cooperative batching)\n\
          \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
          \x20 coopgnn info"
     );

@@ -26,10 +26,18 @@
 //!   behind a producer thread (`--prefetch 1`): batch t+1's sampling +
 //!   gathering overlaps batch t's consumption, bit-identically.
 //!
-//! Every entry stack — CLI `engine`/`train`, the repro harnesses,
-//! `bench_coop`/`bench_train_step`, and all four examples — builds its
-//! run through here, so a new workload is a one-line consumer change
-//! rather than a fifth stack.
+//! [`EngineStream`] is also the **reusable service core**: besides the
+//! training-shard `next_batch` path it exposes
+//! [`EngineStream::batch_for_seeds`], which executes a batch for an
+//! *explicit* per-PE seed assignment over the same persistent
+//! samplers/caches/fabric — the entry point the serving plane
+//! ([`crate::serve`], [`config::Pipeline::server`]) drives with online
+//! request vertices.
+//!
+//! Every entry stack — CLI `engine`/`train`/`serve`, the repro
+//! harnesses, `bench_coop`/`bench_train_step`/`bench_serve`, and all
+//! examples — builds its run through here, so a new workload is a
+//! one-line consumer change rather than a fifth stack.
 //!
 //! ```no_run
 //! use coopgnn::coop::engine::Mode;

@@ -338,17 +338,12 @@ impl<'d> EngineStream<'d> {
         Arc::clone(&self.store)
     }
 
-    /// Single-threaded reference: all PEs' work inline, batch stage
-    /// times assigned to the first record so the cross-PE sum keeps its
-    /// meaning.
-    fn next_serial(&mut self) -> Vec<PeWork> {
-        let p_count = self.samplers.len();
-        let layers = self.layers;
+    /// Draw this batch's per-PE seed vertices from the training shards
+    /// (each PE's own seed-RNG stream; identical values in serial and
+    /// threaded mode because every PE only ever touches its own RNG).
+    fn draw_seeds(&mut self) -> Vec<Vec<VertexId>> {
         let b = self.batch_per_pe;
-        let measuring = self.index >= self.warmup_batches;
-        let row_bytes = self.store.row_bytes() as u64;
-        let per_pe_seeds: Vec<Vec<VertexId>> = self
-            .shards
+        self.shards
             .iter()
             .zip(self.seed_rngs.iter_mut())
             .map(|(shard, rng)| {
@@ -358,7 +353,57 @@ impl<'d> EngineStream<'d> {
                     .map(|i| shard[i as usize])
                     .collect()
             })
-            .collect();
+            .collect()
+    }
+
+    /// Produce one minibatch for an **explicit** per-PE seed assignment,
+    /// advancing the per-PE sampler/cache/fabric state exactly like
+    /// [`MinibatchStream::next_batch`] but leaving the training-shard
+    /// seed RNGs untouched. This is the reusable service core of the
+    /// engine: the serving plane ([`crate::serve`]) admits online
+    /// requests, assigns each to a PE (by owner in cooperative mode,
+    /// round-robin in independent mode), and executes the batch through
+    /// this entry point — per-PE sampling, row-carrying fabric exchange,
+    /// and LRU caches that stay warm *across* batches, exactly like
+    /// κ-dependent minibatching.
+    ///
+    /// Cooperative mode requires `per_pe_seeds[p] ⊆ V_p` (asserted by
+    /// the cooperative sampler's ownership invariant); both modes accept
+    /// empty per-PE lists (a PE with no work still participates in every
+    /// all-to-all round). Explicit-seed batches never feed the engine
+    /// reduction's duplication-factor union, so the independent-mode
+    /// `S^L` vertex lists are not retained (`PeWork::input_vertices`
+    /// stays `None`).
+    pub fn batch_for_seeds(&mut self, per_pe_seeds: Vec<Vec<VertexId>>) -> Minibatch {
+        self.batch_inner(per_pe_seeds, false)
+    }
+
+    /// Shared core of [`MinibatchStream::next_batch`] and
+    /// [`EngineStream::batch_for_seeds`]: `keep_inputs` retains each
+    /// independent-mode PE's `S^L` list for the engine's
+    /// duplication-factor union (measured training batches only).
+    fn batch_inner(&mut self, per_pe_seeds: Vec<Vec<VertexId>>, keep_inputs: bool) -> Minibatch {
+        assert_eq!(per_pe_seeds.len(), self.samplers.len(), "seed assignment/PE mismatch");
+        let (per_pe, wall_ms) = match self.exec {
+            ExecMode::Serial => {
+                let wall = Timer::start();
+                let per_pe = self.batch_serial(per_pe_seeds, keep_inputs);
+                (per_pe, wall.elapsed_ms())
+            }
+            ExecMode::Threaded => self.batch_threaded(per_pe_seeds, keep_inputs),
+        };
+        let index = self.index;
+        self.index += 1;
+        Minibatch { index, per_pe, merged: None, wall_ms }
+    }
+
+    /// Single-threaded reference: all PEs' work inline, batch stage
+    /// times assigned to the first record so the cross-PE sum keeps its
+    /// meaning.
+    fn batch_serial(&mut self, per_pe_seeds: Vec<Vec<VertexId>>, keep_inputs: bool) -> Vec<PeWork> {
+        let p_count = self.samplers.len();
+        let layers = self.layers;
+        let row_bytes = self.store.row_bytes() as u64;
 
         let (mut per_pe, samp_ms, feat_ms): (Vec<PeWork>, f64, f64) = match self.mode {
             Mode::Cooperative => {
@@ -406,7 +451,7 @@ impl<'d> EngineStream<'d> {
                     .zip(self.caches.iter_mut())
                     .map(|(mfg, cache)| {
                         let load = load_indep_pe(mfg.input_vertices(), cache, &self.store);
-                        indep_pe_work(mfg, layers, measuring, row_bytes, load)
+                        indep_pe_work(mfg, layers, keep_inputs, row_bytes, load)
                     })
                     .collect();
                 (per_pe, samp_ms, t.elapsed_ms())
@@ -421,26 +466,29 @@ impl<'d> EngineStream<'d> {
     }
 
     /// Thread-per-PE runtime: one scoped OS thread per PE for this
-    /// batch; each owns its sampler, seed-RNG stream, row cache, store
-    /// shard, and fabric endpoint (all persistent in the stream between
-    /// batches), exchanging ids — and feature-row payloads — over the
-    /// live channels.
+    /// batch; each owns its sampler, row cache, store shard, and fabric
+    /// endpoint (all persistent in the stream between batches),
+    /// exchanging ids — and feature-row payloads — over the live
+    /// channels. Seeds arrive precomputed from the caller (drawn from
+    /// the per-PE seed RNGs by [`MinibatchStream::next_batch`], or
+    /// assigned explicitly by [`EngineStream::batch_for_seeds`]).
     ///
     /// Returns the per-PE records plus the batch wall-clock, measured
     /// from a start barrier inside the threads (max over PEs of
     /// barrier→done), so thread spawn/join overhead does not bias the
     /// threaded-vs-serial comparison — the same barrier-to-barrier
     /// semantics as the PR-1 thread-per-run engine.
-    fn next_threaded(&mut self) -> (Vec<PeWork>, f64) {
+    fn batch_threaded(
+        &mut self,
+        per_pe_seeds: Vec<Vec<VertexId>>,
+        keep_inputs: bool,
+    ) -> (Vec<PeWork>, f64) {
         let mode = self.mode;
         let layers = self.layers;
-        let b = self.batch_per_pe;
-        let measuring = self.index >= self.warmup_batches;
         let graph = self.graph;
         let part = self.part;
         let store: &PartitionedFeatureStore = &self.store;
         let row_bytes = store.row_bytes() as u64;
-        let shards = &self.shards;
         let start = std::sync::Barrier::new(self.samplers.len());
         let start = &start;
         let results: Vec<(PeWork, f64)> = std::thread::scope(|scope| {
@@ -448,22 +496,15 @@ impl<'d> EngineStream<'d> {
                 .samplers
                 .iter_mut()
                 .zip(self.caches.iter_mut())
-                .zip(self.seed_rngs.iter_mut())
                 .zip(self.endpoints.iter_mut())
-                .zip(shards.iter())
-                .map(|((((sampler, cache), seed_rng), ep), shard)| {
+                .zip(per_pe_seeds)
+                .map(|(((sampler, cache), ep), seeds)| {
                     scope.spawn(move || {
                         let _abort_guard = AbortOnPeerPanic;
                         // align all PEs so the wall timer sees the true
                         // concurrent latency of this batch
                         start.wait();
                         let wall = Timer::start();
-                        let k = b.min(shard.len());
-                        let seeds: Vec<VertexId> = seed_rng
-                            .sample_distinct(shard.len(), k)
-                            .into_iter()
-                            .map(|i| shard[i as usize])
-                            .collect();
                         let pw = match mode {
                             Mode::Cooperative => {
                                 let ep = ep.as_mut().expect("coop threaded stream has endpoints");
@@ -495,7 +536,7 @@ impl<'d> EngineStream<'d> {
                                 let t = Timer::start();
                                 let load = load_indep_pe(mfg.input_vertices(), cache, store);
                                 let mut pw =
-                                    indep_pe_work(&mfg, layers, measuring, row_bytes, load);
+                                    indep_pe_work(&mfg, layers, keep_inputs, row_bytes, load);
                                 pw.samp_ms = samp_ms;
                                 pw.feat_ms = t.elapsed_ms();
                                 pw
@@ -518,17 +559,11 @@ impl<'d> EngineStream<'d> {
 
 impl MinibatchStream for EngineStream<'_> {
     fn next_batch(&mut self) -> Minibatch {
-        let (per_pe, wall_ms) = match self.exec {
-            ExecMode::Serial => {
-                let wall = Timer::start();
-                let per_pe = self.next_serial();
-                (per_pe, wall.elapsed_ms())
-            }
-            ExecMode::Threaded => self.next_threaded(),
-        };
-        let index = self.index;
-        self.index += 1;
-        Minibatch { index, per_pe, merged: None, wall_ms }
+        // warmup batches are never reduced, so their S^L input-vertex
+        // lists are not retained
+        let measuring = self.index >= self.warmup_batches;
+        let per_pe_seeds = self.draw_seeds();
+        self.batch_inner(per_pe_seeds, measuring)
     }
 
     fn num_pes(&self) -> usize {

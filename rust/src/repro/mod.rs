@@ -17,6 +17,7 @@
 //! | `fig9`    | Fig. 9 coop-vs-indep converg.  | [`fig9`] |
 //! | `scaling` | §4.3 F/B vs #cooperating PEs   | [`scaling`] |
 //! | `end2end` | §4 end-to-end coop-vs-indep ms/step + bytes/step | [`end2end`] |
+//! | `serve`   | online serving matrix: indep/coop × fixed/adaptive batcher | [`serve`] |
 
 pub mod fig3;
 pub mod table3;
@@ -26,6 +27,7 @@ pub mod table7;
 pub mod fig9;
 pub mod scaling;
 pub mod end2end;
+pub mod serve;
 
 use crate::coop::engine::ExecMode;
 use std::path::PathBuf;
@@ -71,10 +73,11 @@ pub fn run(id: &str, ctx: &Ctx) -> crate::Result<()> {
         "fig9" => fig9::run(ctx),
         "scaling" => scaling::run(ctx),
         "end2end" => end2end::run(ctx),
+        "serve" => serve::run(ctx),
         "all" => {
             let ids = [
-                "fig3", "fig5a", "fig5b", "table4", "table7", "scaling", "end2end", "fig9",
-                "table3",
+                "fig3", "fig5a", "fig5b", "table4", "table7", "scaling", "end2end", "serve",
+                "fig9", "table3",
             ];
             for id in ids {
                 println!("=== repro {id} ===");
@@ -84,7 +87,7 @@ pub fn run(id: &str, ctx: &Ctx) -> crate::Result<()> {
         }
         other => anyhow::bail!(
             "unknown experiment `{other}`; try fig3 table3 fig5a fig5b table4 table7 fig9 scaling \
-             end2end all"
+             end2end serve all"
         ),
     }
 }

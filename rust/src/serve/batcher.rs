@@ -1,0 +1,384 @@
+//! Dynamic batch admission under a p99 latency SLO.
+//!
+//! The paper's Theorem 3.1/3.2 concavity — `E[|S^L(n)|]` grows strictly
+//! sublinearly in the batch size `n` — means the *marginal* sampling +
+//! feature-loading + forward cost of one more queued request falls as
+//! the batch grows. An online server can therefore spend latency
+//! headroom to buy work efficiency: hold requests back, let the batch
+//! grow, and dispatch at the last moment the SLO allows.
+//!
+//! Two admission policies share one interface:
+//!
+//! * [`BatcherKind::Fixed`] — the classic baseline: dispatch as soon as
+//!   `B` requests are queued, or flush a partial batch once the oldest
+//!   request has waited half the SLO (so low load cannot starve it).
+//! * [`BatcherKind::Adaptive`] — SLO-deadline batching with cost-model
+//!   look-ahead: given `q` queued requests, consult the calibrated
+//!   [`CostCurve`] (counts from a probe sweep pushed through the
+//!   [`crate::costmodel`] bandwidths, continuously corrected by observed
+//!   service times) for the modeled service time `ŝ(q)`, and dispatch
+//!   only when `now ≥ oldest_arrival + SLO − ŝ(q) − margin` — i.e. wait
+//!   exactly as long as the p99 budget permits, no longer. Every new
+//!   arrival re-evaluates the deadline with a larger `q` (and a larger
+//!   `ŝ`), so the wait shrinks as the batch grows; a hard cap
+//!   ([`ADAPTIVE_CAP_FACTOR`]`·B·P`) bounds the executor's working set.
+//!
+//! Decisions are pure functions of virtual time + queue state — no
+//! wall-clock, no hidden state beyond the deterministic EWMA correction
+//! — so admission sequences are bit-reproducible.
+
+use super::executor::{stage_us, BATCH_OVERHEAD_US};
+use crate::costmodel::{ModelCost, SystemPreset};
+use crate::graph::Csr;
+use crate::sampling::{SamplerConfig, SamplerKind};
+use crate::util::rng::Pcg64;
+
+/// Admission policy selector (CLI `--batcher fixed|adaptive`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatcherKind {
+    Fixed,
+    Adaptive,
+}
+
+impl BatcherKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BatcherKind::Fixed => "fixed",
+            BatcherKind::Adaptive => "adaptive",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BatcherKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "fixed" => Some(BatcherKind::Fixed),
+            "adaptive" | "slo" => Some(BatcherKind::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// The adaptive batcher may grow a batch to this multiple of the fixed
+/// baseline's global size before dispatching unconditionally.
+pub const ADAPTIVE_CAP_FACTOR: usize = 4;
+
+/// What the batcher wants done right now. The server consults the
+/// batcher whenever the executor is free and the queue is non-empty.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Decision {
+    /// Admit the first `n` queued requests (FIFO prefix — per-requester
+    /// order is preserved by construction).
+    Dispatch(usize),
+    /// Hold; re-consult at this virtual timestamp unless an arrival
+    /// triggers an earlier re-evaluation. Always strictly in the future.
+    WaitUntil(u64),
+}
+
+/// Modeled service time as a function of global batch size — the
+/// concave cost curve the adaptive policy consults.
+///
+/// Calibrated offline (at server construction) by sampling one probe
+/// MFG per grid size with a throwaway sampler, splitting the global
+/// counts evenly across PEs, assuming cold caches (every requested row
+/// is a storage read), and pushing the per-PE counts through the
+/// [`crate::costmodel`] bandwidth constants. That is an upper bound on
+/// the live regime — warm κ-style caches and cooperative deduplication
+/// only shave it — so [`Batcher::observe`]'s EWMA correction factor
+/// (observed/predicted) adapts the curve to what the executor actually
+/// measures.
+#[derive(Clone, Debug)]
+pub struct CostCurve {
+    /// global batch sizes of the probe grid, ascending.
+    sizes: Vec<f64>,
+    /// modeled service µs at each grid size (includes dispatch
+    /// overhead).
+    us: Vec<f64>,
+}
+
+impl CostCurve {
+    /// Probe a geometric grid of global batch sizes up to `cap_global`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn calibrate(
+        graph: &Csr,
+        kind: SamplerKind,
+        scfg: &SamplerConfig,
+        feat_dim: usize,
+        num_pes: usize,
+        preset: &SystemPreset,
+        model: &ModelCost,
+        cap_global: usize,
+        seed: u64,
+    ) -> CostCurve {
+        let nv = graph.num_vertices();
+        let mut grid: Vec<usize> = Vec::new();
+        let mut n = num_pes.max(1);
+        while n < cap_global {
+            grid.push(n);
+            n *= 2;
+        }
+        grid.push(cap_global.max(num_pes.max(1)));
+        grid.dedup();
+        let mut probe_rng = Pcg64::new(seed ^ 0xCA11B);
+        let p = num_pes.max(1) as f64;
+        let row_bytes = (feat_dim * 4) as f64;
+        let (sizes, us): (Vec<f64>, Vec<f64>) = grid
+            .iter()
+            .map(|&n| {
+                let mut sampler = scfg.build(kind, graph, seed ^ 0x90BE);
+                let seeds: Vec<u32> = probe_rng.sample_distinct(nv, n.min(nv));
+                let mfg = sampler.sample_mfg(&seeds);
+                let s: Vec<f64> =
+                    mfg.vertex_counts().iter().map(|&c| c as f64 / p).collect();
+                let e: Vec<f64> = mfg.edge_counts().iter().map(|&c| c as f64 / p).collect();
+                let requested = s[s.len() - 1];
+                let t = BATCH_OVERHEAD_US
+                    + stage_us(&s, &e, 0.0, requested * row_bytes, 0.0, feat_dim, preset, model);
+                (n as f64, t)
+            })
+            .unzip();
+        CostCurve { sizes, us }
+    }
+
+    /// A hand-built curve (tests / synthetic policies).
+    pub fn from_points(sizes: Vec<f64>, us: Vec<f64>) -> CostCurve {
+        assert_eq!(sizes.len(), us.len());
+        assert!(!sizes.is_empty(), "curve needs at least one point");
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]), "sizes must ascend");
+        CostCurve { sizes, us }
+    }
+
+    /// Modeled service µs at global batch size `n`: piecewise-linear
+    /// interpolation on the grid, last-segment extrapolation above it,
+    /// clamped to the first point below it.
+    pub fn service_us(&self, n: usize) -> f64 {
+        let x = n as f64;
+        let k = self.sizes.len();
+        if k == 1 || x <= self.sizes[0] {
+            return self.us[0];
+        }
+        // segment whose right end is the first grid size >= x (the last
+        // segment extrapolates beyond the grid)
+        let hi = self.sizes.iter().position(|&s| s >= x).unwrap_or(k - 1).max(1);
+        let (x0, x1) = (self.sizes[hi - 1], self.sizes[hi]);
+        let (y0, y1) = (self.us[hi - 1], self.us[hi]);
+        y0 + (x - x0) / (x1 - x0) * (y1 - y0)
+    }
+}
+
+/// The admission policy object: one per server run.
+pub struct Batcher {
+    kind: BatcherKind,
+    /// the fixed baseline's global dispatch size `B·P`.
+    fixed_global: usize,
+    /// adaptive hard cap ([`ADAPTIVE_CAP_FACTOR`]`·fixed_global`).
+    cap_global: usize,
+    slo_us: u64,
+    curve: CostCurve,
+    /// EWMA of observed/modeled service time (starts at 1.0).
+    correction: f64,
+}
+
+impl Batcher {
+    pub fn new(kind: BatcherKind, fixed_global: usize, slo_us: u64, curve: CostCurve) -> Batcher {
+        assert!(fixed_global >= 1, "fixed batch size must be >= 1");
+        assert!(slo_us >= 1, "SLO must be positive");
+        Batcher {
+            kind,
+            fixed_global,
+            cap_global: fixed_global * ADAPTIVE_CAP_FACTOR,
+            slo_us,
+            curve,
+            correction: 1.0,
+        }
+    }
+
+    pub fn kind(&self) -> BatcherKind {
+        self.kind
+    }
+
+    /// Largest batch this policy will ever dispatch.
+    pub fn cap_global(&self) -> usize {
+        match self.kind {
+            BatcherKind::Fixed => self.fixed_global,
+            BatcherKind::Adaptive => self.cap_global,
+        }
+    }
+
+    /// Current corrected service-time estimate for a global batch of
+    /// `n` (µs).
+    pub fn estimate_us(&self, n: usize) -> f64 {
+        self.curve.service_us(n) * self.correction
+    }
+
+    /// Admission decision. The server calls this only when the executor
+    /// is free and at least one request is queued (`queue_len >= 1`,
+    /// `oldest_arrival_us <= now_us`).
+    pub fn decide(&self, now_us: u64, queue_len: usize, oldest_arrival_us: u64) -> Decision {
+        debug_assert!(queue_len >= 1);
+        debug_assert!(oldest_arrival_us <= now_us);
+        match self.kind {
+            BatcherKind::Fixed => {
+                if queue_len >= self.fixed_global {
+                    return Decision::Dispatch(self.fixed_global);
+                }
+                // flush a partial batch after half the SLO so low
+                // offered load cannot starve the oldest request
+                let deadline = oldest_arrival_us + self.slo_us / 2;
+                if now_us >= deadline {
+                    Decision::Dispatch(queue_len)
+                } else {
+                    Decision::WaitUntil(deadline)
+                }
+            }
+            BatcherKind::Adaptive => {
+                let q = queue_len.min(self.cap_global);
+                if q >= self.cap_global {
+                    return Decision::Dispatch(self.cap_global);
+                }
+                // last safe dispatch moment for the oldest request:
+                // its wait + modeled service + margin must fit the SLO.
+                // Each arrival re-evaluates with a larger q (and larger
+                // ŝ), so the deadline only moves earlier as load grows.
+                let margin = self.slo_us / 8;
+                let s_hat = self.estimate_us(q).round() as u64;
+                let budget = self.slo_us.saturating_sub(s_hat + margin);
+                let deadline = oldest_arrival_us + budget;
+                if now_us >= deadline {
+                    Decision::Dispatch(q)
+                } else {
+                    Decision::WaitUntil(deadline)
+                }
+            }
+        }
+    }
+
+    /// Feed back a dispatched batch's modeled-from-measurement service
+    /// time so the curve tracks the live regime (warm caches,
+    /// cooperative dedup, real arrival mix). Deterministic EWMA.
+    pub fn observe(&mut self, batch_size: usize, actual_service_us: u64) {
+        let predicted = self.curve.service_us(batch_size);
+        if predicted > 0.0 {
+            let r = actual_service_us as f64 / predicted;
+            self.correction = 0.7 * self.correction + 0.3 * r;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::costmodel;
+    use crate::graph::generate;
+
+    fn toy_curve() -> CostCurve {
+        // overhead 100µs + concave-ish work term
+        let sizes = [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        let us: Vec<f64> = sizes.iter().map(|n| 100.0 + 30.0 * n.powf(0.8)).collect();
+        CostCurve::from_points(sizes.to_vec(), us)
+    }
+
+    #[test]
+    fn calibrated_curve_is_increasing_and_concave() {
+        let g = generate::chung_lu(4000, 10.0, 2.5, 3);
+        let scfg = SamplerConfig::default();
+        let preset = costmodel::preset("4xA100").unwrap();
+        let model = ModelCost::gcn(64, 128);
+        let curve = CostCurve::calibrate(
+            &g,
+            SamplerKind::Labor0,
+            &scfg,
+            64,
+            4,
+            preset,
+            &model,
+            512,
+            11,
+        );
+        let (a, b, c) = (curve.service_us(32), curve.service_us(64), curve.service_us(128));
+        assert!(a < b && b < c, "more requests, more modeled work: {a} {b} {c}");
+        // concavity (the paper's Theorem 3.1 shape): doubling the batch
+        // must cost strictly less than doubling the time
+        assert!(b < 2.0 * a, "concave step 32→64: {b} vs {a}");
+        assert!(c < 2.0 * b, "concave step 64→128: {c} vs {b}");
+        // per-request cost falls with batch size
+        assert!(c / 128.0 < a / 32.0, "amortization must improve");
+    }
+
+    #[test]
+    fn curve_interpolates_and_extrapolates() {
+        let c = CostCurve::from_points(vec![2.0, 4.0], vec![10.0, 14.0]);
+        assert_eq!(c.service_us(2), 10.0);
+        assert_eq!(c.service_us(3), 12.0);
+        assert_eq!(c.service_us(4), 14.0);
+        assert_eq!(c.service_us(1), 10.0, "clamped below the grid");
+        assert_eq!(c.service_us(6), 18.0, "last-segment extrapolation");
+    }
+
+    #[test]
+    fn fixed_dispatches_at_size_or_flush_deadline() {
+        let b = Batcher::new(BatcherKind::Fixed, 8, 10_000, toy_curve());
+        assert_eq!(b.decide(100, 8, 50), Decision::Dispatch(8));
+        assert_eq!(b.decide(100, 20, 50), Decision::Dispatch(8), "never more than B");
+        // partial queue: wait until oldest + slo/2 …
+        assert_eq!(b.decide(100, 3, 50), Decision::WaitUntil(5_050));
+        // … then flush whatever is there
+        assert_eq!(b.decide(5_050, 3, 50), Decision::Dispatch(3));
+        assert_eq!(b.cap_global(), 8);
+    }
+
+    #[test]
+    fn adaptive_waits_while_budget_allows_then_dispatches() {
+        let slo = 50_000u64; // 50ms
+        let b = Batcher::new(BatcherKind::Adaptive, 8, slo, toy_curve());
+        // young queue of 4: ŝ(4) ≈ 191µs, margin 6250 → deadline ≈
+        // oldest + 43.5ms — far in the future, so hold
+        let d = b.decide(1_000, 4, 500);
+        let Decision::WaitUntil(t) = d else { panic!("expected wait, got {d:?}") };
+        assert!(t > 40_000 && t < 500 + slo, "deadline inside the SLO budget: {t}");
+        // at the deadline the same queue dispatches
+        assert_eq!(b.decide(t, 4, 500), Decision::Dispatch(4));
+        // cap: a flooded queue dispatches the cap immediately
+        assert_eq!(b.decide(1_000, 10_000, 999), Decision::Dispatch(32));
+        assert_eq!(b.cap_global(), 32);
+    }
+
+    #[test]
+    fn adaptive_deadline_moves_earlier_as_queue_grows() {
+        let b = Batcher::new(BatcherKind::Adaptive, 64, 20_000, toy_curve());
+        let t_small = match b.decide(0, 2, 0) {
+            Decision::WaitUntil(t) => t,
+            d => panic!("{d:?}"),
+        };
+        let t_big = match b.decide(0, 100, 0) {
+            Decision::WaitUntil(t) => t,
+            d => panic!("{d:?}"),
+        };
+        assert!(t_big < t_small, "bigger batch, bigger ŝ, earlier deadline");
+    }
+
+    #[test]
+    fn observe_corrects_the_estimate_deterministically() {
+        let mut b = Batcher::new(BatcherKind::Adaptive, 8, 10_000, toy_curve());
+        let before = b.estimate_us(16);
+        // the executor keeps reporting twice the modeled time
+        for _ in 0..10 {
+            let actual = (b.curve.service_us(16) * 2.0) as u64;
+            b.observe(16, actual);
+        }
+        let after = b.estimate_us(16);
+        assert!(after > 1.8 * before, "correction converges upward: {before} -> {after}");
+        let mut b2 = Batcher::new(BatcherKind::Adaptive, 8, 10_000, toy_curve());
+        for _ in 0..10 {
+            let actual = (b2.curve.service_us(16) * 2.0) as u64;
+            b2.observe(16, actual);
+        }
+        assert_eq!(b.estimate_us(16), b2.estimate_us(16), "EWMA is deterministic");
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in [BatcherKind::Fixed, BatcherKind::Adaptive] {
+            assert_eq!(BatcherKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BatcherKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,181 @@
+//! Virtual time for the serving plane: an integer-microsecond clock and
+//! a deterministic event queue.
+//!
+//! **No wall-clock in the decision path.** Every serving decision —
+//! arrival, batcher admission, batch completion — happens at a
+//! [`VirtualClock`] timestamp, and event ordering ties are broken by a
+//! monotone insertion sequence number, so a run is a pure function of
+//! its seed: the same workload, the same admissions, the same latency
+//! ledger, bit for bit, whether the engine underneath runs
+//! `--exec serial` or `threaded`, `--prefetch 0` or `1`. Real CPU time
+//! is still *measured* (the executor records its sampling/gather wall
+//! for the benches) but never *consulted*.
+
+use super::workload::Request;
+
+/// Monotone virtual time in integer microseconds.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VirtualClock {
+    now_us: u64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now_us: 0 }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+
+    /// Jump to an event timestamp. Time never flows backwards — the
+    /// event queue pops in nondecreasing order and this asserts it.
+    pub fn advance_to(&mut self, t_us: u64) {
+        assert!(t_us >= self.now_us, "virtual time ran backwards: {} -> {t_us}", self.now_us);
+        self.now_us = t_us;
+    }
+}
+
+/// What can happen at a point in virtual time.
+#[derive(Clone, Debug)]
+pub enum Event {
+    /// A request enters the system.
+    Arrival(Request),
+    /// The in-flight batch finishes (modeled service time elapsed); the
+    /// executor becomes free.
+    BatchDone { batch: u32 },
+    /// A batcher-requested wakeup (its `WaitUntil` deadline) with no
+    /// guarantee an arrival lands first.
+    Poll,
+}
+
+/// One scheduled entry; ordering key is `(at_us, seq)` — `seq` is the
+/// insertion sequence number, so simultaneous events pop in the order
+/// they were scheduled (deterministic, insertion-stable).
+#[derive(Clone, Debug)]
+struct Scheduled {
+    at_us: u64,
+    seq: u64,
+    event: Event,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        (self.at_us, self.seq) == (other.at_us, other.seq)
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at_us, self.seq).cmp(&(other.at_us, other.seq))
+    }
+}
+
+/// Min-heap of scheduled events (std's `BinaryHeap` is a max-heap, so
+/// entries are wrapped in `Reverse`).
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: std::collections::BinaryHeap<std::cmp::Reverse<Scheduled>>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> EventQueue {
+        EventQueue::default()
+    }
+
+    pub fn push(&mut self, at_us: u64, event: Event) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(std::cmp::Reverse(Scheduled { at_us, seq, event }));
+    }
+
+    /// Pop the earliest event (ties in insertion order).
+    pub fn pop(&mut self) -> Option<(u64, Event)> {
+        self.heap.pop().map(|std::cmp::Reverse(s)| (s.at_us, s.event))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn poll_at(q: &mut EventQueue, t: u64) {
+        q.push(t, Event::Poll);
+    }
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_us(), 0);
+        c.advance_to(10);
+        c.advance_to(10); // same instant is fine
+        c.advance_to(25);
+        assert_eq!(c.now_us(), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "ran backwards")]
+    fn clock_rejects_backwards_time() {
+        let mut c = VirtualClock::new();
+        c.advance_to(10);
+        c.advance_to(9);
+    }
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut q = EventQueue::new();
+        poll_at(&mut q, 30);
+        poll_at(&mut q, 10);
+        poll_at(&mut q, 20);
+        let times: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(t, _)| t)).collect();
+        assert_eq!(times, vec![10, 20, 30]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn simultaneous_events_pop_in_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5, Event::BatchDone { batch: 0 });
+        q.push(5, Event::Poll);
+        q.push(5, Event::BatchDone { batch: 1 });
+        let mut order = Vec::new();
+        while let Some((t, ev)) = q.pop() {
+            assert_eq!(t, 5);
+            order.push(match ev {
+                Event::BatchDone { batch } => format!("done{batch}"),
+                Event::Poll => "poll".to_string(),
+                Event::Arrival(_) => "arrival".to_string(),
+            });
+        }
+        assert_eq!(order, vec!["done0", "poll", "done1"], "insertion-stable tie-break");
+    }
+
+    #[test]
+    fn interleaved_push_pop_stays_ordered() {
+        let mut q = EventQueue::new();
+        poll_at(&mut q, 8);
+        poll_at(&mut q, 3);
+        assert_eq!(q.pop().unwrap().0, 3);
+        poll_at(&mut q, 5);
+        poll_at(&mut q, 4);
+        assert_eq!(q.pop().unwrap().0, 4);
+        assert_eq!(q.pop().unwrap().0, 5);
+        assert_eq!(q.pop().unwrap().0, 8);
+        assert_eq!(q.len(), 0);
+        assert!(q.pop().is_none());
+    }
+}

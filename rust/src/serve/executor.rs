@@ -1,0 +1,521 @@
+//! Batch execution for the serving plane: admitted requests become one
+//! cooperative (or independent) engine batch, and the measured counts
+//! become a modeled service time.
+//!
+//! The executor is a thin owner of the pipeline's
+//! [`EngineStream`] driven through
+//! [`EngineStream::batch_for_seeds`] — the engine's explicit-seed entry
+//! point. Per-PE samplers, the row-carrying fabric, and the LRU row
+//! caches all live *in the stream, across batches*: consecutive request
+//! batches hit warm caches exactly like κ-dependent minibatching, which
+//! is what converts the workload's hot-set skew into latency wins.
+//!
+//! **Service time is modeled, not measured.** The engine's counts
+//! (sampled edges, storage bytes at β, fabric bytes at α, gathered rows)
+//! are deterministic for a fixed seed — identical across
+//! `--exec serial|threaded` and `--prefetch 0|1` — so pushing them
+//! through the [`crate::costmodel`] bandwidth constants yields a
+//! bit-reproducible virtual service time ([`modeled_service_us`]), while
+//! real CPU wall time is recorded for the benches but never consulted by
+//! any decision. A fixed [`BATCH_OVERHEAD_US`] dispatch cost is what
+//! makes batching worth waiting for at all.
+//!
+//! Predictions run the [`crate::train::ParallelTrainer`] forward head
+//! (`train::parallel::forward_logits` + first-max argmax — the same
+//! functions training and evaluation use) over each PE's gathered
+//! feature buffer. With `--prefetch 1` the prediction pass of batch `t`
+//! runs on a background thread while the event loop admits and samples
+//! batch `t+1` — real overlap, and *provably* ledger-neutral, because
+//! predictions only feed the output checksum, never an admission.
+
+use crate::coop::engine::Mode;
+use crate::costmodel::{ModelCost, SystemPreset};
+use crate::graph::{Partition, VertexId};
+use crate::pipeline::{EngineStream, PeWork};
+use crate::train::parallel::{argmax, forward_logits};
+use crate::util::stats::Timer;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use super::workload::Request;
+
+/// Fixed per-dispatch overhead (µs): admission, tensor assembly, kernel
+/// launch — the cost that amortizes away as the batch grows, creating
+/// the queueing-delay vs per-item-work tradeoff the adaptive batcher
+/// navigates.
+pub const BATCH_OVERHEAD_US: f64 = 150.0;
+
+/// Modeled µs for one PE's stage counts at `preset` bandwidths:
+/// sampling (adjacency reads at β, id redistribution at α), feature
+/// loading (storage bytes at β, row fabric at α), and a memory-bound
+/// *inference* forward (no backward) at γ. Mirrors
+/// [`crate::costmodel::estimate`]'s constants, reduced to one PE and
+/// forward-only.
+///
+/// `s` is `|S^l|` for `l in 0..=L` (`s[L]` = gathered input rows), `e`
+/// is `|E^l|` for `l in 0..L`, `cross_ids` the total ids this PE pushed
+/// cross-PE over all rounds (each travels out and back, 4 B per id per
+/// direction).
+#[allow(clippy::too_many_arguments)]
+pub fn stage_us(
+    s: &[f64],
+    e: &[f64],
+    cross_ids: f64,
+    storage_bytes: f64,
+    fabric_bytes: f64,
+    d_in: usize,
+    preset: &SystemPreset,
+    model: &ModelCost,
+) -> f64 {
+    // GB/s → bytes/µs is ×1e3
+    let us = |bytes: f64, gbps: f64| bytes / (gbps * 1e3);
+    let layers = e.len();
+    debug_assert_eq!(s.len(), layers + 1, "s carries L+1 per-layer counts");
+    // sampling: 8 B per candidate edge examined ×4 (costmodel's adjacency
+    // constant) + 16 B bookkeeping per processed vertex, at β; ids out
+    // and back at α
+    let samp_beta: f64 = e.iter().map(|&x| x * 32.0).sum::<f64>()
+        + s[..layers].iter().map(|&x| x * 16.0).sum::<f64>();
+    let samp_alpha = cross_ids * 8.0;
+    // inference forward: stream edge messages + read source rows + write
+    // hidden activations, once (no backward in serving)
+    let requested = s[layers];
+    let fwd_gamma = model.m_factor
+        * 4.0
+        * (e.iter().sum::<f64>() * model.hidden as f64
+            + requested * d_in as f64
+            + s[0] * model.hidden as f64);
+    us(samp_beta + storage_bytes, preset.beta)
+        + us(samp_alpha + fabric_bytes, preset.alpha)
+        + us(fwd_gamma, preset.gamma)
+}
+
+/// One PE's modeled stage time from its measured work record.
+fn pe_us(w: &PeWork, preset: &SystemPreset, model: &ModelCost) -> f64 {
+    let s: Vec<f64> = w.counts_s.iter().map(|&c| c as f64).collect();
+    let e: Vec<f64> = w.counts_e.iter().map(|&c| c as f64).collect();
+    let cross: f64 = w.counts_cross.iter().map(|&c| c as f64).sum();
+    let d_in = (w.row_bytes / 4).max(1) as usize;
+    stage_us(
+        &s,
+        &e,
+        cross,
+        w.bytes_from_storage as f64,
+        w.fabric_bytes as f64,
+        d_in,
+        preset,
+        model,
+    )
+}
+
+/// Virtual service time of one executed batch: dispatch overhead plus
+/// the slowest PE's modeled stage time (the batch is synchronous — all
+/// PEs barrier on the fabric). Integer µs, deterministically rounded,
+/// never zero.
+pub fn modeled_service_us(per_pe: &[PeWork], preset: &SystemPreset, model: &ModelCost) -> u64 {
+    let max_pe = per_pe.iter().map(|w| pe_us(w, preset, model)).fold(0.0, f64::max);
+    (BATCH_OVERHEAD_US + max_pe).round().max(1.0) as u64
+}
+
+/// Everything the server needs to know about one executed batch (the
+/// per-request predictions arrive separately, possibly from the
+/// prefetch thread — see [`Executor::finish`]).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchExecution {
+    /// 0-based dispatch index.
+    pub batch: u32,
+    /// admitted requests.
+    pub size: usize,
+    /// modeled virtual service time (µs).
+    pub service_us: u64,
+    /// f32 bytes read from storage across PEs (β).
+    pub storage_bytes: u64,
+    /// feature-row bytes over the fabric across PEs (α).
+    pub fabric_bytes: u64,
+    /// rows requested through the caches across PEs.
+    pub requested_rows: u64,
+    /// sampled edges across PEs and layers.
+    pub sampled_edges: u64,
+    /// real CPU wall of assignment + sampling + gathering (measured for
+    /// the benches; **never** consulted by a serving decision).
+    pub wall_ms: f64,
+}
+
+/// The serving plane's execution engine: request→PE assignment, one
+/// explicit-seed engine batch per dispatch, modeled service time,
+/// forward-head predictions (optionally prediction-prefetched).
+pub struct Executor<'p> {
+    stream: EngineStream<'p>,
+    part: &'p Partition,
+    mode: Mode,
+    num_pes: usize,
+    preset: &'static SystemPreset,
+    model: ModelCost,
+    head_w: Arc<Vec<f32>>,
+    head_b: Arc<Vec<f32>>,
+    dim: usize,
+    classes: usize,
+    /// overlap batch t's prediction pass with batch t+1's admission.
+    prefetch: bool,
+    pending: Option<std::thread::JoinHandle<Vec<(u64, u16)>>>,
+    done: Vec<(u64, u16)>,
+    /// independent-mode round-robin assignment cursor (persists across
+    /// batches so PE load stays balanced over time).
+    rr_cursor: usize,
+    batches: u32,
+}
+
+impl<'p> Executor<'p> {
+    /// Stand up an executor over a pipeline's stream and forward head.
+    /// `head` is the `(W, b)` softmax head the predictions run
+    /// ([`crate::train::ParallelTrainer::head`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        stream: EngineStream<'p>,
+        part: &'p Partition,
+        mode: Mode,
+        preset: &'static SystemPreset,
+        model: ModelCost,
+        head: (&[f32], &[f32]),
+        classes: usize,
+        prefetch: bool,
+    ) -> Executor<'p> {
+        let num_pes = part.num_parts;
+        let dim = head.0.len() / classes;
+        assert_eq!(dim * classes, head.0.len(), "head W shape");
+        assert_eq!(classes, head.1.len(), "head b shape");
+        Executor {
+            stream,
+            part,
+            mode,
+            num_pes,
+            preset,
+            model,
+            head_w: Arc::new(head.0.to_vec()),
+            head_b: Arc::new(head.1.to_vec()),
+            dim,
+            classes,
+            prefetch,
+            pending: None,
+            done: Vec::new(),
+            rr_cursor: 0,
+            batches: 0,
+        }
+    }
+
+    pub fn batches(&self) -> u32 {
+        self.batches
+    }
+
+    /// Execute one admitted batch: assign each request to a PE (owner
+    /// of its vertex in cooperative mode — the Algorithm 1 discipline —
+    /// round-robin in independent mode), run the engine on the
+    /// deduplicated per-PE seed lists, model the service time from the
+    /// measured counts, and start the prediction pass.
+    pub fn execute(&mut self, reqs: &[Request]) -> BatchExecution {
+        assert!(!reqs.is_empty(), "dispatched an empty batch");
+        let wall = Timer::start();
+        let mut per_pe_seeds: Vec<Vec<VertexId>> = vec![Vec::new(); self.num_pes];
+        let mut assignment: Vec<(u64, VertexId, usize)> = Vec::with_capacity(reqs.len());
+        for r in reqs {
+            let pe = match self.mode {
+                Mode::Cooperative => self.part.part_of(r.vertex),
+                Mode::Independent => {
+                    let pe = self.rr_cursor % self.num_pes;
+                    self.rr_cursor += 1;
+                    pe
+                }
+            };
+            assignment.push((r.id, r.vertex, pe));
+            per_pe_seeds[pe].push(r.vertex);
+        }
+        // two requests for the same vertex on one PE share one seed
+        // (first-occurrence order kept — deterministic)
+        for seeds in per_pe_seeds.iter_mut() {
+            let mut seen = std::collections::HashSet::with_capacity(seeds.len());
+            seeds.retain(|v| seen.insert(*v));
+        }
+
+        let mb = self.stream.batch_for_seeds(per_pe_seeds);
+        let service_us = modeled_service_us(&mb.per_pe, self.preset, &self.model);
+        let exec = BatchExecution {
+            batch: self.batches,
+            size: reqs.len(),
+            service_us,
+            storage_bytes: mb.per_pe.iter().map(|w| w.bytes_from_storage).sum(),
+            fabric_bytes: mb.per_pe.iter().map(|w| w.fabric_bytes).sum(),
+            requested_rows: mb.per_pe.iter().map(|w| w.requested).sum(),
+            sampled_edges: mb
+                .per_pe
+                .iter()
+                .map(|w| w.counts_e.iter().sum::<u64>())
+                .sum(),
+            wall_ms: wall.elapsed_ms(),
+        };
+        self.batches += 1;
+
+        // prediction pass: each PE's gathered buffer covers its seeds
+        // (S^L ⊇ seeds independently; S̃^L ⊇ owned seeds cooperatively)
+        let buffers: Vec<(Vec<f32>, Vec<VertexId>)> = mb
+            .per_pe
+            .into_iter()
+            .map(|w| {
+                (
+                    w.features.expect("engine batches carry feature buffers"),
+                    w.feature_vertices.expect("engine batches carry vertex lists"),
+                )
+            })
+            .collect();
+        if self.prefetch {
+            // join batch t-1's pass (it has had a full admission cycle
+            // to run), then launch batch t's in the background
+            if let Some(h) = self.pending.take() {
+                self.done.extend(h.join().expect("prediction thread panicked"));
+            }
+            let (w, b) = (Arc::clone(&self.head_w), Arc::clone(&self.head_b));
+            let (dim, classes) = (self.dim, self.classes);
+            self.pending = Some(std::thread::spawn(move || {
+                predict_batch(&w, &b, dim, classes, &buffers, &assignment)
+            }));
+        } else {
+            self.done.extend(predict_batch(
+                &self.head_w,
+                &self.head_b,
+                self.dim,
+                self.classes,
+                &buffers,
+                &assignment,
+            ));
+        }
+        exec
+    }
+
+    /// Join any in-flight prediction pass and hand back every
+    /// `(request id, predicted class)` produced since the last call.
+    pub fn finish(&mut self) -> Vec<(u64, u16)> {
+        if let Some(h) = self.pending.take() {
+            self.done.extend(h.join().expect("prediction thread panicked"));
+        }
+        std::mem::take(&mut self.done)
+    }
+}
+
+/// The forward pass over one executed batch: look up each request's row
+/// in its PE's gathered buffer and run the trainer head. Pure function
+/// of its inputs — safe to run on the prefetch thread.
+fn predict_batch(
+    w: &[f32],
+    b: &[f32],
+    dim: usize,
+    classes: usize,
+    buffers: &[(Vec<f32>, Vec<VertexId>)],
+    assignment: &[(u64, VertexId, usize)],
+) -> Vec<(u64, u16)> {
+    let maps: Vec<HashMap<VertexId, usize>> = buffers
+        .iter()
+        .map(|(_, vs)| vs.iter().enumerate().map(|(i, &v)| (v, i)).collect())
+        .collect();
+    let mut logits = vec![0f32; classes];
+    assignment
+        .iter()
+        .map(|&(id, v, pe)| {
+            let row = *maps[pe]
+                .get(&v)
+                .expect("request vertex must be in its PE's gathered buffer");
+            let x = &buffers[pe].0[row * dim..(row + 1) * dim];
+            forward_logits(w, b, x, &mut logits);
+            (id, argmax(&logits) as u16)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coop::all_to_all::AllReduceStrategy;
+    use crate::coop::engine::ExecMode;
+    use crate::costmodel;
+    use crate::pipeline::PipelineBuilder;
+
+    fn requests(vs: &[VertexId]) -> Vec<Request> {
+        vs.iter()
+            .enumerate()
+            .map(|(i, &v)| Request {
+                id: i as u64,
+                requester: (i % 3) as u32,
+                vertex: v,
+                arrival_us: i as u64,
+            })
+            .collect()
+    }
+
+    fn run_batches(
+        mode: Mode,
+        exec: ExecMode,
+        prefetch: bool,
+    ) -> (Vec<BatchExecution>, Vec<(u64, u16)>) {
+        let pipe = PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(mode)
+            .exec(exec)
+            .num_pes(3)
+            .cache_per_pe(300)
+            .seed(17)
+            .build()
+            .unwrap();
+        let trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        let stream = pipe.stream();
+        let mut ex = Executor::new(
+            stream,
+            &pipe.part,
+            mode,
+            costmodel::preset("4xA100").unwrap(),
+            ModelCost::gcn(pipe.ds.feat_dim, 128),
+            trainer.head(),
+            pipe.ds.num_classes,
+            prefetch,
+        );
+        let mut execs = Vec::new();
+        for round in 0..3 {
+            let vs: Vec<VertexId> = (0..40).map(|i| (i * 7 + round) % 2000).collect();
+            execs.push(ex.execute(&requests(&vs)));
+        }
+        let mut preds = ex.finish();
+        preds.sort_unstable();
+        (execs, preds)
+    }
+
+    #[test]
+    fn serial_threaded_and_prefetch_are_bit_identical() {
+        for mode in [Mode::Independent, Mode::Cooperative] {
+            let (base, preds0) = run_batches(mode, ExecMode::Serial, false);
+            for (exec, prefetch) in
+                [(ExecMode::Threaded, false), (ExecMode::Serial, true), (ExecMode::Threaded, true)]
+            {
+                let (other, preds1) = run_batches(mode, exec, prefetch);
+                for (a, b) in base.iter().zip(&other) {
+                    assert_eq!(a.service_us, b.service_us, "{mode:?}/{exec:?}/{prefetch}");
+                    assert_eq!(a.storage_bytes, b.storage_bytes, "{mode:?}/{exec:?}/{prefetch}");
+                    assert_eq!(a.fabric_bytes, b.fabric_bytes, "{mode:?}/{exec:?}/{prefetch}");
+                    assert_eq!(a.requested_rows, b.requested_rows);
+                    assert_eq!(a.sampled_edges, b.sampled_edges);
+                }
+                assert_eq!(preds0, preds1, "{mode:?}/{exec:?}/{prefetch}: predictions");
+            }
+        }
+    }
+
+    #[test]
+    fn predictions_match_the_trainer_head_on_store_rows() {
+        let pipe = PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(Mode::Cooperative)
+            .num_pes(2)
+            .seed(23)
+            .build()
+            .unwrap();
+        let trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        let store = pipe.feature_store();
+        let mut ex = Executor::new(
+            pipe.stream(),
+            &pipe.part,
+            Mode::Cooperative,
+            costmodel::preset("4xA100").unwrap(),
+            ModelCost::gcn(pipe.ds.feat_dim, 128),
+            trainer.head(),
+            pipe.ds.num_classes,
+            false,
+        );
+        let vs: Vec<VertexId> = vec![5, 9, 9, 100, 731]; // duplicate on purpose
+        let reqs = requests(&vs);
+        ex.execute(&reqs);
+        let mut preds = ex.finish();
+        preds.sort_unstable();
+        assert_eq!(preds.len(), reqs.len(), "every request predicted, duplicates included");
+        use crate::feature::FeatureStore;
+        let mut row = vec![0f32; pipe.ds.feat_dim];
+        let mut logits = vec![0f32; pipe.ds.num_classes];
+        for (id, class) in preds {
+            let v = reqs[id as usize].vertex;
+            store.copy_row(v, &mut row);
+            let want = trainer.predict_row(&row, &mut logits);
+            assert_eq!(class, want, "request {id} (vertex {v})");
+        }
+    }
+
+    #[test]
+    fn warm_caches_cut_storage_bytes_across_request_batches() {
+        // the κ-style temporal story: re-serving the same hot vertices
+        // must hit the caches the previous batch filled
+        let pipe = PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(Mode::Cooperative)
+            .num_pes(2)
+            .cache_per_pe(1000)
+            .seed(31)
+            .build()
+            .unwrap();
+        let trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        let mut ex = Executor::new(
+            pipe.stream(),
+            &pipe.part,
+            Mode::Cooperative,
+            costmodel::preset("4xA100").unwrap(),
+            ModelCost::gcn(pipe.ds.feat_dim, 128),
+            trainer.head(),
+            pipe.ds.num_classes,
+            false,
+        );
+        let vs: Vec<VertexId> = (0..60).map(|i| i * 3 % 2000).collect();
+        let cold = ex.execute(&requests(&vs));
+        let warm = ex.execute(&requests(&vs));
+        assert!(cold.storage_bytes > 0);
+        assert!(
+            warm.storage_bytes < cold.storage_bytes,
+            "second pass must hit warm caches: {} vs {}",
+            warm.storage_bytes,
+            cold.storage_bytes
+        );
+        // (the byte saving flows into the modeled service time too, but
+        // on tiny's 64-byte rows it can round away at µs resolution —
+        // the repro table on flickr-s is where it shows)
+        ex.finish();
+    }
+
+    #[test]
+    fn modeled_service_is_concave_in_batch_size() {
+        let pipe = PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(Mode::Cooperative)
+            .num_pes(2)
+            .cache_per_pe(0) // pass-through caches: pure per-batch work
+            .seed(41)
+            .build()
+            .unwrap();
+        let trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        let mut service = |n: usize| {
+            let mut ex = Executor::new(
+                pipe.stream(),
+                &pipe.part,
+                Mode::Cooperative,
+                costmodel::preset("4xA100").unwrap(),
+                ModelCost::gcn(pipe.ds.feat_dim, 128),
+                trainer.head(),
+                pipe.ds.num_classes,
+                false,
+            );
+            let vs: Vec<VertexId> = (0..n as u32).map(|i| (i * 13) % 2000).collect();
+            let e = ex.execute(&requests(&vs));
+            ex.finish();
+            e.service_us as f64
+        };
+        let (s32, s128) = (service(32), service(128));
+        assert!(s128 > s32, "more requests, more modeled work");
+        assert!(s128 < 4.0 * s32, "concavity: 4x the requests, < 4x the time ({s32} vs {s128})");
+        // the work term itself (overhead subtracted) must also be
+        // concave — the paper's |S^L(n)| sublinearity, not just
+        // overhead amortization
+        let (w32, w128) = (s32 - BATCH_OVERHEAD_US, s128 - BATCH_OVERHEAD_US);
+        assert!(w128 < 4.0 * w32, "sublinear sampled work: {w32} vs {w128}");
+    }
+}

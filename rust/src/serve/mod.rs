@@ -1,0 +1,433 @@
+//! The online inference serving plane: SLO-aware dynamic cooperative
+//! batching over a virtual-time request stream.
+//!
+//! The paper proves sampled-subgraph size is *concave* in batch size, so
+//! PEs sharing one large batch do strictly less work per item. Training
+//! exploits that offline; this module exploits it **online**: requests
+//! arrive one by one, a dynamic batcher holds them back exactly as long
+//! as a p99 latency SLO allows, and each admitted batch runs through the
+//! same cooperative multi-PE engine as training — per-PE sampling,
+//! row-carrying fabric exchange, LRU caches persisting *across* request
+//! batches (κ-style temporal locality, fed by the workload's hot-set
+//! skew).
+//!
+//! ```text
+//!            virtual µs                 admitted FIFO prefix
+//!  ┌──────────┐  arrivals  ┌─────────┐  Dispatch(n)  ┌──────────────┐
+//!  │ workload │───────────▶│ batcher │──────────────▶│   executor   │
+//!  │ (Poisson │  [clock +  │ (fixed/ │               │ batch_for_   │
+//!  │ /closed) │   events]  │adaptive)│◀──observe ŝ───│ seeds → cost │
+//!  └──────────┘            └─────────┘               │ model → head │
+//!        ▲                     │ WaitUntil(t)        └──────┬───────┘
+//!        └── completions ──────┴──── BatchDone ◀────────────┘
+//!                                          │
+//!                                   ┌──────▼──────┐
+//!                                   │    report   │ p50/p90/p99,
+//!                                   │   (ledger)  │ req/s, bytes/req
+//!                                   └─────────────┘
+//! ```
+//!
+//! Everything decision-relevant runs on the [`clock::VirtualClock`]
+//! (integer µs, no wall-clock in the decision path) and the service time
+//! of a batch is *modeled* from the engine's deterministic counts
+//! ([`executor::modeled_service_us`]), so a run is bit-reproducible at a
+//! fixed seed: identical request ledgers and prediction checksums across
+//! `--exec serial|threaded` and `--prefetch 0|1` (enforced by
+//! `tests/integration_serve.rs`).
+//!
+//! Entry points: [`crate::pipeline::Pipeline::server`] (builder hook),
+//! the `coopgnn serve` CLI subcommand, `repro serve` (the scenario
+//! matrix indep/coop × fixed/adaptive), `benches/bench_serve.rs`, and
+//! `examples/serve_demo.rs`.
+
+pub mod batcher;
+pub mod clock;
+pub mod executor;
+pub mod report;
+pub mod workload;
+
+pub use batcher::{Batcher, BatcherKind, CostCurve, Decision};
+pub use clock::{Event, EventQueue, VirtualClock};
+pub use executor::{modeled_service_us, BatchExecution, Executor, BATCH_OVERHEAD_US};
+pub use report::{BatchRecord, Ledger, RequestRecord, ServeReport};
+pub use workload::{Request, Workload, WorkloadKind};
+
+use crate::coop::all_to_all::AllReduceStrategy;
+use crate::costmodel::{self, ModelCost, SystemPreset};
+use crate::pipeline::Pipeline;
+use batcher::ADAPTIVE_CAP_FACTOR;
+use std::collections::VecDeque;
+
+/// Serving-plane knobs (the engine-side knobs — mode, PEs, exec, κ,
+/// cache, prefetch — come from the [`crate::pipeline::PipelineConfig`]
+/// the server is built over).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// aggregate offered load (requests/s of virtual time).
+    pub rate_per_s: f64,
+    /// p99 latency objective (virtual µs).
+    pub slo_us: u64,
+    pub batcher: BatcherKind,
+    /// stop after this many dispatched batches.
+    pub duration_batches: usize,
+    /// the fixed baseline's per-PE batch size; the adaptive policy may
+    /// grow to [`ADAPTIVE_CAP_FACTOR`]× its global size.
+    pub fixed_batch_per_pe: usize,
+    pub workload: WorkloadKind,
+    /// logical clients (requester ids; the closed loop's population).
+    pub clients: usize,
+    /// probability a request targets the hot set.
+    pub hot_prob: f64,
+    /// hot-set size as a fraction of |V|.
+    pub hot_frac: f64,
+    /// cost-model hardware the virtual service times are computed for.
+    pub preset: &'static SystemPreset,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            rate_per_s: 2000.0,
+            slo_us: 50_000,
+            batcher: BatcherKind::Adaptive,
+            duration_batches: 32,
+            fixed_batch_per_pe: 32,
+            workload: WorkloadKind::OpenPoisson,
+            clients: 64,
+            hot_prob: 0.8,
+            hot_frac: 0.05,
+            preset: costmodel::preset("4xA100").unwrap(),
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.rate_per_s > 0.0, "--rate must be positive");
+        anyhow::ensure!(self.slo_us >= 1, "--slo-ms must be positive");
+        anyhow::ensure!(self.duration_batches >= 1, "--duration-batches must be >= 1");
+        anyhow::ensure!(self.fixed_batch_per_pe >= 1, "--batch must be >= 1");
+        anyhow::ensure!(self.clients >= 1, "--clients must be >= 1");
+        anyhow::ensure!((0.0..=1.0).contains(&self.hot_prob), "--hot must be in [0,1]");
+        anyhow::ensure!(
+            self.hot_frac > 0.0 && self.hot_frac <= 1.0,
+            "hot-set fraction must be in (0,1]"
+        );
+        Ok(())
+    }
+}
+
+/// What a finished run hands back: the scorecard, the full transcript
+/// (for tests and CSV emission), and the real CPU time the executor
+/// spent (benches only — virtual time never sees it).
+pub struct ServeOutcome {
+    pub report: ServeReport,
+    pub ledger: Ledger,
+    /// summed executor wall (assignment + sampling + gathering), ms.
+    pub exec_wall_ms: f64,
+}
+
+impl Pipeline {
+    /// Stand up an online-inference server over this pipeline: the
+    /// engine stream (with its persistent per-PE caches and fabric),
+    /// a [`crate::train::ParallelTrainer`] forward head initialized
+    /// from the pipeline seed, a calibrated cost curve, and a seeded
+    /// workload. Consume it with [`Server::run`].
+    pub fn server(&self, scfg: ServeConfig) -> crate::Result<Server<'_>> {
+        scfg.validate()?;
+        let model = ModelCost::gcn(self.ds.feat_dim, 128);
+        let trainer = self.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        let executor = Executor::new(
+            self.stream(),
+            &self.part,
+            self.cfg.mode,
+            scfg.preset,
+            model,
+            trainer.head(),
+            self.ds.num_classes,
+            self.cfg.prefetch,
+        );
+        let fixed_global = scfg.fixed_batch_per_pe * self.cfg.num_pes;
+        let curve = CostCurve::calibrate(
+            &self.ds.graph,
+            self.cfg.kind,
+            &self.cfg.sampler_config(),
+            self.ds.feat_dim,
+            self.cfg.num_pes,
+            scfg.preset,
+            &model,
+            fixed_global * ADAPTIVE_CAP_FACTOR,
+            self.cfg.seed,
+        );
+        let batcher = Batcher::new(scfg.batcher, fixed_global, scfg.slo_us, curve);
+        let workload = Workload::new(
+            self.ds.graph.num_vertices(),
+            scfg.workload,
+            scfg.rate_per_s,
+            scfg.clients as u32,
+            scfg.hot_prob,
+            scfg.hot_frac,
+            self.cfg.seed,
+        );
+        Ok(Server {
+            scfg,
+            clock: VirtualClock::new(),
+            events: EventQueue::new(),
+            queue: VecDeque::new(),
+            workload,
+            batcher,
+            executor,
+            ledger: Ledger::new(),
+            busy_until: None,
+            pending_poll: None,
+            dispatched: 0,
+        })
+    }
+}
+
+/// The event loop: arrivals in, batches out, everything in virtual
+/// time. One instance serves one run.
+pub struct Server<'p> {
+    scfg: ServeConfig,
+    clock: VirtualClock,
+    events: EventQueue,
+    queue: VecDeque<Request>,
+    workload: Workload,
+    batcher: Batcher,
+    executor: Executor<'p>,
+    ledger: Ledger,
+    /// completion timestamp of the in-flight batch (executor serves one
+    /// batch at a time — dispatches wait for it).
+    busy_until: Option<u64>,
+    /// earliest scheduled batcher wakeup (dedupes `WaitUntil` polls).
+    pending_poll: Option<u64>,
+    dispatched: usize,
+}
+
+impl Server<'_> {
+    /// Drive the simulation to completion: `duration_batches`
+    /// dispatches plus the final batch's completion.
+    pub fn run(mut self) -> ServeOutcome {
+        for r in self.workload.initial_arrivals() {
+            self.events.push(r.arrival_us, Event::Arrival(r));
+        }
+        let duration = self.scfg.duration_batches;
+        let mut exec_wall_ms = 0.0;
+        while let Some((t, ev)) = self.events.pop() {
+            self.clock.advance_to(t);
+            match ev {
+                Event::Arrival(r) => {
+                    if self.dispatched < duration {
+                        if self.workload.kind() == WorkloadKind::OpenPoisson {
+                            // keep exactly one pending arrival chained
+                            let next = self.workload.next_open(r.arrival_us);
+                            self.events.push(next.arrival_us, Event::Arrival(next));
+                        }
+                        self.queue.push_back(r);
+                    } else {
+                        // past the measurement horizon: never admitted
+                        self.ledger.dropped += 1;
+                    }
+                }
+                Event::BatchDone { .. } => self.busy_until = None,
+                Event::Poll => self.pending_poll = None,
+            }
+            self.try_dispatch(&mut exec_wall_ms);
+            if self.dispatched >= duration && self.busy_until.is_none() {
+                break;
+            }
+        }
+        // whatever is still queued was never served
+        self.ledger.dropped += self.queue.len() as u64;
+        for (id, class) in self.executor.finish() {
+            self.ledger.set_prediction(id, class);
+        }
+        let report = self.ledger.summarize(self.scfg.slo_us);
+        ServeOutcome { report, ledger: self.ledger, exec_wall_ms }
+    }
+
+    /// Consult the batcher if the executor is free and work is queued;
+    /// dispatch or schedule the requested wakeup.
+    fn try_dispatch(&mut self, exec_wall_ms: &mut f64) {
+        if self.busy_until.is_some()
+            || self.dispatched >= self.scfg.duration_batches
+            || self.queue.is_empty()
+        {
+            return;
+        }
+        let now = self.clock.now_us();
+        let oldest = self.queue.front().unwrap().arrival_us;
+        match self.batcher.decide(now, self.queue.len(), oldest) {
+            Decision::Dispatch(k) => {
+                let k = k.min(self.queue.len());
+                let reqs: Vec<Request> = self.queue.drain(..k).collect();
+                let exec = self.executor.execute(&reqs);
+                *exec_wall_ms += exec.wall_ms;
+                self.batcher.observe(exec.size, exec.service_us);
+                let completion = now + exec.service_us;
+                self.busy_until = Some(completion);
+                self.events.push(completion, Event::BatchDone { batch: exec.batch });
+                self.ledger.record_batch(
+                    BatchRecord {
+                        index: exec.batch,
+                        size: exec.size as u32,
+                        dispatch_us: now,
+                        service_us: exec.service_us,
+                        storage_bytes: exec.storage_bytes,
+                        fabric_bytes: exec.fabric_bytes,
+                    },
+                    &reqs,
+                    completion,
+                );
+                self.dispatched += 1;
+                if self.workload.kind() == WorkloadKind::ClosedLoop
+                    && self.dispatched < self.scfg.duration_batches
+                {
+                    // each served client thinks, then re-issues; the
+                    // arrival is scheduled now (deterministically) but
+                    // timestamped after the completion it reacts to
+                    for r in &reqs {
+                        let next = self.workload.next_after_completion(r.requester, completion);
+                        self.events.push(next.arrival_us, Event::Arrival(next));
+                    }
+                }
+            }
+            Decision::WaitUntil(t) => {
+                debug_assert!(t > now, "batcher wakeups must be in the future");
+                let earlier = match self.pending_poll {
+                    Some(p) => t < p,
+                    None => true,
+                };
+                if earlier {
+                    self.events.push(t, Event::Poll);
+                    self.pending_poll = Some(t);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coop::engine::Mode;
+    use crate::pipeline::PipelineBuilder;
+
+    fn pipe(mode: Mode, pes: usize) -> Pipeline {
+        PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(mode)
+            .num_pes(pes)
+            .seed(19)
+            .build()
+            .unwrap()
+    }
+
+    fn scfg(batcher: BatcherKind) -> ServeConfig {
+        ServeConfig {
+            rate_per_s: 20_000.0,
+            slo_us: 30_000,
+            batcher,
+            duration_batches: 10,
+            fixed_batch_per_pe: 16,
+            clients: 8,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn serves_the_requested_number_of_batches() {
+        let p = pipe(Mode::Cooperative, 2);
+        let out = p.server(scfg(BatcherKind::Adaptive)).unwrap().run();
+        assert_eq!(out.report.batches, 10);
+        assert!(out.report.served > 0);
+        assert!(out.report.p50_ms > 0.0 && out.report.p99_ms >= out.report.p50_ms);
+        assert!(out.report.storage_bytes_per_req > 0.0);
+        assert!(out.report.requests_per_s > 0.0);
+        // every admitted request completed inside the run
+        for r in &out.ledger.requests {
+            assert!(r.completion_us > r.arrival_us);
+            assert!(r.dispatch_us >= r.arrival_us);
+        }
+    }
+
+    #[test]
+    fn adaptive_builds_bigger_batches_than_fixed_under_load() {
+        // 20k req/s against a 30ms SLO: the adaptive batcher has ~28ms
+        // of budget to accumulate ~500 requests (capped at 4×32=128);
+        // the fixed batcher dispatches every 32
+        let p = pipe(Mode::Cooperative, 2);
+        let fixed = p.server(scfg(BatcherKind::Fixed)).unwrap().run();
+        let adaptive = p.server(scfg(BatcherKind::Adaptive)).unwrap().run();
+        assert!(
+            adaptive.report.mean_batch > 1.5 * fixed.report.mean_batch,
+            "adaptive {} vs fixed {}",
+            adaptive.report.mean_batch,
+            fixed.report.mean_batch
+        );
+        // concavity + warm caches: bigger batches pay fewer bytes per
+        // request
+        assert!(
+            adaptive.report.bytes_per_req() < fixed.report.bytes_per_req(),
+            "adaptive {} vs fixed {}",
+            adaptive.report.bytes_per_req(),
+            fixed.report.bytes_per_req()
+        );
+    }
+
+    #[test]
+    fn same_seed_same_ledger_checksum() {
+        let p = pipe(Mode::Independent, 2);
+        let a = p.server(scfg(BatcherKind::Adaptive)).unwrap().run();
+        let b = p.server(scfg(BatcherKind::Adaptive)).unwrap().run();
+        assert_eq!(a.report.checksum, b.report.checksum);
+        assert_eq!(a.report.served, b.report.served);
+        let mut p2 = pipe(Mode::Independent, 2);
+        p2.cfg.seed = 77;
+        let c = p2.server(scfg(BatcherKind::Adaptive)).unwrap().run();
+        assert_ne!(a.report.checksum, c.report.checksum, "seed must matter");
+    }
+
+    #[test]
+    fn closed_loop_serves_and_respects_client_population() {
+        let p = pipe(Mode::Cooperative, 2);
+        let cfg = ServeConfig {
+            workload: WorkloadKind::ClosedLoop,
+            clients: 6,
+            rate_per_s: 5_000.0,
+            duration_batches: 8,
+            fixed_batch_per_pe: 4,
+            batcher: BatcherKind::Fixed,
+            ..Default::default()
+        };
+        let out = p.server(cfg).unwrap().run();
+        assert_eq!(out.report.batches, 8);
+        assert!(out.report.served > 0);
+        let requesters: std::collections::HashSet<u32> =
+            out.ledger.requests.iter().map(|r| r.requester).collect();
+        assert!(requesters.len() <= 6, "only the client population issues requests");
+        // closed loop: a client never has two requests in flight
+        let mut last_completion: std::collections::HashMap<u32, u64> = Default::default();
+        let mut by_arrival = out.ledger.requests.clone();
+        by_arrival.sort_by_key(|r| r.arrival_us);
+        for r in &by_arrival {
+            if let Some(&c) = last_completion.get(&r.requester) {
+                assert!(r.arrival_us > c, "client {} re-issued before completion", r.requester);
+            }
+            last_completion.insert(r.requester, r.completion_us);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_serve_configs() {
+        let p = pipe(Mode::Cooperative, 2);
+        for bad in [
+            ServeConfig { rate_per_s: 0.0, ..Default::default() },
+            ServeConfig { slo_us: 0, ..Default::default() },
+            ServeConfig { duration_batches: 0, ..Default::default() },
+            ServeConfig { hot_prob: 1.5, ..Default::default() },
+        ] {
+            assert!(p.server(bad).is_err());
+        }
+    }
+}

@@ -1,0 +1,316 @@
+//! The per-request latency ledger and its reduction to serving metrics.
+//!
+//! Every admitted request gets one [`RequestRecord`] — arrival,
+//! dispatch, completion (all virtual µs), the batch that carried it, and
+//! the predicted class — and every dispatch one [`BatchRecord`] with its
+//! modeled service time and measured byte movement. The reduction
+//! ([`Ledger::summarize`]) produces the numbers the repro table and the
+//! CLI print: exact p50/p90/p99 latency ([`crate::util::stats::percentile`]),
+//! virtual throughput, mean batch size, bytes per request, and the SLO
+//! violation rate.
+//!
+//! [`Ledger::checksum`] folds every record — timestamps *and*
+//! predictions — into one FNV-1a hash: the single number the
+//! determinism tests compare across `--exec serial|threaded` and
+//! `--prefetch 0|1`.
+
+use crate::graph::VertexId;
+use crate::util::stats::percentile;
+use std::collections::HashMap;
+
+/// One served request's life in virtual time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub requester: u32,
+    pub vertex: VertexId,
+    pub arrival_us: u64,
+    pub dispatch_us: u64,
+    pub completion_us: u64,
+    /// 0-based index of the batch that served it.
+    pub batch: u32,
+    /// predicted class (the trainer head's argmax).
+    pub predicted: u16,
+}
+
+impl RequestRecord {
+    pub fn latency_us(&self) -> u64 {
+        self.completion_us - self.arrival_us
+    }
+}
+
+/// One dispatched batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchRecord {
+    pub index: u32,
+    pub size: u32,
+    pub dispatch_us: u64,
+    pub service_us: u64,
+    pub storage_bytes: u64,
+    pub fabric_bytes: u64,
+}
+
+/// The full run transcript: requests, batches, and drop accounting.
+#[derive(Clone, Debug, Default)]
+pub struct Ledger {
+    pub requests: Vec<RequestRecord>,
+    pub batches: Vec<BatchRecord>,
+    /// arrivals after the final dispatch that were never admitted.
+    pub dropped: u64,
+    by_id: HashMap<u64, usize>,
+}
+
+impl Ledger {
+    pub fn new() -> Ledger {
+        Ledger::default()
+    }
+
+    /// Record one dispatched batch and all requests it carries
+    /// (predictions are merged later via [`Ledger::set_prediction`]).
+    pub fn record_batch(
+        &mut self,
+        batch: BatchRecord,
+        reqs: &[super::workload::Request],
+        completion_us: u64,
+    ) {
+        for r in reqs {
+            debug_assert!(r.arrival_us <= batch.dispatch_us, "dispatched before arrival");
+            self.by_id.insert(r.id, self.requests.len());
+            self.requests.push(RequestRecord {
+                id: r.id,
+                requester: r.requester,
+                vertex: r.vertex,
+                arrival_us: r.arrival_us,
+                dispatch_us: batch.dispatch_us,
+                completion_us,
+                batch: batch.index,
+                predicted: 0,
+            });
+        }
+        self.batches.push(batch);
+    }
+
+    /// Attach a prediction to its request (panics on unknown ids — the
+    /// executor only predicts what the server admitted).
+    pub fn set_prediction(&mut self, id: u64, class: u16) {
+        let idx = *self.by_id.get(&id).expect("prediction for an unadmitted request");
+        self.requests[idx].predicted = class;
+    }
+
+    /// FNV-1a over every record in id order: timestamps, batch
+    /// assignment, and predictions. Two runs with equal checksums made
+    /// the same admissions at the same virtual times and predicted the
+    /// same classes.
+    pub fn checksum(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut ids: Vec<u64> = self.requests.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        let mut h = OFFSET;
+        let mut fold = |x: u64| {
+            for byte in x.to_le_bytes() {
+                h ^= byte as u64;
+                h = h.wrapping_mul(PRIME);
+            }
+        };
+        for id in ids {
+            let r = &self.requests[self.by_id[&id]];
+            fold(r.id);
+            fold(r.requester as u64);
+            fold(r.vertex as u64);
+            fold(r.arrival_us);
+            fold(r.dispatch_us);
+            fold(r.completion_us);
+            fold(r.batch as u64);
+            fold(r.predicted as u64);
+        }
+        h
+    }
+
+    /// Reduce the ledger to the serving metrics, judging latencies
+    /// against `slo_us`.
+    pub fn summarize(&self, slo_us: u64) -> ServeReport {
+        let n = self.requests.len();
+        if n == 0 {
+            return ServeReport { slo_ms: slo_us as f64 / 1e3, ..Default::default() };
+        }
+        let mut lat_ms: Vec<f64> =
+            self.requests.iter().map(|r| r.latency_us() as f64 / 1e3).collect();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let violations = self.requests.iter().filter(|r| r.latency_us() > slo_us).count();
+        let first_arrival = self.requests.iter().map(|r| r.arrival_us).min().unwrap();
+        let last_completion = self.requests.iter().map(|r| r.completion_us).max().unwrap();
+        let span_s = (last_completion - first_arrival).max(1) as f64 / 1e6;
+        let storage: u64 = self.batches.iter().map(|b| b.storage_bytes).sum();
+        let fabric: u64 = self.batches.iter().map(|b| b.fabric_bytes).sum();
+        ServeReport {
+            served: n as u64,
+            batches: self.batches.len() as u64,
+            dropped: self.dropped,
+            mean_batch: n as f64 / self.batches.len().max(1) as f64,
+            p50_ms: percentile(&lat_ms, 0.50),
+            p90_ms: percentile(&lat_ms, 0.90),
+            p99_ms: percentile(&lat_ms, 0.99),
+            max_ms: lat_ms[n - 1],
+            requests_per_s: n as f64 / span_s,
+            storage_bytes_per_req: storage as f64 / n as f64,
+            fabric_bytes_per_req: fabric as f64 / n as f64,
+            slo_ms: slo_us as f64 / 1e3,
+            slo_violations: violations as u64,
+            slo_violation_rate: violations as f64 / n as f64,
+            checksum: self.checksum(),
+        }
+    }
+}
+
+/// The serving-plane scorecard (latencies in virtual milliseconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeReport {
+    pub served: u64,
+    pub batches: u64,
+    pub dropped: u64,
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    /// virtual throughput: served / (last completion − first arrival).
+    pub requests_per_s: f64,
+    /// storage (β) bytes per served request.
+    pub storage_bytes_per_req: f64,
+    /// fabric (α) feature-row bytes per served request.
+    pub fabric_bytes_per_req: f64,
+    pub slo_ms: f64,
+    pub slo_violations: u64,
+    pub slo_violation_rate: f64,
+    /// ledger checksum (admissions + timestamps + predictions).
+    pub checksum: u64,
+}
+
+impl ServeReport {
+    /// Total data-plane bytes per request (β + α) — the cooperative
+    /// batching headline column.
+    pub fn bytes_per_req(&self) -> f64 {
+        self.storage_bytes_per_req + self.fabric_bytes_per_req
+    }
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "served {} requests in {} batches (mean batch {:.1}, dropped {})",
+            self.served, self.batches, self.mean_batch, self.dropped
+        )?;
+        writeln!(
+            f,
+            "latency ms: p50 {:.2}  p90 {:.2}  p99 {:.2}  max {:.2}  (SLO {:.1} ms, \
+             violations {} = {:.2}%)",
+            self.p50_ms,
+            self.p90_ms,
+            self.p99_ms,
+            self.max_ms,
+            self.slo_ms,
+            self.slo_violations,
+            self.slo_violation_rate * 100.0
+        )?;
+        write!(
+            f,
+            "throughput {:.0} req/s (virtual); bytes/request: {:.0} storage (β) + {:.0} \
+             fabric (α) = {:.0}; ledger checksum {:#018x}",
+            self.requests_per_s,
+            self.storage_bytes_per_req,
+            self.fabric_bytes_per_req,
+            self.bytes_per_req(),
+            self.checksum
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::workload::Request;
+
+    fn req(id: u64, requester: u32, vertex: VertexId, arrival_us: u64) -> Request {
+        Request { id, requester, vertex, arrival_us }
+    }
+
+    fn two_batch_ledger() -> Ledger {
+        let mut l = Ledger::new();
+        l.record_batch(
+            BatchRecord {
+                index: 0,
+                size: 2,
+                dispatch_us: 100,
+                service_us: 400,
+                storage_bytes: 1000,
+                fabric_bytes: 200,
+            },
+            &[req(0, 0, 5, 10), req(1, 1, 9, 60)],
+            500,
+        );
+        l.record_batch(
+            BatchRecord {
+                index: 1,
+                size: 1,
+                dispatch_us: 700,
+                service_us: 300,
+                storage_bytes: 500,
+                fabric_bytes: 0,
+            },
+            &[req(2, 0, 7, 600)],
+            1000,
+        );
+        l.set_prediction(0, 3);
+        l.set_prediction(1, 1);
+        l.set_prediction(2, 3);
+        l
+    }
+
+    #[test]
+    fn summarize_reduces_latency_and_bytes() {
+        let l = two_batch_ledger();
+        let r = l.summarize(450);
+        assert_eq!(r.served, 3);
+        assert_eq!(r.batches, 2);
+        assert!((r.mean_batch - 1.5).abs() < 1e-12);
+        // latencies: 490, 440, 400 µs → sorted [0.40, 0.44, 0.49] ms
+        assert!((r.p50_ms - 0.44).abs() < 1e-9);
+        assert!((r.max_ms - 0.49).abs() < 1e-9);
+        assert_eq!(r.slo_violations, 1, "490µs breaches a 450µs SLO");
+        assert!((r.storage_bytes_per_req - 500.0).abs() < 1e-9);
+        assert!((r.fabric_bytes_per_req - 200.0 / 3.0).abs() < 1e-9);
+        assert!((r.bytes_per_req() - (1500.0 + 200.0) / 3.0).abs() < 1e-9);
+        // span = 1000 − 10 µs → ~3030 req/s virtual
+        assert!((r.requests_per_s - 3.0 / (990.0 / 1e6)).abs() < 1.0);
+    }
+
+    #[test]
+    fn checksum_is_stable_and_sensitive() {
+        let a = two_batch_ledger();
+        let b = two_batch_ledger();
+        assert_eq!(a.checksum(), b.checksum(), "identical ledgers, identical checksums");
+        let mut c = two_batch_ledger();
+        c.set_prediction(1, 2);
+        assert_ne!(a.checksum(), c.checksum(), "predictions are part of the contract");
+        let mut d = two_batch_ledger();
+        d.requests[0].completion_us += 1;
+        assert_ne!(a.checksum(), d.checksum(), "timestamps are part of the contract");
+    }
+
+    #[test]
+    fn empty_ledger_summarizes_to_zeros() {
+        let r = Ledger::new().summarize(1000);
+        assert_eq!(r.served, 0);
+        assert_eq!(r.batches, 0);
+        assert_eq!(r.p99_ms, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "unadmitted")]
+    fn prediction_for_unknown_request_is_a_bug() {
+        let mut l = Ledger::new();
+        l.set_prediction(42, 0);
+    }
+}

@@ -1,0 +1,288 @@
+//! Deterministic request generators over a dataset's vertex population.
+//!
+//! Two arrival disciplines, both driven by one seeded [`Pcg64`] stream
+//! so a run is reproducible down to the microsecond:
+//!
+//! * **Open-loop Poisson** ([`WorkloadKind::OpenPoisson`]) — arrivals at
+//!   exponential interarrival gaps with mean `1/rate`, independent of
+//!   completions (the offered load does not back off when the server
+//!   falls behind — the discipline that exposes SLO violations honestly;
+//!   see "Open Versus Closed: A Cautionary Tale", Schroeder et al.).
+//! * **Closed-loop** ([`WorkloadKind::ClosedLoop`]) — `clients` logical
+//!   users, each with at most one request outstanding; after a
+//!   completion the client thinks for an exponential time with mean
+//!   `clients/rate` and issues its next request, so the aggregate
+//!   offered load matches `rate` while the server keeps up.
+//!
+//! Each request targets one vertex of the dataset's population, drawn
+//! from a **hot-set mix**: with probability `hot_prob` the vertex comes
+//! from a fixed random subset of `hot_frac·|V|` vertices, else uniformly
+//! from the whole population. The skew is what makes the per-PE LRU row
+//! caches (persisting across batches, κ-style) earn their keep in the
+//! latency numbers.
+//!
+//! Requests within one requester are issued in increasing arrival time
+//! and increasing id — the FIFO baseline the batcher admission property
+//! test checks against.
+
+use crate::graph::VertexId;
+use crate::util::rng::Pcg64;
+
+/// One inference request: "what class is vertex `vertex`?"
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Request {
+    /// globally unique, assigned in creation (= arrival-scheduling)
+    /// order.
+    pub id: u64,
+    /// logical client issuing the request.
+    pub requester: u32,
+    /// the queried vertex.
+    pub vertex: VertexId,
+    /// virtual arrival timestamp (µs).
+    pub arrival_us: u64,
+}
+
+/// Arrival discipline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    OpenPoisson,
+    ClosedLoop,
+}
+
+impl WorkloadKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkloadKind::OpenPoisson => "open",
+            WorkloadKind::ClosedLoop => "closed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<WorkloadKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "open" | "poisson" => Some(WorkloadKind::OpenPoisson),
+            "closed" | "closed-loop" => Some(WorkloadKind::ClosedLoop),
+            _ => None,
+        }
+    }
+}
+
+/// The request generator. All randomness flows from the construction
+/// seed; the generator never reads the wall clock.
+pub struct Workload {
+    kind: WorkloadKind,
+    rng: Pcg64,
+    /// open loop: mean interarrival (µs). closed loop: mean think (µs).
+    mean_gap_us: f64,
+    clients: u32,
+    /// round-robin requester assignment for open-loop arrivals.
+    next_client: u32,
+    hot: Vec<VertexId>,
+    hot_prob: f64,
+    population: usize,
+    next_id: u64,
+}
+
+impl Workload {
+    /// Build a generator over a population of `num_vertices`.
+    /// `rate_per_s` is the aggregate offered load; for the closed loop
+    /// it is converted to a per-client mean think time of
+    /// `clients/rate` so both disciplines offer comparable load.
+    pub fn new(
+        num_vertices: usize,
+        kind: WorkloadKind,
+        rate_per_s: f64,
+        clients: u32,
+        hot_prob: f64,
+        hot_frac: f64,
+        seed: u64,
+    ) -> Workload {
+        assert!(num_vertices > 0, "empty vertex population");
+        assert!(rate_per_s > 0.0, "rate must be positive");
+        assert!(clients >= 1, "need at least one client");
+        assert!((0.0..=1.0).contains(&hot_prob), "hot_prob in [0,1]");
+        assert!(hot_frac > 0.0 && hot_frac <= 1.0, "hot_frac in (0,1]");
+        let mut rng = Pcg64::new(seed ^ 0x5E4E);
+        let hot_n = ((num_vertices as f64 * hot_frac) as usize).clamp(1, num_vertices);
+        let hot: Vec<VertexId> = rng.sample_distinct(num_vertices, hot_n);
+        let mean_gap_us = match kind {
+            WorkloadKind::OpenPoisson => 1e6 / rate_per_s,
+            WorkloadKind::ClosedLoop => clients as f64 * 1e6 / rate_per_s,
+        };
+        Workload {
+            kind,
+            rng,
+            mean_gap_us,
+            clients,
+            next_client: 0,
+            hot,
+            hot_prob,
+            population: num_vertices,
+            next_id: 0,
+        }
+    }
+
+    pub fn kind(&self) -> WorkloadKind {
+        self.kind
+    }
+
+    /// Expected interarrival gap of the *aggregate* stream (µs) — the
+    /// adaptive batcher's look-ahead horizon.
+    pub fn expected_gap_us(&self) -> f64 {
+        match self.kind {
+            WorkloadKind::OpenPoisson => self.mean_gap_us,
+            WorkloadKind::ClosedLoop => self.mean_gap_us / self.clients as f64,
+        }
+    }
+
+    /// Exponential variate with the given mean, floored at 1 µs so
+    /// virtual time always advances between arrivals of one stream.
+    fn exp_us(&mut self, mean: f64) -> u64 {
+        let u = self.rng.next_f64();
+        ((-mean * (1.0 - u).ln()).round() as u64).max(1)
+    }
+
+    fn draw_vertex(&mut self) -> VertexId {
+        if self.rng.next_f64() < self.hot_prob {
+            self.hot[self.rng.next_below(self.hot.len() as u64) as usize]
+        } else {
+            self.rng.next_below(self.population as u64) as VertexId
+        }
+    }
+
+    fn make_request(&mut self, requester: u32, arrival_us: u64) -> Request {
+        let id = self.next_id;
+        self.next_id += 1;
+        Request { id, requester, vertex: self.draw_vertex(), arrival_us }
+    }
+
+    /// The arrivals to seed the event queue with at time 0: one pending
+    /// arrival for the open loop, one per client for the closed loop
+    /// (each staggered by an independent think draw).
+    pub fn initial_arrivals(&mut self) -> Vec<Request> {
+        match self.kind {
+            WorkloadKind::OpenPoisson => {
+                let t = self.exp_us(self.mean_gap_us);
+                let c = self.next_client % self.clients;
+                self.next_client += 1;
+                vec![self.make_request(c, t)]
+            }
+            WorkloadKind::ClosedLoop => (0..self.clients)
+                .map(|c| {
+                    let t = self.exp_us(self.mean_gap_us);
+                    self.make_request(c, t)
+                })
+                .collect(),
+        }
+    }
+
+    /// Open loop only: the arrival after `prev` (schedule when `prev`'s
+    /// arrival event fires, keeping exactly one pending arrival).
+    pub fn next_open(&mut self, prev_arrival_us: u64) -> Request {
+        assert_eq!(self.kind, WorkloadKind::OpenPoisson, "open-loop chaining only");
+        let t = prev_arrival_us + self.exp_us(self.mean_gap_us);
+        let c = self.next_client % self.clients;
+        self.next_client += 1;
+        self.make_request(c, t)
+    }
+
+    /// Closed loop only: `requester`'s next request after its previous
+    /// one completed at `completion_us` (think time, then re-issue).
+    pub fn next_after_completion(&mut self, requester: u32, completion_us: u64) -> Request {
+        assert_eq!(self.kind, WorkloadKind::ClosedLoop, "completion chaining is closed-loop");
+        let t = completion_us + self.exp_us(self.mean_gap_us);
+        self.make_request(requester, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wl(kind: WorkloadKind, seed: u64) -> Workload {
+        Workload::new(2000, kind, 5000.0, 4, 0.8, 0.05, seed)
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let mut a = wl(WorkloadKind::OpenPoisson, 9);
+        let mut b = wl(WorkloadKind::OpenPoisson, 9);
+        let mut ra = a.initial_arrivals().remove(0);
+        let mut rb = b.initial_arrivals().remove(0);
+        for _ in 0..200 {
+            assert_eq!(ra, rb);
+            ra = a.next_open(ra.arrival_us);
+            rb = b.next_open(rb.arrival_us);
+        }
+        let mut c = wl(WorkloadKind::OpenPoisson, 10);
+        let rc = c.initial_arrivals().remove(0);
+        assert_ne!((rc.arrival_us, rc.vertex), (rb.arrival_us, rb.vertex), "seed matters");
+    }
+
+    #[test]
+    fn open_loop_rate_and_monotonicity() {
+        let mut w = wl(WorkloadKind::OpenPoisson, 3);
+        let mut r = w.initial_arrivals().remove(0);
+        let (mut n, mut last) = (0u64, 0u64);
+        for _ in 0..4000 {
+            assert!(r.arrival_us > last, "arrivals strictly ordered");
+            assert!(r.id == n, "ids count creation order");
+            last = r.arrival_us;
+            n += 1;
+            r = w.next_open(r.arrival_us);
+        }
+        // 5000 req/s → mean gap 200µs; 4000 arrivals ≈ 0.8 virtual s
+        let mean_gap = last as f64 / n as f64;
+        assert!((mean_gap - 200.0).abs() < 20.0, "mean gap {mean_gap} vs 200µs");
+    }
+
+    #[test]
+    fn hot_set_skews_vertex_draws() {
+        let mut w = Workload::new(2000, WorkloadKind::OpenPoisson, 1000.0, 2, 0.9, 0.05, 7);
+        let hot: std::collections::HashSet<VertexId> = w.hot.iter().copied().collect();
+        let mut r = w.initial_arrivals().remove(0);
+        let mut hits = 0usize;
+        let total = 2000;
+        for _ in 0..total {
+            if hot.contains(&r.vertex) {
+                hits += 1;
+            }
+            r = w.next_open(r.arrival_us);
+        }
+        // 90% targeted at 5% of vertices (+ ~5%·0.1 uniform spillover)
+        let frac = hits as f64 / total as f64;
+        assert!(frac > 0.8, "hot fraction {frac} — skew must bite");
+        assert!(w.hot.len() == 100, "5% of 2000");
+    }
+
+    #[test]
+    fn requester_streams_are_fifo_by_construction() {
+        let mut w = wl(WorkloadKind::OpenPoisson, 21);
+        let mut r = w.initial_arrivals().remove(0);
+        let mut last_per: std::collections::HashMap<u32, (u64, u64)> = Default::default();
+        for _ in 0..500 {
+            if let Some(&(id, at)) = last_per.get(&r.requester) {
+                assert!(r.id > id && r.arrival_us > at, "per-requester order");
+            }
+            last_per.insert(r.requester, (r.id, r.arrival_us));
+            r = w.next_open(r.arrival_us);
+        }
+        assert_eq!(last_per.len(), 4, "round-robin covers all clients");
+    }
+
+    #[test]
+    fn closed_loop_one_outstanding_per_client() {
+        let mut w = wl(WorkloadKind::ClosedLoop, 5);
+        let first = w.initial_arrivals();
+        assert_eq!(first.len(), 4, "one initial request per client");
+        let requesters: std::collections::HashSet<u32> =
+            first.iter().map(|r| r.requester).collect();
+        assert_eq!(requesters.len(), 4);
+        // chaining: next request of client 2 comes strictly after its
+        // completion
+        let next = w.next_after_completion(2, 10_000);
+        assert_eq!(next.requester, 2);
+        assert!(next.arrival_us > 10_000);
+        // aggregate offered load ≈ rate: mean think = clients/rate
+        assert!((w.expected_gap_us() - 200.0).abs() < 1e-9);
+    }
+}

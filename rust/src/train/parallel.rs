@@ -102,10 +102,11 @@ fn flat_len(dim: usize, classes: usize) -> usize {
 }
 
 /// The model's forward pass for one row: `logits = b + x·W` (W row-major
-/// `[dim × classes]`). One implementation shared by training and
-/// evaluation so the two can never drift numerically (f32 summation
-/// order included).
-fn forward_logits(w: &[f32], b: &[f32], x: &[f32], logits: &mut [f32]) {
+/// `[dim × classes]`). One implementation shared by training,
+/// evaluation, *and* the serving plane's prediction path
+/// ([`crate::serve::executor`]) so the three can never drift numerically
+/// (f32 summation order included).
+pub(crate) fn forward_logits(w: &[f32], b: &[f32], x: &[f32], logits: &mut [f32]) {
     let classes = b.len();
     logits.copy_from_slice(b);
     for (j, &xj) in x.iter().enumerate() {
@@ -120,7 +121,7 @@ fn forward_logits(w: &[f32], b: &[f32], x: &[f32], logits: &mut [f32]) {
 /// training accuracy and evaluation alike. NaN-safe: `>` is false for
 /// NaN, so a diverged model degrades to predicting class 0 instead of
 /// panicking.
-fn argmax(logits: &[f32]) -> usize {
+pub(crate) fn argmax(logits: &[f32]) -> usize {
     let mut best = 0usize;
     for (c, &l) in logits.iter().enumerate().skip(1) {
         if l > logits[best] {
@@ -400,6 +401,25 @@ impl ParallelTrainer {
         rep.fabric_bytes_per_step /= m;
         rep.grad_bytes_per_step /= m;
         rep
+    }
+
+    /// Replica 0's forward head `(W, b)` (W row-major `[dim × classes]`)
+    /// — the model the serving plane runs per request. Lockstep makes
+    /// replica 0 representative of every PE.
+    pub fn head(&self) -> (&[f32], &[f32]) {
+        (&self.replicas[0].params[0], &self.replicas[0].params[1])
+    }
+
+    /// Class prediction for one gathered row through replica 0's head —
+    /// the exact `forward_logits` + first-max `argmax` pair training and
+    /// evaluation use, exposed for per-request serving. `logits` is
+    /// caller-provided scratch of length `num_classes`.
+    pub fn predict_row(&self, x: &[f32], logits: &mut [f32]) -> u16 {
+        debug_assert_eq!(x.len(), self.dim);
+        debug_assert_eq!(logits.len(), self.classes);
+        let (w, b) = self.head();
+        forward_logits(w, b, x, logits);
+        argmax(logits) as u16
     }
 
     /// Holdout accuracy of the (lockstep) model over `vs`, reading rows

@@ -148,6 +148,38 @@ pub fn merge_section(
     std::fs::write(path, Json::Obj(root).to_string_pretty())
 }
 
+/// Current schema version of `BENCH_pipeline.json` sections. Bump when a
+/// section's field semantics change incompatibly (PR 5 introduced the
+/// stamp itself, so it starts at 1).
+pub const BENCH_SCHEMA_VERSION: u64 = 1;
+
+/// How every stamped section's numbers derive from their builder seed —
+/// recorded next to the seed so artifact readers can tell at a glance
+/// whether two artifacts are comparable. PR 2 unified all seed defaults
+/// behind `pipeline::DEFAULT_SEED` and made the *single* builder seed
+/// feed dataset generation, partitioning, and the per-PE RNG streams;
+/// that derivation change is exactly what silently broke comparability
+/// of pre-PR-2 bench artifacts.
+pub const SEED_RECIPE: &str = "pipeline-builder-unified (one seed -> dataset+partition+streams)";
+
+/// Wrap a bench section body with its provenance stamp:
+/// `schema_version` ([`BENCH_SCHEMA_VERSION`]), the builder seed the
+/// run's numbers derive from, and the [`SEED_RECIPE`] derivation tag.
+/// Every `BENCH_pipeline.json` section goes through here (bench_coop,
+/// bench_train_step, bench_serve), so artifacts from different commits
+/// are self-describing: differing `schema_version` or `seed_recipe`
+/// means the absolute numbers are not comparable.
+///
+/// The seed is stamped as a hex *string*: JSON numbers are f64 here, and
+/// a provenance stamp that silently rounds seeds above 2^53 would defeat
+/// its own purpose.
+pub fn stamped(builder_seed: u64, mut body: BTreeMap<String, Json>) -> Json {
+    body.insert("schema_version".to_string(), Json::Num(BENCH_SCHEMA_VERSION as f64));
+    body.insert("builder_seed".to_string(), Json::Str(format!("{builder_seed:#x}")));
+    body.insert("seed_recipe".to_string(), Json::Str(SEED_RECIPE.to_string()));
+    Json::Obj(body)
+}
+
 fn escape(s: &str) -> String {
     s.chars()
         .flat_map(|c| match c {
@@ -376,6 +408,23 @@ mod tests {
     fn numbers() {
         assert_eq!(Json::parse("-3.5e2").unwrap().as_f64(), Some(-350.0));
         assert_eq!(Json::parse("0").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn stamped_sections_carry_schema_and_seed_recipe() {
+        let mut body = BTreeMap::new();
+        body.insert("wall_ms".to_string(), Json::Num(2.5));
+        let s = stamped(7, body);
+        assert_eq!(s.get("schema_version").unwrap().as_f64(), Some(BENCH_SCHEMA_VERSION as f64));
+        assert_eq!(s.get("builder_seed").unwrap().as_str(), Some("0x7"));
+        assert_eq!(s.get("seed_recipe").unwrap().as_str(), Some(SEED_RECIPE));
+        assert_eq!(s.get("wall_ms").unwrap().as_f64(), Some(2.5), "body fields survive");
+        // round-trips through the writer/parser
+        let back = Json::parse(&s.to_string_pretty()).unwrap();
+        assert_eq!(back, s);
+        // a full-width u64 seed survives exactly (hex string, not f64)
+        let big = stamped(0xDEAD_BEEF_DEAD_BEEF, BTreeMap::new());
+        assert_eq!(big.get("builder_seed").unwrap().as_str(), Some("0xdeadbeefdeadbeef"));
     }
 
     #[test]

@@ -21,7 +21,31 @@ impl Timer {
     }
 }
 
+/// Exact percentile of an **ascending-sorted** sample via linear
+/// interpolation between closest ranks (the "linear" / type-7 estimator:
+/// rank `h = p·(n-1)`, value `x[⌊h⌋] + (h-⌊h⌋)·(x[⌊h⌋+1] - x[⌊h⌋])`).
+/// `p` is in `[0, 1]`; out-of-range `p` clamps to the extremes. Panics on
+/// an empty slice — callers own the emptiness policy.
+///
+/// This is the latency-ledger reduction of `serve::report` (p50/p90/p99
+/// per-request latencies) and the bench latency columns; unlike the old
+/// nearest-rank rounding it is exact on small samples (the p99 of 100
+/// points interpolates between the two largest instead of snapping).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of an empty sample");
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let h = p.clamp(0.0, 1.0) * (n - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = (lo + 1).min(n - 1);
+    let frac = h - lo as f64;
+    sorted[lo] + frac * (sorted[hi] - sorted[lo])
+}
+
 /// Order statistics summary of a set of samples (times, counts, ...).
+/// Percentiles use exact sorted-sample interpolation ([`percentile`]).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
     pub n: usize,
@@ -29,7 +53,9 @@ pub struct Summary {
     pub std: f64,
     pub min: f64,
     pub p50: f64,
+    pub p90: f64,
     pub p95: f64,
+    pub p99: f64,
     pub max: f64,
 }
 
@@ -43,17 +69,15 @@ impl Summary {
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
-        let q = |p: f64| -> f64 {
-            let idx = (p * (n - 1) as f64).round() as usize;
-            xs[idx.min(n - 1)]
-        };
         Summary {
             n,
             mean,
             std: var.sqrt(),
             min: xs[0],
-            p50: q(0.50),
-            p95: q(0.95),
+            p50: percentile(&xs, 0.50),
+            p90: percentile(&xs, 0.90),
+            p95: percentile(&xs, 0.95),
+            p99: percentile(&xs, 0.99),
             max: xs[n - 1],
         }
     }
@@ -63,8 +87,10 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} mean={:.4} std={:.4} min={:.4} p50={:.4} p95={:.4} max={:.4}",
-            self.n, self.mean, self.std, self.min, self.p50, self.p95, self.max
+            "n={} mean={:.4} std={:.4} min={:.4} p50={:.4} p90={:.4} p95={:.4} p99={:.4} \
+             max={:.4}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p90, self.p95, self.p99,
+            self.max
         )
     }
 }
@@ -106,6 +132,42 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates_exactly() {
+        // even-length sample: the median interpolates between the two
+        // middle elements instead of snapping to one of them
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.50), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        // quartile lands a quarter of the way into a gap
+        assert!((percentile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        // 1..=100: h = 0.99·99 = 98.01 → between 99.0 and 100.0
+        let big: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&big, 0.99) - 99.01).abs() < 1e-9);
+        assert!((percentile(&big, 0.90) - 90.1).abs() < 1e-9);
+        // singleton: every percentile is the sample
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+        // out-of-range p clamps
+        assert_eq!(percentile(&xs, -0.5), 1.0);
+        assert_eq!(percentile(&xs, 1.5), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty sample")]
+    fn percentile_rejects_empty() {
+        percentile(&[], 0.5);
+    }
+
+    #[test]
+    fn summary_percentile_fields_ordered() {
+        let xs: Vec<f64> = (0..200).map(|i| (i * 37 % 200) as f64).collect();
+        let s = Summary::of(&xs);
+        assert!(s.min <= s.p50 && s.p50 <= s.p90, "{s}");
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max, "{s}");
+        assert!((s.p99 - 197.01).abs() < 1e-9, "exact p99 of 0..=199: {}", s.p99);
     }
 
     #[test]

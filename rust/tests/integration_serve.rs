@@ -1,0 +1,245 @@
+//! Serving-plane determinism gates (the PR's acceptance criteria):
+//!
+//! * the full request-latency ledger — admissions, virtual timestamps,
+//!   batch assignment — and the prediction checksum are **bit-identical**
+//!   across `--exec serial|threaded` at a fixed seed;
+//! * likewise across `--prefetch 0|1` (prediction prefetching overlaps
+//!   real CPU work, never virtual time);
+//! * batcher admission never violates FIFO order within a requester
+//!   (property-tested over randomized rates/SLOs/policies/modes).
+
+use coopgnn::coop::engine::{ExecMode, Mode};
+use coopgnn::pipeline::PipelineBuilder;
+use coopgnn::prop_assert;
+use coopgnn::serve::{BatcherKind, Ledger, ServeConfig, WorkloadKind};
+use coopgnn::util::propcheck::check;
+
+#[allow(clippy::too_many_arguments)]
+fn run_serve(
+    mode: Mode,
+    exec: ExecMode,
+    prefetch: bool,
+    batcher: BatcherKind,
+    workload: WorkloadKind,
+    pes: usize,
+    seed: u64,
+    rate: f64,
+    slo_us: u64,
+    fixed_per_pe: usize,
+    duration: usize,
+) -> Ledger {
+    let pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(mode)
+        .exec(exec)
+        .num_pes(pes)
+        .prefetch(prefetch)
+        .seed(seed)
+        .build()
+        .unwrap();
+    let scfg = ServeConfig {
+        rate_per_s: rate,
+        slo_us,
+        batcher,
+        duration_batches: duration,
+        fixed_batch_per_pe: fixed_per_pe,
+        workload,
+        clients: 16,
+        ..Default::default()
+    };
+    pipe.server(scfg).unwrap().run().ledger
+}
+
+fn assert_ledgers_identical(a: &Ledger, b: &Ledger, label: &str) {
+    assert_eq!(a.requests.len(), b.requests.len(), "{label}: served counts");
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert_eq!(x, y, "{label}: request records must match bit-for-bit");
+    }
+    assert_eq!(a.batches.len(), b.batches.len(), "{label}: batch counts");
+    for (x, y) in a.batches.iter().zip(&b.batches) {
+        assert_eq!(
+            (x.index, x.size, x.dispatch_us, x.service_us, x.storage_bytes, x.fabric_bytes),
+            (y.index, y.size, y.dispatch_us, y.service_us, y.storage_bytes, y.fabric_bytes),
+            "{label}: batch records must match"
+        );
+    }
+    assert_eq!(a.dropped, b.dropped, "{label}: drop accounting");
+    assert_eq!(a.checksum(), b.checksum(), "{label}: ledger checksum");
+}
+
+/// The headline determinism gate: serial and threaded execution produce
+/// the identical ledger (timestamps + admissions + predictions), for
+/// both modes and both batchers.
+#[test]
+fn serial_and_threaded_ledgers_are_bit_identical() {
+    for mode in [Mode::Independent, Mode::Cooperative] {
+        for batcher in [BatcherKind::Fixed, BatcherKind::Adaptive] {
+            let serial = run_serve(
+                mode,
+                ExecMode::Serial,
+                false,
+                batcher,
+                WorkloadKind::OpenPoisson,
+                2,
+                13,
+                15_000.0,
+                25_000,
+                8,
+                8,
+            );
+            let threaded = run_serve(
+                mode,
+                ExecMode::Threaded,
+                false,
+                batcher,
+                WorkloadKind::OpenPoisson,
+                2,
+                13,
+                15_000.0,
+                25_000,
+                8,
+                8,
+            );
+            assert!(serial.requests.len() > 8, "{mode:?}/{batcher:?}: sim must serve requests");
+            assert_ledgers_identical(&serial, &threaded, &format!("{mode:?}/{batcher:?}"));
+        }
+    }
+}
+
+/// Prediction prefetching overlaps batch t's forward pass with batch
+/// t+1's admission on real threads — and must be invisible in virtual
+/// time and in the predictions.
+#[test]
+fn prefetch_on_off_ledgers_are_bit_identical() {
+    for mode in [Mode::Independent, Mode::Cooperative] {
+        for exec in [ExecMode::Serial, ExecMode::Threaded] {
+            let off = run_serve(
+                mode,
+                exec,
+                false,
+                BatcherKind::Adaptive,
+                WorkloadKind::OpenPoisson,
+                3,
+                29,
+                12_000.0,
+                30_000,
+                8,
+                7,
+            );
+            let on = run_serve(
+                mode,
+                exec,
+                true,
+                BatcherKind::Adaptive,
+                WorkloadKind::OpenPoisson,
+                3,
+                29,
+                12_000.0,
+                30_000,
+                8,
+                7,
+            );
+            assert_ledgers_identical(&off, &on, &format!("{mode:?}/{exec:?} prefetch"));
+        }
+    }
+}
+
+/// Closed-loop runs are deterministic too (completions feed arrivals,
+/// so admission timing feeds back into the workload).
+#[test]
+fn closed_loop_serial_threaded_identical() {
+    let a = run_serve(
+        Mode::Cooperative,
+        ExecMode::Serial,
+        false,
+        BatcherKind::Fixed,
+        WorkloadKind::ClosedLoop,
+        2,
+        41,
+        8_000.0,
+        20_000,
+        4,
+        6,
+    );
+    let b = run_serve(
+        Mode::Cooperative,
+        ExecMode::Threaded,
+        true,
+        BatcherKind::Fixed,
+        WorkloadKind::ClosedLoop,
+        2,
+        41,
+        8_000.0,
+        20_000,
+        4,
+        6,
+    );
+    assert!(a.requests.len() > 4);
+    assert_ledgers_identical(&a, &b, "closed loop");
+}
+
+/// Property: batcher admission never violates FIFO order within a
+/// requester — if request A of a client arrived before request B, A is
+/// dispatched no later than B (and in no later a batch), across
+/// randomized rates, SLOs, policies, modes, and workloads.
+#[test]
+fn prop_admission_preserves_fifo_per_requester() {
+    check("serve-fifo", 0x5E12, 10, |rng| {
+        let mode =
+            if rng.next_below(2) == 0 { Mode::Independent } else { Mode::Cooperative };
+        let batcher =
+            if rng.next_below(2) == 0 { BatcherKind::Fixed } else { BatcherKind::Adaptive };
+        let workload = if rng.next_below(2) == 0 {
+            WorkloadKind::OpenPoisson
+        } else {
+            WorkloadKind::ClosedLoop
+        };
+        let rate = 2_000.0 + rng.next_f64() * 30_000.0;
+        let slo_us = 5_000 + rng.next_below(60_000);
+        let fixed = 2 + rng.next_below(24) as usize;
+        let pes = 2 + rng.next_below(2) as usize;
+        let duration = 4 + rng.next_below(4) as usize;
+        let ledger = run_serve(
+            mode,
+            ExecMode::Threaded,
+            false,
+            batcher,
+            workload,
+            pes,
+            rng.next_u64(),
+            rate,
+            slo_us,
+            fixed,
+            duration,
+        );
+        prop_assert!(!ledger.requests.is_empty(), "sim served nothing");
+        let mut by_requester: std::collections::HashMap<u32, Vec<_>> = Default::default();
+        for r in &ledger.requests {
+            by_requester.entry(r.requester).or_default().push(*r);
+        }
+        for (client, mut rs) in by_requester {
+            rs.sort_by_key(|r| (r.arrival_us, r.id));
+            for w in rs.windows(2) {
+                prop_assert!(
+                    w[0].dispatch_us <= w[1].dispatch_us,
+                    "client {client}: request {} (arrived {}) dispatched at {} after \
+                     request {} (arrived {}) dispatched at {}",
+                    w[0].id,
+                    w[0].arrival_us,
+                    w[0].dispatch_us,
+                    w[1].id,
+                    w[1].arrival_us,
+                    w[1].dispatch_us
+                );
+                prop_assert!(
+                    w[0].batch <= w[1].batch,
+                    "client {client}: batch order inverted ({} vs {})",
+                    w[0].batch,
+                    w[1].batch
+                );
+                prop_assert!(w[0].id < w[1].id, "ids must follow arrival order");
+            }
+        }
+        Ok(())
+    });
+}
