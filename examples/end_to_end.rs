@@ -38,7 +38,7 @@ fn main() -> coopgnn::Result<()> {
         ds.graph.num_vertices(),
         ds.graph.num_edges(),
         trainer.state.num_scalars(),
-        trainer.art.batch
+        trainer.batch()
     );
     let mut csv = std::fs::File::create("results/e2e_loss.csv")?;
     writeln!(csv, "step,loss,batch_acc,val_acc,val_f1,ms_per_step")?;

@@ -1,0 +1,126 @@
+"""Export fixed-seed golden vectors for the Rust host compute plane.
+
+Runs the authoritative Python model (``compile.model``) on a small
+deterministic 2-layer batch and writes every input and expected output
+to ``rust/tests/data/golden_model.txt``. The Rust integration test
+``rust/tests/golden_model.rs`` replays the same batch through the host
+backend (`model::host`) and asserts forward logits, masked-mean loss,
+flat gradients, and the post-Adam parameters agree within 1e-5 — the
+cross-language parity contract behind `GnnModel`.
+
+Regenerate with:
+
+    cd python && python3 tests/export_golden.py
+
+The file format is line oriented: ``name: v v v ...`` with %.9g floats
+(ints print exactly), row-major flattening. Padded-block convention: a
+neighbor slot is a real edge iff its weight is nonzero, which is how the
+Rust side reconstructs its unpadded CSR ``HostBlock``s.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import ModelDims, forward, loss_and_metrics, param_shapes, train_step
+
+jax.config.update("jax_platform_name", "cpu")
+
+DIMS = ModelDims(layers=2, d_in=6, hidden=8, classes=5)
+K = 3  # fanout cap per block
+N = (5, 12, 20)  # layer widths: seeds, mid, input frontier
+LR = 0.05
+SEED = 7  # chosen so the untrained correct-count is nonzero
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "data", "golden_model.txt")
+
+
+def make_batch(rng):
+    """Deterministic padded batch with prefix-nesting self indices."""
+    feats = rng.standard_normal((N[DIMS.layers], DIMS.d_in)).astype(np.float32)
+    blocks = []
+    for l in range(DIMS.layers):
+        n_dst, n_src = N[l], N[l + 1]
+        nbr_idx = rng.integers(0, n_src, size=(n_dst, K)).astype(np.int32)
+        deg = rng.integers(0, K + 1, size=n_dst)
+        deg[0] = 0  # keep one isolated seed so zero-degree rows are covered
+        nbr_w = np.zeros((n_dst, K), np.float32)
+        self_w = np.zeros(n_dst, np.float32)
+        for i in range(n_dst):
+            inv = np.float32(1.0) / np.float32(deg[i] + 1.0)
+            nbr_w[i, : deg[i]] = inv
+            self_w[i] = inv
+        self_idx = np.arange(n_dst, dtype=np.int32)
+        blocks.append((nbr_idx, nbr_w, self_idx, self_w))
+    labels = rng.integers(0, DIMS.classes, size=N[0]).astype(np.int32)
+    mask = np.ones(N[0], np.float32)
+    return feats, blocks, labels, mask
+
+
+def make_params(rng):
+    return [
+        (rng.standard_normal(shape) * 0.25).astype(np.float32)
+        for _name, shape in param_shapes(DIMS)
+    ]
+
+
+def emit(f, name, arr):
+    vals = np.asarray(arr).reshape(-1)
+    f.write(name + ": " + " ".join("%.9g" % float(v) for v in vals) + "\n")
+
+
+def main():
+    rng = np.random.default_rng(SEED)
+    feats, blocks, labels, mask = make_batch(rng)
+    params = make_params(rng)
+
+    jp = [jnp.asarray(p) for p in params]
+    jblocks = [tuple(jnp.asarray(x) for x in b) for b in blocks]
+    jfeats, jlabels, jmask = jnp.asarray(feats), jnp.asarray(labels), jnp.asarray(mask)
+
+    logits = forward(jp, jfeats, jblocks, DIMS)
+    loss, correct = loss_and_metrics(jp, jfeats, jblocks, jlabels, jmask, DIMS)
+    grads = jax.grad(
+        lambda ps: loss_and_metrics(ps, jfeats, jblocks, jlabels, jmask, DIMS)[0]
+    )(jp)
+
+    zeros = [jnp.zeros_like(p) for p in jp]
+    new_params, _, _, t, step_loss, _ = train_step(
+        jp, zeros, zeros, jnp.float32(0.0), jfeats, jblocks, jlabels, jmask, LR, DIMS
+    )
+    assert float(t) == 1.0
+    assert abs(float(step_loss) - float(loss)) < 1e-7
+
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        f.write("# golden vectors from python/tests/export_golden.py (seed %d)\n" % SEED)
+        emit(f, "dims", [DIMS.layers, DIMS.d_in, DIMS.hidden, DIMS.classes])
+        emit(f, "k", [K])
+        emit(f, "n", list(N))
+        emit(f, "lr", [LR])
+        emit(f, "feats", feats)
+        for l, (nbr_idx, nbr_w, self_idx, self_w) in enumerate(blocks):
+            emit(f, "block%d_nbr_idx" % l, nbr_idx)
+            emit(f, "block%d_nbr_w" % l, nbr_w)
+            emit(f, "block%d_self_idx" % l, self_idx)
+            emit(f, "block%d_self_w" % l, self_w)
+        emit(f, "labels", labels)
+        for i, p in enumerate(params):
+            emit(f, "param%d" % i, p)
+        emit(f, "logits", logits)
+        emit(f, "loss", [float(loss)])
+        emit(f, "correct", [float(correct)])
+        for i, g in enumerate(grads):
+            emit(f, "grad%d" % i, g)
+        for i, p in enumerate(new_params):
+            emit(f, "new_param%d" % i, p)
+    print("wrote %s" % os.path.normpath(OUT))
+
+
+if __name__ == "__main__":
+    main()

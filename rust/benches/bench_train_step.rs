@@ -19,11 +19,13 @@
 //! `bench_train_step`) for the CI perf-trajectory artifact.
 //!
 //! Part 1.75 (always runs): the **multi-PE training plane** — 4 trainer
-//! replicas over the engine stream (independent vs cooperative
-//! minibatching) with the fabric gradient all-reduce, asserting replica
-//! lockstep and recording ms/step + storage/fabric/gradient bytes per
-//! step into the `multi_pe_train` field of the JSON section (`repro
-//! end2end` is the full multi-PE-count table).
+//! replicas of the layered GNN over the engine stream (independent vs
+//! cooperative minibatching) with the per-layer activation exchange and
+//! the fabric gradient all-reduce, asserting replica lockstep and
+//! recording ms/step + storage/fabric/activation/gradient bytes per
+//! step into the `multi_pe_train` field of the JSON section, plus the
+//! per-layer gather/matmul compute decomposition into `layered_train`
+//! (`repro end2end` is the full multi-PE-count table).
 //!
 //! Part 2 (needs `make artifacts` + a PJRT-enabled build): end-to-end
 //! train-step latency through the runtime, prefetch off vs on, with the
@@ -191,6 +193,7 @@ fn main() {
     multi.insert("batch_per_pe".to_string(), Json::Num(mp_batch as f64));
     multi.insert("steps".to_string(), Json::Num(mp_steps as f64));
     let mut mode_ms = Vec::new();
+    let mut layered = BTreeMap::new();
     for mode in [Mode::Independent, Mode::Cooperative] {
         let mpipe = PipelineBuilder::new()
             .dataset(ds_name)
@@ -209,7 +212,8 @@ fn main() {
         );
         println!(
             "parallel_train/{ds_name}_{}pe_{} {:>8.2} ms/step (compute {:.2}, all-reduce {:.2}; \
-             {:.1} KiB storage + {:.1} KiB feat fabric + {:.1} KiB grads per step)",
+             {:.1} KiB storage + {:.1} KiB feat fabric + {:.1} KiB acts + {:.1} KiB grads \
+             per step)",
             mp_pes,
             mode.name(),
             rep.ms_per_step,
@@ -217,6 +221,7 @@ fn main() {
             rep.allreduce_ms,
             rep.storage_bytes_per_step / 1024.0,
             rep.fabric_bytes_per_step / 1024.0,
+            rep.act_bytes_per_step / 1024.0,
             rep.grad_bytes_per_step / 1024.0,
         );
         let mut arm = BTreeMap::new();
@@ -225,9 +230,35 @@ fn main() {
         arm.insert("allreduce_ms".to_string(), Json::Num(rep.allreduce_ms));
         arm.insert("storage_bytes_per_step".to_string(), Json::Num(rep.storage_bytes_per_step));
         arm.insert("fabric_bytes_per_step".to_string(), Json::Num(rep.fabric_bytes_per_step));
+        arm.insert("act_bytes_per_step".to_string(), Json::Num(rep.act_bytes_per_step));
         arm.insert("grad_bytes_per_step".to_string(), Json::Num(rep.grad_bytes_per_step));
         multi.insert(mode.name().to_lowercase(), Json::Obj(arm));
         mode_ms.push(rep.ms_per_step);
+
+        // per-layer compute decomposition of the layered model: summed
+        // gather-aggregate and matmul ms over every PE and step
+        // (index 0 = output layer, matching ModelDims level order)
+        let prof = trainer.layer_profile();
+        let per_step = |v: &[f64]| {
+            Json::Arr(v.iter().map(|&ms| Json::Num(ms / mp_steps as f64)).collect())
+        };
+        let dims = trainer.dims();
+        layered.insert("layers".to_string(), Json::Num(dims.layers as f64));
+        layered.insert("hidden".to_string(), Json::Num(dims.hidden as f64));
+        let key = mode.name().to_lowercase();
+        layered.insert(format!("{key}_gather_ms_per_step"), per_step(&prof.gather_ms));
+        layered.insert(format!("{key}_matmul_ms_per_step"), per_step(&prof.matmul_ms));
+        println!(
+            "layered_train/{ds_name}_{mp_pes}pe_{} L={} h={}: gather {:?} + matmul {:?} \
+             ms/step by layer (0 = output)",
+            mode.name(),
+            dims.layers,
+            dims.hidden,
+            prof.gather_ms.iter().map(|m| (m / mp_steps as f64 * 100.0).round() / 100.0)
+                .collect::<Vec<_>>(),
+            prof.matmul_ms.iter().map(|m| (m / mp_steps as f64 * 100.0).round() / 100.0)
+                .collect::<Vec<_>>(),
+        );
     }
     let coop_speedup = if mode_ms[1] > 0.0 { mode_ms[0] / mode_ms[1] } else { 0.0 };
     multi.insert("coop_speedup_vs_indep".to_string(), Json::Num(coop_speedup));
@@ -249,6 +280,7 @@ fn main() {
     section.insert("fabric_bytes_per_batch".to_string(), Json::Num(0.0));
     section.insert("checksums_identical".to_string(), Json::Bool(true));
     section.insert("multi_pe_train".to_string(), Json::Obj(multi));
+    section.insert("layered_train".to_string(), Json::Obj(layered));
     let json_path = Path::new("BENCH_pipeline.json");
     // stamped: schema_version + the builder seed recipe (all arms above
     // build with seed 1), closing the "artifacts silently became

@@ -22,17 +22,62 @@ use crate::graph::{Csr, Partition, VertexId};
 use crate::sampling::{Neighborhoods, Sampler};
 
 /// Per-PE, per-layer sample + traffic record.
+///
+/// Besides the count/traffic fields, the layer retains the **block
+/// structure** the compute plane executes on: the sampled-edge CSR in
+/// positions into `tilde`, the self-inclusion positions, and the
+/// activation-routing data (who owns each `tilde` entry; which owned
+/// ids each peer requested). `pipeline::stream` turns these into a
+/// [`crate::model::PeCompute`] so the layered forward/backward never
+/// re-derives (or risks diverging from) what was actually sampled.
 #[derive(Clone, Debug, Default)]
 pub struct PeLayer {
     /// `S_p^l`: owned destination vertices processed by this PE.
     pub owned: Vec<VertexId>,
     /// `S̃_p^{l+1}`: unique source ids this PE's sampled edges reference
-    /// (incl. `owned` for self-inclusion).
+    /// (incl. `owned` for self-inclusion), sorted ascending.
     pub tilde: Vec<VertexId>,
     /// |E_p^l|: sampled edges.
     pub edges: usize,
     /// how many of `tilde` live on other PEs (the `c·|S̃|` traffic).
     pub cross: usize,
+    /// `[owned.len()+1]` CSR offsets into `nbr_pos` (sampled-edge lists
+    /// per owned destination, in `owned` order).
+    pub nbr_offsets: Vec<u32>,
+    /// sampled-neighbor positions into `tilde` (the block's source row
+    /// space), per edge.
+    pub nbr_pos: Vec<u32>,
+    /// `[owned.len()]` position of each owned destination in `tilde`
+    /// (self-inclusion guarantees membership).
+    pub self_pos: Vec<u32>,
+    /// `[tilde.len()]` owner PE of each `tilde` entry.
+    pub tilde_owner: Vec<u32>,
+    /// This round's pre-dedup id inbox: `inbox[q]` = the ids PE `q`
+    /// requested from this PE, in `q`'s tilde order — the exact lists
+    /// activation rows must be shipped back along during layered
+    /// compute (mirrors `final_requests` for every layer).
+    pub inbox: Vec<Vec<VertexId>>,
+}
+
+/// Build the retained block-CSR fields (`nbr_offsets` / `nbr_pos` /
+/// `self_pos`) for one PE's layer: sampled neighbors and owned
+/// destinations resolved to positions in the sorted `tilde`.
+fn block_positions(
+    owned: &[VertexId],
+    tilde: &[VertexId],
+    nbh: &Neighborhoods,
+) -> (Vec<u32>, Vec<u32>, Vec<u32>) {
+    let nbr_offsets = nbh.offsets.clone();
+    let nbr_pos: Vec<u32> = nbh
+        .nbrs
+        .iter()
+        .map(|s| tilde.binary_search(s).expect("sampled nbr in tilde") as u32)
+        .collect();
+    let self_pos: Vec<u32> = owned
+        .iter()
+        .map(|v| tilde.binary_search(v).expect("self-inclusion") as u32)
+        .collect();
+    (nbr_offsets, nbr_pos, self_pos)
 }
 
 /// The result of cooperatively sampling one global minibatch.
@@ -132,18 +177,34 @@ pub fn sample_cooperative(
             tilde.sort_unstable();
             tilde.dedup();
             let mut cross = 0usize;
+            let mut tilde_owner: Vec<u32> = Vec::with_capacity(tilde.len());
             for &t in &tilde {
                 let owner = part.part_of(t);
                 if owner != p {
                     cross += 1;
                 }
+                tilde_owner.push(owner as u32);
                 buckets[p][owner].push(t);
             }
-            layer_rec.push(PeLayer { owned, tilde, edges: nbh.num_edges(), cross });
+            let (nbr_offsets, nbr_pos, self_pos) = block_positions(&owned, &tilde, &nbh);
+            layer_rec.push(PeLayer {
+                owned,
+                tilde,
+                edges: nbh.num_edges(),
+                cross,
+                nbr_offsets,
+                nbr_pos,
+                self_pos,
+                tilde_owner,
+                inbox: Vec::new(),
+            });
         }
         // all-to-all: ids travel to their owners
         let inboxes = exchange.route(&buckets, 4);
         for p in 0..p_count {
+            // retain the pre-dedup per-requester inbox: the compute
+            // plane ships activation rows back along these exact lists
+            layer_rec[p].inbox = (0..p_count).map(|q| buckets[q][p].clone()).collect();
             let mut next = inboxes[p].clone();
             next.sort_unstable();
             next.dedup();
@@ -219,13 +280,16 @@ pub fn sample_cooperative_pe(
         tilde.dedup();
         let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); p_count];
         let mut cross = 0usize;
+        let mut tilde_owner: Vec<u32> = Vec::with_capacity(tilde.len());
         for &t in &tilde {
             let owner = part.part_of(t);
             if owner != pe {
                 cross += 1;
             }
+            tilde_owner.push(owner as u32);
             buckets[owner].push(t);
         }
+        let (nbr_offsets, nbr_pos, self_pos) = block_positions(&owned, &tilde, &nbh);
         // live all-to-all: ids travel to their owners
         let inbox = ep.all_to_all(buckets, 4);
         let mut next: Vec<VertexId> = inbox.concat();
@@ -235,9 +299,19 @@ pub fn sample_cooperative_pe(
         if l == layers - 1 {
             // retain the pre-dedup per-requester lists: the feature
             // loader ships rows back along exactly these requests
-            final_requests = inbox;
+            final_requests = inbox.clone();
         }
-        out_layers.push(PeLayer { owned, tilde, edges: nbh.num_edges(), cross });
+        out_layers.push(PeLayer {
+            owned,
+            tilde,
+            edges: nbh.num_edges(),
+            cross,
+            nbr_offsets,
+            nbr_pos,
+            self_pos,
+            tilde_owner,
+            inbox,
+        });
     }
 
     PeCoopSample { layers: out_layers, final_owned: current, final_requests }
@@ -415,6 +489,28 @@ mod tests {
                     assert_eq!(ps.layers[l].tilde, want.tilde, "{kind:?} L{l} PE{p} tilde");
                     assert_eq!(ps.layers[l].edges, want.edges, "{kind:?} L{l} PE{p} edges");
                     assert_eq!(ps.layers[l].cross, want.cross, "{kind:?} L{l} PE{p} cross");
+                    // the retained block structure + routing data must
+                    // match too: the compute plane executes on these
+                    assert_eq!(
+                        ps.layers[l].nbr_offsets, want.nbr_offsets,
+                        "{kind:?} L{l} PE{p} nbr_offsets"
+                    );
+                    assert_eq!(
+                        ps.layers[l].nbr_pos, want.nbr_pos,
+                        "{kind:?} L{l} PE{p} nbr_pos"
+                    );
+                    assert_eq!(
+                        ps.layers[l].self_pos, want.self_pos,
+                        "{kind:?} L{l} PE{p} self_pos"
+                    );
+                    assert_eq!(
+                        ps.layers[l].tilde_owner, want.tilde_owner,
+                        "{kind:?} L{l} PE{p} tilde_owner"
+                    );
+                    assert_eq!(
+                        ps.layers[l].inbox, want.inbox,
+                        "{kind:?} L{l} PE{p} inbox"
+                    );
                 }
                 assert_eq!(ps.final_owned, serial.final_owned[p], "{kind:?} PE{p} final");
                 // the retained last-round requests must be each
@@ -438,6 +534,58 @@ mod tests {
             let local: u64 = results.iter().map(|r| r.2).sum();
             assert_eq!(cross, serial.exchange.cross_items, "{kind:?} cross accounting");
             assert_eq!(local, serial.exchange.local_items, "{kind:?} local accounting");
+        }
+    }
+
+    /// The retained block structure must be internally consistent: CSR
+    /// positions resolve into `tilde`, self positions point at the
+    /// owned vertices, owners match the partition, and each round's
+    /// inbox entries are owned here and cover the next layer's owned
+    /// set exactly.
+    #[test]
+    fn retained_block_structure_is_consistent() {
+        let (g, part) = fixture();
+        let seeds: Vec<u32> = (0..400).collect();
+        let coop = run_coop(&g, &part, SamplerKind::Labor0, &seeds, 55);
+        let layers = coop.num_layers();
+        for l in 0..layers {
+            for (p, pl) in coop.layers[l].iter().enumerate() {
+                assert_eq!(pl.nbr_offsets.len(), pl.owned.len() + 1, "L{l} PE{p} offsets");
+                assert_eq!(*pl.nbr_offsets.last().unwrap() as usize, pl.edges);
+                assert_eq!(pl.nbr_pos.len(), pl.edges, "L{l} PE{p} edge positions");
+                for &pos in &pl.nbr_pos {
+                    assert!((pos as usize) < pl.tilde.len(), "L{l} PE{p} pos range");
+                }
+                assert_eq!(pl.self_pos.len(), pl.owned.len());
+                for (i, &sp) in pl.self_pos.iter().enumerate() {
+                    assert_eq!(pl.tilde[sp as usize], pl.owned[i], "L{l} PE{p} self pos");
+                }
+                assert_eq!(pl.tilde_owner.len(), pl.tilde.len());
+                for (i, &o) in pl.tilde_owner.iter().enumerate() {
+                    assert_eq!(o as usize, part.part_of(pl.tilde[i]), "L{l} PE{p} owner");
+                }
+                // inbox[q] = q's tilde restricted to this owner, and the
+                // union of inboxes dedups to the next layer's owned set
+                let mut union: Vec<VertexId> = Vec::new();
+                for (q, req) in pl.inbox.iter().enumerate() {
+                    let want: Vec<VertexId> = coop.layers[l][q]
+                        .tilde
+                        .iter()
+                        .copied()
+                        .filter(|&t| part.part_of(t) == p)
+                        .collect();
+                    assert_eq!(req, &want, "L{l} owner {p} requester {q} inbox");
+                    union.extend_from_slice(req);
+                }
+                union.sort_unstable();
+                union.dedup();
+                let next_owned: &[VertexId] = if l + 1 == layers {
+                    &coop.final_owned[p]
+                } else {
+                    &coop.layers[l + 1][p].owned
+                };
+                assert_eq!(union, next_owned, "L{l} PE{p} inbox union");
+            }
         }
     }
 

@@ -67,14 +67,27 @@
 //! report matches across exec modes *and* against the preserved PR-1
 //! engine loops.
 //!
-//! Model forward/backward (Layer 2, JAX) and the aggregation kernels
-//! (Layer 1, Pallas) are AOT-compiled to HLO text by
-//! `python/compile/aot.py` and executed from Rust through PJRT
-//! (`runtime` module); Python is never on the training path. This build
-//! ships a host-side stub for the PJRT client (the offline toolchain
-//! cannot vendor the `xla` crate — see `runtime::client`), so train/eval
-//! paths report "runtime unavailable" while sampling, the engine, and the
-//! count-based repro harnesses run natively.
+//! ## The compute plane: one model API, two backends
+//!
+//! All GNN compute — single-PE training, the multi-PE plane, evaluation
+//! and serving predictions — runs layered gather→aggregate→matmul
+//! through the [`model::GnnModel`] trait. The default backend is
+//! [`model::HostModel`]: plain-Rust f32 kernels ([`model::kernels`])
+//! numerically mirroring `python/compile/model.py` (golden-vector
+//! parity is pinned in `tests/golden_model.rs`), with a per-PE step
+//! engine ([`model::host::PeStep`]) that exchanges hidden activations
+//! over the fabric in cooperative mode. Forward-only consumers hold a
+//! [`model::Predictor`] parameter snapshot.
+//!
+//! The second backend is the PJRT/AOT bridge ([`model::PjrtModel`]):
+//! model forward/backward (Layer 2, JAX) and the aggregation kernels
+//! (Layer 1, Pallas) AOT-compiled to HLO text by
+//! `python/compile/aot.py` and executed through PJRT (`runtime`
+//! module); Python is never on the training path. This build ships a
+//! host-side stub for the PJRT client (the offline toolchain cannot
+//! vendor the `xla` crate — see `runtime::client`), so the PJRT backend
+//! reports "runtime unavailable" while the host backend, sampling, the
+//! engine, and the repro harnesses run natively.
 //!
 //! ## Quick tour
 //!
@@ -107,6 +120,7 @@ pub mod coop;
 pub mod pipeline;
 pub mod costmodel;
 pub mod metrics;
+pub mod model;
 pub mod runtime;
 pub mod train;
 pub mod serve;

@@ -2,8 +2,10 @@
 //!
 //! ```text
 //! coopgnn repro <id|all> [--out DIR] [--quick] [--seed N]
-//! coopgnn train --config NAME [--dataset NAME] [--steps N] [--kappa K]
-//!               [--sampler ns|labor0|labor*|rw] [--lr F] [--eval-every N]
+//! coopgnn train [--dataset NAME] [--steps N] [--layers L] [--hidden H]
+//!               [--fanout K | K,K,..] [--kappa K] [--sampler ns|labor0|labor*|rw]
+//!               [--lr F] [--eval-every N]            # host backend (default)
+//! coopgnn train --backend pjrt --config NAME [..]    # AOT/PJRT backend
 //! coopgnn train --train-pes P [--mode coop|indep] [--batch B] [--allreduce ring|naive]
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
@@ -47,13 +49,18 @@ const REPRO_SPECS: &[ArgSpec] = &[
 ];
 
 const TRAIN_SPECS: &[ArgSpec] = &[
-    val("config", "artifact config name (default: tiny-b32)"),
-    val("dataset", "registry dataset (default: the config's dataset)"),
+    val("backend", "host|pjrt single-PE compute backend (default: host, or pjrt when \
+         --config is given; pjrt needs artifacts + a PJRT build)"),
+    val("config", "artifact config name for the pjrt backend (default: tiny-b32)"),
+    val("dataset", "registry dataset (default: tiny, or the config's dataset)"),
     val("steps", "training steps (default: 300)"),
     val("eval-every", "evaluation interval (default: 50)"),
     val("sampler", "ns|labor0|labor*|rw (default: labor0)"),
     val("kappa", "batch dependency K or `inf` (default: 1)"),
-    val("fanout", "sampler fanout (default: 10)"),
+    val("fanout", "sampler fanout: one value or a per-layer comma list (default: 10)"),
+    val("layers", "GNN layers for the host backend / --train-pes (default: 3)"),
+    val("hidden", "hidden width of the layered model (default: 16)"),
+    val("model-layers", "assert the model depth; must equal --layers (strict)"),
     val("lr", "learning-rate override (may be negative — rejected later)"),
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
     val("artifacts", "AOT artifacts directory (default: artifacts)"),
@@ -62,7 +69,7 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     val("train-pes", "run the multi-PE training plane with N trainer replicas (host \
          compute + gradient all-reduce; needs no PJRT/artifacts)"),
     val("mode", "coop|indep minibatching for --train-pes (default: coop)"),
-    val("batch", "per-PE batch size for --train-pes (default: 256)"),
+    val("batch", "per-PE batch size (--train-pes) or host-backend seed batch (default: 256)"),
     val("allreduce", "ring|naive gradient all-reduce strategy (default: ring)"),
 ];
 
@@ -74,7 +81,7 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("cache", "LRU rows per PE; 0 = no cache, all accesses hit storage (default: derived)"),
     val("sampler", "ns|labor0|labor*|rw (default: labor0)"),
     val("kappa", "batch dependency K or `inf` (default: 1)"),
-    val("fanout", "sampler fanout (default: 10)"),
+    val("fanout", "sampler fanout: one value or a per-layer comma list (default: 10)"),
     val("layers", "GNN layers (default: 3)"),
     val("partitioner", "random|metis|ldg (default: random)"),
     val("exec", "serial|threaded (default: threaded)"),
@@ -148,7 +155,20 @@ fn real_main() -> coopgnn::Result<()> {
     }
 }
 
-/// The multi-PE training plane (`--train-pes N`): per-PE trainer
+/// Parse `--fanout` as either one uniform value or a per-layer comma
+/// list (`10,5,5`); length-vs-layers validation happens in
+/// [`PipelineBuilder::build`].
+fn parse_fanouts(s: &str) -> coopgnn::Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("bad --fanout entry `{t}`: {e}"))
+        })
+        .collect()
+}
+
+/// The multi-PE training plane (`--train-pes N`): per-PE layered-model
 /// replicas over the engine stream, lockstep parameters via the fabric
 /// gradient all-reduce — runs natively in this build (no PJRT, no
 /// artifacts).
@@ -156,7 +176,7 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
     anyhow::ensure!(pes >= 1, "--train-pes must be >= 1");
     let strategy = AllReduceStrategy::parse(args.get_or("allreduce", "ring"))
         .ok_or_else(|| anyhow::anyhow!("bad --allreduce (ring|naive)"))?;
-    let pipe = PipelineBuilder::new()
+    let mut b = PipelineBuilder::new()
         .dataset(args.get_or("dataset", "tiny"))
         .mode(
             Mode::parse(args.get_or("mode", "coop"))
@@ -176,9 +196,14 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
             Kappa::parse(args.get_or("kappa", "1"))
                 .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
         )
-        .fanout(args.or("fanout", 10usize)?)
-        .seed(args.or("seed", DEFAULT_SEED)?)
-        .build()?;
+        .fanouts(&parse_fanouts(args.get_or("fanout", "10"))?)
+        .layers(args.or("layers", 3usize)?)
+        .hidden(args.or("hidden", 16usize)?)
+        .seed(args.or("seed", DEFAULT_SEED)?);
+    if let Some(ml) = args.opt::<usize>("model-layers")? {
+        b = b.model_layers(ml);
+    }
+    let pipe = b.build()?;
     let steps = args.or("steps", 300usize)?;
     let lr = args.or("lr", 0.05f32)?;
     anyhow::ensure!(lr > 0.0, "--lr must be positive");
@@ -201,7 +226,8 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
         trainer.run(&mut pipe.stream(), steps, &pipe.ds.labels)
     };
     anyhow::ensure!(trainer.replicas_in_lockstep(), "replicas diverged (all-reduce bug)");
-    let val_acc = trainer.evaluate(&pipe.ds.val, &pipe.ds.labels, &*pipe.feature_store());
+    let mut eval_stream = pipe.stream();
+    let val_acc = trainer.evaluate(&mut eval_stream, &pipe.ds.val, &pipe.ds.labels);
     println!(
         "{} steps in {:.1}s: {:.2} ms/step (sample {:.2} + feature {:.2} + compute {:.2} + \
          all-reduce {:.2})",
@@ -214,10 +240,11 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
         rep.allreduce_ms
     );
     println!(
-        "bytes/step: {:.1} KiB storage (β), {:.1} KiB feature fabric (α), {:.1} KiB gradient \
-         all-reduce",
+        "bytes/step: {:.1} KiB storage (β), {:.1} KiB feature fabric (α), {:.1} KiB activation \
+         exchange, {:.1} KiB gradient all-reduce",
         rep.storage_bytes_per_step / 1024.0,
         rep.fabric_bytes_per_step / 1024.0,
+        rep.act_bytes_per_step / 1024.0,
         rep.grad_bytes_per_step / 1024.0
     );
     println!(
@@ -228,24 +255,110 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
 }
 
 fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
-    // the two train paths consume disjoint flag subsets; a flag the
-    // chosen path would silently ignore is an error (the strict-args
-    // contract: nothing defaults silently)
+    // the train paths consume disjoint flag subsets; a flag the chosen
+    // path would silently ignore is an error (the strict-args contract:
+    // nothing defaults silently)
     if let Some(pes) = args.opt::<usize>("train-pes")? {
-        for key in ["config", "eval-every", "artifacts"] {
+        for key in ["config", "eval-every", "artifacts", "backend"] {
             anyhow::ensure!(
                 !args.has(key),
-                "--{key} applies to the PJRT train path and is ignored with --train-pes; drop it"
+                "--{key} applies to the single-PE train path and is ignored with --train-pes; \
+                 drop it"
             );
         }
         return cmd_train_parallel(args, pes);
     }
-    for key in ["mode", "batch", "allreduce"] {
+    for key in ["mode", "allreduce"] {
         anyhow::ensure!(
             !args.has(key),
             "--{key} only applies to the multi-PE training plane; add --train-pes N"
         );
     }
+    let backend = args.get_or("backend", if args.has("config") { "pjrt" } else { "host" });
+    match backend {
+        "host" => cmd_train_host(args),
+        "pjrt" => cmd_train_pjrt(args),
+        other => anyhow::bail!("bad --backend `{other}` (host|pjrt)"),
+    }
+}
+
+/// Single-PE training on the host compute backend: the layered model
+/// shape comes from the CLI (`--layers/--hidden`) and the dataset; no
+/// PJRT runtime or AOT artifacts are involved.
+fn cmd_train_host(args: &ArgMap) -> coopgnn::Result<()> {
+    for key in ["config", "artifacts"] {
+        anyhow::ensure!(
+            !args.has(key),
+            "--{key} belongs to the pjrt backend (add --backend pjrt, or drop --{key})"
+        );
+    }
+    let mut b = PipelineBuilder::new()
+        .dataset(args.get_or("dataset", "tiny"))
+        .sampler(
+            SamplerKind::parse(args.get_or("sampler", "labor0"))
+                .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
+        )
+        .kappa(
+            Kappa::parse(args.get_or("kappa", "1"))
+                .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
+        )
+        .fanouts(&parse_fanouts(args.get_or("fanout", "10"))?)
+        .layers(args.or("layers", 3usize)?)
+        .hidden(args.or("hidden", 16usize)?)
+        .seed(args.or("seed", DEFAULT_SEED)?)
+        .exec(
+            ExecMode::parse(args.get_or("exec", "threaded"))
+                .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
+        );
+    if let Some(ml) = args.opt::<usize>("model-layers")? {
+        b = b.model_layers(ml);
+    }
+    let pipe = b.build()?;
+    let prefetch = args.bool01("prefetch", false)?;
+    let mut opts = pipe.trainer_options();
+    opts.lr = args.opt("lr")?;
+    let mut trainer = Trainer::new_host(
+        &pipe.ds,
+        args.or("batch", 256usize)?,
+        pipe.cfg.layers,
+        pipe.cfg.hidden,
+        &opts,
+    )?;
+    let dims = trainer.dims();
+    println!(
+        "training host backend on {}: {} layers x hidden {} ({} params), {} train vertices, \
+         batch {}{}",
+        pipe.ds.name,
+        dims.layers,
+        dims.hidden,
+        trainer.state.num_scalars(),
+        pipe.ds.train.len(),
+        trainer.batch(),
+        if prefetch { " (prefetch: sampling+gather overlap execution)" } else { "" }
+    );
+    run_train_loop(
+        &mut trainer,
+        args.or("steps", 300usize)?,
+        args.or("eval-every", 50usize)?,
+        prefetch,
+    )
+}
+
+/// Single-PE training through the PJRT/AOT backend: the model shape,
+/// batch and caps come from the artifact config.
+fn cmd_train_pjrt(args: &ArgMap) -> coopgnn::Result<()> {
+    for key in ["batch", "layers", "hidden", "model-layers"] {
+        anyhow::ensure!(
+            !args.has(key),
+            "--{key} is set by the artifact config on the pjrt backend; drop it"
+        );
+    }
+    let fanouts = parse_fanouts(args.get_or("fanout", "10"))?;
+    anyhow::ensure!(
+        fanouts.len() == 1,
+        "per-layer fanout lists apply to the host backend / --train-pes; the pjrt \
+         backend takes one uniform --fanout"
+    );
     let config = args.get_or("config", "tiny-b32").to_string();
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let rt = Runtime::cpu()?;
@@ -261,15 +374,13 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
             Kappa::parse(args.get_or("kappa", "1"))
                 .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
         )
-        .fanout(args.or("fanout", 10usize)?)
+        .fanout(fanouts[0])
         .seed(args.or("seed", DEFAULT_SEED)?)
         .exec(
             ExecMode::parse(args.get_or("exec", "threaded"))
                 .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
         )
         .build()?;
-    let steps = args.or("steps", 300usize)?;
-    let eval_every = args.or("eval-every", 50usize)?;
     let prefetch = args.bool01("prefetch", false)?;
     let mut opts = pipe.trainer_options();
     opts.lr = args.opt("lr")?;
@@ -279,15 +390,34 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         pipe.ds.name,
         trainer.state.num_scalars(),
         pipe.ds.train.len(),
-        trainer.art.batch,
+        trainer.batch(),
         if prefetch { " (prefetch: sampling+gather overlap execution)" } else { "" }
     );
+    run_train_loop(
+        &mut trainer,
+        args.or("steps", 300usize)?,
+        args.or("eval-every", 50usize)?,
+        prefetch,
+    )
+}
+
+/// Shared drive loop for the single-PE trainer: both backends step
+/// through the same [`coopgnn::model::GnnModel`] surface, so the
+/// reporting/eval cadence is backend-agnostic.
+fn run_train_loop(
+    trainer: &mut Trainer,
+    steps: usize,
+    eval_every: usize,
+    prefetch: bool,
+) -> coopgnn::Result<()> {
+    anyhow::ensure!(eval_every >= 1, "--eval-every must be >= 1");
+    let ds = trainer.ds;
     let mut report_step = |trainer: &mut Trainer,
                            step: usize,
                            s: StepStats|
      -> coopgnn::Result<()> {
         if step % eval_every == 0 || step == 1 || step == steps {
-            let val = trainer.evaluate(&pipe.ds.val, 1234)?;
+            let val = trainer.evaluate(&ds.val, 1234)?;
             println!(
                 "step {step:>5}  loss {:.4}  batch-acc {:.3}  val-acc {:.4}  val-F1 {:.4}  \
                  [samp {:.1}ms pad {:.1}ms feat {:.1}ms exec {:.1}ms]",
@@ -306,17 +436,17 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         with_prefetch(stream, |s| -> coopgnn::Result<()> {
             for step in 1..=steps {
                 let stats = trainer.step_from(s)?;
-                report_step(&mut trainer, step, stats)?;
+                report_step(trainer, step, stats)?;
             }
             Ok(())
         })?;
     } else {
         for step in 1..=steps {
             let s = trainer.step()?;
-            report_step(&mut trainer, step, s)?;
+            report_step(trainer, step, s)?;
         }
     }
-    let test = trainer.evaluate(&pipe.ds.test, 1234)?;
+    let test = trainer.evaluate(&ds.test, 1234)?;
     println!(
         "done in {:.1}s: test acc {:.4}, test F1 {:.4}",
         t0.elapsed().as_secs_f64(),
@@ -351,7 +481,7 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
             Kappa::parse(args.get_or("kappa", "1"))
                 .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
         )
-        .fanout(args.or("fanout", 10usize)?)
+        .fanouts(&parse_fanouts(args.get_or("fanout", "10"))?)
         .layers(args.or("layers", 3usize)?)
         .prefetch(args.bool01("prefetch", false)?)
         .warmup_batches(args.or("warmup", 4usize)?)
@@ -530,12 +660,16 @@ fn print_usage() {
          \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|\n\
          \x20        end2end|serve|all> [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
          \x20        [--exec serial|threaded]\n\
-         \x20 coopgnn train --config NAME [--steps N] [--kappa K|inf] [--sampler ns|labor0|labor*|rw]\n\
-         \x20        [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
+         \x20 coopgnn train [--backend host|pjrt] [--dataset NAME] [--steps N] [--kappa K|inf]\n\
+         \x20        [--sampler ns|labor0|labor*|rw] [--fanout K|K,K,..] [--layers L] [--hidden H]\n\
+         \x20        [--batch B] [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
+         \x20        (host backend: layered GNN compute plane, no artifacts needed;\n\
+         \x20         --backend pjrt --config NAME takes shape/batch from the artifact)\n\
          \x20 coopgnn train --train-pes P [--mode coop|indep] [--dataset NAME] [--batch B]\n\
-         \x20        [--allreduce ring|naive] [--steps N] [--lr F] [--prefetch 0|1]\n\
-         \x20        (multi-PE training plane: per-PE replicas + fabric gradient all-reduce,\n\
-         \x20         runs without PJRT artifacts)\n\
+         \x20        [--layers L] [--hidden H] [--fanout K|K,K,..] [--allreduce ring|naive]\n\
+         \x20        [--steps N] [--lr F] [--prefetch 0|1]\n\
+         \x20        (multi-PE training plane: per-PE layered replicas + activation exchange +\n\
+         \x20         fabric gradient all-reduce, runs without PJRT artifacts)\n\
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
          \x20        [--prefetch 0|1]\n\

@@ -1,0 +1,558 @@
+//! The host (plain-Rust) backend of the compute plane: layered
+//! gather→aggregate→matmul forward/backward over [`HostBlock`]s,
+//! numerically mirroring `python/compile/model.py`.
+//!
+//! Two entry levels:
+//!
+//! * [`HostModel`] — the [`GnnModel`] backend for whole (possibly
+//!   merged) MFGs: single-context forward, masked-mean cross-entropy,
+//!   full backward, Adam. What `Trainer` runs when no PJRT artifacts
+//!   are configured, and what the golden-vector parity test checks
+//!   against the Python model.
+//! * [`PeStep`] — the per-PE step engine of the multi-PE plane: the
+//!   same kernels phase-split so `ParallelTrainer` can interleave the
+//!   per-level compute with activation exchanges on the fabric
+//!   (serially via `Exchange::route_rows`, threaded via
+//!   `PeEndpoint::all_to_all_rows`). Each phase is pure per-PE f32
+//!   work in deterministic order, so serial and threaded execution of
+//!   the same minibatch are bit-identical.
+
+use super::{blocks_from_mfg, kernels, GnnModel, ModelDims, PeCompute, TrainMetrics};
+use crate::runtime::tensors::ParamState;
+use crate::sampling::Mfg;
+use std::time::Instant;
+
+/// The default, artifact-free model backend.
+#[derive(Clone, Copy, Debug)]
+pub struct HostModel {
+    dims: ModelDims,
+}
+
+impl HostModel {
+    pub fn new(dims: ModelDims) -> HostModel {
+        HostModel { dims }
+    }
+}
+
+impl GnnModel for HostModel {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn backend(&self) -> &'static str {
+        "host"
+    }
+
+    fn train_on_mfg(
+        &self,
+        state: &mut ParamState,
+        mfg: &Mfg,
+        feats: &[f32],
+        labels: &[u16],
+        lr: f32,
+    ) -> crate::Result<TrainMetrics> {
+        let dims = self.dims;
+        anyhow::ensure!(mfg.num_layers() == dims.layers, "MFG depth {} vs model layers {}", mfg.num_layers(), dims.layers);
+        anyhow::ensure!(
+            feats.len() == mfg.input_vertices().len() * dims.d_in,
+            "feature buffer {} floats, want {}×{}",
+            feats.len(),
+            mfg.input_vertices().len(),
+            dims.d_in
+        );
+        let t0 = Instant::now();
+        let comp = PeCompute {
+            blocks: blocks_from_mfg(mfg),
+            seeds: mfg.seeds().to_vec(),
+            routes: None,
+        };
+        let pad_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t1 = Instant::now();
+        let mut flat = vec![0f32; state.num_scalars()];
+        let (loss_sum, correct, n) = {
+            let mut step = PeStep::new(dims, &comp, feats, &state.params);
+            step.forward_deepest();
+            for l in (0..dims.layers - 1).rev() {
+                step.forward_level(l, None);
+            }
+            let stats = step.loss_grad(labels);
+            for l in 0..dims.layers {
+                let out = step.backward_level(l, &mut flat);
+                debug_assert!(out.is_none(), "independent step must not emit grad buckets");
+            }
+            stats
+        };
+        let denom = n.max(1.0);
+        for g in flat.iter_mut() {
+            *g /= denom;
+        }
+        state.adam_step(&flat, lr);
+        Ok(TrainMetrics {
+            loss: loss_sum / denom,
+            correct,
+            examples: n,
+            pad_ms,
+            exec_ms: t1.elapsed().as_secs_f64() * 1e3,
+            truncated_vertices: 0,
+            truncated_edges: 0,
+        })
+    }
+
+    fn forward_on_mfg(
+        &self,
+        state: &ParamState,
+        mfg: &Mfg,
+        feats: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let dims = self.dims;
+        anyhow::ensure!(mfg.num_layers() == dims.layers, "MFG depth {} vs model layers {}", mfg.num_layers(), dims.layers);
+        anyhow::ensure!(
+            feats.len() == mfg.input_vertices().len() * dims.d_in,
+            "feature buffer {} floats, want {}×{}",
+            feats.len(),
+            mfg.input_vertices().len(),
+            dims.d_in
+        );
+        let comp = PeCompute {
+            blocks: blocks_from_mfg(mfg),
+            seeds: mfg.seeds().to_vec(),
+            routes: None,
+        };
+        let mut step = PeStep::new(dims, &comp, feats, &state.params);
+        step.forward_deepest();
+        for l in (0..dims.layers - 1).rev() {
+            step.forward_level(l, None);
+        }
+        Ok(step.into_logits())
+    }
+}
+
+/// Serial layered forward over the PEs of one minibatch — the
+/// [`super::Predictor`] compute path (evaluation / serving).
+/// Cooperative batches exchange activations between the contexts
+/// directly (`buckets[src][dst] → inbox[dst][src]`, the fabric's
+/// routing contract without the fabric).
+pub fn forward_minibatch(
+    dims: ModelDims,
+    params: &[Vec<f32>],
+    pes: &[(&PeCompute, &[f32])],
+) -> Vec<Vec<f32>> {
+    let coop = pes.iter().any(|(c, _)| c.routes.is_some());
+    assert!(
+        !coop || pes.iter().all(|(c, _)| c.routes.is_some()),
+        "mixed cooperative/independent PEs in one minibatch"
+    );
+    let mut steps: Vec<PeStep> =
+        pes.iter().map(|(c, f)| PeStep::new(dims, c, f, params)).collect();
+    for s in steps.iter_mut() {
+        s.forward_deepest();
+    }
+    for l in (0..dims.layers.saturating_sub(1)).rev() {
+        if coop {
+            let buckets: Vec<Vec<Vec<f32>>> = steps.iter().map(|s| s.send_rows(l)).collect();
+            let p = steps.len();
+            let mut inboxes: Vec<Vec<Vec<f32>>> = (0..p).map(|_| vec![Vec::new(); p]).collect();
+            for (src, per_dst) in buckets.into_iter().enumerate() {
+                for (dst, rows) in per_dst.into_iter().enumerate() {
+                    inboxes[dst][src] = rows;
+                }
+            }
+            for (s, inbox) in steps.iter_mut().zip(inboxes) {
+                s.forward_level(l, Some(inbox));
+            }
+        } else {
+            for s in steps.iter_mut() {
+                s.forward_level(l, None);
+            }
+        }
+    }
+    steps.into_iter().map(|s| s.into_logits()).collect()
+}
+
+/// One PE's layered forward/backward context, phase-split around the
+/// fabric rounds of the cooperative step:
+///
+/// forward: [`forward_deepest`] → per level `l = L-2..0`:
+/// [`send_rows`] ⇄ fabric ⇄ [`forward_level`]; backward:
+/// [`loss_grad`] → per level `l = 0..L-1`: [`backward_level`]
+/// ⇄ fabric ⇄ [`absorb_grad_inbox`]. Independent mode skips every
+/// fabric round (`forward_level(l, None)`; `backward_level` wires the
+/// source gradient straight through).
+///
+/// Parameter gradients accumulate **unscaled** into a flat buffer laid
+/// out in `ParamState` order; the caller appends `loss_sum/correct/n`,
+/// all-reduces, scales by the global example count and applies
+/// [`ParamState::adam_step`] — identical math to the single-context
+/// [`HostModel::train_on_mfg`].
+///
+/// [`forward_deepest`]: PeStep::forward_deepest
+/// [`send_rows`]: PeStep::send_rows
+/// [`forward_level`]: PeStep::forward_level
+/// [`loss_grad`]: PeStep::loss_grad
+/// [`backward_level`]: PeStep::backward_level
+/// [`absorb_grad_inbox`]: PeStep::absorb_grad_inbox
+pub struct PeStep<'a> {
+    dims: ModelDims,
+    comp: &'a PeCompute,
+    feats: &'a [f32],
+    params: &'a [Vec<f32>],
+    /// `agg[l]`: saved matmul input of block l (gather output).
+    agg: Vec<Vec<f32>>,
+    /// `h[l]`: saved block-l output rows (post-ReLU for l>0; logits at 0).
+    h: Vec<Vec<f32>>,
+    /// `d_h[l]`: gradient wrt `h[l]`, built up during backward.
+    d_h: Vec<Vec<f32>>,
+    /// flat-gradient offset of `(w_d, b_d)` per depth d.
+    grad_off: Vec<(usize, usize)>,
+    /// per-block gather/aggregate kernel ms (forward + backward).
+    pub gather_ms: Vec<f64>,
+    /// per-block matmul kernel ms (forward + backward).
+    pub matmul_ms: Vec<f64>,
+}
+
+impl<'a> PeStep<'a> {
+    pub fn new(dims: ModelDims, comp: &'a PeCompute, feats: &'a [f32], params: &'a [Vec<f32>]) -> PeStep<'a> {
+        let ll = dims.layers;
+        assert_eq!(comp.blocks.len(), ll, "PeCompute block count vs model layers");
+        debug_assert_eq!(comp.seeds.len(), comp.blocks[0].n_dst, "seed count vs block 0 dst");
+        debug_assert!(
+            feats.len() >= comp.blocks[ll - 1].n_src * dims.d_in,
+            "feature buffer covers block L-1 sources"
+        );
+        let shapes = dims.param_shapes();
+        let mut grad_off = Vec::with_capacity(ll);
+        let mut off = 0usize;
+        for d in 0..ll {
+            let wlen: usize = shapes[2 * d].iter().product();
+            let blen: usize = shapes[2 * d + 1].iter().product();
+            grad_off.push((off, off + wlen));
+            off += wlen + blen;
+        }
+        PeStep {
+            dims,
+            comp,
+            feats,
+            params,
+            agg: vec![Vec::new(); ll],
+            h: vec![Vec::new(); ll],
+            d_h: vec![Vec::new(); ll],
+            grad_off,
+            gather_ms: vec![0.0; ll],
+            matmul_ms: vec![0.0; ll],
+        }
+    }
+
+    pub fn examples(&self) -> usize {
+        self.comp.seeds.len()
+    }
+
+    /// Seed logits (valid after the forward phases).
+    pub fn logits(&self) -> &[f32] {
+        &self.h[0]
+    }
+
+    pub fn into_logits(mut self) -> Vec<f32> {
+        std::mem::take(&mut self.h[0])
+    }
+
+    /// gather→matmul(→ReLU) for block `l` from an explicit source buffer.
+    fn run_block(&mut self, l: usize, src: &[f32]) {
+        let b = &self.comp.blocks[l];
+        let din = self.dims.in_dim(l);
+        let dout = self.dims.out_dim(l);
+        let t0 = Instant::now();
+        let mut agg = vec![0f32; b.n_dst * din];
+        kernels::gather_agg(b, src, din, &mut agg);
+        self.gather_ms[l] += t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = Instant::now();
+        let d = self.dims.depth_of(l);
+        let mut h = vec![0f32; b.n_dst * dout];
+        kernels::matmul_bias(&agg, &self.params[2 * d], &self.params[2 * d + 1], b.n_dst, din, dout, &mut h);
+        if l != 0 {
+            kernels::relu(&mut h);
+        }
+        self.matmul_ms[l] += t1.elapsed().as_secs_f64() * 1e3;
+        self.agg[l] = agg;
+        self.h[l] = h;
+    }
+
+    /// Block `L-1` from the PE's loaded feature buffer (its source row
+    /// space by construction).
+    pub fn forward_deepest(&mut self) {
+        let l = self.dims.layers - 1;
+        let feats = self.feats;
+        // borrow dance: run_block needs &mut self, feats is a plain ref
+        let src: &[f32] = feats;
+        self.run_block(l, src);
+    }
+
+    /// Activation rows other PEs requested from this PE at level `l`:
+    /// `buckets[q]` = rows of `h[l+1]` at `routes.send_pos[l][q]`, flat
+    /// `hidden` floats per row — feed to the fabric's row round.
+    pub fn send_rows(&self, l: usize) -> Vec<Vec<f32>> {
+        let dim = self.dims.out_dim(l + 1);
+        let routes = self.comp.routes.as_ref().expect("send_rows without cooperative routes");
+        let h = &self.h[l + 1];
+        routes.send_pos[l]
+            .iter()
+            .map(|pos| {
+                let mut buf = Vec::with_capacity(pos.len() * dim);
+                for &p in pos {
+                    let s = p as usize * dim;
+                    buf.extend_from_slice(&h[s..s + dim]);
+                }
+                buf
+            })
+            .collect()
+    }
+
+    /// Compute block `l < L-1`. Cooperative: `inbox[src]` holds the
+    /// hidden rows owner `src` shipped back (the fabric round fed by
+    /// every PE's [`PeStep::send_rows`]); the dense source buffer is
+    /// reassembled in Ṡ^l order by per-owner interleave. Independent
+    /// (`None`): the source rows are exactly `h[l+1]` (prefix-nested
+    /// local positions).
+    pub fn forward_level(&mut self, l: usize, inbox: Option<Vec<Vec<f32>>>) {
+        debug_assert!(l + 1 < self.dims.layers, "forward_level on the deepest block");
+        match inbox {
+            Some(inbox) => {
+                let src = self.assemble_src(l, &inbox);
+                self.run_block(l, &src);
+            }
+            None => {
+                debug_assert_eq!(
+                    self.comp.blocks[l].n_src,
+                    self.comp.blocks[l + 1].n_dst,
+                    "independent block chaining"
+                );
+                let src = std::mem::take(&mut self.h[l + 1]);
+                self.run_block(l, &src);
+                self.h[l + 1] = src;
+            }
+        }
+    }
+
+    fn assemble_src(&self, l: usize, inbox: &[Vec<f32>]) -> Vec<f32> {
+        let dim = self.dims.hidden;
+        let routes = self.comp.routes.as_ref().expect("cooperative level without routes");
+        let order = &routes.recv_src[l];
+        debug_assert_eq!(order.len(), self.comp.blocks[l].n_src, "route order vs block sources");
+        let mut out = vec![0f32; order.len() * dim];
+        let mut cursor = vec![0usize; inbox.len()];
+        for (i, &o) in order.iter().enumerate() {
+            let o = o as usize;
+            let s = cursor[o] * dim;
+            out[i * dim..(i + 1) * dim].copy_from_slice(&inbox[o][s..s + dim]);
+            cursor[o] += 1;
+        }
+        out
+    }
+
+    /// Loss head: cross-entropy gradient into `d_h[0]`, returning
+    /// `(loss_sum, correct, examples)` — unnormalized, summed globally
+    /// by the caller's all-reduce. `labels` is the full per-vertex
+    /// table (indexed by global id).
+    pub fn loss_grad(&mut self, labels: &[u16]) -> (f32, f32, f32) {
+        let classes = self.dims.classes;
+        let lab: Vec<u16> = self.comp.seeds.iter().map(|&v| labels[v as usize]).collect();
+        let n = lab.len();
+        let mut d = vec![0f32; n * classes];
+        let (loss_sum, correct) = kernels::softmax_xent(&self.h[0], &lab, classes, &mut d);
+        self.d_h[0] = d;
+        (loss_sum, correct, n as f32)
+    }
+
+    /// Backward through block `l` (ascending from the output):
+    /// ReLU-mask `d_h[l]` (l>0), accumulate `w`/`b` gradients into the
+    /// flat `grads` buffer, and propagate to the source rows. Returns
+    /// the per-owner gradient buckets to route back in cooperative mode
+    /// (`Some` for `l < L-1`); independent mode wires the source
+    /// gradient straight into `d_h[l+1]` and returns `None`. Block
+    /// `L-1` discards the (feature) source gradient entirely.
+    pub fn backward_level(&mut self, l: usize, grads: &mut [f32]) -> Option<Vec<Vec<f32>>> {
+        let dims = self.dims;
+        let din = dims.in_dim(l);
+        let dout = dims.out_dim(l);
+        let d = dims.depth_of(l);
+        let n_dst = self.comp.blocks[l].n_dst;
+        if l > 0 {
+            kernels::relu_backward(&self.h[l], &mut self.d_h[l]);
+        }
+        let (wo, bo) = self.grad_off[d];
+        let t0 = Instant::now();
+        let (wg, rest) = grads[wo..].split_at_mut(din * dout);
+        kernels::matmul_backward_params(&self.agg[l], &self.d_h[l], n_dst, din, dout, wg, &mut rest[..dout]);
+        debug_assert_eq!(wo + din * dout, bo, "bias follows its weight in the flat layout");
+        let mut d_agg = vec![0f32; n_dst * din];
+        kernels::matmul_backward_input(&self.d_h[l], &self.params[2 * d], n_dst, din, dout, &mut d_agg);
+        self.matmul_ms[l] += t0.elapsed().as_secs_f64() * 1e3;
+        if l == dims.layers - 1 {
+            return None; // input-feature gradients are not needed
+        }
+        let b = &self.comp.blocks[l];
+        let t1 = Instant::now();
+        let mut d_src = vec![0f32; b.n_src * din];
+        kernels::gather_agg_backward(b, &d_agg, din, &mut d_src);
+        self.gather_ms[l] += t1.elapsed().as_secs_f64() * 1e3;
+        match &self.comp.routes {
+            None => {
+                self.d_h[l + 1] = d_src;
+                None
+            }
+            Some(routes) => {
+                let order = &routes.recv_src[l];
+                let npes = routes.send_pos[l].len();
+                let mut buckets: Vec<Vec<f32>> = vec![Vec::new(); npes];
+                for (i, &o) in order.iter().enumerate() {
+                    buckets[o as usize].extend_from_slice(&d_src[i * din..(i + 1) * din]);
+                }
+                self.d_h[l + 1] = vec![0f32; self.comp.blocks[l + 1].n_dst * din];
+                Some(buckets)
+            }
+        }
+    }
+
+    /// Owner side of the backward row round at level `l`: scatter-add
+    /// each requester's gradient rows onto this PE's `d_h[l+1]` at the
+    /// positions it served them from — the exact adjoint of
+    /// [`PeStep::send_rows`]. Requesters are absorbed in ascending PE
+    /// order, so serial and threaded accumulation orders agree.
+    pub fn absorb_grad_inbox(&mut self, l: usize, inbox: Vec<Vec<f32>>) {
+        let dim = self.dims.out_dim(l + 1);
+        let routes = self.comp.routes.as_ref().expect("grad inbox without cooperative routes");
+        let dh = &mut self.d_h[l + 1];
+        for (q, rows) in inbox.iter().enumerate() {
+            let pos = &routes.send_pos[l][q];
+            debug_assert_eq!(rows.len(), pos.len() * dim, "requester {q} grad bucket size");
+            for (ri, &p) in pos.iter().enumerate() {
+                let dst = p as usize * dim;
+                for (dv, &gv) in dh[dst..dst + dim].iter_mut().zip(&rows[ri * dim..(ri + 1) * dim]) {
+                    *dv += gv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate;
+    use crate::sampling::block::build_mfg;
+    use crate::sampling::{SamplerConfig, SamplerKind};
+
+    fn fixture(layers: usize, seed: u64) -> (ModelDims, Mfg, Vec<f32>, Vec<u16>) {
+        let g = generate::chung_lu(400, 8.0, 2.4, seed);
+        let cfg = SamplerConfig { layers, fanout: 4, ..Default::default() };
+        let mut s = cfg.build(SamplerKind::Neighbor, &g, seed);
+        let seeds: Vec<u32> = (0..24).collect();
+        let mfg = build_mfg(&mut s, &seeds);
+        let dims = ModelDims { layers, d_in: 6, hidden: 8, classes: 5 };
+        let n_in = mfg.input_vertices().len();
+        let mut rng = crate::util::rng::Pcg64::new(seed ^ 0xF00D);
+        let feats: Vec<f32> = (0..n_in * dims.d_in).map(|_| rng.next_f64() as f32 - 0.5).collect();
+        let labels: Vec<u16> = (0..g.num_vertices()).map(|v| (v % dims.classes as u32) as u16).collect();
+        (dims, mfg, feats, labels)
+    }
+
+    /// Forward + summed loss through the model, for finite differences.
+    fn loss_of(dims: ModelDims, state: &ParamState, mfg: &Mfg, feats: &[f32], labels: &[u16]) -> f64 {
+        let model = HostModel::new(dims);
+        let logits = model.forward_on_mfg(state, mfg, feats).unwrap();
+        let lab: Vec<u16> = mfg.seeds().iter().map(|&v| labels[v as usize]).collect();
+        let mut d = vec![0f32; logits.len()];
+        let (loss_sum, _) = kernels::softmax_xent(&logits, &lab, dims.classes, &mut d);
+        loss_sum as f64 / lab.len() as f64
+    }
+
+    #[test]
+    fn layered_gradients_match_finite_differences() {
+        let (dims, mfg, feats, labels) = fixture(2, 11);
+        let state = dims.init_state(3);
+        // analytic flat gradient via the PeStep path (scaled by 1/n like
+        // the train step)
+        let comp = PeCompute { blocks: blocks_from_mfg(&mfg), seeds: mfg.seeds().to_vec(), routes: None };
+        let mut flat = vec![0f32; state.num_scalars()];
+        let n = {
+            let mut step = PeStep::new(dims, &comp, &feats, &state.params);
+            step.forward_deepest();
+            for l in (0..dims.layers - 1).rev() {
+                step.forward_level(l, None);
+            }
+            let (_, _, n) = step.loss_grad(&labels);
+            for l in 0..dims.layers {
+                step.backward_level(l, &mut flat);
+            }
+            n
+        };
+        for g in flat.iter_mut() {
+            *g /= n;
+        }
+        // probe a spread of parameters in every tensor
+        let mut off = 0usize;
+        for (pi, shape) in dims.param_shapes().iter().enumerate() {
+            let len: usize = shape.iter().product();
+            for &j in &[0usize, len / 2, len - 1] {
+                let mut hi = ParamState::with_shapes(dims.param_shapes(), 3);
+                hi.params[pi][j] += 1e-2;
+                let mut lo = ParamState::with_shapes(dims.param_shapes(), 3);
+                lo.params[pi][j] -= 1e-2;
+                let fd = ((loss_of(dims, &hi, &mfg, &feats, &labels)
+                    - loss_of(dims, &lo, &mfg, &feats, &labels))
+                    / 2e-2) as f32;
+                let an = flat[off + j];
+                assert!(
+                    (fd - an).abs() < 3e-3,
+                    "param {pi}[{j}]: fd {fd} vs analytic {an}"
+                );
+            }
+            off += len;
+        }
+    }
+
+    #[test]
+    fn train_on_mfg_reduces_loss_and_is_deterministic() {
+        let (dims, mfg, feats, labels) = fixture(3, 7);
+        let model = HostModel::new(dims);
+        let mut s1 = dims.init_state(9);
+        let mut s2 = dims.init_state(9);
+        let mut first = 0f32;
+        let mut last = 0f32;
+        for i in 0..25 {
+            let m1 = model.train_on_mfg(&mut s1, &mfg, &feats, &labels, 0.05).unwrap();
+            let m2 = model.train_on_mfg(&mut s2, &mfg, &feats, &labels, 0.05).unwrap();
+            assert_eq!(m1.loss.to_bits(), m2.loss.to_bits(), "step {i} determinism");
+            if i == 0 {
+                first = m1.loss;
+            }
+            last = m1.loss;
+        }
+        assert!(s1.bits_eq(&s2), "identical steps keep states bit-identical");
+        assert!(last < first * 0.9, "loss must drop on a fixed batch: {first} → {last}");
+        assert_eq!(s1.step, 25.0);
+    }
+
+    #[test]
+    fn forward_on_mfg_matches_predictor_minibatch() {
+        let (dims, mfg, feats, labels) = fixture(2, 5);
+        let _ = labels;
+        let model = HostModel::new(dims);
+        let state = dims.init_state(4);
+        let logits = model.forward_on_mfg(&state, &mfg, &feats).unwrap();
+        let comp = PeCompute { blocks: blocks_from_mfg(&mfg), seeds: mfg.seeds().to_vec(), routes: None };
+        let via_pred = model.predictor(&state).logits_minibatch(&[(&comp, feats.as_slice())]);
+        assert_eq!(via_pred.len(), 1);
+        assert_eq!(logits, via_pred[0], "one API, one forward");
+    }
+
+    #[test]
+    fn dims_mismatch_is_an_error() {
+        let (dims, mfg, feats, labels) = fixture(2, 6);
+        let wrong = ModelDims { layers: 3, ..dims };
+        let model = HostModel::new(wrong);
+        let mut state = wrong.init_state(1);
+        assert!(model.train_on_mfg(&mut state, &mfg, &feats, &labels, 0.1).is_err());
+        assert!(model.forward_on_mfg(&state, &mfg, &feats).is_err());
+    }
+}

@@ -1,0 +1,327 @@
+//! Host f32 kernels of the layered compute plane — forward and backward
+//! twins of `python/compile/kernels/{gather_agg.py,matmul.py}` plus the
+//! masked softmax cross-entropy of `model.py::loss_and_metrics`.
+//!
+//! All kernels are plain loops with deterministic accumulation order:
+//! neighbor edges in CSR order then the self edge (the summation order
+//! of the padded `gather_agg`), matmul reductions over the input
+//! dimension in ascending index order. Replicated calls on identical
+//! inputs are bit-identical — the property every lockstep oracle in the
+//! training plane builds on.
+
+use super::HostBlock;
+
+/// Weighted mean aggregation `out[i] = Σ_e w_e·src[nbr_e] + w_self·src[self_i]`
+/// over a [`HostBlock`] — forward of `gather_agg`. `out` must hold
+/// `n_dst * dim` floats and is overwritten.
+pub fn gather_agg(b: &HostBlock, src: &[f32], dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), b.n_dst * dim, "gather_agg out size");
+    debug_assert!(src.len() >= b.n_src * dim, "gather_agg src size");
+    for i in 0..b.n_dst {
+        let row = &mut out[i * dim..(i + 1) * dim];
+        row.fill(0.0);
+        for e in b.offsets[i] as usize..b.offsets[i + 1] as usize {
+            let s = b.nbr_pos[e] as usize * dim;
+            let w = b.nbr_w[e];
+            for (r, &x) in row.iter_mut().zip(&src[s..s + dim]) {
+                *r += w * x;
+            }
+        }
+        let s = b.self_pos[i] as usize * dim;
+        let w = b.self_w[i];
+        for (r, &x) in row.iter_mut().zip(&src[s..s + dim]) {
+            *r += w * x;
+        }
+    }
+}
+
+/// Backward of [`gather_agg`]: scatter-add `d_out` rows back onto the
+/// source rows through the same weights. `d_src` must hold
+/// `n_src * dim` floats; contributions **accumulate** (callers zero it).
+pub fn gather_agg_backward(b: &HostBlock, d_out: &[f32], dim: usize, d_src: &mut [f32]) {
+    debug_assert_eq!(d_out.len(), b.n_dst * dim, "gather_agg_backward d_out size");
+    debug_assert_eq!(d_src.len(), b.n_src * dim, "gather_agg_backward d_src size");
+    for i in 0..b.n_dst {
+        let g = &d_out[i * dim..(i + 1) * dim];
+        for e in b.offsets[i] as usize..b.offsets[i + 1] as usize {
+            let s = b.nbr_pos[e] as usize * dim;
+            let w = b.nbr_w[e];
+            for (d, &x) in d_src[s..s + dim].iter_mut().zip(g) {
+                *d += w * x;
+            }
+        }
+        let s = b.self_pos[i] as usize * dim;
+        let w = b.self_w[i];
+        for (d, &x) in d_src[s..s + dim].iter_mut().zip(g) {
+            *d += w * x;
+        }
+    }
+}
+
+/// Row-major dense `out = x·w + b` (`x: [n × d_in]`, `w: [d_in × d_out]`,
+/// `b: [d_out]`) — forward of `matmul` plus the bias add of the model's
+/// layer recursion. `out` is overwritten.
+pub fn matmul_bias(x: &[f32], w: &[f32], bias: &[f32], n: usize, d_in: usize, d_out: usize, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), n * d_in, "matmul_bias x size");
+    debug_assert_eq!(w.len(), d_in * d_out, "matmul_bias w size");
+    debug_assert_eq!(bias.len(), d_out, "matmul_bias bias size");
+    debug_assert_eq!(out.len(), n * d_out, "matmul_bias out size");
+    for i in 0..n {
+        let row = &mut out[i * d_out..(i + 1) * d_out];
+        row.copy_from_slice(bias);
+        let xr = &x[i * d_in..(i + 1) * d_in];
+        for (j, &xj) in xr.iter().enumerate() {
+            let wr = &w[j * d_out..(j + 1) * d_out];
+            for (r, &wv) in row.iter_mut().zip(wr) {
+                *r += xj * wv;
+            }
+        }
+    }
+}
+
+/// Parameter gradients of [`matmul_bias`]: `dw += xᵀ·d_y`, `db += Σ_i d_y[i]`.
+/// Accumulates (callers zero `dw`/`db` once per step).
+pub fn matmul_backward_params(
+    x: &[f32],
+    d_y: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+    dw: &mut [f32],
+    db: &mut [f32],
+) {
+    debug_assert_eq!(dw.len(), d_in * d_out, "matmul_backward_params dw size");
+    debug_assert_eq!(db.len(), d_out, "matmul_backward_params db size");
+    for i in 0..n {
+        let g = &d_y[i * d_out..(i + 1) * d_out];
+        let xr = &x[i * d_in..(i + 1) * d_in];
+        for (j, &xj) in xr.iter().enumerate() {
+            let dwr = &mut dw[j * d_out..(j + 1) * d_out];
+            for (d, &gv) in dwr.iter_mut().zip(g) {
+                *d += xj * gv;
+            }
+        }
+        for (d, &gv) in db.iter_mut().zip(g) {
+            *d += gv;
+        }
+    }
+}
+
+/// Input gradient of [`matmul_bias`]: `d_x = d_y·wᵀ`. Overwrites `d_x`.
+pub fn matmul_backward_input(d_y: &[f32], w: &[f32], n: usize, d_in: usize, d_out: usize, d_x: &mut [f32]) {
+    debug_assert_eq!(d_x.len(), n * d_in, "matmul_backward_input d_x size");
+    for i in 0..n {
+        let g = &d_y[i * d_out..(i + 1) * d_out];
+        let dxr = &mut d_x[i * d_in..(i + 1) * d_in];
+        for (j, dx) in dxr.iter_mut().enumerate() {
+            let wr = &w[j * d_out..(j + 1) * d_out];
+            let mut acc = 0f32;
+            for (&gv, &wv) in g.iter().zip(wr) {
+                acc += gv * wv;
+            }
+            *dx = acc;
+        }
+    }
+}
+
+/// In-place `max(x, 0)` — the inter-layer nonlinearity.
+pub fn relu(buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Backward of [`relu`] given the **saved post-activation** output:
+/// zeroes `d` wherever the forward output was clamped.
+pub fn relu_backward(saved_out: &[f32], d: &mut [f32]) {
+    debug_assert_eq!(saved_out.len(), d.len(), "relu_backward size");
+    for (g, &y) in d.iter_mut().zip(saved_out) {
+        if y <= 0.0 {
+            *g = 0.0;
+        }
+    }
+}
+
+/// Stable softmax cross-entropy over `[n × classes]` logits: returns
+/// `(loss_sum, correct)` (unnormalized — the caller divides by the
+/// global example count after the all-reduce, mirroring the masked mean
+/// of `loss_and_metrics`) and writes the **unscaled** gradient
+/// `softmax - onehot` into `d_logits`.
+pub fn softmax_xent(
+    logits: &[f32],
+    labels: &[u16],
+    classes: usize,
+    d_logits: &mut [f32],
+) -> (f32, f32) {
+    let n = labels.len();
+    debug_assert_eq!(logits.len(), n * classes, "softmax_xent logits size");
+    debug_assert_eq!(d_logits.len(), n * classes, "softmax_xent d_logits size");
+    let mut loss_sum = 0f32;
+    let mut correct = 0f32;
+    for i in 0..n {
+        let row = &logits[i * classes..(i + 1) * classes];
+        let y = labels[i] as usize;
+        debug_assert!(y < classes, "label out of range");
+        let mut mx = row[0];
+        for &v in &row[1..] {
+            if v > mx {
+                mx = v;
+            }
+        }
+        let mut sum = 0f32;
+        let g = &mut d_logits[i * classes..(i + 1) * classes];
+        for (gv, &v) in g.iter_mut().zip(row) {
+            let e = (v - mx).exp();
+            *gv = e;
+            sum += e;
+        }
+        loss_sum += sum.ln() - (row[y] - mx);
+        let inv = 1.0 / sum;
+        for gv in g.iter_mut() {
+            *gv *= inv;
+        }
+        g[y] -= 1.0;
+        if argmax(row) == y {
+            correct += 1.0;
+        }
+    }
+    (loss_sum, correct)
+}
+
+/// First-maximum argmax with the NaN tie-break every consumer shares
+/// (a NaN entry never wins unless it is at index 0 and everything else
+/// is NaN too) — the single copy of what `Trainer::evaluate` and
+/// `ParallelTrainer::predict_row` used to duplicate.
+pub fn argmax(row: &[f32]) -> usize {
+    debug_assert!(!row.is_empty(), "argmax of empty row");
+    let mut best = row[0];
+    let mut bi = 0usize;
+    for (c, &v) in row.iter().enumerate().skip(1) {
+        if v > best {
+            best = v;
+            bi = c;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 2 dst, 3 src: dst0 ← {src1, src2} + self src0; dst1 ← {} + self src2.
+    fn block() -> HostBlock {
+        HostBlock {
+            n_dst: 2,
+            n_src: 3,
+            offsets: vec![0, 2, 2],
+            nbr_pos: vec![1, 2],
+            nbr_w: vec![1.0 / 3.0, 1.0 / 3.0],
+            self_pos: vec![0, 2],
+            self_w: vec![1.0 / 3.0, 1.0],
+        }
+    }
+
+    #[test]
+    fn gather_agg_weighted_mean() {
+        let b = block();
+        let src = vec![3.0, 0.0, 6.0, 0.0, 9.0, 3.0]; // dim 2
+        let mut out = vec![0f32; 4];
+        gather_agg(&b, &src, 2, &mut out);
+        assert_eq!(out, vec![6.0, 1.0, 9.0, 3.0]);
+    }
+
+    #[test]
+    fn gather_backward_transposes_forward() {
+        // ⟨gather(x), g⟩ == ⟨x, gather_backward(g)⟩ — adjoint identity
+        let b = block();
+        let dim = 2;
+        let src: Vec<f32> = (0..b.n_src * dim).map(|i| (i as f32) * 0.3 - 1.0).collect();
+        let g: Vec<f32> = (0..b.n_dst * dim).map(|i| 1.0 - (i as f32) * 0.7).collect();
+        let mut fwd = vec![0f32; b.n_dst * dim];
+        gather_agg(&b, &src, dim, &mut fwd);
+        let mut bwd = vec![0f32; b.n_src * dim];
+        gather_agg_backward(&b, &g, dim, &mut bwd);
+        let lhs: f32 = fwd.iter().zip(&g).map(|(a, b)| a * b).sum();
+        let rhs: f32 = src.iter().zip(&bwd).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-4, "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn matmul_bias_and_gradients_agree_with_finite_differences() {
+        let (n, din, dout) = (3usize, 4usize, 2usize);
+        let x: Vec<f32> = (0..n * din).map(|i| (i as f32) * 0.1 - 0.5).collect();
+        let w: Vec<f32> = (0..din * dout).map(|i| 0.2 - (i as f32) * 0.05).collect();
+        let b: Vec<f32> = vec![0.1, -0.2];
+        let mut y = vec![0f32; n * dout];
+        matmul_bias(&x, &w, &b, n, din, dout, &mut y);
+        // scalar objective L = Σ y² / 2 ⇒ dL/dy = y
+        let mut dw = vec![0f32; din * dout];
+        let mut db = vec![0f32; dout];
+        matmul_backward_params(&x, &y, n, din, dout, &mut dw, &mut db);
+        let mut dx = vec![0f32; n * din];
+        matmul_backward_input(&y, &w, n, din, dout, &mut dx);
+        let loss = |x: &[f32], w: &[f32], b: &[f32]| -> f64 {
+            let mut y = vec![0f32; n * dout];
+            matmul_bias(x, w, b, n, din, dout, &mut y);
+            y.iter().map(|&v| (v as f64) * (v as f64) / 2.0).sum()
+        };
+        let eps = 1e-3f32;
+        for (buf, grad, kind) in [
+            (x.clone(), dx.clone(), "x"),
+            (w.clone(), dw.clone(), "w"),
+            (b.clone(), db.clone(), "b"),
+        ] {
+            for i in 0..buf.len() {
+                let mut hi = buf.clone();
+                hi[i] += eps;
+                let mut lo = buf.clone();
+                lo[i] -= eps;
+                let (fhi, flo) = match kind {
+                    "x" => (loss(&hi, &w, &b), loss(&lo, &w, &b)),
+                    "w" => (loss(&x, &hi, &b), loss(&x, &lo, &b)),
+                    _ => (loss(&x, &w, &hi), loss(&x, &w, &lo)),
+                };
+                let fd = ((fhi - flo) / (2.0 * eps as f64)) as f32;
+                assert!(
+                    (fd - grad[i]).abs() < 2e-2,
+                    "{kind}[{i}]: fd {fd} vs analytic {}",
+                    grad[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_xent_matches_hand_computation() {
+        // single row [0, ln2], label 1: softmax = [1/3, 2/3]
+        let logits = vec![0.0f32, std::f32::consts::LN_2];
+        let mut d = vec![0f32; 2];
+        let (loss, correct) = softmax_xent(&logits, &[1], 2, &mut d);
+        assert!((loss - (1.5f32).ln()).abs() < 1e-6, "loss {loss}");
+        assert_eq!(correct, 1.0);
+        assert!((d[0] - 1.0 / 3.0).abs() < 1e-6);
+        assert!((d[1] + 1.0 / 3.0).abs() < 1e-6);
+        // gradient of each row sums to zero
+        assert!((d[0] + d[1]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn argmax_first_max_wins_and_skips_nan() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[0.5, f32::NAN, 0.4]), 0);
+    }
+
+    #[test]
+    fn relu_roundtrip_masks_gradient() {
+        let mut h = vec![-1.0f32, 0.0, 2.0];
+        relu(&mut h);
+        assert_eq!(h, vec![0.0, 0.0, 2.0]);
+        let mut d = vec![5.0f32, 5.0, 5.0];
+        relu_backward(&h, &mut d);
+        assert_eq!(d, vec![0.0, 0.0, 5.0]);
+    }
+}

@@ -1,0 +1,392 @@
+//! The unified GNN compute plane — one model API over two backends.
+//!
+//! Every training/serving path in the repo runs layered
+//! gather→aggregate→matmul compute through the [`GnnModel`] trait:
+//!
+//! * [`host::HostModel`] — the default backend: plain-Rust f32 kernels
+//!   ([`kernels`]) over CSR [`HostBlock`]s, numerically mirroring
+//!   `python/compile/model.py` (same layer recursion, masked
+//!   cross-entropy, bias-corrected Adam). Runs everywhere, needs no
+//!   artifacts, and is the reference the golden-vector parity test pins
+//!   against the Python model.
+//! * [`pjrt::PjrtModel`] — the AOT/PJRT bridge: the same contract
+//!   routed through compiled train/forward executables and padded
+//!   fixed-shape batches. A drop-in replacement behind the same trait
+//!   wherever real PJRT artifacts are available.
+//!
+//! [`ModelDims`] mirrors Python's `ModelDims` named tuple and derives
+//! the exact parameter shapes ([`ModelDims::param_shapes`]) of the flat
+//! AOT calling convention, so a
+//! [`crate::runtime::tensors::ParamState`] initialized from them is
+//! interchangeable between backends.
+//!
+//! For the multi-PE plane, [`PeCompute`] carries a PE's private layered
+//! blocks (plus [`CoopRoutes`] in cooperative mode: where to fetch
+//! hidden activations from and which owned rows to serve), built by the
+//! pipeline stream alongside sampling. [`Predictor`] is a cheap
+//! parameter snapshot for forward-only consumers (evaluation, the
+//! serving plane) — it replaces the old `head()` / `predict_row` pair.
+
+pub mod host;
+pub mod kernels;
+pub mod pjrt;
+
+pub use host::HostModel;
+pub use pjrt::PjrtModel;
+
+use crate::graph::VertexId;
+use crate::runtime::tensors::ParamState;
+use crate::sampling::Mfg;
+use std::sync::Arc;
+
+/// Model hyper-shape, mirroring `python/compile/model.py::ModelDims`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDims {
+    /// GNN layer count L (== sampled MFG depth).
+    pub layers: usize,
+    /// Input feature dimension.
+    pub d_in: usize,
+    /// Hidden width of every non-output layer.
+    pub hidden: usize,
+    /// Output classes.
+    pub classes: usize,
+}
+
+impl ModelDims {
+    /// Ordered parameter shapes `[w0, b0, w1, b1, …]`, input-first —
+    /// exactly Python's `param_shapes` (the flat AOT calling
+    /// convention), so [`ParamState::with_shapes`] seeds both backends
+    /// identically.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = Vec::with_capacity(2 * self.layers);
+        let mut d_prev = self.d_in;
+        for l in 0..self.layers {
+            let d_out = if l == self.layers - 1 { self.classes } else { self.hidden };
+            shapes.push(vec![d_prev, d_out]);
+            shapes.push(vec![d_out]);
+            d_prev = d_out;
+        }
+        shapes
+    }
+
+    /// Input dimension of block `l` (block 0 = output layer, block L-1
+    /// consumes raw features — Python's deepest-first recursion).
+    pub fn in_dim(&self, l: usize) -> usize {
+        if l == self.layers - 1 {
+            self.d_in
+        } else {
+            self.hidden
+        }
+    }
+
+    /// Output dimension of block `l`.
+    pub fn out_dim(&self, l: usize) -> usize {
+        if l == 0 {
+            self.classes
+        } else {
+            self.hidden
+        }
+    }
+
+    /// Parameter depth of block `l`: params `[2d, 2d+1]` with
+    /// `d = L-1-l` (blocks count from the output, params from the
+    /// input).
+    pub fn depth_of(&self, l: usize) -> usize {
+        self.layers - 1 - l
+    }
+
+    /// Total scalar parameter count.
+    pub fn num_scalars(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// A [`ParamState`] Glorot-seeded for these shapes.
+    pub fn init_state(&self, seed: u64) -> ParamState {
+        ParamState::with_shapes(self.param_shapes(), seed)
+    }
+}
+
+/// One bipartite layer of an MFG in host CSR form with explicit
+/// aggregation weights — the host twin of the padded
+/// `(nbr_idx, nbr_w, self_idx, self_w)` block tensors, without the
+/// fixed-shape padding. Destination row `i` aggregates
+/// `Σ_e nbr_w[e]·src[nbr_pos[e]] + self_w[i]·src[self_pos[i]]`.
+#[derive(Clone, Debug, Default)]
+pub struct HostBlock {
+    pub n_dst: usize,
+    pub n_src: usize,
+    /// `[n_dst+1]` CSR offsets into `nbr_pos` / `nbr_w`.
+    pub offsets: Vec<u32>,
+    /// Sampled-neighbor positions in the source row space.
+    pub nbr_pos: Vec<u32>,
+    /// Per-edge mean weights (`1/(deg+1)`), matching `Mfg::pad`.
+    pub nbr_w: Vec<f32>,
+    /// `[n_dst]` own-row position in the source row space.
+    pub self_pos: Vec<u32>,
+    /// `[n_dst]` self weight (`1/(deg+1)`).
+    pub self_w: Vec<f32>,
+}
+
+impl HostBlock {
+    pub fn num_edges(&self) -> usize {
+        self.nbr_pos.len()
+    }
+
+    /// Build block `l` of an [`Mfg`] (dst = layer l, src = layer l+1)
+    /// with the same `1/(deg+1)` mean weights `Mfg::pad` would emit —
+    /// but uncapped: the host plane has no fixed-shape truncation.
+    pub fn from_mfg_layer(mfg: &Mfg, l: usize) -> HostBlock {
+        let edges = &mfg.layer_edges[l];
+        let n_dst = mfg.layer_vertices[l].len();
+        let n_src = mfg.layer_vertices[l + 1].len();
+        let mut b = HostBlock {
+            n_dst,
+            n_src,
+            offsets: edges.offsets.clone(),
+            nbr_pos: edges.nbr_local.clone(),
+            nbr_w: vec![0f32; edges.num_edges()],
+            self_pos: Vec::with_capacity(n_dst),
+            self_w: Vec::with_capacity(n_dst),
+        };
+        for i in 0..n_dst {
+            let deg = edges.of(i).len();
+            let inv = 1.0 / (deg as f32 + 1.0);
+            for e in edges.offsets[i] as usize..edges.offsets[i + 1] as usize {
+                b.nbr_w[e] = inv;
+            }
+            let pos = match &mfg.self_pos {
+                Some(sp) => sp[l][i],
+                None => i as u32,
+            };
+            b.self_pos.push(pos);
+            b.self_w.push(inv);
+        }
+        b
+    }
+}
+
+/// All L blocks of an MFG, deepest source = the feature buffer.
+pub fn blocks_from_mfg(mfg: &Mfg) -> Vec<HostBlock> {
+    (0..mfg.num_layers()).map(|l| HostBlock::from_mfg_layer(mfg, l)).collect()
+}
+
+/// Activation-exchange routing for one PE's cooperative layered step.
+/// Present only in cooperative mode; independent PEs compute without
+/// fabric rounds. Indices are positions, never global ids, so the step
+/// never needs the partition.
+#[derive(Clone, Debug, Default)]
+pub struct CoopRoutes {
+    /// `recv_src[l][i]` = owner PE of this PE's block-`l` source row `i`
+    /// (its Ṡ^l order) — the per-owner interleave the requester uses to
+    /// reassemble its dense source buffer, for `l` in `0..L-1`.
+    pub recv_src: Vec<Vec<u32>>,
+    /// `send_pos[l][q]` = row positions into this PE's level-(l+1)
+    /// activation buffer (rows over its owned S_p^{l+1}) to ship
+    /// requester `q`, in `q`'s request order.
+    pub send_pos: Vec<Vec<Vec<u32>>>,
+}
+
+/// One PE's layered compute payload, attached to a
+/// `pipeline::PeWork` by the stream: the private MFG in host-block
+/// form plus (cooperative mode) the activation routes. The source row
+/// space of `blocks[L-1]` is exactly the PE's loaded feature buffer.
+#[derive(Clone, Debug, Default)]
+pub struct PeCompute {
+    /// Per-layer blocks, index 0 = output layer.
+    pub blocks: Vec<HostBlock>,
+    /// Seed vertex ids (= dst rows of `blocks[0]`), for label lookup
+    /// and prediction routing.
+    pub seeds: Vec<VertexId>,
+    /// Cooperative activation routes; `None` for independent batches.
+    pub routes: Option<CoopRoutes>,
+}
+
+/// Metrics of one train step through a [`GnnModel`] backend.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainMetrics {
+    pub loss: f32,
+    /// Correct seed predictions (pre-update parameters).
+    pub correct: f32,
+    pub examples: f32,
+    /// Host-side batch marshalling (block build / padding) ms.
+    pub pad_ms: f64,
+    /// Compute (kernel or PJRT execution) ms.
+    pub exec_ms: f64,
+    /// Fixed-shape cap truncation (always 0 on the host backend).
+    pub truncated_vertices: usize,
+    pub truncated_edges: usize,
+}
+
+impl TrainMetrics {
+    pub fn accuracy(&self) -> f32 {
+        if self.examples > 0.0 {
+            self.correct / self.examples
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The one model API every compute consumer runs through: single-PE
+/// training (`Trainer`), the multi-PE plane (`ParallelTrainer`, via the
+/// host backend's per-PE step engine), evaluation, and serving (via
+/// [`Predictor`]). Implementations must be deterministic: identical
+/// `(state, mfg, feats, labels, lr)` inputs produce bit-identical
+/// parameter updates.
+pub trait GnnModel: Send + Sync {
+    fn dims(&self) -> ModelDims;
+
+    /// Backend name for logs/manifests (`"host"` / `"pjrt"`).
+    fn backend(&self) -> &'static str;
+
+    /// One optimizer step on a (possibly merged) MFG. `feats` is the
+    /// dense row-major feature buffer of the MFG's input vertices
+    /// (`mfg.input_vertices()` order, `d_in` floats per row); `labels`
+    /// is the full per-vertex label table indexed by global id. Loss is
+    /// the masked mean cross-entropy over the seed rows; the update is
+    /// bias-corrected Adam (`ParamState::adam_step` ==
+    /// `python/compile/model.py::train_step`).
+    fn train_on_mfg(
+        &self,
+        state: &mut ParamState,
+        mfg: &Mfg,
+        feats: &[f32],
+        labels: &[u16],
+        lr: f32,
+    ) -> crate::Result<TrainMetrics>;
+
+    /// Seed logits `[n0 × classes]` (row-major) for an evaluation MFG.
+    fn forward_on_mfg(
+        &self,
+        state: &ParamState,
+        mfg: &Mfg,
+        feats: &[f32],
+    ) -> crate::Result<Vec<f32>>;
+
+    /// Snapshot the parameters into a forward-only [`Predictor`].
+    fn predictor(&self, state: &ParamState) -> Predictor {
+        Predictor::new(self.dims(), state.params.clone())
+    }
+}
+
+/// A cheap, clonable, `Send` parameter snapshot for forward-only
+/// consumers — what the serving executor ships to its prefetch thread
+/// and what evaluation runs through. Replaces the retired
+/// `ParallelTrainer::head()` / `predict_row()` pair: predictions run
+/// the full layered model over each PE's [`PeCompute`] blocks instead
+/// of a single-row head.
+#[derive(Clone, Debug)]
+pub struct Predictor {
+    dims: ModelDims,
+    params: Arc<Vec<Vec<f32>>>,
+}
+
+impl Predictor {
+    pub fn new(dims: ModelDims, params: Vec<Vec<f32>>) -> Predictor {
+        Predictor { dims, params: Arc::new(params) }
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    pub fn classes(&self) -> usize {
+        self.dims.classes
+    }
+
+    /// Layered forward over every PE of one minibatch; returns per-PE
+    /// predicted classes in seed order (`PeCompute::seeds`).
+    /// Cooperative batches exchange hidden activations between the
+    /// per-PE contexts exactly like the training plane (serially here —
+    /// prediction is a read-only pass, determinism over parallelism).
+    pub fn predict_minibatch(&self, pes: &[(&PeCompute, &[f32])]) -> Vec<Vec<u16>> {
+        let logits = self.logits_minibatch(pes);
+        logits
+            .into_iter()
+            .map(|per_pe| {
+                per_pe
+                    .chunks_exact(self.dims.classes.max(1))
+                    .map(|row| kernels::argmax(row) as u16)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Per-PE seed logits (`[n_seeds × classes]` flat) of one
+    /// minibatch; see [`Predictor::predict_minibatch`].
+    pub fn logits_minibatch(&self, pes: &[(&PeCompute, &[f32])]) -> Vec<Vec<f32>> {
+        host::forward_minibatch(self.dims, &self.params, pes)
+    }
+
+    /// Degenerate single-row forward treating `x` as a vertex with no
+    /// sampled neighbors (every aggregation is the self row at weight
+    /// 1); returns the class logits. Only the `#[deprecated]`
+    /// `predict_row` shim calls this; real predictions go through
+    /// [`Predictor::predict_minibatch`].
+    pub fn logits_isolated(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.dims.d_in, "logits_isolated feature width");
+        let mut h = x.to_vec();
+        for l in (0..self.dims.layers).rev() {
+            let d = self.dims.depth_of(l);
+            let (din, dout) = (self.dims.in_dim(l), self.dims.out_dim(l));
+            let mut out = vec![0f32; dout];
+            kernels::matmul_bias(&h, &self.params[2 * d], &self.params[2 * d + 1], 1, din, dout, &mut out);
+            if l != 0 {
+                kernels::relu(&mut out);
+            }
+            h = out;
+        }
+        h
+    }
+
+    /// Class prediction of [`Predictor::logits_isolated`].
+    pub fn predict_isolated(&self, x: &[f32]) -> u16 {
+        kernels::argmax(&self.logits_isolated(x)) as u16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_shapes_mirror_python_convention() {
+        let dims = ModelDims { layers: 3, d_in: 16, hidden: 32, classes: 8 };
+        let shapes = dims.param_shapes();
+        assert_eq!(
+            shapes,
+            vec![
+                vec![16, 32],
+                vec![32],
+                vec![32, 32],
+                vec![32],
+                vec![32, 8],
+                vec![8]
+            ]
+        );
+        assert_eq!(dims.num_scalars(), 16 * 32 + 32 + 32 * 32 + 32 + 32 * 8 + 8);
+        // block↔param mapping: deepest block consumes features with the
+        // input-first parameter pair
+        assert_eq!(dims.depth_of(2), 0);
+        assert_eq!(dims.in_dim(2), 16);
+        assert_eq!(dims.out_dim(2), 32);
+        assert_eq!(dims.in_dim(0), 32);
+        assert_eq!(dims.out_dim(0), 8);
+    }
+
+    #[test]
+    fn single_layer_dims_collapse() {
+        let dims = ModelDims { layers: 1, d_in: 5, hidden: 99, classes: 3 };
+        assert_eq!(dims.param_shapes(), vec![vec![5, 3], vec![3]]);
+        assert_eq!(dims.in_dim(0), 5);
+        assert_eq!(dims.out_dim(0), 3);
+    }
+
+    #[test]
+    fn init_state_matches_with_shapes() {
+        let dims = ModelDims { layers: 2, d_in: 6, hidden: 8, classes: 4 };
+        let a = dims.init_state(7);
+        let b = ParamState::with_shapes(dims.param_shapes(), 7);
+        assert!(a.bits_eq(&b));
+    }
+}

@@ -1,0 +1,129 @@
+//! The PJRT/AOT bridge backend of the compute plane: the same
+//! [`GnnModel`] contract as [`super::HostModel`], routed through
+//! compiled train/forward executables over fixed-shape padded batches
+//! (`python/compile/model.py` flat calling convention).
+//!
+//! This backend owns everything fixed-shape: MFG → [`PaddedBatch`]
+//! padding against the artifact's [`ShapeCaps`], the padded `[cap × d]`
+//! feature tensor, literal assembly (`train_inputs` / `forward_inputs`)
+//! and output absorption — the marshalling that used to be inlined in
+//! `Trainer`. In this build [`crate::runtime::Runtime::cpu`] is a stub,
+//! so a `PjrtModel` can only be constructed where real artifacts and a
+//! PJRT-enabled build exist; the host backend is the default
+//! everywhere else. Nothing above the trait knows the difference.
+
+use super::{GnnModel, ModelDims, TrainMetrics};
+use crate::runtime::manifest::ArtifactConfig;
+use crate::runtime::tensors::{forward_inputs, to_vec_f32, train_inputs, ParamState};
+use crate::runtime::{Executable, Runtime};
+use crate::sampling::Mfg;
+use crate::util::stats::Timer;
+
+/// Compiled-executable model backend (drop-in behind [`GnnModel`]).
+pub struct PjrtModel {
+    dims: ModelDims,
+    art: ArtifactConfig,
+    train_exe: Executable,
+    forward_exe: Executable,
+}
+
+impl PjrtModel {
+    /// Compile the artifact's train/forward HLO on `rt` and bind the
+    /// model dims from the manifest entry.
+    pub fn load(rt: &Runtime, art: ArtifactConfig) -> crate::Result<PjrtModel> {
+        let train_exe = rt.load_hlo_text(&art.train_hlo)?;
+        let forward_exe = rt.load_hlo_text(&art.forward_hlo)?;
+        let dims = ModelDims {
+            layers: art.layers,
+            d_in: art.d_in,
+            hidden: art.hidden,
+            classes: art.classes,
+        };
+        Ok(PjrtModel { dims, art, train_exe, forward_exe })
+    }
+
+    pub fn art(&self) -> &ArtifactConfig {
+        &self.art
+    }
+
+    /// Pad the dense `S^L × d` buffer into the fixed `[cap × d]` input
+    /// tensor (prefix copy — the clipped input list is a prefix of S^L).
+    fn pad_feats(&self, mfg: &Mfg, feats: &[f32]) -> crate::Result<Vec<f32>> {
+        let cap = *self.art.caps.n.last().unwrap();
+        let d = self.dims.d_in;
+        anyhow::ensure!(
+            feats.len() == mfg.input_vertices().len() * d,
+            "feature buffer {} floats, want {}×{}",
+            feats.len(),
+            mfg.input_vertices().len(),
+            d
+        );
+        let mut buf = vec![0f32; cap * d];
+        let keep = mfg.clipped_input_vertices(&self.art.caps).len() * d;
+        buf[..keep].copy_from_slice(&feats[..keep]);
+        Ok(buf)
+    }
+}
+
+impl GnnModel for PjrtModel {
+    fn dims(&self) -> ModelDims {
+        self.dims
+    }
+
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn train_on_mfg(
+        &self,
+        state: &mut ParamState,
+        mfg: &Mfg,
+        feats: &[f32],
+        labels: &[u16],
+        lr: f32,
+    ) -> crate::Result<TrainMetrics> {
+        anyhow::ensure!(mfg.num_layers() == self.dims.layers, "MFG depth {} vs model layers {}", mfg.num_layers(), self.dims.layers);
+        let t = Timer::start();
+        let batch = mfg.pad(&self.art.caps, |v| labels[v as usize]);
+        let feat_buf = self.pad_feats(mfg, feats)?;
+        let pad_ms = t.elapsed_ms();
+
+        let t = Timer::start();
+        let inputs = train_inputs(&self.art, state, &feat_buf, &batch, lr)?;
+        let outs = self.train_exe.run(&inputs)?;
+        let (loss, correct) = state.absorb(&outs)?;
+        let exec_ms = t.elapsed_ms();
+        let examples = batch.label_mask.iter().sum::<f32>();
+        Ok(TrainMetrics {
+            loss,
+            correct,
+            examples,
+            pad_ms,
+            exec_ms,
+            truncated_vertices: batch.truncated_vertices,
+            truncated_edges: batch.truncated_edges,
+        })
+    }
+
+    fn forward_on_mfg(
+        &self,
+        state: &ParamState,
+        mfg: &Mfg,
+        feats: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(mfg.num_layers() == self.dims.layers, "MFG depth {} vs model layers {}", mfg.num_layers(), self.dims.layers);
+        let batch = {
+            // forward batches carry no labels; the padded block tensors
+            // are all that matters
+            mfg.pad(&self.art.caps, |_| 0)
+        };
+        let feat_buf = self.pad_feats(mfg, feats)?;
+        let inputs = forward_inputs(&self.art, state, &feat_buf, &batch)?;
+        let outs = self.forward_exe.run(&inputs)?;
+        anyhow::ensure!(outs.len() == 1, "forward returns 1 output");
+        let full = to_vec_f32(&outs[0])?;
+        // clip the padded [cap_0 × C] logits down to the real seed rows
+        let n0 = mfg.seeds().len().min(self.art.caps.n[0]);
+        Ok(full[..n0 * self.dims.classes].to_vec())
+    }
+}

@@ -8,7 +8,8 @@ use crate::coop::all_to_all::AllReduceStrategy;
 use crate::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
 use crate::feature::PartitionedFeatureStore;
 use crate::graph::{datasets, partition, Csr, Dataset, Partition};
-use crate::sampling::{Kappa, SamplerConfig, SamplerKind};
+use crate::model::ModelDims;
+use crate::sampling::{Kappa, SamplerConfig, SamplerKind, MAX_FANOUT_LAYERS};
 use crate::train::{ParallelTrainer, TrainerOptions};
 use std::sync::{Arc, Mutex};
 
@@ -75,8 +76,19 @@ pub struct PipelineConfig {
     pub batch_per_pe: usize,
     pub partitioner: Partitioner,
     pub kind: SamplerKind,
-    pub fanout: usize,
+    /// per-layer sampler fanout: one entry = uniform across layers,
+    /// otherwise exactly `layers` entries (entry `l` is hop `l` from the
+    /// seeds). Validation rejects any other length — no silent
+    /// truncation or padding.
+    pub fanout: Vec<usize>,
     pub layers: usize,
+    /// hidden width of the layered GNN this pipeline trains/serves
+    /// (input and output widths come from the dataset).
+    pub hidden: usize,
+    /// optional model-depth assertion: when set it must equal `layers`
+    /// (the sampled MFG depth *is* the model depth) — a strict-args
+    /// guard against configs that assume they can differ.
+    pub model_layers: Option<usize>,
     /// batch-dependency κ of paper §3.2 (1 = independent batches).
     pub kappa: Kappa,
     /// LRU rows per PE; `None` = dataset-derived
@@ -102,8 +114,10 @@ impl Default for PipelineConfig {
             batch_per_pe: 1024,
             partitioner: Partitioner::Random,
             kind: SamplerKind::Labor0,
-            fanout: s.fanout,
+            fanout: vec![s.fanout],
             layers: s.layers,
+            hidden: 16,
+            model_layers: None,
             kappa: s.kappa,
             cache_per_pe: None,
             prefetch: false,
@@ -119,7 +133,33 @@ impl PipelineConfig {
         anyhow::ensure!(self.num_pes >= 1, "pipeline needs at least one PE");
         anyhow::ensure!(self.batch_per_pe >= 1, "per-PE batch size must be >= 1");
         anyhow::ensure!(self.layers >= 1, "pipeline needs at least one GNN layer");
-        anyhow::ensure!(self.fanout >= 1, "sampler fanout must be >= 1");
+        anyhow::ensure!(!self.fanout.is_empty(), "sampler fanout list must not be empty");
+        anyhow::ensure!(
+            self.fanout.iter().all(|&k| k >= 1),
+            "every sampler fanout must be >= 1 (got {:?})",
+            self.fanout
+        );
+        anyhow::ensure!(
+            self.fanout.len() == 1 || self.fanout.len() == self.layers,
+            "fanout list must have one uniform entry or exactly one per layer \
+             (got {} entries for {} layers)",
+            self.fanout.len(),
+            self.layers
+        );
+        anyhow::ensure!(
+            self.fanout.len() <= MAX_FANOUT_LAYERS,
+            "per-layer fanout supports at most {MAX_FANOUT_LAYERS} layers (got {})",
+            self.fanout.len()
+        );
+        anyhow::ensure!(self.hidden >= 1, "model hidden width must be >= 1");
+        if let Some(ml) = self.model_layers {
+            anyhow::ensure!(
+                ml == self.layers,
+                "model depth ({ml}) must equal the sampled MFG depth ({}); \
+                 set --model-layers equal to --layers or drop it",
+                self.layers
+            );
+        }
         anyhow::ensure!(self.measure_batches >= 1, "need at least one measured batch");
         anyhow::ensure!(
             datasets::spec(&self.dataset).is_some(),
@@ -131,11 +171,31 @@ impl PipelineConfig {
     }
 
     pub fn sampler_config(&self) -> SamplerConfig {
+        let mut fanouts = [0usize; MAX_FANOUT_LAYERS];
+        if self.fanout.len() > 1 {
+            for (slot, &k) in fanouts.iter_mut().zip(&self.fanout) {
+                *slot = k;
+            }
+        }
         SamplerConfig {
-            fanout: self.fanout,
+            fanout: self.fanout[0],
+            fanouts,
             layers: self.layers,
             kappa: self.kappa,
             ..Default::default()
+        }
+    }
+
+    /// The layered-model shape this pipeline trains/serves: depth and
+    /// hidden width from the config, input width and class count from
+    /// the dataset — the one derivation every consumer (trainer,
+    /// executor, benches) shares, so they cannot disagree.
+    pub fn model_dims(&self, ds: &Dataset) -> ModelDims {
+        ModelDims {
+            layers: self.model_layers.unwrap_or(self.layers),
+            d_in: ds.feat_dim,
+            hidden: self.hidden,
+            classes: ds.num_classes,
         }
     }
 
@@ -160,12 +220,13 @@ impl PipelineConfig {
     }
 
     /// Trainer options mirroring this pipeline (sampler, κ, fanout,
-    /// seed, exec; single-sampler batching).
+    /// seed, exec; single-sampler batching). The AOT trainer pads to a
+    /// uniform cap, so it takes the largest per-layer fanout.
     pub fn trainer_options(&self) -> TrainerOptions {
         TrainerOptions {
             kind: self.kind,
             kappa: self.kappa,
-            fanout: self.fanout,
+            fanout: self.fanout.iter().copied().max().unwrap_or(1),
             seed: self.seed,
             lr: None,
             exec: self.exec,
@@ -222,13 +283,34 @@ impl PipelineBuilder {
         self
     }
 
+    /// Uniform fanout across every layer.
     pub fn fanout(mut self, k: usize) -> Self {
-        self.cfg.fanout = k;
+        self.cfg.fanout = vec![k];
+        self
+    }
+
+    /// Per-layer fanout list (entry `l` = hop `l` from the seeds); must
+    /// have exactly `layers` entries — validated at build time.
+    pub fn fanouts(mut self, ks: &[usize]) -> Self {
+        self.cfg.fanout = ks.to_vec();
         self
     }
 
     pub fn layers(mut self, l: usize) -> Self {
         self.cfg.layers = l;
+        self
+    }
+
+    /// Hidden width of the layered model.
+    pub fn hidden(mut self, h: usize) -> Self {
+        self.cfg.hidden = h;
+        self
+    }
+
+    /// Assert the model depth (must equal `layers`; build-time error
+    /// otherwise).
+    pub fn model_layers(mut self, l: usize) -> Self {
+        self.cfg.model_layers = Some(l);
         self
     }
 
@@ -267,6 +349,14 @@ impl PipelineBuilder {
     pub fn build(self) -> crate::Result<Pipeline> {
         self.cfg.validate()?;
         let ds = datasets::build(&self.cfg.dataset, self.cfg.seed)?;
+        let dims = self.cfg.model_dims(&ds);
+        anyhow::ensure!(
+            dims.d_in >= 1 && dims.classes >= 2,
+            "dataset `{}` cannot drive the model: feat_dim={}, classes={}",
+            self.cfg.dataset,
+            dims.d_in,
+            dims.classes
+        );
         let part = self.cfg.partitioner.build(&ds.graph, self.cfg.num_pes, self.cfg.seed);
         Ok(Pipeline { cfg: self.cfg, ds, part, store: Mutex::new(None) })
     }
@@ -323,17 +413,22 @@ impl Pipeline {
         self.cfg.trainer_options()
     }
 
-    /// The multi-PE training plane over this pipeline: one trainer
-    /// replica per PE (shape `feat_dim → num_classes`, init from
+    /// The layered-model shape this pipeline trains/serves (see
+    /// [`PipelineConfig::model_dims`]).
+    pub fn model_dims(&self) -> ModelDims {
+        self.cfg.model_dims(&self.ds)
+    }
+
+    /// The multi-PE training plane over this pipeline: one layered-model
+    /// replica per PE (shape [`Pipeline::model_dims`], init from
     /// `cfg.seed`), gradient all-reduce in `cfg.exec`'s execution mode.
     /// Drive it with [`Pipeline::stream`] (optionally prefetch-wrapped);
-    /// the stream and the trainer must agree on `num_pes`, which this
-    /// constructor guarantees.
+    /// the stream and the trainer must agree on `num_pes` *and* depth,
+    /// which this constructor guarantees.
     pub fn parallel_trainer(&self, lr: f32, strategy: AllReduceStrategy) -> ParallelTrainer {
         ParallelTrainer::new(
             self.cfg.num_pes,
-            self.ds.feat_dim,
-            self.ds.num_classes,
+            self.model_dims(),
             self.cfg.seed,
             lr,
             self.cfg.exec,
@@ -367,6 +462,47 @@ mod tests {
         assert!(PipelineBuilder::new().layers(0).build().is_err());
         assert!(PipelineBuilder::new().batch_per_pe(0).build().is_err());
         assert!(PipelineBuilder::new().measure_batches(0).build().is_err());
+        assert!(PipelineBuilder::new().fanout(0).build().is_err());
+        assert!(PipelineBuilder::new().hidden(0).build().is_err());
+    }
+
+    /// Strict model/sampler agreement: fanout lists must match the layer
+    /// count exactly (no silent truncation or padding), and a declared
+    /// model depth must equal the sampled depth.
+    #[test]
+    fn builder_rejects_model_shape_mismatches() {
+        // 2 entries for 3 layers: neither uniform nor per-layer
+        assert!(PipelineBuilder::new().layers(3).fanouts(&[10, 5]).build().is_err());
+        assert!(PipelineBuilder::new().layers(2).fanouts(&[10, 0]).build().is_err());
+        assert!(PipelineBuilder::new().layers(3).model_layers(2).build().is_err());
+        // matching shapes are fine
+        let pipe = PipelineBuilder::new()
+            .layers(3)
+            .fanouts(&[10, 5, 5])
+            .model_layers(3)
+            .hidden(8)
+            .build()
+            .unwrap();
+        let sc = pipe.cfg.sampler_config();
+        assert_eq!(sc.fanout_at(0), 10);
+        assert_eq!(sc.fanout_at(1), 5);
+        assert_eq!(sc.fanout_at(2), 5);
+        assert_eq!(sc.max_fanout(), 10);
+    }
+
+    /// Model dims derive from config depth/width + dataset feature/class
+    /// shape — one shared derivation for every consumer.
+    #[test]
+    fn model_dims_derive_from_config_and_dataset() {
+        let pipe = PipelineBuilder::new().dataset("tiny").layers(2).hidden(12).build().unwrap();
+        let dims = pipe.model_dims();
+        assert_eq!(dims.layers, 2);
+        assert_eq!(dims.hidden, 12);
+        assert_eq!(dims.d_in, pipe.ds.feat_dim);
+        assert_eq!(dims.classes, pipe.ds.num_classes);
+        let pt = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        assert_eq!(pt.dims(), dims);
+        assert_eq!(pt.num_pes(), pipe.cfg.num_pes);
     }
 
     #[test]

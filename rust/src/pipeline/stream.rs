@@ -33,6 +33,7 @@ use crate::coop::feature_loader::{load_cooperative, load_pe, load_pe_cooperative
 use crate::coop::indep::sample_independent;
 use crate::feature::{FeatureStore, PartitionedFeatureStore};
 use crate::graph::{Csr, Dataset, Partition, VertexId};
+use crate::model::{blocks_from_mfg, CoopRoutes, HostBlock, PeCompute};
 use crate::sampling::{Mfg, Sampler};
 use crate::util::rng::Pcg64;
 use crate::util::stats::Timer;
@@ -78,6 +79,13 @@ pub struct PeWork {
     pub samp_ms: f64,
     /// this PE's elapsed feature-loading time.
     pub feat_ms: f64,
+    /// this PE's layered compute payload (blocks over `features`, plus
+    /// activation routes in cooperative mode) — what the multi-PE
+    /// training plane and the serving executor run the model on.
+    /// `None` only for streams that never materialize per-PE work
+    /// (e.g. the merged-MFG training stream, which carries the MFG
+    /// itself instead).
+    pub compute: Option<PeCompute>,
 }
 
 /// One minibatch pulled from a stream.
@@ -150,6 +158,61 @@ pub(crate) fn make_shards(
     }
 }
 
+/// Turn one PE's retained per-layer sample structure into the layered
+/// compute payload: host blocks (CSR positions into each layer's tilde
+/// with `1/(deg+1)` mean weights, the same convention as `Mfg::pad` /
+/// [`HostBlock::from_mfg_layer`]) plus the activation-exchange routes.
+/// `recv_src[l]` is layer `l`'s tilde ownership; `send_pos[l][q]` maps
+/// requester `q`'s round-`l` inbox ids to rows of this PE's owned
+/// `S_p^{l+1}` (sorted, so positions resolve by binary search).
+pub(crate) fn coop_pe_compute(layers: usize, pe_layers: &[&PeLayer]) -> PeCompute {
+    let blocks: Vec<HostBlock> = (0..layers)
+        .map(|l| {
+            let pl = pe_layers[l];
+            let n_dst = pl.owned.len();
+            let mut nbr_w = vec![0f32; pl.nbr_pos.len()];
+            let mut self_w = Vec::with_capacity(n_dst);
+            for i in 0..n_dst {
+                let (s, e) = (pl.nbr_offsets[i] as usize, pl.nbr_offsets[i + 1] as usize);
+                let inv = 1.0 / ((e - s) as f32 + 1.0);
+                for w in &mut nbr_w[s..e] {
+                    *w = inv;
+                }
+                self_w.push(inv);
+            }
+            HostBlock {
+                n_dst,
+                n_src: pl.tilde.len(),
+                offsets: pl.nbr_offsets.clone(),
+                nbr_pos: pl.nbr_pos.clone(),
+                nbr_w,
+                self_pos: pl.self_pos.clone(),
+                self_w,
+            }
+        })
+        .collect();
+    let routes = CoopRoutes {
+        recv_src: (0..layers - 1).map(|l| pe_layers[l].tilde_owner.clone()).collect(),
+        send_pos: (0..layers - 1)
+            .map(|l| {
+                let owned_next = &pe_layers[l + 1].owned;
+                pe_layers[l]
+                    .inbox
+                    .iter()
+                    .map(|req| {
+                        req.iter()
+                            .map(|v| {
+                                owned_next.binary_search(v).expect("inbox id is owned") as u32
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect(),
+    };
+    PeCompute { blocks, seeds: pe_layers[0].owned.clone(), routes: Some(routes) }
+}
+
 /// Assemble one PE's cooperative-mode work record from its per-layer
 /// counts and its feature-loading result (owner-side storage pull +
 /// requester-side fabric arrivals + the dense buffer). Shared by both
@@ -184,6 +247,7 @@ pub(crate) fn coop_pe_work(
         input_vertices: None,
         samp_ms: 0.0,
         feat_ms: 0.0,
+        compute: Some(coop_pe_compute(layers, pe_layers)),
     }
 }
 
@@ -213,6 +277,11 @@ pub(crate) fn indep_pe_work(
         input_vertices: if keep_inputs { Some(mfg.input_vertices().to_vec()) } else { None },
         samp_ms: 0.0,
         feat_ms: 0.0,
+        compute: Some(PeCompute {
+            blocks: blocks_from_mfg(mfg),
+            seeds: mfg.seeds().to_vec(),
+            routes: None,
+        }),
     }
 }
 
@@ -336,6 +405,28 @@ impl<'d> EngineStream<'d> {
     /// The partitioned feature store backing this stream.
     pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
         Arc::clone(&self.store)
+    }
+
+    /// Assign a flat seed list to PEs the way this stream's mode
+    /// requires: by vertex owner in cooperative mode (Algorithm 1's
+    /// "each PE samples its seeds from V_p"), round-robin in
+    /// independent mode. The companion of
+    /// [`EngineStream::batch_for_seeds`] for callers (evaluation, the
+    /// serving plane) holding a global vertex list.
+    pub fn assign_seeds(&self, seeds: &[VertexId]) -> Vec<Vec<VertexId>> {
+        match self.mode {
+            Mode::Cooperative => {
+                crate::coop::coop_sampler::partition_seeds(seeds, self.part)
+            }
+            Mode::Independent => {
+                let p = self.samplers.len();
+                let mut out: Vec<Vec<VertexId>> = vec![Vec::new(); p];
+                for (i, &v) in seeds.iter().enumerate() {
+                    out[i % p].push(v);
+                }
+                out
+            }
+        }
     }
 
     /// Draw this batch's per-PE seed vertices from the training shards

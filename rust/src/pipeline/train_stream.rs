@@ -223,6 +223,9 @@ impl MinibatchStream for TrainStream<'_> {
             input_vertices: None,
             samp_ms,
             feat_ms,
+            // the merged MFG itself travels in `Minibatch::merged`; the
+            // trainer builds blocks from it directly
+            compute: None,
         };
         let index = (self.step - 1) as usize;
         Minibatch { index, per_pe: vec![work], merged: Some(mfg), wall_ms }

@@ -11,9 +11,11 @@
 //! [`crate::pipeline::EngineStream`] seam, so the only
 //! difference between rows is the minibatching strategy. The bytes/step
 //! columns decompose the data plane the way Table 1 does — storage (β)
-//! reads, feature rows over the fabric (α), gradient all-reduce traffic
-//! — and the sanity column confirms the two arms train (loss falls from
-//! the same replicated init).
+//! reads, feature rows over the fabric (α), gradient all-reduce
+//! traffic, and (cooperative only) the per-layer hidden-activation
+//! exchange of the layered compute plane — and the sanity column
+//! confirms the two arms train (loss falls from the same replicated
+//! init).
 //!
 //! Emits `<out>/end2end.csv` + `.md`. The lockstep/bit-identity
 //! correctness properties behind this harness are tested in
@@ -46,6 +48,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "storage_KiB_step",
             "fabric_KiB_step",
             "grad_KiB_step",
+            "act_KiB_step",
             "loss_first",
             "loss_last",
             "coop_vs_indep",
@@ -92,6 +95,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.1}", rep.storage_bytes_per_step / 1024.0),
                 format!("{:.1}", rep.fabric_bytes_per_step / 1024.0),
                 format!("{:.1}", rep.grad_bytes_per_step / 1024.0),
+                format!("{:.1}", rep.act_bytes_per_step / 1024.0),
                 format!("{:.4}", rep.first_loss),
                 format!("{:.4}", rep.last_loss),
                 ratio,
@@ -131,12 +135,16 @@ mod tests {
             let ms: f64 = cells[2].parse().unwrap();
             let storage: f64 = cells[7].parse().unwrap();
             let grad: f64 = cells[9].parse().unwrap();
+            let act: f64 = cells[10].parse().unwrap();
             assert!(ms > 0.0, "ms/step must be measured: {r}");
             assert!(storage > 0.0, "storage bytes must move: {r}");
             assert!(grad > 0.0, "gradient bytes must move: {r}");
             if cells[1] == "Coop" {
                 let fabric: f64 = cells[8].parse().unwrap();
                 assert!(fabric > 0.0, "coop rows must ship fabric rows: {r}");
+                assert!(act > 0.0, "coop rows must exchange hidden activations: {r}");
+            } else {
+                assert_eq!(act, 0.0, "independent rows exchange no activations: {r}");
             }
         }
         assert_eq!(pes_seen.len(), 2, "two PE counts required");
@@ -154,7 +162,7 @@ mod tests {
                 .skip(1)
                 .map(|l| {
                     let c: Vec<&str> = l.split(',').collect();
-                    format!("{},{},{},{}", c[0], c[1], c[10], c[11])
+                    format!("{},{},{},{}", c[0], c[1], c[11], c[12])
                 })
                 .collect()
         };

@@ -18,25 +18,20 @@ use crate::train::Trainer;
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
-    let (ds_name, coop_art, indep_art, p, steps, eval_every) = if ctx.quick {
-        ("tiny", "tiny-b32", "tiny-b32", 2usize, 100usize, 25usize)
-    } else {
-        ("conv", "conv-b1024", "conv-indep4", 4, 250, 25)
-    };
-    // training harness: skip cleanly when the execution runtime or the
-    // AOT artifacts are unavailable (count-based harnesses still run)
-    let rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("fig9: skipped — {e}");
-            return Ok(());
-        }
-    };
-    let manifest = match Manifest::load(&ctx.artifacts) {
-        Ok(m) => m,
-        Err(e) => {
-            println!("fig9: skipped — {e}");
-            return Ok(());
+    let (ds_name, coop_art, indep_art, p, steps, eval_every, (batch, layers, hidden)) =
+        if ctx.quick {
+            ("tiny", "tiny-b32", "tiny-b32", 2usize, 100usize, 25usize, (32usize, 2usize, 16usize))
+        } else {
+            ("conv", "conv-b1024", "conv-indep4", 4, 250, 25, (1024, 3, 32))
+        };
+    // training harness: the PJRT/AOT backend when runtime + artifacts
+    // are present, the host layered backend otherwise — both arms train
+    // for real either way
+    let aot = match (Runtime::cpu(), Manifest::load(&ctx.artifacts)) {
+        (Ok(rt), Ok(m)) => Some((rt, m)),
+        (Err(e), _) | (_, Err(e)) => {
+            println!("fig9: PJRT/AOT unavailable ({e}); using the host compute backend");
+            None
         }
     };
     let pipe = PipelineBuilder::new()
@@ -59,7 +54,10 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         let mut opts = pipe.trainer_options();
         opts.lr = Some(0.01);
         opts.batching = batching;
-        let mut trainer = Trainer::new(&rt, &manifest, art, ds, &opts)?;
+        let mut trainer = match &aot {
+            Some((rt, manifest)) => Trainer::new(rt, manifest, art, ds, &opts)?,
+            None => Trainer::new_host(ds, batch, layers, hidden, &opts)?,
+        };
         let mut final_acc = 0.0;
         for step in 1..=steps {
             let stats = trainer.step()?;

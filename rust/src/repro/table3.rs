@@ -14,11 +14,12 @@ use crate::train::Trainer;
 use crate::util::csv::Table;
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
-    type Table3Cfg = (&'static str, &'static str, usize, u64, usize, Vec<Kappa>);
-    let (ds_name, art_name, steps, runs, eval_every, kappas): Table3Cfg =
+    type Table3Cfg =
+        (&'static str, &'static str, usize, u64, usize, Vec<Kappa>, (usize, usize, usize));
+    let (ds_name, art_name, steps, runs, eval_every, kappas, (batch, layers, hidden)): Table3Cfg =
         if ctx.quick {
             let kappas = vec![Kappa::Finite(1), Kappa::Finite(256), Kappa::Infinite];
-            ("tiny", "tiny-b32", 120, 1, 30, kappas)
+            ("tiny", "tiny-b32", 120, 1, 30, kappas, (32, 2, 16))
         } else {
             (
                 "conv",
@@ -34,22 +35,17 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                     Kappa::Finite(256),
                     Kappa::Infinite,
                 ],
+                (256, 3, 32),
             )
         };
-    // training harness: skip cleanly when the execution runtime or the
-    // AOT artifacts are unavailable (count-based harnesses still run)
-    let rt = match Runtime::cpu() {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("table3: skipped — {e}");
-            return Ok(());
-        }
-    };
-    let manifest = match Manifest::load(&ctx.artifacts) {
-        Ok(m) => m,
-        Err(e) => {
-            println!("table3: skipped — {e}");
-            return Ok(());
+    // training harness: the PJRT/AOT backend when runtime + artifacts
+    // are present, the host layered backend otherwise — the κ sweep
+    // always trains for real
+    let aot = match (Runtime::cpu(), Manifest::load(&ctx.artifacts)) {
+        (Ok(rt), Ok(m)) => Some((rt, m)),
+        (Err(e), _) | (_, Err(e)) => {
+            println!("table3: PJRT/AOT unavailable ({e}); using the host compute backend");
+            None
         }
     };
     let pipe = PipelineBuilder::new()
@@ -79,7 +75,10 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             opts.kappa = kappa;
             opts.seed = ctx.seed ^ (run_idx + 1) << 20;
             opts.lr = Some(0.01);
-            let mut trainer = Trainer::new(&rt, &manifest, art_name, ds, &opts)?;
+            let mut trainer = match &aot {
+                Some((rt, manifest)) => Trainer::new(rt, manifest, art_name, ds, &opts)?,
+                None => Trainer::new_host(ds, batch, layers, hidden, &opts)?,
+            };
             let mut best_val = 0.0f64;
             let mut test_at_best = (0.0f64, 0.0f64);
             let mut last_loss = 0.0f32;

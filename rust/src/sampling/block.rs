@@ -308,7 +308,7 @@ pub fn estimate_caps(
     let mut maxima = vec![0usize; sampler_cfg.layers + 1];
     // LABOR samples *expected* fanout k; individual seeds can exceed it,
     // so the padded-tensor k must be the observed max (with margin).
-    let mut max_fanout = sampler_cfg.fanout;
+    let mut max_fanout = sampler_cfg.max_fanout();
     for t in 0..trials {
         let mut s = sampler_cfg.build(kind, graph, seed ^ (t as u64) << 16);
         let idx = rng.sample_distinct(train.len(), batch_size.min(train.len()));

@@ -86,11 +86,21 @@ impl Default for RwParams {
     }
 }
 
+/// The deepest layer index a per-layer fanout override can address
+/// (fixed so [`SamplerConfig`] stays `Copy`).
+pub const MAX_FANOUT_LAYERS: usize = 8;
+
 /// Sampler configuration shared by all algorithms.
 #[derive(Clone, Copy, Debug)]
 pub struct SamplerConfig {
-    /// Fanout k (paper uses 10).
+    /// Uniform fanout k (paper uses 10); per-layer overrides in
+    /// `fanouts` take precedence where set.
     pub fanout: usize,
+    /// Per-layer fanout overrides, indexed by the `layer` argument of
+    /// [`Sampler::sample_layer`] (0 = the seeds' first hop). A `0` slot
+    /// means "no override — use the uniform `fanout`"; all-zero (the
+    /// default) is the classic uniform configuration.
+    pub fanouts: [usize; MAX_FANOUT_LAYERS],
     /// Number of GNN layers L (paper uses 3).
     pub layers: usize,
     pub rw: RwParams,
@@ -104,6 +114,7 @@ impl Default for SamplerConfig {
     fn default() -> Self {
         SamplerConfig {
             fanout: 10,
+            fanouts: [0; MAX_FANOUT_LAYERS],
             layers: 3,
             rw: RwParams::default(),
             kappa: Kappa::Finite(1),
@@ -122,6 +133,21 @@ impl SamplerConfig {
             rng: DependentRng::new(seed, self.kappa),
             scratch: labor::LaborScratch::default(),
         }
+    }
+
+    /// The effective fanout of GNN layer `layer` (per-layer override
+    /// when set, the uniform `fanout` otherwise).
+    pub fn fanout_at(&self, layer: usize) -> usize {
+        match self.fanouts.get(layer) {
+            Some(&k) if k > 0 => k,
+            _ => self.fanout,
+        }
+    }
+
+    /// The largest effective fanout across the configured layers (caps
+    /// padded-tensor shapes).
+    pub fn max_fanout(&self) -> usize {
+        (0..self.layers).map(|l| self.fanout_at(l)).max().unwrap_or(self.fanout)
     }
 }
 
@@ -169,14 +195,15 @@ impl<'g> Sampler<'g> {
     pub fn sample_layer(&mut self, seeds: &[VertexId], layer: usize, out: &mut Neighborhoods) {
         out.clear();
         out.offsets.push(0);
+        let fanout = self.cfg.fanout_at(layer);
         match self.kind {
             SamplerKind::Neighbor => {
-                neighbor::sample(self.graph, seeds, self.cfg.fanout, &self.rng, layer, out)
+                neighbor::sample(self.graph, seeds, fanout, &self.rng, layer, out)
             }
             SamplerKind::Labor0 => labor::sample_labor0(
                 self.graph,
                 seeds,
-                self.cfg.fanout,
+                fanout,
                 &self.rng,
                 layer,
                 &mut self.scratch,
@@ -185,7 +212,7 @@ impl<'g> Sampler<'g> {
             SamplerKind::LaborStar => labor::sample_labor_star(
                 self.graph,
                 seeds,
-                self.cfg.fanout,
+                fanout,
                 self.cfg.labor_star_rounds,
                 &self.rng,
                 layer,
@@ -196,7 +223,7 @@ impl<'g> Sampler<'g> {
                 random_walk::sample(
                     self.graph,
                     seeds,
-                    self.cfg.fanout,
+                    fanout,
                     self.cfg.rw,
                     &self.rng,
                     layer,
@@ -272,6 +299,28 @@ mod tests {
             for i in 0..seeds.len() {
                 assert!(out.of(i).len() <= 5, "{kind:?} exceeded fanout: {}", out.of(i).len());
             }
+        }
+    }
+
+    #[test]
+    fn per_layer_fanout_overrides_apply_by_layer() {
+        let mut cfg = SamplerConfig { fanout: 7, ..Default::default() };
+        cfg.fanouts[1] = 3;
+        assert_eq!(cfg.fanout_at(0), 7, "unset slot falls back to the uniform fanout");
+        assert_eq!(cfg.fanout_at(1), 3);
+        assert_eq!(cfg.fanout_at(MAX_FANOUT_LAYERS + 5), 7, "beyond the array is uniform");
+        assert_eq!(cfg.max_fanout(), 7);
+        cfg.fanouts[2] = 20;
+        assert_eq!(cfg.max_fanout(), 20);
+
+        // and the sampler really respects the per-layer bound
+        let g = generate::chung_lu(2000, 30.0, 2.3, 5);
+        let seeds: Vec<u32> = (100..200).collect();
+        let mut s = cfg.build(SamplerKind::Neighbor, &g, 42);
+        let mut out = Neighborhoods::default();
+        s.sample_layer(&seeds, 1, &mut out);
+        for i in 0..seeds.len() {
+            assert!(out.of(i).len() <= 3, "layer-1 override violated: {}", out.of(i).len());
         }
     }
 

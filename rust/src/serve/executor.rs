@@ -20,22 +20,22 @@
 //! any decision. A fixed [`BATCH_OVERHEAD_US`] dispatch cost is what
 //! makes batching worth waiting for at all.
 //!
-//! Predictions run the [`crate::train::ParallelTrainer`] forward head
-//! (`train::parallel::forward_logits` + first-max argmax — the same
-//! functions training and evaluation use) over each PE's gathered
-//! feature buffer. With `--prefetch 1` the prediction pass of batch `t`
-//! runs on a background thread while the event loop admits and samples
-//! batch `t+1` — real overlap, and *provably* ledger-neutral, because
-//! predictions only feed the output checksum, never an admission.
+//! Predictions run the full layered model through a
+//! [`crate::model::Predictor`] snapshot (the same compute path training
+//! and evaluation use) over each PE's [`crate::model::PeCompute`] blocks
+//! and gathered feature buffer. With `--prefetch 1` the prediction pass
+//! of batch `t` runs on a background thread while the event loop admits
+//! and samples batch `t+1` — real overlap, and *provably*
+//! ledger-neutral, because predictions only feed the output checksum,
+//! never an admission.
 
 use crate::coop::engine::Mode;
 use crate::costmodel::{ModelCost, SystemPreset};
 use crate::graph::{Partition, VertexId};
+use crate::model::{PeCompute, Predictor};
 use crate::pipeline::{EngineStream, PeWork};
-use crate::train::parallel::{argmax, forward_logits};
 use crate::util::stats::Timer;
 use std::collections::HashMap;
-use std::sync::Arc;
 
 use super::workload::Request;
 
@@ -143,7 +143,7 @@ pub struct BatchExecution {
 
 /// The serving plane's execution engine: request→PE assignment, one
 /// explicit-seed engine batch per dispatch, modeled service time,
-/// forward-head predictions (optionally prediction-prefetched).
+/// layered-model predictions (optionally prediction-prefetched).
 pub struct Executor<'p> {
     stream: EngineStream<'p>,
     part: &'p Partition,
@@ -151,10 +151,7 @@ pub struct Executor<'p> {
     num_pes: usize,
     preset: &'static SystemPreset,
     model: ModelCost,
-    head_w: Arc<Vec<f32>>,
-    head_b: Arc<Vec<f32>>,
-    dim: usize,
-    classes: usize,
+    pred: Predictor,
     /// overlap batch t's prediction pass with batch t+1's admission.
     prefetch: bool,
     pending: Option<std::thread::JoinHandle<Vec<(u64, u16)>>>,
@@ -166,24 +163,20 @@ pub struct Executor<'p> {
 }
 
 impl<'p> Executor<'p> {
-    /// Stand up an executor over a pipeline's stream and forward head.
-    /// `head` is the `(W, b)` softmax head the predictions run
-    /// ([`crate::train::ParallelTrainer::head`]).
-    #[allow(clippy::too_many_arguments)]
+    /// Stand up an executor over a pipeline's stream and a parameter
+    /// snapshot ([`crate::train::ParallelTrainer::predictor`] /
+    /// [`crate::model::GnnModel::predictor`]); predictions run the full
+    /// layered model over each dispatched batch's per-PE compute.
     pub fn new(
         stream: EngineStream<'p>,
         part: &'p Partition,
         mode: Mode,
         preset: &'static SystemPreset,
         model: ModelCost,
-        head: (&[f32], &[f32]),
-        classes: usize,
+        pred: Predictor,
         prefetch: bool,
     ) -> Executor<'p> {
         let num_pes = part.num_parts;
-        let dim = head.0.len() / classes;
-        assert_eq!(dim * classes, head.0.len(), "head W shape");
-        assert_eq!(classes, head.1.len(), "head b shape");
         Executor {
             stream,
             part,
@@ -191,10 +184,7 @@ impl<'p> Executor<'p> {
             num_pes,
             preset,
             model,
-            head_w: Arc::new(head.0.to_vec()),
-            head_b: Arc::new(head.1.to_vec()),
-            dim,
-            classes,
+            pred,
             prefetch,
             pending: None,
             done: Vec::new(),
@@ -254,15 +244,16 @@ impl<'p> Executor<'p> {
         };
         self.batches += 1;
 
-        // prediction pass: each PE's gathered buffer covers its seeds
-        // (S^L ⊇ seeds independently; S̃^L ⊇ owned seeds cooperatively)
-        let buffers: Vec<(Vec<f32>, Vec<VertexId>)> = mb
+        // prediction pass: each PE's compute payload covers its seeds
+        // (blocks over S^L independently; over S̃^L + activation routes
+        // cooperatively), with the gathered buffer as the input rows
+        let pes: Vec<(PeCompute, Vec<f32>)> = mb
             .per_pe
             .into_iter()
             .map(|w| {
                 (
+                    w.compute.expect("engine batches carry layered compute"),
                     w.features.expect("engine batches carry feature buffers"),
-                    w.feature_vertices.expect("engine batches carry vertex lists"),
                 )
             })
             .collect();
@@ -272,20 +263,12 @@ impl<'p> Executor<'p> {
             if let Some(h) = self.pending.take() {
                 self.done.extend(h.join().expect("prediction thread panicked"));
             }
-            let (w, b) = (Arc::clone(&self.head_w), Arc::clone(&self.head_b));
-            let (dim, classes) = (self.dim, self.classes);
+            let pred = self.pred.clone();
             self.pending = Some(std::thread::spawn(move || {
-                predict_batch(&w, &b, dim, classes, &buffers, &assignment)
+                predict_batch(&pred, &pes, &assignment)
             }));
         } else {
-            self.done.extend(predict_batch(
-                &self.head_w,
-                &self.head_b,
-                self.dim,
-                self.classes,
-                &buffers,
-                &assignment,
-            ));
+            self.done.extend(predict_batch(&self.pred, &pes, &assignment));
         }
         exec
     }
@@ -300,31 +283,31 @@ impl<'p> Executor<'p> {
     }
 }
 
-/// The forward pass over one executed batch: look up each request's row
-/// in its PE's gathered buffer and run the trainer head. Pure function
-/// of its inputs — safe to run on the prefetch thread.
+/// The forward pass over one executed batch: run the layered model over
+/// every PE's compute payload at once (cooperative batches exchange
+/// hidden activations between the PE contexts, exactly like training),
+/// then route each request's predicted class back by its seed vertex.
+/// Pure function of its inputs — safe to run on the prefetch thread.
 fn predict_batch(
-    w: &[f32],
-    b: &[f32],
-    dim: usize,
-    classes: usize,
-    buffers: &[(Vec<f32>, Vec<VertexId>)],
+    pred: &Predictor,
+    pes: &[(PeCompute, Vec<f32>)],
     assignment: &[(u64, VertexId, usize)],
 ) -> Vec<(u64, u16)> {
-    let maps: Vec<HashMap<VertexId, usize>> = buffers
+    let refs: Vec<(&PeCompute, &[f32])> =
+        pes.iter().map(|(c, f)| (c, f.as_slice())).collect();
+    let classes = pred.predict_minibatch(&refs);
+    let maps: Vec<HashMap<VertexId, u16>> = pes
         .iter()
-        .map(|(_, vs)| vs.iter().enumerate().map(|(i, &v)| (v, i)).collect())
+        .zip(&classes)
+        .map(|((c, _), cls)| c.seeds.iter().copied().zip(cls.iter().copied()).collect())
         .collect();
-    let mut logits = vec![0f32; classes];
     assignment
         .iter()
         .map(|&(id, v, pe)| {
-            let row = *maps[pe]
+            let class = *maps[pe]
                 .get(&v)
-                .expect("request vertex must be in its PE's gathered buffer");
-            let x = &buffers[pe].0[row * dim..(row + 1) * dim];
-            forward_logits(w, b, x, &mut logits);
-            (id, argmax(&logits) as u16)
+                .expect("request vertex must be a seed on its assigned PE");
+            (id, class)
         })
         .collect()
 }
@@ -371,8 +354,7 @@ mod tests {
             mode,
             costmodel::preset("4xA100").unwrap(),
             ModelCost::gcn(pipe.ds.feat_dim, 128),
-            trainer.head(),
-            pipe.ds.num_classes,
+            trainer.predictor(),
             prefetch,
         );
         let mut execs = Vec::new();
@@ -406,24 +388,25 @@ mod tests {
     }
 
     #[test]
-    fn predictions_match_the_trainer_head_on_store_rows() {
-        let pipe = PipelineBuilder::new()
-            .dataset("tiny")
-            .mode(Mode::Cooperative)
-            .num_pes(2)
-            .seed(23)
-            .build()
-            .unwrap();
+    fn predictions_match_a_duplicate_pipeline_predictor() {
+        let build = || {
+            PipelineBuilder::new()
+                .dataset("tiny")
+                .mode(Mode::Cooperative)
+                .num_pes(2)
+                .seed(23)
+                .build()
+                .unwrap()
+        };
+        let pipe = build();
         let trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
-        let store = pipe.feature_store();
         let mut ex = Executor::new(
             pipe.stream(),
             &pipe.part,
             Mode::Cooperative,
             costmodel::preset("4xA100").unwrap(),
             ModelCost::gcn(pipe.ds.feat_dim, 128),
-            trainer.head(),
-            pipe.ds.num_classes,
+            trainer.predictor(),
             false,
         );
         let vs: Vec<VertexId> = vec![5, 9, 9, 100, 731]; // duplicate on purpose
@@ -432,14 +415,39 @@ mod tests {
         let mut preds = ex.finish();
         preds.sort_unstable();
         assert_eq!(preds.len(), reqs.len(), "every request predicted, duplicates included");
-        use crate::feature::FeatureStore;
-        let mut row = vec![0f32; pipe.ds.feat_dim];
-        let mut logits = vec![0f32; pipe.ds.num_classes];
+
+        // oracle: an identically-seeded pipeline, the same owner
+        // assignment + per-PE dedup, predicted straight through the
+        // Predictor minibatch path — validates the executor's
+        // request→PE→seed routing, duplicates included
+        let dup = build();
+        let oracle = dup.parallel_trainer(0.05, AllReduceStrategy::Ring).predictor();
+        let mut per_pe: Vec<Vec<VertexId>> = vec![Vec::new(); 2];
+        for &v in &vs {
+            let pe = dup.part.part_of(v);
+            if !per_pe[pe].contains(&v) {
+                per_pe[pe].push(v);
+            }
+        }
+        let mut stream = dup.stream();
+        let mb = stream.batch_for_seeds(per_pe);
+        let pes: Vec<(PeCompute, Vec<f32>)> = mb
+            .per_pe
+            .into_iter()
+            .map(|w| (w.compute.unwrap(), w.features.unwrap()))
+            .collect();
+        let refs: Vec<(&PeCompute, &[f32])> =
+            pes.iter().map(|(c, f)| (c, f.as_slice())).collect();
+        let classes = oracle.predict_minibatch(&refs);
+        let mut want: HashMap<VertexId, u16> = HashMap::new();
+        for ((c, _), cls) in pes.iter().zip(&classes) {
+            for (&v, &cl) in c.seeds.iter().zip(cls) {
+                want.insert(v, cl);
+            }
+        }
         for (id, class) in preds {
             let v = reqs[id as usize].vertex;
-            store.copy_row(v, &mut row);
-            let want = trainer.predict_row(&row, &mut logits);
-            assert_eq!(class, want, "request {id} (vertex {v})");
+            assert_eq!(class, want[&v], "request {id} (vertex {v})");
         }
     }
 
@@ -462,8 +470,7 @@ mod tests {
             Mode::Cooperative,
             costmodel::preset("4xA100").unwrap(),
             ModelCost::gcn(pipe.ds.feat_dim, 128),
-            trainer.head(),
-            pipe.ds.num_classes,
+            trainer.predictor(),
             false,
         );
         let vs: Vec<VertexId> = (0..60).map(|i| i * 3 % 2000).collect();
@@ -500,8 +507,7 @@ mod tests {
                 Mode::Cooperative,
                 costmodel::preset("4xA100").unwrap(),
                 ModelCost::gcn(pipe.ds.feat_dim, 128),
-                trainer.head(),
-                pipe.ds.num_classes,
+                trainer.predictor(),
                 false,
             );
             let vs: Vec<VertexId> = (0..n as u32).map(|i| (i * 13) % 2000).collect();

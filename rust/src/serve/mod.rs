@@ -129,8 +129,8 @@ pub struct ServeOutcome {
 
 impl Pipeline {
     /// Stand up an online-inference server over this pipeline: the
-    /// engine stream (with its persistent per-PE caches and fabric),
-    /// a [`crate::train::ParallelTrainer`] forward head initialized
+    /// engine stream (with its persistent per-PE caches and fabric), a
+    /// layered-model [`crate::model::Predictor`] snapshot initialized
     /// from the pipeline seed, a calibrated cost curve, and a seeded
     /// workload. Consume it with [`Server::run`].
     pub fn server(&self, scfg: ServeConfig) -> crate::Result<Server<'_>> {
@@ -143,8 +143,7 @@ impl Pipeline {
             self.cfg.mode,
             scfg.preset,
             model,
-            trainer.head(),
-            self.ds.num_classes,
+            trainer.predictor(),
             self.cfg.prefetch,
         );
         let fixed_global = scfg.fixed_batch_per_pe * self.cfg.num_pes;

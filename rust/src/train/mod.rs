@@ -1,22 +1,27 @@
-//! The training loop: pipeline stream → padded blocks → AOT train-step
-//! → metrics.
+//! The training loop: pipeline stream → layered GNN compute → metrics,
+//! all through the [`crate::model::GnnModel`] backend seam.
 //!
-//! [`trainer::Trainer`] owns the compiled train/forward executables and
-//! the host-side parameter/optimizer state; batch drawing and MFG
-//! sampling come from a [`crate::pipeline::TrainStream`] (the trainer's
-//! own, configured by [`TrainerOptions`], or any external
+//! [`trainer::Trainer`] owns a single-PE model backend (the host
+//! layered compute plane by default, the PJRT/AOT bridge when a runtime
+//! and artifacts are present) and the host-side parameter/optimizer
+//! state; batch drawing and MFG sampling come from a
+//! [`crate::pipeline::TrainStream`] (the trainer's own, configured by
+//! [`TrainerOptions`], or any external
 //! [`crate::pipeline::MinibatchStream`] via [`Trainer::step_from`]).
-//! One [`Trainer::step`] = one PJRT execution; Python is never involved.
-//! [`evalx`] adds accuracy / macro-F1 evaluation over the
-//! validation/test splits through the forward executable.
+//! One [`Trainer::step`] = one backend `train_on_mfg`; Python is never
+//! involved. [`evalx`] adds accuracy / macro-F1 evaluation over the
+//! validation/test splits through the backend forward pass.
 //!
 //! [`parallel::ParallelTrainer`] is the **multi-PE training plane**: one
-//! trainer replica per PE over a [`crate::pipeline::EngineStream`],
-//! replicated [`crate::runtime::tensors::ParamState`]s kept bit-identical
-//! by a gradient all-reduce on the fabric
+//! layered-model replica per PE over a
+//! [`crate::pipeline::EngineStream`], per-layer hidden-activation
+//! exchange between PEs in cooperative mode, and replicated
+//! [`crate::runtime::tensors::ParamState`]s kept bit-identical by a
+//! gradient all-reduce on the fabric
 //! ([`crate::coop::all_to_all::PeEndpoint::all_reduce_f32`]) — the
 //! independent-vs-cooperative end-to-end comparison (`repro end2end`,
-//! CLI `train --train-pes N`) runs through it.
+//! CLI `train --train-pes N`) runs through it. [`parallel::LayerProfile`]
+//! carries its per-layer gather/matmul compute decomposition.
 
 pub mod trainer;
 pub mod evalx;
@@ -24,7 +29,7 @@ pub mod parallel;
 
 pub use trainer::{StepStats, Trainer, TrainerOptions};
 pub use evalx::EvalStats;
-pub use parallel::{ParallelRunReport, ParallelStepStats, ParallelTrainer};
+pub use parallel::{LayerProfile, ParallelRunReport, ParallelStepStats, ParallelTrainer};
 
 // retained re-export: the indep-merged sampling core moved to the
 // pipeline with the rest of the batch-assembly logic

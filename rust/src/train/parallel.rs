@@ -1,52 +1,54 @@
-//! The multi-PE training plane: per-PE trainer replicas over a
+//! The multi-PE training plane: per-PE layered-model replicas over a
 //! [`MinibatchStream`], kept in lockstep by a gradient all-reduce on the
 //! fabric.
 //!
 //! This closes the loop the measurement engine leaves open: a
 //! [`crate::pipeline::EngineStream`] produces one [`PeWork`] per PE —
-//! per-layer counts *and* the dense pre-gathered input-feature buffer —
-//! and [`ParallelTrainer::step`] turns that into a synchronized
-//! optimizer step:
+//! per-layer counts, the dense pre-gathered input-feature buffer, *and*
+//! the layered compute payload ([`crate::model::PeCompute`]: host
+//! blocks + activation routes) — and [`ParallelTrainer::step`] turns
+//! that into a synchronized optimizer step of the full multi-layer GNN:
 //!
-//! 1. every PE builds its batch tensors from **its own** `PeWork`
-//!    (`features` × `feature_vertices`, labels looked up per vertex) and
-//!    computes a local gradient;
-//! 2. the gradients (plus loss / correct / example counts, carried in
-//!    the same flat buffer) are all-reduced over the fabric
-//!    ([`PeEndpoint::all_reduce_f32`], ring or naive strategy — bytes
-//!    accounted alongside the id/row traffic);
+//! 1. every PE runs the layered gather→aggregate→matmul forward over
+//!    **its own** blocks ([`PeStep`], the host backend's per-PE step
+//!    engine). In cooperative mode the hidden activations of each
+//!    level are exchanged over the fabric
+//!    ([`PeEndpoint::all_to_all_rows`] / [`Exchange::route_rows`]):
+//!    each PE computes every owned row exactly once and ships the rows
+//!    its peers' aggregations reference — the paper's redundancy-free
+//!    work division carried through the model compute, with the
+//!    activation bytes accounted like the feature rows;
+//! 2. the backward pass retraces the same routes adjointly (gradient
+//!    rows return to the level's owners), accumulating real per-layer
+//!    weight/bias gradients into one flat buffer that is all-reduced
+//!    over the fabric ([`PeEndpoint::all_reduce_f32`], ring or naive —
+//!    loss / correct / example counts ride in the same buffer);
 //! 3. every PE applies the identical bias-corrected Adam update to its
 //!    replicated [`ParamState`], so after any number of steps all
 //!    replicas hold **bit-identical** parameters.
 //!
-//! [`ExecMode::Threaded`] runs step 1–3 on one scoped OS thread per PE
-//! (the gradient rounds run on a **trainer-private** fabric — its own
-//! endpoints and counters, separate from the stream's sampling fabric —
-//! with the same barrier-per-round discipline, so gradient bytes are
-//! read off the trainer, not the stream); [`ExecMode::Serial`] is the
-//! bit-identical reference
-//! (the all-reduce collapses to [`Exchange::all_reduce_f32`], which
-//! accounts the same bytes). Both trajectories match exactly — tested
-//! below and in `repro::end2end`.
+//! [`ExecMode::Threaded`] runs steps 1–3 on one scoped OS thread per PE
+//! (activation and gradient rounds run on a **trainer-private** fabric —
+//! its own endpoints and counters, separate from the stream's sampling
+//! fabric); [`ExecMode::Serial`] is the bit-identical reference (rows
+//! route through [`Exchange::route_rows`], which accounts the same
+//! bytes; every kernel and accumulation runs in the same deterministic
+//! order). Both trajectories match exactly — tested below and in
+//! `repro::end2end`.
 //!
-//! ## The per-PE model while PJRT is stubbed
-//!
-//! The compute half of each replica is a softmax-regression head over
-//! the PE's gathered input rows (`d → C`, bias, mean cross-entropy over
-//! the buffer's vertices — every synthetic-dataset vertex is labeled).
-//! It is the heaviest data-plane-faithful compute available in this
-//! build: the full feature payload is read, the gradient has the real
-//! `d·C` shape, and the plane (stream → per-PE tensors → all-reduce →
-//! lockstep Adam) is exactly what the AOT train step plugs into once the
-//! PJRT client is restored (`runtime::client`) — swap the local-gradient
-//! closure for an executable invocation and nothing else moves.
+//! Forward-only consumers (holdout evaluation here, the serving plane in
+//! [`crate::serve`]) take a [`Predictor`] snapshot via
+//! [`ParallelTrainer::predictor`] instead of reaching into the
+//! parameters; the old single-head `head()` / `predict_row()` pair
+//! survives one release as `#[deprecated]` shims.
 
 use crate::coop::all_to_all::{AllReduceStrategy, Exchange, Fabric, PeEndpoint};
 use crate::coop::engine::ExecMode;
-use crate::feature::FeatureStore;
 use crate::graph::VertexId;
+use crate::model::host::PeStep;
+use crate::model::{ModelDims, PeCompute, Predictor};
 use crate::pipeline::stream::AbortOnPeerPanic;
-use crate::pipeline::{Minibatch, MinibatchStream, PeWork};
+use crate::pipeline::{EngineStream, Minibatch, MinibatchStream, PeWork};
 use crate::runtime::tensors::ParamState;
 use crate::util::stats::Timer;
 
@@ -57,17 +59,20 @@ pub struct ParallelStepStats {
     pub loss: f32,
     /// global batch accuracy.
     pub acc: f32,
-    /// examples (gathered vertices) across all PEs this step.
+    /// examples (seed vertices) across all PEs this step.
     pub examples: u64,
     /// whole-step wall-clock (all PEs, concurrent in threaded mode).
     pub wall_ms: f64,
-    /// local forward+backward time, summed across PEs.
+    /// local layered forward+backward time, summed across PEs.
     pub compute_ms: f64,
     /// all-reduce time on the critical path (max over PEs in threaded
     /// mode — per-PE elapsed includes barrier waits).
     pub allreduce_ms: f64,
     /// cross-PE gradient bytes this step (fabric-wide).
     pub grad_bytes: u64,
+    /// cross-PE hidden-activation bytes this step (forward rows +
+    /// backward gradient rows; cooperative mode only).
+    pub act_bytes: u64,
 }
 
 /// Aggregates of a [`ParallelTrainer::run`] drive (per-step averages
@@ -89,163 +94,91 @@ pub struct ParallelRunReport {
     pub fabric_bytes_per_step: f64,
     /// gradient bytes over the fabric per step (all PEs).
     pub grad_bytes_per_step: f64,
+    /// hidden-activation bytes over the fabric per step (all PEs,
+    /// cooperative mode; 0 for independent).
+    pub act_bytes_per_step: f64,
     pub first_loss: f32,
     pub last_loss: f32,
     pub last_acc: f32,
 }
 
-/// Flat gradient layout: `[dW (d·C) | db (C) | loss_sum | correct | n]`.
-/// Carrying the scalar statistics inside the reduced buffer means one
-/// all-reduce per step synchronizes gradients *and* reporting.
-fn flat_len(dim: usize, classes: usize) -> usize {
-    dim * classes + classes + 3
+/// Per-block kernel timing accumulated across PEs and steps (block 0 =
+/// output layer) — the `layered_train` bench section reads this off the
+/// trainer after a run.
+#[derive(Clone, Debug, Default)]
+pub struct LayerProfile {
+    /// gather/aggregate kernel ms per block (forward + backward).
+    pub gather_ms: Vec<f64>,
+    /// matmul kernel ms per block (forward + backward).
+    pub matmul_ms: Vec<f64>,
 }
 
-/// The model's forward pass for one row: `logits = b + x·W` (W row-major
-/// `[dim × classes]`). One implementation shared by training,
-/// evaluation, *and* the serving plane's prediction path
-/// ([`crate::serve::executor`]) so the three can never drift numerically
-/// (f32 summation order included).
-pub(crate) fn forward_logits(w: &[f32], b: &[f32], x: &[f32], logits: &mut [f32]) {
-    let classes = b.len();
-    logits.copy_from_slice(b);
-    for (j, &xj) in x.iter().enumerate() {
-        let wrow = &w[j * classes..(j + 1) * classes];
-        for (c, &wjc) in wrow.iter().enumerate() {
-            logits[c] += xj * wjc;
-        }
-    }
-}
-
-/// First-maximum scan — the one tie-break rule (lowest class wins) for
-/// training accuracy and evaluation alike. NaN-safe: `>` is false for
-/// NaN, so a diverged model degrades to predicting class 0 instead of
-/// panicking.
-pub(crate) fn argmax(logits: &[f32]) -> usize {
-    let mut best = 0usize;
-    for (c, &l) in logits.iter().enumerate().skip(1) {
-        if l > logits[best] {
-            best = c;
-        }
-    }
-    best
-}
-
-/// One PE's local forward + backward over its gathered rows: softmax
-/// regression `logits = x·W + b`, summed (not averaged) cross-entropy
-/// gradient — the global mean is taken after the all-reduce, where the
-/// global example count is known. Deterministic f32, shared by both exec
-/// modes so trajectories cannot drift.
-fn local_grads(
-    state: &ParamState,
-    work: &PeWork,
-    labels: &[u16],
-    dim: usize,
-    classes: usize,
-) -> Vec<f32> {
-    let mut flat = vec![0f32; flat_len(dim, classes)];
-    let (Some(features), Some(vs)) = (work.features.as_deref(), work.feature_vertices.as_deref())
-    else {
-        return flat; // measurement-only work record: zero contribution
-    };
-    debug_assert_eq!(features.len(), vs.len() * dim, "feature buffer shape");
-    let w = &state.params[0]; // [dim × classes], row-major
-    let b = &state.params[1]; // [classes]
-    let (dw, rest) = flat.split_at_mut(dim * classes);
-    let (db, stats) = rest.split_at_mut(classes);
-    let mut logits = vec![0f32; classes];
-    let mut loss_sum = 0f32;
-    let mut correct = 0f32;
-    for (i, &v) in vs.iter().enumerate() {
-        let x = &features[i * dim..(i + 1) * dim];
-        forward_logits(w, b, x, &mut logits);
-        let y = labels[v as usize] as usize;
-        debug_assert!(y < classes, "label {y} out of range for {classes} classes");
-        // stable softmax cross-entropy
-        let pred = argmax(&logits);
-        let max = logits[pred];
-        let mut denom = 0f32;
-        for l in logits.iter_mut() {
-            *l = (*l - max).exp();
-            denom += *l;
-        }
-        // -ln p_y = ln(Σ exp) - (l_y - max); logits now hold the exps,
-        // so l_y - max = ln(exp_y) (clamped against underflow to -inf)
-        loss_sum += denom.ln() - logits[y].max(f32::MIN_POSITIVE).ln();
-        if pred == y {
-            correct += 1.0;
-        }
-        for (c, &l) in logits.iter().enumerate() {
-            let g = l / denom - if c == y { 1.0 } else { 0.0 };
-            db[c] += g;
-            for (j, &xj) in x.iter().enumerate() {
-                dw[j * classes + c] += xj * g;
-            }
-        }
-    }
-    stats[0] = loss_sum;
-    stats[1] = correct;
-    stats[2] = vs.len() as f32;
-    flat
-}
-
-/// `P` trainer replicas with lockstep parameters: each PE consumes its
-/// own [`PeWork`] from a [`MinibatchStream`] batch and the gradient
+/// `P` model replicas with lockstep parameters: each PE consumes its
+/// own [`PeWork`] from a [`MinibatchStream`] batch, executes the
+/// layered model over the work's [`PeCompute`] blocks, and the gradient
 /// all-reduce keeps every replica's [`ParamState`] bit-identical. See
 /// the module docs for the full contract.
 pub struct ParallelTrainer {
     num_pes: usize,
-    dim: usize,
-    classes: usize,
+    dims: ModelDims,
     lr: f32,
     exec: ExecMode,
     strategy: AllReduceStrategy,
     replicas: Vec<ParamState>,
     /// live fabric endpoints (threaded mode; `None` per slot in serial).
     endpoints: Vec<Option<PeEndpoint>>,
-    /// serial-mode gradient fabric (accounts the same bytes the threaded
-    /// endpoints would).
+    /// serial-mode fabric for activation rows and gradients (accounts
+    /// the same bytes the threaded endpoints would).
     serial_fabric: Exchange,
+    profile: LayerProfile,
     steps: u64,
 }
 
 impl ParallelTrainer {
-    /// Stand up `num_pes` bit-identical replicas (`d_in → classes` head,
-    /// Glorot init from `seed`) and, in threaded mode, a connected
-    /// gradient fabric.
+    /// Stand up `num_pes` bit-identical replicas of the layered model
+    /// (`dims`, Glorot init from `seed`) and, in threaded mode, a
+    /// connected fabric for activation and gradient rounds.
     pub fn new(
         num_pes: usize,
-        d_in: usize,
-        classes: usize,
+        dims: ModelDims,
         seed: u64,
         lr: f32,
         exec: ExecMode,
         strategy: AllReduceStrategy,
     ) -> ParallelTrainer {
-        assert!(num_pes >= 1 && d_in >= 1 && classes >= 2, "degenerate trainer shape");
-        let shapes = vec![vec![d_in, classes], vec![classes]];
-        let replicas =
-            (0..num_pes).map(|_| ParamState::with_shapes(shapes.clone(), seed ^ 0xFACE)).collect();
+        assert!(
+            num_pes >= 1 && dims.layers >= 1 && dims.d_in >= 1 && dims.classes >= 2,
+            "degenerate trainer shape"
+        );
+        assert!(dims.layers == 1 || dims.hidden >= 1, "hidden width must be >= 1");
+        let replicas = (0..num_pes).map(|_| dims.init_state(seed ^ 0xFACE)).collect();
         let endpoints: Vec<Option<PeEndpoint>> = match exec {
             ExecMode::Threaded => Fabric::endpoints(num_pes).into_iter().map(Some).collect(),
             ExecMode::Serial => (0..num_pes).map(|_| None).collect(),
         };
         ParallelTrainer {
             num_pes,
-            dim: d_in,
-            classes,
+            dims,
             lr,
             exec,
             strategy,
             replicas,
             endpoints,
             serial_fabric: Exchange::new(num_pes),
+            profile: LayerProfile {
+                gather_ms: vec![0.0; dims.layers],
+                matmul_ms: vec![0.0; dims.layers],
+            },
             steps: 0,
         }
     }
 
     pub fn num_pes(&self) -> usize {
         self.num_pes
+    }
+
+    pub fn dims(&self) -> ModelDims {
+        self.dims
     }
 
     pub fn steps(&self) -> u64 {
@@ -264,6 +197,11 @@ impl ParallelTrainer {
         self.replicas.iter().all(|r| r.bits_eq(&self.replicas[0]))
     }
 
+    /// Per-block kernel time accumulated so far (all PEs, all steps).
+    pub fn layer_profile(&self) -> &LayerProfile {
+        &self.profile
+    }
+
     /// Total cross-PE gradient bytes so far (reduce + gather phases;
     /// summed over endpoints in threaded mode, from the serial fabric
     /// otherwise — exactly one of the two is nonzero).
@@ -279,9 +217,26 @@ impl ParallelTrainer {
             + self.serial_fabric.cross_grad_gather_bytes
     }
 
-    /// One synchronized step over a stream batch: local gradients from
-    /// each PE's work record, one all-reduce, one Adam update per
-    /// replica. `labels` is the dataset's full label vector.
+    /// Total cross-PE hidden-activation bytes so far (forward rows and
+    /// backward gradient rows of the cooperative layered step; the
+    /// trainer-private fabric carries no feature rows, so this counter
+    /// is purely activation traffic).
+    pub fn act_bytes_total(&self) -> u64 {
+        let threaded: u64 =
+            self.endpoints.iter().flatten().map(|ep| ep.cross_row_bytes).sum();
+        threaded + self.serial_fabric.cross_row_bytes
+    }
+
+    /// A forward-only parameter snapshot of the lockstep model (replica
+    /// 0 is representative of every PE).
+    pub fn predictor(&self) -> Predictor {
+        Predictor::new(self.dims, self.replicas[0].params.clone())
+    }
+
+    /// One synchronized step over a stream batch: layered forward with
+    /// activation exchange, layered backward with the adjoint exchange,
+    /// one all-reduce, one Adam update per replica. `labels` is the
+    /// dataset's full label vector.
     pub fn step(&mut self, mb: &Minibatch, labels: &[u16]) -> ParallelStepStats {
         assert_eq!(
             mb.per_pe.len(),
@@ -289,22 +244,20 @@ impl ParallelTrainer {
             "stream PE count must match the trainer (got a {}-PE batch)",
             mb.per_pe.len()
         );
-        let bytes_before = self.grad_bytes_total();
+        let coop = batch_is_cooperative(&mb.per_pe);
+        let grad_before = self.grad_bytes_total();
+        let act_before = self.act_bytes_total();
         let wall = Timer::start();
-        let (dim, classes, lr, strategy) = (self.dim, self.classes, self.lr, self.strategy);
-        let gl = dim * classes + classes;
+        let (dims, lr, strategy) = (self.dims, self.lr, self.strategy);
+        let gl = dims.num_scalars();
         let (mut compute_ms, mut allreduce_ms) = (0f64, 0f64);
-        // every PE ends the all-reduce holding the identical flat buffer;
-        // keep PE 0's for reporting
+        // every PE ends the all-reduce holding the identical flat buffer
+        // ([grads | loss_sum | correct | n]); keep PE 0's for reporting
         let reduced: Vec<f32> = match self.exec {
             ExecMode::Serial => {
                 let t = Timer::start();
-                let mut bufs: Vec<Vec<f32>> = self
-                    .replicas
-                    .iter()
-                    .zip(&mb.per_pe)
-                    .map(|(state, work)| local_grads(state, work, labels, dim, classes))
-                    .collect();
+                let mut bufs =
+                    serial_minibatch_grads(dims, coop, &self.replicas, &mut self.serial_fabric, &mb.per_pe, labels, &mut self.profile);
                 compute_ms = t.elapsed_ms();
                 let t = Timer::start();
                 self.serial_fabric.all_reduce_f32(&mut bufs, strategy);
@@ -313,7 +266,18 @@ impl ParallelTrainer {
                 bufs.swap_remove(0)
             }
             ExecMode::Threaded => {
-                let results: Vec<(Vec<f32>, f64, f64)> = std::thread::scope(|scope| {
+                if coop {
+                    // a cooperative batch has every PE in every fabric
+                    // round; a missing payload would deadlock its peers
+                    for (p, w) in mb.per_pe.iter().enumerate() {
+                        assert!(
+                            w.compute.is_some() && w.features.is_some(),
+                            "cooperative batch PE {p} lacks compute payload"
+                        );
+                    }
+                }
+                type PeResult = (Vec<f32>, f64, f64, Vec<f64>, Vec<f64>);
+                let results: Vec<PeResult> = std::thread::scope(|scope| {
                     let handles: Vec<_> = self
                         .replicas
                         .iter_mut()
@@ -324,13 +288,15 @@ impl ParallelTrainer {
                                 let _abort_guard = AbortOnPeerPanic;
                                 let ep = ep.as_mut().expect("threaded trainer has endpoints");
                                 let t = Timer::start();
-                                let mut buf = local_grads(state, work, labels, dim, classes);
+                                let mut buf = vec![0f32; gl + 3];
+                                let (gms, mms) =
+                                    pe_local_grads(dims, coop, state, Some(ep), work, labels, &mut buf);
                                 let compute = t.elapsed_ms();
                                 let t = Timer::start();
                                 ep.all_reduce_f32(&mut buf, strategy);
                                 let reduce = t.elapsed_ms();
                                 apply_reduced(std::slice::from_mut(state), &buf, gl, lr);
-                                (buf, compute, reduce)
+                                (buf, compute, reduce, gms, mms)
                             })
                         })
                         .collect();
@@ -339,9 +305,15 @@ impl ParallelTrainer {
                         .map(|h| h.join().expect("PE trainer thread panicked"))
                         .collect()
                 });
-                for (_, c, r) in &results {
+                for (_, c, r, gms, mms) in &results {
                     compute_ms += c;
                     allreduce_ms = allreduce_ms.max(*r);
+                    for (acc, v) in self.profile.gather_ms.iter_mut().zip(gms) {
+                        *acc += v;
+                    }
+                    for (acc, v) in self.profile.matmul_ms.iter_mut().zip(mms) {
+                        *acc += v;
+                    }
                 }
                 results.into_iter().next().unwrap().0
             }
@@ -356,7 +328,8 @@ impl ParallelTrainer {
             wall_ms: wall.elapsed_ms(),
             compute_ms,
             allreduce_ms,
-            grad_bytes: self.grad_bytes_total() - bytes_before,
+            grad_bytes: self.grad_bytes_total() - grad_before,
+            act_bytes: self.act_bytes_total() - act_before,
         }
     }
 
@@ -384,6 +357,7 @@ impl ParallelTrainer {
             rep.compute_ms += s.compute_ms;
             rep.allreduce_ms += s.allreduce_ms;
             rep.grad_bytes_per_step += s.grad_bytes as f64;
+            rep.act_bytes_per_step += s.act_bytes as f64;
             if step == 0 {
                 rep.first_loss = s.loss;
             }
@@ -400,47 +374,225 @@ impl ParallelTrainer {
         rep.storage_bytes_per_step /= m;
         rep.fabric_bytes_per_step /= m;
         rep.grad_bytes_per_step /= m;
+        rep.act_bytes_per_step /= m;
         rep
     }
 
-    /// Replica 0's forward head `(W, b)` (W row-major `[dim × classes]`)
-    /// — the model the serving plane runs per request. Lockstep makes
-    /// replica 0 representative of every PE.
-    pub fn head(&self) -> (&[f32], &[f32]) {
-        (&self.replicas[0].params[0], &self.replicas[0].params[1])
-    }
-
-    /// Class prediction for one gathered row through replica 0's head —
-    /// the exact `forward_logits` + first-max `argmax` pair training and
-    /// evaluation use, exposed for per-request serving. `logits` is
-    /// caller-provided scratch of length `num_classes`.
-    pub fn predict_row(&self, x: &[f32], logits: &mut [f32]) -> u16 {
-        debug_assert_eq!(x.len(), self.dim);
-        debug_assert_eq!(logits.len(), self.classes);
-        let (w, b) = self.head();
-        forward_logits(w, b, x, logits);
-        argmax(logits) as u16
-    }
-
-    /// Holdout accuracy of the (lockstep) model over `vs`, reading rows
-    /// from `store` with replica 0 — the cheap evaluation loop of the
-    /// host training plane.
-    pub fn evaluate(&self, vs: &[VertexId], labels: &[u16], store: &dyn FeatureStore) -> f64 {
-        assert_eq!(store.dim(), self.dim, "store/model shape mismatch");
-        let w = &self.replicas[0].params[0];
-        let b = &self.replicas[0].params[1];
-        let mut row = vec![0f32; self.dim];
-        let mut logits = vec![0f32; self.classes];
+    /// Holdout accuracy of the (lockstep) layered model over `vs`:
+    /// seeds are assigned to PEs by the stream's policy
+    /// ([`EngineStream::assign_seeds`]), sampled + gathered through
+    /// [`EngineStream::batch_for_seeds`], and predicted through a
+    /// [`Predictor`] — the exact compute path the serving plane runs.
+    /// Advances the stream's sampler/cache state (evaluation batches
+    /// are real batches), so run it after — not between — training
+    /// phases, or on a dedicated stream.
+    pub fn evaluate(
+        &self,
+        stream: &mut EngineStream<'_>,
+        vs: &[VertexId],
+        labels: &[u16],
+    ) -> f64 {
+        let pred = self.predictor();
         let mut correct = 0usize;
-        for &v in vs {
-            store.copy_row(v, &mut row);
-            forward_logits(w, b, &row, &mut logits);
-            if argmax(&logits) == labels[v as usize] as usize {
-                correct += 1;
+        let mut total = 0usize;
+        for chunk in vs.chunks(1024) {
+            let mb = stream.batch_for_seeds(stream.assign_seeds(chunk));
+            let pes: Vec<(&PeCompute, &[f32])> = mb
+                .per_pe
+                .iter()
+                .map(|w| {
+                    (
+                        w.compute.as_ref().expect("engine batches carry compute"),
+                        w.features.as_deref().expect("engine batches carry features"),
+                    )
+                })
+                .collect();
+            for (pe, preds) in pred.predict_minibatch(&pes).into_iter().enumerate() {
+                let seeds = &pes[pe].0.seeds;
+                for (&v, &p) in seeds.iter().zip(&preds) {
+                    total += 1;
+                    if p == labels[v as usize] {
+                        correct += 1;
+                    }
+                }
             }
         }
-        correct as f64 / vs.len().max(1) as f64
+        correct as f64 / total.max(1) as f64
     }
+
+    /// Replica 0's output-layer parameters `(W, b)` (W row-major
+    /// `[in_dim × classes]`).
+    #[deprecated(
+        note = "the layered model has no standalone head; snapshot the full model with \
+                `predictor()` instead"
+    )]
+    pub fn head(&self) -> (&[f32], &[f32]) {
+        let d = self.dims.layers - 1;
+        (&self.replicas[0].params[2 * d], &self.replicas[0].params[2 * d + 1])
+    }
+
+    /// Class prediction for one gathered feature row treated as an
+    /// isolated vertex (self-only aggregation at every layer).
+    #[deprecated(
+        note = "single-row prediction ignores the sampled neighborhood; use \
+                `predictor().predict_minibatch` over a stream batch instead"
+    )]
+    pub fn predict_row(&self, x: &[f32], logits: &mut [f32]) -> u16 {
+        let pred = self.predictor();
+        let lg = pred.logits_isolated(x);
+        logits.copy_from_slice(&lg);
+        crate::model::kernels::argmax(logits) as u16
+    }
+}
+
+/// A batch is cooperative iff its work records carry activation routes.
+/// Mixing cooperative and independent payloads in one batch is a stream
+/// bug (the fabric rounds would desynchronize).
+fn batch_is_cooperative(per_pe: &[PeWork]) -> bool {
+    let coop = per_pe
+        .iter()
+        .any(|w| w.compute.as_ref().is_some_and(|c| c.routes.is_some()));
+    assert!(
+        !coop
+            || per_pe
+                .iter()
+                .all(|w| w.compute.as_ref().is_some_and(|c| c.routes.is_some())),
+        "mixed cooperative/independent payloads in one batch"
+    );
+    coop
+}
+
+/// One PE's layered forward/backward in threaded mode (straight-line;
+/// fabric rounds through the PE's own endpoint when `coop`). Fills
+/// `buf = [grads | loss_sum | correct | n]` (zeros when the record has
+/// no payload — measurement-only streams) and returns the per-block
+/// (gather_ms, matmul_ms) kernel profile.
+fn pe_local_grads(
+    dims: ModelDims,
+    coop: bool,
+    state: &ParamState,
+    mut ep: Option<&mut PeEndpoint>,
+    work: &PeWork,
+    labels: &[u16],
+    buf: &mut [f32],
+) -> (Vec<f64>, Vec<f64>) {
+    let gl = dims.num_scalars();
+    let (Some(comp), Some(feats)) = (&work.compute, work.features.as_deref()) else {
+        debug_assert!(!coop, "cooperative PEs always carry a payload");
+        return (vec![0.0; dims.layers], vec![0.0; dims.layers]);
+    };
+    let mut step = PeStep::new(dims, comp, feats, &state.params);
+    step.forward_deepest();
+    for l in (0..dims.layers - 1).rev() {
+        if coop {
+            let buckets = step.send_rows(l);
+            let inbox = ep
+                .as_mut()
+                .expect("cooperative rounds need a fabric endpoint")
+                .all_to_all_rows(buckets, dims.hidden);
+            step.forward_level(l, Some(inbox));
+        } else {
+            step.forward_level(l, None);
+        }
+    }
+    let (loss_sum, correct, n) = step.loss_grad(labels);
+    buf[gl] = loss_sum;
+    buf[gl + 1] = correct;
+    buf[gl + 2] = n;
+    for l in 0..dims.layers {
+        let out = step.backward_level(l, &mut buf[..gl]);
+        if coop && l < dims.layers - 1 {
+            let buckets = out.expect("cooperative backward emits gradient buckets");
+            let inbox = ep
+                .as_mut()
+                .expect("cooperative rounds need a fabric endpoint")
+                .all_to_all_rows(buckets, dims.hidden);
+            step.absorb_grad_inbox(l, inbox);
+        }
+    }
+    (step.gather_ms.clone(), step.matmul_ms.clone())
+}
+
+/// Serial reference: all PEs' layered steps inline, with the fabric
+/// rounds interleaved level-synchronously through the serial exchange —
+/// identical kernel and accumulation order to the threaded path.
+fn serial_minibatch_grads(
+    dims: ModelDims,
+    coop: bool,
+    replicas: &[ParamState],
+    fabric: &mut Exchange,
+    per_pe: &[PeWork],
+    labels: &[u16],
+    profile: &mut LayerProfile,
+) -> Vec<Vec<f32>> {
+    let p_count = replicas.len();
+    let gl = dims.num_scalars();
+    let mut bufs: Vec<Vec<f32>> = vec![vec![0f32; gl + 3]; p_count];
+    let mut steps: Vec<Option<PeStep>> = replicas
+        .iter()
+        .zip(per_pe)
+        .map(|(state, work)| match (&work.compute, work.features.as_deref()) {
+            (Some(comp), Some(feats)) => Some(PeStep::new(dims, comp, feats, &state.params)),
+            _ => {
+                assert!(!coop, "cooperative batches always carry a payload");
+                None
+            }
+        })
+        .collect();
+    for s in steps.iter_mut().flatten() {
+        s.forward_deepest();
+    }
+    for l in (0..dims.layers - 1).rev() {
+        if coop {
+            let buckets: Vec<Vec<Vec<f32>>> = steps
+                .iter()
+                .map(|s| s.as_ref().expect("coop payload").send_rows(l))
+                .collect();
+            let inboxes = fabric.route_rows(buckets, dims.hidden);
+            for (s, inbox) in steps.iter_mut().zip(inboxes) {
+                s.as_mut().expect("coop payload").forward_level(l, Some(inbox));
+            }
+        } else {
+            for s in steps.iter_mut().flatten() {
+                s.forward_level(l, None);
+            }
+        }
+    }
+    for (s, buf) in steps.iter_mut().zip(bufs.iter_mut()) {
+        if let Some(s) = s {
+            let (loss_sum, correct, n) = s.loss_grad(labels);
+            buf[gl] = loss_sum;
+            buf[gl + 1] = correct;
+            buf[gl + 2] = n;
+        }
+    }
+    for l in 0..dims.layers {
+        let mut round: Vec<Vec<Vec<f32>>> = Vec::new();
+        for (s, buf) in steps.iter_mut().zip(bufs.iter_mut()) {
+            let out = match s {
+                Some(s) => s.backward_level(l, &mut buf[..gl]),
+                None => None,
+            };
+            if coop && l < dims.layers - 1 {
+                round.push(out.expect("cooperative backward emits gradient buckets"));
+            }
+        }
+        if coop && l < dims.layers - 1 {
+            let inboxes = fabric.route_rows(round, dims.hidden);
+            for (s, inbox) in steps.iter_mut().zip(inboxes) {
+                s.as_mut().expect("coop payload").absorb_grad_inbox(l, inbox);
+            }
+        }
+    }
+    for s in steps.iter().flatten() {
+        for (acc, v) in profile.gather_ms.iter_mut().zip(&s.gather_ms) {
+            *acc += v;
+        }
+        for (acc, v) in profile.matmul_ms.iter_mut().zip(&s.matmul_ms) {
+            *acc += v;
+        }
+    }
+    bufs
 }
 
 /// Scale the reduced gradient by the global example count and apply the
@@ -480,6 +632,10 @@ mod tests {
         }
     }
 
+    fn dims_for(ds: &datasets::Dataset, layers: usize) -> ModelDims {
+        ModelDims { layers, d_in: ds.feat_dim, hidden: 8, classes: ds.num_classes }
+    }
+
     fn trajectory(
         mode: Mode,
         exec: ExecMode,
@@ -489,11 +645,11 @@ mod tests {
     ) -> ParallelTrainer {
         let ds = datasets::build("tiny", 5).unwrap();
         let part = partition::random(&ds.graph, pes, 3);
-        let mut stream = EngineStream::new(&ds, &part, &cfg(mode, exec, pes));
+        let c = cfg(mode, exec, pes);
+        let mut stream = EngineStream::new(&ds, &part, &c);
         let mut pt = ParallelTrainer::new(
             pes,
-            ds.feat_dim,
-            ds.num_classes,
+            dims_for(&ds, c.sampler.layers),
             41,
             0.05,
             exec,
@@ -509,8 +665,8 @@ mod tests {
     }
 
     /// The tentpole's correctness property: after K steps every PE holds
-    /// bit-identical parameters, in both modes, both exec modes, both
-    /// all-reduce strategies.
+    /// bit-identical parameters of the full layered model, in both
+    /// modes, both exec modes, both all-reduce strategies.
     #[test]
     fn replicas_stay_in_lockstep_after_k_steps() {
         for mode in [Mode::Independent, Mode::Cooperative] {
@@ -527,8 +683,10 @@ mod tests {
         }
     }
 
-    /// Serial and threaded trajectories are bit-identical — and so are
-    /// ring vs naive (both reduce in the canonical order).
+    /// Serial and threaded trajectories are bit-identical — the
+    /// cooperative path exchanges hidden activations both ways, so this
+    /// pins the whole layered forward/backward order — and so are ring
+    /// vs naive (both reduce in the canonical order).
     #[test]
     fn serial_threaded_and_both_strategies_bit_identical() {
         for mode in [Mode::Independent, Mode::Cooperative] {
@@ -560,36 +718,72 @@ mod tests {
         assert_eq!(single.grad_bytes_total(), 0, "1 PE has no cross traffic");
     }
 
+    /// The cooperative layered step moves hidden-activation rows over
+    /// the fabric (and accounts them identically in both exec modes);
+    /// the independent step moves none. The per-block kernel profile
+    /// fills in either way.
+    #[test]
+    fn activation_byte_accounting_is_cooperative_only() {
+        let cs = trajectory(Mode::Cooperative, ExecMode::Serial, 3, AllReduceStrategy::Ring, 3);
+        let ct = trajectory(Mode::Cooperative, ExecMode::Threaded, 3, AllReduceStrategy::Ring, 3);
+        assert!(cs.act_bytes_total() > 0, "coop layered steps must ship activations");
+        assert_eq!(cs.act_bytes_total(), ct.act_bytes_total());
+        let indep =
+            trajectory(Mode::Independent, ExecMode::Threaded, 3, AllReduceStrategy::Ring, 3);
+        assert_eq!(indep.act_bytes_total(), 0, "independent mode replicates instead");
+        assert_eq!(cs.layer_profile().gather_ms.len(), cs.dims().layers);
+        assert_eq!(ct.layer_profile().matmul_ms.len(), ct.dims().layers);
+    }
+
     /// The model actually learns: driving the full run loop on tiny
-    /// lowers the loss and beats chance accuracy on the validation split.
+    /// lowers the loss and beats chance accuracy on the validation
+    /// split, evaluated through the same stream + Predictor path the
+    /// serving plane uses.
     #[test]
     fn run_reduces_loss_and_beats_chance() {
         let ds = datasets::build("tiny", 5).unwrap();
         let pes = 2;
         let part = partition::random(&ds.graph, pes, 3);
         let mut c = cfg(Mode::Cooperative, ExecMode::Threaded, pes);
-        c.measure_batches = 30;
+        c.measure_batches = 60;
         let mut stream = EngineStream::new(&ds, &part, &c);
-        let store = stream.feature_store();
         let mut pt = ParallelTrainer::new(
             pes,
-            ds.feat_dim,
-            ds.num_classes,
+            dims_for(&ds, c.sampler.layers),
             41,
             0.05,
             ExecMode::Threaded,
             AllReduceStrategy::Ring,
         );
-        let rep = pt.run(&mut stream, 30, &ds.labels);
+        let rep = pt.run(&mut stream, 60, &ds.labels);
         assert!(
             rep.last_loss < rep.first_loss,
             "loss must drop: {} -> {}",
             rep.first_loss,
             rep.last_loss
         );
-        let acc = pt.evaluate(&ds.val, &ds.labels, &*store);
+        assert!(rep.act_bytes_per_step > 0.0, "coop run ships activations");
+        let acc = pt.evaluate(&mut stream, &ds.val, &ds.labels);
         let chance = 1.0 / ds.num_classes as f64;
         assert!(acc > chance * 1.2, "val acc {acc:.3} vs chance {chance:.3}");
         assert!(rep.ms_per_step > 0.0 && rep.storage_bytes_per_step > 0.0);
+    }
+
+    /// The deprecated single-head shims stay functional for one release:
+    /// `head()` exposes the output-layer pair, `predict_row` agrees with
+    /// the Predictor's isolated-row forward.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_answer() {
+        let pt = trajectory(Mode::Independent, ExecMode::Serial, 2, AllReduceStrategy::Ring, 2);
+        let dims = pt.dims();
+        let (w, b) = pt.head();
+        assert_eq!(w.len(), dims.in_dim(0) * dims.classes);
+        assert_eq!(b.len(), dims.classes);
+        let x = vec![0.25f32; dims.d_in];
+        let mut logits = vec![0f32; dims.classes];
+        let cls = pt.predict_row(&x, &mut logits);
+        assert_eq!(cls, pt.predictor().predict_isolated(&x));
+        assert_eq!(logits, pt.predictor().logits_isolated(&x));
     }
 }

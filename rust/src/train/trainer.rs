@@ -1,6 +1,6 @@
-//! The Trainer: the compute half of a training step (padding, feature
-//! padding, PJRT execution, optimizer state), fed by a pipeline
-//! [`TrainStream`].
+//! The Trainer: the compute half of a training step, fed by a pipeline
+//! [`TrainStream`] and executed through the unified model API
+//! ([`crate::model::GnnModel`]).
 //!
 //! Since the pipeline redesign the Trainer no longer owns private
 //! sampling plumbing: batch drawing and MFG sampling live in
@@ -11,20 +11,28 @@
 //!
 //! Since the feature-plane refactor the Trainer no longer gathers
 //! features either: the stream ships each batch's dense `S^L × d` buffer
-//! (real rows out of the [`crate::feature::FeatureStore`]), and the
-//! trainer's feature stage is reduced to a prefix memcpy into the padded
-//! `[cap × d]` tensor. Pulled through
+//! (real rows out of the [`crate::feature::FeatureStore`]); without one
+//! the Trainer gathers the dense buffer itself. Pulled through
 //! [`crate::pipeline::with_prefetch`], batch t+1's sampling + gathering
 //! overlaps batch t's execution (`--prefetch 1` on the train CLI).
+//!
+//! Since the compute-plane redesign the Trainer no longer touches
+//! padding, literal assembly, or executables: it hands the MFG + dense
+//! feature buffer to a [`GnnModel`] backend. [`Trainer::new`] binds the
+//! PJRT/AOT bridge ([`crate::model::PjrtModel`], where a runtime and
+//! artifacts exist); [`Trainer::new_host`] binds the host backend
+//! ([`crate::model::HostModel`]) — real layered compute with no
+//! artifacts, the default in this build. Trajectories are backend-local
+//! but the API, stats, and evaluation path are identical.
 
 use super::evalx::{score, EvalStats};
 use crate::coop::engine::ExecMode;
 use crate::feature::{FeatureStore, PartitionedFeatureStore};
 use crate::graph::{Dataset, VertexId};
+use crate::model::{kernels, GnnModel, HostModel, ModelDims, PjrtModel};
 use crate::pipeline::{Batching, MinibatchStream, TrainStream};
-use crate::runtime::manifest::ArtifactConfig;
-use crate::runtime::tensors::{forward_inputs, to_vec_f32, train_inputs, ParamState};
-use crate::runtime::{Executable, Manifest, Runtime};
+use crate::runtime::tensors::ParamState;
+use crate::runtime::{Manifest, Runtime};
 use crate::sampling::{Kappa, Mfg, SamplerConfig, SamplerKind};
 use crate::util::stats::Timer;
 use std::sync::Arc;
@@ -107,23 +115,24 @@ impl StepStats {
     }
 }
 
-/// End-to-end trainer bound to a dataset + artifact config.
+/// End-to-end trainer bound to a dataset + a [`GnnModel`] backend.
 pub struct Trainer<'d> {
     pub ds: &'d Dataset,
-    pub art: ArtifactConfig,
-    train_exe: Executable,
-    forward_exe: Executable,
+    model: Box<dyn GnnModel>,
     pub state: ParamState,
     stream: TrainStream<'d>,
     /// shared with the trainer's stream; evaluation and the
     /// no-pre-gathered-buffer fallback read rows from here.
     store: Arc<PartitionedFeatureStore>,
     lr: f32,
+    /// seed batch size (and evaluation chunk size).
+    batch: usize,
     feat_buf: Vec<f32>,
 }
 
 impl<'d> Trainer<'d> {
-    /// Load artifacts for `config_name` and bind to `ds`.
+    /// Load artifacts for `config_name` and bind the PJRT/AOT backend
+    /// to `ds`.
     pub fn new(
         rt: &Runtime,
         manifest: &Manifest,
@@ -137,11 +146,48 @@ impl<'d> Trainer<'d> {
             "artifact {} dims (d_in={}, C={}) incompatible with dataset {} (d={}, C={})",
             art.name, art.d_in, art.classes, ds.name, ds.feat_dim, ds.num_classes
         );
-        let train_exe = rt.load_hlo_text(&art.train_hlo)?;
-        let forward_exe = rt.load_hlo_text(&art.forward_hlo)?;
+        let batch = art.batch;
+        let lr = opts.lr.unwrap_or(art.lr);
+        let model = PjrtModel::load(rt, art)?;
+        Ok(Trainer::with_model(Box::new(model), ds, batch, lr, opts))
+    }
+
+    /// Bind the host backend to `ds` — real layered compute with no
+    /// artifacts or runtime (depth `layers`, width `hidden`, input and
+    /// output widths from the dataset). `opts.lr` defaults to 0.01.
+    pub fn new_host(
+        ds: &'d Dataset,
+        batch: usize,
+        layers: usize,
+        hidden: usize,
+        opts: &TrainerOptions,
+    ) -> crate::Result<Trainer<'d>> {
+        anyhow::ensure!(batch >= 1, "seed batch size must be >= 1");
+        anyhow::ensure!(layers >= 1 && (layers == 1 || hidden >= 1), "degenerate model shape");
+        let dims = ModelDims {
+            layers,
+            d_in: ds.feat_dim,
+            hidden,
+            classes: ds.num_classes,
+        };
+        let lr = opts.lr.unwrap_or(0.01);
+        Ok(Trainer::with_model(Box::new(HostModel::new(dims)), ds, batch, lr, opts))
+    }
+
+    /// Shared backend-agnostic tail: stream, store, and parameter init
+    /// (shapes from the model dims, so both backends are interchangeable
+    /// on the same state).
+    fn with_model(
+        model: Box<dyn GnnModel>,
+        ds: &'d Dataset,
+        batch: usize,
+        lr: f32,
+        opts: &TrainerOptions,
+    ) -> Trainer<'d> {
+        let dims = model.dims();
         let sampler_cfg = SamplerConfig {
             fanout: opts.fanout,
-            layers: art.layers,
+            layers: dims.layers,
             kappa: opts.kappa,
             ..Default::default()
         };
@@ -149,25 +195,29 @@ impl<'d> Trainer<'d> {
             ds,
             opts.kind,
             sampler_cfg,
-            art.batch,
+            batch,
             opts.seed,
             opts.exec,
             opts.batching,
         );
         let store = stream.feature_store();
-        let state = ParamState::init(&art, opts.seed ^ 0xFACE);
-        let lr = opts.lr.unwrap_or(art.lr);
-        Ok(Trainer {
-            ds,
-            art,
-            train_exe,
-            forward_exe,
-            state,
-            stream,
-            store,
-            lr,
-            feat_buf: Vec::new(),
-        })
+        let state = dims.init_state(opts.seed ^ 0xFACE);
+        Trainer { ds, model, state, stream, store, lr, batch, feat_buf: Vec::new() }
+    }
+
+    /// The backend this trainer executes on.
+    pub fn model(&self) -> &dyn GnnModel {
+        &*self.model
+    }
+
+    /// The layered-model shape.
+    pub fn dims(&self) -> ModelDims {
+        self.model.dims()
+    }
+
+    /// Seed batch size (and evaluation chunk size).
+    pub fn batch(&self) -> usize {
+        self.batch
     }
 
     /// Draw the next training seed batch (uniform without replacement).
@@ -237,85 +287,58 @@ impl<'d> Trainer<'d> {
     fn step_on_mfg_with(&mut self, mfg: &Mfg, pre: Option<&[f32]>) -> crate::Result<StepStats> {
         let mut stats = StepStats::default();
         let t = Timer::start();
-        let labels = &self.ds.labels;
-        let batch = mfg.pad(&self.art.caps, |v| labels[v as usize]);
-        stats.pad_ms = t.elapsed_ms();
-        stats.truncated_vertices = batch.truncated_vertices;
-        stats.truncated_edges = batch.truncated_edges;
-        stats.input_vertices = mfg.input_vertices().len();
-
-        let t = Timer::start();
-        self.fill_padded_features(mfg, pre);
+        if pre.is_none() {
+            self.fill_features(mfg);
+        }
         stats.feature_ms = t.elapsed_ms();
-
-        let t = Timer::start();
-        let inputs = train_inputs(&self.art, &self.state, &self.feat_buf, &batch, self.lr)?;
-        let outs = self.train_exe.run(&inputs)?;
-        let (loss, correct) = self.state.absorb(&outs)?;
-        stats.exec_ms = t.elapsed_ms();
-        stats.loss = loss;
-        let denom = batch.label_mask.iter().sum::<f32>().max(1.0);
-        stats.acc = correct / denom;
+        let feats = pre.unwrap_or(&self.feat_buf);
+        let m = self.model.train_on_mfg(&mut self.state, mfg, feats, &self.ds.labels, self.lr)?;
+        stats.pad_ms = m.pad_ms;
+        stats.exec_ms = m.exec_ms;
+        stats.loss = m.loss;
+        stats.acc = m.accuracy();
+        stats.truncated_vertices = m.truncated_vertices;
+        stats.truncated_edges = m.truncated_edges;
+        stats.input_vertices = mfg.input_vertices().len();
         Ok(stats)
     }
 
-    /// Fill the padded `[cap × d]` input tensor. With a stream-shipped
-    /// buffer (`pre`, dense rows over the full `S^L` in order) this is a
-    /// prefix memcpy — the expensive gather already happened in the
-    /// stream, possibly overlapped with the previous step's execution.
-    /// Without one, the clipped input rows are read from the store.
-    fn fill_padded_features(&mut self, mfg: &Mfg, pre: Option<&[f32]>) {
-        let cap = *self.art.caps.n.last().unwrap();
-        let d = self.art.d_in;
+    /// Gather the dense `S^L × d` input buffer from the store (the
+    /// no-stream-buffer fallback; with a stream-shipped buffer the
+    /// expensive gather already happened in the stream, possibly
+    /// overlapped with the previous step's execution). Padding — if the
+    /// backend needs any — is the backend's business.
+    fn fill_features(&mut self, mfg: &Mfg) {
+        let d = self.model.dims().d_in;
+        let vs = mfg.input_vertices();
         self.feat_buf.clear();
-        self.feat_buf.resize(cap * d, 0.0);
-        let vs = mfg.clipped_input_vertices(&self.art.caps);
-        match pre {
-            Some(rows) => {
-                debug_assert_eq!(rows.len(), mfg.input_vertices().len() * d);
-                // the clipped list is a prefix of S^L, so its rows are a
-                // prefix of the shipped buffer
-                self.feat_buf[..vs.len() * d].copy_from_slice(&rows[..vs.len() * d]);
-            }
-            None => self.store.gather_into(vs, &mut self.feat_buf[..vs.len() * d]),
-        }
+        self.feat_buf.resize(vs.len() * d, 0.0);
+        self.store.gather_into(vs, &mut self.feat_buf);
     }
 
     /// Evaluate accuracy/macro-F1 on `nodes` (validation or test split)
     /// using sampled neighborhoods with an evaluation-only RNG (the
     /// training dependent-RNG state is untouched). `eval_seed` fixes the
-    /// sampled neighborhoods across calls for comparability.
+    /// sampled neighborhoods across calls for comparability. Logits come
+    /// from the backend's forward path ([`GnnModel::forward_on_mfg`]).
     pub fn evaluate(&mut self, nodes: &[VertexId], eval_seed: u64) -> crate::Result<EvalStats> {
-        let b = self.art.caps.n[0];
+        let dims = self.model.dims();
         let sampler_cfg = SamplerConfig {
             fanout: self.stream.config().fanout,
-            layers: self.art.layers,
+            layers: dims.layers,
             kappa: Kappa::Finite(1),
             ..Default::default()
         };
         let mut eval_sampler = sampler_cfg.build(self.stream.kind(), &self.ds.graph, eval_seed);
         let mut pairs: Vec<(u16, u16)> = Vec::with_capacity(nodes.len());
-        for chunk in nodes.chunks(b) {
+        for chunk in nodes.chunks(self.batch) {
             let mfg = eval_sampler.sample_mfg(chunk);
-            let batch = {
-                let labels = &self.ds.labels;
-                mfg.pad(&self.art.caps, |v| labels[v as usize])
-            };
-            self.fill_padded_features(&mfg, None);
-            let inputs = forward_inputs(&self.art, &self.state, &self.feat_buf, &batch)?;
-            let outs = self.forward_exe.run(&inputs)?;
-            anyhow::ensure!(outs.len() == 1, "forward returns 1 output");
-            let logits = to_vec_f32(&outs[0])?;
-            let c = self.art.classes;
+            self.fill_features(&mfg);
+            let logits = self.model.forward_on_mfg(&self.state, &mfg, &self.feat_buf)?;
+            let c = dims.classes;
             for (i, &v) in chunk.iter().enumerate() {
                 let row = &logits[i * c..(i + 1) * c];
-                let pred = row
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(j, _)| j as u16)
-                    .unwrap_or(0);
-                pairs.push((pred, self.ds.label(v)));
+                pairs.push((kernels::argmax(row) as u16, self.ds.label(v)));
             }
         }
         Ok(score(self.ds.num_classes, &pairs))
@@ -325,7 +348,59 @@ impl<'d> Trainer<'d> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::datasets;
     use crate::pipeline::{Minibatch, PeWork};
+
+    /// The single-PE trainer is actually runnable in this build: the
+    /// host backend trains the layered model end-to-end — loss drops,
+    /// trajectories are seed-deterministic, and evaluation flows
+    /// through the same backend's forward path.
+    #[test]
+    fn host_backend_trains_and_evaluates() {
+        let ds = datasets::build("tiny", 5).unwrap();
+        let opts = TrainerOptions { seed: 77, lr: Some(0.05), ..Default::default() };
+        let mut a = Trainer::new_host(&ds, 48, 2, 8, &opts).unwrap();
+        let mut b = Trainer::new_host(&ds, 48, 2, 8, &opts).unwrap();
+        assert_eq!(a.model().backend(), "host");
+        assert_eq!(a.dims().layers, 2);
+        let (mut first, mut last) = (0f32, 0f32);
+        for step in 0..40 {
+            let sa = a.step().unwrap();
+            let sb = b.step().unwrap();
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "same-seed trainers diverged");
+            assert_eq!(sa.truncated_vertices, 0, "host backend never truncates");
+            if step == 0 {
+                first = sa.loss;
+            }
+            last = sa.loss;
+        }
+        assert!(a.state.bits_eq(&b.state), "parameter trajectories diverged");
+        assert!(last < first * 0.9, "loss must drop: {first} -> {last}");
+        let val = a.evaluate(&ds.val, 1234).unwrap();
+        let chance = 1.0 / ds.num_classes as f64;
+        assert!(val.accuracy > chance * 1.2, "val acc {:.3} vs chance {chance:.3}", val.accuracy);
+        // fixed eval seed => reproducible evaluation
+        let again = a.evaluate(&ds.val, 1234).unwrap();
+        assert_eq!(val.accuracy, again.accuracy);
+    }
+
+    /// `step_from` an external fresh-clone stream is bit-identical to
+    /// the trainer's own stream at the same seed (the prefetch oracle's
+    /// foundation, now through the model API).
+    #[test]
+    fn external_stream_matches_internal_trajectory() {
+        let ds = datasets::build("tiny", 9).unwrap();
+        let opts = TrainerOptions { seed: 31, lr: Some(0.05), ..Default::default() };
+        let mut own = Trainer::new_host(&ds, 32, 2, 8, &opts).unwrap();
+        let mut ext = Trainer::new_host(&ds, 32, 2, 8, &opts).unwrap();
+        let mut stream = ext.make_stream();
+        for _ in 0..5 {
+            let sa = own.step().unwrap();
+            let sb = ext.step_from(&mut stream).unwrap();
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits());
+        }
+        assert!(own.state.bits_eq(&ext.state));
+    }
 
     /// The timing-misattribution regression: the stream's gather time
     /// must land in `feature_ms` (on top of the trainer-side copy), not

@@ -1,0 +1,195 @@
+//! Golden-vector parity: the Rust host compute plane vs the Python
+//! model (`python/compile/model.py`).
+//!
+//! `python/tests/export_golden.py` runs the authoritative jax model on
+//! a fixed-seed 2-layer batch and freezes every input and expected
+//! output into `tests/data/golden_model.txt`. This test replays the
+//! identical batch through the host backend — `Predictor` forward,
+//! `PeStep` loss/backward, `ParamState::adam_step` — and asserts the
+//! logits, masked-mean loss, correct count, per-parameter gradients,
+//! and post-Adam parameters all agree within 1e-5. This is the
+//! cross-language contract behind the `GnnModel` seam: a training run
+//! moves parameters the same way no matter which backend executes it.
+
+use coopgnn::model::{HostBlock, ModelDims, PeCompute, Predictor};
+use coopgnn::model::host::PeStep;
+use coopgnn::runtime::tensors::ParamState;
+use std::collections::HashMap;
+
+const TOL: f32 = 1e-5;
+
+struct Golden {
+    vals: HashMap<String, Vec<f64>>,
+}
+
+impl Golden {
+    fn load() -> Golden {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/golden_model.txt");
+        let text = std::fs::read_to_string(path)
+            .unwrap_or_else(|e| panic!("read {path}: {e} (regenerate with python/tests/export_golden.py)"));
+        let mut vals = HashMap::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let (name, rest) = line.split_once(':').expect("golden line format `name: v v ...`");
+            let v: Vec<f64> = rest
+                .split_whitespace()
+                .map(|t| t.parse().unwrap_or_else(|e| panic!("{name}: bad float {t:?}: {e}")))
+                .collect();
+            vals.insert(name.trim().to_string(), v);
+        }
+        Golden { vals }
+    }
+
+    fn f64s(&self, name: &str) -> &[f64] {
+        self.vals.get(name).unwrap_or_else(|| panic!("golden file missing `{name}`"))
+    }
+
+    fn f32s(&self, name: &str) -> Vec<f32> {
+        self.f64s(name).iter().map(|&v| v as f32).collect()
+    }
+
+    fn usizes(&self, name: &str) -> Vec<usize> {
+        self.f64s(name).iter().map(|&v| v as usize).collect()
+    }
+
+    fn scalar(&self, name: &str) -> f64 {
+        let v = self.f64s(name);
+        assert_eq!(v.len(), 1, "`{name}` is a scalar");
+        v[0]
+    }
+
+    fn dims(&self) -> ModelDims {
+        let d = self.usizes("dims");
+        assert_eq!(d.len(), 4, "dims = layers d_in hidden classes");
+        ModelDims { layers: d[0], d_in: d[1], hidden: d[2], classes: d[3] }
+    }
+
+    /// Rebuild the unpadded CSR block from the padded golden arrays:
+    /// a neighbor slot is a real edge iff its weight is nonzero.
+    fn block(&self, l: usize, n_dst: usize, n_src: usize, k: usize) -> HostBlock {
+        let nbr_idx = self.usizes(&format!("block{l}_nbr_idx"));
+        let nbr_w = self.f32s(&format!("block{l}_nbr_w"));
+        let self_idx = self.usizes(&format!("block{l}_self_idx"));
+        let self_w = self.f32s(&format!("block{l}_self_w"));
+        assert_eq!(nbr_idx.len(), n_dst * k, "block {l} nbr_idx shape");
+        assert_eq!(self_idx.len(), n_dst, "block {l} self_idx shape");
+        let mut b = HostBlock {
+            n_dst,
+            n_src,
+            offsets: vec![0],
+            nbr_pos: Vec::new(),
+            nbr_w: Vec::new(),
+            self_pos: self_idx.iter().map(|&i| i as u32).collect(),
+            self_w,
+        };
+        for i in 0..n_dst {
+            for j in 0..k {
+                if nbr_w[i * k + j] != 0.0 {
+                    b.nbr_pos.push(nbr_idx[i * k + j] as u32);
+                    b.nbr_w.push(nbr_w[i * k + j]);
+                }
+            }
+            b.offsets.push(b.nbr_pos.len() as u32);
+        }
+        b
+    }
+
+    fn params(&self, prefix: &str, dims: &ModelDims) -> Vec<Vec<f32>> {
+        dims.param_shapes()
+            .iter()
+            .enumerate()
+            .map(|(i, shape)| {
+                let p = self.f32s(&format!("{prefix}{i}"));
+                assert_eq!(p.len(), shape.iter().product::<usize>(), "{prefix}{i} shape");
+                p
+            })
+            .collect()
+    }
+}
+
+fn assert_close(name: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{name} length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= TOL,
+            "{name}[{i}]: rust {g} vs python {w} (|Δ| = {:.3e} > {TOL:.0e})",
+            (g - w).abs()
+        );
+    }
+}
+
+#[test]
+fn host_backend_matches_python_golden_vectors() {
+    let g = Golden::load();
+    let dims = g.dims();
+    let k = g.scalar("k") as usize;
+    let n = g.usizes("n");
+    let lr = g.scalar("lr") as f32;
+    assert_eq!(n.len(), dims.layers + 1, "layer widths");
+
+    let feats = g.f32s("feats");
+    assert_eq!(feats.len(), n[dims.layers] * dims.d_in, "feature buffer shape");
+    let labels: Vec<u16> = g.usizes("labels").iter().map(|&v| v as u16).collect();
+    let params = g.params("param", &dims);
+
+    let blocks: Vec<HostBlock> =
+        (0..dims.layers).map(|l| g.block(l, n[l], n[l + 1], k)).collect();
+    let comp = PeCompute {
+        blocks,
+        seeds: (0..n[0] as u32).collect(),
+        routes: None,
+    };
+
+    // forward logits through the public prediction path
+    let pred = Predictor::new(dims, params.clone());
+    let logits = pred.logits_minibatch(&[(&comp, &feats)]);
+    assert_eq!(logits.len(), 1, "one PE");
+    assert_close("logits", &logits[0], &g.f32s("logits"));
+
+    // loss / correct / gradients through the training path
+    // with_shapes zero-inits m/v and step; only the params are golden
+    let mut state = ParamState::with_shapes(dims.param_shapes(), 0);
+    state.params = params;
+
+    let mut flat = vec![0f32; state.num_scalars()];
+    let (loss_sum, correct, examples) = {
+        let mut step = PeStep::new(dims, &comp, &feats, &state.params);
+        step.forward_deepest();
+        for l in (0..dims.layers - 1).rev() {
+            step.forward_level(l, None);
+        }
+        let head = step.loss_grad(&labels);
+        for l in 0..dims.layers {
+            step.backward_level(l, &mut flat);
+        }
+        head
+    };
+    assert_eq!(examples, n[0] as f32, "seed count");
+    assert!(
+        (loss_sum / examples - g.scalar("loss") as f32).abs() <= TOL,
+        "loss: rust {} vs python {}",
+        loss_sum / examples,
+        g.scalar("loss")
+    );
+    assert_eq!(correct, g.scalar("correct") as f32, "correct count");
+
+    // python's jax.grad of the masked-*mean* loss is already 1/n-scaled
+    for v in flat.iter_mut() {
+        *v /= examples;
+    }
+    let mut off = 0;
+    for (i, shape) in dims.param_shapes().iter().enumerate() {
+        let len: usize = shape.iter().product();
+        assert_close(&format!("grad{i}"), &flat[off..off + len], &g.f32s(&format!("grad{i}")));
+        off += len;
+    }
+
+    // one bias-corrected Adam step moves the parameters identically
+    state.adam_step(&flat, lr);
+    assert_eq!(state.step, 1.0, "adam timestep");
+    for (i, p) in state.params.iter().enumerate() {
+        assert_close(&format!("new_param{i}"), p, &g.f32s(&format!("new_param{i}")));
+    }
+}
