@@ -11,6 +11,7 @@ use coopgnn::coop::all_to_all::Exchange;
 use coopgnn::coop::coop_sampler::{partition_seeds, sample_cooperative};
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::coop::indep::sample_independent;
+use coopgnn::feature::Codec;
 use coopgnn::graph::{generate, partition};
 use coopgnn::pipeline::PipelineBuilder;
 use coopgnn::sampling::{SamplerConfig, SamplerKind};
@@ -158,6 +159,50 @@ fn main() {
     // readers can tell when sections stop being comparable across PRs
     match merge_section(path, "bench_coop", stamped(7, section)) {
         Ok(()) => println!("bench_coop: wrote section `bench_coop` to {}", path.display()),
+        Err(e) => eprintln!("bench_coop: could not write {}: {e}", path.display()),
+    }
+
+    // ---- tiered storage plane: codec wire bytes + hot-tier hit rate ----
+    // Same workload as the engine arms (threaded, prefetch off). Per
+    // codec, the cold arm (hot_mb = 0) shows the pure wire-byte ratio on
+    // the storage + fabric ledgers; the hot arm adds a degree-seeded hot
+    // tier and reports the γ/β split. Counts are codec-invariant, so
+    // across codecs only bytes move — the acceptance ratio CI tracks.
+    pipe.cfg.exec = ExecMode::Threaded;
+    pipe.cfg.prefetch = false;
+    let hot_mb = if smoke { 1 } else { 4 };
+    let mut tiers = BTreeMap::new();
+    tiers.insert("dataset".to_string(), Json::Str(ds_name.to_string()));
+    tiers.insert("hot_mb".to_string(), Json::Num(hot_mb as f64));
+    tiers.insert("smoke".to_string(), Json::Bool(smoke));
+    for codec in Codec::all() {
+        pipe.set_codec(codec);
+        pipe.set_hot_mb(0);
+        let cold = pipe.engine_report();
+        pipe.set_hot_mb(hot_mb);
+        let hot = pipe.engine_report();
+        println!(
+            "storage/coop_4pe_{ds_name} codec={:<4} wire {:>4} B/row | cold {:>8.1} KiB \
+             storage + {:>8.1} KiB fabric per batch | hot({hot_mb} MiB) hit rate {:.4}, \
+             {:>8.1} KiB storage",
+            codec.name(),
+            pipe.feature_store().row_bytes(),
+            cold.feat_storage_bytes / 1024.0,
+            cold.feat_fabric_bytes / 1024.0,
+            hot.hot_hit_rate,
+            hot.feat_storage_bytes / 1024.0,
+        );
+        let mut arm = BTreeMap::new();
+        arm.insert("row_bytes".to_string(), Json::Num(pipe.feature_store().row_bytes() as f64));
+        arm.insert("cold_storage_bytes_per_batch".to_string(), Json::Num(cold.feat_storage_bytes));
+        arm.insert("cold_fabric_bytes_per_batch".to_string(), Json::Num(cold.feat_fabric_bytes));
+        arm.insert("hot_storage_bytes_per_batch".to_string(), Json::Num(hot.feat_storage_bytes));
+        arm.insert("hot_hit_rate".to_string(), Json::Num(hot.hot_hit_rate));
+        arm.insert("hot_rows_per_batch".to_string(), Json::Num(hot.feat_hot_rows));
+        tiers.insert(codec.name().to_string(), Json::Obj(arm));
+    }
+    match merge_section(path, "tiered_storage", stamped(7, tiers)) {
+        Ok(()) => println!("bench_coop: wrote section `tiered_storage` to {}", path.display()),
         Err(e) => eprintln!("bench_coop: could not write {}: {e}", path.display()),
     }
 }

@@ -195,6 +195,40 @@ impl Exchange {
         inboxes
     }
 
+    /// Route *encoded* feature-row buckets `buckets[src][dst]` (raw
+    /// codec bytes, `row_bytes` per row) — the compressed twin of
+    /// [`Exchange::route_rows`] used when the store's codec is not f32,
+    /// so α-bandwidth traffic shrinks by the codec ratio. Accounting
+    /// lands in the same `cross_rows` / `cross_row_bytes` counters, now
+    /// measuring wire bytes. Inboxes are indexed by src
+    /// (`out[dst][src]`), matching the decoded variant.
+    pub fn route_encoded_rows(
+        &mut self,
+        buckets: Vec<Vec<Vec<u8>>>,
+        row_bytes: usize,
+    ) -> Vec<Vec<Vec<u8>>> {
+        assert_eq!(buckets.len(), self.num_pes);
+        assert!(row_bytes > 0, "encoded row routing needs a row size");
+        self.rounds += 1;
+        let mut inboxes: Vec<Vec<Vec<u8>>> =
+            (0..self.num_pes).map(|_| vec![Vec::new(); self.num_pes]).collect();
+        for (src, per_dst) in buckets.into_iter().enumerate() {
+            assert_eq!(per_dst.len(), self.num_pes, "encoded bucket row {src} width");
+            for (dst, bytes) in per_dst.into_iter().enumerate() {
+                debug_assert_eq!(bytes.len() % row_bytes, 0, "ragged encoded bucket {src}->{dst}");
+                let n = (bytes.len() / row_bytes) as u64;
+                if src == dst {
+                    self.local_rows += n;
+                } else {
+                    self.cross_rows += n;
+                    self.cross_row_bytes += bytes.len() as u64;
+                }
+                inboxes[dst][src] = bytes;
+            }
+        }
+        inboxes
+    }
+
     /// Account a cross-PE payload without routing real data (used for
     /// activation/gradient traffic whose numeric payload lives inside the
     /// monolithic train-step executable; only its *size* matters here).
@@ -252,6 +286,8 @@ impl Exchange {
 enum Payload {
     Ids(Vec<VertexId>),
     Rows(Vec<f32>),
+    /// codec-encoded feature rows (wire bytes; decoded at the consumer).
+    Bytes(Vec<u8>),
     Grads(Vec<f32>),
 }
 
@@ -392,6 +428,48 @@ impl PeEndpoint {
                 panic!("fabric protocol error: PE {} got ids in a row round", self.pe);
             };
             inbox[src] = rows;
+        }
+        self.barrier.wait();
+        inbox
+    }
+
+    /// One *encoded* feature-row all-to-all round — the compressed twin
+    /// of [`PeEndpoint::all_to_all_rows`]: `buckets[dst]` is the raw
+    /// codec payload (`row_bytes` per row) this PE ships to `dst`, and
+    /// the returned inbox is indexed by src. Cross traffic lands in the
+    /// same `cross_rows` / `cross_row_bytes` counters, now measuring
+    /// wire bytes. Same barrier discipline as every other round.
+    pub fn all_to_all_encoded_rows(
+        &mut self,
+        buckets: Vec<Vec<u8>>,
+        row_bytes: usize,
+    ) -> Vec<Vec<u8>> {
+        assert_eq!(buckets.len(), self.num_pes, "PE {} encoded bucket width", self.pe);
+        assert!(row_bytes > 0, "encoded row exchange needs a row size");
+        self.rounds += 1;
+        let mut inbox: Vec<Vec<u8>> = (0..self.num_pes).map(|_| Vec::new()).collect();
+        for (dst, bytes) in buckets.into_iter().enumerate() {
+            debug_assert_eq!(bytes.len() % row_bytes, 0, "PE {} ragged encoded bucket", self.pe);
+            if dst == self.pe {
+                self.local_rows += (bytes.len() / row_bytes) as u64;
+                inbox[self.pe] = bytes;
+            } else {
+                self.cross_rows += (bytes.len() / row_bytes) as u64;
+                self.cross_row_bytes += bytes.len() as u64;
+                self.txs[dst]
+                    .send((self.pe, Payload::Bytes(bytes)))
+                    .expect("fabric peer hung up (send)");
+            }
+        }
+        for _ in 0..self.num_pes - 1 {
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Bytes(bytes) = payload else {
+                panic!(
+                    "fabric protocol error: PE {} expected encoded rows this round",
+                    self.pe
+                );
+            };
+            inbox[src] = bytes;
         }
         self.barrier.wait();
         inbox
@@ -570,6 +648,60 @@ mod tests {
         assert_eq!(inboxes[1][0], vec![1.0; 2 * d]);
         assert_eq!(inboxes[0][1], vec![2.0; d]);
         assert_eq!(inboxes[0][0], vec![0.0; d]);
+    }
+
+    /// Encoded-row rounds (wire bytes) must agree between the serial
+    /// exchange and the threaded fabric — payloads, accounting, and the
+    /// per-src inbox shape.
+    #[test]
+    fn threaded_encoded_row_fabric_matches_serial_reference() {
+        use crate::util::rng::Pcg64;
+        let p = 3usize;
+        let rb = 9usize; // e.g. int8 with dim 4: 4 + 5 header bytes
+        let mut rng = Pcg64::new(0xE9C0);
+        let buckets: Vec<Vec<Vec<u8>>> = (0..p)
+            .map(|_| {
+                (0..p)
+                    .map(|_| {
+                        let k = rng.next_below(5) as usize;
+                        (0..k * rb).map(|_| rng.next_u64() as u8).collect()
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mut ex = Exchange::new(p);
+        let serial = ex.route_encoded_rows(buckets.clone(), rb);
+        // wire bytes, not decoded f32 bytes
+        let cross_expect: u64 = buckets
+            .iter()
+            .enumerate()
+            .flat_map(|(s, row)| {
+                row.iter().enumerate().filter(move |(d, _)| *d != s).map(|(_, b)| b.len() as u64)
+            })
+            .sum();
+        assert_eq!(ex.cross_row_bytes, cross_expect);
+
+        let endpoints = Fabric::endpoints(p);
+        let results: Vec<(Vec<Vec<u8>>, u64, u64)> = std::thread::scope(|scope| {
+            let buckets = &buckets;
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let pe = ep.pe;
+                        let inbox = ep.all_to_all_encoded_rows(buckets[pe].clone(), rb);
+                        (inbox, ep.cross_rows, ep.cross_row_bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, res) in results.iter().enumerate() {
+            assert_eq!(res.0, serial[q], "PE {q} encoded inbox");
+        }
+        assert_eq!(results.iter().map(|r| r.1).sum::<u64>(), ex.cross_rows);
+        assert_eq!(results.iter().map(|r| r.2).sum::<u64>(), ex.cross_row_bytes);
     }
 
     /// The threaded fabric must reproduce the serial reference exactly:

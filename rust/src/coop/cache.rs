@@ -31,6 +31,7 @@
 //! mirroring the paper's private per-GPU caches and keeping hit/miss
 //! streams bit-deterministic regardless of scheduling.
 
+use crate::feature::Codec;
 use crate::graph::VertexId;
 use std::collections::HashMap;
 
@@ -50,6 +51,15 @@ pub struct LruCache {
     arena: Vec<Node>,
     /// row arena parallel to `arena`: slot i ↔ rows[i*dim..(i+1)*dim].
     rows: Vec<f32>,
+    /// encoded-row arena (wire bytes) parallel to `arena`: slot i ↔
+    /// enc[i*enc_row_bytes..]. Populated only by [`LruCache::with_encoded`]
+    /// caches; the f32 `rows` arena stays empty on those (one arena per
+    /// cache, so resident bytes are wire bytes).
+    enc: Vec<u8>,
+    /// encoded bytes per row; 0 = decoded-f32 (or membership-only) cache.
+    enc_row_bytes: usize,
+    /// codec used to decode `enc` slots on the way out.
+    codec: Codec,
     /// floats per row; 0 = membership-only cache (no row storage).
     dim: usize,
     head: u32, // most recent
@@ -81,6 +91,9 @@ impl LruCache {
             map: HashMap::with_capacity(capacity.min(1 << 22)),
             arena: Vec::with_capacity(capacity.min(1 << 22)),
             rows: Vec::new(),
+            enc: Vec::new(),
+            enc_row_bytes: 0,
+            codec: Codec::F32,
             dim,
             head: NIL,
             tail: NIL,
@@ -88,6 +101,18 @@ impl LruCache {
             hits: 0,
             misses: 0,
         }
+    }
+
+    /// Encoded-row cache: each slot carries one `codec`-encoded row
+    /// ([`Codec::row_bytes`] wire bytes), filled and decoded through
+    /// [`LruCache::access_row_encoded`] — so a 100k-row cache arena
+    /// shrinks by the codec ratio just like storage and fabric traffic.
+    /// Counter discipline is identical to the other constructors.
+    pub fn with_encoded(capacity: usize, dim: usize, codec: Codec) -> Self {
+        let mut c = Self::with_rows(capacity, dim);
+        c.codec = codec;
+        c.enc_row_bytes = codec.row_bytes(dim);
+        c
     }
 
     pub fn len(&self) -> usize {
@@ -184,6 +209,55 @@ impl LruCache {
         }
     }
 
+    /// Access vertex `v` on an encoded cache (built with
+    /// [`LruCache::with_encoded`]) and decode its row into `out`
+    /// (`out.len() == dim`): a hit decodes straight out of the encoded
+    /// arena; a miss calls `fill` exactly once to pull the *encoded* row
+    /// (exactly `codec.row_bytes(dim)` bytes) from storage, parks those
+    /// wire bytes in the arena, and decodes them for the caller. Returns
+    /// `true` on hit. Counter discipline matches [`LruCache::access_row`].
+    pub fn access_row_encoded<F>(&mut self, v: VertexId, out: &mut [f32], fill: F) -> bool
+    where
+        F: FnOnce(&mut Vec<u8>),
+    {
+        debug_assert!(self.enc_row_bytes > 0, "access_row_encoded needs with_encoded");
+        debug_assert_eq!(out.len(), self.dim);
+        let rb = self.enc_row_bytes;
+        if self.capacity == 0 {
+            // pass-through: decode the storage read straight into the
+            // caller's buffer, nothing retained
+            self.misses += 1;
+            let mut scratch = Vec::with_capacity(rb);
+            fill(&mut scratch);
+            debug_assert_eq!(scratch.len(), rb, "fill must deliver one encoded row");
+            self.codec.decode_row(&scratch, out);
+            return false;
+        }
+        if let Some(&idx) = self.map.get(&v) {
+            self.hits += 1;
+            self.move_to_front(idx);
+            let i = idx as usize * rb;
+            self.codec.decode_row(&self.enc[i..i + rb], out);
+            true
+        } else {
+            self.misses += 1;
+            let mut scratch = Vec::with_capacity(rb);
+            fill(&mut scratch);
+            debug_assert_eq!(scratch.len(), rb, "fill must deliver one encoded row");
+            let i = self.insert_front(v) as usize * rb;
+            self.enc[i..i + rb].copy_from_slice(&scratch);
+            self.codec.decode_row(&scratch, out);
+            false
+        }
+    }
+
+    /// Resident arena bytes (wire bytes for encoded caches, f32 bytes
+    /// otherwise) — what a byte-budget comparison of cache footprints
+    /// should use.
+    pub fn arena_bytes(&self) -> usize {
+        self.enc.len() + self.rows.len() * 4
+    }
+
     /// Peek membership without updating recency or stats.
     pub fn contains(&self, v: VertexId) -> bool {
         self.map.contains_key(&v)
@@ -273,7 +347,9 @@ impl LruCache {
         } else {
             let idx = self.arena.len() as u32;
             self.arena.push(Node { key: v, prev: NIL, next: NIL });
-            if self.dim > 0 {
+            if self.enc_row_bytes > 0 {
+                self.enc.resize(self.enc.len() + self.enc_row_bytes, 0);
+            } else if self.dim > 0 {
                 self.rows.resize(self.rows.len() + self.dim, 0.0);
             }
             self.map.insert(v, idx);
@@ -465,6 +541,62 @@ mod tests {
         assert_eq!(storage_reads, accesses, "every access reads storage");
         assert_eq!(rows.rows.len(), 0, "no arena is ever allocated");
         assert!(rows.peek_row(0).is_none());
+    }
+
+    #[test]
+    fn encoded_cache_holds_wire_bytes_and_matches_f32_counters() {
+        // fill source: int8-encode toy_row(v) once per miss
+        let codec = Codec::Int8;
+        let dim = 3usize;
+        let rb = codec.row_bytes(dim);
+        let fill_enc = |v: VertexId, out: &mut Vec<u8>| {
+            out.clear();
+            codec.encode_row(&toy_row(v), out);
+        };
+        let mut enc_cache = LruCache::with_encoded(8, dim, codec);
+        let mut f32_cache = LruCache::with_rows(8, dim);
+        let mut a = [0f32; 3];
+        let mut b = [0f32; 3];
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(21);
+        for _ in 0..2000 {
+            let v = rng.next_below(40) as u32;
+            let ha = enc_cache.access_row_encoded(v, &mut a, |o| fill_enc(v, o));
+            let hb = f32_cache.access_row(v, &mut b, |s| s.copy_from_slice(&toy_row(v)));
+            assert_eq!(ha, hb, "hit/miss divergence on {v}");
+            // a == decode(encode(toy_row)) whether served from arena or fill
+            let mut want = [0f32; 3];
+            let mut enc = Vec::new();
+            codec.encode_row(&toy_row(v), &mut enc);
+            codec.decode_row(&enc, &mut want);
+            assert_eq!(a, want, "decoded bytes diverge on {v}");
+        }
+        assert_eq!(enc_cache.hits(), f32_cache.hits());
+        assert_eq!(enc_cache.misses(), f32_cache.misses());
+        // the arena holds wire bytes only — no f32 rows
+        assert_eq!(enc_cache.rows.len(), 0, "encoded cache must not hold decoded rows");
+        assert_eq!(enc_cache.arena_bytes(), enc_cache.len() * rb);
+        assert_eq!(f32_cache.arena_bytes(), f32_cache.len() * dim * 4);
+        assert!(enc_cache.arena_bytes() < f32_cache.arena_bytes(), "codec shrinks the arena");
+    }
+
+    #[test]
+    fn encoded_zero_capacity_is_a_true_pass_through() {
+        let codec = Codec::Fp16;
+        let mut c = LruCache::with_encoded(0, 3, codec);
+        let mut out = [0f32; 3];
+        let mut reads = 0u64;
+        for i in 0..50u64 {
+            let v = (i % 2) as u32;
+            let hit = c.access_row_encoded(v, &mut out, |o| {
+                o.clear();
+                codec.encode_row(&toy_row(v), o);
+                reads += 1;
+            });
+            assert!(!hit);
+        }
+        assert_eq!(reads, 50, "every access reads storage at cap 0");
+        assert_eq!(c.arena_bytes(), 0, "nothing resident");
     }
 
     #[test]

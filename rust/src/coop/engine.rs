@@ -159,11 +159,29 @@ pub struct EngineReport {
     /// PEs, averaged over measured batches).
     pub feat_fabric_bytes: f64,
     /// miss rate **derived from the byte movement**:
-    /// Σ storage bytes / Σ requested bytes over the measured window.
-    /// Agrees with `cache_miss_rate` (which is counter-based) up to f64
-    /// rounding — the byte-accounting property test pins the underlying
-    /// integers to each other exactly.
+    /// Σ storage bytes / Σ requested bytes over the measured window
+    /// (both in wire bytes of the active codec). With the default
+    /// single-tier store this agrees with `cache_miss_rate` (which is
+    /// counter-based) up to f64 rounding — the byte-accounting property
+    /// test pins the underlying integers to each other exactly. A hot
+    /// tier lowers it below `cache_miss_rate`: hot fills never touch
+    /// storage, so their bytes drop out of the numerator.
     pub derived_miss_rate: f64,
+    /// cache fills served by the hot tier (decoded rows in PE memory, γ)
+    /// instead of cold storage, per batch (total across PEs, averaged).
+    /// 0 unless the pipeline runs a [`crate::feature::TieredStore`].
+    pub feat_hot_rows: f64,
+    /// decoded f32 bytes those hot fills moved (γ traffic; the cold-tier
+    /// complement is `feat_storage_bytes`, in *wire* bytes).
+    pub feat_hot_bytes: f64,
+    /// fraction of cache fills the hot tier absorbed:
+    /// Σ hot rows / Σ misses over the measured window (0 when no tiering).
+    pub hot_hit_rate: f64,
+    /// rows promoted into the hot tier by the depth-1 costmodel prefetch
+    /// seam, per batch (0 unless `--prefetch 1` *and* a tiered store).
+    pub prefetch_rows: f64,
+    /// wire bytes those promotions read from cold storage, per batch.
+    pub prefetch_bytes: f64,
     /// duplication factor at the deepest layer (indep only; 1.0 for coop).
     pub dup_factor: f64,
     /// measured CPU stage time (ms per batch, **summed across PEs** —
@@ -194,6 +212,10 @@ struct BatchStats {
     storage_bytes: u64,
     fabric_bytes: u64,
     requested_bytes: u64,
+    hot_rows: u64,
+    hot_bytes: u64,
+    prefetch_rows: u64,
+    prefetch_bytes: u64,
     dup: f64,
     samp_ms: f64,
     feat_ms: f64,
@@ -262,6 +284,10 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
         storage_bytes: 0,
         fabric_bytes: 0,
         requested_bytes: 0,
+        hot_rows: 0,
+        hot_bytes: 0,
+        prefetch_rows: 0,
+        prefetch_bytes: 0,
         dup: 1.0,
         samp_ms: 0.0,
         feat_ms: 0.0,
@@ -284,6 +310,10 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
         bs.storage_bytes += pw.bytes_from_storage;
         bs.fabric_bytes += pw.fabric_bytes;
         bs.requested_bytes += pw.requested * pw.row_bytes;
+        bs.hot_rows += pw.hot_rows;
+        bs.hot_bytes += pw.hot_bytes;
+        bs.prefetch_rows += pw.prefetch_rows;
+        bs.prefetch_bytes += pw.prefetch_bytes;
         bs.samp_ms += pw.samp_ms;
         bs.feat_ms += pw.feat_ms;
     }
@@ -323,6 +353,7 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
     let mut total_misses = 0u64;
     let mut total_storage_bytes = 0u64;
     let mut total_requested_bytes = 0u64;
+    let mut total_hot_rows = 0u64;
     let mut dup_acc = 0.0;
     for bs in stats {
         for l in 0..=layers {
@@ -338,10 +369,15 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
         report.feat_fabric_rows += bs.feat_fabric_rows as f64;
         report.feat_storage_bytes += bs.storage_bytes as f64;
         report.feat_fabric_bytes += bs.fabric_bytes as f64;
+        report.feat_hot_rows += bs.hot_rows as f64;
+        report.feat_hot_bytes += bs.hot_bytes as f64;
+        report.prefetch_rows += bs.prefetch_rows as f64;
+        report.prefetch_bytes += bs.prefetch_bytes as f64;
         total_hits += bs.total_requested - bs.total_misses;
         total_misses += bs.total_misses;
         total_storage_bytes += bs.storage_bytes;
         total_requested_bytes += bs.requested_bytes;
+        total_hot_rows += bs.hot_rows;
         dup_acc += bs.dup;
         report.wall_sampling_ms += bs.samp_ms;
         report.wall_feature_ms += bs.feat_ms;
@@ -361,6 +397,10 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
     report.feat_fabric_rows /= m;
     report.feat_storage_bytes /= m;
     report.feat_fabric_bytes /= m;
+    report.feat_hot_rows /= m;
+    report.feat_hot_bytes /= m;
+    report.prefetch_rows /= m;
+    report.prefetch_bytes /= m;
     report.wall_sampling_ms /= m;
     report.wall_feature_ms /= m;
     report.wall_batch_ms /= m;
@@ -376,6 +416,11 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
         0.0
     } else {
         total_storage_bytes as f64 / total_requested_bytes as f64
+    };
+    report.hot_hit_rate = if total_misses == 0 {
+        0.0
+    } else {
+        total_hot_rows as f64 / total_misses as f64
     };
     report
 }
@@ -511,6 +556,9 @@ mod tests {
         assert_eq!(a.feat_storage_bytes, b.feat_storage_bytes, "{ctx}: storage bytes");
         assert_eq!(a.feat_fabric_bytes, b.feat_fabric_bytes, "{ctx}: fabric bytes");
         assert_eq!(a.derived_miss_rate, b.derived_miss_rate, "{ctx}: derived rate");
+        assert_eq!(a.feat_hot_rows, b.feat_hot_rows, "{ctx}: hot rows");
+        assert_eq!(a.feat_hot_bytes, b.feat_hot_bytes, "{ctx}: hot bytes");
+        assert_eq!(a.hot_hit_rate, b.hot_hit_rate, "{ctx}: hot hit rate");
         assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup");
     }
 
@@ -619,6 +667,7 @@ mod tests {
             let g = &dataset.graph;
             let layers = cfg.sampler.layers;
             let p_count = cfg.num_pes;
+            let dim = store.dim() as u64;
             let row_bytes = store.row_bytes() as u64;
             let mut samplers: Vec<_> =
                 (0..p_count).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect();
@@ -665,7 +714,7 @@ mod tests {
                             .map(|(p, load)| {
                                 let pe_layers: Vec<&PeLayer> =
                                     (0..layers).map(|l| &coop.layers[l][p]).collect();
-                                coop_pe_work(layers, &pe_layers, row_bytes, load)
+                                coop_pe_work(layers, &pe_layers, dim, row_bytes, load)
                             })
                             .collect()
                     }
@@ -676,7 +725,7 @@ mod tests {
                             .zip(caches.iter_mut())
                             .map(|(mfg, cache)| {
                                 let load = load_indep_pe(mfg.input_vertices(), cache, store);
-                                indep_pe_work(mfg, layers, measuring, row_bytes, load)
+                                indep_pe_work(mfg, layers, measuring, dim, row_bytes, load)
                             })
                             .collect()
                     }
@@ -701,6 +750,7 @@ mod tests {
             let g = &dataset.graph;
             let layers = cfg.sampler.layers;
             let p_count = cfg.num_pes;
+            let dim = store.dim() as u64;
             let row_bytes = store.row_bytes() as u64;
             let total = cfg.warmup_batches + cfg.measure_batches;
             let barrier = std::sync::Barrier::new(p_count);
@@ -746,13 +796,13 @@ mod tests {
                                         store,
                                     );
                                     let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
-                                    coop_pe_work(layers, &pe_layers, row_bytes, load)
+                                    coop_pe_work(layers, &pe_layers, dim, row_bytes, load)
                                 }
                                 Mode::Independent => {
                                     let mfg = sampler.sample_mfg(&seeds);
                                     let load =
                                         load_indep_pe(mfg.input_vertices(), &mut cache, store);
-                                    indep_pe_work(&mfg, layers, measuring, row_bytes, load)
+                                    indep_pe_work(&mfg, layers, measuring, dim, row_bytes, load)
                                 }
                             };
                             sampler.advance_batch();

@@ -33,7 +33,7 @@
 
 use super::all_to_all::{Exchange, PeEndpoint};
 use super::cache::LruCache;
-use crate::feature::FeatureStore;
+use crate::feature::{Codec, FeatureStore, Tier};
 use crate::graph::{Partition, VertexId};
 
 /// Storage-side result of pulling one PE's rows through its cache.
@@ -41,12 +41,17 @@ use crate::graph::{Partition, VertexId};
 pub struct LoadStats {
     /// vertex rows requested through the cache.
     pub requested: u64,
-    /// cache misses (each one filled a slot from storage).
+    /// cache misses (each one filled a slot from a store tier).
     pub misses: u64,
-    /// f32 bytes actually copied out of the store (β traffic), counted
-    /// at the fill site — `misses * row_bytes` must equal this by the
-    /// fill-once-per-miss contract (property-tested).
+    /// *wire* bytes copied out of cold storage (β traffic), counted at
+    /// the fill site — `(misses - hot_rows) * store.row_bytes()` must
+    /// equal this by the fill-once-per-miss contract (property-tested).
     pub bytes_from_storage: u64,
+    /// cache misses served by the store's hot tier (decoded rows already
+    /// resident in PE memory — γ, not β).
+    pub hot_rows: u64,
+    /// decoded f32 bytes those hot fills moved (`hot_rows * dim * 4`).
+    pub hot_bytes: u64,
 }
 
 /// One PE's feature-loading result for one minibatch: accounting plus
@@ -55,13 +60,18 @@ pub struct LoadStats {
 pub struct PeLoad {
     /// rows requested through this PE's cache (owner-side in coop mode).
     pub requested: u64,
-    /// cache misses = rows read from storage.
+    /// cache misses = rows read from a store tier.
     pub misses: u64,
-    /// f32 bytes copied from storage (β bandwidth).
+    /// wire bytes copied from cold storage (β bandwidth).
     pub bytes_from_storage: u64,
+    /// misses served by the store's hot tier (γ, decoded rows).
+    pub hot_rows: u64,
+    /// decoded bytes those hot fills moved.
+    pub hot_bytes: u64,
     /// feature rows that arrived over the fabric (coop only; α).
     pub fabric_rows: u64,
-    /// f32 bytes that arrived over the fabric, measured at the inbox.
+    /// wire bytes that arrived over the fabric, measured at the inbox
+    /// (encoded size when the codec is not f32).
     pub fabric_bytes: u64,
     /// dense row-major input features: `S^L` order (independent) or
     /// sorted `S̃^L` order (cooperative).
@@ -82,10 +92,13 @@ pub struct FeatureTraffic {
     /// rows crossing the fabric (coop only; max over PEs / total).
     pub max_fabric_rows: u64,
     pub total_fabric_rows: u64,
-    /// bytes copied from storage across PEs (β).
+    /// wire bytes copied from cold storage across PEs (β).
     pub total_storage_bytes: u64,
-    /// bytes received over the fabric across PEs (α).
+    /// wire bytes received over the fabric across PEs (α).
     pub total_fabric_bytes: u64,
+    /// misses served by hot tiers across PEs (γ).
+    pub total_hot_rows: u64,
+    pub total_hot_bytes: u64,
 }
 
 impl FeatureTraffic {
@@ -109,6 +122,8 @@ impl FeatureTraffic {
             t.total_fabric_rows += l.fabric_rows;
             t.total_storage_bytes += l.bytes_from_storage;
             t.total_fabric_bytes += l.fabric_bytes;
+            t.total_hot_rows += l.hot_rows;
+            t.total_hot_bytes += l.hot_bytes;
         }
         t
     }
@@ -130,19 +145,46 @@ pub fn load_pe<S: FeatureStore + ?Sized>(
     assert_eq!(cache.dim(), dim, "cache/store row shape mismatch");
     out.clear();
     out.resize(vs.len() * dim, 0.0);
+    let codec = store.codec();
+    let row_bytes = store.row_bytes() as u64;
     let mut misses = 0u64;
     let mut storage_bytes = 0u64;
+    let mut hot_rows = 0u64;
+    let mut hot_bytes = 0u64;
     for (i, &v) in vs.iter().enumerate() {
         let row = &mut out[i * dim..(i + 1) * dim];
-        let hit = cache.access_row(v, row, |slot| {
-            store.copy_row(v, slot);
-            storage_bytes += slot.len() as u64 * 4;
-        });
+        // a miss fills from whichever tier holds `v`: hot moves decoded
+        // bytes at γ, cold moves wire bytes at β
+        let mut tier = Tier::Cold;
+        let hit = if codec == Codec::F32 {
+            cache.access_row(v, row, |slot| {
+                tier = store.tier_of(v);
+                store.copy_row(v, slot);
+            })
+        } else {
+            cache.access_row_encoded(v, row, |slot| {
+                tier = store.tier_of(v);
+                store.copy_encoded_row(v, slot);
+            })
+        };
         if !hit {
             misses += 1;
+            match tier {
+                Tier::Hot => {
+                    hot_rows += 1;
+                    hot_bytes += dim as u64 * 4;
+                }
+                Tier::Cold => storage_bytes += row_bytes,
+            }
         }
     }
-    LoadStats { requested: vs.len() as u64, misses, bytes_from_storage: storage_bytes }
+    LoadStats {
+        requested: vs.len() as u64,
+        misses,
+        bytes_from_storage: storage_bytes,
+        hot_rows,
+        hot_bytes,
+    }
 }
 
 /// Independent loading: `inputs[p]` = S^L of PE p's private MFG. Every
@@ -170,10 +212,48 @@ pub fn load_independent<S: FeatureStore + ?Sized>(
                 requested: stats.requested,
                 misses: stats.misses,
                 bytes_from_storage: stats.bytes_from_storage,
+                hot_rows: stats.hot_rows,
+                hot_bytes: stats.hot_bytes,
                 fabric_rows: 0,
                 fabric_bytes: 0,
                 features,
             }
+        })
+        .collect()
+}
+
+/// Gather the *encoded* rows of `ids` straight off the store's shard
+/// bytes — the compressed fabric payload. No storage-byte charge here:
+/// like the f32 path's buffer copy out of `owned_rows`, this re-reads
+/// rows the owner already pulled (and paid for) through its cache.
+fn encoded_rows_for<S: FeatureStore + ?Sized>(ids: &[VertexId], store: &S) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ids.len() * store.row_bytes());
+    let mut scratch = Vec::new();
+    for &t in ids {
+        store.copy_encoded_row(t, &mut scratch);
+        out.extend_from_slice(&scratch);
+    }
+    out
+}
+
+/// Decode a per-src inbox of encoded rows into the flat f32 shape
+/// [`assemble_rows`] consumes. Decode is a pure function of the wire
+/// bytes, so requester-side rows are bit-identical to the owner's own
+/// decodes.
+fn decode_inbox(inbox: &[Vec<u8>], codec: Codec, dim: usize, row_bytes: usize) -> Vec<Vec<f32>> {
+    inbox
+        .iter()
+        .map(|bytes| {
+            debug_assert_eq!(bytes.len() % row_bytes, 0, "ragged encoded inbox");
+            let n = bytes.len() / row_bytes;
+            let mut rows = vec![0f32; n * dim];
+            for i in 0..n {
+                codec.decode_row(
+                    &bytes[i * row_bytes..(i + 1) * row_bytes],
+                    &mut rows[i * dim..(i + 1) * dim],
+                );
+            }
+            rows
         })
         .collect()
 }
@@ -260,40 +340,69 @@ pub fn load_cooperative<S: FeatureStore + ?Sized>(
                 requested: stats.requested,
                 misses: stats.misses,
                 bytes_from_storage: stats.bytes_from_storage,
+                hot_rows: stats.hot_rows,
+                hot_bytes: stats.hot_bytes,
                 ..Default::default()
             }
         })
         .collect();
 
-    // 2. per-(owner, requester) row buckets, along the retained request
-    //    lists (requester tilde order by construction)
-    let buckets: Vec<Vec<Vec<f32>>> = (0..p_count)
-        .map(|owner| {
-            (0..p_count)
-                .map(|q| {
-                    rows_for(
-                        &final_requests[q][owner],
-                        &final_owned[owner],
-                        &owned_rows[owner],
-                        dim,
-                    )
-                })
-                .collect()
-        })
-        .collect();
+    let codec = store.codec();
+    let row_bytes = store.row_bytes();
+    if codec == Codec::F32 {
+        // 2. per-(owner, requester) row buckets, along the retained
+        //    request lists (requester tilde order by construction)
+        let buckets: Vec<Vec<Vec<f32>>> = (0..p_count)
+            .map(|owner| {
+                (0..p_count)
+                    .map(|q| {
+                        rows_for(
+                            &final_requests[q][owner],
+                            &final_owned[owner],
+                            &owned_rows[owner],
+                            dim,
+                        )
+                    })
+                    .collect()
+            })
+            .collect();
 
-    // 3. the α-bandwidth round + 4. requester-side assembly/accounting
-    let inboxes = exchange.route_rows(buckets, dim);
-    for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter()).enumerate() {
-        let fabric_bytes: u64 = inbox
-            .iter()
-            .enumerate()
-            .filter(|(src, _)| *src != q)
-            .map(|(_, rows)| rows.len() as u64 * 4)
-            .sum();
-        load.fabric_bytes = fabric_bytes;
-        load.fabric_rows = fabric_bytes / (dim as u64 * 4);
-        assemble_rows(&tildes[q], part, inbox, dim, &mut load.features);
+        // 3. the α-bandwidth round + 4. requester-side assembly/accounting
+        let inboxes = exchange.route_rows(buckets, dim);
+        for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter()).enumerate() {
+            let fabric_bytes: u64 = inbox
+                .iter()
+                .enumerate()
+                .filter(|(src, _)| *src != q)
+                .map(|(_, rows)| rows.len() as u64 * 4)
+                .sum();
+            load.fabric_bytes = fabric_bytes;
+            load.fabric_rows = fabric_bytes / (dim as u64 * 4);
+            assemble_rows(&tildes[q], part, inbox, dim, &mut load.features);
+        }
+    } else {
+        // compressed fabric: ship the stored wire bytes, decode at the
+        // requester — cross-PE traffic shrinks by the codec ratio
+        let buckets: Vec<Vec<Vec<u8>>> = (0..p_count)
+            .map(|owner| {
+                (0..p_count)
+                    .map(|q| encoded_rows_for(&final_requests[q][owner], store))
+                    .collect()
+            })
+            .collect();
+        let inboxes = exchange.route_encoded_rows(buckets, row_bytes);
+        for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter()).enumerate() {
+            let fabric_bytes: u64 = inbox
+                .iter()
+                .enumerate()
+                .filter(|(src, _)| *src != q)
+                .map(|(_, bytes)| bytes.len() as u64)
+                .sum();
+            load.fabric_bytes = fabric_bytes;
+            load.fabric_rows = fabric_bytes / row_bytes as u64;
+            let decoded = decode_inbox(inbox, codec, dim, row_bytes);
+            assemble_rows(&tildes[q], part, &decoded, dim, &mut load.features);
+        }
     }
     loads
 }
@@ -315,26 +424,47 @@ pub fn load_pe_cooperative<S: FeatureStore + ?Sized>(
     store: &S,
 ) -> PeLoad {
     let dim = store.dim();
+    let codec = store.codec();
+    let row_bytes = store.row_bytes();
     let mut owned_rows = Vec::new();
     let stats = load_pe(final_owned, cache, store, &mut owned_rows);
-    let buckets: Vec<Vec<f32>> = final_requests
-        .iter()
-        .map(|ids| rows_for(ids, final_owned, &owned_rows, dim))
-        .collect();
-    let inbox = ep.all_to_all_rows(buckets, dim);
-    let fabric_bytes: u64 = inbox
-        .iter()
-        .enumerate()
-        .filter(|(src, _)| *src != ep.pe)
-        .map(|(_, rows)| rows.len() as u64 * 4)
-        .sum();
-    let mut features = Vec::new();
-    assemble_rows(tilde, part, &inbox, dim, &mut features);
+    let (fabric_bytes, features) = if codec == Codec::F32 {
+        let buckets: Vec<Vec<f32>> = final_requests
+            .iter()
+            .map(|ids| rows_for(ids, final_owned, &owned_rows, dim))
+            .collect();
+        let inbox = ep.all_to_all_rows(buckets, dim);
+        let fabric_bytes: u64 = inbox
+            .iter()
+            .enumerate()
+            .filter(|(src, _)| *src != ep.pe)
+            .map(|(_, rows)| rows.len() as u64 * 4)
+            .sum();
+        let mut features = Vec::new();
+        assemble_rows(tilde, part, &inbox, dim, &mut features);
+        (fabric_bytes, features)
+    } else {
+        let buckets: Vec<Vec<u8>> =
+            final_requests.iter().map(|ids| encoded_rows_for(ids, store)).collect();
+        let inbox = ep.all_to_all_encoded_rows(buckets, row_bytes);
+        let fabric_bytes: u64 = inbox
+            .iter()
+            .enumerate()
+            .filter(|(src, _)| *src != ep.pe)
+            .map(|(_, bytes)| bytes.len() as u64)
+            .sum();
+        let decoded = decode_inbox(&inbox, codec, dim, row_bytes);
+        let mut features = Vec::new();
+        assemble_rows(tilde, part, &decoded, dim, &mut features);
+        (fabric_bytes, features)
+    };
     PeLoad {
         requested: stats.requested,
         misses: stats.misses,
         bytes_from_storage: stats.bytes_from_storage,
-        fabric_rows: fabric_bytes / (dim as u64 * 4),
+        hot_rows: stats.hot_rows,
+        hot_bytes: stats.hot_bytes,
+        fabric_rows: fabric_bytes / row_bytes as u64,
         fabric_bytes,
         features,
     }
@@ -445,6 +575,136 @@ mod tests {
             }
         }
         assert_eq!(ex.cross_rows, loads.iter().map(|l| l.fabric_rows).sum::<u64>());
+    }
+
+    #[test]
+    fn hot_tier_fills_split_bytes_without_changing_counts() {
+        use crate::feature::TieredStore;
+        let (ds, part, _store) = fixture();
+        let d = ds.feat_dim;
+        let flat = TieredStore::build(&ds, &part, Codec::F32, 0);
+        let tiered = TieredStore::build(&ds, &part, Codec::F32, 64 * 1024);
+        let inputs = vec![(0u32..300).collect::<Vec<_>>()];
+        let mut c1 = vec![LruCache::with_rows(64, d)];
+        let mut c2 = vec![LruCache::with_rows(64, d)];
+        let a = &load_independent(&inputs, &mut c1, &flat)[0];
+        let b = &load_independent(&inputs, &mut c2, &tiered)[0];
+        // tiering never changes the hit/miss stream or the payload …
+        assert_eq!(a.requested, b.requested);
+        assert_eq!(a.misses, b.misses);
+        assert_eq!(a.features, b.features, "hot rows must serve identical bytes");
+        // … only which ledger the fill bytes land in
+        assert!(b.hot_rows > 0, "hot tier must serve some of the top-degree fills");
+        assert_eq!(b.hot_bytes, b.hot_rows * (d as u64 * 4));
+        assert_eq!(
+            b.bytes_from_storage,
+            (b.misses - b.hot_rows) * flat.row_bytes() as u64
+        );
+        assert_eq!(a.bytes_from_storage, a.misses * flat.row_bytes() as u64);
+        assert_eq!(a.hot_rows, 0);
+    }
+
+    #[test]
+    fn coop_encoded_fabric_ships_wire_bytes_and_decodes_at_requester() {
+        use crate::feature::TieredStore;
+        let (ds, part, f32_store) = fixture();
+        let d = ds.feat_dim;
+        let (tildes, final_owned, reqs) = coop_fixture(&ds, &part);
+        for codec in [Codec::Fp16, Codec::Int8] {
+            let store = TieredStore::build(&ds, &part, codec, 0);
+            let rb = store.row_bytes() as u64;
+            let mut caches: Vec<LruCache> =
+                (0..3).map(|_| LruCache::with_encoded(500, d, codec)).collect();
+            let mut ex = Exchange::new(3);
+            let loads = load_cooperative(
+                &tildes,
+                &reqs,
+                &final_owned,
+                &part,
+                &mut caches,
+                &store,
+                &mut ex,
+            );
+            for (q, load) in loads.iter().enumerate() {
+                // counts identical to the f32 run (same access sequence)
+                let cross =
+                    tildes[q].iter().filter(|&&t| part.part_of(t) != q).count() as u64;
+                assert_eq!(load.fabric_rows, cross, "{codec:?} PE {q} fabric rows");
+                // … but the fabric moved encoded bytes, not dim*4
+                assert_eq!(load.fabric_bytes, cross * rb, "{codec:?} PE {q} fabric bytes");
+                assert!(rb < (d * 4) as u64);
+                assert_eq!(load.misses, final_owned[q].len() as u64);
+                assert_eq!(load.bytes_from_storage, load.misses * rb);
+                // requester-side decode == owner-side decode, element-wise
+                // within codec error of the f32 truth
+                let mut truth = Vec::new();
+                f32_store.gather(&tildes[q], &mut truth);
+                assert_eq!(load.features.len(), truth.len());
+                for (a, b) in load.features.iter().zip(&truth) {
+                    assert!((a - b).abs() < 0.01, "{codec:?} PE {q}: {a} vs {b}");
+                }
+            }
+            assert_eq!(ex.cross_rows, loads.iter().map(|l| l.fabric_rows).sum::<u64>());
+            assert_eq!(ex.cross_row_bytes, loads.iter().map(|l| l.fabric_bytes).sum::<u64>());
+        }
+    }
+
+    #[test]
+    fn threaded_encoded_coop_load_matches_serial() {
+        use crate::coop::all_to_all::Fabric;
+        use crate::feature::TieredStore;
+        let (ds, part, _f32_store) = fixture();
+        let d = ds.feat_dim;
+        let (tildes, final_owned, reqs) = coop_fixture(&ds, &part);
+        let codec = Codec::Int8;
+        let store = TieredStore::build(&ds, &part, codec, 0);
+
+        let mut serial_caches: Vec<LruCache> =
+            (0..3).map(|_| LruCache::with_encoded(500, d, codec)).collect();
+        let mut ex = Exchange::new(3);
+        let serial = load_cooperative(
+            &tildes,
+            &reqs,
+            &final_owned,
+            &part,
+            &mut serial_caches,
+            &store,
+            &mut ex,
+        );
+
+        let endpoints = Fabric::endpoints(3);
+        let threaded: Vec<PeLoad> = std::thread::scope(|scope| {
+            let (tildes, final_owned, reqs, part, store) =
+                (&tildes, &final_owned, &reqs, &part, &store);
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let pe = ep.pe;
+                        let mut cache = LruCache::with_encoded(500, d, codec);
+                        let per_src: Vec<Vec<VertexId>> =
+                            (0..3).map(|q| reqs[q][pe].clone()).collect();
+                        load_pe_cooperative(
+                            &mut ep,
+                            part,
+                            &tildes[pe],
+                            &final_owned[pe],
+                            &per_src,
+                            &mut cache,
+                            store,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, (s, t)) in serial.iter().zip(&threaded).enumerate() {
+            assert_eq!(s.misses, t.misses, "PE {q} misses");
+            assert_eq!(s.bytes_from_storage, t.bytes_from_storage, "PE {q} storage bytes");
+            assert_eq!(s.fabric_bytes, t.fabric_bytes, "PE {q} fabric bytes");
+            let bits = |r: &[f32]| r.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&s.features), bits(&t.features), "PE {q} payload bits");
+        }
     }
 
     #[test]

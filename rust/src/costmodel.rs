@@ -43,6 +43,48 @@ pub fn preset(name: &str) -> Option<&'static SystemPreset> {
     PRESETS.iter().find(|p| p.name == name)
 }
 
+/// Per-tier bandwidths of the feature store: the hot tier serves decoded
+/// rows out of PE memory (γ), the cold tier pulls encoded rows over the
+/// storage link (β). Drives the prefetcher's row budget — how many cold
+/// rows can be promoted per batch without the prefetch stream outrunning
+/// the link the gather itself needs.
+#[derive(Clone, Copy, Debug)]
+pub struct TierBandwidths {
+    /// hot-tier (PE memory) bandwidth, GB/s.
+    pub hot_gbps: f64,
+    /// cold-tier (storage) bandwidth, GB/s.
+    pub cold_gbps: f64,
+}
+
+impl TierBandwidths {
+    pub fn of(p: &SystemPreset) -> TierBandwidths {
+        TierBandwidths { hot_gbps: p.gamma, cold_gbps: p.beta }
+    }
+}
+
+/// Slice of the inter-batch gap the prefetcher may occupy on the cold
+/// link (µs). Deliberately small: prefetch rides in the sampling stage's
+/// shadow, it must not contend with the gather's own β reads.
+pub const PREFETCH_WINDOW_US: f64 = 200.0;
+
+/// Rows of `row_bytes` wire bytes the cold tier can deliver inside one
+/// prefetch window at `tb.cold_gbps` — the budget the stream hands
+/// [`crate::feature::FeatureStore::prefetch_into_hot`].
+pub fn prefetch_row_budget(tb: &TierBandwidths, row_bytes: usize, window_us: f64) -> usize {
+    if row_bytes == 0 {
+        return 0;
+    }
+    ((window_us * tb.cold_gbps * 1e3) / row_bytes as f64).floor() as usize
+}
+
+/// The budget under the default (4xA100) preset and window — what
+/// [`crate::pipeline::EngineStream`] uses when no preset is in scope.
+/// Smaller rows ⇒ more rows per window: compression widens the prefetch
+/// reach by the codec ratio.
+pub fn default_prefetch_row_budget(row_bytes: usize) -> usize {
+    prefetch_row_budget(&TierBandwidths::of(preset("4xA100").unwrap()), row_bytes, PREFETCH_WINDOW_US)
+}
+
 /// Model-cost descriptor: dims + the paper's model-complexity factor `M`
 /// (R-GCN runs ~8 relation-typed weight matrices per layer; its F/B is
 /// roughly an order of magnitude heavier than GCN's at equal counts —
@@ -96,6 +138,9 @@ pub fn estimate(
 ) -> StageTimes {
     let is_coop = report.mode == "Coop";
     let layers = report.e.len();
+    // the Table-1 estimate stays a *counts* model in decoded f32 units
+    // (the paper's formulas know no codec); measured wire bytes live in
+    // the engine report's byte ledgers instead
     let fbytes = 4.0;
 
     // --- Sampling: adjacency traffic at β + id redistribution at α ----
@@ -239,5 +284,20 @@ mod tests {
         let v = preset("16xV100").unwrap();
         assert_eq!((v.gamma, v.alpha, v.beta), (900.0, 300.0, 32.0));
         assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn prefetch_budget_tracks_cold_bandwidth_and_codec_width() {
+        let tb = TierBandwidths::of(preset("4xA100").unwrap());
+        assert!(tb.hot_gbps > tb.cold_gbps);
+        // 200us at 64 GB/s cold bandwidth moves 12.8 MB; f32 rows of dim 16
+        // are 64 wire bytes, int8 rows are 21, so the narrower codec fits
+        // strictly more rows into the same window.
+        let f32_rows = prefetch_row_budget(&tb, 64, PREFETCH_WINDOW_US);
+        let int8_rows = prefetch_row_budget(&tb, 21, PREFETCH_WINDOW_US);
+        assert_eq!(f32_rows, 200_000);
+        assert!(int8_rows as f64 >= 3.0 * f32_rows as f64);
+        assert_eq!(prefetch_row_budget(&tb, 0, PREFETCH_WINDOW_US), 0);
+        assert_eq!(default_prefetch_row_budget(64), f32_rows);
     }
 }

@@ -1,0 +1,350 @@
+//! Row codecs: the wire format of one feature row.
+//!
+//! A [`Codec`] fixes how a `dim`-element f32 feature row is laid out in
+//! storage and on the fabric. Rows are encoded **once** at store build
+//! ([`super::TieredStore`]) and decoded on gather; every byte ledger in
+//! the system (`feat_storage_bytes`, `feat_fabric_bytes`, cache arenas,
+//! serve bytes/request) charges [`Codec::row_bytes`] — the exact encoded
+//! size — so compression shows up as *wire* bytes, not a modeled ratio.
+//!
+//! | codec | layout                                  | row bytes | error bound            |
+//! |-------|-----------------------------------------|-----------|------------------------|
+//! | f32   | `dim × f32` (LE)                        | `4·dim`   | exact (bit-identical)  |
+//! | fp16  | `dim × binary16` (LE, round-to-nearest-even) | `2·dim` | `max(2⁻¹¹·|x|, 2⁻²⁴)` |
+//! | int8  | `[scale: f32 LE][zp: u8][dim × u8]`     | `dim + 5` | `scale/2` per element  |
+//!
+//! The int8 quantizer is per-row affine with a *nudged* range: the
+//! represented interval is `[min(lo,0), max(hi,0)]` so the zero point is
+//! always representable (`x̂ = scale·(q − zp)` with `q = clamp(round(x/
+//! scale + zp), 0, 255)`); an all-zero row encodes the sentinel
+//! `scale == 0`. Decoding is a pure function of the encoded bytes, so
+//! owner-side and requester-side decodes of the same row are
+//! bit-identical — the property the cooperative fabric path relies on.
+
+/// The wire format of one feature row (CLI `--codec f32|fp16|int8`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    /// Passthrough: rows stay f32, bit-identical to the uncompressed
+    /// store (the default — every PR-6 ledger and checksum is preserved).
+    F32,
+    /// IEEE 754 binary16 per element, round-to-nearest-even.
+    Fp16,
+    /// Per-row affine u8 quantization with an f32 scale and a u8 zero
+    /// point header.
+    Int8,
+}
+
+impl Codec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Codec::F32 => "f32",
+            Codec::Fp16 => "fp16",
+            Codec::Int8 => "int8",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" | "float32" | "none" => Some(Codec::F32),
+            "fp16" | "f16" | "half" => Some(Codec::Fp16),
+            "int8" | "i8" | "u8" => Some(Codec::Int8),
+            _ => None,
+        }
+    }
+
+    /// All codecs, in CLI order (repro sweeps iterate this).
+    pub fn all() -> [Codec; 3] {
+        [Codec::F32, Codec::Fp16, Codec::Int8]
+    }
+
+    /// Exact encoded size of one `dim`-element row — the number every
+    /// byte ledger charges per stored/shipped row.
+    pub fn row_bytes(&self, dim: usize) -> usize {
+        match self {
+            Codec::F32 => dim * 4,
+            Codec::Fp16 => dim * 2,
+            Codec::Int8 => dim + 5,
+        }
+    }
+
+    /// Append the encoded form of `row` to `out` (exactly
+    /// [`Codec::row_bytes`] bytes).
+    pub fn encode_row(&self, row: &[f32], out: &mut Vec<u8>) {
+        match self {
+            Codec::F32 => {
+                for &x in row {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Codec::Fp16 => {
+                for &x in row {
+                    out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+                }
+            }
+            Codec::Int8 => encode_int8(row, out),
+        }
+    }
+
+    /// Decode one encoded row (`bytes.len() == row_bytes(out.len())`)
+    /// into `out`.
+    pub fn decode_row(&self, bytes: &[u8], out: &mut [f32]) {
+        match self {
+            Codec::F32 => {
+                debug_assert_eq!(bytes.len(), out.len() * 4);
+                for (o, b) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+                    *o = f32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+                }
+            }
+            Codec::Fp16 => {
+                debug_assert_eq!(bytes.len(), out.len() * 2);
+                for (o, b) in out.iter_mut().zip(bytes.chunks_exact(2)) {
+                    *o = f16_bits_to_f32(u16::from_le_bytes([b[0], b[1]]));
+                }
+            }
+            Codec::Int8 => decode_int8(bytes, out),
+        }
+    }
+}
+
+/// Per-row affine u8 quantization: `[scale: f32 LE][zp: u8][dim × u8]`.
+/// The range is nudged to include 0 (`lo = min(row), 0`; `hi = max(row),
+/// 0`) so `zp = round(−lo/scale)` lands in `[0, 255]` without clamping
+/// and zero round-trips exactly; `scale == 0` is the all-zero sentinel.
+fn encode_int8(row: &[f32], out: &mut Vec<u8>) {
+    let mut lo = 0f32;
+    let mut hi = 0f32;
+    for &x in row {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let scale = (hi - lo) / 255.0;
+    if scale == 0.0 {
+        out.extend_from_slice(&0f32.to_le_bytes());
+        out.push(0);
+        out.resize(out.len() + row.len(), 0);
+        return;
+    }
+    let zp = (-lo / scale).round().clamp(0.0, 255.0);
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.push(zp as u8);
+    for &x in row {
+        let q = (x / scale + zp).round().clamp(0.0, 255.0);
+        out.push(q as u8);
+    }
+}
+
+fn decode_int8(bytes: &[u8], out: &mut [f32]) {
+    debug_assert_eq!(bytes.len(), out.len() + 5);
+    let scale = f32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    let zp = bytes[4] as f32;
+    for (o, &q) in out.iter_mut().zip(&bytes[5..]) {
+        *o = scale * (q as f32 - zp);
+    }
+}
+
+/// f32 → binary16 with round-to-nearest-even (normal, subnormal,
+/// overflow-to-Inf, and NaN paths — no `half` crate in the offline
+/// build).
+pub(crate) fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Inf / NaN (keep NaN signaling-agnostic: force a payload bit)
+        return sign | 0x7c00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7c00; // overflow → Inf
+    }
+    if unbiased >= -14 {
+        // normal range: keep 10 mantissa bits, RNE on the 13 dropped
+        let mut m = mant >> 13;
+        let rem = mant & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1; // carry may roll into the exponent (and to Inf) — the
+                    // packed add below handles both correctly
+        }
+        let e = (unbiased + 15) as u32;
+        return sign | ((e << 10) + m) as u16;
+    }
+    if unbiased < -25 {
+        return sign; // below half the smallest subnormal → ±0
+    }
+    // subnormal: shift the 24-bit significand down, RNE on dropped bits
+    let s24 = 0x0080_0000 | mant;
+    let shift = (-(unbiased + 1)) as u32; // in [14, 24]
+    let mut m = s24 >> shift;
+    let rem = s24 & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    if rem > halfway || (rem == halfway && (m & 1) == 1) {
+        m += 1; // may carry to 0x400 — exactly the smallest normal
+    }
+    sign | m as u16
+}
+
+/// binary16 → f32 (exact — every f16 value is representable).
+pub(crate) fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x03ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (mant << 13) // Inf / NaN
+    } else if exp == 0 {
+        if mant == 0 {
+            sign // ±0
+        } else {
+            // subnormal: renormalize into an f32 normal
+            let mut e = 113u32; // 127 - 14
+            let mut m = mant;
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(codec: Codec, row: &[f32]) -> Vec<f32> {
+        let mut enc = Vec::new();
+        codec.encode_row(row, &mut enc);
+        assert_eq!(enc.len(), codec.row_bytes(row.len()), "{codec:?} encoded size");
+        let mut out = vec![0f32; row.len()];
+        codec.decode_row(&enc, &mut out);
+        out
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for c in Codec::all() {
+            assert_eq!(Codec::parse(c.name()), Some(c));
+        }
+        assert_eq!(Codec::parse("half"), Some(Codec::Fp16));
+        assert_eq!(Codec::parse("nope"), None);
+    }
+
+    #[test]
+    fn row_bytes_are_exact() {
+        assert_eq!(Codec::F32.row_bytes(16), 64);
+        assert_eq!(Codec::Fp16.row_bytes(16), 32);
+        assert_eq!(Codec::Int8.row_bytes(16), 21);
+        // the tiny dataset's dim-16 rows already clear the 3x bar
+        assert!(64.0 / 21.0 >= 3.0);
+    }
+
+    #[test]
+    fn f32_codec_is_bit_identical() {
+        let row = [1.5f32, -0.25, 1e-30, f32::MIN_POSITIVE, -3.7e8, 0.0];
+        let out = roundtrip(Codec::F32, &row);
+        for (a, b) in row.iter().zip(&out) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fp16_known_values_and_bound() {
+        // exactly representable values round-trip exactly
+        for &x in &[0.0f32, 1.0, -2.0, 0.5, 65504.0, -0.09997559] {
+            let h = f32_to_f16_bits(x);
+            if x == 65504.0 {
+                assert_eq!(h, 0x7bff, "largest normal f16");
+            }
+        }
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1.0)), 1.0);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-0.5)), -0.5);
+        // subnormals: smallest positive f16 is 2^-24
+        assert_eq!(f16_bits_to_f32(0x0001), 2f32.powi(-24));
+        assert_eq!(f32_to_f16_bits(2f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16_bits(2f32.powi(-26)), 0, "below half-ulp of subnormal → 0");
+        // overflow → Inf
+        assert_eq!(f32_to_f16_bits(1e6), 0x7c00);
+        assert!(f16_bits_to_f32(0x7c00).is_infinite());
+        // the relative bound on a sweep of awkward values
+        let mut x = -7.9997f32;
+        while x < 8.0 {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            let bound = (x.abs() * 2f32.powi(-11)).max(2f32.powi(-24));
+            assert!((y - x).abs() <= bound, "fp16 bound: {x} -> {y}");
+            x += 0.01703;
+        }
+    }
+
+    #[test]
+    fn fp16_rne_ties_go_to_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next f16 (1 + 2^-10):
+        // RNE keeps the even mantissa (1.0)
+        let tie = 1.0 + 2f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tie)), 1.0);
+        // 1 + 3·2^-11 ties upward to 1 + 2^-9's even neighbor 1 + 2·2^-10
+        let tie_up = 1.0 + 3.0 * 2f32.powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tie_up)), 1.0 + 2.0 * 2f32.powi(-10));
+    }
+
+    #[test]
+    fn int8_error_within_half_scale() {
+        let row: Vec<f32> = (0..64).map(|i| ((i * 37 + 11) % 97) as f32 / 17.0 - 2.5).collect();
+        let mut enc = Vec::new();
+        Codec::Int8.encode_row(&row, &mut enc);
+        let scale = f32::from_le_bytes([enc[0], enc[1], enc[2], enc[3]]);
+        assert!(scale > 0.0);
+        let out = roundtrip(Codec::Int8, &row);
+        for (a, b) in row.iter().zip(&out) {
+            assert!(
+                (a - b).abs() <= scale * 0.5 * (1.0 + 1e-3),
+                "int8 bound: {a} -> {b} (scale {scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn int8_zero_row_and_zero_point_are_exact() {
+        let zeros = vec![0f32; 10];
+        let out = roundtrip(Codec::Int8, &zeros);
+        assert_eq!(out, zeros, "all-zero sentinel row");
+        // zero inside a mixed row decodes to exactly zero (nudged range)
+        let row = [0.0f32, 1.0, -1.0, 0.73];
+        let out = roundtrip(Codec::Int8, &row);
+        assert_eq!(out[0], 0.0, "zero point must be exact");
+    }
+
+    #[test]
+    fn int8_one_sided_rows_keep_zero_in_range() {
+        // all-positive and all-negative rows: the nudge keeps lo/hi
+        // anchored at 0, so q stays in range without zp clamping
+        for row in [vec![0.5f32, 1.0, 2.0], vec![-0.5f32, -1.0, -2.0]] {
+            let mut enc = Vec::new();
+            Codec::Int8.encode_row(&row, &mut enc);
+            let scale = f32::from_le_bytes([enc[0], enc[1], enc[2], enc[3]]);
+            let out = roundtrip(Codec::Int8, &row);
+            for (a, b) in row.iter().zip(&out) {
+                assert!((a - b).abs() <= scale * 0.5 * (1.0 + 1e-3), "{a} -> {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_is_pure_and_repeatable() {
+        // the cooperative fabric ships encoded bytes: owner-side and
+        // requester-side decodes of the same bytes must agree bitwise
+        let row: Vec<f32> = (0..33).map(|i| (i as f32 * 0.917).sin()).collect();
+        for codec in Codec::all() {
+            let mut enc = Vec::new();
+            codec.encode_row(&row, &mut enc);
+            let mut a = vec![0f32; row.len()];
+            let mut b = vec![0f32; row.len()];
+            codec.decode_row(&enc, &mut a);
+            codec.decode_row(&enc, &mut b);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&a), bits(&b), "{codec:?}");
+        }
+    }
+}

@@ -3,15 +3,30 @@
 //! The paper's bandwidth model distinguishes *storage* reads (β, a cache
 //! miss pulls a row out of vertex-embedding storage) from *fabric*
 //! transfers (α, cooperative loading redistributes rows between PEs).
-//! This module is the storage side: [`FeatureStore`] is the read seam,
-//! [`PartitionedFeatureStore`] the in-memory one-shard-per-PE
-//! implementation built from [`crate::graph::Dataset::write_features`]
-//! at pipeline build time. The caches ([`crate::coop::cache`]), the
-//! loader ([`crate::coop::feature_loader`]), and the training streams
-//! ([`crate::pipeline::TrainStream`]) all read rows through it, so the
-//! byte accounting in [`crate::coop::engine::EngineReport`] is derived
-//! from real movement.
+//! This module is the storage side:
+//!
+//! - [`store`] — the [`FeatureStore`] read seam and
+//!   [`PartitionedFeatureStore`], the in-memory one-shard-per-PE f32
+//!   implementation built from [`crate::graph::Dataset::write_features`]
+//!   at pipeline build time.
+//! - [`codec`] — pluggable row codecs ([`Codec::F32`] passthrough,
+//!   [`Codec::Fp16`], [`Codec::Int8`] with per-row scale/zero-point):
+//!   encode once at store build, decode on gather, exact encoded
+//!   [`Codec::row_bytes`] so every byte ledger reports wire bytes.
+//! - [`tiered`] — [`TieredStore`], a capacity-bounded hot tier of
+//!   decoded rows (plus a prefetch annex) over compressed cold shards,
+//!   classified per row by [`Tier`].
+//!
+//! The caches ([`crate::coop::cache`]), the loader
+//! ([`crate::coop::feature_loader`]), and the training streams
+//! ([`crate::pipeline::TrainStream`]) all read rows through the trait,
+//! so the byte accounting in [`crate::coop::engine::EngineReport`] is
+//! derived from real movement — at whatever wire size the codec yields.
 
+pub mod codec;
 pub mod store;
+pub mod tiered;
 
-pub use store::{FeatureStore, PartitionedFeatureStore};
+pub use codec::Codec;
+pub use store::{FeatureStore, PartitionedFeatureStore, Tier};
+pub use tiered::TieredStore;

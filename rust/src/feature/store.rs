@@ -12,7 +12,20 @@
 //! time. A [`PartitionedFeatureStore::single_shard`] constructor covers
 //! the 1-PE / training case (the whole matrix in shard 0).
 
+use super::codec::Codec;
 use crate::graph::{Dataset, Partition, VertexId};
+
+/// Which storage tier a row is served from — decides which bandwidth
+/// lane (γ for [`Tier::Hot`] PE memory, β for [`Tier::Cold`] storage)
+/// its bytes are charged to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Decoded row resident in PE memory (static hot set or prefetch
+    /// annex).
+    Hot,
+    /// Encoded row in compressed base storage.
+    Cold,
+}
 
 /// Read access to vertex feature rows. Object-safe; implementations must
 /// be shareable across PE threads (`Send + Sync`) since every PE reads
@@ -21,17 +34,45 @@ pub trait FeatureStore: Send + Sync {
     /// Feature dimensionality (floats per row).
     fn dim(&self) -> usize;
 
-    /// Bytes of one row (f32 features).
-    fn row_bytes(&self) -> usize {
-        self.dim() * 4
+    /// How rows are encoded at rest and on the wire.
+    fn codec(&self) -> Codec {
+        Codec::F32
     }
 
-    /// The stored row of vertex `v`.
-    fn row(&self, v: VertexId) -> &[f32];
+    /// Encoded bytes of one row — the wire size every byte ledger
+    /// charges per row pulled from storage or shipped over the fabric.
+    fn row_bytes(&self) -> usize {
+        self.codec().row_bytes(self.dim())
+    }
 
-    /// Copy the row of `v` into `out` (`out.len() == dim()`).
-    fn copy_row(&self, v: VertexId, out: &mut [f32]) {
-        out.copy_from_slice(self.row(v));
+    /// Which tier serves `v` right now (all-cold unless the store
+    /// tiers).
+    fn tier_of(&self, _v: VertexId) -> Tier {
+        Tier::Cold
+    }
+
+    /// Copy the decoded row of `v` into `out` (`out.len() == dim()`).
+    fn copy_row(&self, v: VertexId, out: &mut [f32]);
+
+    /// Append the *encoded* row of `v` (exactly [`row_bytes`] bytes,
+    /// after a clear) — what the fabric ships so cross-PE traffic moves
+    /// wire bytes, not decoded f32. The default round-trips through
+    /// `copy_row` + encode; stores holding encoded rows should override
+    /// with a direct byte copy (re-quantizing a decoded row drifts).
+    ///
+    /// [`row_bytes`]: FeatureStore::row_bytes
+    fn copy_encoded_row(&self, v: VertexId, out: &mut Vec<u8>) {
+        let mut row = vec![0f32; self.dim()];
+        self.copy_row(v, &mut row);
+        out.clear();
+        self.codec().encode_row(&row, out);
+    }
+
+    /// Promote up to `budget_rows` of `vs` into the hot tier ahead of
+    /// the next gather; returns rows actually fetched from cold
+    /// storage. No-op (returns 0) for untiered stores.
+    fn prefetch_into_hot(&self, _vs: &[VertexId], _budget_rows: usize) -> u64 {
+        0
     }
 
     /// Batched gather into a dense row-major buffer (replaces the old
@@ -130,6 +171,15 @@ impl PartitionedFeatureStore {
     pub fn total_bytes(&self) -> usize {
         self.shards.iter().map(|s| s.len() * 4).sum()
     }
+
+    /// Borrow the stored row of `v` (concrete-type fast path; the trait
+    /// seam goes through [`FeatureStore::copy_row`] so encoded stores
+    /// can decode on the way out).
+    pub fn row(&self, v: VertexId) -> &[f32] {
+        let s = self.shard_of[v as usize] as usize;
+        let r = self.row_of[v as usize] as usize;
+        &self.shards[s][r * self.dim..(r + 1) * self.dim]
+    }
 }
 
 impl FeatureStore for PartitionedFeatureStore {
@@ -137,10 +187,8 @@ impl FeatureStore for PartitionedFeatureStore {
         self.dim
     }
 
-    fn row(&self, v: VertexId) -> &[f32] {
-        let s = self.shard_of[v as usize] as usize;
-        let r = self.row_of[v as usize] as usize;
-        &self.shards[s][r * self.dim..(r + 1) * self.dim]
+    fn copy_row(&self, v: VertexId, out: &mut [f32]) {
+        out.copy_from_slice(self.row(v));
     }
 }
 
@@ -186,6 +234,22 @@ mod tests {
             assert_eq!(a.row(v), b.row(v), "vertex {v}");
         }
         assert_eq!(a.num_shards(), 1);
+    }
+
+    #[test]
+    fn default_trait_surface_is_f32_cold() {
+        let ds = datasets::build("tiny", 6).unwrap();
+        let store = PartitionedFeatureStore::single_shard(&ds);
+        assert_eq!(store.codec(), Codec::F32);
+        assert_eq!(store.row_bytes(), store.dim() * 4);
+        assert_eq!(store.tier_of(42), Tier::Cold);
+        assert_eq!(store.prefetch_into_hot(&[1, 2, 3], 8), 0);
+        // default copy_encoded_row == the row's little-endian f32 bytes
+        let mut enc = vec![0xAAu8; 3]; // must be cleared first
+        store.copy_encoded_row(9, &mut enc);
+        assert_eq!(enc.len(), store.row_bytes());
+        let want: Vec<u8> = store.row(9).iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(enc, want);
     }
 
     #[test]

@@ -1,0 +1,380 @@
+//! Two-tier compressed feature store: a capacity-bounded **hot tier** of
+//! decoded f32 rows over a codec-compressed **cold tier** of encoded
+//! shards.
+//!
+//! The cold tier is the wire truth: every row is encoded once at build
+//! ([`Codec::encode_row`]) into per-PE shards, and a cold fill charges
+//! the exact encoded [`Codec::row_bytes`] to the storage ledger (β). The
+//! hot tier holds *decoded* copies of the hottest vertices — decoded
+//! **from the encoded bytes**, so both tiers serve bit-identical values
+//! — and a hot fill charges decoded bytes at PE-memory bandwidth (γ)
+//! instead. Hot membership is static top-K by degree (the stand-in for
+//! observed access frequency: degree is exactly what makes a vertex
+//! reappear across sampled neighborhoods and serve's 80/5 hot-set mix),
+//! sized by the CLI `--hot-mb` budget at `dim × 4` decoded bytes per
+//! row, plus a small FIFO **annex** the costmodel-driven prefetcher
+//! ([`FeatureStore::prefetch_into_hot`]) fills with predicted next-batch
+//! seed rows.
+//!
+//! Determinism: the annex mutates only between batches (at the stream's
+//! serial seed-drawing point), never during one, so per-batch tier
+//! classification is stable across serial/threaded execution; hot and
+//! cold serve identical values, so tiering moves bytes between ledgers
+//! without changing any count, feature payload, or prediction.
+
+use super::codec::Codec;
+use super::store::{FeatureStore, Tier};
+use crate::graph::{Dataset, Partition, VertexId};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+const NOT_HOT: u32 = u32::MAX;
+
+/// Prefetch annex: a FIFO ring of decoded rows the prefetcher promoted
+/// ahead of the next gather. Mutated only between batches.
+struct Annex {
+    cap: usize,
+    map: HashMap<VertexId, usize>,
+    /// `cap × dim` decoded rows, slot-major.
+    slots: Vec<f32>,
+    /// slot → vertex currently occupying it (`NOT_HOT` when empty).
+    owner: Vec<VertexId>,
+    cursor: usize,
+}
+
+/// Codec-compressed cold shards + decoded hot tier behind the
+/// [`FeatureStore`] trait.
+pub struct TieredStore {
+    dim: usize,
+    codec: Codec,
+    row_bytes: usize,
+    shard_of: Vec<u32>,
+    row_of: Vec<u32>,
+    /// encoded rows, `row_bytes` each, per PE shard.
+    shards: Vec<Vec<u8>>,
+    /// vertex → static hot-tier row index (`NOT_HOT` when cold).
+    hot_pos: Vec<u32>,
+    /// decoded rows of the static hot set, row-major.
+    hot_rows: Vec<f32>,
+    annex: Mutex<Annex>,
+}
+
+impl TieredStore {
+    /// Build over `dataset` sharded by `part`: encode every row once
+    /// with `codec`, then seed the hot tier with the top-K
+    /// highest-degree vertices, `K = hot_bytes / (dim × 4)` (decoded
+    /// rows are what the hot tier holds). `hot_bytes == 0` disables the
+    /// hot tier (and the prefetch annex with it).
+    pub fn build(
+        dataset: &Dataset,
+        part: &Partition,
+        codec: Codec,
+        hot_bytes: usize,
+    ) -> TieredStore {
+        let n = dataset.graph.num_vertices();
+        let dim = dataset.feat_dim;
+        let row_bytes = codec.row_bytes(dim);
+        let num_shards = part.num_parts;
+        let mut shard_of = vec![0u32; n];
+        let mut row_of = vec![0u32; n];
+        let mut shards: Vec<Vec<u8>> = vec![Vec::new(); num_shards];
+        let mut row = vec![0f32; dim];
+        for v in 0..n {
+            let s = part.part_of(v as VertexId);
+            shard_of[v] = s as u32;
+            row_of[v] = (shards[s].len() / row_bytes) as u32;
+            dataset.write_features(v as VertexId, &mut row);
+            codec.encode_row(&row, &mut shards[s]);
+        }
+
+        // hot set: deterministic top-K by (degree desc, id asc) — the
+        // frequency proxy both the samplers and the serve workload skew
+        // toward
+        let k = (hot_bytes / (dim * 4)).min(n);
+        let mut hot_pos = vec![NOT_HOT; n];
+        let mut hot_rows = Vec::with_capacity(k * dim);
+        if k > 0 {
+            let mut order: Vec<u32> = (0..n as u32).collect();
+            order.sort_by_key(|&v| {
+                (std::cmp::Reverse(dataset.graph.neighbors(v).len()), v)
+            });
+            order.truncate(k);
+            for (i, &v) in order.iter().enumerate() {
+                hot_pos[v as usize] = i as u32;
+                // decode from the *encoded* bytes so the hot tier serves
+                // exactly what a cold fill would
+                let start = hot_rows.len();
+                hot_rows.resize(start + dim, 0.0);
+                let s = shard_of[v as usize] as usize;
+                let off = row_of[v as usize] as usize * row_bytes;
+                codec.decode_row(&shards[s][off..off + row_bytes], &mut hot_rows[start..]);
+            }
+        }
+        let annex_cap = if k == 0 { 0 } else { (k / 4).max(1) };
+        TieredStore {
+            dim,
+            codec,
+            row_bytes,
+            shard_of,
+            row_of,
+            shards,
+            hot_pos,
+            hot_rows,
+            annex: Mutex::new(Annex {
+                cap: annex_cap,
+                map: HashMap::new(),
+                slots: vec![0f32; annex_cap * dim],
+                owner: vec![NOT_HOT; annex_cap],
+                cursor: 0,
+            }),
+        }
+    }
+
+    /// Single-shard build (the training path's store shape).
+    pub fn single(dataset: &Dataset, codec: Codec, hot_bytes: usize) -> TieredStore {
+        let part = Partition {
+            assignment: vec![0u16; dataset.graph.num_vertices()],
+            num_parts: 1,
+        };
+        TieredStore::build(dataset, &part, codec, hot_bytes)
+    }
+
+    /// Rows the static hot tier holds.
+    pub fn hot_rows(&self) -> usize {
+        self.hot_rows.len() / self.dim.max(1)
+    }
+
+    /// Prefetch-annex capacity in rows (0 when the hot tier is off).
+    pub fn annex_cap(&self) -> usize {
+        self.annex.lock().unwrap().cap
+    }
+
+    /// Resident bytes: encoded cold shards + decoded hot tier + annex.
+    pub fn total_bytes(&self) -> usize {
+        let cold: usize = self.shards.iter().map(|s| s.len()).sum();
+        let hot = (self.hot_rows.len() + self.annex.lock().unwrap().slots.len()) * 4;
+        cold + hot
+    }
+
+    fn encoded(&self, v: VertexId) -> &[u8] {
+        let s = self.shard_of[v as usize] as usize;
+        let off = self.row_of[v as usize] as usize * self.row_bytes;
+        &self.shards[s][off..off + self.row_bytes]
+    }
+}
+
+impl FeatureStore for TieredStore {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn codec(&self) -> Codec {
+        self.codec
+    }
+
+    fn row_bytes(&self) -> usize {
+        self.row_bytes
+    }
+
+    fn tier_of(&self, v: VertexId) -> Tier {
+        if self.hot_pos[v as usize] != NOT_HOT {
+            return Tier::Hot;
+        }
+        let annex = self.annex.lock().unwrap();
+        if annex.cap > 0 && annex.map.contains_key(&v) {
+            Tier::Hot
+        } else {
+            Tier::Cold
+        }
+    }
+
+    fn copy_row(&self, v: VertexId, out: &mut [f32]) {
+        let pos = self.hot_pos[v as usize];
+        if pos != NOT_HOT {
+            let start = pos as usize * self.dim;
+            out.copy_from_slice(&self.hot_rows[start..start + self.dim]);
+            return;
+        }
+        {
+            let annex = self.annex.lock().unwrap();
+            if let Some(&slot) = annex.map.get(&v) {
+                out.copy_from_slice(&annex.slots[slot * self.dim..(slot + 1) * self.dim]);
+                return;
+            }
+        }
+        self.codec.decode_row(self.encoded(v), out);
+    }
+
+    fn copy_encoded_row(&self, v: VertexId, out: &mut Vec<u8>) {
+        // straight byte copy from the cold shard — the wire truth, no
+        // re-encode (re-quantizing a decoded row would drift)
+        out.clear();
+        out.extend_from_slice(self.encoded(v));
+    }
+
+    fn prefetch_into_hot(&self, vs: &[VertexId], budget_rows: usize) -> u64 {
+        let mut annex = self.annex.lock().unwrap();
+        if annex.cap == 0 || budget_rows == 0 {
+            return 0;
+        }
+        let mut fetched = 0u64;
+        for &v in vs {
+            if fetched as usize >= budget_rows {
+                break;
+            }
+            if self.hot_pos[v as usize] != NOT_HOT || annex.map.contains_key(&v) {
+                continue; // already hot
+            }
+            let slot = annex.cursor;
+            let evicted = annex.owner[slot];
+            if evicted != NOT_HOT {
+                annex.map.remove(&evicted);
+            }
+            let dim = self.dim;
+            let enc = self.encoded(v);
+            self.codec.decode_row(enc, &mut annex.slots[slot * dim..(slot + 1) * dim]);
+            annex.owner[slot] = v;
+            annex.map.insert(v, slot);
+            annex.cursor = (slot + 1) % annex.cap;
+            fetched += 1;
+        }
+        fetched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{datasets, partition};
+
+    fn fixture() -> (Dataset, Partition) {
+        let ds = datasets::build("tiny", 5).unwrap();
+        let part = partition::random(&ds.graph, 3, 2);
+        (ds, part)
+    }
+
+    #[test]
+    fn cold_tier_serves_decoded_rows_within_codec_bounds() {
+        let (ds, part) = fixture();
+        let mut truth = vec![0f32; ds.feat_dim];
+        for codec in Codec::all() {
+            let store = TieredStore::build(&ds, &part, codec, 0);
+            assert_eq!(store.row_bytes(), codec.row_bytes(ds.feat_dim));
+            let mut got = vec![0f32; ds.feat_dim];
+            for v in [0u32, 7, 999, 1999] {
+                ds.write_features(v, &mut truth);
+                store.copy_row(v, &mut got);
+                match codec {
+                    Codec::F32 => assert_eq!(got, truth, "f32 must be exact"),
+                    _ => {
+                        for (a, b) in truth.iter().zip(&got) {
+                            // tiny's features are U(-1,1): both codecs
+                            // stay well inside 1% absolute here
+                            assert!((a - b).abs() < 0.01, "{codec:?} v{v}: {a} vs {b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hot_tier_serves_identical_values_to_cold() {
+        let (ds, part) = fixture();
+        for codec in Codec::all() {
+            let hot = TieredStore::build(&ds, &part, codec, 64 * 1024);
+            let cold = TieredStore::build(&ds, &part, codec, 0);
+            assert!(hot.hot_rows() > 0, "64 KiB must fit some dim-16 rows");
+            let mut a = vec![0f32; ds.feat_dim];
+            let mut b = vec![0f32; ds.feat_dim];
+            let mut hot_seen = 0;
+            for v in 0..ds.graph.num_vertices() as u32 {
+                hot.copy_row(v, &mut a);
+                cold.copy_row(v, &mut b);
+                let bits = |r: &[f32]| r.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&a), bits(&b), "{codec:?} v{v}: tiers must agree bitwise");
+                if hot.tier_of(v) == Tier::Hot {
+                    hot_seen += 1;
+                }
+            }
+            assert_eq!(hot_seen, hot.hot_rows(), "static hot set classification");
+        }
+    }
+
+    #[test]
+    fn hot_set_is_top_degree_and_capacity_bounded() {
+        let (ds, part) = fixture();
+        let budget = 32 * ds.feat_dim * 4; // exactly 32 decoded rows
+        let store = TieredStore::build(&ds, &part, Codec::Int8, budget);
+        assert_eq!(store.hot_rows(), 32);
+        // every hot vertex has degree >= every cold vertex's degree
+        let min_hot = (0..ds.graph.num_vertices() as u32)
+            .filter(|&v| store.hot_pos[v as usize] != NOT_HOT)
+            .map(|v| ds.graph.neighbors(v).len())
+            .min()
+            .unwrap();
+        let max_cold = (0..ds.graph.num_vertices() as u32)
+            .filter(|&v| store.hot_pos[v as usize] == NOT_HOT)
+            .map(|v| ds.graph.neighbors(v).len())
+            .max()
+            .unwrap();
+        assert!(min_hot >= max_cold, "hot tier must hold the top-degree vertices");
+    }
+
+    #[test]
+    fn encoded_row_copy_matches_shard_bytes() {
+        let (ds, part) = fixture();
+        let store = TieredStore::build(&ds, &part, Codec::Int8, 4096);
+        let mut enc = Vec::new();
+        for v in [3u32, 500, 1500] {
+            store.copy_encoded_row(v, &mut enc);
+            assert_eq!(enc.len(), store.row_bytes());
+            assert_eq!(&enc[..], store.encoded(v), "wire bytes, not a re-encode");
+        }
+    }
+
+    #[test]
+    fn prefetch_annex_promotes_and_evicts_fifo() {
+        let (ds, part) = fixture();
+        let budget = 40 * ds.feat_dim * 4;
+        let store = TieredStore::build(&ds, &part, Codec::Fp16, budget);
+        let cap = store.annex_cap();
+        assert!(cap >= 1);
+        // pick cold vertices to promote
+        let cold: Vec<u32> = (0..ds.graph.num_vertices() as u32)
+            .filter(|&v| store.tier_of(v) == Tier::Cold)
+            .take(cap + 2)
+            .collect();
+        assert!(cold.len() > cap, "need enough cold vertices to overflow the annex");
+        let fetched = store.prefetch_into_hot(&cold, cold.len());
+        assert_eq!(fetched as usize, cold.len(), "all requested rows promoted");
+        // the ring kept only the last `cap`; the first promotions aged out
+        assert_eq!(store.tier_of(cold[0]), Tier::Cold, "FIFO eviction");
+        assert_eq!(store.tier_of(*cold.last().unwrap()), Tier::Hot);
+        // promoted rows serve the same bytes as a cold decode
+        let reference = TieredStore::build(&ds, &part, Codec::Fp16, budget);
+        let mut a = vec![0f32; ds.feat_dim];
+        let mut b = vec![0f32; ds.feat_dim];
+        let v = *cold.last().unwrap();
+        store.copy_row(v, &mut a);
+        reference.copy_row(v, &mut b);
+        assert_eq!(a, b, "annex must serve the decoded cold bytes verbatim");
+        // budget of zero is a no-op
+        assert_eq!(store.prefetch_into_hot(&cold, 0), 0);
+    }
+
+    #[test]
+    fn single_shard_matches_partitioned_values() {
+        let (ds, part) = fixture();
+        let a = TieredStore::build(&ds, &part, Codec::Int8, 0);
+        let b = TieredStore::single(&ds, Codec::Int8, 0);
+        let mut ra = vec![0f32; ds.feat_dim];
+        let mut rb = vec![0f32; ds.feat_dim];
+        for v in [0u32, 123, 1999] {
+            a.copy_row(v, &mut ra);
+            b.copy_row(v, &mut rb);
+            assert_eq!(ra, rb, "sharding must not change row content");
+        }
+        assert!(b.total_bytes() >= ds.graph.num_vertices() * b.row_bytes());
+    }
+}

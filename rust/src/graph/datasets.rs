@@ -174,8 +174,12 @@ impl Dataset {
         }
     }
 
-    /// Bytes of one vertex embedding row (f32 features) — the unit every
-    /// storage/fabric byte counter is a multiple of.
+    /// Bytes of one *decoded* vertex embedding row (`feat_dim` f32s).
+    /// This is the in-memory size a consumer sees after a gather; the
+    /// *wire* size charged to the storage/fabric byte ledgers comes from
+    /// the serving store's codec
+    /// ([`crate::feature::FeatureStore::row_bytes`]) and is smaller
+    /// under fp16/int8 compression.
     pub fn row_bytes(&self) -> usize {
         self.feat_dim * 4
     }

@@ -22,6 +22,23 @@
 //! the stream so batch t+1's sampling + gathering overlaps batch t's
 //! compute.
 //!
+//! ## The storage plane: tiered compressed rows
+//!
+//! The bytes themselves are codec-shaped: rows are encoded **once** at
+//! build time by a [`feature::Codec`] (`f32` passthrough, `fp16`
+//! round-to-nearest-even, `int8` per-row scale/zero-point — wire sizes
+//! `dim·4` / `dim·2` / `dim+5`) and decoded on gather, so every byte
+//! ledger charges the wire size while consumers always see f32.
+//! [`feature::TieredStore`] layers a capacity-bounded **hot tier** of
+//! decoded top-degree rows (γ reads, `--hot-mb N`) over the compressed
+//! cold shards (β reads), with a costmodel-budgeted prefetch annex that
+//! promotes the exactly-predicted next batch's seed rows
+//! ([`costmodel::default_prefetch_row_budget`]). The fabric ships the
+//! stored encoding and decodes at the consumer, and the per-PE LRU
+//! arenas stay encoded — compression multiplies effective cache
+//! capacity. The f32/untiered default is pinned bit-identical to the
+//! legacy store in `tests/integration_storage.rs`.
+//!
 //! ## One pipeline behind everything
 //!
 //! The public API is organized around [`pipeline`]: a typed

@@ -9,7 +9,7 @@
 //! coopgnn train --train-pes P [--mode coop|indep] [--batch B] [--allreduce ring|naive]
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
-//!               [--exec serial|threaded]
+//!               [--exec serial|threaded] [--codec f32|fp16|int8] [--hot-mb N]
 //! coopgnn serve --rate R --slo-ms MS --batcher fixed|adaptive
 //!               [--duration-batches N] [--pes P] [--mode coop|indep]
 //! coopgnn caps --dataset NAME --batch B [--sampler S]
@@ -23,6 +23,7 @@
 
 use coopgnn::coop::all_to_all::AllReduceStrategy;
 use coopgnn::coop::engine::{ExecMode, Mode};
+use coopgnn::feature::Codec;
 use coopgnn::graph::datasets;
 use coopgnn::pipeline::args::{switch, val, ArgMap, ArgSpec};
 use coopgnn::pipeline::{with_prefetch, Partitioner, PipelineBuilder, DEFAULT_SEED};
@@ -46,6 +47,8 @@ const REPRO_SPECS: &[ArgSpec] = &[
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
     val("artifacts", "AOT artifacts directory (default: artifacts)"),
     val("exec", "serial|threaded (default: threaded)"),
+    val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
+    val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
 ];
 
 const TRAIN_SPECS: &[ArgSpec] = &[
@@ -71,6 +74,8 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     val("mode", "coop|indep minibatching for --train-pes (default: coop)"),
     val("batch", "per-PE batch size (--train-pes) or host-backend seed batch (default: 256)"),
     val("allreduce", "ring|naive gradient all-reduce strategy (default: ring)"),
+    val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
+    val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
 ];
 
 const ENGINE_SPECS: &[ArgSpec] = &[
@@ -89,6 +94,8 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("warmup", "warmup batches (default: 4)"),
     val("batches", "measured batches (default: 8)"),
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+    val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
+    val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
 ];
 
 const SERVE_SPECS: &[ArgSpec] = &[
@@ -109,6 +116,8 @@ const SERVE_SPECS: &[ArgSpec] = &[
     val("cache", "LRU rows per PE; 0 = no cache (default: derived)"),
     val("prefetch", "0|1 overlap batch t's predictions with batch t+1's admission (default: 0)"),
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
+    val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
+    val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
 ];
 
 const CAPS_SPECS: &[ArgSpec] = &[
@@ -129,6 +138,7 @@ fn real_main() -> coopgnn::Result<()> {
         "repro" => {
             let id = argv.get(1).map(|s| s.as_str()).unwrap_or("all");
             let rest = ArgMap::parse(argv.get(2..).unwrap_or(&[]), REPRO_SPECS)?;
+            let (codec, hot_mb) = parse_storage(&rest)?;
             let ctx = Ctx {
                 out: PathBuf::from(rest.get_or("out", "results")),
                 quick: rest.has("quick"),
@@ -136,6 +146,8 @@ fn real_main() -> coopgnn::Result<()> {
                 artifacts: PathBuf::from(rest.get_or("artifacts", "artifacts")),
                 exec: ExecMode::parse(rest.get_or("exec", "threaded"))
                     .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
+                codec,
+                hot_mb,
             };
             repro::run(id, &ctx)
         }
@@ -153,6 +165,14 @@ fn real_main() -> coopgnn::Result<()> {
             anyhow::bail!("unknown command `{other}`")
         }
     }
+}
+
+/// Shared `--codec` / `--hot-mb` parse for the storage-aware
+/// subcommands (engine, train, serve, repro).
+fn parse_storage(args: &ArgMap) -> coopgnn::Result<(Codec, usize)> {
+    let codec = Codec::parse(args.get_or("codec", "f32"))
+        .ok_or_else(|| anyhow::anyhow!("bad --codec (f32|fp16|int8)"))?;
+    Ok((codec, args.or("hot-mb", 0usize)?))
 }
 
 /// Parse `--fanout` as either one uniform value or a per-layer comma
@@ -176,8 +196,11 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
     anyhow::ensure!(pes >= 1, "--train-pes must be >= 1");
     let strategy = AllReduceStrategy::parse(args.get_or("allreduce", "ring"))
         .ok_or_else(|| anyhow::anyhow!("bad --allreduce (ring|naive)"))?;
+    let (codec, hot_mb) = parse_storage(args)?;
     let mut b = PipelineBuilder::new()
         .dataset(args.get_or("dataset", "tiny"))
+        .codec(codec)
+        .hot_mb(hot_mb)
         .mode(
             Mode::parse(args.get_or("mode", "coop"))
                 .ok_or_else(|| anyhow::anyhow!("bad --mode (coop|indep)"))?,
@@ -292,8 +315,11 @@ fn cmd_train_host(args: &ArgMap) -> coopgnn::Result<()> {
             "--{key} belongs to the pjrt backend (add --backend pjrt, or drop --{key})"
         );
     }
+    let (codec, hot_mb) = parse_storage(args)?;
     let mut b = PipelineBuilder::new()
         .dataset(args.get_or("dataset", "tiny"))
+        .codec(codec)
+        .hot_mb(hot_mb)
         .sampler(
             SamplerKind::parse(args.get_or("sampler", "labor0"))
                 .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
@@ -364,8 +390,11 @@ fn cmd_train_pjrt(args: &ArgMap) -> coopgnn::Result<()> {
     let rt = Runtime::cpu()?;
     let manifest = Manifest::load(&artifacts)?;
     let art = manifest.get(&config)?;
+    let (codec, hot_mb) = parse_storage(args)?;
     let pipe = PipelineBuilder::new()
         .dataset(args.get_or("dataset", &art.dataset))
+        .codec(codec)
+        .hot_mb(hot_mb)
         .sampler(
             SamplerKind::parse(args.get_or("sampler", "labor0"))
                 .ok_or_else(|| anyhow::anyhow!("bad --sampler"))?,
@@ -457,8 +486,11 @@ fn run_train_loop(
 }
 
 fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
+    let (codec, hot_mb) = parse_storage(args)?;
     let mut b = PipelineBuilder::new()
         .dataset(args.get_or("dataset", "tiny"))
+        .codec(codec)
+        .hot_mb(hot_mb)
         .mode(
             Mode::parse(args.get_or("mode", "coop"))
                 .ok_or_else(|| anyhow::anyhow!("bad --mode (coop|indep)"))?,
@@ -514,6 +546,20 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
         r.feat_fabric_bytes / 1024.0,
         r.derived_miss_rate
     );
+    println!(
+        "storage plane: codec {} ({} B/row wire, {} B/row decoded); hot tier {} MiB — \
+         {:.0} rows/batch ({:.1} KiB) served from PE memory (γ), hit rate {:.4}; \
+         prefetched {:.0} rows/batch ({:.1} KiB)",
+        pipe.feature_store().codec().name(),
+        pipe.feature_store().row_bytes(),
+        pipe.ds.feat_dim * 4,
+        pipe.cfg.hot_mb,
+        r.feat_hot_rows,
+        r.feat_hot_bytes / 1024.0,
+        r.hot_hit_rate,
+        r.prefetch_rows,
+        r.prefetch_bytes / 1024.0
+    );
     println!("dup factor @L: {:.3}", r.dup_factor);
     println!(
         "CPU wall: sampling {:.2} ms/batch + feature {:.2} ms/batch (per-PE elapsed, summed; \
@@ -529,8 +575,11 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
 /// reproducible at a fixed seed — `--exec`/`--prefetch` change real CPU
 /// scheduling, never the ledger.
 fn cmd_serve(args: &ArgMap) -> coopgnn::Result<()> {
+    let (codec, hot_mb) = parse_storage(args)?;
     let mut b = PipelineBuilder::new()
         .dataset(args.get_or("dataset", "tiny"))
+        .codec(codec)
+        .hot_mb(hot_mb)
         .mode(
             Mode::parse(args.get_or("mode", "coop"))
                 .ok_or_else(|| anyhow::anyhow!("bad --mode (coop|indep)"))?,
@@ -657,12 +706,14 @@ fn print_usage() {
          unknown flags and malformed values are errors.\n\
          \n\
          USAGE:\n\
-         \x20 coopgnn repro <fig3|table3|fig5a|fig5b|table4|table5|table6|table7|fig9|scaling|\n\
-         \x20        end2end|serve|all> [--out DIR] [--quick] [--seed N] [--artifacts DIR]\n\
-         \x20        [--exec serial|threaded]\n\
+         \x20 coopgnn repro <fig3|table3|fig5|fig5a|fig5b|table4|table5|table6|table7|fig9|\n\
+         \x20        scaling|end2end|serve|all> [--out DIR] [--quick] [--seed N]\n\
+         \x20        [--artifacts DIR] [--exec serial|threaded] [--codec f32|fp16|int8]\n\
+         \x20        [--hot-mb N]\n\
          \x20 coopgnn train [--backend host|pjrt] [--dataset NAME] [--steps N] [--kappa K|inf]\n\
          \x20        [--sampler ns|labor0|labor*|rw] [--fanout K|K,K,..] [--layers L] [--hidden H]\n\
          \x20        [--batch B] [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
+         \x20        [--codec f32|fp16|int8] [--hot-mb N]\n\
          \x20        (host backend: layered GNN compute plane, no artifacts needed;\n\
          \x20         --backend pjrt --config NAME takes shape/batch from the artifact)\n\
          \x20 coopgnn train --train-pes P [--mode coop|indep] [--dataset NAME] [--batch B]\n\
@@ -672,11 +723,12 @@ fn print_usage() {
          \x20         fabric gradient all-reduce, runs without PJRT artifacts)\n\
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
-         \x20        [--prefetch 0|1]\n\
+         \x20        [--prefetch 0|1] [--codec f32|fp16|int8] [--hot-mb N]\n\
          \x20 coopgnn serve [--dataset NAME] [--pes P] [--mode coop|indep] [--rate R]\n\
          \x20        [--slo-ms MS] [--batcher fixed|adaptive] [--duration-batches N]\n\
          \x20        [--batch B] [--workload open|closed] [--kappa K] [--cache ROWS]\n\
-         \x20        [--exec serial|threaded] [--prefetch 0|1]\n\
+         \x20        [--exec serial|threaded] [--prefetch 0|1] [--codec f32|fp16|int8]\n\
+         \x20        [--hot-mb N]\n\
          \x20        (online inference: virtual-time SLO-aware dynamic cooperative batching)\n\
          \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
          \x20 coopgnn info"

@@ -192,8 +192,7 @@ pub fn softmax_xent(
 
 /// First-maximum argmax with the NaN tie-break every consumer shares
 /// (a NaN entry never wins unless it is at index 0 and everything else
-/// is NaN too) — the single copy of what `Trainer::evaluate` and
-/// `ParallelTrainer::predict_row` used to duplicate.
+/// is NaN too) — one copy for every prediction consumer.
 pub fn argmax(row: &[f32]) -> usize {
     debug_assert!(!row.is_empty(), "argmax of empty row");
     let mut best = row[0];

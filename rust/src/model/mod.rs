@@ -25,7 +25,7 @@
 //! hidden activations from and which owned rows to serve), built by the
 //! pipeline stream alongside sampling. [`Predictor`] is a cheap
 //! parameter snapshot for forward-only consumers (evaluation, the
-//! serving plane) — it replaces the old `head()` / `predict_row` pair.
+//! serving plane).
 
 pub mod host;
 pub mod kernels;
@@ -271,10 +271,9 @@ pub trait GnnModel: Send + Sync {
 
 /// A cheap, clonable, `Send` parameter snapshot for forward-only
 /// consumers — what the serving executor ships to its prefetch thread
-/// and what evaluation runs through. Replaces the retired
-/// `ParallelTrainer::head()` / `predict_row()` pair: predictions run
-/// the full layered model over each PE's [`PeCompute`] blocks instead
-/// of a single-row head.
+/// and what evaluation runs through: predictions run the full layered
+/// model over each PE's [`PeCompute`] blocks instead of a single-row
+/// head.
 #[derive(Clone, Debug)]
 pub struct Predictor {
     dims: ModelDims,
@@ -320,9 +319,8 @@ impl Predictor {
 
     /// Degenerate single-row forward treating `x` as a vertex with no
     /// sampled neighbors (every aggregation is the self row at weight
-    /// 1); returns the class logits. Only the `#[deprecated]`
-    /// `predict_row` shim calls this; real predictions go through
-    /// [`Predictor::predict_minibatch`].
+    /// 1); returns the class logits. A diagnostic/test convenience —
+    /// real predictions go through [`Predictor::predict_minibatch`].
     pub fn logits_isolated(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.dims.d_in, "logits_isolated feature width");
         let mut h = x.to_vec();

@@ -6,7 +6,7 @@ use super::stream::EngineStream;
 use super::train_stream::Batching;
 use crate::coop::all_to_all::AllReduceStrategy;
 use crate::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
-use crate::feature::PartitionedFeatureStore;
+use crate::feature::{Codec, FeatureStore, PartitionedFeatureStore, TieredStore};
 use crate::graph::{datasets, partition, Csr, Dataset, Partition};
 use crate::model::ModelDims;
 use crate::sampling::{Kappa, SamplerConfig, SamplerKind, MAX_FANOUT_LAYERS};
@@ -96,8 +96,18 @@ pub struct PipelineConfig {
     pub cache_per_pe: Option<usize>,
     /// double-buffer the stream: a producer thread samples + gathers
     /// batch t+1 while the consumer processes batch t (`--prefetch 1`).
-    /// Bit-identical results either way; only the overlap changes.
+    /// Bit-identical results either way; only the overlap changes. With
+    /// a tiered store it additionally arms the depth-1 costmodel
+    /// prefetch seam (predicted next-batch seed rows promoted hot).
     pub prefetch: bool,
+    /// at-rest / on-wire row codec (`--codec {f32,fp16,int8}`).
+    /// [`Codec::F32`] keeps the PR-6 single-tier store and is
+    /// bit-identical to it; any other codec (or `hot_mb > 0`) builds a
+    /// [`TieredStore`].
+    pub codec: Codec,
+    /// hot-tier budget in MiB of decoded f32 rows (`--hot-mb N`); 0
+    /// disables the hot tier.
+    pub hot_mb: usize,
     pub warmup_batches: usize,
     pub measure_batches: usize,
     pub seed: u64,
@@ -121,6 +131,8 @@ impl Default for PipelineConfig {
             kappa: s.kappa,
             cache_per_pe: None,
             prefetch: false,
+            codec: Codec::F32,
+            hot_mb: 0,
             warmup_batches: 4,
             measure_batches: 16,
             seed: DEFAULT_SEED,
@@ -231,6 +243,8 @@ impl PipelineConfig {
             lr: None,
             exec: self.exec,
             batching: Batching::Single,
+            codec: self.codec,
+            hot_mb: self.hot_mb,
         }
     }
 }
@@ -329,6 +343,18 @@ impl PipelineBuilder {
         self
     }
 
+    /// At-rest / on-wire row codec (default [`Codec::F32`]).
+    pub fn codec(mut self, codec: Codec) -> Self {
+        self.cfg.codec = codec;
+        self
+    }
+
+    /// Hot-tier budget in MiB of decoded rows (default 0 = no hot tier).
+    pub fn hot_mb(mut self, mb: usize) -> Self {
+        self.cfg.hot_mb = mb;
+        self
+    }
+
     pub fn warmup_batches(mut self, n: usize) -> Self {
         self.cfg.warmup_batches = n;
         self
@@ -374,18 +400,34 @@ pub struct Pipeline {
     pub cfg: PipelineConfig,
     pub ds: Dataset,
     pub part: Partition,
-    /// lazily-materialized partitioned feature store, shared by every
-    /// stream this pipeline hands out (building one is an O(|V|·d) pass).
-    store: Mutex<Option<Arc<PartitionedFeatureStore>>>,
+    /// lazily-materialized feature store, shared by every stream this
+    /// pipeline hands out (building one is an O(|V|·d) pass). The
+    /// default config materializes the PR-6 [`PartitionedFeatureStore`];
+    /// a non-f32 codec or a hot-tier budget materializes a
+    /// [`TieredStore`] instead.
+    store: Mutex<Option<Arc<dyn FeatureStore>>>,
 }
 
 impl Pipeline {
-    /// The partitioned feature store for the current partition,
-    /// materializing it on first use.
-    pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
+    /// The feature store for the current partition, materializing it on
+    /// first use: plain partitioned f32 shards for the default config,
+    /// a compressed [`TieredStore`] when `cfg.codec != F32` or
+    /// `cfg.hot_mb > 0`.
+    pub fn feature_store(&self) -> Arc<dyn FeatureStore> {
         let mut guard = self.store.lock().unwrap();
         guard
-            .get_or_insert_with(|| Arc::new(PartitionedFeatureStore::build(&self.ds, &self.part)))
+            .get_or_insert_with(|| {
+                if self.cfg.codec == Codec::F32 && self.cfg.hot_mb == 0 {
+                    Arc::new(PartitionedFeatureStore::build(&self.ds, &self.part))
+                } else {
+                    Arc::new(TieredStore::build(
+                        &self.ds,
+                        &self.part,
+                        self.cfg.codec,
+                        self.cfg.hot_mb * (1 << 20),
+                    ))
+                }
+            })
             .clone()
     }
 
@@ -447,6 +489,20 @@ impl Pipeline {
     pub fn set_num_pes(&mut self, num_pes: usize) {
         self.cfg.num_pes = num_pes;
         self.part = self.cfg.partitioner.build(&self.ds.graph, num_pes, self.cfg.seed);
+        *self.store.lock().unwrap() = None;
+    }
+
+    /// Change the row codec (invalidates the cached feature store — the
+    /// shards must be re-encoded). Codec sweeps in the repro harnesses
+    /// go through here rather than poking `cfg.codec` directly.
+    pub fn set_codec(&mut self, codec: Codec) {
+        self.cfg.codec = codec;
+        *self.store.lock().unwrap() = None;
+    }
+
+    /// Change the hot-tier budget (invalidates the cached feature store).
+    pub fn set_hot_mb(&mut self, mb: usize) {
+        self.cfg.hot_mb = mb;
         *self.store.lock().unwrap() = None;
     }
 }
@@ -519,6 +575,25 @@ mod tests {
         assert_eq!(pipe.part.num_parts, 5);
         pipe.set_partitioner(Partitioner::Multilevel);
         assert_eq!(pipe.part.num_parts, 5);
+    }
+
+    #[test]
+    fn codec_config_selects_store_kind() {
+        // default config → PR-6 single-tier f32 store
+        let pipe = PipelineBuilder::new().dataset("tiny").build().unwrap();
+        let store = pipe.feature_store();
+        assert_eq!(store.codec(), Codec::F32);
+        assert_eq!(store.row_bytes(), pipe.ds.feat_dim * 4);
+        // int8 + hot budget → tiered compressed store with wire row size
+        let mut pipe2 =
+            PipelineBuilder::new().dataset("tiny").codec(Codec::Int8).hot_mb(1).build().unwrap();
+        let tiered = pipe2.feature_store();
+        assert_eq!(tiered.codec(), Codec::Int8);
+        assert_eq!(tiered.row_bytes(), pipe2.ds.feat_dim + 5);
+        // set_codec invalidates the cached store
+        pipe2.set_codec(Codec::F32);
+        pipe2.set_hot_mb(0);
+        assert_eq!(pipe2.feature_store().row_bytes(), pipe2.ds.feat_dim * 4);
     }
 
     #[test]

@@ -54,17 +54,30 @@ pub struct PeWork {
     pub counts_cross: Vec<u64>,
     /// vertex rows requested through this PE's cache.
     pub requested: u64,
-    /// cache misses (rows read from storage at β bandwidth).
+    /// cache misses (rows read from a store tier).
     pub misses: u64,
     /// feature rows crossing the fabric (cooperative; α bandwidth).
     pub fabric: u64,
-    /// bytes of one feature row for this stream (constant per stream;
-    /// lets the reduction derive byte-based rates without the store).
+    /// *wire* bytes of one encoded feature row for this stream (constant
+    /// per stream; lets the reduction derive byte-based rates without
+    /// the store).
     pub row_bytes: u64,
-    /// f32 bytes actually copied out of storage this batch (β).
+    /// floats per feature row (the decoded width consumers compute on —
+    /// no longer derivable from `row_bytes` once a codec is active).
+    pub dim: u64,
+    /// wire bytes actually copied out of cold storage this batch (β).
     pub bytes_from_storage: u64,
-    /// f32 bytes that arrived over the fabric this batch (α).
+    /// wire bytes that arrived over the fabric this batch (α).
     pub fabric_bytes: u64,
+    /// cache misses served by the store's hot tier this batch (γ).
+    pub hot_rows: u64,
+    /// decoded bytes those hot fills moved.
+    pub hot_bytes: u64,
+    /// rows the costmodel-driven prefetcher promoted into the hot tier
+    /// ahead of this batch (charged to the stream's first record).
+    pub prefetch_rows: u64,
+    /// wire bytes those prefetch fetches pulled from cold storage.
+    pub prefetch_bytes: u64,
     /// this PE's dense row-major input-feature buffer, in
     /// `feature_vertices` order (the payload consumers execute on).
     pub features: Option<Vec<f32>>,
@@ -221,6 +234,7 @@ pub(crate) fn coop_pe_compute(layers: usize, pe_layers: &[&PeLayer]) -> PeComput
 pub(crate) fn coop_pe_work(
     layers: usize,
     pe_layers: &[&PeLayer],
+    dim: u64,
     row_bytes: u64,
     load: PeLoad,
 ) -> PeWork {
@@ -240,8 +254,13 @@ pub(crate) fn coop_pe_work(
         misses: load.misses,
         fabric: load.fabric_rows,
         row_bytes,
+        dim,
         bytes_from_storage: load.bytes_from_storage,
         fabric_bytes: load.fabric_bytes,
+        hot_rows: load.hot_rows,
+        hot_bytes: load.hot_bytes,
+        prefetch_rows: 0,
+        prefetch_bytes: 0,
         features: Some(load.features),
         feature_vertices: Some(pe_layers[layers - 1].tilde.clone()),
         input_vertices: None,
@@ -258,6 +277,7 @@ pub(crate) fn indep_pe_work(
     mfg: &Mfg,
     layers: usize,
     keep_inputs: bool,
+    dim: u64,
     row_bytes: u64,
     load: PeLoad,
 ) -> PeWork {
@@ -270,8 +290,13 @@ pub(crate) fn indep_pe_work(
         misses: load.misses,
         fabric: 0,
         row_bytes,
+        dim,
         bytes_from_storage: load.bytes_from_storage,
         fabric_bytes: 0,
+        hot_rows: load.hot_rows,
+        hot_bytes: load.hot_bytes,
+        prefetch_rows: 0,
+        prefetch_bytes: 0,
         features: Some(load.features),
         feature_vertices: Some(mfg.input_vertices().to_vec()),
         input_vertices: if keep_inputs { Some(mfg.input_vertices().to_vec()) } else { None },
@@ -288,10 +313,10 @@ pub(crate) fn indep_pe_work(
 /// Pull one independent-mode PE's input rows through its cache into a
 /// [`PeLoad`] (no fabric traffic). Shared with the PR-1 oracle loops in
 /// `coop::engine::tests`.
-pub(crate) fn load_indep_pe(
+pub(crate) fn load_indep_pe<S: FeatureStore + ?Sized>(
     vs: &[VertexId],
     cache: &mut LruCache,
-    store: &PartitionedFeatureStore,
+    store: &S,
 ) -> PeLoad {
     let mut features = Vec::new();
     let stats = load_pe(vs, cache, store, &mut features);
@@ -299,6 +324,8 @@ pub(crate) fn load_indep_pe(
         requested: stats.requested,
         misses: stats.misses,
         bytes_from_storage: stats.bytes_from_storage,
+        hot_rows: stats.hot_rows,
+        hot_bytes: stats.hot_bytes,
         fabric_rows: 0,
         fabric_bytes: 0,
         features,
@@ -342,13 +369,18 @@ pub struct EngineStream<'d> {
     warmup_batches: usize,
     graph: &'d Csr,
     part: &'d Partition,
-    store: Arc<PartitionedFeatureStore>,
+    store: Arc<dyn FeatureStore>,
     shards: Vec<Vec<VertexId>>,
     samplers: Vec<Sampler<'d>>,
     caches: Vec<LruCache>,
     seed_rngs: Vec<Pcg64>,
     /// live fabric endpoints (cooperative + threaded only).
     endpoints: Vec<Option<PeEndpoint>>,
+    /// when set, each `next_batch` predicts the *next* batch's seed
+    /// rows (exact — the per-PE seed RNG streams are deterministic) and
+    /// promotes them into the store's hot tier under the costmodel's
+    /// cold-bandwidth budget. A no-op for untiered stores.
+    prefetch: bool,
     index: usize,
 }
 
@@ -359,7 +391,7 @@ impl<'d> EngineStream<'d> {
     /// store — reuse one via [`EngineStream::with_store`] when standing
     /// up many streams over the same dataset + partition.
     pub fn new(dataset: &'d Dataset, part: &'d Partition, cfg: &EngineConfig) -> EngineStream<'d> {
-        let store = Arc::new(PartitionedFeatureStore::build(dataset, part));
+        let store: Arc<dyn FeatureStore> = Arc::new(PartitionedFeatureStore::build(dataset, part));
         EngineStream::with_store(dataset, part, cfg, store)
     }
 
@@ -369,13 +401,14 @@ impl<'d> EngineStream<'d> {
         dataset: &'d Dataset,
         part: &'d Partition,
         cfg: &EngineConfig,
-        store: Arc<PartitionedFeatureStore>,
+        store: Arc<dyn FeatureStore>,
     ) -> EngineStream<'d> {
         assert_eq!(part.num_parts, cfg.num_pes, "partition/PE mismatch");
         assert!(cfg.sampler.layers >= 1, "engine needs at least one GNN layer");
         assert_eq!(store.dim(), dataset.feat_dim, "store/dataset row shape mismatch");
         let p = cfg.num_pes;
         let g = &dataset.graph;
+        let codec = store.codec();
         let endpoints: Vec<Option<PeEndpoint>> =
             if cfg.mode == Mode::Cooperative && cfg.exec == ExecMode::Threaded {
                 Fabric::endpoints(p).into_iter().map(Some).collect()
@@ -394,16 +427,26 @@ impl<'d> EngineStream<'d> {
             shards: make_shards(dataset, part, cfg.mode, p),
             samplers: (0..p).map(|_| cfg.sampler.build(cfg.kind, g, cfg.seed)).collect(),
             caches: (0..p)
-                .map(|_| LruCache::with_rows(cfg.cache_per_pe, dataset.feat_dim))
+                .map(|_| {
+                    // cache arenas hold whatever the store's wire format
+                    // is — encoded rows shrink the resident footprint by
+                    // the codec ratio
+                    if codec == crate::feature::Codec::F32 {
+                        LruCache::with_rows(cfg.cache_per_pe, dataset.feat_dim)
+                    } else {
+                        LruCache::with_encoded(cfg.cache_per_pe, dataset.feat_dim, codec)
+                    }
+                })
                 .collect(),
             seed_rngs: (0..p).map(|pe| Pcg64::new(pe_seed(cfg.seed, pe))).collect(),
             endpoints,
+            prefetch: cfg.prefetch,
             index: 0,
         }
     }
 
-    /// The partitioned feature store backing this stream.
-    pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
+    /// The feature store backing this stream.
+    pub fn feature_store(&self) -> Arc<dyn FeatureStore> {
         Arc::clone(&self.store)
     }
 
@@ -469,6 +512,29 @@ impl<'d> EngineStream<'d> {
         self.batch_inner(per_pe_seeds, false)
     }
 
+    /// Predict the **next** batch's per-PE seed draws — exact, not
+    /// heuristic: the per-PE seed-RNG streams are deterministic, so a
+    /// clone of each replays tomorrow's `sample_distinct` today — and
+    /// promote those rows into the store's hot tier, bounded by how many
+    /// rows the costmodel says cold storage can deliver inside one
+    /// prefetch window. Returns `(rows fetched, wire bytes pulled)`;
+    /// both are 0 for untiered stores, so the default path only pays a
+    /// cheap RNG replay.
+    fn prefetch_next(&mut self) -> (u64, u64) {
+        let b = self.batch_per_pe;
+        let mut predicted: Vec<VertexId> = Vec::new();
+        for (shard, rng) in self.shards.iter().zip(self.seed_rngs.iter()) {
+            let mut probe = rng.clone();
+            let k = b.min(shard.len());
+            predicted.extend(
+                probe.sample_distinct(shard.len(), k).into_iter().map(|i| shard[i as usize]),
+            );
+        }
+        let budget = crate::costmodel::default_prefetch_row_budget(self.store.row_bytes());
+        let rows = self.store.prefetch_into_hot(&predicted, budget);
+        (rows, rows * self.store.row_bytes() as u64)
+    }
+
     /// Shared core of [`MinibatchStream::next_batch`] and
     /// [`EngineStream::batch_for_seeds`]: `keep_inputs` retains each
     /// independent-mode PE's `S^L` list for the engine's
@@ -495,6 +561,7 @@ impl<'d> EngineStream<'d> {
         let p_count = self.samplers.len();
         let layers = self.layers;
         let row_bytes = self.store.row_bytes() as u64;
+        let dim = self.store.dim() as u64;
 
         let (mut per_pe, samp_ms, feat_ms): (Vec<PeWork>, f64, f64) = match self.mode {
             Mode::Cooperative => {
@@ -526,7 +593,7 @@ impl<'d> EngineStream<'d> {
                     .map(|(p, load)| {
                         let pe_layers: Vec<&PeLayer> =
                             (0..layers).map(|l| &coop.layers[l][p]).collect();
-                        coop_pe_work(layers, &pe_layers, row_bytes, load)
+                        coop_pe_work(layers, &pe_layers, dim, row_bytes, load)
                     })
                     .collect();
                 (per_pe, samp_ms, t.elapsed_ms())
@@ -541,8 +608,8 @@ impl<'d> EngineStream<'d> {
                     .iter()
                     .zip(self.caches.iter_mut())
                     .map(|(mfg, cache)| {
-                        let load = load_indep_pe(mfg.input_vertices(), cache, &self.store);
-                        indep_pe_work(mfg, layers, keep_inputs, row_bytes, load)
+                        let load = load_indep_pe(mfg.input_vertices(), cache, &*self.store);
+                        indep_pe_work(mfg, layers, keep_inputs, dim, row_bytes, load)
                     })
                     .collect();
                 (per_pe, samp_ms, t.elapsed_ms())
@@ -578,8 +645,9 @@ impl<'d> EngineStream<'d> {
         let layers = self.layers;
         let graph = self.graph;
         let part = self.part;
-        let store: &PartitionedFeatureStore = &self.store;
+        let store: &dyn FeatureStore = &*self.store;
         let row_bytes = store.row_bytes() as u64;
+        let dim = store.dim() as u64;
         let start = std::sync::Barrier::new(self.samplers.len());
         let start = &start;
         let results: Vec<(PeWork, f64)> = std::thread::scope(|scope| {
@@ -615,7 +683,8 @@ impl<'d> EngineStream<'d> {
                                     store,
                                 );
                                 let pe_layers: Vec<&PeLayer> = ps.layers.iter().collect();
-                                let mut pw = coop_pe_work(layers, &pe_layers, row_bytes, load);
+                                let mut pw =
+                                    coop_pe_work(layers, &pe_layers, dim, row_bytes, load);
                                 pw.samp_ms = samp_ms;
                                 pw.feat_ms = t.elapsed_ms();
                                 pw
@@ -627,7 +696,7 @@ impl<'d> EngineStream<'d> {
                                 let t = Timer::start();
                                 let load = load_indep_pe(mfg.input_vertices(), cache, store);
                                 let mut pw =
-                                    indep_pe_work(&mfg, layers, keep_inputs, row_bytes, load);
+                                    indep_pe_work(&mfg, layers, keep_inputs, dim, row_bytes, load);
                                 pw.samp_ms = samp_ms;
                                 pw.feat_ms = t.elapsed_ms();
                                 pw
@@ -654,7 +723,16 @@ impl MinibatchStream for EngineStream<'_> {
         // lists are not retained
         let measuring = self.index >= self.warmup_batches;
         let per_pe_seeds = self.draw_seeds();
-        self.batch_inner(per_pe_seeds, measuring)
+        // between-batch serial point: promote the (exactly predicted)
+        // next batch's seed rows into the hot tier before this batch's
+        // gather — tier classification stays stable within the batch
+        let (pf_rows, pf_bytes) = if self.prefetch { self.prefetch_next() } else { (0, 0) };
+        let mut mb = self.batch_inner(per_pe_seeds, measuring);
+        if pf_rows > 0 {
+            mb.per_pe[0].prefetch_rows = pf_rows;
+            mb.per_pe[0].prefetch_bytes = pf_bytes;
+        }
+        mb
     }
 
     fn num_pes(&self) -> usize {

@@ -33,7 +33,7 @@
 
 use super::stream::{Minibatch, MinibatchStream, PeWork};
 use crate::coop::engine::{ExecMode, Mode};
-use crate::feature::{FeatureStore, PartitionedFeatureStore};
+use crate::feature::{Codec, FeatureStore, PartitionedFeatureStore, Tier, TieredStore};
 use crate::graph::{Csr, Dataset, VertexId};
 use crate::sampling::{block, Mfg, Sampler, SamplerConfig, SamplerKind};
 use crate::util::rng::Pcg64;
@@ -68,10 +68,12 @@ pub struct TrainStream<'d> {
     batching: Batching,
     /// persistent dependent-RNG sampler (Single batching only).
     sampler: Option<Sampler<'d>>,
-    /// materialized feature rows (single shard: training reads the whole
-    /// matrix from "storage" every batch — there is no cache tier on the
-    /// training path).
-    store: Arc<PartitionedFeatureStore>,
+    /// materialized feature rows (single shard by default: training
+    /// reads the whole matrix from "storage" every batch — there is no
+    /// LRU tier on the training path; `--codec`/`--hot-mb` swap in a
+    /// compressed [`TieredStore`] whose hot tier absorbs part of the
+    /// traffic).
+    store: Arc<dyn FeatureStore>,
     seed_rng: Pcg64,
     step: u64,
 }
@@ -86,9 +88,34 @@ impl<'d> TrainStream<'d> {
         exec: ExecMode,
         batching: Batching,
     ) -> TrainStream<'d> {
+        TrainStream::with_codec(ds, kind, cfg, batch, seed, exec, batching, Codec::F32, 0)
+    }
+
+    /// [`TrainStream::new`] with an explicit storage recipe: the default
+    /// `(F32, 0)` keeps the plain single-shard store (bit-identical to
+    /// PR 6); any other codec or a nonzero hot budget builds a
+    /// single-partition [`TieredStore`], so training reads quantized
+    /// rows decoded on gather.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_codec(
+        ds: &'d Dataset,
+        kind: SamplerKind,
+        cfg: SamplerConfig,
+        batch: usize,
+        seed: u64,
+        exec: ExecMode,
+        batching: Batching,
+        codec: Codec,
+        hot_mb: usize,
+    ) -> TrainStream<'d> {
         let sampler = match batching {
             Batching::Single => Some(cfg.build(kind, &ds.graph, seed)),
             Batching::IndepMerged { .. } => None,
+        };
+        let store: Arc<dyn FeatureStore> = if codec == Codec::F32 && hot_mb == 0 {
+            Arc::new(PartitionedFeatureStore::single_shard(ds))
+        } else {
+            Arc::new(TieredStore::single(ds, codec, hot_mb * (1 << 20)))
         };
         TrainStream {
             ds,
@@ -99,7 +126,7 @@ impl<'d> TrainStream<'d> {
             exec,
             batching,
             sampler,
-            store: Arc::new(PartitionedFeatureStore::single_shard(ds)),
+            store,
             seed_rng: Pcg64::new(seed ^ SEED_DRAW_SALT),
             step: 0,
         }
@@ -119,7 +146,7 @@ impl<'d> TrainStream<'d> {
 
     /// The feature store backing this stream (shared with the trainer's
     /// evaluation path).
-    pub fn feature_store(&self) -> Arc<PartitionedFeatureStore> {
+    pub fn feature_store(&self) -> Arc<dyn FeatureStore> {
         Arc::clone(&self.store)
     }
 
@@ -205,8 +232,12 @@ impl MinibatchStream for TrainStream<'_> {
         let feat_ms = t.elapsed_ms();
         let wall_ms = wall.elapsed_ms();
         let layers = self.cfg.layers;
+        let dim = self.store.dim() as u64;
         let row_bytes = self.store.row_bytes() as u64;
         let n = inputs.len() as u64;
+        // rows the hot tier serves decoded never touch storage — split
+        // the β charge accordingly (0 hot rows for the default store)
+        let hot = inputs.iter().filter(|&&v| self.store.tier_of(v) == Tier::Hot).count() as u64;
         let work = PeWork {
             counts_s: mfg.vertex_counts().iter().map(|&c| c as u64).collect(),
             counts_e: mfg.edge_counts().iter().map(|&c| c as u64).collect(),
@@ -215,9 +246,14 @@ impl MinibatchStream for TrainStream<'_> {
             requested: n,
             misses: n,
             fabric: 0,
+            dim,
             row_bytes,
-            bytes_from_storage: n * row_bytes,
+            bytes_from_storage: (n - hot) * row_bytes,
             fabric_bytes: 0,
+            hot_rows: hot,
+            hot_bytes: hot * dim * 4,
+            prefetch_rows: 0,
+            prefetch_bytes: 0,
             features: Some(features),
             feature_vertices: Some(inputs),
             input_vertices: None,
@@ -349,5 +385,45 @@ mod tests {
         let mut want = Vec::new();
         store.gather(vs, &mut want);
         assert_eq!(feats, &want, "shipped bytes == store rows");
+    }
+
+    #[test]
+    fn codec_stream_trains_on_decoded_quantized_rows() {
+        // same recipe, two storage configs: the quantized stream samples
+        // the identical batch (storage never touches RNG state), ships
+        // near-identical decoded features, and charges wire bytes split
+        // across the hot/cold tiers
+        let ds = crate::graph::datasets::build("tiny", 3).unwrap();
+        let cfg = SamplerConfig::default();
+        let mk = |codec, hot_mb| {
+            TrainStream::with_codec(
+                &ds,
+                SamplerKind::Labor0,
+                cfg,
+                32,
+                7,
+                ExecMode::Serial,
+                Batching::Single,
+                codec,
+                hot_mb,
+            )
+        };
+        let a = mk(Codec::F32, 0).next_batch();
+        let b = mk(Codec::Int8, 1).next_batch();
+        let (wa, wb) = (&a.per_pe[0], &b.per_pe[0]);
+        assert_eq!(wa.feature_vertices, wb.feature_vertices, "sampling must not see storage");
+        assert_eq!(wb.row_bytes as usize, ds.feat_dim + 5, "int8 wire rows");
+        assert_eq!(
+            wb.bytes_from_storage,
+            (wb.misses - wb.hot_rows) * wb.row_bytes,
+            "cold charge excludes hot fills"
+        );
+        assert_eq!(wb.hot_bytes, wb.hot_rows * ds.feat_dim as u64 * 4);
+        let (fa, fb) = (wa.features.as_ref().unwrap(), wb.features.as_ref().unwrap());
+        assert_eq!(fa.len(), fb.len());
+        let worst =
+            fa.iter().zip(fb).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(worst > 0.0, "int8 must actually quantize");
+        assert!(worst < 0.01, "int8 decode drifted {worst} from f32 truth");
     }
 }

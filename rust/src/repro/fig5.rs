@@ -18,6 +18,7 @@
 
 use super::Ctx;
 use crate::coop::engine::Mode;
+use crate::feature::Codec;
 use crate::pipeline::PipelineBuilder;
 use crate::sampling::Kappa;
 use crate::util::csv::Table;
@@ -39,7 +40,17 @@ pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
     };
     let mut table = Table::new(
         "Figure 5a: 1-PE LRU miss rate vs κ (LABOR-0, b=1024; byte-derived)",
-        &["dataset", "kappa", "miss_rate", "requested/batch", "misses/batch", "storage_KiB/batch"],
+        &[
+            "dataset",
+            "kappa",
+            "miss_rate",
+            "requested/batch",
+            "misses/batch",
+            "storage_KiB/batch",
+            "codec",
+            "f32_KiB/batch",
+            "bytes_vs_f32",
+        ],
     );
     for ds_name in ds_names {
         let mut pipe = PipelineBuilder::new()
@@ -50,13 +61,22 @@ pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
             .warmup_batches(if ctx.quick { 3 } else { 8 })
             .measure_batches(if ctx.quick { 6 } else { 16 })
             .seed(ctx.seed)
+            .codec(ctx.codec)
+            .hot_mb(ctx.hot_mb)
             .build()?;
         pipe.cfg.batch_per_pe = 1024.min(pipe.ds.train.len().max(64));
         pipe.cfg.cache_per_pe = Some(pipe.ds.cache_size);
+        let dim = pipe.ds.feat_dim;
         let mut prev = 1.0f64;
         for &kappa in KAPPAS {
             pipe.cfg.kappa = kappa;
             let r = pipe.engine_report();
+            // What the same cold fills would have cost at decoded f32 width.
+            // Fill *counts* are codec-invariant (the sampler never sees the
+            // wire format), so the ratio is a pure wire-compression figure;
+            // a hot tier (--hot-mb) additionally drops it by absorbing
+            // fills into PE memory.
+            let f32_bytes = r.feat_misses * (dim * 4) as f64;
             table.push_row(&[
                 ds_name.to_string(),
                 kappa.label(),
@@ -64,6 +84,12 @@ pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.0}", r.feat_requested),
                 format!("{:.0}", r.feat_misses),
                 format!("{:.1}", r.feat_storage_bytes / 1024.0),
+                ctx.codec.name().to_string(),
+                format!("{:.1}", f32_bytes / 1024.0),
+                format!(
+                    "{:.4}",
+                    if f32_bytes > 0.0 { r.feat_storage_bytes / f32_bytes } else { 1.0 }
+                ),
             ]);
             // shape check (warn, don't fail: small caches are noisy)
             if r.derived_miss_rate > prev * 1.10 {
@@ -87,7 +113,7 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
         if ctx.quick { &["flickr-s"] } else { &["papers-s", "mag-s", "reddit-s", "yelp-s"] };
     let mut table = Table::new(
         "Figure 5b: 4 cooperating PEs, per-PE cache, miss rate vs κ (LABOR-0, b=1024/PE; byte-derived)",
-        &["dataset", "kappa", "miss_rate", "fabric_rows/batch", "fabric_KiB/batch"],
+        &["dataset", "kappa", "miss_rate", "fabric_rows/batch", "fabric_KiB/batch", "codec", "fabric_vs_f32"],
     );
     for ds_name in ds_names {
         let mut pipe = PipelineBuilder::new()
@@ -96,6 +122,8 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
             .exec(ctx.exec)
             .num_pes(4)
             .seed(ctx.seed)
+            .codec(ctx.codec)
+            .hot_mb(ctx.hot_mb)
             .build()?;
         pipe.cfg.batch_per_pe = 1024.min(pipe.ds.train.len() / 4).max(32);
         // Cache sizing: the paper gives each GPU a 1M-row cache, ~8x its
@@ -112,6 +140,11 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
         pipe.cfg.cache_per_pe = Some(((probe.feat_requested * 1.15) as usize).max(64));
         pipe.cfg.warmup_batches = if ctx.quick { 3 } else { 8 };
         pipe.cfg.measure_batches = if ctx.quick { 6 } else { 16 };
+        // Fabric payloads ship the *stored* encoding (decode happens at the
+        // consumer), so the on-wire per-row cost vs f32 is exactly the
+        // codec's row geometry.
+        let fabric_vs_f32 =
+            pipe.feature_store().row_bytes() as f64 / (pipe.ds.feat_dim * 4) as f64;
         for &kappa in KAPPAS {
             pipe.cfg.kappa = kappa;
             let r = pipe.engine_report();
@@ -121,6 +154,8 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.4}", r.derived_miss_rate),
                 format!("{:.0}", r.feat_fabric_rows),
                 format!("{:.1}", r.feat_fabric_bytes / 1024.0),
+                ctx.codec.name().to_string(),
+                format!("{:.4}", fabric_vs_f32),
             ]);
         }
         // write incrementally: dataset builds are slow, keep partial
@@ -152,6 +187,42 @@ mod tests {
         // require a clear but modest drop here; the full (non-quick) run
         // exhibits the 4x reddit-style drops recorded in EXPERIMENTS.md.
         assert!(last < first * 0.92, "κ=∞ miss {last} must beat κ=1 {first}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Acceptance gate for the storage plane: at identical sampled
+    /// subgraphs (count columns bit-equal across codecs), int8 rows cut
+    /// the measured storage bytes/batch by >= 3x vs f32.
+    #[test]
+    fn fig5a_codec_columns_report_wire_compression() {
+        let dir = std::env::temp_dir().join("coopgnn_fig5a_codec_test");
+        let run = |codec: Codec, sub: &str| -> Vec<String> {
+            let ctx = Ctx { out: dir.join(sub), quick: true, codec, ..Default::default() };
+            run_fig5a(&ctx).unwrap();
+            let csv = std::fs::read_to_string(dir.join(sub).join("fig5a.csv")).unwrap();
+            csv.lines().skip(1).map(|l| l.to_string()).collect()
+        };
+        let f32_rows = run(Codec::F32, "f32");
+        let int8_rows = run(Codec::Int8, "int8");
+        assert_eq!(f32_rows.len(), int8_rows.len());
+        for (a, b) in f32_rows.iter().zip(&int8_rows) {
+            let a: Vec<&str> = a.split(',').collect();
+            let b: Vec<&str> = b.split(',').collect();
+            // miss_rate, requested/batch, misses/batch are codec-invariant
+            for idx in 2..=4 {
+                assert_eq!(a[idx], b[idx], "count column {idx} must not move with the codec");
+            }
+            let kib = |r: &[&str]| -> f64 { r[5].parse().unwrap() };
+            assert!(
+                kib(&a) >= 3.0 * kib(&b),
+                "int8 must cut storage KiB >= 3x (f32 {} vs int8 {})",
+                a[5],
+                b[5]
+            );
+            assert_eq!(a[8], "1.0000", "f32 run must report the identity ratio");
+            let ratio: f64 = b[8].parse().unwrap();
+            assert!(ratio <= 1.0 / 3.0, "int8 bytes_vs_f32 {ratio} must be <= 1/3");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -30,6 +30,7 @@ pub mod end2end;
 pub mod serve;
 
 use crate::coop::engine::ExecMode;
+use crate::feature::Codec;
 use std::path::PathBuf;
 
 /// Shared harness context. Each harness lowers this into a
@@ -47,6 +48,12 @@ pub struct Ctx {
     /// engine execution mode (thread-per-PE by default; `--exec serial`
     /// falls back to the bit-identical reference loop).
     pub exec: ExecMode,
+    /// at-rest / on-wire row codec for the storage-sensitive harnesses
+    /// (`fig5`, `serve`); they additionally sweep the other codecs into
+    /// comparison columns/rows.
+    pub codec: Codec,
+    /// hot-tier budget in MiB (0 = untiered).
+    pub hot_mb: usize,
 }
 
 impl Default for Ctx {
@@ -57,6 +64,8 @@ impl Default for Ctx {
             seed: crate::pipeline::DEFAULT_SEED,
             artifacts: PathBuf::from("artifacts"),
             exec: ExecMode::Threaded,
+            codec: Codec::F32,
+            hot_mb: 0,
         }
     }
 }
@@ -68,6 +77,9 @@ pub fn run(id: &str, ctx: &Ctx) -> crate::Result<()> {
         "table3" => table3::run(ctx),
         "fig5a" => fig5::run_fig5a(ctx),
         "fig5b" => fig5::run_fig5b(ctx),
+        // both cache-miss panels in one go (the storage-plane smoke
+        // target: `repro fig5 --quick --codec int8`)
+        "fig5" => fig5::run_fig5a(ctx).and_then(|()| fig5::run_fig5b(ctx)),
         "table4" | "table5" | "table6" => table4::run(ctx),
         "table7" => table7::run(ctx),
         "fig9" => fig9::run(ctx),
@@ -86,8 +98,8 @@ pub fn run(id: &str, ctx: &Ctx) -> crate::Result<()> {
             Ok(())
         }
         other => anyhow::bail!(
-            "unknown experiment `{other}`; try fig3 table3 fig5a fig5b table4 table7 fig9 scaling \
-             end2end serve all"
+            "unknown experiment `{other}`; try fig3 table3 fig5 fig5a fig5b table4 table7 fig9 \
+             scaling end2end serve all"
         ),
     }
 }

@@ -19,6 +19,7 @@
 
 use super::Ctx;
 use crate::coop::engine::Mode;
+use crate::feature::Codec;
 use crate::pipeline::PipelineBuilder;
 use crate::serve::{BatcherKind, ServeConfig, ServeReport};
 use crate::util::csv::Table;
@@ -48,6 +49,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "bytes_per_req",
             "slo_viol_pct",
             "coop_adaptive_vs_indep_fixed_bytes",
+            "codec",
         ],
     );
     for &p in pe_counts {
@@ -60,6 +62,8 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                     .exec(ctx.exec)
                     .num_pes(p)
                     .seed(ctx.seed)
+                    .codec(ctx.codec)
+                    .hot_mb(ctx.hot_mb)
                     .build()?;
                 let scfg = ServeConfig {
                     rate_per_s: rate,
@@ -109,8 +113,60 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.0}", r.bytes_per_req()),
                 format!("{:.2}", r.slo_violation_rate * 100.0),
                 ratio,
+                ctx.codec.name().to_string(),
             ]);
         }
+    }
+    // Codec sweep — the storage plane's serving acceptance gate. A
+    // saturated fixed cooperative arm (offered load far above service
+    // capacity) admits every batch at exactly its cap, in arrival order,
+    // so the admitted request sets are identical across codecs and any
+    // bytes/request difference is purely the wire format. int8 rows
+    // (dim + 5 bytes) must cut bytes/request >= 3x vs f32 (dim x 4).
+    let p = pe_counts[0];
+    for codec in Codec::all() {
+        let pipe = PipelineBuilder::new()
+            .dataset(ds_name)
+            .mode(Mode::Cooperative)
+            .exec(ctx.exec)
+            .num_pes(p)
+            .seed(ctx.seed)
+            .codec(codec)
+            .hot_mb(ctx.hot_mb)
+            .build()?;
+        let scfg = ServeConfig {
+            rate_per_s: 50_000.0,
+            slo_us,
+            batcher: BatcherKind::Fixed,
+            duration_batches: duration,
+            fixed_batch_per_pe: fixed_per_pe,
+            ..Default::default()
+        };
+        let out = pipe.server(scfg)?.run();
+        let r = out.report;
+        println!(
+            "serve codec sweep: {} P={p} done ({} requests, {:.0} B/req)",
+            codec.name(),
+            r.served,
+            r.bytes_per_req()
+        );
+        table.push_row(&[
+            p.to_string(),
+            "Coop".to_string(),
+            "fixed-sat".to_string(),
+            r.served.to_string(),
+            format!("{:.1}", r.mean_batch),
+            format!("{:.2}", r.p50_ms),
+            format!("{:.2}", r.p90_ms),
+            format!("{:.2}", r.p99_ms),
+            format!("{:.0}", r.requests_per_s),
+            format!("{:.1}", r.storage_bytes_per_req / 1024.0),
+            format!("{:.1}", r.fabric_bytes_per_req / 1024.0),
+            format!("{:.0}", r.bytes_per_req()),
+            format!("{:.2}", r.slo_violation_rate * 100.0),
+            "-".to_string(),
+            codec.name().to_string(),
+        ]);
     }
     table.write(&ctx.out, "serve")?;
     println!("{}", table.to_markdown());
@@ -141,9 +197,9 @@ mod tests {
             .skip(1)
             .map(|l| l.split(',').map(|c| c.to_string()).collect())
             .collect();
-        assert_eq!(rows.len(), 4, "2 modes x 2 batchers at 1 PE count: {csv}");
+        assert_eq!(rows.len(), 7, "2 modes x 2 batchers at 1 PE count + 3 codec-sweep rows: {csv}");
         let mut bytes = std::collections::HashMap::new();
-        for r in &rows {
+        for r in &rows[..4] {
             let served: u64 = r[3].parse().unwrap();
             let p99: f64 = r[7].parse().unwrap();
             let b_req: f64 = r[11].parse().unwrap();
@@ -163,6 +219,24 @@ mod tests {
             "adaptive cooperative must beat fixed independent on bytes/request: \
              {coop_adaptive} vs {indep_fixed}"
         );
+        // the codec sweep: saturated fixed coop arm per codec, identical
+        // admitted request sets, int8 cutting wire bytes/request >= 3x
+        let sweep = &rows[4..];
+        let mut by_codec = std::collections::HashMap::new();
+        for r in sweep {
+            assert_eq!(r[2], "fixed-sat", "sweep rows use the saturated fixed arm: {r:?}");
+            assert_eq!(
+                r[3], sweep[0][3],
+                "admitted request sets must be codec-invariant: {r:?}"
+            );
+            by_codec.insert(r[14].clone(), r[11].parse::<f64>().unwrap());
+        }
+        let (f32b, fp16b, int8b) = (by_codec["f32"], by_codec["fp16"], by_codec["int8"]);
+        assert!(
+            f32b >= 3.0 * int8b,
+            "int8 must cut bytes/request >= 3x vs f32: {f32b} vs {int8b}"
+        );
+        assert!(fp16b < f32b, "fp16 must move fewer wire bytes than f32");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -102,6 +102,7 @@ impl CostCurve {
         kind: SamplerKind,
         scfg: &SamplerConfig,
         feat_dim: usize,
+        row_bytes: usize,
         num_pes: usize,
         preset: &SystemPreset,
         model: &ModelCost,
@@ -119,7 +120,8 @@ impl CostCurve {
         grid.dedup();
         let mut probe_rng = Pcg64::new(seed ^ 0xCA11B);
         let p = num_pes.max(1) as f64;
-        let row_bytes = (feat_dim * 4) as f64;
+        // wire bytes per encoded row — the store's codec, not dim*4
+        let row_bytes = row_bytes as f64;
         let (sizes, us): (Vec<f64>, Vec<f64>) = grid
             .iter()
             .map(|&n| {
@@ -287,6 +289,7 @@ mod tests {
             SamplerKind::Labor0,
             &scfg,
             64,
+            64 * 4,
             4,
             preset,
             &model,
@@ -301,6 +304,39 @@ mod tests {
         assert!(c < 2.0 * b, "concave step 64→128: {c} vs {b}");
         // per-request cost falls with batch size
         assert!(c / 128.0 < a / 32.0, "amortization must improve");
+    }
+
+    #[test]
+    fn narrower_wire_rows_cheapen_the_calibrated_curve() {
+        // int8 rows (d+5 wire bytes) shrink the storage term of the
+        // modeled service time at every probe size
+        let g = generate::chung_lu(4000, 10.0, 2.5, 3);
+        let scfg = SamplerConfig::default();
+        let preset = costmodel::preset("4xA100").unwrap();
+        let model = ModelCost::gcn(64, 128);
+        let mk = |row_bytes| {
+            CostCurve::calibrate(
+                &g,
+                SamplerKind::Labor0,
+                &scfg,
+                64,
+                row_bytes,
+                4,
+                preset,
+                &model,
+                512,
+                11,
+            )
+        };
+        let (f32c, int8c) = (mk(64 * 4), mk(64 + 5));
+        for n in [8, 64, 512] {
+            assert!(
+                int8c.service_us(n) < f32c.service_us(n),
+                "n={n}: int8 {} must undercut f32 {}",
+                int8c.service_us(n),
+                f32c.service_us(n)
+            );
+        }
     }
 
     #[test]

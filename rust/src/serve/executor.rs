@@ -95,7 +95,9 @@ fn pe_us(w: &PeWork, preset: &SystemPreset, model: &ModelCost) -> f64 {
     let s: Vec<f64> = w.counts_s.iter().map(|&c| c as f64).collect();
     let e: Vec<f64> = w.counts_e.iter().map(|&c| c as f64).collect();
     let cross: f64 = w.counts_cross.iter().map(|&c| c as f64).sum();
-    let d_in = (w.row_bytes / 4).max(1) as usize;
+    // model width is the decoded dimensionality — with a compressed
+    // codec row_bytes/4 would understate it (the old derivation)
+    let d_in = (w.dim as usize).max(1);
     stage_us(
         &s,
         &e,
@@ -128,10 +130,16 @@ pub struct BatchExecution {
     pub size: usize,
     /// modeled virtual service time (µs).
     pub service_us: u64,
-    /// f32 bytes read from storage across PEs (β).
+    /// wire bytes (encoded rows of the active codec) read from storage
+    /// across PEs (β).
     pub storage_bytes: u64,
-    /// feature-row bytes over the fabric across PEs (α).
+    /// feature-row wire bytes over the fabric across PEs (α).
     pub fabric_bytes: u64,
+    /// cache fills served decoded out of the hot tier across PEs
+    /// (0 without a tiered store).
+    pub hot_rows: u64,
+    /// decoded f32 bytes those hot fills moved (γ).
+    pub hot_bytes: u64,
     /// rows requested through the caches across PEs.
     pub requested_rows: u64,
     /// sampled edges across PEs and layers.
@@ -234,6 +242,8 @@ impl<'p> Executor<'p> {
             service_us,
             storage_bytes: mb.per_pe.iter().map(|w| w.bytes_from_storage).sum(),
             fabric_bytes: mb.per_pe.iter().map(|w| w.fabric_bytes).sum(),
+            hot_rows: mb.per_pe.iter().map(|w| w.hot_rows).sum(),
+            hot_bytes: mb.per_pe.iter().map(|w| w.hot_bytes).sum(),
             requested_rows: mb.per_pe.iter().map(|w| w.requested).sum(),
             sampled_edges: mb
                 .per_pe

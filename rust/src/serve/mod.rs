@@ -152,6 +152,7 @@ impl Pipeline {
             self.cfg.kind,
             &self.cfg.sampler_config(),
             self.ds.feat_dim,
+            self.feature_store().row_bytes(),
             self.cfg.num_pes,
             scfg.preset,
             &model,
@@ -274,6 +275,8 @@ impl Server<'_> {
                         service_us: exec.service_us,
                         storage_bytes: exec.storage_bytes,
                         fabric_bytes: exec.fabric_bytes,
+                        hot_rows: exec.hot_rows,
+                        hot_bytes: exec.hot_bytes,
                     },
                     &reqs,
                     completion,

@@ -48,6 +48,10 @@ pub struct BatchRecord {
     pub service_us: u64,
     pub storage_bytes: u64,
     pub fabric_bytes: u64,
+    /// cache fills served decoded out of the hot tier (0 untiered).
+    pub hot_rows: u64,
+    /// decoded f32 bytes those hot fills moved (γ).
+    pub hot_bytes: u64,
 }
 
 /// The full run transcript: requests, batches, and drop accounting.
@@ -143,6 +147,8 @@ impl Ledger {
         let span_s = (last_completion - first_arrival).max(1) as f64 / 1e6;
         let storage: u64 = self.batches.iter().map(|b| b.storage_bytes).sum();
         let fabric: u64 = self.batches.iter().map(|b| b.fabric_bytes).sum();
+        let hot_rows: u64 = self.batches.iter().map(|b| b.hot_rows).sum();
+        let hot_bytes: u64 = self.batches.iter().map(|b| b.hot_bytes).sum();
         ServeReport {
             served: n as u64,
             batches: self.batches.len() as u64,
@@ -155,6 +161,8 @@ impl Ledger {
             requests_per_s: n as f64 / span_s,
             storage_bytes_per_req: storage as f64 / n as f64,
             fabric_bytes_per_req: fabric as f64 / n as f64,
+            hot_rows_per_req: hot_rows as f64 / n as f64,
+            hot_bytes_per_req: hot_bytes as f64 / n as f64,
             slo_ms: slo_us as f64 / 1e3,
             slo_violations: violations as u64,
             slo_violation_rate: violations as f64 / n as f64,
@@ -180,6 +188,12 @@ pub struct ServeReport {
     pub storage_bytes_per_req: f64,
     /// fabric (α) feature-row bytes per served request.
     pub fabric_bytes_per_req: f64,
+    /// hot-tier fills per served request (0 without tiering).
+    pub hot_rows_per_req: f64,
+    /// decoded hot-tier (γ) bytes per served request — deliberately
+    /// *not* part of [`ServeReport::bytes_per_req`]: the headline column
+    /// counts β+α wire movement, which the hot tier avoids.
+    pub hot_bytes_per_req: f64,
     pub slo_ms: f64,
     pub slo_violations: u64,
     pub slo_violation_rate: f64,
@@ -217,11 +231,12 @@ impl std::fmt::Display for ServeReport {
         write!(
             f,
             "throughput {:.0} req/s (virtual); bytes/request: {:.0} storage (β) + {:.0} \
-             fabric (α) = {:.0}; ledger checksum {:#018x}",
+             fabric (α) = {:.0} wire, {:.0} hot-tier (γ); ledger checksum {:#018x}",
             self.requests_per_s,
             self.storage_bytes_per_req,
             self.fabric_bytes_per_req,
             self.bytes_per_req(),
+            self.hot_bytes_per_req,
             self.checksum
         )
     }
@@ -246,6 +261,8 @@ mod tests {
                 service_us: 400,
                 storage_bytes: 1000,
                 fabric_bytes: 200,
+                hot_rows: 3,
+                hot_bytes: 192,
             },
             &[req(0, 0, 5, 10), req(1, 1, 9, 60)],
             500,
@@ -258,6 +275,8 @@ mod tests {
                 service_us: 300,
                 storage_bytes: 500,
                 fabric_bytes: 0,
+                hot_rows: 0,
+                hot_bytes: 0,
             },
             &[req(2, 0, 7, 600)],
             1000,
@@ -282,6 +301,10 @@ mod tests {
         assert!((r.storage_bytes_per_req - 500.0).abs() < 1e-9);
         assert!((r.fabric_bytes_per_req - 200.0 / 3.0).abs() < 1e-9);
         assert!((r.bytes_per_req() - (1500.0 + 200.0) / 3.0).abs() < 1e-9);
+        // hot-tier traffic is tracked per request but kept out of the
+        // wire-bytes headline
+        assert!((r.hot_rows_per_req - 1.0).abs() < 1e-9);
+        assert!((r.hot_bytes_per_req - 64.0).abs() < 1e-9);
         // span = 1000 − 10 µs → ~3030 req/s virtual
         assert!((r.requests_per_s - 3.0 / (990.0 / 1e6)).abs() < 1.0);
     }

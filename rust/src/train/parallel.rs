@@ -39,8 +39,7 @@
 //! Forward-only consumers (holdout evaluation here, the serving plane in
 //! [`crate::serve`]) take a [`Predictor`] snapshot via
 //! [`ParallelTrainer::predictor`] instead of reaching into the
-//! parameters; the old single-head `head()` / `predict_row()` pair
-//! survives one release as `#[deprecated]` shims.
+//! parameters.
 
 use crate::coop::all_to_all::{AllReduceStrategy, Exchange, Fabric, PeEndpoint};
 use crate::coop::engine::ExecMode;
@@ -419,30 +418,6 @@ impl ParallelTrainer {
         }
         correct as f64 / total.max(1) as f64
     }
-
-    /// Replica 0's output-layer parameters `(W, b)` (W row-major
-    /// `[in_dim × classes]`).
-    #[deprecated(
-        note = "the layered model has no standalone head; snapshot the full model with \
-                `predictor()` instead"
-    )]
-    pub fn head(&self) -> (&[f32], &[f32]) {
-        let d = self.dims.layers - 1;
-        (&self.replicas[0].params[2 * d], &self.replicas[0].params[2 * d + 1])
-    }
-
-    /// Class prediction for one gathered feature row treated as an
-    /// isolated vertex (self-only aggregation at every layer).
-    #[deprecated(
-        note = "single-row prediction ignores the sampled neighborhood; use \
-                `predictor().predict_minibatch` over a stream batch instead"
-    )]
-    pub fn predict_row(&self, x: &[f32], logits: &mut [f32]) -> u16 {
-        let pred = self.predictor();
-        let lg = pred.logits_isolated(x);
-        logits.copy_from_slice(&lg);
-        crate::model::kernels::argmax(logits) as u16
-    }
 }
 
 /// A batch is cooperative iff its work records carry activation routes.
@@ -767,23 +742,5 @@ mod tests {
         let chance = 1.0 / ds.num_classes as f64;
         assert!(acc > chance * 1.2, "val acc {acc:.3} vs chance {chance:.3}");
         assert!(rep.ms_per_step > 0.0 && rep.storage_bytes_per_step > 0.0);
-    }
-
-    /// The deprecated single-head shims stay functional for one release:
-    /// `head()` exposes the output-layer pair, `predict_row` agrees with
-    /// the Predictor's isolated-row forward.
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_still_answer() {
-        let pt = trajectory(Mode::Independent, ExecMode::Serial, 2, AllReduceStrategy::Ring, 2);
-        let dims = pt.dims();
-        let (w, b) = pt.head();
-        assert_eq!(w.len(), dims.in_dim(0) * dims.classes);
-        assert_eq!(b.len(), dims.classes);
-        let x = vec![0.25f32; dims.d_in];
-        let mut logits = vec![0f32; dims.classes];
-        let cls = pt.predict_row(&x, &mut logits);
-        assert_eq!(cls, pt.predictor().predict_isolated(&x));
-        assert_eq!(logits, pt.predictor().logits_isolated(&x));
     }
 }

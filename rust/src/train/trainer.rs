@@ -27,7 +27,7 @@
 
 use super::evalx::{score, EvalStats};
 use crate::coop::engine::ExecMode;
-use crate::feature::{FeatureStore, PartitionedFeatureStore};
+use crate::feature::{Codec, FeatureStore};
 use crate::graph::{Dataset, VertexId};
 use crate::model::{kernels, GnnModel, HostModel, ModelDims, PjrtModel};
 use crate::pipeline::{Batching, MinibatchStream, TrainStream};
@@ -52,6 +52,11 @@ pub struct TrainerOptions {
     pub exec: ExecMode,
     /// how the trainer's stream assembles the global batch.
     pub batching: Batching,
+    /// at-rest row codec for the stream's feature store (`--codec`);
+    /// non-f32 trains on quantized features decoded at gather.
+    pub codec: Codec,
+    /// hot-tier budget in MiB for the stream's store (`--hot-mb`).
+    pub hot_mb: usize,
 }
 
 impl Default for TrainerOptions {
@@ -64,6 +69,8 @@ impl Default for TrainerOptions {
             lr: None,
             exec: ExecMode::Threaded,
             batching: Batching::Single,
+            codec: Codec::F32,
+            hot_mb: 0,
         }
     }
 }
@@ -123,7 +130,7 @@ pub struct Trainer<'d> {
     stream: TrainStream<'d>,
     /// shared with the trainer's stream; evaluation and the
     /// no-pre-gathered-buffer fallback read rows from here.
-    store: Arc<PartitionedFeatureStore>,
+    store: Arc<dyn FeatureStore>,
     lr: f32,
     /// seed batch size (and evaluation chunk size).
     batch: usize,
@@ -191,7 +198,7 @@ impl<'d> Trainer<'d> {
             kappa: opts.kappa,
             ..Default::default()
         };
-        let stream = TrainStream::new(
+        let stream = TrainStream::with_codec(
             ds,
             opts.kind,
             sampler_cfg,
@@ -199,6 +206,8 @@ impl<'d> Trainer<'d> {
             opts.seed,
             opts.exec,
             opts.batching,
+            opts.codec,
+            opts.hot_mb,
         );
         let store = stream.feature_store();
         let state = dims.init_state(opts.seed ^ 0xFACE);

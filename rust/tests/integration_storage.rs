@@ -1,0 +1,199 @@
+//! Storage-plane integration gates: the tiered compressed feature store
+//! must be invisible at f32 defaults (bit-identical to the legacy
+//! single-tier store — the PR-6 regression pin), report the hot/cold
+//! byte split faithfully when tiered, and keep the costmodel-driven
+//! prefetcher inside its budget without perturbing any count.
+
+use coopgnn::coop::engine::{EngineConfig, Mode};
+use coopgnn::feature::{Codec, FeatureStore, TieredStore};
+use coopgnn::graph::{datasets, partition};
+use coopgnn::pipeline::{EngineStream, MinibatchStream, PipelineBuilder};
+use std::sync::Arc;
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+/// The f32 regression pin: a `TieredStore` at codec f32 / hot budget 0
+/// produces batches bit-identical to the PR-6 `PartitionedFeatureStore`
+/// path — same counts, same byte ledger, same feature payload bits —
+/// across modes and PE counts at a fixed seed.
+#[test]
+fn f32_tiered_store_is_bit_identical_to_the_legacy_store() {
+    let ds = datasets::build("tiny", 42).unwrap();
+    for (pes, mode) in [
+        (1, Mode::Independent),
+        (3, Mode::Independent),
+        (3, Mode::Cooperative),
+    ] {
+        let part = partition::random(&ds.graph, pes, 9);
+        let cfg = EngineConfig {
+            mode,
+            num_pes: pes,
+            batch_per_pe: 24,
+            cache_per_pe: 200,
+            warmup_batches: 0,
+            measure_batches: 4,
+            seed: 0xC0FFEE,
+            ..Default::default()
+        };
+        let mut legacy = EngineStream::new(&ds, &part, &cfg);
+        let store: Arc<dyn FeatureStore> =
+            Arc::new(TieredStore::build(&ds, &part, Codec::F32, 0));
+        let mut tiered = EngineStream::with_store(&ds, &part, &cfg, store);
+        for batch in 0..4 {
+            let a = legacy.next_batch();
+            let b = tiered.next_batch();
+            for (pe, (x, y)) in a.per_pe.iter().zip(&b.per_pe).enumerate() {
+                let ctx = format!("{mode:?} P={pes} batch {batch} PE {pe}");
+                assert_eq!(x.requested, y.requested, "{ctx}: requested");
+                assert_eq!(x.misses, y.misses, "{ctx}: misses");
+                assert_eq!(x.fabric, y.fabric, "{ctx}: fabric rows");
+                assert_eq!(x.row_bytes, y.row_bytes, "{ctx}: row_bytes");
+                assert_eq!(x.bytes_from_storage, y.bytes_from_storage, "{ctx}: β bytes");
+                assert_eq!(x.fabric_bytes, y.fabric_bytes, "{ctx}: α bytes");
+                assert_eq!(x.hot_rows, y.hot_rows, "{ctx}: hot fills");
+                assert_eq!(x.hot_bytes, 0, "{ctx}: hot budget 0 must stay untiered");
+                assert_eq!(x.feature_vertices, y.feature_vertices, "{ctx}: vertex lists");
+                let (fx, fy) = (x.features.as_ref().unwrap(), y.features.as_ref().unwrap());
+                assert_eq!(bits(fx), bits(fy), "{ctx}: feature payload bits");
+            }
+        }
+    }
+}
+
+/// A full default-config engine report survives a codec round trip: run
+/// at f32 defaults, re-run over int8 + hot tier, switch back, and the
+/// third report equals the first field-for-field (wall clocks excepted)
+/// — `set_codec`/`set_hot_mb` rebuild the store cleanly and the default
+/// path carries no tiered residue.
+#[test]
+fn default_f32_report_survives_a_codec_round_trip() {
+    let zeroed = |mut r: coopgnn::coop::engine::EngineReport| {
+        r.wall_sampling_ms = 0.0;
+        r.wall_feature_ms = 0.0;
+        r.wall_batch_ms = 0.0;
+        format!("{r:?}")
+    };
+    let mut pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Cooperative)
+        .num_pes(2)
+        .batch_per_pe(32)
+        .cache_per_pe(256)
+        .warmup_batches(1)
+        .measure_batches(3)
+        .build()
+        .unwrap();
+    let before = zeroed(pipe.engine_report());
+    pipe.set_codec(Codec::Int8);
+    pipe.set_hot_mb(1);
+    let compressed = pipe.engine_report();
+    assert_eq!(pipe.feature_store().row_bytes(), pipe.ds.feat_dim + 5);
+    assert!(compressed.feat_hot_rows > 0.0, "1 MiB of dim-16 rows must tier tiny hot");
+    pipe.set_codec(Codec::F32);
+    pipe.set_hot_mb(0);
+    let after = zeroed(pipe.engine_report());
+    assert_eq!(before, after, "f32 default report must survive the codec round trip");
+}
+
+/// Tiering moves bytes between ledgers, never counts: with a hot tier
+/// covering all of tiny, every fill is served from PE memory (γ), the
+/// storage ledger (β) drops to zero, the hit rate saturates, and the
+/// count plane matches the untiered run exactly.
+#[test]
+fn hot_tier_absorbs_fills_and_reports_the_split() {
+    let mut pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Independent)
+        .num_pes(1)
+        .batch_per_pe(64)
+        .cache_per_pe(400)
+        .warmup_batches(1)
+        .measure_batches(4)
+        .codec(Codec::Int8)
+        .hot_mb(1)
+        .build()
+        .unwrap();
+    let hot = pipe.engine_report();
+    assert!(hot.feat_misses > 0.0, "the cache must miss for tiers to matter");
+    assert!(hot.feat_hot_rows > 0.0);
+    assert_eq!(hot.feat_storage_bytes, 0.0, "a fully-hot store pulls nothing cold");
+    let decoded = (pipe.ds.feat_dim * 4) as f64;
+    assert!(
+        (hot.feat_hot_bytes - hot.feat_hot_rows * decoded).abs() < 1e-6,
+        "hot fills are charged decoded bytes"
+    );
+    assert!((hot.hot_hit_rate - 1.0).abs() < 1e-12, "every fill was hot");
+    assert!(hot.derived_miss_rate <= hot.cache_miss_rate);
+    pipe.set_hot_mb(0);
+    let cold = pipe.engine_report();
+    assert_eq!(cold.feat_misses, hot.feat_misses, "counts never move with tiering");
+    assert_eq!(cold.feat_requested, hot.feat_requested);
+    assert_eq!(cold.feat_hot_rows, 0.0);
+    assert_eq!(cold.hot_hit_rate, 0.0);
+    let wire = (pipe.ds.feat_dim + 5) as f64;
+    assert!(
+        (cold.feat_storage_bytes - cold.feat_misses * wire).abs() < 1e-6,
+        "untiered int8 charges every miss the encoded wire size"
+    );
+}
+
+/// The costmodel-driven prefetch seam: with a small hot tier, each
+/// `next_batch` promotes the exactly-predicted next seed draw into the
+/// annex within the cold-bandwidth budget — and nothing about the
+/// sampled counts or the feature payload moves.
+#[test]
+fn tiered_prefetch_promotes_within_budget_without_touching_counts() {
+    let ds = datasets::build("tiny", 42).unwrap();
+    let part = partition::random(&ds.graph, 2, 9);
+    let hot_bytes = 64 * ds.feat_dim * 4; // 64 decoded rows: most of tiny stays cold
+    let mk_cfg = |prefetch: bool| EngineConfig {
+        mode: Mode::Cooperative,
+        num_pes: 2,
+        batch_per_pe: 24,
+        cache_per_pe: 200,
+        warmup_batches: 0,
+        measure_batches: 3,
+        seed: 7,
+        prefetch,
+        ..Default::default()
+    };
+    let store_on: Arc<dyn FeatureStore> =
+        Arc::new(TieredStore::build(&ds, &part, Codec::Int8, hot_bytes));
+    let budget = coopgnn::costmodel::default_prefetch_row_budget(store_on.row_bytes()) as u64;
+    let mut on = EngineStream::with_store(&ds, &part, &mk_cfg(true), store_on);
+    let store_off: Arc<dyn FeatureStore> =
+        Arc::new(TieredStore::build(&ds, &part, Codec::Int8, hot_bytes));
+    let mut off = EngineStream::with_store(&ds, &part, &mk_cfg(false), store_off);
+    let mut promoted = 0u64;
+    for batch in 0..3 {
+        let a = on.next_batch();
+        let b = off.next_batch();
+        for (pe, (x, y)) in a.per_pe.iter().zip(&b.per_pe).enumerate() {
+            let ctx = format!("batch {batch} PE {pe}");
+            assert!(x.prefetch_rows <= budget, "{ctx}: budget overrun");
+            assert_eq!(
+                x.prefetch_bytes,
+                x.prefetch_rows * x.row_bytes,
+                "{ctx}: prefetch pulls wire bytes"
+            );
+            promoted += x.prefetch_rows;
+            assert_eq!(y.prefetch_rows, 0, "{ctx}: prefetch off promotes nothing");
+            // the count plane and the payload are prefetch-invariant;
+            // only the hot/cold byte attribution may shift
+            assert_eq!(x.requested, y.requested, "{ctx}: requested");
+            assert_eq!(x.misses, y.misses, "{ctx}: misses");
+            assert_eq!(x.fabric, y.fabric, "{ctx}: fabric rows");
+            assert_eq!(x.feature_vertices, y.feature_vertices, "{ctx}: vertex lists");
+            let (fx, fy) = (x.features.as_ref().unwrap(), y.features.as_ref().unwrap());
+            assert_eq!(bits(fx), bits(fy), "{ctx}: payload bits");
+            assert_eq!(
+                x.bytes_from_storage + x.hot_rows * x.row_bytes,
+                y.bytes_from_storage + y.hot_rows * y.row_bytes,
+                "{ctx}: total fill wire-bytes conserved across attribution"
+            );
+        }
+    }
+    assert!(promoted > 0, "a mostly-cold store must see prefetch promotions");
+}

@@ -365,6 +365,147 @@ fn prop_exec_modes_bit_identical_across_random_configs() {
     });
 }
 
+/// The storage-plane codecs: encoded rows are exactly
+/// `codec.row_bytes(dim)` on the wire, f32 round-trips bit-exactly,
+/// fp16 is within half-precision rounding (2^-11 relative), and int8 is
+/// within half a quantization step of the per-row scale it shipped.
+#[test]
+fn prop_codec_roundtrip_sizes_and_error_bounds() {
+    use coopgnn::feature::Codec;
+    check("codec-roundtrip", 0xA12, 40, |rng| {
+        let dim = 1 + rng.next_below(512) as usize;
+        // magnitudes from ~0.05 to ~20 so the per-row int8 scale varies
+        let mag = (rng.next_f64() * 6.0 - 3.0).exp();
+        let row: Vec<f32> =
+            (0..dim).map(|_| ((rng.next_f64() * 2.0 - 1.0) * mag) as f32).collect();
+        for codec in Codec::all() {
+            let mut enc = Vec::new();
+            codec.encode_row(&row, &mut enc);
+            prop_assert!(
+                enc.len() == codec.row_bytes(dim),
+                "{codec:?}: encoded {} bytes, row_bytes says {}",
+                enc.len(),
+                codec.row_bytes(dim)
+            );
+            let mut dec = vec![0f32; dim];
+            codec.decode_row(&enc, &mut dec);
+            match codec {
+                Codec::F32 => {
+                    for (i, (&x, &y)) in row.iter().zip(&dec).enumerate() {
+                        prop_assert!(x.to_bits() == y.to_bits(), "f32 elem {i} not bit-exact");
+                    }
+                }
+                Codec::Fp16 => {
+                    for (i, (&x, &y)) in row.iter().zip(&dec).enumerate() {
+                        let bound = (x.abs() as f64) / 2048.0 + 1e-7;
+                        prop_assert!(
+                            ((x - y).abs() as f64) <= bound,
+                            "fp16 elem {i}: {x} -> {y} exceeds 2^-11 relative"
+                        );
+                    }
+                }
+                Codec::Int8 => {
+                    // the bound is defined by the scale actually shipped
+                    let scale = f32::from_le_bytes(enc[0..4].try_into().unwrap());
+                    let bound = (scale as f64) * 0.501 + 1e-6;
+                    for (i, (&x, &y)) in row.iter().zip(&dec).enumerate() {
+                        prop_assert!(
+                            ((x - y).abs() as f64) <= bound,
+                            "int8 elem {i}: {x} -> {y} outside scale/2 = {}",
+                            scale * 0.5
+                        );
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The encoded-byte ledger contract under every codec, for random
+/// engine shapes: wire bytes are exact multiples of the codec's row
+/// size (`bytes_from_storage == cold_fills * row_bytes`,
+/// `fabric_bytes == fabric_rows * row_bytes`), the hot tier is charged
+/// decoded f32 bytes, and the gathered vertex lists — the count plane —
+/// never move with the codec.
+#[test]
+fn prop_encoded_byte_ledgers_and_codec_invariant_counts() {
+    use coopgnn::coop::engine::Mode;
+    use coopgnn::feature::Codec;
+    use coopgnn::pipeline::{MinibatchStream, PipelineBuilder};
+    check("codec-ledgers", 0xA13, 4, |rng| {
+        let p_count = 1 + rng.next_below(3) as usize;
+        let mode = if rng.next_below(2) == 0 { Mode::Independent } else { Mode::Cooperative };
+        let hot_mb = rng.next_below(2) as usize; // 0 = untiered, 1 MiB = tiered
+        let batch = 8 + rng.next_below(24) as usize;
+        let seed = rng.next_u64();
+        let mut baseline: Option<Vec<Vec<u32>>> = None;
+        for codec in Codec::all() {
+            let pipe = PipelineBuilder::new()
+                .dataset("tiny")
+                .mode(mode)
+                .num_pes(p_count)
+                .batch_per_pe(batch)
+                .cache_per_pe(128)
+                .seed(seed)
+                .codec(codec)
+                .hot_mb(hot_mb)
+                .build()
+                .unwrap();
+            let store = pipe.feature_store();
+            let rb = store.row_bytes() as u64;
+            prop_assert!(
+                rb == codec.row_bytes(pipe.ds.feat_dim) as u64,
+                "{codec:?}: store wire width {rb}"
+            );
+            let dim = pipe.ds.feat_dim as u64;
+            let mut stream = pipe.stream();
+            let mut vertex_lists: Vec<Vec<u32>> = Vec::new();
+            for batch_i in 0..2 {
+                let mb = stream.next_batch();
+                for (pe, pw) in mb.per_pe.iter().enumerate() {
+                    let ctx = format!("{codec:?}/{mode:?} batch {batch_i} PE {pe}");
+                    prop_assert!(pw.row_bytes == rb, "{ctx}: PeWork row_bytes {}", pw.row_bytes);
+                    prop_assert!(
+                        pw.hot_rows <= pw.misses,
+                        "{ctx}: hot fills {} exceed misses {}",
+                        pw.hot_rows,
+                        pw.misses
+                    );
+                    prop_assert!(
+                        pw.bytes_from_storage == (pw.misses - pw.hot_rows) * rb,
+                        "{ctx}: cold fills must be charged wire bytes ({} != ({} - {}) * {rb})",
+                        pw.bytes_from_storage,
+                        pw.misses,
+                        pw.hot_rows
+                    );
+                    prop_assert!(
+                        pw.fabric_bytes == pw.fabric * rb,
+                        "{ctx}: fabric bytes {} != rows {} * {rb}",
+                        pw.fabric_bytes,
+                        pw.fabric
+                    );
+                    prop_assert!(
+                        pw.hot_bytes == pw.hot_rows * dim * 4,
+                        "{ctx}: hot tier serves decoded rows ({} != {} * {dim} * 4)",
+                        pw.hot_bytes,
+                        pw.hot_rows
+                    );
+                    vertex_lists.push(pw.feature_vertices.clone().unwrap_or_default());
+                }
+            }
+            match &baseline {
+                None => baseline = Some(vertex_lists),
+                Some(b) => prop_assert!(
+                    b == &vertex_lists,
+                    "{codec:?}: gathered vertex lists must be codec-invariant"
+                ),
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_all_reduce_equals_sum_then_broadcast_oracle() {
     use coopgnn::coop::all_to_all::{AllReduceStrategy, Fabric};
