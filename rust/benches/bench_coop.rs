@@ -7,10 +7,11 @@
 //! comparison is constructed through `pipeline::PipelineBuilder`, like
 //! every other entry stack.
 
-use coopgnn::coop::all_to_all::Exchange;
+use coopgnn::coop::all_to_all::{Exchange, Topology};
 use coopgnn::coop::coop_sampler::{partition_seeds, sample_cooperative};
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::coop::indep::sample_independent;
+use coopgnn::costmodel::{pick_collective, FabricModel};
 use coopgnn::feature::Codec;
 use coopgnn::graph::{generate, partition};
 use coopgnn::pipeline::PipelineBuilder;
@@ -203,6 +204,61 @@ fn main() {
     }
     match merge_section(path, "tiered_storage", stamped(7, tiers)) {
         Ok(()) => println!("bench_coop: wrote section `tiered_storage` to {}", path.display()),
+        Err(e) => eprintln!("bench_coop: could not write {}: {e}", path.display()),
+    }
+
+    // ---- communication-avoiding fabric: replication sweep --------------
+    // The same 4-PE cooperative workload (f32, untiered, threaded) at
+    // replica-group sizes r ∈ {1, 2, 4}: the feature-fabric total stays
+    // put while its inter-group share drops with r (mirror serving keeps
+    // same-group rows off the slow links). Alongside, the costmodel's
+    // collective pick across payload sizes on flat and replicated
+    // topologies — what `--allreduce auto` resolves to.
+    pipe.set_codec(Codec::F32);
+    pipe.set_hot_mb(0);
+    let mut repl = BTreeMap::new();
+    repl.insert("dataset".to_string(), Json::Str(ds_name.to_string()));
+    repl.insert("pes".to_string(), Json::Num(4.0));
+    repl.insert("smoke".to_string(), Json::Bool(smoke));
+    for r in [1usize, 2, 4] {
+        pipe.set_replication(r);
+        let rep = pipe.engine_report();
+        let auto = pipe.collective_for_grads();
+        println!(
+            "fabric/coop_4pe_{ds_name} r={r}: {:>8.1} KiB fabric/batch, {:>8.1} KiB \
+             inter-group, auto all-reduce pick: {}",
+            rep.feat_fabric_bytes / 1024.0,
+            rep.feat_fabric_inter_bytes / 1024.0,
+            auto.name()
+        );
+        let mut arm = BTreeMap::new();
+        arm.insert("fabric_bytes_per_batch".to_string(), Json::Num(rep.feat_fabric_bytes));
+        arm.insert(
+            "fabric_inter_bytes_per_batch".to_string(),
+            Json::Num(rep.feat_fabric_inter_bytes),
+        );
+        arm.insert("auto_collective".to_string(), Json::Str(auto.name().to_string()));
+        repl.insert(format!("r{r}"), Json::Obj(arm));
+    }
+    pipe.set_replication(1);
+    let mut picks = BTreeMap::new();
+    for payload in [4u64 << 10, 256 << 10, 1 << 20, 16 << 20, 64 << 20] {
+        let flat = pick_collective(payload, &Topology::flat(4), &FabricModel::default());
+        let grouped = pick_collective(payload, &Topology::new(4, 2), &FabricModel::default());
+        println!(
+            "fabric/pick_collective {:>6} KiB: flat={} replicated_r2={}",
+            payload >> 10,
+            flat.name(),
+            grouped.name()
+        );
+        let mut arm = BTreeMap::new();
+        arm.insert("flat".to_string(), Json::Str(flat.name().to_string()));
+        arm.insert("replicated_r2".to_string(), Json::Str(grouped.name().to_string()));
+        picks.insert(format!("{}KiB", payload >> 10), Json::Obj(arm));
+    }
+    repl.insert("pick_collective".to_string(), Json::Obj(picks));
+    match merge_section(path, "replication", stamped(8, repl)) {
+        Ok(()) => println!("bench_coop: wrote section `replication` to {}", path.display()),
         Err(e) => eprintln!("bench_coop: could not write {}: {e}", path.display()),
     }
 }

@@ -30,7 +30,7 @@
 //!   ([`PeEndpoint::all_reduce_f32`] / [`Exchange::all_reduce_f32`]):
 //!   after each PE computes its local gradient, the fabric reduces the
 //!   replicas into one globally-summed buffer held identically by every
-//!   PE, keeping the replicated optimizer states in lockstep. Two
+//!   PE, keeping the replicated optimizer states in lockstep. All
 //!   [`AllReduceStrategy`]s share one numeric contract (the canonical
 //!   ascending-PE summation order, so results are bit-identical across
 //!   strategies and exec modes) and differ only in message pattern and
@@ -38,19 +38,133 @@
 //!   (`cross_grad_reduce_bytes` / `cross_grad_gather_bytes`), separate
 //!   from id and row traffic.
 //!
+//! ## Replica groups and link classes
+//!
+//! A [`Topology`] partitions the `P` PEs into `P/r` **replica groups**
+//! of `r` consecutive PEs (`r = 1` is the flat fabric every PR before
+//! the communication-avoiding one ran on). Links *within* a group are
+//! fast (NVLink-class); links *between* groups are slow
+//! (IB/PCIe-class), so every cross-PE ledger is split into a total and
+//! an `inter_*` column counting only the bytes that crossed a group
+//! boundary. Under `--replication r` each group holds a replica of
+//! every shard its members own (r× shard memory), so feature rows
+//! resolve inside the local group ([`crate::coop::feature_loader`]'s
+//! mirror serving), duplicate row sends into one remote group are
+//! relayed intra-group after a single boundary crossing
+//! ([`split_send_rows`]), and the gradient all-reduce runs
+//! hierarchically (intra-group reduce to the leader, a leader chain
+//! between groups, intra-group fan-out) with `(P/r - 1)·payload`
+//! inter-group bytes per phase — while staying **bit-identical** to the
+//! flat canonical sum because the chain folds contributions in exact
+//! ascending-PE order.
+//!
 //! *Cross-PE* payloads are what the fabric moves at α bandwidth; same-PE
 //! buckets are local and free. The cost model ([`crate::costmodel`])
-//! turns the recorded counts into time; the engine also measures real
-//! wall-clock for the CPU-side data movement.
+//! turns the recorded counts into time — per link class via
+//! [`crate::costmodel::FabricModel`] — and
+//! [`crate::costmodel::pick_collective`] selects the cheapest
+//! all-reduce strategy for a payload size; the engine also measures
+//! real wall-clock for the CPU-side data movement.
 
 use crate::graph::VertexId;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Barrier};
 
-/// Byte/item accounting for one logical fabric.
+/// Replica-group topology of a fabric: `num_pes` PEs in groups of
+/// `replication` **consecutive** PEs (group `g` = PEs
+/// `g·r .. g·r+r-1`, leader = the lowest-indexed member). Links within
+/// a group are the fast class, links between groups the slow class;
+/// `replication == 1` is the flat all-uniform fabric. The struct is
+/// pure shape — bandwidth/latency per link class lives in
+/// [`crate::costmodel::FabricModel`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub num_pes: usize,
+    /// PEs per replica group (`r`); must divide `num_pes`.
+    pub replication: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Self {
+        Topology { num_pes: 0, replication: 1 }
+    }
+}
+
+impl Topology {
+    pub fn new(num_pes: usize, replication: usize) -> Topology {
+        assert!(
+            replication >= 1 && num_pes % replication == 0,
+            "replication {replication} must divide the PE count {num_pes}"
+        );
+        Topology { num_pes, replication }
+    }
+
+    /// The flat (r = 1) topology: every PE is its own group, so every
+    /// cross-PE byte is inter-group.
+    pub fn flat(num_pes: usize) -> Topology {
+        Topology { num_pes, replication: 1 }
+    }
+
+    pub fn groups(&self) -> usize {
+        self.num_pes / self.replication
+    }
+
+    pub fn group_of(&self, pe: usize) -> usize {
+        pe / self.replication
+    }
+
+    /// The leader (lowest-indexed member) of `group`.
+    pub fn leader(&self, group: usize) -> usize {
+        group * self.replication
+    }
+
+    pub fn same_group(&self, a: usize, b: usize) -> bool {
+        self.group_of(a) == self.group_of(b)
+    }
+}
+
+/// Classify one owner's outgoing row sends under `topo`: returns the
+/// number of rows that must cross a **group boundary**. `per_dst[q]`
+/// holds the row keys PE `me` ships to PE `q` (any `Ord` key that
+/// identifies a row — vertex ids for feature rows, owned-list positions
+/// for activation rows). Destinations in `me`'s own group are
+/// intra-group; for a remote group, the *first* copy of each distinct
+/// key crosses the boundary once and further copies to other members of
+/// that group are modeled as intra-group replica relays. With
+/// `replication == 1` every group is a singleton, so the count equals
+/// the plain cross-row count.
+pub fn split_send_rows<T: Ord + Copy>(topo: &Topology, me: usize, per_dst: &[&[T]]) -> u64 {
+    let mut inter = 0u64;
+    let mut seen: std::collections::BTreeMap<usize, std::collections::BTreeSet<T>> =
+        std::collections::BTreeMap::new();
+    for (dst, keys) in per_dst.iter().enumerate() {
+        if dst == me || topo.same_group(me, dst) {
+            continue;
+        }
+        let group = seen.entry(topo.group_of(dst)).or_default();
+        for &k in keys.iter() {
+            if group.insert(k) {
+                inter += 1;
+            }
+        }
+    }
+    inter
+}
+
+/// Byte/item accounting for one logical fabric. The `inter_*` columns
+/// count the subset of each cross-PE ledger that crossed a **replica
+/// group** boundary under the fabric's [`Topology`] (with `r = 1` they
+/// track the cross columns exactly). Id and gradient inter traffic is
+/// charged inside the routing/reduce calls; row inter traffic is
+/// charged by the classifying call site via
+/// [`Exchange::note_inter_rows`] (the owner knows the per-destination
+/// request lists — see [`split_send_rows`]), so fabric-wide totals are
+/// the contract, not per-call symmetry.
 #[derive(Clone, Debug, Default)]
 pub struct Exchange {
     pub num_pes: usize,
+    /// replica-group shape used to classify intra- vs inter-group bytes.
+    pub topo: Topology,
     /// items moved between distinct PEs, by payload class
     pub cross_items: u64,
     /// items "moved" within a PE (no fabric cost)
@@ -69,15 +183,32 @@ pub struct Exchange {
     /// f32 bytes of cross-PE gradient traffic in all-reduce *gather*
     /// phases (reduced chunks broadcast back; 0 for [`AllReduceStrategy::Naive`]).
     pub cross_grad_gather_bytes: u64,
+    /// id items that crossed a replica-group boundary.
+    pub inter_items: u64,
+    /// bytes of inter-group id traffic.
+    pub inter_bytes: u64,
+    /// feature/activation rows that crossed a group boundary (charged by
+    /// the classifying call site, not inside the row routes).
+    pub inter_rows: u64,
+    /// wire bytes of those inter-group rows.
+    pub inter_row_bytes: u64,
+    /// inter-group share of `cross_grad_reduce_bytes`.
+    pub inter_grad_reduce_bytes: u64,
+    /// inter-group share of `cross_grad_gather_bytes`.
+    pub inter_grad_gather_bytes: u64,
     /// number of all-to-all rounds executed
     pub rounds: u64,
 }
 
-/// Message/byte profile of a gradient all-reduce. Both strategies
-/// produce the **bit-identical** canonical result (contributions summed
+/// Message/byte profile of a gradient all-reduce. Every strategy
+/// produces the **bit-identical** canonical result (contributions summed
 /// in ascending PE order, starting from PE 0's buffer), so the choice is
-/// purely a bandwidth/latency trade — and `Serial` vs `Threaded`
-/// trajectories stay exact either way.
+/// purely a bandwidth/latency trade — [`crate::costmodel::pick_collective`]
+/// makes it from the alpha-beta link model — and `Serial` vs `Threaded`
+/// trajectories stay exact either way. On a fabric whose
+/// [`Topology::replication`] exceeds 1 the strategy is overridden by the
+/// hierarchical leader-chain schedule (see
+/// [`PeEndpoint::all_reduce_f32`]).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AllReduceStrategy {
     /// Each PE sends its full buffer to every peer and sums all `P`
@@ -85,6 +216,12 @@ pub enum AllReduceStrategy {
     /// *per endpoint* (`P·(P-1)·payload` fabric-wide) — latency-optimal
     /// for small payloads.
     Naive,
+    /// Gather-to-root + broadcast: every PE ships its full buffer to PE
+    /// 0, which folds canonically and broadcasts the result.
+    /// `(P-1) · payload` fabric-wide per phase with logarithmic modeled
+    /// latency (the cost model prices it as a binomial tree) — the
+    /// mid-size sweet spot between `Naive` and the chunked schedules.
+    Tree,
     /// Reduce-scatter + all-gather with the byte profile of a ring
     /// all-reduce: the buffer is split into `P` owner chunks, each PE
     /// ships its contribution of chunk `o` to owner `o` (reduce phase,
@@ -94,20 +231,29 @@ pub enum AllReduceStrategy {
     /// owner-direct rather than neighbor-hopping so the summation order
     /// stays canonical — determinism over topology fidelity.
     Ring,
+    /// Recursive reduce-scatter + all-gather: same bandwidth-optimal
+    /// byte profile as [`AllReduceStrategy::Ring`] (and the identical
+    /// owner-direct message schedule in this fabric), but modeled with
+    /// logarithmic latency by the cost model — the large-payload pick.
+    Rsag,
 }
 
 impl AllReduceStrategy {
     pub fn name(&self) -> &'static str {
         match self {
             AllReduceStrategy::Naive => "naive",
+            AllReduceStrategy::Tree => "tree",
             AllReduceStrategy::Ring => "ring",
+            AllReduceStrategy::Rsag => "rsag",
         }
     }
 
     pub fn parse(s: &str) -> Option<AllReduceStrategy> {
         match s.to_ascii_lowercase().as_str() {
             "naive" => Some(AllReduceStrategy::Naive),
+            "tree" => Some(AllReduceStrategy::Tree),
             "ring" => Some(AllReduceStrategy::Ring),
+            "rsag" => Some(AllReduceStrategy::Rsag),
             _ => None,
         }
     }
@@ -140,7 +286,21 @@ fn canonical_sum(contribs: &[&[f32]]) -> Vec<f32> {
 
 impl Exchange {
     pub fn new(num_pes: usize) -> Self {
-        Exchange { num_pes, ..Default::default() }
+        Exchange::with_topology(Topology::flat(num_pes))
+    }
+
+    /// An exchange whose ledgers classify intra- vs inter-group traffic
+    /// under `topo` ([`Exchange::new`] is the flat r = 1 case).
+    pub fn with_topology(topo: Topology) -> Self {
+        Exchange { num_pes: topo.num_pes, topo, ..Default::default() }
+    }
+
+    /// Charge rows the classifying call site determined to cross a
+    /// replica-group boundary (see [`split_send_rows`]; the row routes
+    /// themselves only track the cross-PE totals).
+    pub fn note_inter_rows(&mut self, rows: u64, bytes: u64) {
+        self.inter_rows += rows;
+        self.inter_row_bytes += bytes;
     }
 
     /// Route `buckets[src][dst]` to per-destination inboxes
@@ -158,6 +318,10 @@ impl Exchange {
                 } else {
                     self.cross_items += items.len() as u64;
                     self.cross_bytes += (items.len() * item_bytes) as u64;
+                    if !self.topo.same_group(src, dst) {
+                        self.inter_items += items.len() as u64;
+                        self.inter_bytes += (items.len() * item_bytes) as u64;
+                    }
                 }
                 inboxes[dst].extend_from_slice(items);
             }
@@ -244,6 +408,9 @@ impl Exchange {
     /// strategy would have moved — so a serial training step reports the
     /// identical gradient traffic as its threaded twin, and the threaded
     /// [`PeEndpoint::all_reduce_f32`] is tested against this oracle.
+    /// With [`Topology::replication`] > 1 the hierarchical leader-chain
+    /// schedule's profile is charged instead of `strategy`'s (the chain
+    /// folds in the same ascending-PE order, so the value is unchanged).
     pub fn all_reduce_f32(&mut self, bufs: &mut [Vec<f32>], strategy: AllReduceStrategy) {
         assert_eq!(bufs.len(), self.num_pes, "one buffer per PE");
         let len = bufs[0].len();
@@ -254,17 +421,39 @@ impl Exchange {
             b.copy_from_slice(&acc);
         }
         let p = self.num_pes as u64;
+        let r = self.topo.replication as u64;
         let payload = (len * 4) as u64;
+        if self.topo.replication > 1 {
+            // hierarchical chain: members→leader intra, (G-1) leader
+            // hops inter, then the same profile mirrored on the way back
+            let g = self.topo.groups() as u64;
+            self.cross_grad_reduce_bytes += (p - 1) * payload;
+            self.cross_grad_gather_bytes += (p - 1) * payload;
+            self.inter_grad_reduce_bytes += (g - 1) * payload;
+            self.inter_grad_gather_bytes += (g - 1) * payload;
+            return;
+        }
         match strategy {
             // every endpoint ships its full buffer to P-1 peers
             AllReduceStrategy::Naive => {
                 self.cross_grad_reduce_bytes += p * (p - 1) * payload;
+                self.inter_grad_reduce_bytes += p * (p - r) * payload;
+            }
+            // gather-to-root + broadcast: full payload crosses once per
+            // non-root PE in each phase
+            AllReduceStrategy::Tree => {
+                self.cross_grad_reduce_bytes += (p - 1) * payload;
+                self.cross_grad_gather_bytes += (p - 1) * payload;
+                self.inter_grad_reduce_bytes += (p - r) * payload;
+                self.inter_grad_gather_bytes += (p - r) * payload;
             }
             // chunked: each element crosses once toward its owner and
             // once per non-owner on the way back
-            AllReduceStrategy::Ring => {
+            AllReduceStrategy::Ring | AllReduceStrategy::Rsag => {
                 self.cross_grad_reduce_bytes += (p - 1) * payload;
                 self.cross_grad_gather_bytes += (p - 1) * payload;
+                self.inter_grad_reduce_bytes += (p - r) * payload;
+                self.inter_grad_gather_bytes += (p - r) * payload;
             }
         }
     }
@@ -298,10 +487,20 @@ type Msg = (usize, Payload);
 pub struct Fabric;
 
 impl Fabric {
-    /// Build `num_pes` connected endpoints. Move endpoint `p` into PE
-    /// thread `p`; every endpoint must participate in every round (the
-    /// per-round barrier synchronizes all of them).
+    /// Build `num_pes` connected endpoints on a flat (replication 1)
+    /// topology. Move endpoint `p` into PE thread `p`; every endpoint
+    /// must participate in every round (the per-round barrier
+    /// synchronizes all of them).
     pub fn endpoints(num_pes: usize) -> Vec<PeEndpoint> {
+        Fabric::endpoints_with(Topology::flat(num_pes))
+    }
+
+    /// Build connected endpoints on an explicit [`Topology`]. With
+    /// `topo.replication > 1` the endpoints classify traffic into the
+    /// `inter_*` ledgers and [`PeEndpoint::all_reduce_f32`] switches to
+    /// the hierarchical leader-chain schedule.
+    pub fn endpoints_with(topo: Topology) -> Vec<PeEndpoint> {
+        let num_pes = topo.num_pes;
         assert!(num_pes > 0);
         let barrier = Arc::new(Barrier::new(num_pes));
         let mut txs: Vec<Sender<Msg>> = Vec::with_capacity(num_pes);
@@ -316,6 +515,7 @@ impl Fabric {
             .map(|(pe, rx)| PeEndpoint {
                 pe,
                 num_pes,
+                topo,
                 txs: txs.clone(),
                 rx,
                 barrier: Arc::clone(&barrier),
@@ -327,6 +527,12 @@ impl Fabric {
                 cross_row_bytes: 0,
                 cross_grad_reduce_bytes: 0,
                 cross_grad_gather_bytes: 0,
+                inter_items: 0,
+                inter_bytes: 0,
+                inter_rows: 0,
+                inter_row_bytes: 0,
+                inter_grad_reduce_bytes: 0,
+                inter_grad_gather_bytes: 0,
                 rounds: 0,
             })
             .collect()
@@ -343,6 +549,12 @@ impl Fabric {
 pub struct PeEndpoint {
     pub pe: usize,
     pub num_pes: usize,
+    /// Replica-group layout of the fabric this endpoint belongs to.
+    /// Id and gradient inter-group traffic is classified here; row
+    /// inter traffic is classified by the call site that knows which
+    /// copies are first-in-group (see [`Exchange::topo`]) and charged
+    /// via [`PeEndpoint::note_inter_rows`].
+    pub topo: Topology,
     txs: Vec<Sender<Msg>>,
     rx: Receiver<Msg>,
     barrier: Arc<Barrier>,
@@ -356,6 +568,18 @@ pub struct PeEndpoint {
     pub cross_grad_reduce_bytes: u64,
     /// f32 bytes this endpoint sent in all-reduce gather phases.
     pub cross_grad_gather_bytes: u64,
+    /// Subset of `cross_items` that crossed a replica-group boundary.
+    pub inter_items: u64,
+    /// Subset of `cross_bytes` that crossed a replica-group boundary.
+    pub inter_bytes: u64,
+    /// Inter-group feature/activation rows (call-site classified).
+    pub inter_rows: u64,
+    /// Inter-group feature/activation row bytes (call-site classified).
+    pub inter_row_bytes: u64,
+    /// Subset of `cross_grad_reduce_bytes` on inter-group links.
+    pub inter_grad_reduce_bytes: u64,
+    /// Subset of `cross_grad_gather_bytes` on inter-group links.
+    pub inter_grad_gather_bytes: u64,
     pub rounds: u64,
 }
 
@@ -382,6 +606,10 @@ impl PeEndpoint {
             } else {
                 self.cross_items += items.len() as u64;
                 self.cross_bytes += (items.len() * item_bytes) as u64;
+                if !self.topo.same_group(self.pe, dst) {
+                    self.inter_items += items.len() as u64;
+                    self.inter_bytes += (items.len() * item_bytes) as u64;
+                }
                 self.txs[dst]
                     .send((self.pe, Payload::Ids(items)))
                     .expect("fabric peer hung up (send)");
@@ -475,20 +703,39 @@ impl PeEndpoint {
         inbox
     }
 
+    /// Charge `rows` feature/activation rows (`bytes` on the wire) to
+    /// this endpoint's inter-group ledger. Row payloads are opaque to
+    /// the fabric — only the call site knows which copies are the
+    /// first into a remote replica group (see [`split_send_rows`]) —
+    /// so classification happens there and is recorded here.
+    pub fn note_inter_rows(&mut self, rows: u64, bytes: u64) {
+        self.inter_rows += rows;
+        self.inter_row_bytes += bytes;
+    }
+
     /// One gradient all-reduce round: every endpoint calls this with its
     /// local contribution in `buf`; on return every PE's `buf` holds the
     /// **identical** canonical sum (ascending-PE order — bit-equal to
-    /// [`Exchange::all_reduce_f32`] and across both strategies). Same
+    /// [`Exchange::all_reduce_f32`] and across every strategy). Same
     /// barrier discipline as the id/row rounds, so gradient traffic can
     /// interleave with sampling and feature rounds on one fabric.
+    ///
+    /// With [`Topology::replication`] > 1 the flat strategy is
+    /// overridden by the hierarchical leader-chain schedule, which
+    /// moves only `(P/r - 1)·payload` per phase across inter-group
+    /// links while folding in the exact same ascending-PE order.
     pub fn all_reduce_f32(&mut self, buf: &mut [f32], strategy: AllReduceStrategy) {
         self.rounds += 1;
         if self.num_pes == 1 {
             return;
         }
+        if self.topo.replication > 1 {
+            return self.all_reduce_hierarchical(buf);
+        }
         match strategy {
             AllReduceStrategy::Naive => self.all_reduce_naive(buf),
-            AllReduceStrategy::Ring => self.all_reduce_ring(buf),
+            AllReduceStrategy::Tree => self.all_reduce_tree(buf),
+            AllReduceStrategy::Ring | AllReduceStrategy::Rsag => self.all_reduce_ring(buf),
         }
     }
 
@@ -499,6 +746,9 @@ impl PeEndpoint {
         for (dst, tx) in self.txs.iter().enumerate() {
             if dst != self.pe {
                 self.cross_grad_reduce_bytes += payload;
+                if !self.topo.same_group(self.pe, dst) {
+                    self.inter_grad_reduce_bytes += payload;
+                }
                 tx.send((self.pe, Payload::Grads(buf.to_vec())))
                     .expect("fabric peer hung up (send)");
             }
@@ -531,6 +781,9 @@ impl PeEndpoint {
             if dst != self.pe {
                 let r = ring_chunk(len, p, dst);
                 self.cross_grad_reduce_bytes += (r.len() * 4) as u64;
+                if !self.topo.same_group(self.pe, dst) {
+                    self.inter_grad_reduce_bytes += (r.len() * 4) as u64;
+                }
                 tx.send((self.pe, Payload::Grads(buf[r].to_vec())))
                     .expect("fabric peer hung up (send)");
             }
@@ -560,6 +813,9 @@ impl PeEndpoint {
         for (dst, tx) in self.txs.iter().enumerate() {
             if dst != self.pe {
                 self.cross_grad_gather_bytes += (acc.len() * 4) as u64;
+                if !self.topo.same_group(self.pe, dst) {
+                    self.inter_grad_gather_bytes += (acc.len() * 4) as u64;
+                }
                 tx.send((self.pe, Payload::Grads(acc.clone())))
                     .expect("fabric peer hung up (send)");
             }
@@ -571,6 +827,158 @@ impl PeEndpoint {
             };
             buf[ring_chunk(len, p, src)].copy_from_slice(&g);
         }
+        self.barrier.wait();
+    }
+
+    /// Gather-to-root + broadcast (see [`AllReduceStrategy::Tree`]).
+    /// Root 0 folds every contribution in ascending-PE order, so the
+    /// result is bit-equal to the other strategies. One barrier: each
+    /// non-root exchanges exactly one message in each direction with
+    /// the root, so no cross-phase confusion is possible.
+    fn all_reduce_tree(&mut self, buf: &mut [f32]) {
+        let p = self.num_pes;
+        let payload = (buf.len() * 4) as u64;
+        if self.pe == 0 {
+            let mut contribs: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+            for _ in 0..p - 1 {
+                let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+                let Payload::Grads(g) = payload else {
+                    panic!("fabric protocol error: PE 0 expected grads in a reduce round");
+                };
+                contribs[src] = Some(g);
+            }
+            let slices: Vec<&[f32]> = (0..p)
+                .map(|src| if src == 0 { &*buf } else { contribs[src].as_deref().unwrap() })
+                .collect();
+            let acc = canonical_sum(&slices);
+            buf.copy_from_slice(&acc);
+            for (dst, tx) in self.txs.iter().enumerate() {
+                if dst != 0 {
+                    self.cross_grad_gather_bytes += payload;
+                    if !self.topo.same_group(0, dst) {
+                        self.inter_grad_gather_bytes += payload;
+                    }
+                    tx.send((0, Payload::Grads(acc.clone())))
+                        .expect("fabric peer hung up (send)");
+                }
+            }
+        } else {
+            self.cross_grad_reduce_bytes += payload;
+            if !self.topo.same_group(self.pe, 0) {
+                self.inter_grad_reduce_bytes += payload;
+            }
+            self.txs[0]
+                .send((self.pe, Payload::Grads(buf.to_vec())))
+                .expect("fabric peer hung up (send)");
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(g) = payload else {
+                panic!("fabric protocol error: PE {} expected grads in a gather round", self.pe);
+            };
+            debug_assert_eq!(src, 0, "tree gather must come from the root");
+            buf.copy_from_slice(&g);
+        }
+        self.barrier.wait();
+    }
+
+    /// Hierarchical leader-chain all-reduce for replicated topologies.
+    ///
+    /// Members ship their raw buffers to the group leader over fast
+    /// intra-group links; leader `g` folds (prev-chain partial, own
+    /// buffer, members in ascending PE order) and forwards the running
+    /// partial to leader `g+1` over the slow link; the last leader owns
+    /// the full canonical sum and broadcasts it back (leaders first,
+    /// then each leader fans out to its members). Because every fold
+    /// preserves the global ascending-PE order — members' buffers are
+    /// folded *raw*, never pre-summed — the result is bit-identical to
+    /// the flat strategies. Inter-group traffic is `(P/r − 1)·payload`
+    /// per phase instead of the flat `(P − r)·payload`.
+    ///
+    /// Single end-of-round barrier: each (sender, receiver) pair
+    /// exchanges at most one message in each direction, every receive
+    /// is causally ordered behind the sends it waits for, and the
+    /// barrier keeps the next round's messages out.
+    fn all_reduce_hierarchical(&mut self, buf: &mut [f32]) {
+        let topo = self.topo;
+        let r = topo.replication;
+        let groups = topo.groups();
+        let payload = (buf.len() * 4) as u64;
+        let g = topo.group_of(self.pe);
+        let leader = topo.leader(g);
+        if self.pe != leader {
+            // member: raw buffer up to the leader (intra link), final
+            // result back from the leader
+            self.cross_grad_reduce_bytes += payload;
+            self.txs[leader]
+                .send((self.pe, Payload::Grads(buf.to_vec())))
+                .expect("fabric peer hung up (send)");
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(res) = payload else {
+                panic!("fabric protocol error: PE {} expected grads from its leader", self.pe);
+            };
+            debug_assert_eq!(src, leader, "member result must come from its leader");
+            buf.copy_from_slice(&res);
+            self.barrier.wait();
+            return;
+        }
+        // leader: collect r-1 member buffers plus (g > 0) the running
+        // chain partial from the previous leader. The final broadcast
+        // cannot interleave here — it is causally behind this leader's
+        // own chain send.
+        let expected = (r - 1) + usize::from(g > 0);
+        let mut slots: Vec<Option<Vec<f32>>> = (0..self.num_pes).map(|_| None).collect();
+        for _ in 0..expected {
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(gr) = payload else {
+                panic!("fabric protocol error: leader {} expected grads", self.pe);
+            };
+            slots[src] = Some(gr);
+        }
+        let prev = if g > 0 { slots[topo.leader(g - 1)].take() } else { None };
+        // global left-fold order: [partial over PEs 0..g·r) ⊕ own buf
+        // ⊕ members leader+1 .. leader+r-1 ascending
+        let mut contribs: Vec<&[f32]> = Vec::with_capacity(r + 1);
+        if let Some(p) = prev.as_deref() {
+            contribs.push(p);
+        }
+        contribs.push(buf);
+        for m in leader + 1..leader + r {
+            contribs.push(slots[m].as_deref().expect("member contribution missing"));
+        }
+        let acc = canonical_sum(&contribs);
+        let result = if g < groups - 1 {
+            // forward the partial up the chain (inter link), then wait
+            // for the last leader's broadcast
+            self.cross_grad_reduce_bytes += payload;
+            self.inter_grad_reduce_bytes += payload;
+            self.txs[topo.leader(g + 1)]
+                .send((self.pe, Payload::Grads(acc)))
+                .expect("fabric peer hung up (send)");
+            let (src, payload) = self.rx.recv().expect("fabric peer hung up (recv)");
+            let Payload::Grads(res) = payload else {
+                panic!("fabric protocol error: leader {} expected the final sum", self.pe);
+            };
+            debug_assert_eq!(src, topo.leader(groups - 1), "broadcast must come from last leader");
+            res
+        } else {
+            // last leader owns the canonical sum: broadcast to the
+            // other leaders (inter links)
+            for lg in 0..groups - 1 {
+                self.cross_grad_gather_bytes += payload;
+                self.inter_grad_gather_bytes += payload;
+                self.txs[topo.leader(lg)]
+                    .send((self.pe, Payload::Grads(acc.clone())))
+                    .expect("fabric peer hung up (send)");
+            }
+            acc
+        };
+        // fan the result out to this group's members (intra links)
+        for m in leader + 1..leader + r {
+            self.cross_grad_gather_bytes += payload;
+            self.txs[m]
+                .send((self.pe, Payload::Grads(result.clone())))
+                .expect("fabric peer hung up (send)");
+        }
+        buf.copy_from_slice(&result);
         self.barrier.wait();
     }
 }
@@ -907,5 +1315,189 @@ mod tests {
         assert_eq!(rows, vec![vec![0.5; 8]]);
         assert_eq!(ep.cross_rows, 0);
         assert_eq!(ep.local_rows, 2);
+    }
+
+    #[test]
+    fn topology_groups_and_leaders() {
+        let t = Topology::new(8, 2);
+        assert_eq!(t.groups(), 4);
+        assert_eq!(t.group_of(0), 0);
+        assert_eq!(t.group_of(1), 0);
+        assert_eq!(t.group_of(5), 2);
+        assert_eq!(t.leader(2), 4);
+        assert!(t.same_group(4, 5));
+        assert!(!t.same_group(3, 4));
+        // flat: every PE is its own group, leaders are identities
+        let f = Topology::flat(3);
+        assert_eq!(f.groups(), 3);
+        assert!(!f.same_group(0, 1));
+        assert!(f.same_group(2, 2));
+    }
+
+    /// First copy of a key into a remote group is inter traffic; the
+    /// second copy (another member of the same group) could be relayed
+    /// over the fast intra link, and same-group destinations never pay
+    /// the slow link at all.
+    #[test]
+    fn split_send_rows_counts_first_copy_per_group_only() {
+        let t = Topology::new(4, 2); // groups {0,1} and {2,3}
+        // me = 0; dst 1 shares my group (free), dsts 2 and 3 form one
+        // remote group: key 7 goes to both but crosses the slow link once
+        let per_dst: Vec<&[u32]> = vec![&[], &[1, 2, 3], &[7, 8], &[7, 9]];
+        assert_eq!(split_send_rows(&t, 0, &per_dst), 3); // {7, 8, 9}
+        // a bucket addressed to myself is never counted
+        let own: Vec<&[u32]> = vec![&[], &[], &[5, 5, 6], &[]];
+        assert_eq!(split_send_rows(&t, 2, &own), 0);
+        // duplicate keys inside one destination list also count once
+        let dup: Vec<&[u32]> = vec![&[5, 5, 6], &[], &[], &[]];
+        assert_eq!(split_send_rows(&t, 2, &dup), 2); // {5, 6} into group 0
+        // flat topology: every remote destination is its own group, so
+        // every cross copy is inter
+        let f = Topology::flat(3);
+        let flat: Vec<&[u32]> = vec![&[], &[4], &[4]];
+        assert_eq!(split_send_rows(&f, 0, &flat), 2);
+    }
+
+    /// The hierarchical leader-chain all-reduce must be bit-identical
+    /// to the flat canonical sum, and its byte profile must follow the
+    /// chain closed forms: (P−1)·payload cross per phase with only
+    /// (P/r−1)·payload of it on inter-group links — matching the serial
+    /// [`Exchange`] accounting exactly.
+    #[test]
+    fn hierarchical_all_reduce_matches_flat_and_charges_chain_profile() {
+        let (p, r, len) = (4usize, 2usize, 6usize);
+        let topo = Topology::new(p, r);
+        let grads: Vec<Vec<f32>> =
+            (0..p).map(|q| (0..len).map(|i| (q * len + i) as f32 * 0.37 - 1.1).collect()).collect();
+
+        // flat oracle: canonical sum over all PEs in ascending order
+        let mut flat = Exchange::new(p);
+        let mut expect = grads.clone();
+        flat.all_reduce_f32(&mut expect, AllReduceStrategy::Ring);
+
+        // serial replicated exchange charges the chain profile
+        let mut ex = Exchange::with_topology(topo);
+        let mut serial = grads.clone();
+        ex.all_reduce_f32(&mut serial, AllReduceStrategy::Ring);
+        assert_eq!(serial, expect, "serial hierarchical accounting must not change values");
+        let payload = (len * 4) as u64;
+        let g = topo.groups() as u64;
+        assert_eq!(ex.cross_grad_reduce_bytes, (p as u64 - 1) * payload);
+        assert_eq!(ex.cross_grad_gather_bytes, (p as u64 - 1) * payload);
+        assert_eq!(ex.inter_grad_reduce_bytes, (g - 1) * payload);
+        assert_eq!(ex.inter_grad_gather_bytes, (g - 1) * payload);
+
+        // threaded: the strategy argument is overridden by the topology,
+        // so Naive and Ring both take the chain — and stay bit-identical
+        for strategy in [AllReduceStrategy::Naive, AllReduceStrategy::Ring] {
+            let endpoints = Fabric::endpoints_with(topo);
+            let results: Vec<(Vec<f32>, u64, u64, u64, u64)> = std::thread::scope(|scope| {
+                let grads = &grads;
+                let handles: Vec<_> = endpoints
+                    .into_iter()
+                    .map(|mut ep| {
+                        scope.spawn(move || {
+                            let mut buf = grads[ep.pe].clone();
+                            ep.all_reduce_f32(&mut buf, strategy);
+                            (
+                                buf,
+                                ep.cross_grad_reduce_bytes,
+                                ep.cross_grad_gather_bytes,
+                                ep.inter_grad_reduce_bytes,
+                                ep.inter_grad_gather_bytes,
+                            )
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (q, res) in results.iter().enumerate() {
+                assert_eq!(res.0, expect[q], "PE {q} {} hierarchical value", strategy.name());
+            }
+            assert_eq!(results.iter().map(|t| t.1).sum::<u64>(), ex.cross_grad_reduce_bytes);
+            assert_eq!(results.iter().map(|t| t.2).sum::<u64>(), ex.cross_grad_gather_bytes);
+            assert_eq!(results.iter().map(|t| t.3).sum::<u64>(), ex.inter_grad_reduce_bytes);
+            assert_eq!(results.iter().map(|t| t.4).sum::<u64>(), ex.inter_grad_gather_bytes);
+        }
+    }
+
+    /// Tree (gather-to-root + broadcast) is bit-identical to the other
+    /// strategies and moves (P−1)·payload in each phase.
+    #[test]
+    fn tree_all_reduce_is_bit_identical_with_accounted_phases() {
+        let (p, len) = (3usize, 5usize);
+        let grads: Vec<Vec<f32>> =
+            (0..p).map(|q| (0..len).map(|i| (i as f32 + 0.25) * (q as f32 - 1.3)).collect()).collect();
+        let mut ex = Exchange::new(p);
+        let mut serial = grads.clone();
+        ex.all_reduce_f32(&mut serial, AllReduceStrategy::Tree);
+        let payload = (len * 4) as u64;
+        assert_eq!(ex.cross_grad_reduce_bytes, (p as u64 - 1) * payload);
+        assert_eq!(ex.cross_grad_gather_bytes, (p as u64 - 1) * payload);
+
+        let endpoints = Fabric::endpoints(p);
+        let results: Vec<(Vec<f32>, u64, u64)> = std::thread::scope(|scope| {
+            let grads = &grads;
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let mut buf = grads[ep.pe].clone();
+                        ep.all_reduce_f32(&mut buf, AllReduceStrategy::Tree);
+                        (buf, ep.cross_grad_reduce_bytes, ep.cross_grad_gather_bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, res) in results.iter().enumerate() {
+            assert_eq!(res.0, serial[q], "PE {q} tree value");
+        }
+        assert_eq!(results.iter().map(|t| t.1).sum::<u64>(), ex.cross_grad_reduce_bytes);
+        assert_eq!(results.iter().map(|t| t.2).sum::<u64>(), ex.cross_grad_gather_bytes);
+    }
+
+    /// Id rounds classify each bucket by the (src, dst) group pair:
+    /// same-group cross traffic stays off the inter ledger, and serial
+    /// and threaded fabrics agree on both ledgers.
+    #[test]
+    fn id_rounds_classify_inter_group_traffic() {
+        let topo = Topology::new(4, 2);
+        // src-major buckets: PE q sends q+1 ids to every other PE
+        let ids: Vec<Vec<Vec<VertexId>>> = (0..4)
+            .map(|s| {
+                (0..4)
+                    .map(|d| if s == d { vec![] } else { vec![(s * 4 + d) as VertexId; s + 1] })
+                    .collect()
+            })
+            .collect();
+        let mut ex = Exchange::with_topology(topo);
+        let serial = ex.route(&ids, 4);
+        // per src: 3 cross buckets of (s+1) ids, 2 of them inter
+        let cross_expect: u64 = (0..4u64).map(|s| 3 * (s + 1)).sum();
+        let inter_expect: u64 = (0..4u64).map(|s| 2 * (s + 1)).sum();
+        assert_eq!(ex.cross_items, cross_expect);
+        assert_eq!(ex.inter_items, inter_expect);
+        assert_eq!(ex.inter_bytes, inter_expect * 4);
+
+        let endpoints = Fabric::endpoints_with(topo);
+        let results: Vec<(Vec<VertexId>, u64, u64)> = std::thread::scope(|scope| {
+            let ids = &ids;
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let inbox = ep.all_to_all(ids[ep.pe].clone(), 4).concat();
+                        (inbox, ep.inter_items, ep.inter_bytes)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, res) in results.iter().enumerate() {
+            assert_eq!(res.0, serial[q], "PE {q} ids");
+        }
+        assert_eq!(results.iter().map(|t| t.1).sum::<u64>(), ex.inter_items);
+        assert_eq!(results.iter().map(|t| t.2).sum::<u64>(), ex.inter_bytes);
     }
 }

@@ -104,6 +104,11 @@ pub struct EngineConfig {
     /// double-buffer the stream behind a producer thread.
     pub prefetch: bool,
     pub num_pes: usize,
+    /// replica-group size r (1 = flat fabric). Groups of r consecutive
+    /// PEs each hold a full copy of the group's feature shards, so
+    /// cooperative row requests resolve intra-group and only the
+    /// first copy per remote group crosses the slow inter-group link.
+    pub replication: usize,
     /// per-PE batch size b (global batch = b · P).
     pub batch_per_pe: usize,
     pub kind: SamplerKind,
@@ -122,6 +127,7 @@ impl Default for EngineConfig {
             exec: ExecMode::Threaded,
             prefetch: false,
             num_pes: 4,
+            replication: 1,
             batch_per_pe: 1024,
             kind: SamplerKind::Labor0,
             sampler: SamplerConfig::default(),
@@ -158,6 +164,10 @@ pub struct EngineReport {
     /// f32 bytes received over the fabric per batch (α; total across
     /// PEs, averaged over measured batches).
     pub feat_fabric_bytes: f64,
+    /// the slice of `feat_fabric_bytes` that crossed a replica-group
+    /// boundary (first-copy-per-group; equals `feat_fabric_bytes` at
+    /// replication 1, shrinks ≈ r× under `--replication r`).
+    pub feat_fabric_inter_bytes: f64,
     /// miss rate **derived from the byte movement**:
     /// Σ storage bytes / Σ requested bytes over the measured window
     /// (both in wire bytes of the active codec). With the default
@@ -197,6 +207,18 @@ pub struct EngineReport {
     pub wall_batch_ms: f64,
 }
 
+impl EngineReport {
+    /// Total cross-PE fabric bytes per batch across the engine's
+    /// ledgers: sampled ids out + back (4 B each way per cross vertex —
+    /// the [`crate::costmodel::estimate`] convention) plus the measured
+    /// feature-row payloads. Report consumers print this instead of
+    /// re-summing the columns ad hoc.
+    pub fn total_cross_bytes(&self) -> f64 {
+        let id_bytes: f64 = self.cross.iter().map(|c| c * 8.0).sum();
+        id_bytes + self.feat_fabric_bytes
+    }
+}
+
 /// Cross-PE reduction of one batch (max-over-PE counts, totals, dup,
 /// measured bytes).
 struct BatchStats {
@@ -211,6 +233,7 @@ struct BatchStats {
     total_misses: u64,
     storage_bytes: u64,
     fabric_bytes: u64,
+    fabric_inter_bytes: u64,
     requested_bytes: u64,
     hot_rows: u64,
     hot_bytes: u64,
@@ -283,6 +306,7 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
         total_misses: 0,
         storage_bytes: 0,
         fabric_bytes: 0,
+        fabric_inter_bytes: 0,
         requested_bytes: 0,
         hot_rows: 0,
         hot_bytes: 0,
@@ -309,6 +333,7 @@ fn reduce(mode: Mode, layers: usize, per_pe: &[PeWork]) -> BatchStats {
         bs.total_misses += pw.misses;
         bs.storage_bytes += pw.bytes_from_storage;
         bs.fabric_bytes += pw.fabric_bytes;
+        bs.fabric_inter_bytes += pw.fabric_inter_bytes;
         bs.requested_bytes += pw.requested * pw.row_bytes;
         bs.hot_rows += pw.hot_rows;
         bs.hot_bytes += pw.hot_bytes;
@@ -369,6 +394,7 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
         report.feat_fabric_rows += bs.feat_fabric_rows as f64;
         report.feat_storage_bytes += bs.storage_bytes as f64;
         report.feat_fabric_bytes += bs.fabric_bytes as f64;
+        report.feat_fabric_inter_bytes += bs.fabric_inter_bytes as f64;
         report.feat_hot_rows += bs.hot_rows as f64;
         report.feat_hot_bytes += bs.hot_bytes as f64;
         report.prefetch_rows += bs.prefetch_rows as f64;
@@ -397,6 +423,7 @@ fn finalize(mode: Mode, num_pes: usize, layers: usize, stats: &[BatchStats]) -> 
     report.feat_fabric_rows /= m;
     report.feat_storage_bytes /= m;
     report.feat_fabric_bytes /= m;
+    report.feat_fabric_inter_bytes /= m;
     report.feat_hot_rows /= m;
     report.feat_hot_bytes /= m;
     report.prefetch_rows /= m;
@@ -555,6 +582,7 @@ mod tests {
         assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
         assert_eq!(a.feat_storage_bytes, b.feat_storage_bytes, "{ctx}: storage bytes");
         assert_eq!(a.feat_fabric_bytes, b.feat_fabric_bytes, "{ctx}: fabric bytes");
+        assert_eq!(a.feat_fabric_inter_bytes, b.feat_fabric_inter_bytes, "{ctx}: inter bytes");
         assert_eq!(a.derived_miss_rate, b.derived_miss_rate, "{ctx}: derived rate");
         assert_eq!(a.feat_hot_rows, b.feat_hot_rows, "{ctx}: hot rows");
         assert_eq!(a.feat_hot_bytes, b.feat_hot_bytes, "{ctx}: hot bytes");

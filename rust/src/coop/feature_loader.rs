@@ -20,6 +20,21 @@
 //!   the global effective cache is P times larger — the effect Figure 5b
 //!   measures. Output: each PE's dense buffer over its sorted `S̃_p^L`.
 //!
+//! ## Replica groups (mirror serving)
+//!
+//! On a fabric whose [`Topology`] has `replication > 1`, every PE holds
+//! a replica of its group-mates' shards (r× shard memory), so a
+//! requester resolves rows owned by a **same-group** PE from its local
+//! mirror: the owner ships an *empty* bucket (the all-to-all protocol
+//! stays intact) and the requester fills that inbox slot from the store
+//! before assembly — bit-identical because decode is a pure function of
+//! the stored wire bytes. Rows still shipped into *remote* groups are
+//! classified by [`split_send_rows`]: the first copy of each distinct
+//! row into a group crosses the slow link (charged to the `inter_*`
+//! ledgers via `note_inter_rows`), further copies are intra-group
+//! relays. Owner-side cache pulls are untouched, so storage/miss counts
+//! are identical across replication factors.
+//!
 //! Migration note (feature-plane PR): `load_pe` gained
 //! `(store, out)` parameters and returns [`LoadStats`];
 //! `load_independent` takes the store and returns per-PE [`PeLoad`]s
@@ -31,7 +46,7 @@
 //! sampler-retained request lists. Use
 //! [`FeatureTraffic::from_loads`] to recover the old summary shape.
 
-use super::all_to_all::{Exchange, PeEndpoint};
+use super::all_to_all::{split_send_rows, Exchange, PeEndpoint};
 use super::cache::LruCache;
 use crate::feature::{Codec, FeatureStore, Tier};
 use crate::graph::{Partition, VertexId};
@@ -73,6 +88,12 @@ pub struct PeLoad {
     /// wire bytes that arrived over the fabric, measured at the inbox
     /// (encoded size when the codec is not f32).
     pub fabric_bytes: u64,
+    /// wire bytes this PE's *sends* pushed across a replica-group
+    /// boundary (owner-side, first-copy-per-group; see
+    /// [`split_send_rows`]). Fabric-wide totals are the contract — a
+    /// single PE's sent-inter and received-fabric columns need not
+    /// match. Equals `fabric_bytes` summed fabric-wide at r = 1.
+    pub fabric_inter_bytes: u64,
     /// dense row-major input features: `S^L` order (independent) or
     /// sorted `S̃^L` order (cooperative).
     pub features: Vec<f32>,
@@ -96,6 +117,8 @@ pub struct FeatureTraffic {
     pub total_storage_bytes: u64,
     /// wire bytes received over the fabric across PEs (α).
     pub total_fabric_bytes: u64,
+    /// wire bytes that crossed a replica-group boundary across PEs.
+    pub total_fabric_inter_bytes: u64,
     /// misses served by hot tiers across PEs (γ).
     pub total_hot_rows: u64,
     pub total_hot_bytes: u64,
@@ -122,6 +145,7 @@ impl FeatureTraffic {
             t.total_fabric_rows += l.fabric_rows;
             t.total_storage_bytes += l.bytes_from_storage;
             t.total_fabric_bytes += l.fabric_bytes;
+            t.total_fabric_inter_bytes += l.fabric_inter_bytes;
             t.total_hot_rows += l.hot_rows;
             t.total_hot_bytes += l.hot_bytes;
         }
@@ -216,6 +240,7 @@ pub fn load_independent<S: FeatureStore + ?Sized>(
                 hot_bytes: stats.hot_bytes,
                 fabric_rows: 0,
                 fabric_bytes: 0,
+                fabric_inter_bytes: 0,
                 features,
             }
         })
@@ -349,6 +374,23 @@ pub fn load_cooperative<S: FeatureStore + ?Sized>(
 
     let codec = store.codec();
     let row_bytes = store.row_bytes();
+    let topo = exchange.topo;
+
+    // owner-side replica classification: the first copy of each row into
+    // a remote group crosses the slow link (see module docs); charged
+    // here because only the owner sees its per-destination lists
+    for owner in 0..p_count {
+        let per_dst: Vec<&[VertexId]> =
+            (0..p_count).map(|q| final_requests[q][owner].as_slice()).collect();
+        let inter = split_send_rows(&topo, owner, &per_dst);
+        loads[owner].fabric_inter_bytes = inter * row_bytes as u64;
+        exchange.note_inter_rows(inter, inter * row_bytes as u64);
+    }
+    // with replication, same-group requesters are mirror-served: the
+    // owner ships an empty bucket and the requester reads its local
+    // replica of the owner's shard
+    let mirrored = |owner: usize, q: usize| owner != q && topo.same_group(owner, q);
+
     if codec == Codec::F32 {
         // 2. per-(owner, requester) row buckets, along the retained
         //    request lists (requester tilde order by construction)
@@ -356,20 +398,24 @@ pub fn load_cooperative<S: FeatureStore + ?Sized>(
             .map(|owner| {
                 (0..p_count)
                     .map(|q| {
-                        rows_for(
-                            &final_requests[q][owner],
-                            &final_owned[owner],
-                            &owned_rows[owner],
-                            dim,
-                        )
+                        if mirrored(owner, q) {
+                            Vec::new()
+                        } else {
+                            rows_for(
+                                &final_requests[q][owner],
+                                &final_owned[owner],
+                                &owned_rows[owner],
+                                dim,
+                            )
+                        }
                     })
                     .collect()
             })
             .collect();
 
         // 3. the α-bandwidth round + 4. requester-side assembly/accounting
-        let inboxes = exchange.route_rows(buckets, dim);
-        for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter()).enumerate() {
+        let mut inboxes = exchange.route_rows(buckets, dim);
+        for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter_mut()).enumerate() {
             let fabric_bytes: u64 = inbox
                 .iter()
                 .enumerate()
@@ -378,6 +424,12 @@ pub fn load_cooperative<S: FeatureStore + ?Sized>(
                 .sum();
             load.fabric_bytes = fabric_bytes;
             load.fabric_rows = fabric_bytes / (dim as u64 * 4);
+            for o in 0..p_count {
+                if mirrored(o, q) {
+                    debug_assert!(inbox[o].is_empty(), "mirrored owner must ship empty");
+                    store.gather(&final_requests[q][o], &mut inbox[o]);
+                }
+            }
             assemble_rows(&tildes[q], part, inbox, dim, &mut load.features);
         }
     } else {
@@ -386,12 +438,18 @@ pub fn load_cooperative<S: FeatureStore + ?Sized>(
         let buckets: Vec<Vec<Vec<u8>>> = (0..p_count)
             .map(|owner| {
                 (0..p_count)
-                    .map(|q| encoded_rows_for(&final_requests[q][owner], store))
+                    .map(|q| {
+                        if mirrored(owner, q) {
+                            Vec::new()
+                        } else {
+                            encoded_rows_for(&final_requests[q][owner], store)
+                        }
+                    })
                     .collect()
             })
             .collect();
-        let inboxes = exchange.route_encoded_rows(buckets, row_bytes);
-        for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter()).enumerate() {
+        let mut inboxes = exchange.route_encoded_rows(buckets, row_bytes);
+        for (q, (load, inbox)) in loads.iter_mut().zip(inboxes.iter_mut()).enumerate() {
             let fabric_bytes: u64 = inbox
                 .iter()
                 .enumerate()
@@ -400,6 +458,12 @@ pub fn load_cooperative<S: FeatureStore + ?Sized>(
                 .sum();
             load.fabric_bytes = fabric_bytes;
             load.fabric_rows = fabric_bytes / row_bytes as u64;
+            for o in 0..p_count {
+                if mirrored(o, q) {
+                    debug_assert!(inbox[o].is_empty(), "mirrored owner must ship empty");
+                    inbox[o] = encoded_rows_for(&final_requests[q][o], store);
+                }
+            }
             let decoded = decode_inbox(inbox, codec, dim, row_bytes);
             assemble_rows(&tildes[q], part, &decoded, dim, &mut load.features);
         }
@@ -426,33 +490,80 @@ pub fn load_pe_cooperative<S: FeatureStore + ?Sized>(
     let dim = store.dim();
     let codec = store.codec();
     let row_bytes = store.row_bytes();
+    let topo = ep.topo;
+    let me = ep.pe;
     let mut owned_rows = Vec::new();
     let stats = load_pe(final_owned, cache, store, &mut owned_rows);
+
+    // owner-side replica classification (see [`load_cooperative`])
+    let per_dst: Vec<&[VertexId]> = final_requests.iter().map(|v| v.as_slice()).collect();
+    let inter_rows = split_send_rows(&topo, me, &per_dst);
+    let fabric_inter_bytes = inter_rows * row_bytes as u64;
+    ep.note_inter_rows(inter_rows, fabric_inter_bytes);
+
+    // same-group requesters are mirror-served (empty bucket over the
+    // fabric, local replica read at the requester)
+    let mirrored = |owner: usize, q: usize| owner != q && topo.same_group(owner, q);
+    // this PE's own request list to a same-group owner `o` is its tilde
+    // restricted to `o`'s vertices — exactly the bucket it sent `o` in
+    // the last sampling round
+    let my_requests_to = |o: usize| -> Vec<VertexId> {
+        tilde.iter().copied().filter(|&t| part.part_of(t) == o).collect()
+    };
+
     let (fabric_bytes, features) = if codec == Codec::F32 {
         let buckets: Vec<Vec<f32>> = final_requests
             .iter()
-            .map(|ids| rows_for(ids, final_owned, &owned_rows, dim))
+            .enumerate()
+            .map(|(q, ids)| {
+                if mirrored(me, q) {
+                    Vec::new()
+                } else {
+                    rows_for(ids, final_owned, &owned_rows, dim)
+                }
+            })
             .collect();
-        let inbox = ep.all_to_all_rows(buckets, dim);
+        let mut inbox = ep.all_to_all_rows(buckets, dim);
         let fabric_bytes: u64 = inbox
             .iter()
             .enumerate()
-            .filter(|(src, _)| *src != ep.pe)
+            .filter(|(src, _)| *src != me)
             .map(|(_, rows)| rows.len() as u64 * 4)
             .sum();
+        for o in 0..inbox.len() {
+            if mirrored(o, me) {
+                debug_assert!(inbox[o].is_empty(), "mirrored owner must ship empty");
+                store.gather(&my_requests_to(o), &mut inbox[o]);
+            }
+        }
         let mut features = Vec::new();
         assemble_rows(tilde, part, &inbox, dim, &mut features);
         (fabric_bytes, features)
     } else {
-        let buckets: Vec<Vec<u8>> =
-            final_requests.iter().map(|ids| encoded_rows_for(ids, store)).collect();
-        let inbox = ep.all_to_all_encoded_rows(buckets, row_bytes);
+        let buckets: Vec<Vec<u8>> = final_requests
+            .iter()
+            .enumerate()
+            .map(|(q, ids)| {
+                if mirrored(me, q) {
+                    Vec::new()
+                } else {
+                    encoded_rows_for(ids, store)
+                }
+            })
+            .collect();
+        let mut inbox = ep.all_to_all_encoded_rows(buckets, row_bytes);
         let fabric_bytes: u64 = inbox
             .iter()
             .enumerate()
-            .filter(|(src, _)| *src != ep.pe)
+            .filter(|(src, _)| *src != me)
             .map(|(_, bytes)| bytes.len() as u64)
             .sum();
+        for o in 0..inbox.len() {
+            if mirrored(o, me) {
+                debug_assert!(inbox[o].is_empty(), "mirrored owner must ship empty");
+                inbox[o] = encoded_rows_for(&my_requests_to(o), store);
+            }
+        }
         let decoded = decode_inbox(&inbox, codec, dim, row_bytes);
         let mut features = Vec::new();
         assemble_rows(tilde, part, &decoded, dim, &mut features);
@@ -466,6 +577,7 @@ pub fn load_pe_cooperative<S: FeatureStore + ?Sized>(
         hot_bytes: stats.hot_bytes,
         fabric_rows: fabric_bytes / row_bytes as u64,
         fabric_bytes,
+        fabric_inter_bytes,
         features,
     }
 }
@@ -705,6 +817,93 @@ mod tests {
             let bits = |r: &[f32]| r.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(bits(&s.features), bits(&t.features), "PE {q} payload bits");
         }
+    }
+
+    /// Mirror serving at r=2 on 4 PEs: buffers stay bit-identical to the
+    /// flat run, owner-side storage counts do not move, fabric rows drop
+    /// to the remote-group share, and serial == threaded on every ledger.
+    #[test]
+    fn replicated_coop_load_mirror_serves_same_group_rows() {
+        use crate::coop::all_to_all::Topology;
+        let ds = datasets::build("tiny", 6).unwrap();
+        let part = partition::random(&ds.graph, 4, 4);
+        let store = PartitionedFeatureStore::build(&ds, &part);
+        let d = store.dim();
+        let (tildes, final_owned, reqs) = coop_fixture(&ds, &part);
+        let topo = Topology::new(4, 2);
+
+        // flat reference
+        let mut flat_caches: Vec<LruCache> = (0..4).map(|_| LruCache::with_rows(500, d)).collect();
+        let mut flat_ex = Exchange::new(4);
+        let flat = load_cooperative(
+            &tildes, &reqs, &final_owned, &part, &mut flat_caches, &store, &mut flat_ex,
+        );
+
+        // replicated serial
+        let mut caches: Vec<LruCache> = (0..4).map(|_| LruCache::with_rows(500, d)).collect();
+        let mut ex = Exchange::with_topology(topo);
+        let serial =
+            load_cooperative(&tildes, &reqs, &final_owned, &part, &mut caches, &store, &mut ex);
+        let mut flat_fabric = 0u64;
+        let mut repl_fabric = 0u64;
+        for (q, (f, s)) in flat.iter().zip(&serial).enumerate() {
+            assert_eq!(f.features, s.features, "PE {q}: replication must not change payloads");
+            assert_eq!(f.misses, s.misses, "PE {q}: owner pulls unchanged");
+            assert_eq!(f.bytes_from_storage, s.bytes_from_storage, "PE {q}");
+            // same-group rows no longer touch the fabric
+            let remote: u64 = tildes[q]
+                .iter()
+                .filter(|&&t| !topo.same_group(part.part_of(t), q))
+                .count() as u64;
+            assert_eq!(s.fabric_rows, remote, "PE {q} fabric rows = remote-group share");
+            assert!(s.fabric_rows <= f.fabric_rows);
+            flat_fabric += f.fabric_rows;
+            repl_fabric += s.fabric_rows;
+        }
+        assert!(repl_fabric < flat_fabric, "mirror serving must cut fabric rows");
+        // inter ≤ cross: duplicate copies into one remote group are
+        // relayed intra-group after a single boundary crossing
+        assert!(ex.inter_rows <= ex.cross_rows);
+        assert_eq!(ex.cross_rows, repl_fabric);
+        // flat fabric: every cross row is inter (groups are singletons)
+        assert_eq!(flat_ex.inter_rows, flat_ex.cross_rows);
+
+        // threaded == serial on payloads and every ledger
+        let endpoints = Fabric::endpoints_with(topo);
+        let threaded: Vec<(PeLoad, u64, u64)> = std::thread::scope(|scope| {
+            let (tildes, final_owned, reqs, part, store) =
+                (&tildes, &final_owned, &reqs, &part, &store);
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    scope.spawn(move || {
+                        let pe = ep.pe;
+                        let mut cache = LruCache::with_rows(500, d);
+                        let per_src: Vec<Vec<VertexId>> =
+                            (0..4).map(|q| reqs[q][pe].clone()).collect();
+                        let load = load_pe_cooperative(
+                            &mut ep,
+                            part,
+                            &tildes[pe],
+                            &final_owned[pe],
+                            &per_src,
+                            &mut cache,
+                            store,
+                        );
+                        (load, ep.inter_rows, ep.cross_rows)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, (s, (t, _, _))) in serial.iter().zip(&threaded).enumerate() {
+            assert_eq!(s.features, t.features, "PE {q} payloads");
+            assert_eq!(s.fabric_rows, t.fabric_rows, "PE {q} fabric rows");
+            assert_eq!(s.fabric_bytes, t.fabric_bytes, "PE {q} fabric bytes");
+            assert_eq!(s.fabric_inter_bytes, t.fabric_inter_bytes, "PE {q} inter bytes");
+        }
+        assert_eq!(threaded.iter().map(|t| t.1).sum::<u64>(), ex.inter_rows);
+        assert_eq!(threaded.iter().map(|t| t.2).sum::<u64>(), ex.cross_rows);
     }
 
     #[test]

@@ -10,10 +10,18 @@
 //!   redistribution, eliminating duplicate work entirely.
 //! * [`all_to_all`] — the exchange fabric (the NVLink): the serial
 //!   [`Exchange`] reference plus the live channel-based [`Fabric`] /
-//!   [`PeEndpoint`] used by PE threads. It carries two payload classes —
-//!   vertex ids for the sampling rounds and **f32 feature rows** for
-//!   cooperative loading — and accounts every byte moved, which the cost
-//!   model converts into α-bandwidth time.
+//!   [`PeEndpoint`] used by PE threads. It carries three payload classes
+//!   — vertex ids for the sampling rounds, **f32 feature rows** for
+//!   cooperative loading, and gradient buffers for the training plane's
+//!   all-reduce ([`all_to_all::AllReduceStrategy`]) — and accounts every
+//!   byte moved, which the cost model converts into α-bandwidth time. A
+//!   [`Topology`] partitions the PEs into replica groups (fast
+//!   intra-group links, slow inter-group links): every ledger splits
+//!   into cross-PE totals and `inter_*` group-boundary columns, and
+//!   with `--replication r` the gradient all-reduce runs hierarchically
+//!   (leader chain, bit-identical to the flat sum) while
+//!   [`all_to_all::split_send_rows`] classifies which row copies really
+//!   cross the slow links.
 //! * [`cache`] + [`feature_loader`] — per-PE LRU **row** caches (hits
 //!   return bytes from the arena; misses fill from the PE's
 //!   [`crate::feature::FeatureStore`] shard, owned behind each PE's
@@ -43,7 +51,7 @@ pub mod indep;
 pub mod feature_loader;
 pub mod engine;
 
-pub use all_to_all::{Exchange, Fabric, PeEndpoint};
+pub use all_to_all::{AllReduceStrategy, Exchange, Fabric, PeEndpoint, Topology};
 pub use cache::LruCache;
 pub use coop_sampler::{sample_cooperative, sample_cooperative_pe, CoopSample, PeCoopSample};
 pub use indep::{sample_independent, IndepSample};

@@ -17,7 +17,140 @@
 //! | Feature loading  | O(|S^L(B/P)|·dρ/β)               | O(|S_p^L(B)|·dρ/β + |S̃_p^L(B)|·dc/α)          |
 //! | Forward/Backward | O(M(S,E,S')·d/γ)                 | O(M(S_p,E_p,S̃_p)·d/γ + |S̃_p^{l+1}|·dc̃/α)     |
 
+use crate::coop::all_to_all::{AllReduceStrategy, Topology};
 use crate::coop::engine::EngineReport;
+
+/// One link class of the two-level fabric: startup latency α (µs) and
+/// sustained bandwidth (GB/s). The alpha-beta model prices one message
+/// of `b` bytes at `α + b/bw`, the classic cost frame collective
+/// algorithms are compared in.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkCost {
+    pub alpha_us: f64,
+    pub gbps: f64,
+}
+
+impl LinkCost {
+    /// Time to move `bytes` once over this link (µs).
+    pub fn time_us(&self, bytes: f64) -> f64 {
+        self.alpha_us + bytes / (self.gbps * 1e3)
+    }
+}
+
+/// The two link classes of a replicated fabric ([`Topology`]): fast
+/// NVLink-class links within a replica group, slow IB/PCIe-class links
+/// between groups. Defaults follow the paper's Table 4 fast fabric
+/// (600 GB/s) over a 100 GB/s inter-node class; `--intra-bw` /
+/// `--inter-bw` override the bandwidths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricModel {
+    pub intra: LinkCost,
+    pub inter: LinkCost,
+}
+
+impl Default for FabricModel {
+    fn default() -> Self {
+        FabricModel {
+            intra: LinkCost { alpha_us: 2.0, gbps: 600.0 },
+            inter: LinkCost { alpha_us: 10.0, gbps: 100.0 },
+        }
+    }
+}
+
+impl FabricModel {
+    /// Model with CLI-overridden bandwidths (GB/s); `None` keeps the
+    /// class default. Latencies always keep their class defaults.
+    pub fn with_bandwidths(intra_gbps: Option<f64>, inter_gbps: Option<f64>) -> FabricModel {
+        let mut fm = FabricModel::default();
+        if let Some(bw) = intra_gbps {
+            fm.intra.gbps = bw;
+        }
+        if let Some(bw) = inter_gbps {
+            fm.inter.gbps = bw;
+        }
+        fm
+    }
+
+    /// The link class an all-reduce is bound by under `topo`: a flat
+    /// fabric runs entirely on the fast class, a replicated fabric is
+    /// bound by the leader hops on the slow class.
+    pub fn binding_link(&self, topo: &Topology) -> &LinkCost {
+        if topo.replication > 1 {
+            &self.inter
+        } else {
+            &self.intra
+        }
+    }
+}
+
+/// Ceil(log2 p) as f64 (0 for p ≤ 1).
+fn ceil_log2(p: usize) -> f64 {
+    if p <= 1 {
+        0.0
+    } else {
+        (usize::BITS - (p - 1).leading_zeros()) as f64
+    }
+}
+
+/// Modeled per-PE completion time (µs) of one all-reduce of `payload`
+/// bytes among `p` participants over `link`, per strategy:
+///
+/// * `Naive`   — `α + (p−1)·b/bw`: one round of full-buffer sends.
+/// * `Tree`    — `2⌈log₂p⌉·(α + b/bw)`: binomial gather + broadcast.
+/// * `Ring`    — `2(p−1)·α + 2b(p−1)/(p·bw)`: bandwidth-optimal bytes,
+///   linear latency.
+/// * `Rsag`    — `2⌈log₂p⌉·α + 2b(p−1)/(p·bw)`: recursive
+///   reduce-scatter/all-gather, bandwidth-optimal with log latency.
+pub fn collective_time_us(
+    strategy: AllReduceStrategy,
+    p: usize,
+    payload_bytes: u64,
+    link: &LinkCost,
+) -> f64 {
+    let b = payload_bytes as f64;
+    let pf = p as f64;
+    let bw = link.gbps * 1e3; // bytes per µs
+    let logp = ceil_log2(p);
+    match strategy {
+        AllReduceStrategy::Naive => link.alpha_us + (pf - 1.0) * b / bw,
+        AllReduceStrategy::Tree => 2.0 * logp * (link.alpha_us + b / bw),
+        AllReduceStrategy::Ring => 2.0 * (pf - 1.0) * link.alpha_us + 2.0 * b * (pf - 1.0) / (pf * bw),
+        AllReduceStrategy::Rsag => 2.0 * logp * link.alpha_us + 2.0 * b * (pf - 1.0) / (pf * bw),
+    }
+}
+
+/// The cheapest strategy for `payload_bytes` among `p` participants on
+/// `link` under the alpha-beta model: small payloads are latency-bound
+/// (→ `Naive`), large payloads bandwidth-bound (→ `Rsag`), with the
+/// crossover shifting down on higher-latency links. Earlier-listed
+/// strategies win ties.
+pub fn pick_collective_on(p: usize, payload_bytes: u64, link: &LinkCost) -> AllReduceStrategy {
+    if p <= 1 {
+        return AllReduceStrategy::Naive;
+    }
+    let mut best = AllReduceStrategy::Naive;
+    let mut best_t = collective_time_us(best, p, payload_bytes, link);
+    for s in [AllReduceStrategy::Tree, AllReduceStrategy::Ring, AllReduceStrategy::Rsag] {
+        let t = collective_time_us(s, p, payload_bytes, link);
+        if t < best_t {
+            best = s;
+            best_t = t;
+        }
+    }
+    best
+}
+
+/// Strategy pick for a gradient all-reduce of `payload_bytes` on a
+/// fabric shaped by `topo`: flat fabrics reduce among all `P` PEs on
+/// the fast class; replicated fabrics are priced by the inter-group
+/// phase among the `P/r` group leaders on the slow class (the
+/// intra-group hops ride the fast links and are never binding). This is
+/// what `--allreduce auto` resolves through, and the pick is logged in
+/// the training reports.
+pub fn pick_collective(payload_bytes: u64, topo: &Topology, fm: &FabricModel) -> AllReduceStrategy {
+    let participants = if topo.replication > 1 { topo.groups() } else { topo.num_pes };
+    pick_collective_on(participants, payload_bytes, fm.binding_link(topo))
+}
 
 /// Hardware constants for one multi-GPU system (paper Table 4 header).
 #[derive(Clone, Debug)]
@@ -284,6 +417,30 @@ mod tests {
         let v = preset("16xV100").unwrap();
         assert_eq!((v.gamma, v.alpha, v.beta), (900.0, 300.0, 32.0));
         assert!(preset("nope").is_none());
+    }
+
+    #[test]
+    fn pick_collective_spans_payloads_and_link_classes() {
+        let fm = FabricModel::default();
+        let flat = Topology::flat(8);
+        let repl = Topology::new(16, 2); // 8 leaders over the slow class
+        // small payloads are latency-bound: Naive on both link classes
+        assert_eq!(pick_collective(4 * 1024, &flat, &fm), AllReduceStrategy::Naive);
+        assert_eq!(pick_collective(4 * 1024, &repl, &fm), AllReduceStrategy::Naive);
+        // large payloads are bandwidth-bound: Rsag on both link classes
+        assert_eq!(pick_collective(64 << 20, &flat, &fm), AllReduceStrategy::Rsag);
+        assert_eq!(pick_collective(64 << 20, &repl, &fm), AllReduceStrategy::Rsag);
+        // the slow class pays 5x the startup latency, so its crossover
+        // sits lower: a ~1 MB payload is still latency-bound on intra
+        // links but already bandwidth-bound on inter links
+        assert_eq!(pick_collective_on(8, 1_000_000, &fm.intra), AllReduceStrategy::Naive);
+        assert_eq!(pick_collective_on(8, 1_000_000, &fm.inter), AllReduceStrategy::Rsag);
+        // degenerate fabrics have nothing to pick
+        assert_eq!(pick_collective_on(1, 1 << 30, &fm.inter), AllReduceStrategy::Naive);
+        // bandwidth overrides move the crossover: starving the intra
+        // class makes even the ~1 MB payload bandwidth-bound there
+        let slow = FabricModel::with_bandwidths(Some(10.0), None);
+        assert_eq!(pick_collective_on(8, 1_000_000, &slow.intra), AllReduceStrategy::Rsag);
     }
 
     #[test]

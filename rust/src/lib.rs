@@ -39,6 +39,27 @@
 //! capacity. The f32/untiered default is pinned bit-identical to the
 //! legacy store in `tests/integration_storage.rs`.
 //!
+//! ## The fabric plane: replica groups and topology-aware collectives
+//!
+//! The fabric is topology-aware: a [`coop::all_to_all::Topology`]
+//! partitions the PEs into replica groups of `r` consecutive PEs
+//! (`--replication r`), with fast intra-group links and slow
+//! inter-group links priced per class by [`costmodel::FabricModel`]
+//! (`--intra-bw` / `--inter-bw`). Every cross-PE ledger — ids, feature
+//! rows, activations, gradients — splits into a total and an `inter_*`
+//! group-boundary column. Under replication, each group holds a replica
+//! of its members' shards (r× shard memory), so feature rows resolve
+//! inside the local group, duplicate row sends into a remote group
+//! cross the boundary once ([`coop::all_to_all::split_send_rows`]), and
+//! the gradient all-reduce runs hierarchically (intra-group reduce,
+//! leader chain, intra-group fan-out) — **bit-identical** to the flat
+//! canonical sum, with inter-group bytes per phase shrinking from
+//! `(P−1)` to `(P/r−1)` payloads. [`costmodel::pick_collective`]
+//! chooses among [`coop::all_to_all::AllReduceStrategy`]'s
+//! naive/tree/ring/rsag from the alpha-beta link model (`--allreduce
+//! auto`), and `repro end2end --replication r` emits the per-r
+//! inter-group byte table at pinned-identical training trajectories.
+//!
 //! ## One pipeline behind everything
 //!
 //! The public API is organized around [`pipeline`]: a typed
@@ -58,9 +79,10 @@
 //! * [`train::ParallelTrainer`] is the **multi-PE training plane**: one
 //!   trainer replica per PE over an [`pipeline::EngineStream`], kept in
 //!   bit-identical lockstep by a gradient all-reduce on the fabric
-//!   ([`coop::all_to_all::PeEndpoint::all_reduce_f32`], ring/naive) —
-//!   `repro end2end` and `train --train-pes N` run through it, natively
-//!   in this build;
+//!   ([`coop::all_to_all::PeEndpoint::all_reduce_f32`];
+//!   naive/tree/ring/rsag or costmodel-picked via `--allreduce auto`,
+//!   hierarchical under `--replication`) — `repro end2end` and
+//!   `train --train-pes N` run through it, natively in this build;
 //! * κ > 1 dependent minibatching is a [`sampling::Kappa`] knob on the
 //!   same streams;
 //! * [`serve`] is the **online inference serving plane**: a virtual-time

@@ -6,10 +6,13 @@
 //!               [--fanout K | K,K,..] [--kappa K] [--sampler ns|labor0|labor*|rw]
 //!               [--lr F] [--eval-every N]            # host backend (default)
 //! coopgnn train --backend pjrt --config NAME [..]    # AOT/PJRT backend
-//! coopgnn train --train-pes P [--mode coop|indep] [--batch B] [--allreduce ring|naive]
+//! coopgnn train --train-pes P [--mode coop|indep] [--batch B]
+//!               [--allreduce naive|tree|ring|rsag|auto] [--replication r]
+//!               [--intra-bw GBPS] [--inter-bw GBPS]
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
 //!               [--exec serial|threaded] [--codec f32|fp16|int8] [--hot-mb N]
+//!               [--replication r]
 //! coopgnn serve --rate R --slo-ms MS --batcher fixed|adaptive
 //!               [--duration-batches N] [--pes P] [--mode coop|indep]
 //! coopgnn caps --dataset NAME --batch B [--sampler S]
@@ -49,6 +52,9 @@ const REPRO_SPECS: &[ArgSpec] = &[
     val("exec", "serial|threaded (default: threaded)"),
     val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
     val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
+    val("replication", "replica-group size r; must divide the PE count (default: 1)"),
+    val("intra-bw", "intra-group link bandwidth in GB/s for the cost model (default: 600)"),
+    val("inter-bw", "inter-group link bandwidth in GB/s for the cost model (default: 100)"),
 ];
 
 const TRAIN_SPECS: &[ArgSpec] = &[
@@ -73,9 +79,13 @@ const TRAIN_SPECS: &[ArgSpec] = &[
          compute + gradient all-reduce; needs no PJRT/artifacts)"),
     val("mode", "coop|indep minibatching for --train-pes (default: coop)"),
     val("batch", "per-PE batch size (--train-pes) or host-backend seed batch (default: 256)"),
-    val("allreduce", "ring|naive gradient all-reduce strategy (default: ring)"),
+    val("allreduce", "naive|tree|ring|rsag|auto gradient all-reduce strategy; auto picks \
+         by the alpha-beta cost model (default: ring)"),
     val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
     val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
+    val("replication", "replica-group size r for --train-pes; must divide P (default: 1)"),
+    val("intra-bw", "intra-group link bandwidth in GB/s for the cost model (default: 600)"),
+    val("inter-bw", "inter-group link bandwidth in GB/s for the cost model (default: 100)"),
 ];
 
 const ENGINE_SPECS: &[ArgSpec] = &[
@@ -96,6 +106,7 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
     val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
     val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
+    val("replication", "replica-group size r; must divide the PE count (default: 1)"),
 ];
 
 const SERVE_SPECS: &[ArgSpec] = &[
@@ -118,6 +129,7 @@ const SERVE_SPECS: &[ArgSpec] = &[
     val("seed", "rng seed (default: pipeline::DEFAULT_SEED)"),
     val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
     val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
+    val("replication", "replica-group size r; must divide the PE count (default: 1)"),
 ];
 
 const CAPS_SPECS: &[ArgSpec] = &[
@@ -148,7 +160,11 @@ fn real_main() -> coopgnn::Result<()> {
                     .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
                 codec,
                 hot_mb,
+                replication: rest.or("replication", 1usize)?,
+                intra_bw: rest.opt("intra-bw")?,
+                inter_bw: rest.opt("inter-bw")?,
             };
+            anyhow::ensure!(ctx.replication >= 1, "--replication must be >= 1");
             repro::run(id, &ctx)
         }
         "train" => cmd_train(&ArgMap::parse(&argv[1..], TRAIN_SPECS)?),
@@ -194,8 +210,7 @@ fn parse_fanouts(s: &str) -> coopgnn::Result<Vec<usize>> {
 /// artifacts).
 fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
     anyhow::ensure!(pes >= 1, "--train-pes must be >= 1");
-    let strategy = AllReduceStrategy::parse(args.get_or("allreduce", "ring"))
-        .ok_or_else(|| anyhow::anyhow!("bad --allreduce (ring|naive)"))?;
+    let allreduce_arg = args.get_or("allreduce", "ring");
     let (codec, hot_mb) = parse_storage(args)?;
     let mut b = PipelineBuilder::new()
         .dataset(args.get_or("dataset", "tiny"))
@@ -222,24 +237,42 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
         .fanouts(&parse_fanouts(args.get_or("fanout", "10"))?)
         .layers(args.or("layers", 3usize)?)
         .hidden(args.or("hidden", 16usize)?)
+        .replication(args.or("replication", 1usize)?)
         .seed(args.or("seed", DEFAULT_SEED)?);
+    if let Some(gbps) = args.opt::<f64>("intra-bw")? {
+        b = b.intra_bw(gbps);
+    }
+    if let Some(gbps) = args.opt::<f64>("inter-bw")? {
+        b = b.inter_bw(gbps);
+    }
     if let Some(ml) = args.opt::<usize>("model-layers")? {
         b = b.model_layers(ml);
     }
     let pipe = b.build()?;
+    // `auto` resolves through the alpha-beta cost model against this
+    // run's gradient payload and topology; named strategies are forced.
+    let strategy = if allreduce_arg == "auto" {
+        pipe.collective_for_grads()
+    } else {
+        AllReduceStrategy::parse(allreduce_arg)
+            .ok_or_else(|| anyhow::anyhow!("bad --allreduce (naive|tree|ring|rsag|auto)"))?
+    };
     let steps = args.or("steps", 300usize)?;
     let lr = args.or("lr", 0.05f32)?;
     anyhow::ensure!(lr > 0.0, "--lr must be positive");
     let prefetch = args.bool01("prefetch", false)?;
     let mut trainer = pipe.parallel_trainer(lr, strategy);
     println!(
-        "multi-PE training plane: {} on {}, {} PEs x batch {} ({} exec, {} all-reduce{})",
+        "multi-PE training plane: {} on {}, {} PEs x batch {} ({} exec, {} all-reduce{}, \
+         replication {}{})",
         pipe.cfg.mode.name(),
         pipe.ds.name,
         pes,
         pipe.cfg.batch_per_pe,
         pipe.cfg.exec.name(),
         strategy.name(),
+        if allreduce_arg == "auto" { " [auto]" } else { "" },
+        pipe.cfg.replication,
         if prefetch { ", prefetch on" } else { "" }
     );
     let t0 = std::time::Instant::now();
@@ -271,6 +304,14 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
         rep.grad_bytes_per_step / 1024.0
     );
     println!(
+        "inter-group bytes/step: {:.1} KiB feature + {:.1} KiB activation + {:.1} KiB \
+         gradient ({} collective)",
+        rep.fabric_inter_bytes_per_step / 1024.0,
+        rep.act_inter_bytes_per_step / 1024.0,
+        rep.grad_inter_bytes_per_step / 1024.0,
+        rep.collective
+    );
+    println!(
         "loss {:.4} -> {:.4}, batch acc {:.3}, val acc {:.4} (replicas bit-identical: yes)",
         rep.first_loss, rep.last_loss, rep.last_acc, val_acc
     );
@@ -291,7 +332,7 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         }
         return cmd_train_parallel(args, pes);
     }
-    for key in ["mode", "allreduce"] {
+    for key in ["mode", "allreduce", "replication", "intra-bw", "inter-bw"] {
         anyhow::ensure!(
             !args.has(key),
             "--{key} only applies to the multi-PE training plane; add --train-pes N"
@@ -515,6 +556,7 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
         )
         .fanouts(&parse_fanouts(args.get_or("fanout", "10"))?)
         .layers(args.or("layers", 3usize)?)
+        .replication(args.or("replication", 1usize)?)
         .prefetch(args.bool01("prefetch", false)?)
         .warmup_batches(args.or("warmup", 4usize)?)
         .measure_batches(args.or("batches", 8usize)?)
@@ -545,6 +587,13 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
         r.feat_storage_bytes / 1024.0,
         r.feat_fabric_bytes / 1024.0,
         r.derived_miss_rate
+    );
+    println!(
+        "fabric plane: replication {} — {:.1} KiB/batch total cross-PE (ids + rows), \
+         {:.1} KiB inter-group",
+        pipe.cfg.replication,
+        r.total_cross_bytes() / 1024.0,
+        r.feat_fabric_inter_bytes / 1024.0
     );
     println!(
         "storage plane: codec {} ({} B/row wire, {} B/row decoded); hot tier {} MiB — \
@@ -589,6 +638,7 @@ fn cmd_serve(args: &ArgMap) -> coopgnn::Result<()> {
                 .ok_or_else(|| anyhow::anyhow!("bad --exec (serial|threaded)"))?,
         )
         .num_pes(args.or("pes", 4usize)?)
+        .replication(args.or("replication", 1usize)?)
         .kappa(
             Kappa::parse(args.get_or("kappa", "1"))
                 .ok_or_else(|| anyhow::anyhow!("bad --kappa"))?,
@@ -709,7 +759,7 @@ fn print_usage() {
          \x20 coopgnn repro <fig3|table3|fig5|fig5a|fig5b|table4|table5|table6|table7|fig9|\n\
          \x20        scaling|end2end|serve|all> [--out DIR] [--quick] [--seed N]\n\
          \x20        [--artifacts DIR] [--exec serial|threaded] [--codec f32|fp16|int8]\n\
-         \x20        [--hot-mb N]\n\
+         \x20        [--hot-mb N] [--replication r] [--intra-bw GBPS] [--inter-bw GBPS]\n\
          \x20 coopgnn train [--backend host|pjrt] [--dataset NAME] [--steps N] [--kappa K|inf]\n\
          \x20        [--sampler ns|labor0|labor*|rw] [--fanout K|K,K,..] [--layers L] [--hidden H]\n\
          \x20        [--batch B] [--lr F] [--eval-every N] [--seed N] [--prefetch 0|1]\n\
@@ -717,18 +767,22 @@ fn print_usage() {
          \x20        (host backend: layered GNN compute plane, no artifacts needed;\n\
          \x20         --backend pjrt --config NAME takes shape/batch from the artifact)\n\
          \x20 coopgnn train --train-pes P [--mode coop|indep] [--dataset NAME] [--batch B]\n\
-         \x20        [--layers L] [--hidden H] [--fanout K|K,K,..] [--allreduce ring|naive]\n\
+         \x20        [--layers L] [--hidden H] [--fanout K|K,K,..]\n\
+         \x20        [--allreduce naive|tree|ring|rsag|auto] [--replication r]\n\
+         \x20        [--intra-bw GBPS] [--inter-bw GBPS]\n\
          \x20        [--steps N] [--lr F] [--prefetch 0|1]\n\
          \x20        (multi-PE training plane: per-PE layered replicas + activation exchange +\n\
-         \x20         fabric gradient all-reduce, runs without PJRT artifacts)\n\
+         \x20         fabric gradient all-reduce; --replication r serves same-group rows\n\
+         \x20         locally and reduces gradients hierarchically; --allreduce auto picks\n\
+         \x20         by the alpha-beta cost model)\n\
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
-         \x20        [--prefetch 0|1] [--codec f32|fp16|int8] [--hot-mb N]\n\
+         \x20        [--prefetch 0|1] [--codec f32|fp16|int8] [--hot-mb N] [--replication r]\n\
          \x20 coopgnn serve [--dataset NAME] [--pes P] [--mode coop|indep] [--rate R]\n\
          \x20        [--slo-ms MS] [--batcher fixed|adaptive] [--duration-batches N]\n\
          \x20        [--batch B] [--workload open|closed] [--kappa K] [--cache ROWS]\n\
          \x20        [--exec serial|threaded] [--prefetch 0|1] [--codec f32|fp16|int8]\n\
-         \x20        [--hot-mb N]\n\
+         \x20        [--hot-mb N] [--replication r]\n\
          \x20        (online inference: virtual-time SLO-aware dynamic cooperative batching)\n\
          \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
          \x20 coopgnn info"

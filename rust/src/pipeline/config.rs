@@ -4,8 +4,9 @@
 
 use super::stream::EngineStream;
 use super::train_stream::Batching;
-use crate::coop::all_to_all::AllReduceStrategy;
+use crate::coop::all_to_all::{AllReduceStrategy, Topology};
 use crate::coop::engine::{self, EngineConfig, EngineReport, ExecMode, Mode};
+use crate::costmodel::{pick_collective, FabricModel};
 use crate::feature::{Codec, FeatureStore, PartitionedFeatureStore, TieredStore};
 use crate::graph::{datasets, partition, Csr, Dataset, Partition};
 use crate::model::ModelDims;
@@ -72,6 +73,18 @@ pub struct PipelineConfig {
     pub mode: Mode,
     pub exec: ExecMode,
     pub num_pes: usize,
+    /// replica-group size r (`--replication r`, default 1 = flat
+    /// fabric). Groups of r consecutive PEs each hold a full replica of
+    /// the group's feature shards (r× shard memory), so cooperative row
+    /// requests resolve within the group and only the first copy per
+    /// remote group crosses the slow inter-group link; gradient
+    /// all-reduces run hierarchically. Must divide `num_pes`.
+    pub replication: usize,
+    /// intra-group link bandwidth override in GB/s (`--intra-bw`;
+    /// `None` = the costmodel's default fast link).
+    pub intra_bw: Option<f64>,
+    /// inter-group link bandwidth override in GB/s (`--inter-bw`).
+    pub inter_bw: Option<f64>,
     /// per-PE batch size b (global batch = b · P).
     pub batch_per_pe: usize,
     pub partitioner: Partitioner,
@@ -121,6 +134,9 @@ impl Default for PipelineConfig {
             mode: Mode::Independent,
             exec: ExecMode::Threaded,
             num_pes: 4,
+            replication: 1,
+            intra_bw: None,
+            inter_bw: None,
             batch_per_pe: 1024,
             partitioner: Partitioner::Random,
             kind: SamplerKind::Labor0,
@@ -143,6 +159,13 @@ impl Default for PipelineConfig {
 impl PipelineConfig {
     pub fn validate(&self) -> crate::Result<()> {
         anyhow::ensure!(self.num_pes >= 1, "pipeline needs at least one PE");
+        anyhow::ensure!(self.replication >= 1, "replication factor must be >= 1");
+        anyhow::ensure!(
+            self.num_pes % self.replication == 0,
+            "replication ({}) must divide the PE count ({})",
+            self.replication,
+            self.num_pes
+        );
         anyhow::ensure!(self.batch_per_pe >= 1, "per-PE batch size must be >= 1");
         anyhow::ensure!(self.layers >= 1, "pipeline needs at least one GNN layer");
         anyhow::ensure!(!self.fanout.is_empty(), "sampler fanout list must not be empty");
@@ -218,6 +241,7 @@ impl PipelineConfig {
             mode: self.mode,
             exec: self.exec,
             num_pes: self.num_pes,
+            replication: self.replication,
             batch_per_pe: self.batch_per_pe,
             kind: self.kind,
             sampler: self.sampler_config(),
@@ -229,6 +253,17 @@ impl PipelineConfig {
             measure_batches: self.measure_batches,
             seed: self.seed,
         }
+    }
+
+    /// The replica-group layout of this pipeline's fabrics.
+    pub fn topology(&self) -> Topology {
+        Topology::new(self.num_pes, self.replication)
+    }
+
+    /// The alpha-beta link model of this pipeline's fabric, with any
+    /// `--intra-bw` / `--inter-bw` overrides applied.
+    pub fn fabric_model(&self) -> FabricModel {
+        FabricModel::with_bandwidths(self.intra_bw, self.inter_bw)
     }
 
     /// Trainer options mirroring this pipeline (sampler, κ, fanout,
@@ -284,6 +319,25 @@ impl PipelineBuilder {
 
     pub fn batch_per_pe(mut self, b: usize) -> Self {
         self.cfg.batch_per_pe = b;
+        self
+    }
+
+    /// Replica-group size r (must divide the PE count — validated at
+    /// build time).
+    pub fn replication(mut self, r: usize) -> Self {
+        self.cfg.replication = r;
+        self
+    }
+
+    /// Intra-group link bandwidth override in GB/s.
+    pub fn intra_bw(mut self, gbps: f64) -> Self {
+        self.cfg.intra_bw = Some(gbps);
+        self
+    }
+
+    /// Inter-group link bandwidth override in GB/s.
+    pub fn inter_bw(mut self, gbps: f64) -> Self {
+        self.cfg.inter_bw = Some(gbps);
         self
     }
 
@@ -468,14 +522,33 @@ impl Pipeline {
     /// the stream and the trainer must agree on `num_pes` *and* depth,
     /// which this constructor guarantees.
     pub fn parallel_trainer(&self, lr: f32, strategy: AllReduceStrategy) -> ParallelTrainer {
-        ParallelTrainer::new(
-            self.cfg.num_pes,
+        ParallelTrainer::with_topology(
+            self.cfg.topology(),
             self.model_dims(),
             self.cfg.seed,
             lr,
             self.cfg.exec,
             strategy,
         )
+    }
+
+    /// The costmodel's all-reduce pick for this pipeline's gradient
+    /// payload (the trainer's flat `[grads | loss | correct | n]`
+    /// buffer) on the binding link class — how the CLI's
+    /// `--allreduce auto` resolves before the trainer is built. The
+    /// resolved choice lands in [`crate::train::ParallelRunReport`]'s
+    /// `collective` column.
+    pub fn collective_for_grads(&self) -> AllReduceStrategy {
+        let payload = (self.model_dims().num_scalars() + 3) as u64 * 4;
+        pick_collective(payload, &self.cfg.topology(), &self.cfg.fabric_model())
+    }
+
+    /// Change the replica-group size (the partition and feature store
+    /// are unchanged: the shard layout stays P-way, replication only
+    /// redirects which copies cross the slow link).
+    pub fn set_replication(&mut self, r: usize) {
+        assert!(r >= 1 && self.cfg.num_pes % r == 0, "replication must divide the PE count");
+        self.cfg.replication = r;
     }
 
     /// Re-partition the current graph with a different partitioner.
@@ -559,6 +632,20 @@ mod tests {
         let pt = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
         assert_eq!(pt.dims(), dims);
         assert_eq!(pt.num_pes(), pipe.cfg.num_pes);
+    }
+
+    #[test]
+    fn replication_must_divide_pe_count() {
+        assert!(PipelineBuilder::new().num_pes(4).replication(3).build().is_err());
+        assert!(PipelineBuilder::new().num_pes(4).replication(0).build().is_err());
+        let mut pipe =
+            PipelineBuilder::new().dataset("tiny").num_pes(4).replication(2).build().unwrap();
+        assert_eq!(pipe.cfg.topology().groups(), 2);
+        assert_eq!(pipe.cfg.engine_config(&pipe.ds).replication, 2);
+        // a small gradient payload on the default links is latency-bound
+        assert_eq!(pipe.collective_for_grads(), AllReduceStrategy::Naive);
+        pipe.set_replication(4);
+        assert_eq!(pipe.cfg.topology().groups(), 1);
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //! `coop::engine`). Training streams live in [`super::train_stream`];
 //! the double-buffered producer wrapper lives in [`super::prefetch`].
 
-use crate::coop::all_to_all::{Exchange, Fabric, PeEndpoint};
+use crate::coop::all_to_all::{Exchange, Fabric, PeEndpoint, Topology};
 use crate::coop::cache::LruCache;
 use crate::coop::coop_sampler::{sample_cooperative, sample_cooperative_pe, PeLayer};
 use crate::coop::engine::{EngineConfig, ExecMode, Mode};
@@ -69,6 +69,10 @@ pub struct PeWork {
     pub bytes_from_storage: u64,
     /// wire bytes that arrived over the fabric this batch (α).
     pub fabric_bytes: u64,
+    /// wire bytes this PE's row sends pushed across a replica-group
+    /// boundary (owner-side classified; equals the fabric-wide
+    /// `fabric_bytes` when summed at replication 1).
+    pub fabric_inter_bytes: u64,
     /// cache misses served by the store's hot tier this batch (γ).
     pub hot_rows: u64,
     /// decoded bytes those hot fills moved.
@@ -240,10 +244,11 @@ pub(crate) fn coop_pe_work(
 ) -> PeWork {
     let mut counts_s: Vec<u64> = pe_layers.iter().map(|pl| pl.owned.len() as u64).collect();
     counts_s.push(load.requested);
-    debug_assert_eq!(
-        load.fabric_rows,
-        pe_layers[layers - 1].cross as u64,
-        "measured fabric rows must equal the sampled cross count"
+    // equality at replication 1; with replica groups the same-group share
+    // of the sampled cross count is mirror-served off the fabric
+    debug_assert!(
+        load.fabric_rows <= pe_layers[layers - 1].cross as u64,
+        "measured fabric rows cannot exceed the sampled cross count"
     );
     PeWork {
         counts_s,
@@ -257,6 +262,7 @@ pub(crate) fn coop_pe_work(
         dim,
         bytes_from_storage: load.bytes_from_storage,
         fabric_bytes: load.fabric_bytes,
+        fabric_inter_bytes: load.fabric_inter_bytes,
         hot_rows: load.hot_rows,
         hot_bytes: load.hot_bytes,
         prefetch_rows: 0,
@@ -293,6 +299,7 @@ pub(crate) fn indep_pe_work(
         dim,
         bytes_from_storage: load.bytes_from_storage,
         fabric_bytes: 0,
+        fabric_inter_bytes: 0,
         hot_rows: load.hot_rows,
         hot_bytes: load.hot_bytes,
         prefetch_rows: 0,
@@ -328,6 +335,7 @@ pub(crate) fn load_indep_pe<S: FeatureStore + ?Sized>(
         hot_bytes: stats.hot_bytes,
         fabric_rows: 0,
         fabric_bytes: 0,
+        fabric_inter_bytes: 0,
         features,
     }
 }
@@ -374,6 +382,8 @@ pub struct EngineStream<'d> {
     samplers: Vec<Sampler<'d>>,
     caches: Vec<LruCache>,
     seed_rngs: Vec<Pcg64>,
+    /// replica-group layout shared by every fabric this stream builds.
+    topo: Topology,
     /// live fabric endpoints (cooperative + threaded only).
     endpoints: Vec<Option<PeEndpoint>>,
     /// when set, each `next_batch` predicts the *next* batch's seed
@@ -409,9 +419,10 @@ impl<'d> EngineStream<'d> {
         let p = cfg.num_pes;
         let g = &dataset.graph;
         let codec = store.codec();
+        let topo = Topology::new(p, cfg.replication);
         let endpoints: Vec<Option<PeEndpoint>> =
             if cfg.mode == Mode::Cooperative && cfg.exec == ExecMode::Threaded {
-                Fabric::endpoints(p).into_iter().map(Some).collect()
+                Fabric::endpoints_with(topo).into_iter().map(Some).collect()
             } else {
                 (0..p).map(|_| None).collect()
             };
@@ -439,6 +450,7 @@ impl<'d> EngineStream<'d> {
                 })
                 .collect(),
             seed_rngs: (0..p).map(|pe| Pcg64::new(pe_seed(cfg.seed, pe))).collect(),
+            topo,
             endpoints,
             prefetch: cfg.prefetch,
             index: 0,
@@ -577,7 +589,7 @@ impl<'d> EngineStream<'d> {
                 let t = Timer::start();
                 let tildes: Vec<Vec<VertexId>> =
                     coop.layers[layers - 1].iter().map(|pl| pl.tilde.clone()).collect();
-                let mut row_fabric = Exchange::new(p_count);
+                let mut row_fabric = Exchange::with_topology(self.topo);
                 let loads = load_cooperative(
                     &tildes,
                     &coop.final_requests,

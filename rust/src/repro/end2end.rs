@@ -52,19 +52,30 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "loss_first",
             "loss_last",
             "coop_vs_indep",
+            "inter_KiB_step",
+            "collective",
         ],
     );
     for &p in pe_counts {
+        // the requested replica-group size where the PE count allows it
+        let r = if p % ctx.replication == 0 { ctx.replication } else { 1 };
         let mut per_mode: Vec<(Mode, ParallelRunReport)> = Vec::new();
         for mode in [Mode::Independent, Mode::Cooperative] {
-            let pipe = PipelineBuilder::new()
+            let mut b = PipelineBuilder::new()
                 .dataset(ds_name)
                 .mode(mode)
                 .exec(ctx.exec)
                 .num_pes(p)
+                .replication(r)
                 .batch_per_pe(batch_per_pe)
-                .seed(ctx.seed)
-                .build()?;
+                .seed(ctx.seed);
+            if let Some(gbps) = ctx.intra_bw {
+                b = b.intra_bw(gbps);
+            }
+            if let Some(gbps) = ctx.inter_bw {
+                b = b.inter_bw(gbps);
+            }
+            let pipe = b.build()?;
             let mut stream = pipe.stream();
             let mut trainer = pipe.parallel_trainer(lr, AllReduceStrategy::Ring);
             let rep = trainer.run(&mut stream, steps, &pipe.ds.labels);
@@ -99,6 +110,8 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.4}", rep.first_loss),
                 format!("{:.4}", rep.last_loss),
                 ratio,
+                format!("{:.1}", total_inter_bytes(rep) / 1024.0),
+                rep.collective.to_string(),
             ]);
         }
     }
@@ -107,6 +120,108 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
     println!(
         "end2end: coop_vs_indep > 1.00x reproduces the paper's end-to-end speedup direction \
          (CPU-thread PEs; magnitudes are not calibrated to the paper's GPUs)"
+    );
+    if ctx.replication > 1 {
+        replication_table(ctx, ds_name, *pe_counts.last().unwrap(), batch_per_pe, steps, lr)?;
+    }
+    Ok(())
+}
+
+/// The inter-group slice of every fabric ledger (feature rows +
+/// activations + gradients), per step.
+fn total_inter_bytes(rep: &ParallelRunReport) -> f64 {
+    rep.fabric_inter_bytes_per_step + rep.act_inter_bytes_per_step + rep.grad_inter_bytes_per_step
+}
+
+/// One cooperative training run at replica-group size `r`; also returns
+/// the costmodel's collective pick for the gradient payload (what
+/// `--allreduce auto` would resolve to on this topology).
+fn replicated_run(
+    ctx: &Ctx,
+    ds_name: &str,
+    p: usize,
+    r: usize,
+    batch_per_pe: usize,
+    steps: usize,
+    lr: f32,
+) -> crate::Result<(ParallelRunReport, AllReduceStrategy)> {
+    let mut b = PipelineBuilder::new()
+        .dataset(ds_name)
+        .mode(Mode::Cooperative)
+        .exec(ctx.exec)
+        .num_pes(p)
+        .replication(r)
+        .batch_per_pe(batch_per_pe)
+        .seed(ctx.seed);
+    if let Some(gbps) = ctx.intra_bw {
+        b = b.intra_bw(gbps);
+    }
+    if let Some(gbps) = ctx.inter_bw {
+        b = b.inter_bw(gbps);
+    }
+    let pipe = b.build()?;
+    let picked = pipe.collective_for_grads();
+    let mut stream = pipe.stream();
+    let mut trainer = pipe.parallel_trainer(lr, AllReduceStrategy::Ring);
+    let rep = trainer.run(&mut stream, steps, &pipe.ds.labels);
+    anyhow::ensure!(
+        trainer.replicas_in_lockstep(),
+        "end2end: {p}-PE r={r} replicas diverged"
+    );
+    Ok((rep, picked))
+}
+
+/// The communication-avoiding sweep: cooperative bytes/step at growing
+/// replica-group sizes, same partition and seeds — the trajectory is
+/// bit-identical across rows, only the ledger split moves.
+fn replication_table(
+    ctx: &Ctx,
+    ds_name: &str,
+    p: usize,
+    batch_per_pe: usize,
+    steps: usize,
+    lr: f32,
+) -> crate::Result<()> {
+    let mut table = Table::new(
+        "Communication-avoiding replication: cooperative inter-group bytes/step vs r",
+        &[
+            "PEs",
+            "r",
+            "inter_KiB_step",
+            "fabric_inter_KiB",
+            "act_inter_KiB",
+            "grad_inter_KiB",
+            "vs_r1",
+            "loss_last",
+            "auto_pick",
+        ],
+    );
+    let mut base: Option<f64> = None;
+    for r in [1usize, 2, 4] {
+        if p % r != 0 {
+            continue;
+        }
+        let (rep, picked) = replicated_run(ctx, ds_name, p, r, batch_per_pe, steps, lr)?;
+        let inter = total_inter_bytes(&rep);
+        let b = *base.get_or_insert(inter);
+        table.push_row(&[
+            p.to_string(),
+            r.to_string(),
+            format!("{:.1}", inter / 1024.0),
+            format!("{:.1}", rep.fabric_inter_bytes_per_step / 1024.0),
+            format!("{:.1}", rep.act_inter_bytes_per_step / 1024.0),
+            format!("{:.1}", rep.grad_inter_bytes_per_step / 1024.0),
+            if inter > 0.0 { format!("{:.2}x", b / inter) } else { "-".to_string() },
+            format!("{:.4}", rep.last_loss),
+            picked.name().to_string(),
+        ]);
+        println!("end2end: replication P={p} r={r} done");
+    }
+    table.write(&ctx.out, "end2end_replication")?;
+    println!("{}", table.to_markdown());
+    println!(
+        "end2end: vs_r1 tracks the (P-1)/(P/r-1) inter-group reduction at bit-identical losses \
+         (each group serves its replica's rows over the fast local links)"
     );
     Ok(())
 }
@@ -172,5 +287,40 @@ mod tests {
             "serial and threaded end2end trajectories must match exactly"
         );
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The communication-avoiding acceptance gate: at 8 PEs, replica
+    /// groups cut the inter-group fabric bytes/step by >= 1.8x (r=2)
+    /// and >= 3.5x (r=4) vs the flat fabric, at a training trajectory
+    /// that stays **bit-identical** — replication redirects copies onto
+    /// fast local links, it never changes what is computed.
+    #[test]
+    fn replication_cuts_inter_bytes_at_identical_trajectories() {
+        let ctx = Ctx::default();
+        let (p, b, steps, lr) = (8usize, 96usize, 4usize, 0.05f32);
+        let (r1, _) = replicated_run(&ctx, "tiny", p, 1, b, steps, lr).unwrap();
+        let (r2, _) = replicated_run(&ctx, "tiny", p, 2, b, steps, lr).unwrap();
+        let (r4, _) = replicated_run(&ctx, "tiny", p, 4, b, steps, lr).unwrap();
+        for (r, rep) in [(2, &r2), (4, &r4)] {
+            assert_eq!(
+                r1.first_loss.to_bits(),
+                rep.first_loss.to_bits(),
+                "r={r}: first loss must be bit-identical to flat"
+            );
+            assert_eq!(
+                r1.last_loss.to_bits(),
+                rep.last_loss.to_bits(),
+                "r={r}: last loss must be bit-identical to flat"
+            );
+        }
+        // on the flat fabric every ledger's inter slice IS its cross total
+        assert_eq!(r1.fabric_inter_bytes_per_step, r1.fabric_bytes_per_step);
+        assert_eq!(r1.grad_inter_bytes_per_step, r1.grad_bytes_per_step);
+        assert_eq!(r1.act_inter_bytes_per_step, r1.act_bytes_per_step);
+        let (i1, i2, i4) =
+            (total_inter_bytes(&r1), total_inter_bytes(&r2), total_inter_bytes(&r4));
+        assert!(i1 > 0.0 && i2 > 0.0 && i4 > 0.0, "inter ledgers must be measured");
+        assert!(i1 / i2 >= 1.8, "r=2 must cut inter bytes >= 1.8x: {i1:.0} vs {i2:.0}");
+        assert!(i1 / i4 >= 3.5, "r=4 must cut inter bytes >= 3.5x: {i1:.0} vs {i4:.0}");
     }
 }

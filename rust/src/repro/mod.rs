@@ -54,6 +54,14 @@ pub struct Ctx {
     pub codec: Codec,
     /// hot-tier budget in MiB (0 = untiered).
     pub hot_mb: usize,
+    /// replica-group size (`--replication r`; 1 = flat fabric). The
+    /// fabric-sensitive harnesses (`end2end`, `scaling`) additionally
+    /// sweep r into comparison rows where the PE count allows.
+    pub replication: usize,
+    /// intra-group link bandwidth override in GB/s (`--intra-bw`).
+    pub intra_bw: Option<f64>,
+    /// inter-group link bandwidth override in GB/s (`--inter-bw`).
+    pub inter_bw: Option<f64>,
 }
 
 impl Default for Ctx {
@@ -66,6 +74,9 @@ impl Default for Ctx {
             exec: ExecMode::Threaded,
             codec: Codec::F32,
             hot_mb: 0,
+            replication: 1,
+            intra_bw: None,
+            inter_bw: None,
         }
     }
 }

@@ -27,7 +27,16 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         .build()?;
     let mut table = Table::new(
         "F/B per-PE time vs #cooperating PEs (fixed b per PE; paper §4.3)",
-        &["PEs", "global_batch", "S3_per_pe", "fb_ms_est", "fb_vs_1pe"],
+        &[
+            "PEs",
+            "r",
+            "global_batch",
+            "S3_per_pe",
+            "cross_KiB_batch",
+            "row_inter_KiB",
+            "fb_ms_est",
+            "fb_vs_1pe",
+        ],
     );
     let mut fb1 = None;
     for p in [1usize, 2, 3, 4] {
@@ -39,6 +48,9 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             beta: 64.0,
         };
         pipe.set_num_pes(p);
+        // the requested replica-group size where the PE count allows it
+        let repl = if p % ctx.replication == 0 { ctx.replication } else { 1 };
+        pipe.set_replication(repl);
         pipe.cfg.batch_per_pe = b.min(pipe.ds.train.len() / p).max(16);
         let r = pipe.engine_report();
         let t = estimate(&r, &preset, &model, pipe.ds.feat_dim);
@@ -48,8 +60,11 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
         }
         table.push_row(&[
             p.to_string(),
+            repl.to_string(),
             (pipe.cfg.batch_per_pe * p).to_string(),
             format!("{:.0}", r.s[3]),
+            format!("{:.1}", r.total_cross_bytes() / 1024.0),
+            format!("{:.1}", r.feat_fabric_inter_bytes / 1024.0),
             format!("{fb:.2}"),
             format!("{:.3}", fb / fb1.unwrap()),
         ]);

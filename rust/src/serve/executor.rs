@@ -135,6 +135,9 @@ pub struct BatchExecution {
     pub storage_bytes: u64,
     /// feature-row wire bytes over the fabric across PEs (α).
     pub fabric_bytes: u64,
+    /// the slice of `fabric_bytes` that crossed a replica-group
+    /// boundary (equals `fabric_bytes` on a flat fabric).
+    pub fabric_inter_bytes: u64,
     /// cache fills served decoded out of the hot tier across PEs
     /// (0 without a tiered store).
     pub hot_rows: u64,
@@ -242,6 +245,7 @@ impl<'p> Executor<'p> {
             service_us,
             storage_bytes: mb.per_pe.iter().map(|w| w.bytes_from_storage).sum(),
             fabric_bytes: mb.per_pe.iter().map(|w| w.fabric_bytes).sum(),
+            fabric_inter_bytes: mb.per_pe.iter().map(|w| w.fabric_inter_bytes).sum(),
             hot_rows: mb.per_pe.iter().map(|w| w.hot_rows).sum(),
             hot_bytes: mb.per_pe.iter().map(|w| w.hot_bytes).sum(),
             requested_rows: mb.per_pe.iter().map(|w| w.requested).sum(),

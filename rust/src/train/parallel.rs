@@ -41,7 +41,9 @@
 //! [`ParallelTrainer::predictor`] instead of reaching into the
 //! parameters.
 
-use crate::coop::all_to_all::{AllReduceStrategy, Exchange, Fabric, PeEndpoint};
+use crate::coop::all_to_all::{
+    split_send_rows, AllReduceStrategy, Exchange, Fabric, PeEndpoint, Topology,
+};
 use crate::coop::engine::ExecMode;
 use crate::graph::VertexId;
 use crate::model::host::PeStep;
@@ -72,6 +74,12 @@ pub struct ParallelStepStats {
     /// cross-PE hidden-activation bytes this step (forward rows +
     /// backward gradient rows; cooperative mode only).
     pub act_bytes: u64,
+    /// the slice of `grad_bytes` that crossed a replica-group boundary
+    /// (equals `grad_bytes` on a flat fabric).
+    pub grad_inter_bytes: u64,
+    /// the slice of `act_bytes` that crossed a replica-group boundary
+    /// (first-copy-per-group; equals `act_bytes` on a flat fabric).
+    pub act_inter_bytes: u64,
 }
 
 /// Aggregates of a [`ParallelTrainer::run`] drive (per-step averages
@@ -96,6 +104,16 @@ pub struct ParallelRunReport {
     /// hidden-activation bytes over the fabric per step (all PEs,
     /// cooperative mode; 0 for independent).
     pub act_bytes_per_step: f64,
+    /// inter-group slices of the fabric ledgers (feature rows /
+    /// gradients / activations). On a flat fabric (replication 1) each
+    /// equals its cross twin; under `--replication r` they shrink while
+    /// the trajectory stays bit-identical.
+    pub fabric_inter_bytes_per_step: f64,
+    pub grad_inter_bytes_per_step: f64,
+    pub act_inter_bytes_per_step: f64,
+    /// name of the all-reduce algorithm the run used (the
+    /// costmodel-picked choice when the caller resolved `auto`).
+    pub collective: &'static str,
     pub first_loss: f32,
     pub last_loss: f32,
     pub last_acc: f32,
@@ -119,6 +137,9 @@ pub struct LayerProfile {
 /// the module docs for the full contract.
 pub struct ParallelTrainer {
     num_pes: usize,
+    /// replica-group layout of the trainer-private fabric (flat unless
+    /// built via [`ParallelTrainer::with_topology`]).
+    topo: Topology,
     dims: ModelDims,
     lr: f32,
     exec: ExecMode,
@@ -145,6 +166,23 @@ impl ParallelTrainer {
         exec: ExecMode,
         strategy: AllReduceStrategy,
     ) -> ParallelTrainer {
+        ParallelTrainer::with_topology(Topology::flat(num_pes), dims, seed, lr, exec, strategy)
+    }
+
+    /// Like [`ParallelTrainer::new`] but over a replica-grouped fabric:
+    /// gradient all-reduces run hierarchically (intra-group chain,
+    /// leader chain across groups, intra-group fan-out — bit-identical
+    /// to the flat canonical sum) and the inter-group ledger slices
+    /// shrink accordingly. `topo` fixes the PE count.
+    pub fn with_topology(
+        topo: Topology,
+        dims: ModelDims,
+        seed: u64,
+        lr: f32,
+        exec: ExecMode,
+        strategy: AllReduceStrategy,
+    ) -> ParallelTrainer {
+        let num_pes = topo.num_pes;
         assert!(
             num_pes >= 1 && dims.layers >= 1 && dims.d_in >= 1 && dims.classes >= 2,
             "degenerate trainer shape"
@@ -152,18 +190,21 @@ impl ParallelTrainer {
         assert!(dims.layers == 1 || dims.hidden >= 1, "hidden width must be >= 1");
         let replicas = (0..num_pes).map(|_| dims.init_state(seed ^ 0xFACE)).collect();
         let endpoints: Vec<Option<PeEndpoint>> = match exec {
-            ExecMode::Threaded => Fabric::endpoints(num_pes).into_iter().map(Some).collect(),
+            ExecMode::Threaded => {
+                Fabric::endpoints_with(topo).into_iter().map(Some).collect()
+            }
             ExecMode::Serial => (0..num_pes).map(|_| None).collect(),
         };
         ParallelTrainer {
             num_pes,
+            topo,
             dims,
             lr,
             exec,
             strategy,
             replicas,
             endpoints,
-            serial_fabric: Exchange::new(num_pes),
+            serial_fabric: Exchange::with_topology(topo),
             profile: LayerProfile {
                 gather_ms: vec![0.0; dims.layers],
                 matmul_ms: vec![0.0; dims.layers],
@@ -216,6 +257,20 @@ impl ParallelTrainer {
             + self.serial_fabric.cross_grad_gather_bytes
     }
 
+    /// The slice of [`ParallelTrainer::grad_bytes_total`] that crossed
+    /// a replica-group boundary (equal to it on a flat fabric).
+    pub fn grad_inter_bytes_total(&self) -> u64 {
+        let threaded: u64 = self
+            .endpoints
+            .iter()
+            .flatten()
+            .map(|ep| ep.inter_grad_reduce_bytes + ep.inter_grad_gather_bytes)
+            .sum();
+        threaded
+            + self.serial_fabric.inter_grad_reduce_bytes
+            + self.serial_fabric.inter_grad_gather_bytes
+    }
+
     /// Total cross-PE hidden-activation bytes so far (forward rows and
     /// backward gradient rows of the cooperative layered step; the
     /// trainer-private fabric carries no feature rows, so this counter
@@ -224,6 +279,16 @@ impl ParallelTrainer {
         let threaded: u64 =
             self.endpoints.iter().flatten().map(|ep| ep.cross_row_bytes).sum();
         threaded + self.serial_fabric.cross_row_bytes
+    }
+
+    /// The slice of [`ParallelTrainer::act_bytes_total`] that crossed a
+    /// replica-group boundary, counted first-copy-per-remote-group (a
+    /// row fanned out to several PEs of one remote group pays the slow
+    /// link once; its backward gradient retraces the same route).
+    pub fn act_inter_bytes_total(&self) -> u64 {
+        let threaded: u64 =
+            self.endpoints.iter().flatten().map(|ep| ep.inter_row_bytes).sum();
+        threaded + self.serial_fabric.inter_row_bytes
     }
 
     /// A forward-only parameter snapshot of the lockstep model (replica
@@ -246,6 +311,8 @@ impl ParallelTrainer {
         let coop = batch_is_cooperative(&mb.per_pe);
         let grad_before = self.grad_bytes_total();
         let act_before = self.act_bytes_total();
+        let grad_inter_before = self.grad_inter_bytes_total();
+        let act_inter_before = self.act_inter_bytes_total();
         let wall = Timer::start();
         let (dims, lr, strategy) = (self.dims, self.lr, self.strategy);
         let gl = dims.num_scalars();
@@ -329,6 +396,8 @@ impl ParallelTrainer {
             allreduce_ms,
             grad_bytes: self.grad_bytes_total() - grad_before,
             act_bytes: self.act_bytes_total() - act_before,
+            grad_inter_bytes: self.grad_inter_bytes_total() - grad_inter_before,
+            act_inter_bytes: self.act_inter_bytes_total() - act_inter_before,
         }
     }
 
@@ -342,7 +411,11 @@ impl ParallelTrainer {
         steps: usize,
         labels: &[u16],
     ) -> ParallelRunReport {
-        let mut rep = ParallelRunReport { steps, ..Default::default() };
+        let mut rep = ParallelRunReport {
+            steps,
+            collective: self.strategy.name(),
+            ..Default::default()
+        };
         let run = Timer::start();
         for step in 0..steps {
             let mb = stream.next_batch();
@@ -352,11 +425,15 @@ impl ParallelTrainer {
                 mb.per_pe.iter().map(|w| w.bytes_from_storage).sum::<u64>() as f64;
             rep.fabric_bytes_per_step +=
                 mb.per_pe.iter().map(|w| w.fabric_bytes).sum::<u64>() as f64;
+            rep.fabric_inter_bytes_per_step +=
+                mb.per_pe.iter().map(|w| w.fabric_inter_bytes).sum::<u64>() as f64;
             let s = self.step(&mb, labels);
             rep.compute_ms += s.compute_ms;
             rep.allreduce_ms += s.allreduce_ms;
             rep.grad_bytes_per_step += s.grad_bytes as f64;
             rep.act_bytes_per_step += s.act_bytes as f64;
+            rep.grad_inter_bytes_per_step += s.grad_inter_bytes as f64;
+            rep.act_inter_bytes_per_step += s.act_inter_bytes as f64;
             if step == 0 {
                 rep.first_loss = s.loss;
             }
@@ -374,6 +451,9 @@ impl ParallelTrainer {
         rep.fabric_bytes_per_step /= m;
         rep.grad_bytes_per_step /= m;
         rep.act_bytes_per_step /= m;
+        rep.fabric_inter_bytes_per_step /= m;
+        rep.grad_inter_bytes_per_step /= m;
+        rep.act_inter_bytes_per_step /= m;
         rep
     }
 
@@ -461,10 +541,17 @@ fn pe_local_grads(
     for l in (0..dims.layers - 1).rev() {
         if coop {
             let buckets = step.send_rows(l);
-            let inbox = ep
-                .as_mut()
-                .expect("cooperative rounds need a fabric endpoint")
-                .all_to_all_rows(buckets, dims.hidden);
+            let ep = ep.as_mut().expect("cooperative rounds need a fabric endpoint");
+            // classify this level's outgoing activation rows: a row
+            // fanned out to several PEs of one remote group pays the
+            // slow link once, and its backward gradient row retraces
+            // the same route — hence the x2
+            let routes = comp.routes.as_ref().expect("cooperative routes");
+            let per_dst: Vec<&[u32]> =
+                routes.send_pos[l].iter().map(|v| v.as_slice()).collect();
+            let inter = split_send_rows(&ep.topo, ep.pe, &per_dst);
+            ep.note_inter_rows(inter * 2, inter * 2 * dims.hidden as u64 * 4);
+            let inbox = ep.all_to_all_rows(buckets, dims.hidden);
             step.forward_level(l, Some(inbox));
         } else {
             step.forward_level(l, None);
@@ -519,6 +606,20 @@ fn serial_minibatch_grads(
     }
     for l in (0..dims.layers - 1).rev() {
         if coop {
+            // same per-PE inter classification as the threaded path
+            // (forward row + backward gradient row per first copy)
+            let topo = fabric.topo;
+            for (me, work) in per_pe.iter().enumerate() {
+                let routes = work
+                    .compute
+                    .as_ref()
+                    .and_then(|c| c.routes.as_ref())
+                    .expect("coop payload");
+                let per_dst: Vec<&[u32]> =
+                    routes.send_pos[l].iter().map(|v| v.as_slice()).collect();
+                let inter = split_send_rows(&topo, me, &per_dst);
+                fabric.note_inter_rows(inter * 2, inter * 2 * dims.hidden as u64 * 4);
+            }
             let buckets: Vec<Vec<Vec<f32>>> = steps
                 .iter()
                 .map(|s| s.as_ref().expect("coop payload").send_rows(l))

@@ -33,6 +33,7 @@ fn assert_counts_identical(a: &EngineReport, b: &EngineReport, ctx: &str) {
     assert_eq!(a.cache_miss_rate, b.cache_miss_rate, "{ctx}: miss rate");
     assert_eq!(a.feat_storage_bytes, b.feat_storage_bytes, "{ctx}: storage bytes");
     assert_eq!(a.feat_fabric_bytes, b.feat_fabric_bytes, "{ctx}: fabric bytes");
+    assert_eq!(a.feat_fabric_inter_bytes, b.feat_fabric_inter_bytes, "{ctx}: inter bytes");
     assert_eq!(a.derived_miss_rate, b.derived_miss_rate, "{ctx}: derived rate");
     assert_eq!(a.dup_factor, b.dup_factor, "{ctx}: dup");
 }

@@ -525,7 +525,12 @@ fn prop_all_reduce_equals_sum_then_broadcast_oracle() {
                 *a += x;
             }
         }
-        for strategy in [AllReduceStrategy::Naive, AllReduceStrategy::Ring] {
+        for strategy in [
+            AllReduceStrategy::Naive,
+            AllReduceStrategy::Tree,
+            AllReduceStrategy::Ring,
+            AllReduceStrategy::Rsag,
+        ] {
             let endpoints = Fabric::endpoints(p);
             let results: Vec<(Vec<f32>, u64, u64)> = std::thread::scope(|scope| {
                 let inputs = &inputs;
@@ -563,15 +568,20 @@ fn prop_all_reduce_equals_sum_then_broadcast_oracle() {
                         prop_assert!(*g == 0, "naive PE {q}: unexpected gather bytes");
                     }
                 }
-                AllReduceStrategy::Ring => {
+                // tree and the chunked schedules all move the full
+                // payload across the fabric once per non-root/owner PE
+                // in each phase
+                AllReduceStrategy::Tree
+                | AllReduceStrategy::Ring
+                | AllReduceStrategy::Rsag => {
                     prop_assert!(
                         reduce_total == (p as u64 - 1) * payload,
-                        "ring reduce total {reduce_total} != (P-1)*payload {payload}*{}",
+                        "{strategy:?} reduce total {reduce_total} != (P-1)*payload {payload}*{}",
                         p - 1
                     );
                     prop_assert!(
                         gather_total == (p as u64 - 1) * payload,
-                        "ring gather total {gather_total} != (P-1)*payload"
+                        "{strategy:?} gather total {gather_total} != (P-1)*payload"
                     );
                 }
             }
@@ -592,6 +602,124 @@ fn prop_all_reduce_equals_sum_then_broadcast_oracle() {
                 "{strategy:?}: serial byte accounting != endpoint totals"
             );
         }
+        Ok(())
+    });
+}
+
+/// The replicated-fabric all-reduce: at every replica-group size r ∈
+/// {1, 2, 4} the result is **bit-identical** to the flat canonical sum
+/// (the hierarchical leader chain folds in the same ascending-PE
+/// order), serial == threaded, and the inter-group gradient bytes match
+/// the closed-form `(P/r - 1) · payload` per phase — the
+/// communication-avoiding profile (with r = 1, G = P and the profile
+/// degenerates to the flat chunked one).
+#[test]
+fn prop_hierarchical_all_reduce_bit_identical_with_closed_form_inter_bytes() {
+    use coopgnn::coop::all_to_all::{AllReduceStrategy, Fabric, Topology};
+    check("hierarchical-all-reduce", 0xA15, 20, |rng| {
+        let r = [1usize, 2, 4][rng.next_below(3) as usize];
+        let groups = 1 + rng.next_below((8 / r) as u64) as usize;
+        let p = r * groups;
+        let len = rng.next_below(40) as usize;
+        let topo = Topology::new(p, r);
+        let inputs: Vec<Vec<f32>> = (0..p)
+            .map(|_| (0..len).map(|_| (rng.next_f64() * 4.0 - 2.0) as f32).collect())
+            .collect();
+        // the flat canonical oracle, cross-checked against the flat
+        // Naive and Ring serial fabrics (all three must agree bitwise)
+        let mut oracle = inputs[0].clone();
+        for src in 1..p {
+            for (a, &x) in oracle.iter_mut().zip(&inputs[src]) {
+                *a += x;
+            }
+        }
+        for flat in [AllReduceStrategy::Naive, AllReduceStrategy::Ring] {
+            let mut ex = Exchange::new(p);
+            let mut bufs = inputs.clone();
+            ex.all_reduce_f32(&mut bufs, flat);
+            for (q, b) in bufs.iter().enumerate() {
+                prop_assert!(
+                    b.iter().zip(&oracle).all(|(a, o)| a.to_bits() == o.to_bits()),
+                    "flat {flat:?} PE {q} != canonical oracle"
+                );
+            }
+        }
+        // threaded replicated fabric (at r > 1 the strategy is
+        // overridden by the hierarchical leader chain)
+        let endpoints = Fabric::endpoints_with(topo);
+        let results: Vec<(Vec<f32>, u64, u64, u64, u64)> = std::thread::scope(|scope| {
+            let inputs = &inputs;
+            let handles: Vec<_> = endpoints
+                .into_iter()
+                .map(|mut ep| {
+                    let mut buf = inputs[ep.pe].clone();
+                    scope.spawn(move || {
+                        ep.all_reduce_f32(&mut buf, AllReduceStrategy::Ring);
+                        (
+                            buf,
+                            ep.cross_grad_reduce_bytes,
+                            ep.cross_grad_gather_bytes,
+                            ep.inter_grad_reduce_bytes,
+                            ep.inter_grad_gather_bytes,
+                        )
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for (q, (buf, ..)) in results.iter().enumerate() {
+            prop_assert!(
+                buf.iter().zip(&oracle).all(|(a, o)| a.to_bits() == o.to_bits()),
+                "P={p} r={r} PE {q}: hierarchical result != flat canonical sum"
+            );
+        }
+        // the communication-avoiding closed form, per phase
+        let payload = (len * 4) as u64;
+        let cross_form = (p as u64 - 1) * payload;
+        let inter_form = (groups as u64 - 1) * payload;
+        let sum = |i: usize| -> u64 {
+            results
+                .iter()
+                .map(|t| match i {
+                    1 => t.1,
+                    2 => t.2,
+                    3 => t.3,
+                    _ => t.4,
+                })
+                .sum()
+        };
+        if p > 1 {
+            prop_assert!(
+                sum(1) == cross_form && sum(2) == cross_form,
+                "P={p} r={r}: cross per phase {} / {} != (P-1)*payload {cross_form}",
+                sum(1),
+                sum(2)
+            );
+        }
+        prop_assert!(
+            sum(3) == inter_form && sum(4) == inter_form,
+            "P={p} r={r}: inter per phase {} / {} != (P/r-1)*payload {inter_form}",
+            sum(3),
+            sum(4)
+        );
+        // serial twin: same result bits, same ledger totals
+        let mut ex = Exchange::with_topology(topo);
+        let mut bufs = inputs.clone();
+        ex.all_reduce_f32(&mut bufs, AllReduceStrategy::Ring);
+        for (q, b) in bufs.iter().enumerate() {
+            prop_assert!(
+                b.iter().zip(&oracle).all(|(a, o)| a.to_bits() == o.to_bits()),
+                "P={p} r={r} serial PE {q} != oracle"
+            );
+        }
+        prop_assert!(
+            ex.inter_grad_reduce_bytes == sum(3) && ex.inter_grad_gather_bytes == sum(4),
+            "P={p} r={r}: serial inter ledgers != threaded totals"
+        );
+        prop_assert!(
+            ex.cross_grad_reduce_bytes == sum(1) && ex.cross_grad_gather_bytes == sum(2),
+            "P={p} r={r}: serial cross ledgers != threaded totals"
+        );
         Ok(())
     });
 }
