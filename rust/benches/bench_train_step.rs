@@ -32,6 +32,9 @@
 //! per-batch breakdown (sample / pad / feature / execute). Skips
 //! cleanly otherwise.
 
+// Benches are timing harnesses (coopgnn-lint allowlists rust/benches/).
+#![allow(clippy::disallowed_methods)]
+
 use coopgnn::coop::all_to_all::AllReduceStrategy;
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::pipeline::{

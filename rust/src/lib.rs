@@ -151,6 +151,11 @@
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a harness in [`repro`].
 
+// The whole crate is safe Rust: the threaded engine uses scoped threads
+// and channels, the stores are plain Vecs. Enforced so the nightly
+// Miri/TSan CI jobs stay meaningful (and cheap to reason about).
+#![forbid(unsafe_code)]
+
 pub mod util;
 pub mod graph;
 pub mod feature;

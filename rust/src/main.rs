@@ -24,6 +24,10 @@
 //! `pipeline::PipelineBuilder`. All seed defaults are
 //! `pipeline::DEFAULT_SEED`.
 
+// Allowlisted timing file (coopgnn-lint `wallclock` + clippy
+// disallowed-methods): outer CLI timers around whole subcommands.
+#![allow(clippy::disallowed_methods)]
+
 use coopgnn::coop::all_to_all::AllReduceStrategy;
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::feature::Codec;

@@ -1,6 +1,10 @@
 //! Lightweight named counters + wall-clock accumulators used by the coop
 //! engine, the trainer, and the repro harnesses.
 
+// Allowlisted timing module (coopgnn-lint `wallclock` + clippy
+// disallowed-methods): phase timings feed report columns only.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::BTreeMap;
 use std::time::Instant;
 

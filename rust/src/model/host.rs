@@ -17,6 +17,11 @@
 //!   work in deterministic order, so serial and threaded execution of
 //!   the same minibatch are bit-identical.
 
+// Allowlisted timing module (coopgnn-lint `wallclock` + clippy
+// disallowed-methods): kernel-profiling reads feed compute_ms
+// breakdowns only; no model math depends on them.
+#![allow(clippy::disallowed_methods)]
+
 use super::{blocks_from_mfg, kernels, GnnModel, ModelDims, PeCompute, TrainMetrics};
 use crate::runtime::tensors::ParamState;
 use crate::sampling::Mfg;

@@ -46,6 +46,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "req_per_s",
             "storage_KiB_req",
             "fabric_KiB_req",
+            "fabric_inter_KiB_req",
             "bytes_per_req",
             "slo_viol_pct",
             "coop_adaptive_vs_indep_fixed_bytes",
@@ -110,6 +111,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.0}", r.requests_per_s),
                 format!("{:.1}", r.storage_bytes_per_req / 1024.0),
                 format!("{:.1}", r.fabric_bytes_per_req / 1024.0),
+                format!("{:.3}", r.fabric_inter_bytes_per_req / 1024.0),
                 format!("{:.0}", r.bytes_per_req()),
                 format!("{:.2}", r.slo_violation_rate * 100.0),
                 ratio,
@@ -162,6 +164,7 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             format!("{:.0}", r.requests_per_s),
             format!("{:.1}", r.storage_bytes_per_req / 1024.0),
             format!("{:.1}", r.fabric_bytes_per_req / 1024.0),
+            format!("{:.3}", r.fabric_inter_bytes_per_req / 1024.0),
             format!("{:.0}", r.bytes_per_req()),
             format!("{:.2}", r.slo_violation_rate * 100.0),
             "-".to_string(),
@@ -202,13 +205,17 @@ mod tests {
         for r in &rows[..4] {
             let served: u64 = r[3].parse().unwrap();
             let p99: f64 = r[7].parse().unwrap();
-            let b_req: f64 = r[11].parse().unwrap();
+            let b_req: f64 = r[12].parse().unwrap();
             assert!(served > 0, "every arm serves requests: {r:?}");
             assert!(p99 > 0.0, "latencies are measured: {r:?}");
             assert!(b_req > 0.0, "bytes move: {r:?}");
             if r[1] == "Coop" {
                 let fabric: f64 = r[10].parse().unwrap();
                 assert!(fabric > 0.0, "coop arms ship fabric rows: {r:?}");
+                // conservation: the inter slice can never exceed the
+                // fabric total it was carved from
+                let inter: f64 = r[11].parse().unwrap();
+                assert!(inter <= fabric + 1e-9, "inter slice exceeds fabric total: {r:?}");
             }
             bytes.insert((r[1].clone(), r[2].clone()), b_req);
         }
@@ -229,7 +236,7 @@ mod tests {
                 r[3], sweep[0][3],
                 "admitted request sets must be codec-invariant: {r:?}"
             );
-            by_codec.insert(r[14].clone(), r[11].parse::<f64>().unwrap());
+            by_codec.insert(r[15].clone(), r[12].parse::<f64>().unwrap());
         }
         let (f32b, fp16b, int8b) = (by_codec["f32"], by_codec["fp16"], by_codec["int8"]);
         assert!(

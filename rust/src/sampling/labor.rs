@@ -232,7 +232,7 @@ mod tests {
     use super::*;
     use crate::graph::generate;
     use crate::sampling::Kappa;
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
 
     fn run0(g: &Csr, seeds: &[u32], fanout: usize, seed: u64) -> Neighborhoods {
         let rng = DependentRng::new(seed, Kappa::Finite(1));
@@ -367,7 +367,9 @@ mod tests {
         // lower than under LABOR-0.
         let g = generate::chung_lu(600, 35.0, 2.15, 7);
         let seeds: Vec<u32> = (0..300).collect();
-        let mut freq: HashMap<u32, usize> = HashMap::new();
+        // BTreeMap: max_by_key breaks frequency ties on key order
+        // instead of hash order, so `hub` is stable across runs
+        let mut freq: BTreeMap<u32, usize> = BTreeMap::new();
         for &s in &seeds {
             for &t in g.neighbors(s) {
                 *freq.entry(t).or_insert(0) += 1;

@@ -118,7 +118,8 @@ mod tests {
         let d = g.degree(v);
         let k = 5;
         let trials = 3000;
-        let mut counts = std::collections::HashMap::new();
+        // BTreeMap: the failure message order is deterministic across runs
+        let mut counts = std::collections::BTreeMap::new();
         for s in 0..trials as u64 {
             for &t in run(&g, &[v], k, 90_000 + s).of(0) {
                 *counts.entry(t).or_insert(0usize) += 1;

@@ -144,8 +144,10 @@ pub struct BatchExecution {
     /// decoded f32 bytes those hot fills moved (γ).
     pub hot_bytes: u64,
     /// rows requested through the caches across PEs.
+    // lint:allow(ledger, reason = "determinism-assert counter only: compared across exec modes in tests, deliberately absent from the serve ledger")
     pub requested_rows: u64,
     /// sampled edges across PEs and layers.
+    // lint:allow(ledger, reason = "determinism-assert counter only: compared across exec modes in tests, deliberately absent from the serve ledger")
     pub sampled_edges: u64,
     /// real CPU wall of assignment + sampling + gathering (measured for
     /// the benches; **never** consulted by a serving decision).

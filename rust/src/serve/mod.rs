@@ -275,6 +275,7 @@ impl Server<'_> {
                         service_us: exec.service_us,
                         storage_bytes: exec.storage_bytes,
                         fabric_bytes: exec.fabric_bytes,
+                        fabric_inter_bytes: exec.fabric_inter_bytes,
                         hot_rows: exec.hot_rows,
                         hot_bytes: exec.hot_bytes,
                     },

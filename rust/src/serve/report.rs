@@ -45,9 +45,13 @@ pub struct BatchRecord {
     pub index: u32,
     pub size: u32,
     pub dispatch_us: u64,
+    // lint:allow(ledger, reason = "completion_us = dispatch_us + service_us is folded per request by the caller of record_batch; kept for per-batch introspection")
     pub service_us: u64,
     pub storage_bytes: u64,
     pub fabric_bytes: u64,
+    /// slice of `fabric_bytes` that crossed the slower inter-group
+    /// fabric tier (0 on a flat topology).
+    pub fabric_inter_bytes: u64,
     /// cache fills served decoded out of the hot tier (0 untiered).
     pub hot_rows: u64,
     /// decoded f32 bytes those hot fills moved (γ).
@@ -147,13 +151,19 @@ impl Ledger {
         let span_s = (last_completion - first_arrival).max(1) as f64 / 1e6;
         let storage: u64 = self.batches.iter().map(|b| b.storage_bytes).sum();
         let fabric: u64 = self.batches.iter().map(|b| b.fabric_bytes).sum();
+        let inter: u64 = self.batches.iter().map(|b| b.fabric_inter_bytes).sum();
         let hot_rows: u64 = self.batches.iter().map(|b| b.hot_rows).sum();
         let hot_bytes: u64 = self.batches.iter().map(|b| b.hot_bytes).sum();
+        // Σ batch.size == served requests: every admitted request rides
+        // exactly one batch, so this equals `n` (debug-asserted below)
+        // while keeping the batch ledger itself load-bearing.
+        let sized: u64 = self.batches.iter().map(|b| b.size as u64).sum();
+        debug_assert_eq!(sized, n as u64, "batch sizes must cover every request");
         ServeReport {
             served: n as u64,
             batches: self.batches.len() as u64,
             dropped: self.dropped,
-            mean_batch: n as f64 / self.batches.len().max(1) as f64,
+            mean_batch: sized as f64 / self.batches.len().max(1) as f64,
             p50_ms: percentile(&lat_ms, 0.50),
             p90_ms: percentile(&lat_ms, 0.90),
             p99_ms: percentile(&lat_ms, 0.99),
@@ -161,6 +171,7 @@ impl Ledger {
             requests_per_s: n as f64 / span_s,
             storage_bytes_per_req: storage as f64 / n as f64,
             fabric_bytes_per_req: fabric as f64 / n as f64,
+            fabric_inter_bytes_per_req: inter as f64 / n as f64,
             hot_rows_per_req: hot_rows as f64 / n as f64,
             hot_bytes_per_req: hot_bytes as f64 / n as f64,
             slo_ms: slo_us as f64 / 1e3,
@@ -188,6 +199,9 @@ pub struct ServeReport {
     pub storage_bytes_per_req: f64,
     /// fabric (α) feature-row bytes per served request.
     pub fabric_bytes_per_req: f64,
+    /// slice of the fabric bytes that crossed the inter-group tier
+    /// (≤ `fabric_bytes_per_req`; 0 on a flat topology).
+    pub fabric_inter_bytes_per_req: f64,
     /// hot-tier fills per served request (0 without tiering).
     pub hot_rows_per_req: f64,
     /// decoded hot-tier (γ) bytes per served request — deliberately
@@ -231,10 +245,11 @@ impl std::fmt::Display for ServeReport {
         write!(
             f,
             "throughput {:.0} req/s (virtual); bytes/request: {:.0} storage (β) + {:.0} \
-             fabric (α) = {:.0} wire, {:.0} hot-tier (γ); ledger checksum {:#018x}",
+             fabric (α, {:.0} inter) = {:.0} wire, {:.0} hot-tier (γ); ledger checksum {:#018x}",
             self.requests_per_s,
             self.storage_bytes_per_req,
             self.fabric_bytes_per_req,
+            self.fabric_inter_bytes_per_req,
             self.bytes_per_req(),
             self.hot_bytes_per_req,
             self.checksum
@@ -261,6 +276,7 @@ mod tests {
                 service_us: 400,
                 storage_bytes: 1000,
                 fabric_bytes: 200,
+                fabric_inter_bytes: 150,
                 hot_rows: 3,
                 hot_bytes: 192,
             },
@@ -275,6 +291,7 @@ mod tests {
                 service_us: 300,
                 storage_bytes: 500,
                 fabric_bytes: 0,
+                fabric_inter_bytes: 0,
                 hot_rows: 0,
                 hot_bytes: 0,
             },
@@ -300,6 +317,10 @@ mod tests {
         assert_eq!(r.slo_violations, 1, "490µs breaches a 450µs SLO");
         assert!((r.storage_bytes_per_req - 500.0).abs() < 1e-9);
         assert!((r.fabric_bytes_per_req - 200.0 / 3.0).abs() < 1e-9);
+        // the inter slice survives the reduction and never exceeds the
+        // fabric total (the counter-conservation property the lint pins)
+        assert!((r.fabric_inter_bytes_per_req - 150.0 / 3.0).abs() < 1e-9);
+        assert!(r.fabric_inter_bytes_per_req <= r.fabric_bytes_per_req);
         assert!((r.bytes_per_req() - (1500.0 + 200.0) / 3.0).abs() < 1e-9);
         // hot-tier traffic is tracked per request but kept out of the
         // wire-bytes headline

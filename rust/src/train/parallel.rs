@@ -63,6 +63,7 @@ pub struct ParallelStepStats {
     /// examples (seed vertices) across all PEs this step.
     pub examples: u64,
     /// whole-step wall-clock (all PEs, concurrent in threaded mode).
+    // lint:allow(ledger, reason = "run() derives ms_per_step from its own end-to-end timer (stream production included), not from per-step walls")
     pub wall_ms: f64,
     /// local layered forward+backward time, summed across PEs.
     pub compute_ms: f64,
@@ -93,6 +94,9 @@ pub struct ParallelRunReport {
     pub sample_ms: f64,
     /// stream-reported feature-loading ms per step (summed over PEs).
     pub feature_ms: f64,
+    /// seed vertices consumed per step (all PEs) — ties the byte
+    /// ledgers back to work actually done.
+    pub examples_per_step: f64,
     pub compute_ms: f64,
     pub allreduce_ms: f64,
     /// f32 bytes read from storage per step (β, all PEs).
@@ -428,6 +432,7 @@ impl ParallelTrainer {
             rep.fabric_inter_bytes_per_step +=
                 mb.per_pe.iter().map(|w| w.fabric_inter_bytes).sum::<u64>() as f64;
             let s = self.step(&mb, labels);
+            rep.examples_per_step += s.examples as f64;
             rep.compute_ms += s.compute_ms;
             rep.allreduce_ms += s.allreduce_ms;
             rep.grad_bytes_per_step += s.grad_bytes as f64;
@@ -445,6 +450,7 @@ impl ParallelTrainer {
         rep.ms_per_step = run.elapsed_ms() / m;
         rep.sample_ms /= m;
         rep.feature_ms /= m;
+        rep.examples_per_step /= m;
         rep.compute_ms /= m;
         rep.allreduce_ms /= m;
         rep.storage_bytes_per_step /= m;

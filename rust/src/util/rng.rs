@@ -179,13 +179,13 @@ mod tests {
     #[test]
     fn below_is_in_range_and_covers() {
         let mut r = Pcg64::new(9);
-        let mut seen = [false; 10];
+        let mut hit = [false; 10];
         for _ in 0..1000 {
             let v = r.next_below(10) as usize;
             assert!(v < 10);
-            seen[v] = true;
+            hit[v] = true;
         }
-        assert!(seen.iter().all(|&s| s), "all residues should appear");
+        assert!(hit.iter().all(|&s| s), "all residues should appear");
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! drivers (criterion is unavailable offline, so `cargo bench` targets use
 //! these helpers with `harness = false`).
 
+// Allowlisted timing module (coopgnn-lint `wallclock` + clippy
+// disallowed-methods): Timer readings only land in wall_* report
+// columns, never in a decision path.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::{Duration, Instant};
 
 /// A simple scoped/manual timer.

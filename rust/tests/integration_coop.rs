@@ -166,3 +166,74 @@ fn threaded_engine_reports_batch_wall_clock() {
     assert!(r.wall_batch_ms > 0.0, "wall clock must be measured");
     assert!(r.wall_sampling_ms > 0.0, "per-PE sampling time must be measured");
 }
+
+/// Counter conservation across the replicated fabric (the invariant
+/// behind the lint plane's `ledger` rule): on an 8-PE r=2 run every
+/// `inter_*` counter must actually reach its report, be positive (two
+/// replica groups force inter-group traffic), never exceed the total it
+/// was carved from, and stay below it (intra-group traffic exists too).
+/// The serve plane's copy of this bug — `fabric_inter_bytes` dropped on
+/// the way into `BatchRecord` — is pinned in `serve/report.rs` tests.
+#[test]
+fn replicated_inter_ledgers_are_conserved() {
+    use coopgnn::coop::all_to_all::AllReduceStrategy;
+    use coopgnn::pipeline::PipelineBuilder;
+
+    let pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Cooperative)
+        .num_pes(8)
+        .replication(2)
+        .batch_per_pe(16)
+        .seed(33)
+        .build()
+        .unwrap();
+
+    // engine ledger: the feature-fabric inter slice
+    let er = pipe.engine_report();
+    assert!(er.feat_fabric_bytes > 0.0, "coop run must ship fabric rows");
+    assert!(
+        er.feat_fabric_inter_bytes > 0.0,
+        "r=2 must produce inter-group feature traffic"
+    );
+    assert!(
+        er.feat_fabric_inter_bytes <= er.feat_fabric_bytes,
+        "inter slice can never exceed the fabric total: {} vs {}",
+        er.feat_fabric_inter_bytes,
+        er.feat_fabric_bytes
+    );
+    assert!(
+        er.total_cross_bytes() >= er.feat_fabric_inter_bytes,
+        "total cross bytes ({}) must bound the inter slice ({})",
+        er.total_cross_bytes(),
+        er.feat_fabric_inter_bytes
+    );
+
+    // training ledgers: feature / gradient / activation inter slices
+    // all survive run()'s aggregation
+    let mut stream = pipe.stream();
+    let mut trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+    let rep = trainer.run(&mut stream, 2, &pipe.ds.labels);
+    assert!(rep.examples_per_step > 0.0, "examples must be aggregated");
+    for (name, inter, total) in [
+        ("feature", rep.fabric_inter_bytes_per_step, rep.fabric_bytes_per_step),
+        ("gradient", rep.grad_inter_bytes_per_step, rep.grad_bytes_per_step),
+        ("activation", rep.act_inter_bytes_per_step, rep.act_bytes_per_step),
+    ] {
+        assert!(inter > 0.0, "{name}: inter slice must be aggregated into the report");
+        assert!(
+            inter <= total,
+            "{name}: inter ({inter}) can never exceed the total ({total}) it was carved from"
+        );
+    }
+    let inter_sum = rep.fabric_inter_bytes_per_step
+        + rep.grad_inter_bytes_per_step
+        + rep.act_inter_bytes_per_step;
+    let total_sum =
+        rep.fabric_bytes_per_step + rep.grad_bytes_per_step + rep.act_bytes_per_step;
+    assert!(
+        total_sum > inter_sum,
+        "at r=2 replica groups must absorb some traffic onto intra links: \
+         totals {total_sum} vs inter {inter_sum}"
+    );
+}

@@ -213,7 +213,9 @@ fn prop_admission_preserves_fifo_per_requester() {
             duration,
         );
         prop_assert!(!ledger.requests.is_empty(), "sim served nothing");
-        let mut by_requester: std::collections::HashMap<u32, Vec<_>> = Default::default();
+        // BTreeMap: clients are checked (and reported on failure) in
+        // id order, not hash order
+        let mut by_requester: std::collections::BTreeMap<u32, Vec<_>> = Default::default();
         for r in &ledger.requests {
             by_requester.entry(r.requester).or_default().push(*r);
         }

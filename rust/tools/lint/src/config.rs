@@ -1,0 +1,109 @@
+//! Repo-specific configuration: which files may touch the wall clock,
+//! which counter structs pair with which merge functions, where the
+//! flag registry lives. Everything is a plain `&'static` table so the
+//! whole policy is reviewable in one screen.
+
+/// One counter-struct / merge-function pairing for the ledger rule:
+/// every numeric field of `strukt` (declared in `decl_file`) must be
+/// referenced in at least one of `merge_fns` (`(file, fn-name)`).
+#[derive(Clone, Copy, Debug)]
+pub struct LedgerSpec {
+    pub strukt: &'static str,
+    pub decl_file: &'static str,
+    pub merge_fns: &'static [(&'static str, &'static str)],
+}
+
+/// The policy for the coopgnn tree.
+pub struct RepoConfig {
+    /// Directories scanned (relative to the repo root).
+    pub scan_dirs: &'static [&'static str],
+    /// Path prefixes excluded from scanning.
+    pub skip: &'static [&'static str],
+    /// Files (path suffix/prefix match) allowed to read the wall clock.
+    pub wallclock_allow: &'static [&'static str],
+    /// Ledger pairings (rule 4).
+    pub ledgers: &'static [LedgerSpec],
+    /// File holding the `ArgSpec` tables (`val("key", …)` lines).
+    pub flags_spec_file: &'static str,
+    /// Files/dirs whose `--flag` literals are checked against the spec.
+    pub flags_scan: &'static [&'static str],
+    /// Flags the parser hardcodes outside any spec table.
+    pub flags_builtin: &'static [&'static str],
+}
+
+pub fn repo_config() -> RepoConfig {
+    RepoConfig {
+        scan_dirs: &["rust/src", "rust/tests", "rust/benches", "rust/examples"],
+        // vendor/ is third-party; tools/ is this lint (its fixtures
+        // contain deliberate violations).
+        skip: &["rust/vendor/", "rust/tools/"],
+        wallclock_allow: &[
+            // timing-only utility modules: Timer / bench_ms live here
+            "rust/src/util/stats.rs",
+            // phase metrics recorder (wall columns of the reports)
+            "rust/src/metrics.rs",
+            // host-model kernel profiling (compute_ms breakdowns)
+            "rust/src/model/host.rs",
+            // outer CLI timers around whole subcommands
+            "rust/src/main.rs",
+            // benches are timing harnesses by definition
+            "rust/benches/",
+        ],
+        ledgers: &[
+            LedgerSpec {
+                strukt: "PeWork",
+                decl_file: "rust/src/pipeline/stream.rs",
+                merge_fns: &[
+                    ("rust/src/coop/engine.rs", "reduce"),
+                    ("rust/src/train/parallel.rs", "run"),
+                    // modeled per-PE service time reads `dim`
+                    ("rust/src/serve/executor.rs", "pe_us"),
+                ],
+            },
+            LedgerSpec {
+                strukt: "EngineReport",
+                decl_file: "rust/src/coop/engine.rs",
+                merge_fns: &[("rust/src/coop/engine.rs", "finalize")],
+            },
+            LedgerSpec {
+                strukt: "LoadStats",
+                decl_file: "rust/src/coop/feature_loader.rs",
+                merge_fns: &[("rust/src/coop/feature_loader.rs", "from_loads")],
+            },
+            LedgerSpec {
+                strukt: "PeLoad",
+                decl_file: "rust/src/coop/feature_loader.rs",
+                merge_fns: &[("rust/src/coop/feature_loader.rs", "from_loads")],
+            },
+            LedgerSpec {
+                strukt: "ParallelStepStats",
+                decl_file: "rust/src/train/parallel.rs",
+                merge_fns: &[("rust/src/train/parallel.rs", "run")],
+            },
+            LedgerSpec {
+                strukt: "ParallelRunReport",
+                decl_file: "rust/src/train/parallel.rs",
+                merge_fns: &[("rust/src/train/parallel.rs", "run")],
+            },
+            LedgerSpec {
+                strukt: "BatchExecution",
+                decl_file: "rust/src/serve/executor.rs",
+                // the dispatch path is where an executor counter either
+                // reaches the ledger or is silently dropped — exactly
+                // the class that lost `fabric_inter_bytes` in PR 8
+                merge_fns: &[("rust/src/serve/mod.rs", "try_dispatch")],
+            },
+            LedgerSpec {
+                strukt: "BatchRecord",
+                decl_file: "rust/src/serve/report.rs",
+                merge_fns: &[
+                    ("rust/src/serve/report.rs", "record_batch"),
+                    ("rust/src/serve/report.rs", "summarize"),
+                ],
+            },
+        ],
+        flags_spec_file: "rust/src/main.rs",
+        flags_scan: &["rust/src/main.rs", "rust/src/repro/"],
+        flags_builtin: &["help"],
+    }
+}

@@ -1,0 +1,374 @@
+//! # coopgnn-lint — the invariant lint plane
+//!
+//! Every bit-identity claim in this repository (serial == threaded
+//! engine trajectories, prefetch on/off equality, replication r ∈ {1,2,4}
+//! at `to_bits`-equal losses, the serve plane's reproducible virtual-time
+//! ledgers) rests on hand-maintained source invariants. With no Rust
+//! toolchain in the dev container, these rules are the only scalable
+//! defense against the regressions that silently void those claims:
+//!
+//! 1. **wallclock** — `Instant::now` / `SystemTime` may appear only in
+//!    allowlisted timing-only modules; never in `serve/`, `sampling/`,
+//!    or `coop/` decision paths (the serve plane runs on a virtual
+//!    integer-µs clock precisely so its ledgers replay bit-exactly).
+//! 2. **ambient-rng** — `thread_rng` / `rand::random` / entropy seeding
+//!    are forbidden everywhere; all randomness must derive from the
+//!    pipeline seed streams (`pe_seed`, `Pcg64`, counter hashes).
+//! 3. **unordered** — iterating a `HashMap` / `HashSet` is forbidden
+//!    unless the site sorts immediately afterwards or carries a
+//!    `// lint:allow(unordered, reason = "...")` annotation; iteration
+//!    order would otherwise feed fabric payloads and counters.
+//! 4. **ledger** — every numeric field of the configured counter
+//!    structs must be referenced in its paired merge/accumulate
+//!    function, catching "added a counter, forgot to aggregate".
+//! 5. **flags** — every `--flag` string literal in `main.rs` / `repro/`
+//!    must name a key registered in the strict `ArgSpec` tables, and
+//!    every registered key must be consumed outside its spec line.
+//!
+//! The binary (`cargo run -p coopgnn-lint`) prints findings as
+//! `file:line: [rule] message` and exits nonzero on any finding.
+//!
+//! ## Allow annotations
+//!
+//! A finding is suppressed by `// lint:allow(<rule>, reason = "...")`
+//! on the same line or the line directly above. The reason is
+//! mandatory: an allow without one is itself reported (the annotation
+//! is a documented waiver, not an off switch).
+
+use std::path::{Path, PathBuf};
+
+pub mod config;
+pub mod rules;
+
+/// The rule names an allow annotation may reference.
+pub const RULE_NAMES: &[&str] =
+    &["wallclock", "ambient-rng", "unordered", "ledger", "flags"];
+
+/// One lint violation, reported as `file:line: [rule] msg`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// One `lint:allow` annotation, resolved to the lines it covers.
+#[derive(Clone, Debug)]
+struct Allow {
+    rule: String,
+    /// 1-indexed line the annotation sits on; it covers this line and
+    /// the next (so a standalone comment shields the statement below).
+    line: usize,
+    has_reason: bool,
+}
+
+/// A source file loaded for linting: raw lines, comment-stripped lines,
+/// and its allow annotations.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Path relative to the repository root, `/`-separated (stable in
+    /// findings and config matching across platforms).
+    pub rel: String,
+    pub lines: Vec<String>,
+    /// `lines` with `//` comments removed (string-literal aware).
+    pub code: Vec<String>,
+    allows: Vec<Allow>,
+}
+
+impl SourceFile {
+    pub fn from_str(rel: &str, content: &str) -> SourceFile {
+        let lines: Vec<String> = content.lines().map(|l| l.to_string()).collect();
+        let code: Vec<String> = lines.iter().map(|l| strip_comment(l)).collect();
+        let allows = parse_allows(&lines);
+        SourceFile { rel: rel.to_string(), lines, code, allows }
+    }
+
+    pub fn load(root: &Path, rel: &str) -> std::io::Result<SourceFile> {
+        let content = std::fs::read_to_string(root.join(rel))?;
+        Ok(SourceFile::from_str(rel, &content))
+    }
+
+    /// Is `rule` waived at 1-indexed `line`?
+    pub fn allowed(&self, rule: &str, line: usize) -> bool {
+        self.allows
+            .iter()
+            .any(|a| a.rule == rule && a.has_reason && (a.line == line || a.line + 1 == line))
+    }
+
+    /// Malformed annotations are findings themselves: unknown rule
+    /// names and missing reasons would otherwise rot silently.
+    pub fn annotation_findings(&self) -> Vec<Finding> {
+        let mut out = Vec::new();
+        for a in &self.allows {
+            if !RULE_NAMES.contains(&a.rule.as_str()) {
+                out.push(Finding {
+                    rule: "allow-syntax",
+                    file: self.rel.clone(),
+                    line: a.line,
+                    msg: format!(
+                        "lint:allow names unknown rule `{}` (known: {})",
+                        a.rule,
+                        RULE_NAMES.join(", ")
+                    ),
+                });
+            }
+            if !a.has_reason {
+                out.push(Finding {
+                    rule: "allow-syntax",
+                    file: self.rel.clone(),
+                    line: a.line,
+                    msg: format!(
+                        "lint:allow({}) without a reason — write \
+                         lint:allow({}, reason = \"...\")",
+                        a.rule, a.rule
+                    ),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Strip a `//` comment from one line, ignoring `//` inside string
+/// literals. Good enough for line-level pattern rules; raw strings and
+/// block comments are rare in this tree and handled conservatively
+/// (a `/*` leaves the rest of the line intact, which only errs toward
+/// reporting).
+pub fn strip_comment(line: &str) -> String {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut in_char = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if in_str {
+            if b == b'\\' {
+                i += 1; // skip the escaped byte
+            } else if b == b'"' {
+                in_str = false;
+            }
+        } else if in_char {
+            if b == b'\\' {
+                i += 1;
+            } else if b == b'\'' {
+                in_char = false;
+            }
+        } else if b == b'"' {
+            in_str = true;
+        } else if b == b'\'' {
+            // `'x'` or `'\n'` is a char literal; `'a` (lifetime) is not.
+            let is_char_lit = (i + 2 < bytes.len() && bytes[i + 2] == b'\'')
+                || (i + 1 < bytes.len() && bytes[i + 1] == b'\\');
+            if is_char_lit {
+                in_char = true;
+            }
+        } else if b == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+            return line[..i].to_string();
+        }
+        i += 1;
+    }
+    line.to_string()
+}
+
+/// Parse every `lint:allow(rule[, reason = "..."])` in the file.
+fn parse_allows(lines: &[String]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        let mut rest = line.as_str();
+        while let Some(pos) = rest.find("lint:allow(") {
+            let after = &rest[pos + "lint:allow(".len()..];
+            let Some(close) = after.find(')') else { break };
+            let inner = &after[..close];
+            let (rule, has_reason) = match inner.split_once(',') {
+                Some((r, tail)) => {
+                    let tail = tail.trim();
+                    let reason_ok = tail.strip_prefix("reason")
+                        .map(|t| t.trim_start().starts_with('='))
+                        .unwrap_or(false)
+                        && tail.contains('"');
+                    (r.trim().to_string(), reason_ok)
+                }
+                None => (inner.trim().to_string(), false),
+            };
+            out.push(Allow { rule, line: idx + 1, has_reason });
+            rest = &after[close..];
+        }
+    }
+    out
+}
+
+/// True if `text[pos..]` starts an occurrence of `needle` that is not
+/// embedded in a larger identifier (word-boundary on both sides).
+pub fn word_at(text: &str, pos: usize, needle: &str) -> bool {
+    let bytes = text.as_bytes();
+    if pos + needle.len() > bytes.len() || &text[pos..pos + needle.len()] != needle {
+        return false;
+    }
+    let before_ok = pos == 0 || !is_ident(bytes[pos - 1]);
+    let after = pos + needle.len();
+    let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+    before_ok && after_ok
+}
+
+/// Does `text` contain `needle` as a whole word (not inside a larger
+/// identifier)?
+pub fn contains_word(text: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(off) = text[start..].find(needle) {
+        let pos = start + off;
+        if word_at(text, pos, needle) {
+            return true;
+        }
+        start = pos + 1;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Extract a brace-matched item body starting at the first line for
+/// which `start` returns true. Returns (1-indexed start line, body
+/// lines) or None.
+pub fn brace_matched<'a, F>(lines: &'a [String], start: F) -> Option<(usize, Vec<&'a str>)>
+where
+    F: Fn(&str) -> bool,
+{
+    let mut depth: i64 = 0;
+    let mut on = false;
+    let mut opened = false;
+    let mut first = 0;
+    let mut out = Vec::new();
+    for (idx, line) in lines.iter().enumerate() {
+        if !on && start(line) {
+            on = true;
+            first = idx + 1;
+        }
+        if on {
+            out.push(line.as_str());
+            for b in line.bytes() {
+                match b {
+                    b'{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                return Some((first, out));
+            }
+        }
+    }
+    if on {
+        Some((first, out))
+    } else {
+        None
+    }
+}
+
+/// Recursively collect `.rs` files under `root/<sub>` as root-relative
+/// `/`-separated paths, sorted for deterministic reports. `skip`
+/// entries are path prefixes (relative, `/`-separated).
+pub fn collect_rs_files(root: &Path, subs: &[&str], skip: &[&str]) -> Vec<String> {
+    let mut out = Vec::new();
+    for sub in subs {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(root, &dir, skip, &mut out);
+        }
+    }
+    out.sort();
+    out
+}
+
+fn walk(root: &Path, dir: &Path, skip: &[&str], out: &mut Vec<String>) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut paths: Vec<PathBuf> = entries.filter_map(|e| e.ok()).map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        let rel = match p.strip_prefix(root) {
+            Ok(r) => r.to_string_lossy().replace('\\', "/"),
+            Err(_) => continue,
+        };
+        if skip.iter().any(|s| rel.starts_with(s)) {
+            continue;
+        }
+        if p.is_dir() {
+            walk(root, &p, skip, out);
+        } else if rel.ends_with(".rs") {
+            out.push(rel);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_comment_respects_strings() {
+        assert_eq!(strip_comment("let a = 1; // note"), "let a = 1; ");
+        assert_eq!(strip_comment(r#"let s = "no // comment";"#), r#"let s = "no // comment";"#);
+        assert_eq!(strip_comment("x.iter() // lint sees code only"), "x.iter() ");
+    }
+
+    #[test]
+    fn allow_parsing_and_scope() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "// lint:allow(unordered, reason = \"canonical already\")\n\
+             for k in m.keys() {}\n\
+             for k in m.keys() {}\n",
+        );
+        assert!(f.allowed("unordered", 1));
+        assert!(f.allowed("unordered", 2), "allow covers the next line");
+        assert!(!f.allowed("unordered", 3), "allow does not leak further");
+        assert!(f.annotation_findings().is_empty());
+    }
+
+    #[test]
+    fn allow_without_reason_is_a_finding() {
+        let f = SourceFile::from_str("t.rs", "// lint:allow(unordered)\nlet x = 1;\n");
+        let fs = f.annotation_findings();
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("without a reason"));
+        assert!(!f.allowed("unordered", 2), "reasonless allow must not suppress");
+    }
+
+    #[test]
+    fn unknown_rule_is_a_finding() {
+        let f = SourceFile::from_str("t.rs", "// lint:allow(speed, reason = \"x\")\n");
+        let fs = f.annotation_findings();
+        assert_eq!(fs.len(), 1);
+        assert!(fs[0].msg.contains("unknown rule"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        assert!(contains_word("let dim = 4;", "dim"));
+        assert!(!contains_word("let dims = 4;", "dim"));
+        assert!(!contains_word("radim", "dim"));
+        assert!(contains_word("w.dim as usize", "dim"));
+    }
+
+    #[test]
+    fn brace_matching_extracts_whole_fn() {
+        let src: Vec<String> = "fn f() {\n  if x {\n    y();\n  }\n}\nfn g() {}\n"
+            .lines()
+            .map(|s| s.to_string())
+            .collect();
+        let (start, body) = brace_matched(&src, |l| l.contains("fn f")).unwrap();
+        assert_eq!(start, 1);
+        assert_eq!(body.len(), 5, "inner closing brace must not end the body");
+    }
+}

@@ -1,0 +1,103 @@
+//! `coopgnn-lint` — run the five invariant rules over the tree and
+//! exit nonzero on any finding. Blocking in CI ahead of build+test.
+//!
+//! Usage: `cargo run -p coopgnn-lint [-- --root PATH]`
+//! (default root is the current directory; CI runs it from the repo
+//! root, `cargo run` from anywhere inside the workspace also works
+//! because we fall back to walking up to the workspace `Cargo.toml`).
+
+use std::path::{Path, PathBuf};
+
+use coopgnn_lint::config::repo_config;
+use coopgnn_lint::rules;
+use coopgnn_lint::{collect_rs_files, Finding, SourceFile};
+
+fn main() {
+    let root = parse_root();
+    let cfg = repo_config();
+
+    let rels = collect_rs_files(&root, cfg.scan_dirs, cfg.skip);
+    if rels.is_empty() {
+        eprintln!(
+            "coopgnn-lint: no .rs files under {:?} in {} — wrong --root?",
+            cfg.scan_dirs,
+            root.display()
+        );
+        std::process::exit(2);
+    }
+
+    let mut files = Vec::new();
+    for rel in &rels {
+        match SourceFile::load(&root, rel) {
+            Ok(f) => files.push(f),
+            Err(e) => {
+                eprintln!("coopgnn-lint: cannot read {rel}: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &files {
+        findings.extend(f.annotation_findings());
+        findings.extend(rules::wallclock::check(f, cfg.wallclock_allow));
+        findings.extend(rules::rng::check(f));
+        findings.extend(rules::unordered::check(f));
+    }
+    findings.extend(rules::ledger::check(&files, cfg.ledgers));
+    findings.extend(rules::flags::check(&files, &cfg));
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!(
+            "coopgnn-lint: {} files clean (wallclock, ambient-rng, unordered, ledger, flags)",
+            files.len()
+        );
+    } else {
+        println!("coopgnn-lint: {} finding(s) in {} files", findings.len(), files.len());
+        std::process::exit(1);
+    }
+}
+
+/// `--root PATH` if given; else the nearest ancestor of the current
+/// directory containing a `rust/src` tree (so the tool runs correctly
+/// from any workspace subdirectory).
+fn parse_root() -> PathBuf {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--root" {
+            if let Some(p) = args.get(i + 1) {
+                return PathBuf::from(p);
+            }
+            eprintln!("coopgnn-lint: --root needs a path");
+            std::process::exit(2);
+        }
+        i += 1;
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        if dir.join("rust/src").is_dir() {
+            return dir;
+        }
+        if !pop(&mut dir) {
+            return PathBuf::from(".");
+        }
+    }
+}
+
+fn pop(dir: &mut PathBuf) -> bool {
+    let parent: Option<&Path> = dir.parent();
+    match parent {
+        Some(p) if p != dir.as_path() => {
+            let p = p.to_path_buf();
+            *dir = p;
+            true
+        }
+        _ => false,
+    }
+}

@@ -1,0 +1,210 @@
+//! Rule 5 — **flags**: the CLI registry and its users must agree.
+//! Direction A: every `--flag` literal appearing in `main.rs` or the
+//! repro drivers must be a key registered in the `ArgSpec` tables
+//! (`val("key", ..)` / `switch("key", ..)` lines) or a parser builtin.
+//! Direction B: every registered key must actually be consumed — the
+//! quoted key must appear on at least one non-spec line of the scanned
+//! files. A flag parsed but never read, or documented but never
+//! parsed, is exactly the drift this rule pins.
+
+use crate::config::RepoConfig;
+use crate::{Finding, SourceFile};
+
+pub const RULE: &str = "flags";
+
+pub fn check(files: &[SourceFile], cfg: &RepoConfig) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(spec_file) = files.iter().find(|f| f.rel == cfg.flags_spec_file) else {
+        out.push(Finding {
+            rule: RULE,
+            file: cfg.flags_spec_file.to_string(),
+            line: 1,
+            msg: "flag spec file not found".to_string(),
+        });
+        return out;
+    };
+
+    // registry: (key, 1-indexed spec line)
+    let specs = spec_keys(spec_file);
+    let registered: Vec<&str> = specs.iter().map(|(k, _)| k.as_str()).collect();
+
+    let scanned: Vec<&SourceFile> = files
+        .iter()
+        .filter(|f| {
+            cfg.flags_scan
+                .iter()
+                .any(|s| f.rel == *s || f.rel.starts_with(s))
+        })
+        .collect();
+
+    // Direction A: every `--literal` must be registered or builtin.
+    for file in &scanned {
+        for (idx, code) in file.code.iter().enumerate() {
+            let line = idx + 1;
+            for lit in dash_literals(code) {
+                if registered.contains(&lit.as_str())
+                    || cfg.flags_builtin.contains(&lit.as_str())
+                    || file.allowed(RULE, line)
+                {
+                    continue;
+                }
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.rel.clone(),
+                    line,
+                    msg: format!(
+                        "`--{lit}` is not a registered key in `{}` — register it \
+                         or fix the literal",
+                        cfg.flags_spec_file
+                    ),
+                });
+            }
+        }
+    }
+
+    // Direction B: every registered key must be consumed somewhere
+    // outside the spec tables.
+    for (key, spec_line) in &specs {
+        let quoted = format!("\"{key}\"");
+        let consumed = scanned.iter().any(|file| {
+            file.code.iter().any(|code| {
+                if file.rel == cfg.flags_spec_file && is_spec_line(code) {
+                    return false;
+                }
+                code.contains(&quoted)
+            })
+        });
+        if !consumed && !spec_file.allowed(RULE, *spec_line) {
+            out.push(Finding {
+                rule: RULE,
+                file: cfg.flags_spec_file.to_string(),
+                line: *spec_line,
+                msg: format!(
+                    "flag `--{key}` is registered but never consumed in {:?}",
+                    cfg.flags_scan
+                ),
+            });
+        }
+    }
+    out
+}
+
+fn is_spec_line(code: &str) -> bool {
+    code.contains("val(\"") || code.contains("switch(\"")
+}
+
+/// Keys from `val("key", ..)` / `switch("key", ..)` lines.
+fn spec_keys(file: &SourceFile) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, code) in file.code.iter().enumerate() {
+        for opener in ["val(\"", "switch(\""] {
+            let mut start = 0;
+            while let Some(off) = code[start..].find(opener) {
+                let key_start = start + off + opener.len();
+                if let Some(end) = code[key_start..].find('"') {
+                    let key = code[key_start..key_start + end].to_string();
+                    if !key.is_empty() && !out.iter().any(|(k, _)| k == &key) {
+                        out.push((key, idx + 1));
+                    }
+                    start = key_start + end + 1;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `--flag` tokens on a line: `--` followed by an ascii-lowercase
+/// letter, munching `[a-z0-9-]` maximally. Table rules (`----`) and
+/// numeric ranges never start with a letter, so they don't match.
+fn dash_literals(code: &str) -> Vec<String> {
+    let bytes = code.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < bytes.len() {
+        if bytes[i] == b'-' && bytes[i + 1] == b'-' && bytes[i + 2].is_ascii_lowercase() {
+            // not part of a longer dash run (`---flag`, table rules)
+            if i > 0 && bytes[i - 1] == b'-' {
+                i += 1;
+                continue;
+            }
+            let mut j = i + 2;
+            while j < bytes.len()
+                && (bytes[j].is_ascii_lowercase() || bytes[j].is_ascii_digit() || bytes[j] == b'-')
+            {
+                j += 1;
+            }
+            let lit = code[i + 2..j].trim_end_matches('-').to_string();
+            out.push(lit);
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RepoConfig;
+
+    fn cfg() -> RepoConfig {
+        RepoConfig {
+            scan_dirs: &[],
+            skip: &[],
+            wallclock_allow: &[],
+            ledgers: &[],
+            flags_spec_file: "src/main.rs",
+            flags_scan: &["src/main.rs", "src/repro/"],
+            flags_builtin: &["help"],
+        }
+    }
+
+    #[test]
+    fn unregistered_literal_fires() {
+        let spec = SourceFile::from_str(
+            "src/main.rs",
+            "val(\"dataset\", \"tiny\");\nlet d = args.get(\"dataset\");\n",
+        );
+        let repro = SourceFile::from_str(
+            "src/repro/run.rs",
+            "println!(\"use --dataset or --unknown-flag\");\n",
+        );
+        let out = check(&[spec, repro], &cfg());
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("--unknown-flag"));
+    }
+
+    #[test]
+    fn unconsumed_key_fires() {
+        let spec = SourceFile::from_str(
+            "src/main.rs",
+            "val(\"dataset\", \"tiny\");\nswitch(\"dry-run\");\nlet d = args.get(\"dataset\");\n",
+        );
+        let out = check(&[spec], &cfg());
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("--dry-run"));
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn registered_and_consumed_is_clean() {
+        let spec = SourceFile::from_str(
+            "src/main.rs",
+            "val(\"dataset\", \"tiny\");\nlet d = args.get(\"dataset\");\n\
+             println!(\"try --dataset tiny or --help\");\n",
+        );
+        assert!(check(&[spec], &cfg()).is_empty());
+    }
+
+    #[test]
+    fn table_rules_and_dash_runs_do_not_match() {
+        assert!(dash_literals("+----+----+").is_empty());
+        assert!(dash_literals("// ------------").is_empty());
+        assert_eq!(dash_literals("use --cache-policy here"), vec!["cache-policy"]);
+        assert_eq!(dash_literals("--a --b2"), vec!["a", "b2"]);
+    }
+}

@@ -1,0 +1,186 @@
+//! Rule 4 — **ledger**: counter conservation. Every byte/count ledger
+//! in this tree flows through a merge point — `PeWork` through the
+//! engine's `reduce`, `LoadStats`/`PeLoad` through
+//! `FeatureTraffic::from_loads`, the serve executor's `BatchExecution`
+//! through the server's dispatch path into `BatchRecord`, and so on.
+//! A field added to the struct but not to its merge function silently
+//! zeros a report column (PR 8's `inter_*` split made this the single
+//! most likely regression). The rule parses the struct's numeric
+//! fields and demands each is referenced in at least one paired merge
+//! function; waive a deliberate non-ledger field with
+//! `// lint:allow(ledger, reason = "...")` on its declaration.
+
+use crate::config::LedgerSpec;
+use crate::{brace_matched, contains_word, Finding, SourceFile};
+
+pub const RULE: &str = "ledger";
+
+/// Scalar/vector counter types; `f32` scalars are model stats, still
+/// counters. Payload vectors (`Vec<f32>` rows, `Vec<u8>` wire bytes)
+/// and `Option<..>` attachments are not ledger columns.
+const NUMERIC: &[&str] = &["u16", "u32", "u64", "usize", "i32", "i64", "f32", "f64"];
+const NUMERIC_VEC: &[&str] = &["Vec<u32>", "Vec<u64>", "Vec<usize>", "Vec<f64>"];
+
+pub fn check(files: &[SourceFile], specs: &[LedgerSpec]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for spec in specs {
+        let Some(decl) = files.iter().find(|f| f.rel == spec.decl_file) else {
+            out.push(missing(spec, format!("declaration file `{}` not found", spec.decl_file)));
+            continue;
+        };
+        let Some((struct_line, fields)) = struct_fields(decl, spec.strukt) else {
+            out.push(missing(
+                spec,
+                format!("struct `{}` not found in `{}`", spec.strukt, spec.decl_file),
+            ));
+            continue;
+        };
+        // union of all paired merge-fn bodies
+        let mut merged = String::new();
+        for (file, fname) in spec.merge_fns {
+            let Some(f) = files.iter().find(|f| &f.rel == file) else {
+                out.push(missing(spec, format!("merge file `{file}` not found")));
+                continue;
+            };
+            match fn_body(f, fname) {
+                Some(body) => {
+                    merged.push_str(&body);
+                    merged.push('\n');
+                }
+                None => out.push(missing(
+                    spec,
+                    format!("merge fn `{fname}` not found in `{file}`"),
+                )),
+            }
+        }
+        if merged.is_empty() {
+            continue;
+        }
+        for (line, name) in fields {
+            if contains_word(&merged, &name) || decl.allowed(RULE, line) {
+                continue;
+            }
+            let fns: Vec<String> =
+                spec.merge_fns.iter().map(|(f, n)| format!("{n} ({f})")).collect();
+            out.push(Finding {
+                rule: RULE,
+                file: spec.decl_file.to_string(),
+                line,
+                msg: format!(
+                    "`{}.{}` is never referenced in its merge path [{}] — \
+                     aggregate it or annotate the field with a reason",
+                    spec.strukt,
+                    name,
+                    fns.join(", ")
+                ),
+            });
+        }
+        let _ = struct_line;
+    }
+    out
+}
+
+fn missing(spec: &LedgerSpec, msg: String) -> Finding {
+    Finding { rule: RULE, file: spec.decl_file.to_string(), line: 1, msg }
+}
+
+/// (1-indexed decl line, field name) for every numeric field of
+/// `strukt` in `decl`.
+fn struct_fields(decl: &SourceFile, strukt: &str) -> Option<(usize, Vec<(usize, String)>)> {
+    let header = format!("struct {strukt}");
+    let (start, body) = brace_matched(&decl.code, |l| {
+        l.contains(&header) && crate::contains_word(l, strukt)
+    })?;
+    let mut fields = Vec::new();
+    for (off, line) in body.iter().enumerate() {
+        let trimmed = line.trim_start();
+        let decl_part = trimmed.strip_prefix("pub ").unwrap_or(trimmed);
+        let Some((name, ty)) = decl_part.split_once(':') else { continue };
+        let name = name.trim();
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            continue;
+        }
+        let ty = ty.trim().trim_end_matches(',');
+        let numeric = NUMERIC.iter().any(|n| ty == *n)
+            || NUMERIC_VEC.iter().any(|n| ty.starts_with(n));
+        if numeric {
+            fields.push((start + off, name.to_string()));
+        }
+    }
+    Some((start, fields))
+}
+
+/// Brace-matched body of `fn name(` in `file` (first match wins; the
+/// config names are unique per file by construction).
+fn fn_body(file: &SourceFile, fname: &str) -> Option<String> {
+    let needle = format!("fn {fname}");
+    let (_, body) = brace_matched(&file.code, |l| {
+        if let Some(pos) = l.find(&needle) {
+            // reject `fn summarize_reduces...` when looking for `summarize`
+            let after = pos + needle.len();
+            l.as_bytes()
+                .get(after)
+                .map(|b| !(b.is_ascii_alphanumeric() || *b == b'_'))
+                .unwrap_or(true)
+        } else {
+            false
+        }
+    })?;
+    Some(body.join("\n"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> LedgerSpec {
+        LedgerSpec {
+            strukt: "Stats",
+            decl_file: "src/stats.rs",
+            merge_fns: &[("src/stats.rs", "merge")],
+        }
+    }
+
+    #[test]
+    fn dropped_field_fires() {
+        let f = SourceFile::from_str(
+            "src/stats.rs",
+            "pub struct Stats {\n    pub a: u64,\n    pub b: u64,\n}\n\
+             fn merge(s: &Stats, t: &mut Stats) {\n    t.a += s.a;\n}\n",
+        );
+        let out = check(&[f], &[spec()]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("Stats.b"));
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn fully_merged_struct_is_clean() {
+        let f = SourceFile::from_str(
+            "src/stats.rs",
+            "pub struct Stats {\n    pub a: u64,\n    pub b: f64,\n    pub rows: Vec<f32>,\n}\n\
+             fn merge(s: &Stats, t: &mut Stats) {\n    t.a += s.a;\n    t.b += s.b;\n}\n",
+        );
+        assert!(check(&[f], &[spec()]).is_empty(), "payload Vec<f32> is not a counter");
+    }
+
+    #[test]
+    fn annotated_field_is_waived() {
+        let f = SourceFile::from_str(
+            "src/stats.rs",
+            "pub struct Stats {\n    pub a: u64,\n\
+             \x20   // lint:allow(ledger, reason = \"debug-only; asserted in tests\")\n\
+             \x20   pub b: u64,\n}\n\
+             fn merge(s: &Stats, t: &mut Stats) {\n    t.a += s.a;\n}\n",
+        );
+        assert!(check(&[f], &[spec()]).is_empty());
+    }
+
+    #[test]
+    fn missing_merge_fn_is_reported() {
+        let f = SourceFile::from_str("src/stats.rs", "pub struct Stats {\n    pub a: u64,\n}\n");
+        let out = check(&[f], &[spec()]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].msg.contains("not found"));
+    }
+}

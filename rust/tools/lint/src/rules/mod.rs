@@ -1,0 +1,9 @@
+//! The five invariant rules. Per-file rules (`wallclock`, `rng`,
+//! `unordered`) take one [`crate::SourceFile`]; repo-level rules
+//! (`ledger`, `flags`) take the whole file set plus configuration.
+
+pub mod flags;
+pub mod ledger;
+pub mod rng;
+pub mod unordered;
+pub mod wallclock;

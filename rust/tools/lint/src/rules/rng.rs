@@ -1,0 +1,66 @@
+//! Rule 2 — **ambient-rng**: all randomness must derive from the
+//! pipeline seed (`pe_seed` splits, `Pcg64` streams, LABOR counter
+//! hashes). Entropy-seeded or thread-local RNGs make every trajectory
+//! claim unreproducible, so they are forbidden everywhere — there is
+//! no allowlist, only the (reason-carrying) annotation escape.
+
+use crate::{contains_word, Finding, SourceFile};
+
+const PATTERNS: &[&str] = &["thread_rng", "from_entropy", "OsRng", "getrandom"];
+pub const RULE: &str = "ambient-rng";
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, code) in file.code.iter().enumerate() {
+        let line = idx + 1;
+        let mut hit = PATTERNS.iter().find(|p| contains_word(code, p)).copied();
+        // `rand::random` has no single-identifier form
+        if hit.is_none() && code.contains("rand::random") {
+            hit = Some("rand::random");
+        }
+        if let Some(p) = hit {
+            if !file.allowed(RULE, line) {
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.rel.clone(),
+                    line,
+                    msg: format!(
+                        "`{p}` is ambient randomness — derive every stream from \
+                         the pipeline seed instead"
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_on_thread_rng_and_entropy() {
+        let f = SourceFile::from_str(
+            "rust/src/x.rs",
+            "let mut r = thread_rng();\nlet s = StdRng::from_entropy();\n",
+        );
+        assert_eq!(check(&f).len(), 2);
+    }
+
+    #[test]
+    fn seeded_streams_are_clean() {
+        let f = SourceFile::from_str(
+            "rust/src/x.rs",
+            "let mut r = Pcg64::new(seed);\nlet s = pe_seed(seed, pe);\n",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn identifier_containing_pattern_is_clean() {
+        // `my_thread_rng_doc` is not a call to thread_rng
+        let f = SourceFile::from_str("rust/src/x.rs", "let my_thread_rng_doc = 1;\n");
+        assert!(check(&f).is_empty());
+    }
+}

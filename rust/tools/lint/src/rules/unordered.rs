@@ -1,0 +1,284 @@
+//! Rule 3 — **unordered**: `HashMap` / `HashSet` iteration order is
+//! arbitrary (and, under `RandomState`, differs between *runs*). Any
+//! iteration over a hash collection that feeds a fabric payload, a
+//! counter, or a report column breaks the serial==threaded /
+//! prefetch / replication bit-identity suites. Lookups (`get`,
+//! `contains`, `insert`, `entry`, `len`) are fine; iteration is
+//! flagged unless the site sorts the collected result within the next
+//! few lines or carries `// lint:allow(unordered, reason = "...")`.
+//! Order-sensitive maps belong in `BTreeMap` / sorted vectors.
+
+use crate::{contains_word, Finding, SourceFile};
+
+pub const RULE: &str = "unordered";
+
+/// How many lines after an iteration a `.sort` still counts as
+/// "immediately sorted" (the collect-then-sort idiom).
+const SORT_LOOKAHEAD: usize = 3;
+
+const ITER_CALLS: &[&str] = &[
+    ".iter()",
+    ".iter_mut()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".into_iter()",
+    ".into_keys()",
+    ".into_values()",
+];
+
+pub fn check(file: &SourceFile) -> Vec<Finding> {
+    let tracked = tracked_names(file);
+    if tracked.is_empty() {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, code) in file.code.iter().enumerate() {
+        let line = idx + 1;
+        for name in &tracked {
+            if !contains_word(code, name) {
+                continue;
+            }
+            if !(iterates(code, name) || for_loop_over(code, name)) {
+                continue;
+            }
+            if sorted_nearby(file, idx) || file.allowed(RULE, line) {
+                continue;
+            }
+            out.push(Finding {
+                rule: RULE,
+                file: file.rel.clone(),
+                line,
+                msg: format!(
+                    "iteration over hash collection `{name}` — order is \
+                     nondeterministic; use BTreeMap/BTreeSet, sort the \
+                     collected result, or annotate with a reason"
+                ),
+            });
+            break;
+        }
+    }
+    out
+}
+
+/// Variable / field names bound to a `HashMap` or `HashSet` anywhere in
+/// the file (declaration, field, or turbofish collect on the same line).
+fn tracked_names(file: &SourceFile) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for code in &file.code {
+        if !(code.contains("HashMap") || code.contains("HashSet")) {
+            continue;
+        }
+        // `let [mut] name ...` — local binding
+        if let Some(pos) = code.find("let ") {
+            let rest = code[pos + 4..].trim_start().trim_start_matches("mut ");
+            if let Some(name) = leading_ident(rest) {
+                push_unique(&mut out, name);
+                continue;
+            }
+        }
+        // `name: HashMap<...>` — struct field or typed parameter
+        if let Some(colon) = code.find(':') {
+            let head = code[..colon].trim_end();
+            if let Some(name) = trailing_ident(head) {
+                push_unique(&mut out, name);
+            }
+        }
+    }
+    out
+}
+
+fn push_unique(out: &mut Vec<String>, name: String) {
+    if !name.is_empty() && !out.contains(&name) {
+        out.push(name);
+    }
+}
+
+fn leading_ident(s: &str) -> Option<String> {
+    let end = s
+        .find(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .unwrap_or(s.len());
+    if end == 0 {
+        None
+    } else {
+        Some(s[..end].to_string())
+    }
+}
+
+fn trailing_ident(s: &str) -> Option<String> {
+    let start = s
+        .rfind(|c: char| !(c.is_ascii_alphanumeric() || c == '_'))
+        .map(|p| p + 1)
+        .unwrap_or(0);
+    if start >= s.len() {
+        None
+    } else {
+        Some(s[start..].to_string())
+    }
+}
+
+/// `name.iter()` / `self.name.keys()` / `name.drain(..)` on this line?
+/// A dotted access through another object (`w.name.iter()`) is a
+/// *different* variable that happens to share the tracked name — only
+/// bare and `self.`-qualified uses count.
+fn iterates(code: &str, name: &str) -> bool {
+    let mut start = 0;
+    while let Some(off) = code[start..].find(name) {
+        let pos = start + off;
+        if crate::word_at(code, pos, name) && !foreign_field(code, pos) {
+            let after = &code[pos + name.len()..];
+            if ITER_CALLS.iter().any(|c| after.starts_with(c)) {
+                return true;
+            }
+        }
+        start = pos + 1;
+    }
+    false
+}
+
+/// Is the occurrence at `pos` a field access on something other than
+/// `self` (preceded by `.` but not by `self.`)?
+fn foreign_field(code: &str, pos: usize) -> bool {
+    pos > 0
+        && code.as_bytes()[pos - 1] == b'.'
+        && !(pos >= 5 && &code[pos - 5..pos] == "self.")
+}
+
+/// `for x in &name` / `for (k, v) in name` / `for x in &mut name`?
+fn for_loop_over(code: &str, name: &str) -> bool {
+    let Some(for_pos) = code.find("for ") else { return false };
+    let Some(in_off) = code[for_pos..].find(" in ") else { return false };
+    let expr = code[for_pos + in_off + 4..].trim_start();
+    let expr = expr
+        .trim_start_matches('&')
+        .trim_start_matches("mut ")
+        .trim_start_matches("self.");
+    // the loop expression must BE the collection (not `name.iter()...`,
+    // which `iterates` already covers, and not `vec_of(name)`)
+    match expr.split(|c: char| !(c.is_ascii_alphanumeric() || c == '_')).next() {
+        Some(first) => {
+            first == name && {
+                let rest = &expr[first.len()..];
+                rest.trim_start().starts_with('{') || rest.trim_end().is_empty() || rest.starts_with(' ')
+            }
+        }
+        None => false,
+    }
+}
+
+/// Is there a `.sort` within the lookahead window after line `idx`
+/// (0-indexed)? Covers `visits.iter().map(..).collect()` followed by
+/// `ranked.sort_unstable..` — the canonical-ordering idiom.
+fn sorted_nearby(file: &SourceFile, idx: usize) -> bool {
+    file.code
+        .iter()
+        .skip(idx)
+        .take(SORT_LOOKAHEAD + 1)
+        .any(|l| l.contains(".sort"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_direct_iteration() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let mut m: HashMap<u32, u32> = HashMap::new();\n\
+             for (k, v) in &m {\n    use_it(k, v);\n}\n",
+        );
+        assert_eq!(check(&f).len(), 1);
+        assert_eq!(check(&f)[0].line, 2);
+    }
+
+    #[test]
+    fn flags_method_iteration() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let seen = std::collections::HashSet::with_capacity(8);\n\
+             let total: usize = seen.iter().count();\n",
+        );
+        assert_eq!(check(&f).len(), 1);
+    }
+
+    #[test]
+    fn lookups_are_clean() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let mut m: HashMap<u32, u32> = HashMap::new();\n\
+             m.insert(1, 2);\n\
+             let v = m.get(&1);\n\
+             if m.contains_key(&1) { ok(); }\n\
+             let n = m.len();\n\
+             let e = m.entry(3).or_insert(0);\n",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn immediate_sort_is_clean() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let mut visits: HashMap<u32, u32> = HashMap::new();\n\
+             let mut ranked: Vec<(u32, u32)> =\n\
+                 visits.iter().map(|(&v, &c)| (c, v)).collect();\n\
+             ranked.sort_unstable_by(|a, b| b.cmp(a));\n",
+        );
+        assert!(check(&f).is_empty(), "collect-then-sort is the canonical idiom");
+    }
+
+    #[test]
+    fn btree_is_untracked() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let mut m: BTreeMap<u32, u32> = BTreeMap::new();\nfor (k, v) in &m {}\n",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn annotation_waives_with_reason() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let mut m: HashMap<u32, u32> = HashMap::new();\n\
+             // lint:allow(unordered, reason = \"feeds a commutative integer sum\")\n\
+             let s: u64 = m.values().map(|&v| v as u64).sum();\n",
+        );
+        assert!(check(&f).is_empty());
+    }
+
+    #[test]
+    fn foreign_field_access_is_clean() {
+        // `w.hot` is a Vec field on another object; the local `hot`
+        // HashSet is only probed with contains()
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let hot: HashSet<u32> = w.hot.iter().copied().collect();\n\
+             if hot.contains(&v) { hits += 1; }\n",
+        );
+        assert!(check(&f).is_empty(), "w.hot is not the tracked HashSet");
+    }
+
+    #[test]
+    fn self_field_iteration_still_fires() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "struct S { hot: HashSet<u32> }\n\
+             fn f(s: &S) { for v in self.hot.iter() { go(v); } }\n",
+        );
+        assert_eq!(check(&f).len(), 1);
+    }
+
+    #[test]
+    fn vec_with_similar_name_is_clean() {
+        let f = SourceFile::from_str(
+            "t.rs",
+            "let mut m: HashMap<u32, u32> = HashMap::new();\n\
+             let ms: Vec<u32> = Vec::new();\n\
+             for x in &ms {}\n",
+        );
+        assert!(check(&f).is_empty(), "word boundary must separate m from ms");
+    }
+}

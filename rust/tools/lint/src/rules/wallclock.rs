@@ -1,0 +1,75 @@
+//! Rule 1 — **wallclock**: real time is a nondeterminism source. The
+//! engine's decisions, the samplers, and the entire serve plane run on
+//! seeds and a virtual integer-µs clock so that two runs of the same
+//! config are bit-identical; a stray `Instant::now()` in a decision
+//! path (batch admission, cache policy, sampler) silently voids that.
+//! Timing-only modules (the `Timer` utility, phase metrics, kernel
+//! profiling, outer CLI timers, benches) are allowlisted — their
+//! readings only ever land in `wall_*` report columns, never in
+//! control flow.
+
+use crate::{Finding, SourceFile};
+
+const PATTERNS: &[&str] = &["Instant::now", "SystemTime"];
+pub const RULE: &str = "wallclock";
+
+pub fn check(file: &SourceFile, allow_files: &[&str]) -> Vec<Finding> {
+    let exempt = allow_files
+        .iter()
+        .any(|a| file.rel.starts_with(a) || file.rel.ends_with(a));
+    if exempt {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    for (idx, code) in file.code.iter().enumerate() {
+        let line = idx + 1;
+        for p in PATTERNS {
+            if code.contains(p) && !file.allowed(RULE, line) {
+                out.push(Finding {
+                    rule: RULE,
+                    file: file.rel.clone(),
+                    line,
+                    msg: format!(
+                        "`{p}` outside the allowlisted timing modules — decision \
+                         paths must use the virtual clock / seeded streams"
+                    ),
+                });
+                break; // one finding per line is enough
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_outside_allowlist() {
+        let f = SourceFile::from_str("rust/src/serve/batcher.rs", "let t = Instant::now();\n");
+        assert_eq!(check(&f, &["rust/src/util/stats.rs"]).len(), 1);
+    }
+
+    #[test]
+    fn allowlisted_file_is_exempt() {
+        let f = SourceFile::from_str("rust/src/util/stats.rs", "let t = Instant::now();\n");
+        assert!(check(&f, &["rust/src/util/stats.rs"]).is_empty());
+    }
+
+    #[test]
+    fn comments_do_not_fire() {
+        let f = SourceFile::from_str("rust/src/serve/mod.rs", "// no Instant::now here\n");
+        assert!(check(&f, &[]).is_empty());
+    }
+
+    #[test]
+    fn annotation_waives() {
+        let f = SourceFile::from_str(
+            "rust/src/serve/mod.rs",
+            "// lint:allow(wallclock, reason = \"measured wall only lands in a log line\")\n\
+             let t = std::time::Instant::now();\n",
+        );
+        assert!(check(&f, &[]).is_empty());
+    }
+}

@@ -1,0 +1,13 @@
+// FIXTURE (flags, clean): every literal is registered, every key consumed.
+fn spec() {
+    val("dataset", "tiny");
+    switch("dry-run");
+}
+
+fn run(args: &Args) {
+    let d = args.get("dataset");
+    if args.is_set("dry-run") {
+        println!("usage: serve --dataset NAME [--dry-run] (--help for more)");
+    }
+    let _ = d;
+}

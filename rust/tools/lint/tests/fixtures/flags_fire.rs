@@ -1,0 +1,12 @@
+// FIXTURE (flags, firing): `--qps` is mentioned but never registered;
+// `dry-run` is registered but never consumed.
+fn spec() {
+    val("dataset", "tiny");
+    switch("dry-run");
+}
+
+fn run(args: &Args) {
+    let d = args.get("dataset");
+    println!("usage: serve --dataset NAME --qps N");
+    let _ = d;
+}

@@ -1,0 +1,16 @@
+// FIXTURE (ledger, clean): every counter reaches the merge point; the
+// debug-only field carries a documented waiver.
+pub struct Traffic {
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    pub batches: usize,
+    // lint:allow(ledger, reason = "debug-only mirror; asserted equal in tests")
+    pub check_bytes: u64,
+    pub rows: Vec<f32>,
+}
+
+pub fn merge(src: &Traffic, dst: &mut Traffic) {
+    dst.intra_bytes += src.intra_bytes;
+    dst.inter_bytes += src.inter_bytes;
+    dst.batches += src.batches;
+}

@@ -1,0 +1,13 @@
+// FIXTURE (ledger, firing): `inter_bytes` was added to the counter
+// struct but never wired into `merge` — the report column silently
+// reads zero. This is the exact regression class the rule targets.
+pub struct Traffic {
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    pub batches: usize,
+}
+
+pub fn merge(src: &Traffic, dst: &mut Traffic) {
+    dst.intra_bytes += src.intra_bytes;
+    dst.batches += src.batches;
+}

@@ -1,0 +1,5 @@
+// FIXTURE (ambient-rng, clean): every stream derives from the pipeline seed.
+pub fn pick(seed: u64, pe: usize, n: usize) -> usize {
+    let mut rng = Pcg64::new(pe_seed(seed, pe));
+    (rng.next_u64() % n as u64) as usize
+}

@@ -1,0 +1,6 @@
+// FIXTURE (ambient-rng, firing): entropy-seeded randomness.
+pub fn pick(n: usize) -> usize {
+    let mut rng = rand::thread_rng();
+    let r: f64 = rand::random();
+    (r * n as f64) as usize + rng.gen_range(0..1)
+}

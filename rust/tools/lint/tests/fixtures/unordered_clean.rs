@@ -1,0 +1,11 @@
+// FIXTURE (unordered, clean): collect-then-sort plus a documented waiver.
+pub fn pack(counts: HashMap<u32, u32>) -> Vec<(u32, u32)> {
+    let mut out: Vec<(u32, u32)> = counts.iter().map(|(&k, &v)| (k, v)).collect();
+    out.sort_unstable();
+    out
+}
+
+pub fn total(counts: HashMap<u32, u32>) -> u64 {
+    // lint:allow(unordered, reason = "commutative integer sum; order cannot matter")
+    counts.values().map(|&v| v as u64).sum()
+}

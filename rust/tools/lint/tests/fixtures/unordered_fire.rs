@@ -1,0 +1,8 @@
+// FIXTURE (unordered, firing): hash-map iteration feeding a payload.
+pub fn pack(counts: HashMap<u32, u32>) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    for (k, v) in &counts {
+        out.push((*k, *v));
+    }
+    out
+}

@@ -1,0 +1,4 @@
+// FIXTURE (wallclock, clean): decisions on the virtual integer-µs clock.
+pub fn admit(now_us: u64, batch_open_us: u64) -> bool {
+    now_us.saturating_sub(batch_open_us) > 500
+}

@@ -1,0 +1,5 @@
+// FIXTURE (wallclock, firing): wall-clock read in a serve decision path.
+pub fn admit(batch_open_since: std::time::Instant) -> bool {
+    let now = std::time::Instant::now();
+    now.duration_since(batch_open_since).as_micros() > 500
+}

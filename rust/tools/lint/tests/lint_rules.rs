@@ -1,0 +1,183 @@
+//! Fixture-driven rule tests (one firing + one clean case per rule)
+//! and the whole-tree gate: the repository itself must lint clean.
+
+use std::path::Path;
+
+use coopgnn_lint::config::{repo_config, RepoConfig};
+use coopgnn_lint::rules;
+use coopgnn_lint::{collect_rs_files, Finding, SourceFile};
+
+fn fixture(name: &str, content: &str) -> SourceFile {
+    SourceFile::from_str(name, content)
+}
+
+// ---- rule 1: wallclock ------------------------------------------------
+
+#[test]
+fn wallclock_fixture_fires() {
+    let f = fixture(
+        "fixtures/wallclock_fire.rs",
+        include_str!("fixtures/wallclock_fire.rs"),
+    );
+    let out = rules::wallclock::check(&f, repo_config().wallclock_allow);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert!(out[0].msg.contains("Instant::now"));
+}
+
+#[test]
+fn wallclock_fixture_clean() {
+    let f = fixture(
+        "fixtures/wallclock_clean.rs",
+        include_str!("fixtures/wallclock_clean.rs"),
+    );
+    assert!(rules::wallclock::check(&f, repo_config().wallclock_allow).is_empty());
+}
+
+// ---- rule 2: ambient-rng ----------------------------------------------
+
+#[test]
+fn rng_fixture_fires() {
+    let f = fixture("fixtures/rng_fire.rs", include_str!("fixtures/rng_fire.rs"));
+    let out = rules::rng::check(&f);
+    assert_eq!(out.len(), 2, "thread_rng line and rand::random line: {out:?}");
+}
+
+#[test]
+fn rng_fixture_clean() {
+    let f = fixture("fixtures/rng_clean.rs", include_str!("fixtures/rng_clean.rs"));
+    assert!(rules::rng::check(&f).is_empty());
+}
+
+// ---- rule 3: unordered ------------------------------------------------
+
+#[test]
+fn unordered_fixture_fires() {
+    let f = fixture(
+        "fixtures/unordered_fire.rs",
+        include_str!("fixtures/unordered_fire.rs"),
+    );
+    let out = rules::unordered::check(&f);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert!(out[0].msg.contains("counts"));
+}
+
+#[test]
+fn unordered_fixture_clean() {
+    let f = fixture(
+        "fixtures/unordered_clean.rs",
+        include_str!("fixtures/unordered_clean.rs"),
+    );
+    let out = rules::unordered::check(&f);
+    assert!(out.is_empty(), "sort idiom + documented waiver must pass: {out:?}");
+    assert!(f.annotation_findings().is_empty());
+}
+
+// ---- rule 4: ledger ---------------------------------------------------
+
+fn ledger_spec(file: &'static str) -> coopgnn_lint::config::LedgerSpec {
+    coopgnn_lint::config::LedgerSpec {
+        strukt: "Traffic",
+        decl_file: file,
+        merge_fns: match file {
+            "fixtures/ledger_fire.rs" => &[("fixtures/ledger_fire.rs", "merge")],
+            _ => &[("fixtures/ledger_clean.rs", "merge")],
+        },
+    }
+}
+
+#[test]
+fn ledger_fixture_fires_on_dropped_field() {
+    let f = fixture(
+        "fixtures/ledger_fire.rs",
+        include_str!("fixtures/ledger_fire.rs"),
+    );
+    let out = rules::ledger::check(&[f], &[ledger_spec("fixtures/ledger_fire.rs")]);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert!(
+        out[0].msg.contains("Traffic.inter_bytes"),
+        "the field dropped from merge() must be named: {}",
+        out[0].msg
+    );
+}
+
+#[test]
+fn ledger_fixture_clean() {
+    let f = fixture(
+        "fixtures/ledger_clean.rs",
+        include_str!("fixtures/ledger_clean.rs"),
+    );
+    let out = rules::ledger::check(&[f], &[ledger_spec("fixtures/ledger_clean.rs")]);
+    assert!(out.is_empty(), "waived + merged fields must pass: {out:?}");
+}
+
+// ---- rule 5: flags ----------------------------------------------------
+
+fn flags_cfg(spec: &'static str) -> RepoConfig {
+    RepoConfig {
+        scan_dirs: &[],
+        skip: &[],
+        wallclock_allow: &[],
+        ledgers: &[],
+        flags_spec_file: spec,
+        flags_scan: match spec {
+            "fixtures/flags_fire.rs" => &["fixtures/flags_fire.rs"],
+            _ => &["fixtures/flags_clean.rs"],
+        },
+        flags_builtin: &["help"],
+    }
+}
+
+#[test]
+fn flags_fixture_fires_both_directions() {
+    let f = fixture(
+        "fixtures/flags_fire.rs",
+        include_str!("fixtures/flags_fire.rs"),
+    );
+    let out = rules::flags::check(&[f], &flags_cfg("fixtures/flags_fire.rs"));
+    assert_eq!(out.len(), 2, "{out:?}");
+    assert!(out.iter().any(|f| f.msg.contains("--qps")), "unregistered literal");
+    assert!(out.iter().any(|f| f.msg.contains("--dry-run")), "unconsumed key");
+}
+
+#[test]
+fn flags_fixture_clean() {
+    let f = fixture(
+        "fixtures/flags_clean.rs",
+        include_str!("fixtures/flags_clean.rs"),
+    );
+    let out = rules::flags::check(&[f], &flags_cfg("fixtures/flags_clean.rs"));
+    assert!(out.is_empty(), "{out:?}");
+}
+
+// ---- the tree itself --------------------------------------------------
+
+/// Mirror of the binary's scan: the repository must lint clean. Any
+/// new violation fails `cargo test` even before the CI lint job runs.
+#[test]
+fn tree_lints_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..");
+    let cfg = repo_config();
+    let rels = collect_rs_files(&root, cfg.scan_dirs, cfg.skip);
+    assert!(
+        rels.len() > 20,
+        "scan found only {} files — tree layout changed?",
+        rels.len()
+    );
+    let files: Vec<SourceFile> = rels
+        .iter()
+        .map(|rel| SourceFile::load(&root, rel).expect(rel))
+        .collect();
+
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &files {
+        findings.extend(f.annotation_findings());
+        findings.extend(rules::wallclock::check(f, cfg.wallclock_allow));
+        findings.extend(rules::rng::check(f));
+        findings.extend(rules::unordered::check(f));
+    }
+    findings.extend(rules::ledger::check(&files, cfg.ledgers));
+    findings.extend(rules::flags::check(&files, &cfg));
+
+    let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "tree has lint findings:\n{}", report.join("\n"));
+}
