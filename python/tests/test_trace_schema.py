@@ -1,0 +1,171 @@
+"""Schema checker for the Rust flight recorder's Chrome trace export.
+
+The `--trace` flag on `engine` / `train` / `serve` writes a Chrome
+trace-event JSON array (viewable at chrome://tracing or
+ui.perfetto.dev). This checker pins the exporter's contract:
+
+* the file is a JSON **array** of event objects;
+* every event carries the required keys with sane types ("X" complete
+  events additionally carry a non-negative integer `dur`);
+* per `(pid, tid)` track, timestamps are **monotone non-decreasing** in
+  file order (the exporter sorts each track);
+* duration-begin/end events ("B"/"E"), if any appear, pair up like a
+  stack per track with matching names. The current exporter emits only
+  "X" events, so the pairing check passes vacuously — but the checker
+  stays honest if streaming B/E output is ever added.
+
+Usable both as a pytest module and as a CLI for the CI smoke job:
+
+    python3 python/tests/test_trace_schema.py trace.json
+
+Exits non-zero listing every violation.
+"""
+
+import json
+import sys
+from collections import defaultdict
+
+REQUIRED_KEYS = ("name", "ph", "ts", "pid", "tid")
+
+
+def check_events(events):
+    """Return a list of human-readable violations (empty == valid)."""
+    problems = []
+    if not isinstance(events, list):
+        return [f"top level must be a JSON array, got {type(events).__name__}"]
+    last_ts = {}
+    stacks = defaultdict(list)
+    for i, ev in enumerate(events):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        missing = [k for k in REQUIRED_KEYS if k not in ev]
+        if missing:
+            problems.append(f"{where}: missing keys {missing}")
+            continue
+        if not isinstance(ev["ts"], int) or ev["ts"] < 0:
+            problems.append(f"{where}: ts must be a non-negative integer µs")
+            continue
+        track = (ev["pid"], ev["tid"])
+        if track in last_ts and ev["ts"] < last_ts[track]:
+            problems.append(
+                f"{where}: ts {ev['ts']} < previous {last_ts[track]} "
+                f"on track {track} — per-track order broken"
+            )
+        last_ts[track] = ev["ts"]
+        ph = ev["ph"]
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, int) or dur < 0:
+                problems.append(f"{where}: 'X' event needs non-negative integer dur")
+        elif ph == "B":
+            stacks[track].append((ev["name"], i))
+        elif ph == "E":
+            if not stacks[track]:
+                problems.append(f"{where}: 'E' with no open 'B' on track {track}")
+            else:
+                name, opened = stacks[track].pop()
+                # Chrome allows nameless E; a named one must match its B.
+                if "name" in ev and ev["name"] != name:
+                    problems.append(
+                        f"{where}: 'E' named {ev['name']!r} closes 'B' "
+                        f"{name!r} from event {opened}"
+                    )
+    for track, stack in sorted(stacks.items()):
+        for name, opened in stack:
+            problems.append(
+                f"track {track}: 'B' {name!r} (event {opened}) never closed"
+            )
+    return problems
+
+
+def check_file(path):
+    with open(path, "r", encoding="utf-8") as f:
+        try:
+            events = json.load(f)
+        except json.JSONDecodeError as e:
+            return [f"not valid JSON: {e}"], 0
+    return check_events(events), len(events) if isinstance(events, list) else 0
+
+
+# ---- pytest surface ---------------------------------------------------
+
+
+def _x(name, ts, dur, tid=0, pid=0, **args):
+    ev = {"name": name, "cat": "t", "ph": "X", "ts": ts, "dur": dur,
+          "pid": pid, "tid": tid}
+    ev.update(args)
+    return ev
+
+
+def test_valid_x_only_trace_passes():
+    events = [
+        _x("sample", 0, 5, tid=0),
+        _x("cache_fill", 5, 3, tid=0),
+        _x("sample", 2, 4, tid=1),  # other track may start earlier
+        _x("fabric_all_to_all", 8, 1, tid=0),
+    ]
+    assert check_events(events) == []
+
+
+def test_non_array_top_level_fails():
+    assert check_events({"traceEvents": []})
+    assert check_events("[]")
+
+
+def test_missing_keys_and_bad_types_fail():
+    assert any("missing keys" in p for p in check_events([{"ph": "X"}]))
+    bad_ts = dict(_x("s", 0, 1), ts=-3)
+    assert any("non-negative" in p for p in check_events([bad_ts]))
+    no_dur = {k: v for k, v in _x("s", 0, 1).items() if k != "dur"}
+    assert any("dur" in p for p in check_events([no_dur]))
+
+
+def test_per_track_timestamp_regression_fails():
+    events = [_x("a", 10, 1, tid=2), _x("b", 4, 1, tid=2)]
+    problems = check_events(events)
+    assert any("per-track order broken" in p for p in problems)
+
+
+def test_begin_end_pairing_is_enforced():
+    ok = [
+        {"name": "step", "ph": "B", "ts": 0, "pid": 0, "tid": 0},
+        {"name": "inner", "ph": "B", "ts": 1, "pid": 0, "tid": 0},
+        {"name": "inner", "ph": "E", "ts": 2, "pid": 0, "tid": 0},
+        {"name": "step", "ph": "E", "ts": 3, "pid": 0, "tid": 0},
+    ]
+    assert check_events(ok) == []
+    dangling = ok[:2]
+    assert any("never closed" in p for p in check_events(dangling))
+    orphan = [ok[2]]
+    assert any("no open 'B'" in p for p in check_events(orphan))
+    crossed = [ok[0], dict(ok[2], ts=1)]
+    assert any("closes 'B'" in p for p in check_events(crossed))
+
+
+def test_round_trip_through_json(tmp_path):
+    path = tmp_path / "trace.json"
+    path.write_text(json.dumps([_x("sample", 0, 2, batch=0, seq=0, bytes=64)]))
+    problems, n = check_file(str(path))
+    assert problems == [] and n == 1
+
+
+# ---- CLI surface (the CI smoke job) -----------------------------------
+
+
+def main(argv):
+    if len(argv) != 2:
+        print(f"usage: {argv[0]} trace.json", file=sys.stderr)
+        return 2
+    problems, n = check_file(argv[1])
+    if problems:
+        for p in problems:
+            print(f"TRACE SCHEMA: {p}", file=sys.stderr)
+        return 1
+    print(f"trace schema OK: {n} events in {argv[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -73,6 +73,31 @@ fn main() {
             );
             if mode == Mode::Cooperative && batcher == BatcherKind::Adaptive {
                 adaptive_coop_bytes = r.bytes_per_req();
+                // Flight-recorder summary for the headline arm: span
+                // counts plus the attributed-vs-ledger byte
+                // reconciliation (the integration-test invariant,
+                // re-checked on the bench config and stamped so drift
+                // shows up in the tracked artifact).
+                let trace = out.ledger.trace();
+                let attributed = trace.stage_bytes("serve_storage")
+                    + trace.stage_bytes("serve_fabric")
+                    + trace.stage_bytes("serve_hot");
+                let ledger_total: u64 = out
+                    .ledger
+                    .batches
+                    .iter()
+                    .map(|b| b.storage_bytes + b.fabric_bytes + b.hot_bytes)
+                    .sum();
+                let mut ts = BTreeMap::new();
+                ts.insert("spans".to_string(), Json::Num(trace.span_count() as f64));
+                ts.insert(
+                    "spans_per_batch".to_string(),
+                    Json::Num(trace.span_count() as f64 / trace.batch_count().max(1) as f64),
+                );
+                ts.insert("bytes_attributed".to_string(), Json::Num(attributed as f64));
+                ts.insert("bytes_in_ledger".to_string(), Json::Num(ledger_total as f64));
+                ts.insert("reconciled".to_string(), Json::Bool(attributed == ledger_total));
+                section.insert("trace_summary".to_string(), Json::Obj(ts));
             }
             if mode == Mode::Independent && batcher == BatcherKind::Fixed {
                 fixed_indep_bytes = r.bytes_per_req();

@@ -40,6 +40,7 @@
 //! fields differ.
 
 use crate::graph::{Dataset, Partition, VertexId};
+use crate::obs::{ms_to_us, split_dur, Span, Trace, TraceSink};
 use crate::pipeline::{with_prefetch, EngineStream, MinibatchStream, PeWork};
 use crate::sampling::{SamplerConfig, SamplerKind};
 
@@ -264,6 +265,21 @@ pub fn run_stream(mut stream: EngineStream<'_>, cfg: &EngineConfig) -> EngineRep
     }
 }
 
+/// [`run_stream`] with a flight-recorder attached: measured batches
+/// additionally emit per-PE stage spans into `trace` (see
+/// [`drain_traced`]). With [`Trace::Off`] this is exactly `run_stream`.
+pub fn run_stream_traced(
+    mut stream: EngineStream<'_>,
+    cfg: &EngineConfig,
+    trace: &mut Trace,
+) -> EngineReport {
+    if cfg.prefetch {
+        with_prefetch(stream, |s| drain_traced(s, cfg, trace))
+    } else {
+        drain_traced(&mut stream, cfg, trace)
+    }
+}
+
 /// Drain `warmup + measure` batches from any stream and aggregate the
 /// measured ones — the engine reduced to what it is: an aggregator.
 ///
@@ -272,13 +288,35 @@ pub fn run_stream(mut stream: EngineStream<'_>, cfg: &EngineConfig) -> EngineRep
 /// measurement window, so a stream whose shape disagrees with the
 /// config that happened to build it cannot be mis-reduced.
 pub fn drain(stream: &mut dyn MinibatchStream, cfg: &EngineConfig) -> EngineReport {
+    drain_traced(stream, cfg, &mut Trace::Off)
+}
+
+/// [`drain`] with a flight-recorder attached: each **measured** batch
+/// additionally derives per-PE stage spans (sample → cache_fill /
+/// hot_fill / fabric_all_to_all, plus a prefetch marker) from the very
+/// [`PeWork`] records the reduction consumes. Because spans are
+/// derived *after* the batch from already-counted ledgers, the report
+/// is bit-identical with tracing on or off, and per-stage span bytes
+/// divided by the measured-batch count reconcile exactly with the
+/// report's `feat_*` byte fields (pinned in
+/// `tests/integration_obs.rs`).
+pub fn drain_traced(
+    stream: &mut dyn MinibatchStream,
+    cfg: &EngineConfig,
+    trace: &mut Trace,
+) -> EngineReport {
     let layers = stream.layers();
     let mode = stream.mode();
     let num_pes = stream.num_pes();
     let mut stats: Vec<BatchStats> = Vec::with_capacity(cfg.measure_batches);
+    let mut cursor = vec![0u64; num_pes];
     for batch in 0..(cfg.warmup_batches + cfg.measure_batches) {
         let mb = stream.next_batch();
         if batch >= cfg.warmup_batches {
+            if trace.enabled() {
+                let measured = (batch - cfg.warmup_batches) as u64;
+                emit_batch_spans(trace, measured, &mb.per_pe, &mut cursor);
+            }
             let mut bs = reduce(mode, layers, &mb.per_pe);
             bs.wall_ms = mb.wall_ms;
             stats.push(bs);
@@ -288,6 +326,66 @@ pub fn drain(stream: &mut dyn MinibatchStream, cfg: &EngineConfig) -> EngineRepo
     // final reduction instead of letting it sample batches nobody reads
     stream.finish();
     finalize(mode, num_pes, layers, &stats)
+}
+
+/// Derive one measured batch's spans from its per-PE work records.
+///
+/// Timeline model: all PEs start the batch together at the global max
+/// of the previous batch's per-PE ends (the engine's per-batch
+/// barrier). Each PE runs its sample stage (`samp_ms` → µs), then its
+/// feature window (`feat_ms` → µs) split across `cache_fill` /
+/// `hot_fill` / `fabric_all_to_all` proportionally to their byte
+/// ledgers (largest-remainder, so the sub-spans tile the window
+/// exactly). A zero-duration `prefetch` marker on the charged PE
+/// carries the prefetch bytes. `seq` restarts per `(batch, pe)`, so
+/// `(batch, pe, seq)` totally orders the merged span list.
+pub(crate) fn emit_batch_spans(
+    trace: &mut Trace,
+    batch: u64,
+    per_pe: &[PeWork],
+    cursor: &mut [u64],
+) {
+    let base = cursor.iter().copied().max().unwrap_or(0);
+    for (pe, w) in per_pe.iter().enumerate() {
+        let mut seq = 0u32;
+        let mut span = |stage, t0, t1, bytes| Span {
+            batch,
+            pe: pe as u32,
+            seq: {
+                let s = seq;
+                seq += 1;
+                s
+            },
+            stage,
+            t_start_us: t0,
+            t_end_us: t1,
+            bytes,
+        };
+        let samp_us = ms_to_us(w.samp_ms);
+        let feat_us = ms_to_us(w.feat_ms);
+        let t_feat = base + samp_us;
+        trace.record(span("sample", base, t_feat, 0));
+        let parts = split_dur(
+            feat_us,
+            &[w.bytes_from_storage, w.hot_bytes, w.fabric_bytes],
+        );
+        let mut t = t_feat;
+        for (stage, (dur, bytes)) in ["cache_fill", "hot_fill", "fabric_all_to_all"]
+            .into_iter()
+            .zip(
+                parts
+                    .iter()
+                    .zip([w.bytes_from_storage, w.hot_bytes, w.fabric_bytes]),
+            )
+        {
+            trace.record(span(stage, t, t + dur, bytes));
+            t += dur;
+        }
+        if w.prefetch_bytes > 0 || w.prefetch_rows > 0 {
+            trace.record(span("prefetch", base, base, w.prefetch_bytes));
+        }
+        cursor[pe] = t;
+    }
 }
 
 /// Max/total reduction of one batch across PEs — one code path for

@@ -148,6 +148,25 @@
 //! println!("per-PE |S^3| = {:.0}, miss rate {:.3}", report.s[3], report.cache_miss_rate);
 //! ```
 //!
+//! ## The observability plane
+//!
+//! [`obs`] is the flight recorder every other plane reports through:
+//! `--trace out.json` on `engine` / `train` / `serve` derives
+//! `(batch, pe, stage, t_start, t_end, bytes)` spans **post-hoc from
+//! the ledgers** ([`pipeline::PeWork`], the serve
+//! [`serve::report::Ledger`]) and exports Chrome/Perfetto trace-event
+//! JSON; `--metrics-out metrics.prom` writes a Prometheus-style text
+//! exposition from the unified [`obs::Registry`] (the old `metrics`
+//! bag, folded in). The contract: tracing off is zero-overhead, every
+//! counter is bit-identical with tracing on vs off, serve traces are
+//! bit-identical across exec modes and prefetch, and per-stage span
+//! bytes reconcile exactly with the report ledgers
+//! (`tests/integration_obs.rs`). [`obs::LEDGER_STRUCTS`] is the single
+//! registry of lint-tracked counter structs — `coopgnn-lint`'s
+//! `ledger` rule parses its struct list from that declaration, and
+//! [`obs::LogHist`] stage histograms back the p50/p99 columns in
+//! `repro end2end` / `repro serve`.
+//!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a harness in [`repro`].
 
@@ -165,6 +184,7 @@ pub mod pipeline;
 pub mod costmodel;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod train;
 pub mod serve;

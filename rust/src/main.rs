@@ -9,12 +9,14 @@
 //! coopgnn train --train-pes P [--mode coop|indep] [--batch B]
 //!               [--allreduce naive|tree|ring|rsag|auto] [--replication r]
 //!               [--intra-bw GBPS] [--inter-bw GBPS]
+//!               [--trace FILE] [--metrics-out FILE]
 //! coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B]
 //!               [--kappa K] [--batches N] [--partitioner random|metis|ldg]
 //!               [--exec serial|threaded] [--codec f32|fp16|int8] [--hot-mb N]
-//!               [--replication r]
+//!               [--replication r] [--trace FILE] [--metrics-out FILE]
 //! coopgnn serve --rate R --slo-ms MS --batcher fixed|adaptive
 //!               [--duration-batches N] [--pes P] [--mode coop|indep]
+//!               [--trace FILE] [--metrics-out FILE]
 //! coopgnn caps --dataset NAME --batch B [--sampler S]
 //! coopgnn info
 //! ```
@@ -32,6 +34,7 @@ use coopgnn::coop::all_to_all::AllReduceStrategy;
 use coopgnn::coop::engine::{ExecMode, Mode};
 use coopgnn::feature::Codec;
 use coopgnn::graph::datasets;
+use coopgnn::obs::{LedgerSource, Registry, Trace, TraceBuffer};
 use coopgnn::pipeline::args::{switch, val, ArgMap, ArgSpec};
 use coopgnn::pipeline::{with_prefetch, Partitioner, PipelineBuilder, DEFAULT_SEED};
 use coopgnn::repro::{self, Ctx};
@@ -90,6 +93,8 @@ const TRAIN_SPECS: &[ArgSpec] = &[
     val("replication", "replica-group size r for --train-pes; must divide P (default: 1)"),
     val("intra-bw", "intra-group link bandwidth in GB/s for the cost model (default: 600)"),
     val("inter-bw", "inter-group link bandwidth in GB/s for the cost model (default: 100)"),
+    val("trace", "write a Chrome trace-event JSON flight record to FILE (--train-pes)"),
+    val("metrics-out", "write the run report as a Prometheus-style exposition to FILE"),
 ];
 
 const ENGINE_SPECS: &[ArgSpec] = &[
@@ -111,6 +116,8 @@ const ENGINE_SPECS: &[ArgSpec] = &[
     val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
     val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
     val("replication", "replica-group size r; must divide the PE count (default: 1)"),
+    val("trace", "write a Chrome trace-event JSON flight record to FILE"),
+    val("metrics-out", "write the run report as a Prometheus-style exposition to FILE"),
 ];
 
 const SERVE_SPECS: &[ArgSpec] = &[
@@ -134,6 +141,8 @@ const SERVE_SPECS: &[ArgSpec] = &[
     val("codec", "f32|fp16|int8 feature-row storage/wire codec (default: f32)"),
     val("hot-mb", "hot-tier budget in MiB of decoded rows; 0 = untiered (default: 0)"),
     val("replication", "replica-group size r; must divide the PE count (default: 1)"),
+    val("trace", "write a Chrome trace-event JSON flight record to FILE"),
+    val("metrics-out", "write the run report as a Prometheus-style exposition to FILE"),
 ];
 
 const CAPS_SPECS: &[ArgSpec] = &[
@@ -185,6 +194,37 @@ fn real_main() -> coopgnn::Result<()> {
             anyhow::bail!("unknown command `{other}`")
         }
     }
+}
+
+/// Shared `--trace` / `--metrics-out` sinks for the traced subcommands
+/// (engine, train --train-pes, serve): write the flight record as
+/// Chrome trace-event JSON and/or the run report's gauges as a
+/// Prometheus-style exposition through [`coopgnn::obs::Registry`].
+fn write_obs_outputs(
+    args: &ArgMap,
+    buf: Option<&TraceBuffer>,
+    report: &dyn LedgerSource,
+) -> coopgnn::Result<()> {
+    if let Some(path) = args.get("trace") {
+        let buf = buf.ok_or_else(|| {
+            anyhow::anyhow!("--trace was requested but the run produced no trace buffer")
+        })?;
+        std::fs::write(path, buf.to_chrome_json())
+            .map_err(|e| anyhow::anyhow!("writing --trace {path}: {e}"))?;
+        println!(
+            "trace: {} spans over {} batches -> {path} (chrome://tracing, ui.perfetto.dev)",
+            buf.span_count(),
+            buf.batch_count()
+        );
+    }
+    if let Some(path) = args.get("metrics-out") {
+        let mut reg = Registry::new();
+        reg.observe(report);
+        std::fs::write(path, reg.to_prometheus())
+            .map_err(|e| anyhow::anyhow!("writing --metrics-out {path}: {e}"))?;
+        println!("metrics: {} exposition -> {path}", report.ledger_name());
+    }
+    Ok(())
 }
 
 /// Shared `--codec` / `--hot-mb` parse for the storage-aware
@@ -266,6 +306,9 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
     anyhow::ensure!(lr > 0.0, "--lr must be positive");
     let prefetch = args.bool01("prefetch", false)?;
     let mut trainer = pipe.parallel_trainer(lr, strategy);
+    if args.has("trace") {
+        trainer.enable_trace();
+    }
     println!(
         "multi-PE training plane: {} on {}, {} PEs x batch {} ({} exec, {} all-reduce{}, \
          replication {}{})",
@@ -319,7 +362,17 @@ fn cmd_train_parallel(args: &ArgMap, pes: usize) -> coopgnn::Result<()> {
         "loss {:.4} -> {:.4}, batch acc {:.3}, val acc {:.4} (replicas bit-identical: yes)",
         rep.first_loss, rep.last_loss, rep.last_acc, val_acc
     );
-    Ok(())
+    println!(
+        "stage hists (ms): sample p50 {:.3} / p99 {:.3}, compute p50 {:.3} / p99 {:.3}, \
+         all-reduce p50 {:.3} / p99 {:.3}",
+        trainer.stage_hists().sample_ms.quantile_mid(0.50),
+        trainer.stage_hists().sample_ms.quantile_mid(0.99),
+        trainer.stage_hists().compute_ms.quantile_mid(0.50),
+        trainer.stage_hists().compute_ms.quantile_mid(0.99),
+        trainer.stage_hists().allreduce_ms.quantile_mid(0.50),
+        trainer.stage_hists().allreduce_ms.quantile_mid(0.99)
+    );
+    write_obs_outputs(args, trainer.trace().buffer(), &rep)
 }
 
 fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
@@ -336,7 +389,8 @@ fn cmd_train(args: &ArgMap) -> coopgnn::Result<()> {
         }
         return cmd_train_parallel(args, pes);
     }
-    for key in ["mode", "allreduce", "replication", "intra-bw", "inter-bw"] {
+    for key in ["mode", "allreduce", "replication", "intra-bw", "inter-bw", "trace", "metrics-out"]
+    {
         anyhow::ensure!(
             !args.has(key),
             "--{key} only applies to the multi-PE training plane; add --train-pes N"
@@ -569,7 +623,8 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
         b = b.cache_per_pe(cache);
     }
     let pipe = b.build()?;
-    let r = pipe.engine_report();
+    let mut trace = if args.has("trace") { Trace::on("engine") } else { Trace::Off };
+    let r = pipe.engine_report_traced(&mut trace);
     println!(
         "mode={} exec={} PEs={} cross-edge-ratio={:.3}",
         r.mode,
@@ -620,7 +675,7 @@ fn cmd_engine(args: &ArgMap) -> coopgnn::Result<()> {
          (compare --exec serial vs threaded for the concurrency speedup)",
         r.wall_sampling_ms, r.wall_feature_ms, r.wall_batch_ms
     );
-    Ok(())
+    write_obs_outputs(args, trace.buffer(), &r)
 }
 
 /// The online inference serving plane: a virtual-time simulation of
@@ -693,7 +748,10 @@ fn cmd_serve(args: &ArgMap) -> coopgnn::Result<()> {
         t0.elapsed().as_secs_f64(),
         out.exec_wall_ms
     );
-    Ok(())
+    // The serve trace is derived from the (bit-reproducible) ledger, so
+    // it inherits the virtual-clock identity across --exec/--prefetch.
+    let buf = if args.has("trace") { Some(out.ledger.trace()) } else { None };
+    write_obs_outputs(args, buf.as_ref(), &out.report)
 }
 
 fn cmd_caps(args: &ArgMap) -> coopgnn::Result<()> {
@@ -774,7 +832,7 @@ fn print_usage() {
          \x20        [--layers L] [--hidden H] [--fanout K|K,K,..]\n\
          \x20        [--allreduce naive|tree|ring|rsag|auto] [--replication r]\n\
          \x20        [--intra-bw GBPS] [--inter-bw GBPS]\n\
-         \x20        [--steps N] [--lr F] [--prefetch 0|1]\n\
+         \x20        [--steps N] [--lr F] [--prefetch 0|1] [--trace FILE] [--metrics-out FILE]\n\
          \x20        (multi-PE training plane: per-PE layered replicas + activation exchange +\n\
          \x20         fabric gradient all-reduce; --replication r serves same-group rows\n\
          \x20         locally and reduces gradients hierarchically; --allreduce auto picks\n\
@@ -782,12 +840,15 @@ fn print_usage() {
          \x20 coopgnn engine --mode coop|indep --dataset NAME --pes P [--batch B] [--kappa K]\n\
          \x20        [--partitioner random|metis|ldg] [--batches N] [--exec serial|threaded]\n\
          \x20        [--prefetch 0|1] [--codec f32|fp16|int8] [--hot-mb N] [--replication r]\n\
+         \x20        [--trace FILE] [--metrics-out FILE]\n\
          \x20 coopgnn serve [--dataset NAME] [--pes P] [--mode coop|indep] [--rate R]\n\
          \x20        [--slo-ms MS] [--batcher fixed|adaptive] [--duration-batches N]\n\
          \x20        [--batch B] [--workload open|closed] [--kappa K] [--cache ROWS]\n\
          \x20        [--exec serial|threaded] [--prefetch 0|1] [--codec f32|fp16|int8]\n\
-         \x20        [--hot-mb N] [--replication r]\n\
-         \x20        (online inference: virtual-time SLO-aware dynamic cooperative batching)\n\
+         \x20        [--hot-mb N] [--replication r] [--trace FILE] [--metrics-out FILE]\n\
+         \x20        (online inference: virtual-time SLO-aware dynamic cooperative batching;\n\
+         \x20         --trace writes the virtual-clock flight record, bit-identical across\n\
+         \x20         --exec and --prefetch at a fixed seed)\n\
          \x20 coopgnn caps --dataset NAME --batch B [--sampler S]\n\
          \x20 coopgnn info"
     );

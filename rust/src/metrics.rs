@@ -1,101 +1,13 @@
-//! Lightweight named counters + wall-clock accumulators used by the coop
-//! engine, the trainer, and the repro harnesses.
+//! Deprecated shim — the counter bag moved to the observability plane.
+//!
+//! The `Metrics` API (named u64 counters + wall-time accumulators) is
+//! now [`crate::obs::Registry`], which adds gauges, `LedgerSource`
+//! absorption, and a Prometheus-style exposition. This alias keeps old
+//! spelling compiling for one deprecation cycle; new code should use
+//! `crate::obs::Registry` directly. The wall-clock capture this module
+//! used to own lives in [`crate::obs::wall`] (the allowlists moved with
+//! it).
 
-// Allowlisted timing module (coopgnn-lint `wallclock` + clippy
-// disallowed-methods): phase timings feed report columns only.
-#![allow(clippy::disallowed_methods)]
-
-use std::collections::BTreeMap;
-use std::time::Instant;
-
-/// A bag of named u64 counters and f64 accumulators (ms).
-#[derive(Clone, Debug, Default)]
-pub struct Metrics {
-    pub counters: BTreeMap<String, u64>,
-    pub times_ms: BTreeMap<String, f64>,
-}
-
-impl Metrics {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    #[inline]
-    pub fn add(&mut self, name: &str, v: u64) {
-        *self.counters.entry(name.to_string()).or_insert(0) += v;
-    }
-
-    #[inline]
-    pub fn get(&self, name: &str) -> u64 {
-        self.counters.get(name).copied().unwrap_or(0)
-    }
-
-    pub fn add_time_ms(&mut self, name: &str, ms: f64) {
-        *self.times_ms.entry(name.to_string()).or_insert(0.0) += ms;
-    }
-
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
-        let t = Instant::now();
-        let out = f();
-        self.add_time_ms(name, t.elapsed().as_secs_f64() * 1e3);
-        out
-    }
-
-    /// Merge another metrics bag into this one.
-    pub fn merge(&mut self, other: &Metrics) {
-        for (k, v) in &other.counters {
-            *self.counters.entry(k.clone()).or_insert(0) += v;
-        }
-        for (k, v) in &other.times_ms {
-            *self.times_ms.entry(k.clone()).or_insert(0.0) += v;
-        }
-    }
-
-    pub fn report(&self) -> String {
-        let mut s = String::new();
-        for (k, v) in &self.counters {
-            s.push_str(&format!("{k:<40} {v}\n"));
-        }
-        for (k, v) in &self.times_ms {
-            s.push_str(&format!("{k:<40} {v:.3} ms\n"));
-        }
-        s
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn counters_accumulate() {
-        let mut m = Metrics::new();
-        m.add("x", 2);
-        m.add("x", 3);
-        assert_eq!(m.get("x"), 5);
-        assert_eq!(m.get("missing"), 0);
-    }
-
-    #[test]
-    fn merge_sums() {
-        let mut a = Metrics::new();
-        a.add("x", 1);
-        a.add_time_ms("t", 1.5);
-        let mut b = Metrics::new();
-        b.add("x", 2);
-        b.add("y", 7);
-        b.add_time_ms("t", 0.5);
-        a.merge(&b);
-        assert_eq!(a.get("x"), 3);
-        assert_eq!(a.get("y"), 7);
-        assert!((a.times_ms["t"] - 2.0).abs() < 1e-9);
-    }
-
-    #[test]
-    fn time_records() {
-        let mut m = Metrics::new();
-        let v = m.time("work", || 42);
-        assert_eq!(v, 42);
-        assert!(m.times_ms["work"] >= 0.0);
-    }
-}
+/// Deprecated alias for [`crate::obs::Registry`].
+#[deprecated(note = "use crate::obs::Registry — the counter bag moved to the obs plane")]
+pub type Metrics = crate::obs::Registry;

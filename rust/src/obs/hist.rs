@@ -1,0 +1,254 @@
+//! Log-bucketed mergeable histograms for per-stage latency columns.
+//!
+//! The repro tables historically printed per-window *averages* only;
+//! the observability plane replaces those with p50/p99 columns backed
+//! by [`LogHist`]: a base-2^(1/8) logarithmic histogram (8 sub-buckets
+//! per octave, ≈ 9% relative bucket width) plus an exact zero bucket
+//! and tracked min/max clamp bounds.
+//!
+//! Contract (property-tested in `tests/proptests.rs` against the exact
+//! type-7 [`crate::util::stats::percentile`]): for any quantile `p`,
+//! [`LogHist::quantile_bounds`] returns `(lo, hi)` with
+//! `lo <= exact_percentile(pooled, p) <= hi`, and the bound survives
+//! [`LogHist::merge`] — merging per-shard histograms brackets the
+//! percentile of the *pooled* samples. The bracket follows from the
+//! recording invariant `bucket_lower(i) <= v < bucket_upper(i)`, which
+//! is enforced with an explicit boundary-nudge loop after the float
+//! `log2` (float rounding near bucket edges can land one bucket off;
+//! the nudge makes the invariant exact rather than approximate).
+//!
+//! Histograms never feed a ledger or a decision — they are display-only
+//! derivatives, so float `log2`/`exp2` here do not touch the
+//! determinism contract (same-machine runs bucket identically; ledgers
+//! stay integer).
+
+use std::collections::BTreeMap;
+
+/// Sub-buckets per octave: bucket `i` covers `[2^(i/8), 2^((i+1)/8))`.
+const SUB: i32 = 8;
+
+fn bucket_lower(idx: i32) -> f64 {
+    (idx as f64 / SUB as f64).exp2()
+}
+
+fn bucket_upper(idx: i32) -> f64 {
+    ((idx + 1) as f64 / SUB as f64).exp2()
+}
+
+/// Bucket index for a strictly positive value, with the boundary-nudge
+/// loop making `bucket_lower(i) <= v < bucket_upper(i)` exact.
+fn bucket_of(v: f64) -> i32 {
+    debug_assert!(v > 0.0 && v.is_finite());
+    let mut idx = (v.log2() * SUB as f64).floor() as i32;
+    while bucket_lower(idx) > v {
+        idx -= 1;
+    }
+    while bucket_upper(idx) <= v {
+        idx += 1;
+    }
+    idx
+}
+
+/// Mergeable log-bucketed histogram over non-negative samples.
+#[derive(Clone, Debug, Default)]
+pub struct LogHist {
+    /// exact count of samples equal to zero (log buckets can't hold 0).
+    zero: u64,
+    /// sparse bucket counts, keyed by log-bucket index (ordered map so
+    /// every scan/export is deterministic).
+    buckets: BTreeMap<i32, u64>,
+    n: u64,
+    sum: f64,
+    /// exact extrema of recorded samples — used to clamp quantile
+    /// bounds so the bracket never widens past observed data.
+    min: f64,
+    max: f64,
+}
+
+impl LogHist {
+    pub fn new() -> LogHist {
+        LogHist::default()
+    }
+
+    /// Record one sample. Negative / non-finite inputs are clamped into
+    /// the zero bucket (stage times are non-negative by construction;
+    /// the clamp keeps a rogue NaN from poisoning the whole histogram).
+    pub fn record(&mut self, v: f64) {
+        let v = if v.is_finite() && v > 0.0 { v } else { 0.0 };
+        if self.n == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.n += 1;
+        self.sum += v;
+        if v == 0.0 {
+            self.zero += 1;
+        } else {
+            *self.buckets.entry(bucket_of(v)).or_insert(0) += 1;
+        }
+    }
+
+    /// Fold `other` into `self` (bucket-wise addition; extrema widen).
+    pub fn merge(&mut self, other: &LogHist) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            self.min = other.min;
+            self.max = other.max;
+        } else {
+            self.min = self.min.min(other.min);
+            self.max = self.max.max(other.max);
+        }
+        self.zero += other.zero;
+        self.n += other.n;
+        self.sum += other.sum;
+        for (&idx, &c) in &other.buckets {
+            *self.buckets.entry(idx).or_insert(0) += c;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// `(lower, upper)` bounds of the bucket holding the 0-based rank-`k`
+    /// sample (ranks follow ascending value order: zero bucket first,
+    /// then log buckets by index).
+    fn rank_bounds(&self, k: u64) -> (f64, f64) {
+        debug_assert!(k < self.n);
+        if k < self.zero {
+            return (0.0, 0.0);
+        }
+        let mut seen = self.zero;
+        for (&idx, &c) in &self.buckets {
+            seen += c;
+            if k < seen {
+                return (bucket_lower(idx), bucket_upper(idx));
+            }
+        }
+        // Unreachable when counts are consistent; fall back to extrema.
+        (self.min, self.max)
+    }
+
+    /// Bracket of the exact type-7 percentile: returns `(lo, hi)` such
+    /// that `lo <= percentile(sorted_samples, p) <= hi`. The type-7
+    /// estimate interpolates between the samples at ranks `floor(h)`
+    /// and `ceil(h)` (`h = p·(n−1)`), so bracketing those two samples'
+    /// buckets — clamped to the exact recorded extrema — brackets the
+    /// interpolation.
+    pub fn quantile_bounds(&self, p: f64) -> (f64, f64) {
+        if self.n == 0 {
+            return (0.0, 0.0);
+        }
+        let p = p.clamp(0.0, 1.0);
+        let h = p * (self.n - 1) as f64;
+        let k_lo = h.floor() as u64;
+        let k_hi = h.ceil() as u64;
+        let lo = self.rank_bounds(k_lo).0.max(self.min);
+        let hi = self.rank_bounds(k_hi).1.min(self.max);
+        (lo, hi)
+    }
+
+    /// Point estimate for table columns: midpoint of the clamped
+    /// bracket. Within one bucket width (≈ 9%) of the exact percentile.
+    pub fn quantile_mid(&self, p: f64) -> f64 {
+        let (lo, hi) = self.quantile_bounds(p);
+        (lo + hi) / 2.0
+    }
+}
+
+/// Per-stage histograms the multi-PE trainer fills per step (ms units),
+/// surfaced as p50/p99 columns in `repro end2end`.
+#[derive(Clone, Debug, Default)]
+pub struct StageHists {
+    /// summed-across-PEs sampling time per step.
+    pub sample_ms: LogHist,
+    /// summed-across-PEs feature-loading time per step.
+    pub feature_ms: LogHist,
+    /// forward+backward compute time per step.
+    pub compute_ms: LogHist,
+    /// gradient all-reduce time per step.
+    pub allreduce_ms: LogHist,
+}
+
+impl StageHists {
+    pub fn merge(&mut self, other: &StageHists) {
+        self.sample_ms.merge(&other.sample_ms);
+        self.feature_ms.merge(&other.feature_ms);
+        self.compute_ms.merge(&other.compute_ms);
+        self.allreduce_ms.merge(&other.allreduce_ms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_invariant_holds_at_boundaries() {
+        for &v in &[1.0, 2.0, 0.5, 1024.0, 1e-9, 3.7, 8.999999999] {
+            let i = bucket_of(v);
+            assert!(bucket_lower(i) <= v, "lower({i}) > {v}");
+            assert!(v < bucket_upper(i), "{v} >= upper({i})");
+        }
+    }
+
+    #[test]
+    fn quantiles_bracket_exact_percentile() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64 * 0.37).collect();
+        let mut h = LogHist::new();
+        for &s in &samples {
+            h.record(s);
+        }
+        let mut sorted = samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &p in &[0.0, 0.5, 0.9, 0.99, 1.0] {
+            let exact = crate::util::stats::percentile(&sorted, p);
+            let (lo, hi) = h.quantile_bounds(p);
+            assert!(lo <= exact && exact <= hi, "p={p}: ({lo},{hi}) vs {exact}");
+        }
+    }
+
+    #[test]
+    fn merge_matches_pooled_recording() {
+        let mut a = LogHist::new();
+        let mut b = LogHist::new();
+        let mut pooled = LogHist::new();
+        for i in 0..50 {
+            let v = (i as f64 * 1.91) % 17.0;
+            if i % 2 == 0 { a.record(v) } else { b.record(v) }
+            pooled.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), pooled.count());
+        assert_eq!(a.quantile_bounds(0.5), pooled.quantile_bounds(0.5));
+        assert_eq!(a.quantile_bounds(0.99), pooled.quantile_bounds(0.99));
+    }
+
+    #[test]
+    fn zero_and_empty_are_exact() {
+        let h = LogHist::new();
+        assert_eq!(h.quantile_bounds(0.5), (0.0, 0.0));
+        let mut z = LogHist::new();
+        z.record(0.0);
+        z.record(0.0);
+        assert_eq!(z.quantile_bounds(0.99), (0.0, 0.0));
+        assert_eq!(z.count(), 2);
+    }
+}

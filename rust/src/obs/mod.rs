@@ -1,0 +1,31 @@
+//! Observability plane: flight-recorder span tracing, the unified
+//! ledger registry, and log-bucketed stage histograms.
+//!
+//! Three pieces, all **derived from the ledgers the pipeline already
+//! keeps** (nothing here is consulted by a sampling/batching/serving
+//! decision, and tracing off is zero-overhead):
+//!
+//! * [`span`] — `(batch, pe, stage, t_start, t_end, bytes)` spans in
+//!   per-track append-only buffers, merged by `(batch, pe, seq)` and
+//!   exported as Chrome/Perfetto trace-event JSON (`--trace out.json`
+//!   on `engine` / `train` / `serve`).
+//! * [`registry`] — the [`LEDGER_STRUCTS`] declaration table (the
+//!   single source `coopgnn-lint`'s `ledger` rule is generated from)
+//!   plus the runtime [`Registry`] counter bag with a Prometheus-style
+//!   text exposition (`--metrics-out metrics.prom`).
+//! * [`hist`] — mergeable log-bucketed [`LogHist`]s whose quantile
+//!   bounds provably bracket the exact interpolated percentile,
+//!   backing the p50/p99 columns in `repro end2end` / `repro serve`.
+//!
+//! [`wall`] is the plane's single wall-clock capture shim — the only
+//! obs file on the lint `wallclock` allowlist.
+
+pub mod hist;
+pub mod registry;
+pub mod span;
+pub mod wall;
+
+pub use hist::{LogHist, StageHists};
+pub use registry::{LedgerDecl, LedgerSource, Registry, LEDGER_STRUCTS};
+pub use span::{ms_to_us, split_dur, Span, Trace, TraceBuffer, TraceSink};
+pub use wall::WallClock;

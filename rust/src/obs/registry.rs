@@ -1,0 +1,538 @@
+//! Unified ledger registry + runtime counter bag.
+//!
+//! Two layers live here:
+//!
+//! 1. **The declaration table** [`LEDGER_STRUCTS`]: the single list of
+//!    every lint-tracked counter struct in the tree, with its declaring
+//!    file and the merge functions that must reference all of its
+//!    numeric fields. `coopgnn-lint`'s `ledger` rule **parses this
+//!    table out of this file** (see `rust/tools/lint/src/config.rs`)
+//!    instead of carrying a hand-maintained copy — registering a new
+//!    counter struct here is the only way to add one, so forgetting the
+//!    lint wiring is impossible. Keep every entry a plain string
+//!    literal: the lint parser reads quoted strings positionally
+//!    (struct, declaring file, then `(file, fn)` pairs) and fails loud
+//!    on anything else.
+//! 2. **The runtime [`Registry`]**: the tree's one counter API (the
+//!    old `metrics::Metrics` bag folded in — `metrics.rs` is now a
+//!    deprecated re-export), able to absorb any [`LedgerSource`] and
+//!    emit a Prometheus-style text exposition for `--metrics-out`.
+
+use std::collections::BTreeMap;
+
+use crate::coop::engine::EngineReport;
+use crate::coop::feature_loader::{LoadStats, PeLoad};
+use crate::obs::wall::WallClock;
+use crate::pipeline::PeWork;
+use crate::serve::executor::BatchExecution;
+use crate::serve::report::{BatchRecord, ServeReport};
+use crate::train::{ParallelRunReport, ParallelStepStats};
+
+/// One registered counter struct: its name, the file that declares it,
+/// and the `(file, fn)` merge sites whose bodies must reference every
+/// numeric field (the ledger-conservation contract).
+#[derive(Clone, Copy, Debug)]
+pub struct LedgerDecl {
+    pub strukt: &'static str,
+    pub decl_file: &'static str,
+    pub merge_fns: &'static [(&'static str, &'static str)],
+}
+
+/// The eight lint-tracked counter structs. **Parsed by `coopgnn-lint`**
+/// — string literals only, and keep the `];` terminator on its own
+/// line.
+pub const LEDGER_STRUCTS: &[LedgerDecl] = &[
+    LedgerDecl {
+        strukt: "PeWork",
+        decl_file: "rust/src/pipeline/stream.rs",
+        merge_fns: &[
+            ("rust/src/coop/engine.rs", "reduce"),
+            ("rust/src/train/parallel.rs", "run"),
+            ("rust/src/serve/executor.rs", "pe_us"),
+        ],
+    },
+    LedgerDecl {
+        strukt: "EngineReport",
+        decl_file: "rust/src/coop/engine.rs",
+        merge_fns: &[("rust/src/coop/engine.rs", "finalize")],
+    },
+    LedgerDecl {
+        strukt: "LoadStats",
+        decl_file: "rust/src/coop/feature_loader.rs",
+        merge_fns: &[("rust/src/coop/feature_loader.rs", "from_loads")],
+    },
+    LedgerDecl {
+        strukt: "PeLoad",
+        decl_file: "rust/src/coop/feature_loader.rs",
+        merge_fns: &[("rust/src/coop/feature_loader.rs", "from_loads")],
+    },
+    LedgerDecl {
+        strukt: "ParallelStepStats",
+        decl_file: "rust/src/train/parallel.rs",
+        merge_fns: &[("rust/src/train/parallel.rs", "run")],
+    },
+    LedgerDecl {
+        strukt: "ParallelRunReport",
+        decl_file: "rust/src/train/parallel.rs",
+        merge_fns: &[("rust/src/train/parallel.rs", "run")],
+    },
+    LedgerDecl {
+        strukt: "BatchExecution",
+        decl_file: "rust/src/serve/executor.rs",
+        merge_fns: &[("rust/src/serve/mod.rs", "try_dispatch")],
+    },
+    LedgerDecl {
+        strukt: "BatchRecord",
+        decl_file: "rust/src/serve/report.rs",
+        merge_fns: &[
+            ("rust/src/serve/report.rs", "record_batch"),
+            ("rust/src/serve/report.rs", "summarize"),
+        ],
+    },
+];
+
+/// A counter struct that can export its numeric fields into the
+/// registry as gauges (`coopgnn_<prefix>_<field>`).
+pub trait LedgerSource {
+    /// Struct name as it appears in [`LEDGER_STRUCTS`] (or a report
+    /// type exported for `--metrics-out` only).
+    fn ledger_name(&self) -> &'static str;
+    /// Prometheus metric prefix (lower_snake struct name).
+    fn metric_prefix(&self) -> &'static str;
+    /// `(field, value)` pairs, declaration order.
+    fn fields(&self) -> Vec<(&'static str, f64)>;
+}
+
+/// The tree's one counter API: named u64 counters, f64 gauges, and
+/// wall-time accumulators (ms; captured only through the
+/// [`crate::obs::wall`] shim). Ordered maps keep every export
+/// deterministic.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub times_ms: BTreeMap<String, f64>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn add(&mut self, name: &str, v: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += v;
+    }
+
+    #[inline]
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn add_time_ms(&mut self, name: &str, ms: f64) {
+        *self.times_ms.entry(name.to_string()).or_insert(0.0) += ms;
+    }
+
+    /// Time a closure on the wall clock (report-only; goes through the
+    /// single obs capture shim).
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let w = WallClock::start();
+        let out = f();
+        self.add_time_ms(name, w.elapsed_ms());
+        out
+    }
+
+    /// Merge another registry into this one (counters/times add,
+    /// gauges overwrite — a gauge is a last-value observation).
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            self.gauges.insert(k.clone(), *v);
+        }
+        for (k, v) in &other.times_ms {
+            *self.times_ms.entry(k.clone()).or_insert(0.0) += v;
+        }
+    }
+
+    /// Absorb a counter struct's numeric fields as gauges.
+    pub fn observe(&mut self, src: &dyn LedgerSource) {
+        let prefix = src.metric_prefix();
+        for (field, v) in src.fields() {
+            self.gauges.insert(format!("coopgnn_{prefix}_{field}"), v);
+        }
+    }
+
+    /// Human-readable dump (the old `Metrics::report` shape).
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            s.push_str(&format!("{k:<40} {v}\n"));
+        }
+        for (k, v) in &self.times_ms {
+            s.push_str(&format!("{k:<40} {v:.3} ms\n"));
+        }
+        s
+    }
+
+    /// Prometheus text exposition (the `--metrics-out` payload):
+    /// counters as `counter`, gauges and accumulated times as `gauge`,
+    /// keys in sorted order — byte-identical for identical contents.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("# TYPE {k} counter\n{k} {v}\n"));
+        }
+        for (k, v) in &self.gauges {
+            s.push_str(&format!("# TYPE {k} gauge\n{k} {v}\n"));
+        }
+        for (k, v) in &self.times_ms {
+            s.push_str(&format!("# TYPE {k}_ms gauge\n{k}_ms {v}\n"));
+        }
+        s
+    }
+}
+
+impl LedgerSource for PeWork {
+    fn ledger_name(&self) -> &'static str {
+        "PeWork"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "pe_work"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("requested", self.requested as f64),
+            ("misses", self.misses as f64),
+            ("fabric", self.fabric as f64),
+            ("row_bytes", self.row_bytes as f64),
+            ("dim", self.dim as f64),
+            ("bytes_from_storage", self.bytes_from_storage as f64),
+            ("fabric_bytes", self.fabric_bytes as f64),
+            ("fabric_inter_bytes", self.fabric_inter_bytes as f64),
+            ("hot_rows", self.hot_rows as f64),
+            ("hot_bytes", self.hot_bytes as f64),
+            ("prefetch_rows", self.prefetch_rows as f64),
+            ("prefetch_bytes", self.prefetch_bytes as f64),
+            ("samp_ms", self.samp_ms),
+            ("feat_ms", self.feat_ms),
+        ]
+    }
+}
+
+impl LedgerSource for EngineReport {
+    fn ledger_name(&self) -> &'static str {
+        "EngineReport"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "engine_report"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("num_pes", self.num_pes as f64),
+            ("feat_requested", self.feat_requested),
+            ("feat_misses", self.feat_misses),
+            ("feat_fabric_rows", self.feat_fabric_rows),
+            ("cache_miss_rate", self.cache_miss_rate),
+            ("feat_storage_bytes", self.feat_storage_bytes),
+            ("feat_fabric_bytes", self.feat_fabric_bytes),
+            ("feat_fabric_inter_bytes", self.feat_fabric_inter_bytes),
+            ("derived_miss_rate", self.derived_miss_rate),
+            ("feat_hot_rows", self.feat_hot_rows),
+            ("feat_hot_bytes", self.feat_hot_bytes),
+            ("hot_hit_rate", self.hot_hit_rate),
+            ("prefetch_rows", self.prefetch_rows),
+            ("prefetch_bytes", self.prefetch_bytes),
+            ("dup_factor", self.dup_factor),
+            ("wall_sampling_ms", self.wall_sampling_ms),
+            ("wall_feature_ms", self.wall_feature_ms),
+            ("wall_batch_ms", self.wall_batch_ms),
+        ]
+    }
+}
+
+impl LedgerSource for LoadStats {
+    fn ledger_name(&self) -> &'static str {
+        "LoadStats"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "load_stats"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("requested", self.requested as f64),
+            ("misses", self.misses as f64),
+            ("bytes_from_storage", self.bytes_from_storage as f64),
+            ("hot_rows", self.hot_rows as f64),
+            ("hot_bytes", self.hot_bytes as f64),
+        ]
+    }
+}
+
+impl LedgerSource for PeLoad {
+    fn ledger_name(&self) -> &'static str {
+        "PeLoad"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "pe_load"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("requested", self.requested as f64),
+            ("misses", self.misses as f64),
+            ("bytes_from_storage", self.bytes_from_storage as f64),
+            ("hot_rows", self.hot_rows as f64),
+            ("hot_bytes", self.hot_bytes as f64),
+            ("fabric_rows", self.fabric_rows as f64),
+            ("fabric_bytes", self.fabric_bytes as f64),
+            ("fabric_inter_bytes", self.fabric_inter_bytes as f64),
+        ]
+    }
+}
+
+impl LedgerSource for ParallelStepStats {
+    fn ledger_name(&self) -> &'static str {
+        "ParallelStepStats"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "parallel_step"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("loss", self.loss as f64),
+            ("acc", self.acc as f64),
+            ("examples", self.examples as f64),
+            ("wall_ms", self.wall_ms),
+            ("compute_ms", self.compute_ms),
+            ("allreduce_ms", self.allreduce_ms),
+            ("grad_bytes", self.grad_bytes as f64),
+            ("act_bytes", self.act_bytes as f64),
+            ("grad_inter_bytes", self.grad_inter_bytes as f64),
+            ("act_inter_bytes", self.act_inter_bytes as f64),
+        ]
+    }
+}
+
+impl LedgerSource for ParallelRunReport {
+    fn ledger_name(&self) -> &'static str {
+        "ParallelRunReport"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "parallel_run"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("steps", self.steps as f64),
+            ("ms_per_step", self.ms_per_step),
+            ("sample_ms", self.sample_ms),
+            ("feature_ms", self.feature_ms),
+            ("examples_per_step", self.examples_per_step),
+            ("compute_ms", self.compute_ms),
+            ("allreduce_ms", self.allreduce_ms),
+            ("storage_bytes_per_step", self.storage_bytes_per_step),
+            ("fabric_bytes_per_step", self.fabric_bytes_per_step),
+            ("grad_bytes_per_step", self.grad_bytes_per_step),
+            ("act_bytes_per_step", self.act_bytes_per_step),
+            ("fabric_inter_bytes_per_step", self.fabric_inter_bytes_per_step),
+            ("grad_inter_bytes_per_step", self.grad_inter_bytes_per_step),
+            ("act_inter_bytes_per_step", self.act_inter_bytes_per_step),
+            ("first_loss", self.first_loss as f64),
+            ("last_loss", self.last_loss as f64),
+            ("last_acc", self.last_acc as f64),
+        ]
+    }
+}
+
+impl LedgerSource for BatchExecution {
+    fn ledger_name(&self) -> &'static str {
+        "BatchExecution"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "batch_execution"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("batch", self.batch as f64),
+            ("size", self.size as f64),
+            ("service_us", self.service_us as f64),
+            ("storage_bytes", self.storage_bytes as f64),
+            ("fabric_bytes", self.fabric_bytes as f64),
+            ("fabric_inter_bytes", self.fabric_inter_bytes as f64),
+            ("hot_rows", self.hot_rows as f64),
+            ("hot_bytes", self.hot_bytes as f64),
+        ]
+    }
+}
+
+impl LedgerSource for BatchRecord {
+    fn ledger_name(&self) -> &'static str {
+        "BatchRecord"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "batch_record"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("index", self.index as f64),
+            ("size", self.size as f64),
+            ("dispatch_us", self.dispatch_us as f64),
+            ("service_us", self.service_us as f64),
+            ("storage_bytes", self.storage_bytes as f64),
+            ("fabric_bytes", self.fabric_bytes as f64),
+            ("fabric_inter_bytes", self.fabric_inter_bytes as f64),
+            ("hot_rows", self.hot_rows as f64),
+            ("hot_bytes", self.hot_bytes as f64),
+        ]
+    }
+}
+
+// Not a lint-tracked counter struct (it is a derived summary), but the
+// natural `--metrics-out` payload for the serve command.
+impl LedgerSource for ServeReport {
+    fn ledger_name(&self) -> &'static str {
+        "ServeReport"
+    }
+    fn metric_prefix(&self) -> &'static str {
+        "serve_report"
+    }
+    fn fields(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("served", self.served as f64),
+            ("batches", self.batches as f64),
+            ("dropped", self.dropped as f64),
+            ("mean_batch", self.mean_batch),
+            ("p50_ms", self.p50_ms),
+            ("p90_ms", self.p90_ms),
+            ("p99_ms", self.p99_ms),
+            ("max_ms", self.max_ms),
+            ("requests_per_s", self.requests_per_s),
+            ("storage_bytes_per_req", self.storage_bytes_per_req),
+            ("fabric_bytes_per_req", self.fabric_bytes_per_req),
+            ("fabric_inter_bytes_per_req", self.fabric_inter_bytes_per_req),
+            ("hot_rows_per_req", self.hot_rows_per_req),
+            ("hot_bytes_per_req", self.hot_bytes_per_req),
+            ("slo_violations", self.slo_violations as f64),
+            ("slo_violation_rate", self.slo_violation_rate),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let mut m = Registry::new();
+        m.add("x", 2);
+        m.add("x", 3);
+        assert_eq!(m.get("x"), 5);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Registry::new();
+        a.add("x", 1);
+        a.add_time_ms("t", 1.5);
+        let mut b = Registry::new();
+        b.add("x", 2);
+        b.add("y", 7);
+        b.add_time_ms("t", 0.5);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3);
+        assert_eq!(a.get("y"), 7);
+        assert!((a.times_ms["t"] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_records() {
+        let mut m = Registry::new();
+        let v = m.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(m.times_ms["work"] >= 0.0);
+    }
+
+    fn batch_record() -> BatchRecord {
+        BatchRecord {
+            index: 0,
+            size: 0,
+            dispatch_us: 0,
+            service_us: 0,
+            storage_bytes: 0,
+            fabric_bytes: 0,
+            fabric_inter_bytes: 0,
+            hot_rows: 0,
+            hot_bytes: 0,
+        }
+    }
+
+    #[test]
+    fn registry_covers_all_eight_ledger_structs() {
+        // Every LEDGER_STRUCTS entry has a LedgerSource impl whose
+        // ledger_name matches — the registration contract the lint
+        // rule is generated from.
+        let exec = BatchExecution {
+            batch: 0,
+            size: 0,
+            service_us: 0,
+            storage_bytes: 0,
+            fabric_bytes: 0,
+            fabric_inter_bytes: 0,
+            hot_rows: 0,
+            hot_bytes: 0,
+            requested_rows: 0,
+            sampled_edges: 0,
+            wall_ms: 0.0,
+        };
+        let sources: Vec<Box<dyn LedgerSource>> = vec![
+            Box::new(PeWork::default()),
+            Box::new(EngineReport::default()),
+            Box::new(LoadStats::default()),
+            Box::new(PeLoad::default()),
+            Box::new(ParallelStepStats::default()),
+            Box::new(ParallelRunReport::default()),
+            Box::new(exec),
+            Box::new(batch_record()),
+        ];
+        let mut names: Vec<&str> =
+            sources.iter().map(|s| s.ledger_name()).collect();
+        let mut declared: Vec<&str> =
+            LEDGER_STRUCTS.iter().map(|d| d.strukt).collect();
+        names.sort_unstable();
+        declared.sort_unstable();
+        assert_eq!(names, declared);
+        assert_eq!(LEDGER_STRUCTS.len(), 8);
+    }
+
+    #[test]
+    fn observe_exports_prefixed_gauges_and_prometheus_text() {
+        let mut reg = Registry::new();
+        let rec = BatchRecord { storage_bytes: 4096, ..batch_record() };
+        reg.observe(&rec);
+        assert_eq!(reg.gauges["coopgnn_batch_record_storage_bytes"], 4096.0);
+        let prom = reg.to_prometheus();
+        assert!(prom.contains("# TYPE coopgnn_batch_record_storage_bytes gauge"));
+        assert!(prom.contains("coopgnn_batch_record_storage_bytes 4096\n"));
+    }
+
+    #[test]
+    fn ledger_decl_table_is_well_formed() {
+        for d in LEDGER_STRUCTS {
+            assert!(!d.strukt.is_empty());
+            assert!(d.decl_file.starts_with("rust/src/"));
+            assert!(!d.merge_fns.is_empty(), "{} has no merge fns", d.strukt);
+            for (f, fun) in d.merge_fns {
+                assert!(f.starts_with("rust/src/"), "{fun} in bad file {f}");
+            }
+        }
+    }
+}

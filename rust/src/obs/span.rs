@@ -1,0 +1,319 @@
+//! Flight-recorder span tracing: per-track append-only buffers of
+//! `(batch, pe, stage, t_start, t_end, bytes)` records, merged
+//! deterministically by `(batch, pe, seq)` and exported as Chrome /
+//! Perfetto trace-event JSON (load the file at `chrome://tracing` or
+//! <https://ui.perfetto.dev>).
+//!
+//! Spans are **derived post-hoc from the ledgers** the pipeline already
+//! keeps (per-batch [`crate::pipeline::PeWork`], the serve
+//! [`crate::serve::report::Ledger`]): nothing on the hot path records
+//! wall time for tracing, so
+//!
+//! * tracing **off is zero-overhead** — [`Trace::Off`] holds no
+//!   allocation and `record` is a discriminant check;
+//! * counters are **bit-identical with tracing on vs off** (the trace
+//!   only reads what was already counted);
+//! * serve traces are **bit-identical across serial/threaded exec and
+//!   prefetch 0/1** — timestamps are the virtual-µs clock, inherited
+//!   from the ledger's existing bit-identity contract;
+//! * per-stage summed `bytes` reconcile exactly with the corresponding
+//!   report ledger fields (pinned in `tests/integration_obs.rs`).
+//!
+//! Wall-clock-derived spans (engine/train stage times) carry ms
+//! measurements converted to integer µs; they are honest measurements,
+//! not virtual time, and are only captured through the existing
+//! allowlisted timing sites (see [`crate::obs::wall`]).
+
+/// One traced interval on one track.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// batch / step / dispatch index the span belongs to.
+    pub batch: u64,
+    /// track id: PE index for engine/train tracks (trainer coordinator
+    /// = `num_pes`), 0 = batches / 1 = requests for serve.
+    pub pe: u32,
+    /// per-`(batch, pe)` sequence number — assigned in emission order,
+    /// making `(batch, pe, seq)` a total order over all spans.
+    pub seq: u32,
+    /// pipeline stage name (static, lower_snake — see module docs of
+    /// the emitting plane for the stage vocabulary).
+    pub stage: &'static str,
+    pub t_start_us: u64,
+    pub t_end_us: u64,
+    /// bytes attributed to this span (0 for pure-time stages).
+    pub bytes: u64,
+}
+
+impl Span {
+    pub fn dur_us(&self) -> u64 {
+        self.t_end_us.saturating_sub(self.t_start_us)
+    }
+}
+
+/// Anything that can accept spans. The pipeline planes emit through
+/// this trait so a future sink (streaming writer, ring buffer) can slot
+/// in without touching emission sites.
+pub trait TraceSink {
+    fn record(&mut self, span: Span);
+    /// `false` lets emitters skip span *derivation* work entirely.
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// Per-track append-only span buffers plus the category stamped into
+/// the Chrome export (`"engine"`, `"train"`, `"serve"`).
+#[derive(Clone, Debug)]
+pub struct TraceBuffer {
+    cat: &'static str,
+    per_track: Vec<Vec<Span>>,
+}
+
+impl TraceBuffer {
+    pub fn new(cat: &'static str) -> TraceBuffer {
+        TraceBuffer { cat, per_track: Vec::new() }
+    }
+
+    pub fn cat(&self) -> &'static str {
+        self.cat
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.per_track.iter().map(|t| t.len()).sum()
+    }
+
+    /// Distinct batch indices seen across all tracks.
+    pub fn batch_count(&self) -> usize {
+        let mut batches: Vec<u64> =
+            self.per_track.iter().flatten().map(|s| s.batch).collect();
+        batches.sort_unstable();
+        batches.dedup();
+        batches.len()
+    }
+
+    /// Sum of `bytes` across every span with the given stage name —
+    /// the reconciliation hook against report ledger fields.
+    pub fn stage_bytes(&self, stage: &str) -> u64 {
+        self.per_track
+            .iter()
+            .flatten()
+            .filter(|s| s.stage == stage)
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// All spans merged into one list, sorted by `(batch, pe, seq)`.
+    /// Emission guarantees the key is unique per span, so this order is
+    /// total and independent of track interleaving.
+    pub fn merged(&self) -> Vec<Span> {
+        let mut all: Vec<Span> =
+            self.per_track.iter().flatten().cloned().collect();
+        all.sort_by_key(|s| (s.batch, s.pe, s.seq));
+        all
+    }
+
+    /// Chrome trace-event JSON: an array of `"ph":"X"` complete events,
+    /// integer µs timestamps, one `tid` per track, sorted by
+    /// `(tid, ts, batch, seq)` so timestamps are monotone per track
+    /// (checked by `python/tests/test_trace_schema.py`). Output is a
+    /// pure function of the span set — byte-identical whenever the
+    /// spans are.
+    pub fn to_chrome_json(&self) -> String {
+        let mut events: Vec<&Span> = self.per_track.iter().flatten().collect();
+        events.sort_by_key(|s| (s.pe, s.t_start_us, s.batch, s.seq));
+        let mut out = String::from("[\n");
+        for (i, s) in events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":0,\"tid\":{},\"args\":{{\"batch\":{},\"seq\":{},\"bytes\":{}}}}}",
+                s.stage,
+                self.cat,
+                s.t_start_us,
+                s.dur_us(),
+                s.pe,
+                s.batch,
+                s.seq,
+                s.bytes
+            ));
+        }
+        out.push_str("\n]\n");
+        out
+    }
+}
+
+impl TraceSink for TraceBuffer {
+    fn record(&mut self, span: Span) {
+        let track = span.pe as usize;
+        if self.per_track.len() <= track {
+            self.per_track.resize_with(track + 1, Vec::new);
+        }
+        self.per_track[track].push(span);
+    }
+}
+
+/// The switch the CLI layers hand into the pipeline: `Off` is the
+/// default everywhere and costs one discriminant check per (skipped)
+/// emission site — no allocation, no derivation work.
+#[derive(Clone, Debug, Default)]
+pub enum Trace {
+    #[default]
+    Off,
+    On(TraceBuffer),
+}
+
+impl Trace {
+    pub fn on(cat: &'static str) -> Trace {
+        Trace::On(TraceBuffer::new(cat))
+    }
+
+    pub fn buffer(&self) -> Option<&TraceBuffer> {
+        match self {
+            Trace::Off => None,
+            Trace::On(b) => Some(b),
+        }
+    }
+}
+
+impl TraceSink for Trace {
+    fn record(&mut self, span: Span) {
+        if let Trace::On(b) = self {
+            b.record(span);
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        matches!(self, Trace::On(_))
+    }
+}
+
+/// Convert a measured ms duration to integer virtual-export µs.
+pub fn ms_to_us(ms: f64) -> u64 {
+    if ms.is_finite() && ms > 0.0 {
+        (ms * 1000.0).round() as u64
+    } else {
+        0
+    }
+}
+
+/// Split `total_us` across `weights` proportionally with the
+/// largest-remainder method: shares sum to exactly `total_us`, ties go
+/// to the lowest index, and a zero weight vector gives the whole total
+/// to the first slot — fully deterministic integer arithmetic.
+pub fn split_dur(total_us: u64, weights: &[u64]) -> Vec<u64> {
+    if weights.is_empty() {
+        return Vec::new();
+    }
+    let w_sum: u128 = weights.iter().map(|&w| w as u128).sum();
+    if w_sum == 0 {
+        let mut out = vec![0u64; weights.len()];
+        out[0] = total_us;
+        return out;
+    }
+    let mut shares = vec![0u64; weights.len()];
+    let mut rems: Vec<(u128, usize)> = Vec::with_capacity(weights.len());
+    let mut given: u64 = 0;
+    for (i, &w) in weights.iter().enumerate() {
+        let num = total_us as u128 * w as u128;
+        shares[i] = (num / w_sum) as u64;
+        given += shares[i];
+        rems.push((num % w_sum, i));
+    }
+    // Hand the leftover µs to the largest remainders, lowest index on
+    // ties (sort by (-rem, idx)).
+    rems.sort_by_key(|&(r, i)| (std::cmp::Reverse(r), i));
+    let mut leftover = total_us - given;
+    for &(_, i) in &rems {
+        if leftover == 0 {
+            break;
+        }
+        shares[i] += 1;
+        leftover -= 1;
+    }
+    shares
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(batch: u64, pe: u32, seq: u32) -> Span {
+        Span {
+            batch,
+            pe,
+            seq,
+            stage: "sample",
+            t_start_us: batch * 10,
+            t_end_us: batch * 10 + 5,
+            bytes: 7,
+        }
+    }
+
+    #[test]
+    fn merged_is_total_order_by_batch_pe_seq() {
+        let mut b = TraceBuffer::new("engine");
+        for &(batch, pe, seq) in
+            &[(1, 0, 0), (0, 1, 1), (0, 0, 0), (0, 1, 0), (1, 0, 1)]
+        {
+            b.record(span(batch, pe, seq));
+        }
+        let m = b.merged();
+        for w in m.windows(2) {
+            assert!(
+                (w[0].batch, w[0].pe, w[0].seq) < (w[1].batch, w[1].pe, w[1].seq)
+            );
+        }
+        assert_eq!(m.len(), 5);
+    }
+
+    #[test]
+    fn trace_off_records_nothing_and_reports_disabled() {
+        let mut t = Trace::Off;
+        assert!(!t.enabled());
+        t.record(span(0, 0, 0));
+        assert!(t.buffer().is_none());
+    }
+
+    #[test]
+    fn stage_bytes_sums_only_matching_stage() {
+        let mut b = TraceBuffer::new("engine");
+        b.record(span(0, 0, 0));
+        let mut other = span(0, 0, 1);
+        other.stage = "cache_fill";
+        other.bytes = 100;
+        b.record(other);
+        assert_eq!(b.stage_bytes("sample"), 7);
+        assert_eq!(b.stage_bytes("cache_fill"), 100);
+        assert_eq!(b.stage_bytes("absent"), 0);
+    }
+
+    #[test]
+    fn split_dur_conserves_total_and_is_proportional() {
+        assert_eq!(split_dur(10, &[1, 1, 1]).iter().sum::<u64>(), 10);
+        assert_eq!(split_dur(100, &[3, 1]), vec![75, 25]);
+        assert_eq!(split_dur(7, &[0, 0]), vec![7, 0]);
+        assert_eq!(split_dur(0, &[5, 5]), vec![0, 0]);
+        let s = split_dur(1_000_003, &[123, 456, 789, 1]);
+        assert_eq!(s.iter().sum::<u64>(), 1_000_003);
+    }
+
+    #[test]
+    fn chrome_json_is_monotone_per_track() {
+        let mut b = TraceBuffer::new("train");
+        b.record(span(2, 0, 0));
+        b.record(span(0, 0, 0));
+        b.record(span(1, 1, 0));
+        let json = b.to_chrome_json();
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        // ts values per tid appear in sorted order in the output.
+        let ts0: Vec<&str> = json
+            .lines()
+            .filter(|l| l.contains("\"tid\":0"))
+            .collect();
+        assert_eq!(ts0.len(), 2);
+        assert!(ts0[0].contains("\"ts\":0") && ts0[1].contains("\"ts\":20"));
+    }
+}

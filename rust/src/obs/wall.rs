@@ -1,0 +1,44 @@
+//! The observability plane's **single wall-clock capture shim**.
+//!
+//! The determinism contract bans ambient wall-clock reads outside a
+//! short allowlist (`coopgnn-lint`'s `wallclock` rule +
+//! `clippy.toml` disallowed-methods). Every wall measurement the obs
+//! plane takes goes through [`WallClock`] here, so the allowlist gains
+//! exactly one obs entry and a grep for `Instant::now` in `obs/` hits
+//! one file. Wall readings captured through this shim are *report-only*
+//! — they may be printed or exported, but must never steer a sampling,
+//! batching, or serving decision (those run on the virtual clock).
+#![allow(clippy::disallowed_methods)]
+
+use std::time::Instant;
+
+/// A started wall-clock measurement (monotonic).
+#[derive(Clone, Copy, Debug)]
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    /// Begin a measurement.
+    pub fn start() -> WallClock {
+        WallClock { start: Instant::now() }
+    }
+
+    /// Elapsed milliseconds since [`WallClock::start`].
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_monotone_nonnegative() {
+        let w = WallClock::start();
+        let a = w.elapsed_ms();
+        let b = w.elapsed_ms();
+        assert!(a >= 0.0 && b >= a);
+    }
+}

@@ -504,6 +504,19 @@ impl Pipeline {
         engine::run_stream(self.stream(), &cfg)
     }
 
+    /// [`Pipeline::engine_report`] with a flight-recorder attached:
+    /// measured batches emit per-PE stage spans into `trace`
+    /// (`--trace` on the `engine` subcommand). The report is
+    /// bit-identical to [`Pipeline::engine_report`] — spans are derived
+    /// from the same per-batch ledgers the reduction consumes.
+    pub fn engine_report_traced(
+        &self,
+        trace: &mut crate::obs::Trace,
+    ) -> EngineReport {
+        let cfg = self.cfg.engine_config(&self.ds);
+        engine::run_stream_traced(self.stream(), &cfg, trace)
+    }
+
     /// Trainer options mirroring this pipeline.
     pub fn trainer_options(&self) -> TrainerOptions {
         self.cfg.trainer_options()

@@ -26,7 +26,7 @@ use crate::coop::all_to_all::AllReduceStrategy;
 use crate::coop::engine::Mode;
 use crate::pipeline::PipelineBuilder;
 use crate::train::ParallelRunReport;
-use crate::util::csv::Table;
+use crate::util::csv::{fmt_kib, fmt_ms, Table};
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
     let (ds_name, batch_per_pe, steps, pe_counts, lr): (_, usize, usize, &[usize], f32) =
@@ -54,12 +54,18 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "coop_vs_indep",
             "inter_KiB_step",
             "collective",
+            "sample_p50_ms",
+            "sample_p99_ms",
+            "compute_p50_ms",
+            "compute_p99_ms",
+            "allreduce_p50_ms",
+            "allreduce_p99_ms",
         ],
     );
     for &p in pe_counts {
         // the requested replica-group size where the PE count allows it
         let r = if p % ctx.replication == 0 { ctx.replication } else { 1 };
-        let mut per_mode: Vec<(Mode, ParallelRunReport)> = Vec::new();
+        let mut per_mode: Vec<(Mode, ParallelRunReport, [f64; 6])> = Vec::new();
         for mode in [Mode::Independent, Mode::Cooperative] {
             let mut b = PipelineBuilder::new()
                 .dataset(ds_name)
@@ -85,11 +91,22 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 mode.name(),
                 p
             );
-            per_mode.push((mode, rep));
+            // per-step stage distributions from the trainer's log-bucket
+            // histograms (the mean columns hide tail skew; p50/p99 show it)
+            let h = trainer.stage_hists();
+            let hq = [
+                h.sample_ms.quantile_mid(0.50),
+                h.sample_ms.quantile_mid(0.99),
+                h.compute_ms.quantile_mid(0.50),
+                h.compute_ms.quantile_mid(0.99),
+                h.allreduce_ms.quantile_mid(0.50),
+                h.allreduce_ms.quantile_mid(0.99),
+            ];
+            per_mode.push((mode, rep, hq));
             println!("end2end: {} P={p} done ({:.2} ms/step)", mode.name(), rep.ms_per_step);
         }
         let indep_ms = per_mode[0].1.ms_per_step;
-        for (mode, rep) in &per_mode {
+        for (mode, rep, hq) in &per_mode {
             let ratio = if *mode == Mode::Cooperative && rep.ms_per_step > 0.0 {
                 format!("{:.2}x", indep_ms / rep.ms_per_step)
             } else {
@@ -98,20 +115,26 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             table.push_row(&[
                 p.to_string(),
                 mode.name().to_string(),
-                format!("{:.2}", rep.ms_per_step),
-                format!("{:.2}", rep.sample_ms),
-                format!("{:.2}", rep.feature_ms),
-                format!("{:.2}", rep.compute_ms),
-                format!("{:.2}", rep.allreduce_ms),
-                format!("{:.1}", rep.storage_bytes_per_step / 1024.0),
-                format!("{:.1}", rep.fabric_bytes_per_step / 1024.0),
-                format!("{:.1}", rep.grad_bytes_per_step / 1024.0),
-                format!("{:.1}", rep.act_bytes_per_step / 1024.0),
+                fmt_ms(rep.ms_per_step),
+                fmt_ms(rep.sample_ms),
+                fmt_ms(rep.feature_ms),
+                fmt_ms(rep.compute_ms),
+                fmt_ms(rep.allreduce_ms),
+                fmt_kib(rep.storage_bytes_per_step),
+                fmt_kib(rep.fabric_bytes_per_step),
+                fmt_kib(rep.grad_bytes_per_step),
+                fmt_kib(rep.act_bytes_per_step),
                 format!("{:.4}", rep.first_loss),
                 format!("{:.4}", rep.last_loss),
                 ratio,
-                format!("{:.1}", total_inter_bytes(rep) / 1024.0),
+                fmt_kib(total_inter_bytes(rep)),
                 rep.collective.to_string(),
+                fmt_ms(hq[0]),
+                fmt_ms(hq[1]),
+                fmt_ms(hq[2]),
+                fmt_ms(hq[3]),
+                fmt_ms(hq[4]),
+                fmt_ms(hq[5]),
             ]);
         }
     }
@@ -207,10 +230,10 @@ fn replication_table(
         table.push_row(&[
             p.to_string(),
             r.to_string(),
-            format!("{:.1}", inter / 1024.0),
-            format!("{:.1}", rep.fabric_inter_bytes_per_step / 1024.0),
-            format!("{:.1}", rep.act_inter_bytes_per_step / 1024.0),
-            format!("{:.1}", rep.grad_inter_bytes_per_step / 1024.0),
+            fmt_kib(inter),
+            fmt_kib(rep.fabric_inter_bytes_per_step),
+            fmt_kib(rep.act_inter_bytes_per_step),
+            fmt_kib(rep.grad_inter_bytes_per_step),
             if inter > 0.0 { format!("{:.2}x", b / inter) } else { "-".to_string() },
             format!("{:.4}", rep.last_loss),
             picked.name().to_string(),
@@ -260,6 +283,13 @@ mod tests {
                 assert!(act > 0.0, "coop rows must exchange hidden activations: {r}");
             } else {
                 assert_eq!(act, 0.0, "independent rows exchange no activations: {r}");
+            }
+            // appended stage-histogram columns: parse, and each p99
+            // bounds its p50 from above (quantile monotonicity)
+            for (p50, p99) in [(16, 17), (18, 19), (20, 21)] {
+                let lo: f64 = cells[p50].parse().unwrap();
+                let hi: f64 = cells[p99].parse().unwrap();
+                assert!(hi >= lo && lo >= 0.0, "hist percentile order: {r}");
             }
         }
         assert_eq!(pes_seen.len(), 2, "two PE counts required");

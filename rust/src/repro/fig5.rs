@@ -21,7 +21,7 @@ use crate::coop::engine::Mode;
 use crate::feature::Codec;
 use crate::pipeline::PipelineBuilder;
 use crate::sampling::Kappa;
-use crate::util::csv::Table;
+use crate::util::csv::{fmt_kib, Table};
 
 const KAPPAS: &[Kappa] = &[
     Kappa::Finite(1),
@@ -83,9 +83,9 @@ pub fn run_fig5a(ctx: &Ctx) -> crate::Result<()> {
                 format!("{:.4}", r.derived_miss_rate),
                 format!("{:.0}", r.feat_requested),
                 format!("{:.0}", r.feat_misses),
-                format!("{:.1}", r.feat_storage_bytes / 1024.0),
+                fmt_kib(r.feat_storage_bytes),
                 ctx.codec.name().to_string(),
-                format!("{:.1}", f32_bytes / 1024.0),
+                fmt_kib(f32_bytes),
                 format!(
                     "{:.4}",
                     if f32_bytes > 0.0 { r.feat_storage_bytes / f32_bytes } else { 1.0 }
@@ -153,7 +153,7 @@ pub fn run_fig5b(ctx: &Ctx) -> crate::Result<()> {
                 kappa.label(),
                 format!("{:.4}", r.derived_miss_rate),
                 format!("{:.0}", r.feat_fabric_rows),
-                format!("{:.1}", r.feat_fabric_bytes / 1024.0),
+                fmt_kib(r.feat_fabric_bytes),
                 ctx.codec.name().to_string(),
                 format!("{:.4}", fabric_vs_f32),
             ]);

@@ -7,7 +7,7 @@ use super::Ctx;
 use crate::coop::engine::Mode;
 use crate::costmodel::{estimate, ModelCost, SystemPreset};
 use crate::pipeline::PipelineBuilder;
-use crate::util::csv::Table;
+use crate::util::csv::{fmt_kib, Table};
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
     let (ds_name, model, b) = if ctx.quick {
@@ -63,8 +63,8 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             repl.to_string(),
             (pipe.cfg.batch_per_pe * p).to_string(),
             format!("{:.0}", r.s[3]),
-            format!("{:.1}", r.total_cross_bytes() / 1024.0),
-            format!("{:.1}", r.feat_fabric_inter_bytes / 1024.0),
+            fmt_kib(r.total_cross_bytes()),
+            fmt_kib(r.feat_fabric_inter_bytes),
             format!("{fb:.2}"),
             format!("{:.3}", fb / fb1.unwrap()),
         ]);

@@ -22,7 +22,7 @@ use crate::coop::engine::Mode;
 use crate::feature::Codec;
 use crate::pipeline::PipelineBuilder;
 use crate::serve::{BatcherKind, ServeConfig, ServeReport};
-use crate::util::csv::Table;
+use crate::util::csv::{fmt_kib, fmt_ms, Table};
 
 pub fn run(ctx: &Ctx) -> crate::Result<()> {
     type Scenario = (&'static str, f64, u64, usize, usize, &'static [usize]);
@@ -51,6 +51,10 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "slo_viol_pct",
             "coop_adaptive_vs_indep_fixed_bytes",
             "codec",
+            "queue_p50_ms",
+            "queue_p99_ms",
+            "service_p50_ms",
+            "service_p99_ms",
         ],
     );
     for &p in pe_counts {
@@ -105,17 +109,21 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
                 batcher.name().to_string(),
                 r.served.to_string(),
                 format!("{:.1}", r.mean_batch),
-                format!("{:.2}", r.p50_ms),
-                format!("{:.2}", r.p90_ms),
-                format!("{:.2}", r.p99_ms),
+                fmt_ms(r.p50_ms),
+                fmt_ms(r.p90_ms),
+                fmt_ms(r.p99_ms),
                 format!("{:.0}", r.requests_per_s),
-                format!("{:.1}", r.storage_bytes_per_req / 1024.0),
-                format!("{:.1}", r.fabric_bytes_per_req / 1024.0),
-                format!("{:.3}", r.fabric_inter_bytes_per_req / 1024.0),
+                fmt_kib(r.storage_bytes_per_req),
+                fmt_kib(r.fabric_bytes_per_req),
+                fmt_kib(r.fabric_inter_bytes_per_req),
                 format!("{:.0}", r.bytes_per_req()),
                 format!("{:.2}", r.slo_violation_rate * 100.0),
                 ratio,
                 ctx.codec.name().to_string(),
+                fmt_ms(r.queue_p50_ms),
+                fmt_ms(r.queue_p99_ms),
+                fmt_ms(r.service_p50_ms),
+                fmt_ms(r.service_p99_ms),
             ]);
         }
     }
@@ -158,17 +166,21 @@ pub fn run(ctx: &Ctx) -> crate::Result<()> {
             "fixed-sat".to_string(),
             r.served.to_string(),
             format!("{:.1}", r.mean_batch),
-            format!("{:.2}", r.p50_ms),
-            format!("{:.2}", r.p90_ms),
-            format!("{:.2}", r.p99_ms),
+            fmt_ms(r.p50_ms),
+            fmt_ms(r.p90_ms),
+            fmt_ms(r.p99_ms),
             format!("{:.0}", r.requests_per_s),
-            format!("{:.1}", r.storage_bytes_per_req / 1024.0),
-            format!("{:.1}", r.fabric_bytes_per_req / 1024.0),
-            format!("{:.3}", r.fabric_inter_bytes_per_req / 1024.0),
+            fmt_kib(r.storage_bytes_per_req),
+            fmt_kib(r.fabric_bytes_per_req),
+            fmt_kib(r.fabric_inter_bytes_per_req),
             format!("{:.0}", r.bytes_per_req()),
             format!("{:.2}", r.slo_violation_rate * 100.0),
             "-".to_string(),
             codec.name().to_string(),
+            fmt_ms(r.queue_p50_ms),
+            fmt_ms(r.queue_p99_ms),
+            fmt_ms(r.service_p50_ms),
+            fmt_ms(r.service_p99_ms),
         ]);
     }
     table.write(&ctx.out, "serve")?;
@@ -217,6 +229,14 @@ mod tests {
                 let inter: f64 = r[11].parse().unwrap();
                 assert!(inter <= fabric + 1e-9, "inter slice exceeds fabric total: {r:?}");
             }
+            // appended phase-waterfall columns: parse, p99 bounds p50
+            for (p50, p99) in [(16, 17), (18, 19)] {
+                let lo: f64 = r[p50].parse().unwrap();
+                let hi: f64 = r[p99].parse().unwrap();
+                assert!(hi >= lo && lo >= 0.0, "waterfall percentile order: {r:?}");
+            }
+            let service_p50: f64 = r[18].parse().unwrap();
+            assert!(service_p50 > 0.0, "service phase must take time: {r:?}");
             bytes.insert((r[1].clone(), r[2].clone()), b_req);
         }
         let indep_fixed = bytes[&("Indep".to_string(), "fixed".to_string())];

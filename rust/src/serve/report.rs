@@ -135,6 +135,78 @@ impl Ledger {
         h
     }
 
+    /// Derive the flight-recorder trace from the transcript: track 0
+    /// carries each dispatched batch's virtual service window split
+    /// across `serve_storage` / `serve_fabric` / `serve_hot`
+    /// proportionally to the byte ledgers (largest-remainder, so the
+    /// sub-spans tile the window and their summed bytes equal the
+    /// ledger totals exactly), track 1 carries every request's
+    /// `queue` (arrival→dispatch) and `service` (dispatch→completion)
+    /// phases. All timestamps are the virtual-µs clock, so the trace —
+    /// like the ledger it is a pure function of — is **bit-identical
+    /// across serial/threaded exec and prefetch 0/1** at a fixed seed
+    /// (pinned in `tests/integration_obs.rs`).
+    pub fn trace(&self) -> crate::obs::TraceBuffer {
+        use crate::obs::{split_dur, Span, TraceBuffer, TraceSink};
+        let mut buf = TraceBuffer::new("serve");
+        for b in &self.batches {
+            let parts = split_dur(
+                b.service_us,
+                &[b.storage_bytes, b.fabric_bytes, b.hot_bytes],
+            );
+            let mut t = b.dispatch_us;
+            for (seq, (stage, (dur, bytes))) in
+                ["serve_storage", "serve_fabric", "serve_hot"]
+                    .into_iter()
+                    .zip(parts.iter().zip([
+                        b.storage_bytes,
+                        b.fabric_bytes,
+                        b.hot_bytes,
+                    ]))
+                    .enumerate()
+            {
+                buf.record(Span {
+                    batch: b.index as u64,
+                    pe: 0,
+                    seq: seq as u32,
+                    stage,
+                    t_start_us: t,
+                    t_end_us: t + dur,
+                    bytes,
+                });
+                t += dur;
+            }
+        }
+        // Requests ride track 1; seq restarts per batch (two spans per
+        // request, admission order), so (batch, pe, seq) stays a total
+        // order.
+        let mut seq_in_batch: std::collections::BTreeMap<u32, u32> =
+            std::collections::BTreeMap::new();
+        for r in &self.requests {
+            let seq = seq_in_batch.entry(r.batch).or_insert(0);
+            buf.record(Span {
+                batch: r.batch as u64,
+                pe: 1,
+                seq: *seq,
+                stage: "queue",
+                t_start_us: r.arrival_us,
+                t_end_us: r.dispatch_us,
+                bytes: 0,
+            });
+            buf.record(Span {
+                batch: r.batch as u64,
+                pe: 1,
+                seq: *seq + 1,
+                stage: "service",
+                t_start_us: r.dispatch_us,
+                t_end_us: r.completion_us,
+                bytes: 0,
+            });
+            *seq += 2;
+        }
+        buf
+    }
+
     /// Reduce the ledger to the serving metrics, judging latencies
     /// against `slo_us`.
     pub fn summarize(&self, slo_us: u64) -> ServeReport {
@@ -145,6 +217,21 @@ impl Ledger {
         let mut lat_ms: Vec<f64> =
             self.requests.iter().map(|r| r.latency_us() as f64 / 1e3).collect();
         lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Exact per-request phase waterfall: queue (arrival→dispatch)
+        // and service (dispatch→completion) percentiles from the full
+        // per-request populations — not histogram approximations.
+        let mut queue_ms: Vec<f64> = self
+            .requests
+            .iter()
+            .map(|r| (r.dispatch_us - r.arrival_us) as f64 / 1e3)
+            .collect();
+        queue_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut service_ms: Vec<f64> = self
+            .requests
+            .iter()
+            .map(|r| (r.completion_us - r.dispatch_us) as f64 / 1e3)
+            .collect();
+        service_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let violations = self.requests.iter().filter(|r| r.latency_us() > slo_us).count();
         let first_arrival = self.requests.iter().map(|r| r.arrival_us).min().unwrap();
         let last_completion = self.requests.iter().map(|r| r.completion_us).max().unwrap();
@@ -168,6 +255,10 @@ impl Ledger {
             p90_ms: percentile(&lat_ms, 0.90),
             p99_ms: percentile(&lat_ms, 0.99),
             max_ms: lat_ms[n - 1],
+            queue_p50_ms: percentile(&queue_ms, 0.50),
+            queue_p99_ms: percentile(&queue_ms, 0.99),
+            service_p50_ms: percentile(&service_ms, 0.50),
+            service_p99_ms: percentile(&service_ms, 0.99),
             requests_per_s: n as f64 / span_s,
             storage_bytes_per_req: storage as f64 / n as f64,
             fabric_bytes_per_req: fabric as f64 / n as f64,
@@ -193,6 +284,14 @@ pub struct ServeReport {
     pub p90_ms: f64,
     pub p99_ms: f64,
     pub max_ms: f64,
+    /// queue-phase (arrival→dispatch) latency percentiles — the exact
+    /// per-request waterfall, computed from the full population in
+    /// [`Ledger::summarize`], not a histogram estimate.
+    pub queue_p50_ms: f64,
+    pub queue_p99_ms: f64,
+    /// service-phase (dispatch→completion) latency percentiles.
+    pub service_p50_ms: f64,
+    pub service_p99_ms: f64,
     /// virtual throughput: served / (last completion − first arrival).
     pub requests_per_s: f64,
     /// storage (β) bytes per served request.
@@ -241,6 +340,11 @@ impl std::fmt::Display for ServeReport {
             self.slo_ms,
             self.slo_violations,
             self.slo_violation_rate * 100.0
+        )?;
+        writeln!(
+            f,
+            "phase waterfall ms: queue p50 {:.3} / p99 {:.3}  →  service p50 {:.3} / p99 {:.3}",
+            self.queue_p50_ms, self.queue_p99_ms, self.service_p50_ms, self.service_p99_ms
         )?;
         write!(
             f,
@@ -328,6 +432,39 @@ mod tests {
         assert!((r.hot_bytes_per_req - 64.0).abs() < 1e-9);
         // span = 1000 − 10 µs → ~3030 req/s virtual
         assert!((r.requests_per_s - 3.0 / (990.0 / 1e6)).abs() < 1.0);
+    }
+
+    #[test]
+    fn waterfall_percentiles_are_exact() {
+        let r = two_batch_ledger().summarize(450);
+        // queue µs: 90, 40, 100 → sorted ms [0.04, 0.09, 0.10]
+        assert!((r.queue_p50_ms - 0.09).abs() < 1e-9);
+        assert!((r.queue_p99_ms - 0.0998).abs() < 1e-9);
+        // service µs: 400, 400, 300 → sorted ms [0.30, 0.40, 0.40]
+        assert!((r.service_p50_ms - 0.40).abs() < 1e-9);
+        assert!((r.service_p99_ms - 0.40).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_spans_tile_batches_and_reconcile_bytes() {
+        let l = two_batch_ledger();
+        let t = l.trace();
+        // 3 byte-stage spans per batch + 2 phase spans per request.
+        assert_eq!(t.span_count(), 2 * 3 + 3 * 2);
+        assert_eq!(t.stage_bytes("serve_storage"), 1500);
+        assert_eq!(t.stage_bytes("serve_fabric"), 200);
+        assert_eq!(t.stage_bytes("serve_hot"), 192);
+        // (batch, pe, seq) is strictly increasing over the merge.
+        let m = t.merged();
+        for w in m.windows(2) {
+            assert!((w[0].batch, w[0].pe, w[0].seq) < (w[1].batch, w[1].pe, w[1].seq));
+        }
+        // Batch sub-spans tile the service window exactly.
+        let batch0: Vec<_> = m.iter().filter(|s| s.batch == 0 && s.pe == 0).collect();
+        assert_eq!(batch0.first().unwrap().t_start_us, 100);
+        assert_eq!(batch0.last().unwrap().t_end_us, 500);
+        // Pure function of the ledger: identical ledgers → identical JSON.
+        assert_eq!(t.to_chrome_json(), two_batch_ledger().trace().to_chrome_json());
     }
 
     #[test]

@@ -47,6 +47,7 @@ use crate::coop::all_to_all::{
 use crate::coop::engine::ExecMode;
 use crate::graph::VertexId;
 use crate::model::host::PeStep;
+use crate::obs::{ms_to_us, Span, StageHists, Trace, TraceSink};
 use crate::model::{ModelDims, PeCompute, Predictor};
 use crate::pipeline::stream::AbortOnPeerPanic;
 use crate::pipeline::{EngineStream, Minibatch, MinibatchStream, PeWork};
@@ -156,6 +157,13 @@ pub struct ParallelTrainer {
     serial_fabric: Exchange,
     profile: LayerProfile,
     steps: u64,
+    /// flight recorder (Off by default — zero overhead; see
+    /// [`ParallelTrainer::enable_trace`]).
+    trace: Trace,
+    /// per-stage step-time histograms accumulated across
+    /// [`ParallelTrainer::run`] calls — the p50/p99 columns in
+    /// `repro end2end` read these off the trainer after a run.
+    hists: StageHists,
 }
 
 impl ParallelTrainer {
@@ -214,7 +222,29 @@ impl ParallelTrainer {
                 matmul_ms: vec![0.0; dims.layers],
             },
             steps: 0,
+            trace: Trace::Off,
+            hists: StageHists::default(),
         }
+    }
+
+    /// Attach a flight recorder: subsequent [`ParallelTrainer::run`]
+    /// steps emit per-PE sample/feature spans and coordinator-track
+    /// compute / activation-exchange / gradient-all-reduce spans.
+    /// Training counters stay bit-identical — spans are derived from
+    /// the ledgers after each step, never consulted.
+    pub fn enable_trace(&mut self) {
+        self.trace = Trace::on("train");
+    }
+
+    /// The attached flight recorder ([`Trace::Off`] unless
+    /// [`ParallelTrainer::enable_trace`] was called).
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    /// Per-stage step-time histograms accumulated across runs.
+    pub fn stage_hists(&self) -> &StageHists {
+        &self.hists
     }
 
     pub fn num_pes(&self) -> usize {
@@ -421,17 +451,73 @@ impl ParallelTrainer {
             ..Default::default()
         };
         let run = Timer::start();
+        let mut cursor = vec![0u64; self.num_pes];
         for step in 0..steps {
             let mb = stream.next_batch();
-            rep.sample_ms += mb.per_pe.iter().map(|w| w.samp_ms).sum::<f64>();
-            rep.feature_ms += mb.per_pe.iter().map(|w| w.feat_ms).sum::<f64>();
+            let samp: f64 = mb.per_pe.iter().map(|w| w.samp_ms).sum();
+            let feat: f64 = mb.per_pe.iter().map(|w| w.feat_ms).sum();
+            rep.sample_ms += samp;
+            rep.feature_ms += feat;
             rep.storage_bytes_per_step +=
                 mb.per_pe.iter().map(|w| w.bytes_from_storage).sum::<u64>() as f64;
             rep.fabric_bytes_per_step +=
                 mb.per_pe.iter().map(|w| w.fabric_bytes).sum::<u64>() as f64;
             rep.fabric_inter_bytes_per_step +=
                 mb.per_pe.iter().map(|w| w.fabric_inter_bytes).sum::<u64>() as f64;
+            self.hists.sample_ms.record(samp);
+            self.hists.feature_ms.record(feat);
+            if self.trace.enabled() {
+                // Per-PE sample + feature-window spans — same derivation
+                // the engine uses, from the same PeWork ledgers.
+                crate::coop::engine::emit_batch_spans(
+                    &mut self.trace,
+                    step as u64,
+                    &mb.per_pe,
+                    &mut cursor,
+                );
+            }
             let s = self.step(&mb, labels);
+            self.hists.compute_ms.record(s.compute_ms);
+            self.hists.allreduce_ms.record(s.allreduce_ms);
+            if self.trace.enabled() {
+                // Coordinator track (tid = num_pes): the synchronized
+                // compute / activation-exchange / gradient-all-reduce
+                // phases, with fabric bytes attributed.
+                let base = cursor.iter().copied().max().unwrap_or(0);
+                let coord = self.num_pes as u32;
+                let compute_us = ms_to_us(s.compute_ms);
+                let ar_us = ms_to_us(s.allreduce_ms);
+                let mk = |seq, stage, t0, t1, bytes| Span {
+                    batch: step as u64,
+                    pe: coord,
+                    seq,
+                    stage,
+                    t_start_us: t0,
+                    t_end_us: t1,
+                    bytes,
+                };
+                self.trace
+                    .record(mk(0, "compute", base, base + compute_us, 0));
+                self.trace.record(mk(
+                    1,
+                    "act_exchange",
+                    base + compute_us,
+                    base + compute_us,
+                    s.act_bytes,
+                ));
+                self.trace.record(mk(
+                    2,
+                    "grad_allreduce",
+                    base + compute_us,
+                    base + compute_us + ar_us,
+                    s.grad_bytes,
+                ));
+                // Lockstep barrier: every PE's next step starts after
+                // the all-reduce completes.
+                for c in cursor.iter_mut() {
+                    *c = base + compute_us + ar_us;
+                }
+            }
             rep.examples_per_step += s.examples as f64;
             rep.compute_ms += s.compute_ms;
             rep.allreduce_ms += s.allreduce_ms;

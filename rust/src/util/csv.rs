@@ -67,9 +67,31 @@ impl Table {
     }
 }
 
+/// Format a byte quantity as KiB with fixed 3-decimal precision — the
+/// one spelling every repro table uses for byte columns, so the same
+/// quantity never drifts between `{:.1}` and `{:.3}` across harnesses.
+pub fn fmt_kib(bytes: f64) -> String {
+    format!("{:.3}", bytes / 1024.0)
+}
+
+/// Format a millisecond quantity with fixed 3-decimal precision — the
+/// shared spelling for time columns in the repro tables.
+pub fn fmt_ms(ms: f64) -> String {
+    format!("{ms:.3}")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shared_formatters_are_stable() {
+        assert_eq!(fmt_kib(1024.0), "1.000");
+        assert_eq!(fmt_kib(1536.0), "1.500");
+        assert_eq!(fmt_kib(0.0), "0.000");
+        assert_eq!(fmt_ms(1.23456), "1.235");
+        assert_eq!(fmt_ms(0.0), "0.000");
+    }
 
     #[test]
     fn csv_roundtrip_shape() {

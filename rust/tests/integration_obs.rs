@@ -1,0 +1,315 @@
+//! Observability-plane acceptance gates (the PR's acceptance criteria):
+//!
+//! * the serve flight-recorder trace is **byte-identical** across
+//!   `--exec serial|threaded` × `--prefetch 0|1` at a fixed seed (it is
+//!   a pure function of the ledger, which already carries that
+//!   contract);
+//! * engine and train counter ledgers are **bit-identical with tracing
+//!   on vs off** — spans are derived from the ledgers after the fact,
+//!   never consulted;
+//! * per-stage summed span bytes **reconcile exactly** with the
+//!   corresponding `EngineReport` / `ParallelRunReport` / `ServeReport`
+//!   ledger fields (integer sums < 2^53, so the f64 divisions match
+//!   bit-for-bit, not approximately).
+
+use coopgnn::coop::all_to_all::AllReduceStrategy;
+use coopgnn::coop::engine::{ExecMode, Mode};
+use coopgnn::obs::Trace;
+use coopgnn::pipeline::{Pipeline, PipelineBuilder};
+use coopgnn::serve::{BatcherKind, ServeConfig, ServeOutcome, WorkloadKind};
+
+/// Two independently built pipelines over the same config so the traced
+/// and untraced runs cannot share mutable state.
+fn engine_pipe(hot_mb: usize, prefetch: bool) -> Pipeline {
+    PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Cooperative)
+        .num_pes(2)
+        .seed(77)
+        .hot_mb(hot_mb)
+        .prefetch(prefetch)
+        .warmup_batches(2)
+        .measure_batches(6)
+        .build()
+        .unwrap()
+}
+
+fn run_serve(exec: ExecMode, prefetch: bool) -> ServeOutcome {
+    let pipe = PipelineBuilder::new()
+        .dataset("tiny")
+        .mode(Mode::Cooperative)
+        .exec(exec)
+        .num_pes(2)
+        .prefetch(prefetch)
+        .seed(13)
+        .build()
+        .unwrap();
+    let scfg = ServeConfig {
+        rate_per_s: 15_000.0,
+        slo_us: 25_000,
+        batcher: BatcherKind::Adaptive,
+        duration_batches: 8,
+        fixed_batch_per_pe: 8,
+        workload: WorkloadKind::OpenPoisson,
+        clients: 16,
+        ..Default::default()
+    };
+    pipe.server(scfg).unwrap().run()
+}
+
+fn bits_eq(a: f64, b: f64, what: &str) {
+    assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b} must match bit-for-bit");
+}
+
+/// `serve --trace` acceptance gate: the exported Chrome JSON is
+/// byte-identical across every exec × prefetch combination — the trace
+/// inherits the ledger's bit-identity contract wholesale.
+#[test]
+fn serve_trace_json_is_byte_identical_across_exec_and_prefetch() {
+    let baseline = run_serve(ExecMode::Serial, false);
+    let json = baseline.ledger.trace().to_chrome_json();
+    assert!(baseline.ledger.requests.len() > 8, "sim must serve requests");
+    assert!(json.len() > 2, "trace must carry spans");
+    for (exec, prefetch) in [
+        (ExecMode::Serial, true),
+        (ExecMode::Threaded, false),
+        (ExecMode::Threaded, true),
+    ] {
+        let other = run_serve(exec, prefetch).ledger.trace().to_chrome_json();
+        assert_eq!(json, other, "{exec:?}/prefetch={prefetch}: serve trace drifted");
+    }
+}
+
+/// Serve reconciliation: per-stage span bytes equal the batch-ledger
+/// sums exactly (u64), and dividing by the served count reproduces the
+/// `ServeReport` per-request fields bit-for-bit — the same integer
+/// sums, the same single f64 division.
+#[test]
+fn serve_trace_bytes_reconcile_with_report() {
+    let out = run_serve(ExecMode::Threaded, true);
+    let t = out.ledger.trace();
+    let storage: u64 = out.ledger.batches.iter().map(|b| b.storage_bytes).sum();
+    let fabric: u64 = out.ledger.batches.iter().map(|b| b.fabric_bytes).sum();
+    let hot: u64 = out.ledger.batches.iter().map(|b| b.hot_bytes).sum();
+    assert_eq!(t.stage_bytes("serve_storage"), storage);
+    assert_eq!(t.stage_bytes("serve_fabric"), fabric);
+    assert_eq!(t.stage_bytes("serve_hot"), hot);
+    assert!(storage > 0, "batches must move storage bytes");
+    let n = out.report.served as f64;
+    bits_eq(
+        t.stage_bytes("serve_storage") as f64 / n,
+        out.report.storage_bytes_per_req,
+        "serve_storage / served vs storage_bytes_per_req",
+    );
+    bits_eq(
+        t.stage_bytes("serve_fabric") as f64 / n,
+        out.report.fabric_bytes_per_req,
+        "serve_fabric / served vs fabric_bytes_per_req",
+    );
+    bits_eq(
+        t.stage_bytes("serve_hot") as f64 / n,
+        out.report.hot_bytes_per_req,
+        "serve_hot / served vs hot_bytes_per_req",
+    );
+    // Track 0 batch sub-spans tile each service window: per batch, span
+    // starts/ends chain and cover [dispatch, dispatch + service].
+    let m = t.merged();
+    for b in &out.ledger.batches {
+        let spans: Vec<_> =
+            m.iter().filter(|s| s.pe == 0 && s.batch == b.index as u64).collect();
+        assert_eq!(spans.len(), 3, "three byte stages per dispatched batch");
+        assert_eq!(spans.first().unwrap().t_start_us, b.dispatch_us);
+        assert_eq!(spans.last().unwrap().t_end_us, b.dispatch_us + b.service_us);
+        for w in spans.windows(2) {
+            assert_eq!(w[0].t_end_us, w[1].t_start_us, "stages must tile the window");
+        }
+    }
+}
+
+/// Engine counters are bit-identical with the flight recorder on vs
+/// off. Wall-clock fields (`wall_*_ms`) are honest measurements and
+/// differ run to run; every deterministic field must match exactly.
+#[test]
+fn engine_counters_identical_with_tracing_on_vs_off() {
+    let plain = engine_pipe(1, true).engine_report();
+    let mut trace = Trace::on("engine");
+    let traced = engine_pipe(1, true).engine_report_traced(&mut trace);
+    assert!(
+        trace.buffer().unwrap().span_count() > 0,
+        "traced run must have recorded spans"
+    );
+    for (a, b, what) in [
+        (&plain.s, &traced.s, "s"),
+        (&plain.e, &traced.e, "e"),
+        (&plain.tilde, &traced.tilde, "tilde"),
+        (&plain.cross, &traced.cross, "cross"),
+    ] {
+        assert_eq!(a.len(), b.len(), "{what}: layer counts");
+        for (x, y) in a.iter().zip(b.iter()) {
+            bits_eq(*x, *y, what);
+        }
+    }
+    for (a, b, what) in [
+        (plain.feat_requested, traced.feat_requested, "feat_requested"),
+        (plain.feat_misses, traced.feat_misses, "feat_misses"),
+        (plain.feat_fabric_rows, traced.feat_fabric_rows, "feat_fabric_rows"),
+        (plain.cache_miss_rate, traced.cache_miss_rate, "cache_miss_rate"),
+        (plain.feat_storage_bytes, traced.feat_storage_bytes, "feat_storage_bytes"),
+        (plain.feat_fabric_bytes, traced.feat_fabric_bytes, "feat_fabric_bytes"),
+        (
+            plain.feat_fabric_inter_bytes,
+            traced.feat_fabric_inter_bytes,
+            "feat_fabric_inter_bytes",
+        ),
+        (plain.derived_miss_rate, traced.derived_miss_rate, "derived_miss_rate"),
+        (plain.feat_hot_rows, traced.feat_hot_rows, "feat_hot_rows"),
+        (plain.feat_hot_bytes, traced.feat_hot_bytes, "feat_hot_bytes"),
+        (plain.hot_hit_rate, traced.hot_hit_rate, "hot_hit_rate"),
+        (plain.prefetch_rows, traced.prefetch_rows, "prefetch_rows"),
+        (plain.prefetch_bytes, traced.prefetch_bytes, "prefetch_bytes"),
+        (plain.dup_factor, traced.dup_factor, "dup_factor"),
+    ] {
+        bits_eq(a, b, what);
+    }
+}
+
+/// Engine reconciliation: per-stage span bytes divided by the measured
+/// batch count reproduce the `EngineReport` byte fields bit-for-bit —
+/// the reduction sums the same `PeWork` integers the spans carry. A
+/// hot tier + prefetch exercise every byte stage.
+#[test]
+fn engine_trace_bytes_reconcile_with_report() {
+    let measure = 6u64;
+    let mut trace = Trace::on("engine");
+    let rep = engine_pipe(1, true).engine_report_traced(&mut trace);
+    let t = trace.buffer().unwrap();
+    assert_eq!(
+        t.batch_count() as u64,
+        measure,
+        "only measured batches emit spans"
+    );
+    let m = measure as f64;
+    bits_eq(
+        t.stage_bytes("cache_fill") as f64 / m,
+        rep.feat_storage_bytes,
+        "cache_fill vs feat_storage_bytes",
+    );
+    bits_eq(
+        t.stage_bytes("fabric_all_to_all") as f64 / m,
+        rep.feat_fabric_bytes,
+        "fabric_all_to_all vs feat_fabric_bytes",
+    );
+    bits_eq(
+        t.stage_bytes("hot_fill") as f64 / m,
+        rep.feat_hot_bytes,
+        "hot_fill vs feat_hot_bytes",
+    );
+    bits_eq(
+        t.stage_bytes("prefetch") as f64 / m,
+        rep.prefetch_bytes,
+        "prefetch vs prefetch_bytes",
+    );
+    assert!(rep.feat_storage_bytes > 0.0, "config must move storage bytes");
+    assert!(rep.feat_fabric_bytes > 0.0, "coop mode must move fabric bytes");
+    // The merge key is a strict total order over every span.
+    let merged = t.merged();
+    for w in merged.windows(2) {
+        assert!(
+            (w[0].batch, w[0].pe, w[0].seq) < (w[1].batch, w[1].pe, w[1].seq),
+            "span merge key must be strictly increasing"
+        );
+    }
+}
+
+/// Train counters are bit-identical with the flight recorder on vs off,
+/// and the trace's byte stages reconcile with the run report exactly
+/// (wall-derived span *times* differ run to run; the bytes never do).
+#[test]
+fn train_counters_identical_with_tracing_and_bytes_reconcile() {
+    let steps = 5usize;
+    let run = |traced: bool| {
+        let pipe = engine_pipe(0, false);
+        let mut stream = pipe.stream();
+        let mut trainer = pipe.parallel_trainer(0.05, AllReduceStrategy::Ring);
+        if traced {
+            trainer.enable_trace();
+        }
+        let rep = trainer.run(&mut stream, steps, &pipe.ds.labels);
+        assert!(trainer.replicas_in_lockstep(), "replicas diverged");
+        let buf = trainer.trace().buffer().cloned();
+        (rep, buf)
+    };
+    let (plain, none) = run(false);
+    let (traced, buf) = run(true);
+    assert!(none.is_none(), "untraced trainer must hold no buffer");
+    let buf = buf.expect("traced trainer must hold a buffer");
+
+    assert_eq!(plain.steps, traced.steps);
+    assert_eq!(plain.collective, traced.collective);
+    for (a, b, what) in [
+        (plain.examples_per_step, traced.examples_per_step, "examples_per_step"),
+        (
+            plain.storage_bytes_per_step,
+            traced.storage_bytes_per_step,
+            "storage_bytes_per_step",
+        ),
+        (plain.fabric_bytes_per_step, traced.fabric_bytes_per_step, "fabric_bytes_per_step"),
+        (plain.grad_bytes_per_step, traced.grad_bytes_per_step, "grad_bytes_per_step"),
+        (plain.act_bytes_per_step, traced.act_bytes_per_step, "act_bytes_per_step"),
+        (
+            plain.fabric_inter_bytes_per_step,
+            traced.fabric_inter_bytes_per_step,
+            "fabric_inter_bytes_per_step",
+        ),
+        (
+            plain.grad_inter_bytes_per_step,
+            traced.grad_inter_bytes_per_step,
+            "grad_inter_bytes_per_step",
+        ),
+        (
+            plain.act_inter_bytes_per_step,
+            traced.act_inter_bytes_per_step,
+            "act_inter_bytes_per_step",
+        ),
+    ] {
+        bits_eq(a, b, what);
+    }
+    for (a, b, what) in [
+        (plain.first_loss, traced.first_loss, "first_loss"),
+        (plain.last_loss, traced.last_loss, "last_loss"),
+        (plain.last_acc, traced.last_acc, "last_acc"),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: {a} vs {b}");
+    }
+
+    // Byte reconciliation: stage sums / steps == per-step report fields.
+    let s = steps as f64;
+    bits_eq(
+        buf.stage_bytes("cache_fill") as f64 / s,
+        traced.storage_bytes_per_step,
+        "cache_fill vs storage_bytes_per_step",
+    );
+    bits_eq(
+        buf.stage_bytes("fabric_all_to_all") as f64 / s,
+        traced.fabric_bytes_per_step,
+        "fabric_all_to_all vs fabric_bytes_per_step",
+    );
+    bits_eq(
+        buf.stage_bytes("grad_allreduce") as f64 / s,
+        traced.grad_bytes_per_step,
+        "grad_allreduce vs grad_bytes_per_step",
+    );
+    bits_eq(
+        buf.stage_bytes("act_exchange") as f64 / s,
+        traced.act_bytes_per_step,
+        "act_exchange vs act_bytes_per_step",
+    );
+    assert!(traced.grad_bytes_per_step > 0.0, "all-reduce must move bytes");
+
+    // The coordinator track (tid = num_pes) carries one
+    // compute / act_exchange / grad_allreduce triple per step.
+    let coord: Vec<_> = buf.merged().into_iter().filter(|sp| sp.pe == 2).collect();
+    assert_eq!(coord.len(), 3 * steps, "coordinator emits three spans per step");
+    assert!(coord.iter().any(|sp| sp.stage == "compute"));
+    assert!(coord.iter().any(|sp| sp.stage == "grad_allreduce"));
+}

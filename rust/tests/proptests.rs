@@ -506,6 +506,113 @@ fn prop_encoded_byte_ledgers_and_codec_invariant_counts() {
     });
 }
 
+/// The observability histograms: for random shard counts, sample
+/// mixes (zeros included), and quantiles, [`LogHist::quantile_bounds`]
+/// brackets the exact type-7 percentile of the **pooled** samples even
+/// when the histogram was built by merging per-shard histograms — the
+/// mergeability contract the repro p50/p99 columns rely on.
+#[test]
+fn prop_hist_quantile_bounds_bracket_pooled_exact_percentile() {
+    use coopgnn::obs::LogHist;
+    use coopgnn::util::stats::percentile;
+    check("hist-bracket", 0xA16, 40, |rng| {
+        let shards = 1 + rng.next_below(4) as usize;
+        let mut hists = vec![LogHist::new(); shards];
+        let mut pooled: Vec<f64> = Vec::new();
+        for h in hists.iter_mut() {
+            for _ in 0..1 + rng.next_below(120) {
+                // zeros, sub-ms, and multi-second magnitudes all mixed
+                let v = match rng.next_below(8) {
+                    0 => 0.0,
+                    1 => rng.next_f64() * 1e-3,
+                    _ => (rng.next_f64() * 14.0 - 7.0).exp(),
+                };
+                h.record(v);
+                pooled.push(v);
+            }
+        }
+        let mut merged = LogHist::new();
+        for h in &hists {
+            merged.merge(h);
+        }
+        prop_assert!(
+            merged.count() == pooled.len() as u64,
+            "merge lost samples: {} vs {}",
+            merged.count(),
+            pooled.len()
+        );
+        pooled.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut ps = vec![0.0, 0.50, 0.99, 1.0];
+        for _ in 0..4 {
+            ps.push(rng.next_f64());
+        }
+        for &p in &ps {
+            let exact = percentile(&pooled, p);
+            let (lo, hi) = merged.quantile_bounds(p);
+            prop_assert!(
+                lo <= exact && exact <= hi,
+                "p={p}: bracket ({lo}, {hi}) misses exact {exact} \
+                 ({} samples in {shards} shards)",
+                pooled.len()
+            );
+            let mid = merged.quantile_mid(p);
+            prop_assert!(lo <= mid && mid <= hi, "p={p}: mid {mid} outside bracket");
+        }
+        Ok(())
+    });
+}
+
+/// The flight-recorder merge key: across random modes, exec modes,
+/// prefetch settings, κ values, and PE counts, every traced engine run
+/// yields spans whose `(batch, pe, seq)` keys form a **strict total
+/// order** — the property that makes [`TraceBuffer::merged`] and the
+/// Chrome export deterministic regardless of track interleaving.
+#[test]
+fn prop_trace_span_merge_key_is_a_strict_total_order() {
+    use coopgnn::coop::engine::{ExecMode, Mode};
+    use coopgnn::obs::Trace;
+    use coopgnn::pipeline::PipelineBuilder;
+    check("trace-total-order", 0xA17, 5, |rng| {
+        let mode = if rng.next_below(2) == 0 { Mode::Independent } else { Mode::Cooperative };
+        let exec = if rng.next_below(2) == 0 { ExecMode::Serial } else { ExecMode::Threaded };
+        let kappa =
+            if rng.next_below(2) == 0 { Kappa::Finite(1) } else { Kappa::Finite(16) };
+        let pipe = PipelineBuilder::new()
+            .dataset("tiny")
+            .mode(mode)
+            .exec(exec)
+            .num_pes(1 + rng.next_below(3) as usize)
+            .prefetch(rng.next_below(2) == 1)
+            .hot_mb(rng.next_below(2) as usize)
+            .kappa(kappa)
+            .seed(rng.next_u64())
+            .warmup_batches(1)
+            .measure_batches(2)
+            .build()
+            .unwrap();
+        let mut trace = Trace::on("engine");
+        let _ = pipe.engine_report_traced(&mut trace);
+        let buf = trace.buffer().expect("trace was on");
+        prop_assert!(buf.span_count() > 0, "{mode:?}/{exec:?}: no spans recorded");
+        prop_assert!(
+            buf.batch_count() == 2,
+            "{mode:?}/{exec:?}: spans must cover exactly the measured batches, got {}",
+            buf.batch_count()
+        );
+        let merged = buf.merged();
+        for w in merged.windows(2) {
+            prop_assert!(
+                (w[0].batch, w[0].pe, w[0].seq) < (w[1].batch, w[1].pe, w[1].seq),
+                "{mode:?}/{exec:?}: merge key not strictly increasing \
+                 ({:?} then {:?})",
+                (w[0].batch, w[0].pe, w[0].seq, w[0].stage),
+                (w[1].batch, w[1].pe, w[1].seq, w[1].stage)
+            );
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_all_reduce_equals_sum_then_broadcast_oracle() {
     use coopgnn::coop::all_to_all::{AllReduceStrategy, Fabric};

@@ -1,16 +1,23 @@
 //! Repo-specific configuration: which files may touch the wall clock,
-//! which counter structs pair with which merge functions, where the
-//! flag registry lives. Everything is a plain `&'static` table so the
-//! whole policy is reviewable in one screen.
+//! where the ledger registry and flag registry live. Everything is a
+//! plain `&'static` table so the whole policy is reviewable in one
+//! screen — except the ledger pairings, which are **parsed out of the
+//! tree's own registry declaration**
+//! (`rust/src/obs/registry.rs::LEDGER_STRUCTS`) so the lint list and
+//! the runtime registry can never drift apart.
+
+use crate::{Finding, SourceFile};
 
 /// One counter-struct / merge-function pairing for the ledger rule:
 /// every numeric field of `strukt` (declared in `decl_file`) must be
 /// referenced in at least one of `merge_fns` (`(file, fn-name)`).
-#[derive(Clone, Copy, Debug)]
+/// Owned strings because the pairings are parsed from the registry
+/// source at lint time, not compiled in.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LedgerSpec {
-    pub strukt: &'static str,
-    pub decl_file: &'static str,
-    pub merge_fns: &'static [(&'static str, &'static str)],
+    pub strukt: String,
+    pub decl_file: String,
+    pub merge_fns: Vec<(String, String)>,
 }
 
 /// The policy for the coopgnn tree.
@@ -21,8 +28,10 @@ pub struct RepoConfig {
     pub skip: &'static [&'static str],
     /// Files (path suffix/prefix match) allowed to read the wall clock.
     pub wallclock_allow: &'static [&'static str],
-    /// Ledger pairings (rule 4).
-    pub ledgers: &'static [LedgerSpec],
+    /// File declaring `LEDGER_STRUCTS`, the single source of truth for
+    /// the ledger rule's pairings (rule 4); parsed by
+    /// [`parse_ledger_registry`].
+    pub ledger_registry: &'static str,
     /// File holding the `ArgSpec` tables (`val("key", …)` lines).
     pub flags_spec_file: &'static str,
     /// Files/dirs whose `--flag` literals are checked against the spec.
@@ -40,8 +49,10 @@ pub fn repo_config() -> RepoConfig {
         wallclock_allow: &[
             // timing-only utility modules: Timer / bench_ms live here
             "rust/src/util/stats.rs",
-            // phase metrics recorder (wall columns of the reports)
-            "rust/src/metrics.rs",
+            // the obs plane's single wall-clock capture shim; every
+            // other module takes ms through WallClock values, never
+            // Instant directly
+            "rust/src/obs/wall.rs",
             // host-model kernel profiling (compute_ms breakdowns)
             "rust/src/model/host.rs",
             // outer CLI timers around whole subcommands
@@ -49,61 +60,167 @@ pub fn repo_config() -> RepoConfig {
             // benches are timing harnesses by definition
             "rust/benches/",
         ],
-        ledgers: &[
-            LedgerSpec {
-                strukt: "PeWork",
-                decl_file: "rust/src/pipeline/stream.rs",
-                merge_fns: &[
-                    ("rust/src/coop/engine.rs", "reduce"),
-                    ("rust/src/train/parallel.rs", "run"),
-                    // modeled per-PE service time reads `dim`
-                    ("rust/src/serve/executor.rs", "pe_us"),
-                ],
-            },
-            LedgerSpec {
-                strukt: "EngineReport",
-                decl_file: "rust/src/coop/engine.rs",
-                merge_fns: &[("rust/src/coop/engine.rs", "finalize")],
-            },
-            LedgerSpec {
-                strukt: "LoadStats",
-                decl_file: "rust/src/coop/feature_loader.rs",
-                merge_fns: &[("rust/src/coop/feature_loader.rs", "from_loads")],
-            },
-            LedgerSpec {
-                strukt: "PeLoad",
-                decl_file: "rust/src/coop/feature_loader.rs",
-                merge_fns: &[("rust/src/coop/feature_loader.rs", "from_loads")],
-            },
-            LedgerSpec {
-                strukt: "ParallelStepStats",
-                decl_file: "rust/src/train/parallel.rs",
-                merge_fns: &[("rust/src/train/parallel.rs", "run")],
-            },
-            LedgerSpec {
-                strukt: "ParallelRunReport",
-                decl_file: "rust/src/train/parallel.rs",
-                merge_fns: &[("rust/src/train/parallel.rs", "run")],
-            },
-            LedgerSpec {
-                strukt: "BatchExecution",
-                decl_file: "rust/src/serve/executor.rs",
-                // the dispatch path is where an executor counter either
-                // reaches the ledger or is silently dropped — exactly
-                // the class that lost `fabric_inter_bytes` in PR 8
-                merge_fns: &[("rust/src/serve/mod.rs", "try_dispatch")],
-            },
-            LedgerSpec {
-                strukt: "BatchRecord",
-                decl_file: "rust/src/serve/report.rs",
-                merge_fns: &[
-                    ("rust/src/serve/report.rs", "record_batch"),
-                    ("rust/src/serve/report.rs", "summarize"),
-                ],
-            },
-        ],
+        ledger_registry: "rust/src/obs/registry.rs",
         flags_spec_file: "rust/src/main.rs",
         flags_scan: &["rust/src/main.rs", "rust/src/repro/"],
         flags_builtin: &["help"],
+    }
+}
+
+/// Parse the `LEDGER_STRUCTS` declaration table out of the registry
+/// source: the slice of lines from the line containing
+/// `LEDGER_STRUCTS` to the standalone `];` terminator, split on
+/// `LedgerDecl`, with quoted string literals read positionally — first
+/// the struct name, then its declaring file, then `(file, fn)` pairs.
+/// Anything that does not parse (no table, unterminated, an entry with
+/// fewer than four strings or an odd merge list) is a loud finding, not
+/// a silently shorter lint.
+pub fn parse_ledger_registry(file: &SourceFile) -> Result<Vec<LedgerSpec>, Finding> {
+    let err = |line: usize, msg: String| Finding {
+        rule: crate::rules::ledger::RULE,
+        file: file.rel.clone(),
+        line,
+        msg,
+    };
+    let Some(start) = file.code.iter().position(|l| l.contains("LEDGER_STRUCTS")) else {
+        return Err(err(1, "no `LEDGER_STRUCTS` declaration found in the registry".into()));
+    };
+    let Some(len) = file.code[start..].iter().position(|l| l.trim() == "];") else {
+        return Err(err(
+            start + 1,
+            "`LEDGER_STRUCTS` has no standalone `];` terminator".into(),
+        ));
+    };
+    let table = file.code[start..start + len].join("\n");
+    // Entries open with `LedgerDecl {`; the declaration line's type
+    // annotation (`&[LedgerDecl]`) carries no brace and is not one.
+    let mut specs = Vec::new();
+    for (i, entry) in table.split("LedgerDecl {").skip(1).enumerate() {
+        let strings = quoted_strings(entry);
+        if strings.len() < 4 || strings.len() % 2 != 0 {
+            return Err(err(
+                start + 1,
+                format!(
+                    "`LEDGER_STRUCTS` entry #{} has {} string literals — expected \
+                     struct, decl file, then (file, fn) pairs",
+                    i + 1,
+                    strings.len()
+                ),
+            ));
+        }
+        specs.push(LedgerSpec {
+            strukt: strings[0].clone(),
+            decl_file: strings[1].clone(),
+            merge_fns: strings[2..]
+                .chunks(2)
+                .map(|p| (p[0].clone(), p[1].clone()))
+                .collect(),
+        });
+    }
+    if specs.is_empty() {
+        return Err(err(start + 1, "`LEDGER_STRUCTS` declares no entries".into()));
+    }
+    Ok(specs)
+}
+
+/// Every `"..."` literal in `text`, in order. The registry table is
+/// comment-stripped before it gets here, so naive quote pairing is
+/// exact (no escapes appear in path/identifier literals).
+fn quoted_strings(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(open) = rest.find('"') {
+        let after = &rest[open + 1..];
+        let Some(close) = after.find('"') else { break };
+        out.push(after[..close].to_string());
+        rest = &after[close + 1..];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const REGISTRY: &str = r#"
+pub const LEDGER_STRUCTS: &[LedgerDecl] = &[
+    LedgerDecl {
+        strukt: "PeWork",
+        decl_file: "rust/src/pipeline/stream.rs",
+        merge_fns: &[
+            ("rust/src/coop/engine.rs", "reduce"),
+            ("rust/src/train/parallel.rs", "run"),
+        ],
+    },
+    LedgerDecl {
+        strukt: "EngineReport",
+        decl_file: "rust/src/coop/engine.rs",
+        merge_fns: &[("rust/src/coop/engine.rs", "finalize")],
+    },
+];
+"#;
+
+    #[test]
+    fn registry_table_parses_positionally() {
+        let f = SourceFile::from_str("rust/src/obs/registry.rs", REGISTRY);
+        let specs = parse_ledger_registry(&f).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].strukt, "PeWork");
+        assert_eq!(specs[0].decl_file, "rust/src/pipeline/stream.rs");
+        assert_eq!(
+            specs[0].merge_fns,
+            vec![
+                ("rust/src/coop/engine.rs".to_string(), "reduce".to_string()),
+                ("rust/src/train/parallel.rs".to_string(), "run".to_string()),
+            ]
+        );
+        assert_eq!(specs[1].strukt, "EngineReport");
+        assert_eq!(specs[1].merge_fns.len(), 1);
+    }
+
+    #[test]
+    fn missing_table_is_a_loud_error() {
+        let f = SourceFile::from_str("rust/src/obs/registry.rs", "pub struct Registry {}\n");
+        let e = parse_ledger_registry(&f).unwrap_err();
+        assert!(e.msg.contains("no `LEDGER_STRUCTS`"));
+    }
+
+    #[test]
+    fn odd_string_count_is_a_loud_error() {
+        let broken = r#"
+pub const LEDGER_STRUCTS: &[LedgerDecl] = &[
+    LedgerDecl { strukt: "PeWork", decl_file: "a.rs", merge_fns: &[("b.rs",)] },
+];
+"#;
+        let f = SourceFile::from_str("rust/src/obs/registry.rs", broken);
+        let e = parse_ledger_registry(&f).unwrap_err();
+        assert!(e.msg.contains("string literals"));
+    }
+
+    #[test]
+    fn unterminated_table_is_a_loud_error() {
+        let f = SourceFile::from_str(
+            "rust/src/obs/registry.rs",
+            "pub const LEDGER_STRUCTS: &[LedgerDecl] = &[\n    LedgerDecl { }\n",
+        );
+        let e = parse_ledger_registry(&f).unwrap_err();
+        assert!(e.msg.contains("terminator"));
+    }
+
+    #[test]
+    fn comments_inside_the_table_are_ignored() {
+        let commented = r#"
+pub const LEDGER_STRUCTS: &[LedgerDecl] = &[
+    LedgerDecl {
+        strukt: "PeWork", // the per-PE "work" ledger
+        decl_file: "rust/src/pipeline/stream.rs",
+        merge_fns: &[("rust/src/coop/engine.rs", "reduce")],
+    },
+];
+"#;
+        let f = SourceFile::from_str("rust/src/obs/registry.rs", commented);
+        let specs = parse_ledger_registry(&f).unwrap();
+        assert_eq!(specs.len(), 1);
+        assert_eq!(specs[0].merge_fns.len(), 1, "comment text must not add strings");
     }
 }

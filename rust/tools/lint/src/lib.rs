@@ -18,9 +18,12 @@
 //!    unless the site sorts immediately afterwards or carries a
 //!    `// lint:allow(unordered, reason = "...")` annotation; iteration
 //!    order would otherwise feed fabric payloads and counters.
-//! 4. **ledger** — every numeric field of the configured counter
+//! 4. **ledger** — every numeric field of the registered counter
 //!    structs must be referenced in its paired merge/accumulate
-//!    function, catching "added a counter, forgot to aggregate".
+//!    function, catching "added a counter, forgot to aggregate". The
+//!    struct list is parsed from the tree's own registry declaration
+//!    (`rust/src/obs/registry.rs::LEDGER_STRUCTS`), so the runtime
+//!    registry and this rule share one source of truth.
 //! 5. **flags** — every `--flag` string literal in `main.rs` / `repro/`
 //!    must name a key registered in the strict `ArgSpec` tables, and
 //!    every registered key must be consumed outside its spec line.

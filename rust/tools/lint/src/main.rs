@@ -8,7 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use coopgnn_lint::config::repo_config;
+use coopgnn_lint::config::{parse_ledger_registry, repo_config};
 use coopgnn_lint::rules;
 use coopgnn_lint::{collect_rs_files, Finding, SourceFile};
 
@@ -44,7 +44,20 @@ fn main() {
         findings.extend(rules::rng::check(f));
         findings.extend(rules::unordered::check(f));
     }
-    findings.extend(rules::ledger::check(&files, cfg.ledgers));
+    // the ledger pairings come from the tree's own registry declaration
+    // (LEDGER_STRUCTS); a registry that fails to parse is a finding
+    match files.iter().find(|f| f.rel == cfg.ledger_registry) {
+        Some(reg) => match parse_ledger_registry(reg) {
+            Ok(specs) => findings.extend(rules::ledger::check(&files, &specs)),
+            Err(e) => findings.push(e),
+        },
+        None => findings.push(Finding {
+            rule: rules::ledger::RULE,
+            file: cfg.ledger_registry.to_string(),
+            line: 1,
+            msg: "ledger registry file not found in the scanned tree".to_string(),
+        }),
+    }
     findings.extend(rules::flags::check(&files, &cfg));
 
     findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));

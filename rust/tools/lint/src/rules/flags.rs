@@ -156,7 +156,7 @@ mod tests {
             scan_dirs: &[],
             skip: &[],
             wallclock_allow: &[],
-            ledgers: &[],
+            ledger_registry: "unused-in-flags-tests.rs",
             flags_spec_file: "src/main.rs",
             flags_scan: &["src/main.rs", "src/repro/"],
             flags_builtin: &["help"],

@@ -9,6 +9,12 @@
 //! fields and demands each is referenced in at least one paired merge
 //! function; waive a deliberate non-ledger field with
 //! `// lint:allow(ledger, reason = "...")` on its declaration.
+//!
+//! The struct/merge pairings are not hardcoded here: they are parsed
+//! from the tree's own registry declaration,
+//! `rust/src/obs/registry.rs::LEDGER_STRUCTS`, by
+//! [`crate::config::parse_ledger_registry`] — one list serves both the
+//! runtime registry and this rule.
 
 use crate::config::LedgerSpec;
 use crate::{brace_matched, contains_word, Finding, SourceFile};
@@ -37,7 +43,7 @@ pub fn check(files: &[SourceFile], specs: &[LedgerSpec]) -> Vec<Finding> {
         };
         // union of all paired merge-fn bodies
         let mut merged = String::new();
-        for (file, fname) in spec.merge_fns {
+        for (file, fname) in &spec.merge_fns {
             let Some(f) = files.iter().find(|f| &f.rel == file) else {
                 out.push(missing(spec, format!("merge file `{file}` not found")));
                 continue;
@@ -64,7 +70,7 @@ pub fn check(files: &[SourceFile], specs: &[LedgerSpec]) -> Vec<Finding> {
                 spec.merge_fns.iter().map(|(f, n)| format!("{n} ({f})")).collect();
             out.push(Finding {
                 rule: RULE,
-                file: spec.decl_file.to_string(),
+                file: spec.decl_file.clone(),
                 line,
                 msg: format!(
                     "`{}.{}` is never referenced in its merge path [{}] — \
@@ -81,16 +87,15 @@ pub fn check(files: &[SourceFile], specs: &[LedgerSpec]) -> Vec<Finding> {
 }
 
 fn missing(spec: &LedgerSpec, msg: String) -> Finding {
-    Finding { rule: RULE, file: spec.decl_file.to_string(), line: 1, msg }
+    Finding { rule: RULE, file: spec.decl_file.clone(), line: 1, msg }
 }
 
 /// (1-indexed decl line, field name) for every numeric field of
 /// `strukt` in `decl`.
 fn struct_fields(decl: &SourceFile, strukt: &str) -> Option<(usize, Vec<(usize, String)>)> {
     let header = format!("struct {strukt}");
-    let (start, body) = brace_matched(&decl.code, |l| {
-        l.contains(&header) && crate::contains_word(l, strukt)
-    })?;
+    let (start, body) =
+        brace_matched(&decl.code, |l| l.contains(&header) && crate::contains_word(l, strukt))?;
     let mut fields = Vec::new();
     for (off, line) in body.iter().enumerate() {
         let trimmed = line.trim_start();
@@ -135,9 +140,9 @@ mod tests {
 
     fn spec() -> LedgerSpec {
         LedgerSpec {
-            strukt: "Stats",
-            decl_file: "src/stats.rs",
-            merge_fns: &[("src/stats.rs", "merge")],
+            strukt: "Stats".into(),
+            decl_file: "src/stats.rs".into(),
+            merge_fns: vec![("src/stats.rs".into(), "merge".into())],
         }
     }
 

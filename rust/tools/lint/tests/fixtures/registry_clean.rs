@@ -1,0 +1,21 @@
+//! CLEAN fixture for the registry-driven ledger rule: a well-formed
+//! `LEDGER_STRUCTS` declaration whose registered struct merges every
+//! numeric field. Parsing must succeed and the check must stay silent.
+
+pub const LEDGER_STRUCTS: &[LedgerDecl] = &[
+    LedgerDecl {
+        strukt: "Traffic",
+        decl_file: "fixtures/registry_clean.rs",
+        merge_fns: &[("fixtures/registry_clean.rs", "merge")],
+    },
+];
+
+pub struct Traffic {
+    pub bytes: u64,
+    pub inter_bytes: u64,
+}
+
+pub fn merge(total: &mut Traffic, part: &Traffic) {
+    total.bytes += part.bytes;
+    total.inter_bytes += part.inter_bytes;
+}

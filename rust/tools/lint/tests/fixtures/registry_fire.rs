@@ -1,0 +1,22 @@
+//! FIRING fixture for the registry-driven ledger rule: the file
+//! carries its own `LEDGER_STRUCTS` declaration (the shape
+//! `parse_ledger_registry` reads), and the struct it registers has a
+//! numeric field — `inter_bytes` — that the paired `merge` never
+//! references. Parsing must succeed and the check must fire.
+
+pub const LEDGER_STRUCTS: &[LedgerDecl] = &[
+    LedgerDecl {
+        strukt: "Traffic",
+        decl_file: "fixtures/registry_fire.rs",
+        merge_fns: &[("fixtures/registry_fire.rs", "merge")],
+    },
+];
+
+pub struct Traffic {
+    pub bytes: u64,
+    pub inter_bytes: u64,
+}
+
+pub fn merge(total: &mut Traffic, part: &Traffic) {
+    total.bytes += part.bytes;
+}

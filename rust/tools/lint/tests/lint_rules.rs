@@ -3,7 +3,7 @@
 
 use std::path::Path;
 
-use coopgnn_lint::config::{repo_config, RepoConfig};
+use coopgnn_lint::config::{parse_ledger_registry, repo_config, RepoConfig};
 use coopgnn_lint::rules;
 use coopgnn_lint::{collect_rs_files, Finding, SourceFile};
 
@@ -74,14 +74,11 @@ fn unordered_fixture_clean() {
 
 // ---- rule 4: ledger ---------------------------------------------------
 
-fn ledger_spec(file: &'static str) -> coopgnn_lint::config::LedgerSpec {
+fn ledger_spec(file: &str) -> coopgnn_lint::config::LedgerSpec {
     coopgnn_lint::config::LedgerSpec {
-        strukt: "Traffic",
-        decl_file: file,
-        merge_fns: match file {
-            "fixtures/ledger_fire.rs" => &[("fixtures/ledger_fire.rs", "merge")],
-            _ => &[("fixtures/ledger_clean.rs", "merge")],
-        },
+        strukt: "Traffic".to_string(),
+        decl_file: file.to_string(),
+        merge_fns: vec![(file.to_string(), "merge".to_string())],
     }
 }
 
@@ -110,6 +107,65 @@ fn ledger_fixture_clean() {
     assert!(out.is_empty(), "waived + merged fields must pass: {out:?}");
 }
 
+// ---- rule 4: ledger registry parsing ----------------------------------
+
+/// End-to-end over a fixture that carries its own `LEDGER_STRUCTS`
+/// table: the specs come out of the declaration, and the dropped field
+/// the table points at fires.
+#[test]
+fn registry_fixture_parses_and_fires() {
+    let f = fixture(
+        "fixtures/registry_fire.rs",
+        include_str!("fixtures/registry_fire.rs"),
+    );
+    let specs = parse_ledger_registry(&f).expect("registry table must parse");
+    assert_eq!(specs.len(), 1);
+    assert_eq!(specs[0].strukt, "Traffic");
+    let out = rules::ledger::check(&[f], &specs);
+    assert_eq!(out.len(), 1, "{out:?}");
+    assert!(out[0].msg.contains("Traffic.inter_bytes"), "{}", out[0].msg);
+}
+
+#[test]
+fn registry_fixture_parses_and_is_clean() {
+    let f = fixture(
+        "fixtures/registry_clean.rs",
+        include_str!("fixtures/registry_clean.rs"),
+    );
+    let specs = parse_ledger_registry(&f).expect("registry table must parse");
+    assert_eq!(specs.len(), 1);
+    let out = rules::ledger::check(&[f], &specs);
+    assert!(out.is_empty(), "{out:?}");
+}
+
+/// The real registry must parse and name exactly the structs the
+/// runtime registers (the list the lint used to hardcode).
+#[test]
+fn real_registry_declares_the_tracked_structs() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../..");
+    let cfg = repo_config();
+    let reg = SourceFile::load(&root, cfg.ledger_registry).expect("registry file");
+    let specs = parse_ledger_registry(&reg).expect("registry table must parse");
+    let names: Vec<&str> = specs.iter().map(|s| s.strukt.as_str()).collect();
+    assert_eq!(
+        names,
+        [
+            "PeWork",
+            "EngineReport",
+            "LoadStats",
+            "PeLoad",
+            "ParallelStepStats",
+            "ParallelRunReport",
+            "BatchExecution",
+            "BatchRecord",
+        ],
+        "LEDGER_STRUCTS drifted from the eight tracked counter structs"
+    );
+    for s in &specs {
+        assert!(!s.merge_fns.is_empty(), "{} has no merge fns", s.strukt);
+    }
+}
+
 // ---- rule 5: flags ----------------------------------------------------
 
 fn flags_cfg(spec: &'static str) -> RepoConfig {
@@ -117,7 +173,7 @@ fn flags_cfg(spec: &'static str) -> RepoConfig {
         scan_dirs: &[],
         skip: &[],
         wallclock_allow: &[],
-        ledgers: &[],
+        ledger_registry: "unused-in-flags-tests.rs",
         flags_spec_file: spec,
         flags_scan: match spec {
             "fixtures/flags_fire.rs" => &["fixtures/flags_fire.rs"],
@@ -175,7 +231,14 @@ fn tree_lints_clean() {
         findings.extend(rules::rng::check(f));
         findings.extend(rules::unordered::check(f));
     }
-    findings.extend(rules::ledger::check(&files, cfg.ledgers));
+    let reg = files
+        .iter()
+        .find(|f| f.rel == cfg.ledger_registry)
+        .expect("ledger registry file must be in the scanned tree");
+    match parse_ledger_registry(reg) {
+        Ok(specs) => findings.extend(rules::ledger::check(&files, &specs)),
+        Err(e) => findings.push(e),
+    }
     findings.extend(rules::flags::check(&files, &cfg));
 
     let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
